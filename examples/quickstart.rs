@@ -1,0 +1,42 @@
+//! Quickstart: load the AOT-compiled sparse-attention artifact and run
+//! it from rust — the minimal three-layer round trip.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use star::runtime::engine::artifacts_available;
+use star::runtime::Engine;
+use star::tensor::Mat;
+use star::util::Rng;
+
+fn main() -> star::Result<()> {
+    let dir = star::runtime::manifest::default_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("no artifacts at {dir:?}; run `make artifacts` first");
+        return Ok(());
+    }
+    let engine = Engine::load_dir(&dir)?;
+    println!("PJRT platform: {}", engine.platform());
+    println!("compiled artifacts: {:?}", engine.names());
+
+    // The tiny serving bucket: T=32 queries over a 256-token context.
+    let entry = engine.get("sparse_attention_tiny").expect("tiny artifact");
+    let (t, d) = (entry.entry.inputs[0][0], entry.entry.inputs[0][1]);
+    let s = entry.entry.inputs[1][0];
+    let mut rng = Rng::new(7);
+    let q = Mat::randn(t, d, 1.0, &mut rng);
+    let k = Mat::randn(s, d, 1.0, &mut rng);
+    let v = Mat::randn(s, d, 1.0, &mut rng);
+
+    let t0 = std::time::Instant::now();
+    let out = engine.run("sparse_attention_tiny", &[q.clone(), k.clone(), v.clone()])?;
+    let dt = t0.elapsed();
+    println!("sparse attention: [{t}, {d}] x [{s}, {d}] -> [{}, {}] in {dt:?}", out[0].rows, out[0].cols);
+
+    // Compare against the dense oracle computed in rust.
+    let inp = star::attention::AttnInputs::new(&q, &k, &v);
+    let mut c = star::arith::OpCounter::new();
+    let dense = star::attention::dense_attention(&inp, usize::MAX, &mut c);
+    println!("rel err vs dense oracle: {:.4} (top-25%% sparse, Gaussian inputs)", out[0].rel_err(&dense));
+    println!("first output row (head): {:?}", &out[0].row(0)[..4.min(d)]);
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Serving example (the paper's LTPP scenario as a service): the
+//! coordinator routes, batches and executes requests on the PJRT
+//! artifact — python nowhere on this path. Reports the latency and
+//! throughput the serving layer achieves.
+//!
+//!     make artifacts && cargo run --release --example serve_requests
+
+use star::config::AccelConfig;
+use star::coordinator::{Backend, BatcherConfig, Request, Router, Server, ServerConfig, Variant};
+use star::runtime::engine::artifacts_available;
+use star::sim::dram::DramChannel;
+use star::sim::pipeline::FeatureSet;
+use star::tensor::Mat;
+use star::util::Rng;
+use std::collections::BTreeMap;
+
+fn main() -> star::Result<()> {
+    let dir = star::runtime::manifest::default_dir();
+    let router = Router::new(vec![
+        Variant { name: "sparse_attention_tiny".into(), model: "tiny".into(), max_t: 32, s: 256 },
+        Variant { name: "sparse_attention".into(), model: "gpt2".into(), max_t: 128, s: 1024 },
+    ]);
+    let mut rng = Rng::new(3);
+    let backend = if artifacts_available(&dir) {
+        let mut contexts = BTreeMap::new();
+        contexts.insert(
+            "sparse_attention_tiny".to_string(),
+            (Mat::randn(256, 32, 1.0, &mut rng), Mat::randn(256, 32, 1.0, &mut rng)),
+        );
+        contexts.insert(
+            "sparse_attention".to_string(),
+            (Mat::randn(1024, 64, 1.0, &mut rng), Mat::randn(1024, 64, 1.0, &mut rng)),
+        );
+        println!("backend: PJRT ({dir:?})");
+        Backend::Pjrt { artifact_dir: dir, contexts }
+    } else {
+        println!("backend: simulator (run `make artifacts` for real numerics)");
+        Backend::Sim {
+            feats: FeatureSet::star(),
+            accel: AccelConfig::default(),
+            dram: DramChannel::accel_256(),
+            d: 64,
+            h: 768,
+            keep: 0.2,
+            time_scale: 1.0,
+        }
+    };
+    let server = Server::start(
+        router,
+        backend,
+        ServerConfig { batcher: BatcherConfig { target_t: 32, max_wait_s: 2e-3 }, workers: 2 },
+    );
+
+    // A Poisson-ish open-loop client: 96 requests across both buckets.
+    let mut rxs = Vec::new();
+    for id in 0..96u64 {
+        let (model, s, d) = if id % 3 == 0 { ("gpt2", 1024, 64) } else { ("tiny", 256, 32) };
+        let t = 4 * rng.range(1, 5);
+        let mut req = Request::new(id, model, t, s, 0.0);
+        req.q = Some(Mat::randn(t, d, 1.0, &mut rng));
+        rxs.push(server.submit(req)?);
+        if id % 8 == 7 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+    let mut ok = 0;
+    for rx in rxs {
+        let resp = rx.recv()?;
+        if resp.output.is_some() || resp.variant.starts_with("rejected") == false {
+            ok += 1;
+        }
+    }
+    let snap = server.shutdown();
+    println!("served {ok}/96 requests");
+    println!("{}", snap.render());
+    Ok(())
+}

@@ -1,0 +1,114 @@
+"""AOT lowering: JAX (L2, embedding the L1 Pallas kernels) → HLO text
+artifacts + manifest.json for the rust runtime.
+
+HLO *text* is the interchange format, NOT a serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (what the published `xla` 0.1.6 crate links) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/load_hlo.
+
+Usage: python -m compile.aot [--out-dir ../artifacts]
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# ---------------------------------------------------------------------
+# Artifact registry: name → (fn, input shapes). Shapes are the serving
+# buckets the rust coordinator routes to (see examples/).
+# ---------------------------------------------------------------------
+
+# The quickstart / serving bucket: T=128 queries over S=1024 context.
+ATTN_T, ATTN_S, ATTN_D = 128, 1024, 64
+# Small variant for fast examples and the e2e tiny model.
+TINY_T, TINY_S, TINY_D = 32, 256, 32
+# Transformer block for the e2e example.
+BLOCK_S, BLOCK_H = 64, 128
+
+
+def registry():
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+    entries = {
+        "sparse_attention": (
+            lambda q, k, v: (model.sparse_attention(q, k, v, keep_ratio=0.2),),
+            [sd((ATTN_T, ATTN_D), f32), sd((ATTN_S, ATTN_D), f32), sd((ATTN_S, ATTN_D), f32)],
+        ),
+        "sparse_attention_tiny": (
+            lambda q, k, v: (model.sparse_attention(q, k, v, keep_ratio=0.25),),
+            [sd((TINY_T, TINY_D), f32), sd((TINY_S, TINY_D), f32), sd((TINY_S, TINY_D), f32)],
+        ),
+        "dense_attention_tiny": (
+            lambda q, k, v: (model.dense_attention(q, k, v),),
+            [sd((TINY_T, TINY_D), f32), sd((TINY_S, TINY_D), f32), sd((TINY_S, TINY_D), f32)],
+        ),
+        "transformer_block": (
+            lambda x, wq, wk, wv, wo, w1, w2: (
+                model.transformer_block(x, wq, wk, wv, wo, w1, w2),
+            ),
+            [
+                sd((BLOCK_S, BLOCK_H), f32),
+                sd((BLOCK_H, BLOCK_H), f32),
+                sd((BLOCK_H, BLOCK_H), f32),
+                sd((BLOCK_H, BLOCK_H), f32),
+                sd((BLOCK_H, BLOCK_H), f32),
+                sd((BLOCK_H, 4 * BLOCK_H), f32),
+                sd((4 * BLOCK_H, BLOCK_H), f32),
+            ],
+        ),
+    }
+    return entries
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--only", default=None, help="lower just one entry")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"artifacts": []}
+    for name, (fn, specs) in registry().items():
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        # Output shapes from an eval_shape pass (no execution).
+        outs = jax.eval_shape(fn, *specs)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [list(s.shape) for s in specs],
+                "outputs": [list(o.shape) for o in outs],
+            }
+        )
+        print(f"lowered {name}: {len(text)} chars -> {fname}")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts in {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

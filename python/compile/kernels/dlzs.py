@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: DLZS approximate score prediction (Sec. IV-A).
+
+Multiplier-free estimation of Q·Kᵀ: the second operand is reduced to
+sign × 2^(MSB position) (Eq. 3 with mantissa ≈ 1), so each "multiply"
+is a shift — on the STAR ASIC a barrel shifter, on TPU a cheap
+exponent-add. Only ONE operand is coded (differential), which halves
+conversion work and error versus the symmetric scheme (Fig. 8(b)).
+
+Inputs carry integer values in float32 (the quantization to INT-`w`
+happens in the L2 graph). ``interpret=True`` as everywhere on this CPU
+build path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lz_approx(y):
+    """sign(y) · 2^floor(log2 |y|), with 0 → 0 (the LZ format's value)."""
+    mag = jnp.abs(y)
+    exp = jnp.floor(jnp.log2(jnp.maximum(mag, 1.0)))
+    return jnp.where(mag > 0, jnp.sign(y) * jnp.exp2(exp), 0.0)
+
+
+def _dlzs_kernel(x_ref, y_ref, o_ref):
+    """o = x @ lz(y).T for one [bt, d] × [bs, d] tile pair."""
+    x = x_ref[...]
+    y = _lz_approx(y_ref[...])
+    # PSP behaviour: the sign is applied by *pre-flipping* the shifted
+    # operand, which in value-space is exactly this signed product.
+    o_ref[...] = x @ y.T
+
+
+def dlzs_scores(x, y, *, block_t: int = 64):
+    """Approximate x @ y.T with y LZ-coded. x [T, d], y [S, d] → [T, S]."""
+    t, d = x.shape
+    s = y.shape[0]
+    bt = min(block_t, t)
+    assert t % bt == 0, f"T={t} must divide into block_t={bt}"
+    return pl.pallas_call(
+        _dlzs_kernel,
+        grid=(t // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((s, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, s), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, s), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), y.astype(jnp.float32))

@@ -1,0 +1,144 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+Every kernel in this package is validated against these references at
+build time (pytest) before `aot.py` is allowed to emit artifacts. The
+references mirror the paper's algorithm definitions:
+
+* dense softmax attention (Eq. 1/2),
+* masked (top-k selected) attention -- the mathematical object SU-FA
+  computes,
+* the DLZS approximate multiply (Eq. 3/4) used for sparsity prediction,
+* the full three-stage dynamic-sparsity pipeline (predict -> top-k ->
+  formal compute) that `model.py` lowers.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_attention(q, k, v):
+    """O = softmax(Q K^T / sqrt(d)) V -- the vanilla baseline."""
+    d = q.shape[-1]
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    p = jax.nn.softmax(scores, axis=-1)
+    return p @ v
+
+
+def masked_attention(q, k, v, mask):
+    """Softmax attention restricted to the selected keys.
+
+    `mask` is [T, S] boolean; non-selected scores contribute nothing
+    (exactly what the formal-compute stage executes on the kept pairs).
+    """
+    d = q.shape[-1]
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    neg = jnp.finfo(scores.dtype).min
+    scores = jnp.where(mask, scores, neg)
+    p = jax.nn.softmax(scores, axis=-1)
+    # Rows with zero selected keys produce zeros, not NaN.
+    p = jnp.where(mask.any(axis=-1, keepdims=True), p, 0.0)
+    return p @ v
+
+
+def lz_magnitude(x_int, w=8):
+    """Leading-zero approximate magnitude: keep only the MSB (Eq. 3 with
+    the mantissa approximated as 1): |x| -> 2^floor(log2 |x|)."""
+    mag = jnp.abs(x_int)
+    exp = jnp.floor(jnp.log2(jnp.maximum(mag, 1).astype(jnp.float32)))
+    pow2 = jnp.exp2(exp)
+    return jnp.where(mag > 0, pow2, 0.0).astype(jnp.float32)
+
+
+def dlzs_matmul(x_int, y_int, w=8):
+    """Differential LZ approximate matmul (Eq. 4b): x @ y.T with only the
+    SECOND operand LZ-coded (mantissa -> 1). Returns float32 scores."""
+    y_approx = jnp.sign(y_int).astype(jnp.float32) * lz_magnitude(y_int, w)
+    return x_int.astype(jnp.float32) @ y_approx.T
+
+
+def slzs_matmul(x_int, y_int, w=8):
+    """Symmetric LZ matmul (FACT baseline): both operands LZ-coded."""
+    xa = jnp.sign(x_int).astype(jnp.float32) * lz_magnitude(x_int, w)
+    ya = jnp.sign(y_int).astype(jnp.float32) * lz_magnitude(y_int, w)
+    return xa @ ya.T
+
+
+def quantize(x, bits=8):
+    """Symmetric per-tensor quantization to signed `bits`-bit integers."""
+    qmax = 2 ** (bits - 1) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / qmax
+    return jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32), scale
+
+
+def predict_scores(q, x, wk, bits=8):
+    """Cross-phase DLZS prediction (Sec. IV-A).
+
+    Phase 1.1: K-hat = X . LZ(W_k)  (weights pre-coded offline).
+    Phase 1.2: A-hat = LZ(Q) . K-hat^T  (Q is the coded operand, not K,
+    to avoid error accumulation).
+    Returns approximate scores [T, S] (float32, unscaled).
+    """
+    xq, _ = quantize(x, bits)
+    wq, _ = quantize(wk, bits)
+    qq, _ = quantize(q, bits)
+    # Phase 1.1 -- differential: X full precision, W_k LZ-coded.
+    k_hat = dlzs_matmul(xq, wq.T, bits)  # [S, d]
+    # Phase 1.2 -- differential the other way: Q LZ-coded.
+    k_int = jnp.round(
+        k_hat / jnp.maximum(jnp.max(jnp.abs(k_hat)), 1e-8) * 127
+    ).astype(jnp.int32)
+    a_hat = dlzs_matmul(k_int, qq, bits).T  # [S,T] -> [T,S]
+    return a_hat
+
+
+def topk_mask(scores, keep):
+    """Per-row top-`keep` boolean mask [T, S] from (approximate) scores."""
+    t, s = scores.shape
+    keep = max(1, min(keep, s))
+    thresh = jnp.sort(scores, axis=-1)[:, s - keep][:, None]
+    return scores >= thresh
+
+
+def topk_indices_desc(scores, keep):
+    """Per-row top-`keep` indices, sorted by score descending -- the order
+    SU-FA consumes (the first tile carries the running max).
+
+    Implemented with argsort rather than lax.top_k: top_k lowers to a
+    `topk(..., largest=true)` HLO instruction that the xla_extension
+    0.5.1 text parser (the rust runtime's loader) rejects; `sort` round-
+    trips fine and is semantically identical here.
+    """
+    idx = jnp.argsort(-scores, axis=-1)
+    return idx[:, :keep]
+
+
+def sufa_reference(q, k, v, idx):
+    """Sorted-updating attention over the selected (descending-sorted)
+    keys -- mathematically identical to masked softmax over `idx`."""
+    d = q.shape[-1]
+    kg = k[idx]  # [T, keep, d]
+    vg = v[idx]
+    s = jnp.einsum("td,tkd->tk", q, kg) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    m = s[:, 0:1]  # descending order: the first element is the max
+    e = jnp.exp(s - m)
+    l = e.sum(axis=-1, keepdims=True)
+    return jnp.einsum("tk,tkd->td", e / l, vg)
+
+
+def sparse_attention_pipeline(q, x, wk, wv, keep_ratio=0.2, bits=8):
+    """The full three-stage DS pipeline (the paper's Fig. 6 workflow).
+
+    1. pre-compute: cross-phase DLZS estimate of A-hat,
+    2. top-k: per-row selection (descending order),
+    3. on-demand KV + formal compute: exact K/V only where needed,
+       SU-FA softmax over the sorted selection.
+    """
+    s_len = x.shape[0]
+    keep = max(1, int(round(s_len * keep_ratio)))
+    a_hat = predict_scores(q, x, wk, bits)
+    idx = topk_indices_desc(a_hat, keep)
+    # On-demand generation modeled densely in the oracle (the accelerator
+    # generates only the union of selected rows -- same numerics).
+    k = x @ wk
+    v = x @ wv
+    return sufa_reference(q, k, v, idx)

@@ -1,0 +1,140 @@
+"""L1 Pallas kernel: Sorted-Updating FlashAttention (SU-FA, Sec. IV-C).
+
+The kernel consumes Q plus the *gathered, descending-sorted* K/V
+selection produced by the top-k stage (the gather happens in the L2 jax
+graph — Pallas sees dense [T, keep, d] tiles). Because tiles arrive in
+descending estimated-score order, the running max is fixed by the FIRST
+tile: the per-tile max-refresh comparisons and the exp-rescaling of the
+accumulator — FlashAttention's non-matmul overhead (Fig. 5) — disappear
+from the steady-state loop. A single clamp guards against DLZS
+mispredicted maxima (the "tailored engine" behaviour).
+
+Pallas runs with ``interpret=True``: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see DESIGN.md
+§Hardware-Adaptation for the VMEM/MXU tiling story).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile width along the selection axis (B_c in the paper's notation).
+DEFAULT_BC = 16
+
+
+def _sufa_kernel(q_ref, kg_ref, vg_ref, o_ref, *, bc: int):
+    """Kernel body: one program instance owns a block of T rows.
+
+    q  [bt, d]        query rows
+    kg [bt, keep, d]  gathered keys, descending estimated score
+    vg [bt, keep, d]  gathered values, same order
+    o  [bt, d]        output rows
+    """
+    q = q_ref[...]
+    kg = kg_ref[...]
+    vg = vg_ref[...]
+    bt, keep, d = kg.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    # --- tile 0: the only place a max reduction happens -----------------
+    s0 = jnp.einsum("td,tkd->tk", q, kg[:, :bc, :]) * scale  # [bt, <=bc]
+    m = jnp.max(s0, axis=-1, keepdims=True)  # row max, fixed hereafter
+    e0 = jnp.exp(s0 - m)
+    l = jnp.sum(e0, axis=-1, keepdims=True)  # running sum
+    acc = jnp.einsum("tk,tkd->td", e0, vg[:, :bc, :])  # un-normalized O
+
+    # --- steady state: descending order ⇒ no max refresh, no rescale ----
+    n_tiles = (keep + bc - 1) // bc
+    if n_tiles > 1:
+        # Pad the selection axis so dynamic slices stay in bounds.
+        pad = n_tiles * bc - keep
+        if pad:
+            kg = jnp.pad(kg, ((0, 0), (0, pad), (0, 0)))
+            vg = jnp.pad(vg, ((0, 0), (0, pad), (0, 0)))
+
+        def body(i, carry):
+            l, acc = carry
+            start = i * bc
+            k_tile = jax.lax.dynamic_slice_in_dim(kg, start, bc, axis=1)
+            v_tile = jax.lax.dynamic_slice_in_dim(vg, start, bc, axis=1)
+            s = jnp.einsum("td,tkd->tk", q, k_tile) * scale
+            # Tailored-engine clamp: a mispredicted max cannot overflow
+            # the accumulator (scores above m saturate, no rescale).
+            e = jnp.exp(jnp.minimum(s - m, 0.0))
+            # Mask the tail of the last (ragged) tile.
+            col = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            e = jnp.where(col < keep, e, 0.0)
+            l = l + jnp.sum(e, axis=-1, keepdims=True)
+            acc = acc + jnp.einsum("tk,tkd->td", e, v_tile)
+            return l, acc
+
+        l, acc = jax.lax.fori_loop(1, n_tiles, body, (l, acc))
+
+    o_ref[...] = (acc / l).astype(o_ref.dtype)
+
+
+def _sufa_pallas(q, kg, vg, bc: int, block_t: int):
+    t, d = q.shape
+    keep = kg.shape[1]
+    bt = min(block_t, t)
+    assert t % bt == 0, f"T={t} must be a multiple of block_t={bt}"
+    grid = (t // bt,)
+    return pl.pallas_call(
+        functools.partial(_sufa_kernel, bc=min(bc, keep)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((bt, keep, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bt, keep, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), q.dtype),
+        interpret=True,
+    )(q, kg, vg)
+
+
+def _sufa_math(q, kg, vg):
+    """The same math in plain jnp — used only to derive the VJP (Pallas
+    interpret mode has no reverse-mode rule), so the L2 model remains
+    differentiable end to end."""
+    d = q.shape[-1]
+    s = jnp.einsum("td,tkd->tk", q, kg) / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+    e = jnp.exp(s - m)
+    l = jnp.sum(e, axis=-1, keepdims=True)
+    return jnp.einsum("tk,tkd->td", e / l, vg)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _sufa(q, kg, vg, bc, block_t):
+    return _sufa_pallas(q, kg, vg, bc, block_t)
+
+
+def _sufa_fwd(q, kg, vg, bc, block_t):
+    return _sufa_pallas(q, kg, vg, bc, block_t), (q, kg, vg)
+
+
+def _sufa_bwd(bc, block_t, res, g):
+    q, kg, vg = res
+    _, vjp = jax.vjp(_sufa_math, q, kg, vg)
+    return vjp(g)
+
+
+_sufa.defvjp(_sufa_fwd, _sufa_bwd)
+
+
+def sufa_attention(q, kg, vg, *, bc: int = DEFAULT_BC, block_t: int = 32):
+    """SU-FA over a gathered selection.
+
+    q  [T, d] float32
+    kg [T, keep, d] gathered keys, descending estimated-score order
+    vg [T, keep, d] gathered values
+
+    Returns O [T, d]. The T axis is gridded in blocks of `block_t`
+    (BlockSpec expresses the HBM→VMEM schedule; on a real TPU each block
+    is double-buffered into VMEM and fed to the MXU). Differentiable via
+    a custom VJP over the equivalent jnp form.
+    """
+    return _sufa(q, kg, vg, bc, block_t)

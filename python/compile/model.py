@@ -1,0 +1,91 @@
+"""L2: the JAX model — the paper's sparse-attention pipeline plus a tiny
+transformer block, calling the L1 Pallas kernels so everything lowers
+into one HLO module per entry point.
+
+These functions are what `aot.py` lowers to HLO text; the rust runtime
+executes the artifacts, so the code here must be pure and shape-static.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.dlzs import dlzs_scores
+from compile.kernels.sufa import sufa_attention
+
+
+def sparse_attention(q, k, v, keep_ratio=0.2, bits=8):
+    """The STAR formal path given materialized K/V: DLZS-estimate scores
+    (L1 kernel), select per-row top-k, gather descending, SU-FA (L1
+    kernel).
+
+    q [T, d], k [S, d], v [S, d] → O [T, d].
+    """
+    t, d = q.shape
+    s = k.shape[0]
+    keep = max(1, int(round(s * keep_ratio)))
+    # Pre-compute stage: quantize + DLZS multiplier-free estimate.
+    qq, _ = ref.quantize(q, bits)
+    kq, _ = ref.quantize(k, bits)
+    a_hat = dlzs_scores(qq.astype(jnp.float32), kq.astype(jnp.float32))
+    # Top-k stage: per-row selection, descending (SU-FA's input order).
+    idx = ref.topk_indices_desc(a_hat, keep)
+    # Formal stage: gather the survivors, run the SU-FA kernel.
+    kg = k[idx]
+    vg = v[idx]
+    return sufa_attention(q, kg, vg)
+
+
+def cross_phase_attention(q, x, wk, wv, keep_ratio=0.2, bits=8):
+    """The full cross-phase pipeline from raw activations X: K̂ via the
+    pre-coded weights, Â via DLZS, on-demand K/V generation, SU-FA."""
+    s = x.shape[0]
+    keep = max(1, int(round(s * keep_ratio)))
+    a_hat = ref.predict_scores(q, x, wk, bits)
+    idx = ref.topk_indices_desc(a_hat, keep)
+    # On-demand generation: the graph computes K/V densely (XLA has no
+    # scatter-compute primitive), but only gathered rows feed SU-FA —
+    # the accelerator realizes the same semantics with a binary mask.
+    k = x @ wk
+    v = x @ wv
+    return sufa_attention(q, k[idx], v[idx])
+
+
+def dense_attention(q, k, v):
+    """Vanilla dense attention entry point (the comparison baseline)."""
+    return ref.dense_attention(q, k, v)
+
+
+def init_block_params(key, hidden, ffn_mult=4):
+    """Parameters for one pre-norm transformer block (single head group)."""
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    scale = 1.0 / jnp.sqrt(hidden)
+    return {
+        "wq": jax.random.normal(k1, (hidden, hidden)) * scale,
+        "wk": jax.random.normal(k2, (hidden, hidden)) * scale,
+        "wv": jax.random.normal(k3, (hidden, hidden)) * scale,
+        "wo": jax.random.normal(k4, (hidden, hidden)) * scale,
+        "w1": jax.random.normal(k5, (hidden, ffn_mult * hidden)) * scale,
+        "w2": jax.random.normal(k6, (ffn_mult * hidden, hidden)) * scale,
+    }
+
+
+def _layernorm(x, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps)
+
+
+def transformer_block(x, wq, wk, wv, wo, w1, w2, keep_ratio=0.2):
+    """One pre-norm transformer block whose attention is the STAR sparse
+    pipeline. x [S, H] → [S, H]. Single head group (the multi-head
+    split is orchestrated by the rust coordinator per head)."""
+    h = _layernorm(x)
+    q = h @ wq
+    k = h @ wk
+    v = h @ wv
+    attn = sparse_attention(q, k, v, keep_ratio=keep_ratio)
+    x = x + attn @ wo
+    h = _layernorm(x)
+    x = x + jax.nn.relu(h @ w1) @ w2
+    return x

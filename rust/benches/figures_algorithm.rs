@@ -1,0 +1,11 @@
+//! `cargo bench --bench figures_algorithm` — regenerates: fig9 fig11 fig16 fig17 fig18 table2.
+//! Plain main (criterion is unavailable offline); prints the paper's
+//! rows/series plus wall time per figure.
+
+fn main() {
+    for name in ["fig9", "fig11", "fig16", "fig17", "fig18", "table2", ] {
+        let t0 = std::time::Instant::now();
+        star::bench::run(name).unwrap();
+        println!("[{name} regenerated in {:?}]", t0.elapsed());
+    }
+}

@@ -1,0 +1,11 @@
+//! `cargo bench --bench figures_arch` — regenerates: fig19 fig20 fig21 fig22 fig23 table3.
+//! Plain main (criterion is unavailable offline); prints the paper's
+//! rows/series plus wall time per figure.
+
+fn main() {
+    for name in ["fig19", "fig20", "fig21", "fig22", "fig23", "table3", ] {
+        let t0 = std::time::Instant::now();
+        star::bench::run(name).unwrap();
+        println!("[{name} regenerated in {:?}]", t0.elapsed());
+    }
+}

@@ -1,0 +1,11 @@
+//! `cargo bench --bench tables` — regenerates: table2 table3.
+//! Plain main (criterion is unavailable offline); prints the paper's
+//! rows/series plus wall time per figure.
+
+fn main() {
+    for name in ["table2", "table3", ] {
+        let t0 = std::time::Instant::now();
+        star::bench::run(name).unwrap();
+        println!("[{name} regenerated in {:?}]", t0.elapsed());
+    }
+}

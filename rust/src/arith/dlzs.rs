@@ -1,0 +1,166 @@
+//! DLZS — the Differential Leading-Zero Scheme (Sec. IV-A) and the
+//! symmetric baseline SLZS (as used by FACT [9]).
+//!
+//! DLZS approximates `x · y` by LZ-encoding only **one** operand (`y`) and
+//! shifting the other: `x·y ≈ sign(x)⊕sign(y) · |x| << (W − LZ_y)` (Eq. 4b).
+//! SLZS encodes both operands: `x·y ≈ ± 2^(W−LZ_x) · 2^(W−LZ_y)` — cheaper
+//! conversion hardware per operand pair but twice the encoding work and a
+//! larger error.
+//!
+//! The PSP (pre-flipping via symbol prediction) trick is functional-identity
+//! at this level: instead of shifting `x` and conditionally negating the
+//! product (which flips every bit of a wide result), the *input* `x` is
+//! negated before the shift when `y` is negative. We model its benefit in
+//! the energy model ([`crate::sim::energy`]); here we expose the operand
+//! pre-flip so the datapath is bit-faithful.
+
+use super::lz::LzCode;
+
+/// A weight (or activation) pre-converted to LZ format. The paper
+//  pre-converts `W_k` offline, so the Key-prediction phase loads only these
+/// codes (≈4 bits each) instead of full 8-bit operands.
+pub type LzWeight = LzCode;
+
+/// DLZS approximate multiply: `x` stays in plain integer form, `y_code` is
+/// the LZ-encoded operand. Implements Eq. (4b) with PSP: the sign of the
+/// result is applied by pre-flipping `x`, never by post-negating the
+/// shifted result.
+#[inline]
+pub fn dlzs_mul(x: i32, y_code: LzCode) -> i64 {
+    match y_code.shift_amount() {
+        None => 0,
+        Some(sh) => {
+            // PSP: pre-flip x when y is negative.
+            let pre = if y_code.negative { -(x as i64) } else { x as i64 };
+            pre << sh
+        }
+    }
+}
+
+/// SLZS approximate multiply: both operands LZ-encoded.
+#[inline]
+pub fn slzs_mul(x_code: LzCode, y_code: LzCode) -> i64 {
+    match (x_code.shift_amount(), y_code.shift_amount()) {
+        (Some(sx), Some(sy)) => {
+            let mag = 1i64 << (sx + sy);
+            if x_code.negative != y_code.negative {
+                -mag
+            } else {
+                mag
+            }
+        }
+        _ => 0,
+    }
+}
+
+/// Dot product of a plain integer row with a row of LZ-encoded weights
+/// (DLZS). Add-only accumulation; every product is a shift.
+pub fn dlzs_dot(xs: &[i32], ys: &[LzCode]) -> i64 {
+    debug_assert_eq!(xs.len(), ys.len());
+    let mut acc = 0i64;
+    for (&x, &y) in xs.iter().zip(ys) {
+        acc += dlzs_mul(x, y);
+    }
+    acc
+}
+
+/// Dot product with both sides LZ-encoded (SLZS).
+pub fn slzs_dot(xs: &[LzCode], ys: &[LzCode]) -> i64 {
+    debug_assert_eq!(xs.len(), ys.len());
+    let mut acc = 0i64;
+    for (&x, &y) in xs.iter().zip(ys) {
+        acc += slzs_mul(x, y);
+    }
+    acc
+}
+
+/// Encode a slice of integers to LZ format with magnitude width `w`.
+pub fn encode_slice(xs: &[i32], w: u32) -> Vec<LzCode> {
+    xs.iter().map(|&x| LzCode::encode(x, w)).collect()
+}
+
+/// Worst-case multiplicative error bounds of the two schemes for non-zero
+/// operands: the true product lies in [approx, bound_factor × approx).
+pub fn error_bound_factor(symmetric: bool) -> f64 {
+    if symmetric {
+        4.0 // both mantissas ∈ (0.5,1] dropped → up to 2 × 2
+    } else {
+        2.0 // only M_y dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    const W: u32 = 7;
+
+    #[test]
+    fn dlzs_matches_shift_semantics() {
+        // y = 3 → LZ=6 → shift by 1 → approx y = 2.
+        let y = LzCode::encode(3, W);
+        assert_eq!(dlzs_mul(10, y), 20);
+        // y = 4 (exact power of two) → exact.
+        let y4 = LzCode::encode(4, W);
+        assert_eq!(dlzs_mul(10, y4), 40);
+    }
+
+    #[test]
+    fn sign_rules() {
+        let yp = LzCode::encode(4, W);
+        let yn = LzCode::encode(-4, W);
+        assert_eq!(dlzs_mul(3, yn), -12);
+        assert_eq!(dlzs_mul(-3, yn), 12);
+        assert_eq!(dlzs_mul(-3, yp), -12);
+        let xn = LzCode::encode(-8, W);
+        assert_eq!(slzs_mul(xn, yn), 32);
+        assert_eq!(slzs_mul(xn, yp), -32);
+    }
+
+    #[test]
+    fn zero_short_circuits() {
+        let z = LzCode::encode(0, W);
+        assert_eq!(dlzs_mul(123, z), 0);
+        assert_eq!(slzs_mul(z, LzCode::encode(9, W)), 0);
+    }
+
+    #[test]
+    fn dlzs_error_within_2x_slzs_within_4x() {
+        let mut rng = Rng::new(42);
+        for _ in 0..2000 {
+            let x = rng.range(1, 127) as i32;
+            let y = rng.range(1, 127) as i32;
+            let exact = (x * y) as i64;
+            let d = dlzs_mul(x, LzCode::encode(y, W));
+            let s = slzs_mul(LzCode::encode(x, W), LzCode::encode(y, W));
+            assert!(d <= exact && exact < 2 * d, "dlzs: {x}*{y}={exact} est={d}");
+            assert!(s <= exact && exact < 4 * s, "slzs: {x}*{y}={exact} est={s}");
+        }
+    }
+
+    #[test]
+    fn dlzs_strictly_more_accurate_on_average() {
+        let mut rng = Rng::new(43);
+        let (mut derr, mut serr) = (0.0f64, 0.0f64);
+        let n = 5000;
+        for _ in 0..n {
+            let x = rng.range(1, 127) as i32;
+            let y = rng.range(1, 127) as i32;
+            let exact = (x * y) as f64;
+            let d = dlzs_mul(x, LzCode::encode(y, W)) as f64;
+            let s = slzs_mul(LzCode::encode(x, W), LzCode::encode(y, W)) as f64;
+            derr += ((exact - d) / exact).abs();
+            serr += ((exact - s) / exact).abs();
+        }
+        let (dmean, smean) = (derr / n as f64, serr / n as f64);
+        assert!(dmean < smean, "dlzs mean err {dmean} !< slzs mean err {smean}");
+    }
+
+    #[test]
+    fn dot_products_accumulate() {
+        let xs = [1, 2, 3, 4];
+        let ys = encode_slice(&[4, 4, 4, 4], W); // exact powers of two
+        assert_eq!(dlzs_dot(&xs, &ys), 40);
+    }
+}

@@ -1,0 +1,188 @@
+//! Symmetric fixed-point quantization.
+//!
+//! The paper's pipeline quantizes activations/weights to INT16 for the
+//! formal-compute stage and to low precision (e.g. 4-bit MSBs) for the
+//! pre-compute stage. We model per-tensor symmetric quantization:
+//! `q = clamp(round(x / scale))`, `x̂ = q · scale`.
+
+use crate::tensor::Mat;
+
+/// Supported integer widths.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IntBits {
+    Int4,
+    Int8,
+    Int16,
+}
+
+impl IntBits {
+    /// Number of bits (including sign).
+    pub fn bits(self) -> u32 {
+        match self {
+            IntBits::Int4 => 4,
+            IntBits::Int8 => 8,
+            IntBits::Int16 => 16,
+        }
+    }
+
+    /// Magnitude bitwidth W (bits excluding sign) — the `W` of Eq. (3).
+    pub fn magnitude_bits(self) -> u32 {
+        self.bits() - 1
+    }
+
+    /// Largest representable positive value.
+    pub fn qmax(self) -> i32 {
+        (1 << self.magnitude_bits()) - 1
+    }
+}
+
+/// A quantized matrix: `i32` storage plus the common scale.
+#[derive(Clone, Debug)]
+pub struct QuantMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub q: Vec<i32>,
+    pub scale: f32,
+    pub bits: IntBits,
+}
+
+impl QuantMat {
+    /// Quantize with a scale chosen from the max-abs of `m`.
+    pub fn quantize(m: &Mat, bits: IntBits) -> QuantMat {
+        let amax = m.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        let scale = if amax == 0.0 { 1.0 } else { amax / bits.qmax() as f32 };
+        Self::quantize_with_scale(m, bits, scale)
+    }
+
+    /// Quantize with an explicit scale (shared scales across tensors keep
+    /// log-domain shifts consistent).
+    pub fn quantize_with_scale(m: &Mat, bits: IntBits, scale: f32) -> QuantMat {
+        let qmax = bits.qmax();
+        let q = m
+            .data
+            .iter()
+            .map(|&x| ((x / scale).round() as i32).clamp(-qmax, qmax))
+            .collect();
+        QuantMat { rows: m.rows, cols: m.cols, q, scale, bits }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> i32 {
+        self.q[i * self.cols + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[i32] {
+        &self.q[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Dequantize back to f32.
+    pub fn dequantize(&self) -> Mat {
+        Mat::from_vec(
+            self.rows,
+            self.cols,
+            self.q.iter().map(|&q| q as f32 * self.scale).collect(),
+        )
+    }
+
+    /// Exact integer matmul (the INT16 baseline path): self [m,k] × other
+    /// [k,n], result dequantized with the product scale.
+    pub fn matmul_exact(&self, other: &QuantMat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = vec![0i64; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.q[i * k + p] as i64;
+                if a == 0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out[i * n + j] += a * other.q[p * n + j] as i64;
+                }
+            }
+        }
+        let s = self.scale * other.scale;
+        Mat::from_vec(m, n, out.into_iter().map(|v| v as f32 * s).collect())
+    }
+
+    /// Keep only the top `msb` magnitude bits of each value (the "4-bit MSB"
+    /// style low-precision estimate some DS baselines use).
+    pub fn truncate_to_msb(&self, msb: u32) -> QuantMat {
+        let w = self.bits.magnitude_bits();
+        assert!(msb <= w);
+        let q = self
+            .q
+            .iter()
+            .map(|&v| {
+                let mag = v.unsigned_abs();
+                if mag == 0 {
+                    return 0;
+                }
+                let top = 32 - mag.leading_zeros(); // highest set bit position
+                let drop = top.saturating_sub(msb);
+                let t = ((mag >> drop) << drop) as i32;
+                if v < 0 {
+                    -t
+                } else {
+                    t
+                }
+            })
+            .collect();
+        QuantMat { rows: self.rows, cols: self.cols, q, scale: self.scale, bits: self.bits }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn quantize_roundtrip_error_bounded() {
+        let mut rng = Rng::new(1);
+        let m = Mat::randn(8, 8, 1.0, &mut rng);
+        for bits in [IntBits::Int8, IntBits::Int16] {
+            let q = QuantMat::quantize(&m, bits);
+            let back = q.dequantize();
+            // Max error is half a quantization step.
+            let step = q.scale;
+            assert!(m.max_abs_diff(&back) <= 0.51 * step, "bits={bits:?}");
+        }
+    }
+
+    #[test]
+    fn int16_matmul_close_to_f32() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(6, 12, 1.0, &mut rng);
+        let b = Mat::randn(12, 5, 1.0, &mut rng);
+        let qa = QuantMat::quantize(&a, IntBits::Int16);
+        let qb = QuantMat::quantize(&b, IntBits::Int16);
+        let exact = a.matmul(&b);
+        let approx = qa.matmul_exact(&qb);
+        assert!(approx.rel_err(&exact) < 1e-3);
+    }
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(IntBits::Int4.qmax(), 7);
+        assert_eq!(IntBits::Int8.qmax(), 127);
+        assert_eq!(IntBits::Int16.qmax(), 32767);
+    }
+
+    #[test]
+    fn msb_truncation_keeps_leading_bits() {
+        let m = Mat::from_vec(1, 4, vec![100.0, -100.0, 3.0, 0.0]);
+        let q = QuantMat::quantize_with_scale(&m, IntBits::Int8, 1.0);
+        let t = q.truncate_to_msb(2);
+        // 100 = 0b1100100 → keep top-2 bits → 0b1100000 = 96.
+        assert_eq!(t.q, vec![96, -96, 3, 0]);
+    }
+
+    #[test]
+    fn zero_matrix_scale_is_finite() {
+        let m = Mat::zeros(2, 2);
+        let q = QuantMat::quantize(&m, IntBits::Int8);
+        assert!(q.scale.is_finite() && q.scale > 0.0);
+        assert!(q.q.iter().all(|&v| v == 0));
+    }
+}

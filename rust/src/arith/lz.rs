@@ -1,0 +1,143 @@
+//! Leading-zero (LZ) codec — Eq. (3) of the paper.
+//!
+//! An integer `x` with magnitude bitwidth `W` is written
+//! `x = sign · M · 2^(W − LZ)` where `LZ ∈ [1, W]` is the number of leading
+//! zeros of |x| within the W-bit field and `M ∈ (0.5, 1]` is the mantissa.
+//! The log-domain approximation replaces |x| with `2^(W − LZ)` (i.e. M ≈ 1),
+//! turning multiplications into shifts.
+
+/// Count leading zeros of `mag` in a `w`-bit field. For `mag == 0` we return
+/// `w + 1` as a sentinel meaning "value is exactly zero" (the paper's LZ
+/// range [1, W] covers only non-zero values).
+pub fn lz_count(mag: u32, w: u32) -> u32 {
+    debug_assert!(w <= 31);
+    debug_assert!(mag < (1 << w), "magnitude {mag} does not fit in {w} bits");
+    if mag == 0 {
+        return w + 1;
+    }
+    let top = 32 - mag.leading_zeros(); // index (1-based) of highest set bit
+    w - top + 1
+}
+
+/// LZ-format encoding of one signed integer: `(sign, LZ)` plus the field
+/// width. Storage cost is ~`ceil(log2(W)) + 1` bits — e.g. 4 bits for W=7/8
+/// as the paper notes (vs loading the full 8-bit operand under SLZS).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LzCode {
+    pub negative: bool,
+    /// Leading zeros in the W-bit magnitude; `w + 1` encodes zero.
+    pub lz: u32,
+    /// Magnitude field width W.
+    pub w: u32,
+}
+
+impl LzCode {
+    /// Encode a signed integer whose magnitude fits `w` bits.
+    pub fn encode(x: i32, w: u32) -> LzCode {
+        let mag = x.unsigned_abs();
+        LzCode { negative: x < 0, lz: lz_count(mag, w), w }
+    }
+
+    /// True if the encoded value was exactly zero.
+    pub fn is_zero(&self) -> bool {
+        self.lz == self.w + 1
+    }
+
+    /// The log-domain magnitude approximation `2^(W − LZ)` (0 for zero).
+    /// For a non-zero x this is within (|x|/2, |x|]... precisely it is the
+    /// value of the highest set bit of |x|, so `approx ≤ |x| < 2·approx`.
+    pub fn magnitude_approx(&self) -> i64 {
+        if self.is_zero() {
+            0
+        } else {
+            1i64 << (self.w - self.lz)
+        }
+    }
+
+    /// Signed approximate value.
+    pub fn value_approx(&self) -> i64 {
+        let m = self.magnitude_approx();
+        if self.negative {
+            -m
+        } else {
+            m
+        }
+    }
+
+    /// Shift amount applied to the *other* operand under DLZS: `W − LZ`.
+    /// Returns None for zero (the product is zero; no shift happens).
+    pub fn shift_amount(&self) -> Option<u32> {
+        if self.is_zero() {
+            None
+        } else {
+            Some(self.w - self.lz)
+        }
+    }
+
+    /// Bits needed to store this code (sign + LZ field).
+    pub fn storage_bits(&self) -> u32 {
+        // LZ ranges over w+1 values (1..=w plus the zero sentinel).
+        1 + (32 - (self.w + 1).leading_zeros())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lz_count_examples() {
+        // W = 7 (INT8 magnitude field).
+        assert_eq!(lz_count(0b1000000, 7), 1);
+        assert_eq!(lz_count(0b0000001, 7), 7);
+        assert_eq!(lz_count(0b0000011, 7), 6);
+        assert_eq!(lz_count(0, 7), 8); // zero sentinel
+    }
+
+    #[test]
+    fn approx_bounds_nonzero() {
+        let w = 7;
+        for x in 1..128i32 {
+            let c = LzCode::encode(x, w);
+            let a = c.magnitude_approx();
+            assert!(a <= x as i64 && (x as i64) < 2 * a, "x={x} approx={a}");
+        }
+    }
+
+    #[test]
+    fn sign_carried() {
+        let c = LzCode::encode(-5, 7);
+        assert!(c.negative);
+        assert_eq!(c.value_approx(), -4);
+        let p = LzCode::encode(5, 7);
+        assert_eq!(p.value_approx(), 4);
+    }
+
+    #[test]
+    fn zero_handling() {
+        let c = LzCode::encode(0, 7);
+        assert!(c.is_zero());
+        assert_eq!(c.value_approx(), 0);
+        assert_eq!(c.shift_amount(), None);
+    }
+
+    #[test]
+    fn storage_bits_small() {
+        // W=7 → LZ in [1..8] → 4 bits + sign = 5; the paper quotes "4-bit LZ
+        // value" for the LZ field itself.
+        let c = LzCode::encode(42, 7);
+        assert_eq!(c.storage_bits(), 5);
+        assert_eq!(c.storage_bits() - 1, 4);
+    }
+
+    #[test]
+    fn lz_monotone_decreasing_in_magnitude() {
+        let w = 15;
+        let mut last = w + 2;
+        for x in [1, 2, 4, 100, 5000, 32000] {
+            let lz = lz_count(x, w);
+            assert!(lz < last || lz == last);
+            last = lz;
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Arithmetic substrates for the prediction stage.
+//!
+//! * [`fixed`] — symmetric integer quantization (INT4/8/16) used for the
+//!   low-precision pre-compute stage and the INT16 formal-compute baseline.
+//! * [`lz`] — the leading-zero codec: `x = sign · M · 2^(W-LZ)` (Eq. 3).
+//! * [`dlzs`] — the paper's Differential Leading-Zero Scheme and the
+//!   symmetric baseline (SLZS, as used by FACT), both multiplier-free, plus
+//!   the PSP pre-flipping model.
+//! * [`opcount`] — operation accounting and the equivalent-additions
+//!   normalization (α..ε = 1, 3, 1, 8, 25) from the paper's footnote 1.
+
+pub mod dlzs;
+pub mod fixed;
+pub mod lz;
+pub mod opcount;
+
+pub use dlzs::{dlzs_mul, slzs_mul, LzWeight};
+pub use fixed::{IntBits, QuantMat};
+pub use lz::{lz_count, LzCode};
+pub use opcount::{EquivWeights, OpCounter, OpKind};

@@ -1,0 +1,215 @@
+//! Operation accounting and the equivalent-additions normalization.
+//!
+//! The paper unifies heterogeneous operation mixes into "equivalent
+//! additions" (footnote 1):
+//! `C = α·N_add + β·N_mul + γ·N_cmp + δ·N_div + ε·N_exp` with
+//! `α,β,γ,δ,ε = 1, 3, 1, 8, 25` (after Brent & Zimmermann [15]).
+//! Shifts are counted separately and weighted like additions — they are the
+//! currency of the DLZS multiplier-free datapath.
+
+/// Kinds of primitive operations the algorithm layer counts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Add,
+    Mul,
+    Cmp,
+    Div,
+    Exp,
+    Shift,
+    /// Leading-zero encode of one operand (priority encoder).
+    LzEncode,
+}
+
+/// Weights for the equivalent-additions normalization.
+#[derive(Clone, Copy, Debug)]
+pub struct EquivWeights {
+    pub add: f64,
+    pub mul: f64,
+    pub cmp: f64,
+    pub div: f64,
+    pub exp: f64,
+    pub shift: f64,
+    pub lz_encode: f64,
+}
+
+impl Default for EquivWeights {
+    fn default() -> Self {
+        // α..ε from the paper; shift/LZ-encode ≈ one add of datapath work.
+        EquivWeights { add: 1.0, mul: 3.0, cmp: 1.0, div: 8.0, exp: 25.0, shift: 1.0, lz_encode: 1.0 }
+    }
+}
+
+/// Mutable operation counter threaded through the counted attention /
+/// sparsity implementations.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct OpCounter {
+    pub add: u64,
+    pub mul: u64,
+    pub cmp: u64,
+    pub div: u64,
+    pub exp: u64,
+    pub shift: u64,
+    pub lz_encode: u64,
+    /// Bytes moved to/from off-chip memory (model-level, not cycle-level —
+    /// the cycle-level memory system lives in [`crate::sim`]).
+    pub dram_bytes: u64,
+    /// Bytes moved to/from on-chip SRAM.
+    pub sram_bytes: u64,
+}
+
+impl OpCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn tally(&mut self, kind: OpKind, n: u64) {
+        match kind {
+            OpKind::Add => self.add += n,
+            OpKind::Mul => self.mul += n,
+            OpKind::Cmp => self.cmp += n,
+            OpKind::Div => self.div += n,
+            OpKind::Exp => self.exp += n,
+            OpKind::Shift => self.shift += n,
+            OpKind::LzEncode => self.lz_encode += n,
+        }
+    }
+
+    #[inline]
+    pub fn dram(&mut self, bytes: u64) {
+        self.dram_bytes += bytes;
+    }
+
+    #[inline]
+    pub fn sram(&mut self, bytes: u64) {
+        self.sram_bytes += bytes;
+    }
+
+    /// Equivalent additions under `w`.
+    pub fn equivalent_adds(&self, w: &EquivWeights) -> f64 {
+        self.add as f64 * w.add
+            + self.mul as f64 * w.mul
+            + self.cmp as f64 * w.cmp
+            + self.div as f64 * w.div
+            + self.exp as f64 * w.exp
+            + self.shift as f64 * w.shift
+            + self.lz_encode as f64 * w.lz_encode
+    }
+
+    /// Equivalent additions under the paper's default weights.
+    pub fn equiv(&self) -> f64 {
+        self.equivalent_adds(&EquivWeights::default())
+    }
+
+    /// Total primitive operation count (unweighted), matmul + non-matmul.
+    pub fn total_ops(&self) -> u64 {
+        self.add + self.mul + self.cmp + self.div + self.exp + self.shift + self.lz_encode
+    }
+
+    /// Non-matmul operations (everything but add/mul — the FLOPs FA-2's
+    /// "each non-matmul FLOP is ~16× more costly" remark is about).
+    pub fn non_matmul_ops(&self) -> u64 {
+        self.cmp + self.div + self.exp
+    }
+
+    /// Merge another counter into this one.
+    pub fn merge(&mut self, other: &OpCounter) {
+        self.add += other.add;
+        self.mul += other.mul;
+        self.cmp += other.cmp;
+        self.div += other.div;
+        self.exp += other.exp;
+        self.shift += other.shift;
+        self.lz_encode += other.lz_encode;
+        self.dram_bytes += other.dram_bytes;
+        self.sram_bytes += other.sram_bytes;
+    }
+
+    /// Difference (saturating) — used to report "extra ops vs baseline".
+    pub fn delta(&self, baseline: &OpCounter) -> OpCounter {
+        OpCounter {
+            add: self.add.saturating_sub(baseline.add),
+            mul: self.mul.saturating_sub(baseline.mul),
+            cmp: self.cmp.saturating_sub(baseline.cmp),
+            div: self.div.saturating_sub(baseline.div),
+            exp: self.exp.saturating_sub(baseline.exp),
+            shift: self.shift.saturating_sub(baseline.shift),
+            lz_encode: self.lz_encode.saturating_sub(baseline.lz_encode),
+            dram_bytes: self.dram_bytes.saturating_sub(baseline.dram_bytes),
+            sram_bytes: self.sram_bytes.saturating_sub(baseline.sram_bytes),
+        }
+    }
+}
+
+impl std::fmt::Display for OpCounter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "add={} mul={} cmp={} div={} exp={} shift={} lzenc={} dram={}B sram={}B (equiv-adds={:.3e})",
+            self.add,
+            self.mul,
+            self.cmp,
+            self.div,
+            self.exp,
+            self.shift,
+            self.lz_encode,
+            self.dram_bytes,
+            self.sram_bytes,
+            self.equiv()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equivalent_adds_uses_paper_weights() {
+        let mut c = OpCounter::new();
+        c.tally(OpKind::Add, 10);
+        c.tally(OpKind::Mul, 10);
+        c.tally(OpKind::Cmp, 10);
+        c.tally(OpKind::Div, 10);
+        c.tally(OpKind::Exp, 10);
+        // 10·1 + 10·3 + 10·1 + 10·8 + 10·25 = 380
+        assert_eq!(c.equiv(), 380.0);
+    }
+
+    #[test]
+    fn merge_and_delta() {
+        let mut a = OpCounter::new();
+        a.tally(OpKind::Exp, 5);
+        a.dram(100);
+        let mut b = OpCounter::new();
+        b.tally(OpKind::Exp, 3);
+        b.dram(40);
+        let mut m = a.clone();
+        m.merge(&b);
+        assert_eq!(m.exp, 8);
+        assert_eq!(m.dram_bytes, 140);
+        let d = m.delta(&a);
+        assert_eq!(d.exp, 3);
+        assert_eq!(d.dram_bytes, 40);
+    }
+
+    #[test]
+    fn exp_dominates_equiv() {
+        // 1 exp ≈ 25 adds: the reason FA's extra exponentiations matter.
+        let mut exp1 = OpCounter::new();
+        exp1.tally(OpKind::Exp, 1);
+        let mut add24 = OpCounter::new();
+        add24.tally(OpKind::Add, 24);
+        assert!(exp1.equiv() > add24.equiv());
+    }
+
+    #[test]
+    fn shift_counts_like_add() {
+        let mut c = OpCounter::new();
+        c.tally(OpKind::Shift, 7);
+        c.tally(OpKind::LzEncode, 3);
+        assert_eq!(c.equiv(), 10.0);
+        assert_eq!(c.total_ops(), 10);
+        assert_eq!(c.non_matmul_ops(), 0);
+    }
+}

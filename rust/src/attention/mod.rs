@@ -1,0 +1,132 @@
+//! Counted attention implementations (the *formal compute* stage).
+//!
+//! Every implementation computes the same mathematical object —
+//! `O = softmax(Q Kᵀ / √d_h) V`, optionally restricted to a per-row key
+//! selection — while tallying primitive operations into an
+//! [`crate::arith::OpCounter`] and modeling DRAM/SRAM traffic. The bench
+//! harness uses the counters to regenerate the paper's complexity figures
+//! (Fig. 5, Fig. 11, Fig. 18); the [`crate::sim`] layer converts the same
+//! counts into cycles and energy.
+//!
+//! * [`ref_attn`] — vanilla dense attention (materializes A; the paper's
+//!   "vanilla baseline").
+//! * [`flash2`] — FlashAttention-2 tiling with online softmax (the paper's
+//!   Fig. 5(a) pseudo-code), including the cross-tile max refresh and the
+//!   rescaling work SU-FA eliminates.
+//! * [`sufa`] — the paper's Sorted-Updating FlashAttention (Sec. IV-C) in
+//!   descending (default) and ascending update order, with the
+//!   tailored-engine stall model for mispredicted maxima.
+
+pub mod flash2;
+pub mod ref_attn;
+pub mod sufa;
+
+pub use flash2::{flash2_attention, Flash2Params};
+pub use ref_attn::{dense_attention, masked_attention_oracle};
+pub use sufa::{sufa_attention, SufaParams, UpdateOrder};
+
+use crate::tensor::Mat;
+
+/// Inputs to one attention head: Q [T, d], K [S, d], V [S, d].
+/// `scale` is usually 1/√d_h.
+#[derive(Clone, Debug)]
+pub struct AttnInputs<'a> {
+    pub q: &'a Mat,
+    pub k: &'a Mat,
+    pub v: &'a Mat,
+    pub scale: f32,
+}
+
+impl<'a> AttnInputs<'a> {
+    pub fn new(q: &'a Mat, k: &'a Mat, v: &'a Mat) -> Self {
+        assert_eq!(q.cols, k.cols, "Q/K head-dim mismatch");
+        assert_eq!(k.rows, v.rows, "K/V length mismatch");
+        assert_eq!(k.cols, v.cols, "K/V head-dim mismatch (MHA layout)");
+        let scale = 1.0 / (q.cols as f32).sqrt();
+        AttnInputs { q, k, v, scale }
+    }
+
+    pub fn t(&self) -> usize {
+        self.q.rows
+    }
+
+    pub fn s(&self) -> usize {
+        self.k.rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.q.cols
+    }
+}
+
+/// Per-row key selections produced by the top-k stage. `rows[i]` holds the
+/// selected key indices for query row `i`; ordering is meaningful (SU-FA
+/// consumes them in estimated-score order).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Selection {
+    pub rows: Vec<Vec<usize>>,
+}
+
+impl Selection {
+    /// Full (dense) selection: every key for every row, natural order.
+    pub fn full(t: usize, s: usize) -> Selection {
+        Selection { rows: vec![(0..s).collect(); t] }
+    }
+
+    /// Causal selection: row i attends to keys 0..=i (for T == S).
+    pub fn causal(t: usize) -> Selection {
+        Selection { rows: (0..t).map(|i| (0..=i).collect()).collect() }
+    }
+
+    /// Total number of selected (query, key) pairs.
+    pub fn nnz(&self) -> usize {
+        self.rows.iter().map(|r| r.len()).sum()
+    }
+
+    /// Density relative to a T×S dense attention.
+    pub fn density(&self, s: usize) -> f64 {
+        if self.rows.is_empty() || s == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows.len() * s) as f64
+    }
+
+    /// The set of keys selected by *any* row — exactly the KV rows the
+    /// on-demand generation stage must produce.
+    pub fn union_keys(&self, s: usize) -> Vec<usize> {
+        let mut needed = vec![false; s];
+        for row in &self.rows {
+            for &j in row {
+                needed[j] = true;
+            }
+        }
+        (0..s).filter(|&j| needed[j]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_selection_density() {
+        let sel = Selection::full(4, 8);
+        assert_eq!(sel.nnz(), 32);
+        assert_eq!(sel.density(8), 1.0);
+        assert_eq!(sel.union_keys(8).len(), 8);
+    }
+
+    #[test]
+    fn causal_selection() {
+        let sel = Selection::causal(4);
+        assert_eq!(sel.rows[0], vec![0]);
+        assert_eq!(sel.rows[3], vec![0, 1, 2, 3]);
+        assert_eq!(sel.nnz(), 10);
+    }
+
+    #[test]
+    fn union_keys_dedup() {
+        let sel = Selection { rows: vec![vec![3, 1], vec![1, 5]] };
+        assert_eq!(sel.union_keys(8), vec![1, 3, 5]);
+    }
+}

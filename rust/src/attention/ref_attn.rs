@@ -1,0 +1,174 @@
+//! Vanilla dense attention — the paper's baseline and the numerical oracle.
+//!
+//! Materializes the full attention matrix `A = QKᵀ·scale`, applies the
+//! row-wise stable softmax of Eq. (1), then multiplies by V (Eq. 2). Op
+//! accounting follows the paper's convention: the row max costs S−1
+//! comparisons, the sum S−1 additions, normalization one division per
+//! element.
+
+use super::{AttnInputs, Selection};
+use crate::arith::{OpCounter, OpKind};
+use crate::tensor::Mat;
+
+/// Dense attention with op accounting. Traffic model: Q, K, V are each read
+/// from DRAM once; the T×S attention matrix spills to DRAM (write + read)
+/// when it exceeds `sram_budget` bytes — the row-dependency problem of
+/// Sec. III-A(2).
+pub fn dense_attention(inp: &AttnInputs, sram_budget: usize, c: &mut OpCounter) -> Mat {
+    let (t, s, d) = (inp.t(), inp.s(), inp.d());
+
+    // A = Q Kᵀ · scale
+    let mut a = inp.q.matmul(&inp.k.transpose());
+    a.scale(inp.scale);
+    c.tally(OpKind::Mul, (t * s * d) as u64 + (t * s) as u64); // QKᵀ + scale
+    c.tally(OpKind::Add, (t * s * (d - 1)) as u64);
+
+    // Traffic: operands in, scores spill if they don't fit on chip.
+    let f = 4u64; // f32 bytes
+    c.dram(f * (t * d + 2 * s * d) as u64); // Q, K, V loads
+    let score_bytes = f * (t * s) as u64;
+    if score_bytes as usize > sram_budget {
+        c.dram(2 * score_bytes); // write A out, read it back for softmax/AV
+    } else {
+        c.sram(2 * score_bytes);
+    }
+
+    // Row-wise softmax (Eq. 1).
+    let p = a.softmax_rows();
+    c.tally(OpKind::Cmp, (t * (s - 1)) as u64); // row max
+    c.tally(OpKind::Add, (t * s) as u64); // subtract max (counted as adds)
+    c.tally(OpKind::Exp, (t * s) as u64);
+    c.tally(OpKind::Add, (t * (s - 1)) as u64); // denominator sum
+    c.tally(OpKind::Div, (t * s) as u64); // normalize
+
+    // O = P V
+    let o = p.matmul(inp.v);
+    c.tally(OpKind::Mul, (t * s * d) as u64);
+    c.tally(OpKind::Add, (t * (s - 1) * d) as u64);
+    c.dram(f * (t * d) as u64); // store O
+
+    o
+}
+
+/// Oracle for *selected* attention: softmax over exactly the keys in
+/// `sel.rows[i]` (all other logits = −∞), then multiply by V. This is what
+/// SU-FA must reproduce bit-for-bit (up to fp association) — used heavily
+/// in tests. No op accounting: oracles are free.
+pub fn masked_attention_oracle(inp: &AttnInputs, sel: &Selection) -> Mat {
+    let (t, d) = (inp.t(), inp.d());
+    assert_eq!(sel.rows.len(), t);
+    let mut out = Mat::zeros(t, d);
+    for i in 0..t {
+        let keys = &sel.rows[i];
+        if keys.is_empty() {
+            continue;
+        }
+        // Logits for selected keys.
+        let mut logits: Vec<f32> = keys
+            .iter()
+            .map(|&j| {
+                let mut dot = 0.0f32;
+                for p in 0..d {
+                    dot += inp.q.at(i, p) * inp.k.at(j, p);
+                }
+                dot * inp.scale
+            })
+            .collect();
+        crate::tensor::softmax_inplace(&mut logits);
+        for (w, &j) in logits.iter().zip(keys) {
+            for p in 0..d {
+                *out.at_mut(i, p) += w * inp.v.at(j, p);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_inputs(t: usize, s: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        (
+            Mat::randn(t, d, 1.0, &mut rng),
+            Mat::randn(s, d, 1.0, &mut rng),
+            Mat::randn(s, d, 1.0, &mut rng),
+        )
+    }
+
+    #[test]
+    fn dense_matches_masked_oracle_with_full_selection() {
+        let (q, k, v) = rand_inputs(5, 9, 8, 1);
+        let inp = AttnInputs::new(&q, &k, &v);
+        let mut c = OpCounter::new();
+        let dense = dense_attention(&inp, usize::MAX, &mut c);
+        let oracle = masked_attention_oracle(&inp, &Selection::full(5, 9));
+        assert!(dense.max_abs_diff(&oracle) < 1e-5);
+    }
+
+    #[test]
+    fn rows_of_output_are_convex_combos() {
+        // With V = identity-ish columns the output row must be a convex
+        // combination of V rows: check total weight 1 via ones-V.
+        let (q, k, _) = rand_inputs(4, 7, 8, 2);
+        let ones = Mat::from_fn(7, 8, |_, _| 1.0);
+        let inp = AttnInputs::new(&q, &k, &ones);
+        let mut c = OpCounter::new();
+        let o = dense_attention(&inp, usize::MAX, &mut c);
+        for i in 0..o.rows {
+            for j in 0..o.cols {
+                assert!((o.at(i, j) - 1.0).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn op_counts_match_formulas() {
+        let (q, k, v) = rand_inputs(3, 10, 4, 3);
+        let inp = AttnInputs::new(&q, &k, &v);
+        let mut c = OpCounter::new();
+        dense_attention(&inp, usize::MAX, &mut c);
+        let (t, s, d) = (3u64, 10u64, 4u64);
+        assert_eq!(c.exp, t * s);
+        assert_eq!(c.cmp, t * (s - 1));
+        assert_eq!(c.div, t * s);
+        assert_eq!(c.mul, t * s * d + t * s + t * s * d);
+    }
+
+    #[test]
+    fn score_spill_charged_only_when_over_budget() {
+        let (q, k, v) = rand_inputs(8, 64, 16, 4);
+        let inp = AttnInputs::new(&q, &k, &v);
+        let mut small = OpCounter::new();
+        dense_attention(&inp, 16, &mut small); // tiny SRAM: must spill
+        let mut big = OpCounter::new();
+        dense_attention(&inp, usize::MAX, &mut big);
+        assert!(small.dram_bytes > big.dram_bytes);
+        let spill = 2 * 4 * 8 * 64;
+        assert_eq!(small.dram_bytes - big.dram_bytes, spill);
+    }
+
+    #[test]
+    fn masked_oracle_respects_selection() {
+        // Row attends only to key 2 → output row == V row 2.
+        let (q, k, v) = rand_inputs(1, 5, 4, 5);
+        let inp = AttnInputs::new(&q, &k, &v);
+        let sel = Selection { rows: vec![vec![2]] };
+        let o = masked_attention_oracle(&inp, &sel);
+        for p in 0..4 {
+            assert!((o.at(0, p) - v.at(2, p)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn empty_selection_gives_zero_row() {
+        let (q, k, v) = rand_inputs(2, 5, 4, 6);
+        let inp = AttnInputs::new(&q, &k, &v);
+        let sel = Selection { rows: vec![vec![], vec![0, 1]] };
+        let o = masked_attention_oracle(&inp, &sel);
+        assert!(o.row(0).iter().all(|&x| x == 0.0));
+        assert!(o.row(1).iter().any(|&x| x != 0.0));
+    }
+}

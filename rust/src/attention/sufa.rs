@@ -1,0 +1,342 @@
+//! SU-FA — Sorted-Updating FlashAttention (Sec. IV-C).
+//!
+//! The top-k stage hands the formal-compute stage a per-row key list
+//! *sorted by estimated score*. Visiting tiles in **descending** order means
+//! the running max is fixed by the first tile: no cross-tile max
+//! comparisons, no `exp(m_old − m_new)` correction factors, no O/l rescales
+//! — the redundant work of FA (Fig. 11a) disappears. **Ascending** order
+//! also avoids the comparisons (the newest tile always holds the max) but
+//! must rescale `l` and the accumulator at every step — the extra
+//! multiplications of Fig. 11b that make descend the default.
+//!
+//! Because the estimate comes from the approximate DLZS predictor, the true
+//! max may exceed the first tile's max. The tailored SU-FA engine detects
+//! this (the exponent of `exp(x − m)` turns positive) and performs a
+//! recovery rescale — a *stall* in hardware terms (Fig. 20 discusses the
+//! cost of these stalls on a non-tailored datapath). We reproduce exactly
+//! that: [`SufaResult::stalls`] counts recoveries, and the output stays
+//! numerically correct regardless of prediction quality.
+
+use super::{AttnInputs, Selection};
+use crate::arith::{OpCounter, OpKind};
+use crate::tensor::Mat;
+use crate::util::ceil_div;
+
+/// Update order for the sorted tiles (Fig. 11b).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateOrder {
+    /// Max-first: running max never increases (paper default).
+    Descend,
+    /// Min-first: max strictly tracks the newest tile; needs per-step
+    /// rescaling of `l` and the accumulator.
+    Ascend,
+}
+
+/// SU-FA execution parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SufaParams {
+    /// Tile size B_c over the selected keys.
+    pub bc: usize,
+    pub order: UpdateOrder,
+}
+
+impl Default for SufaParams {
+    fn default() -> Self {
+        SufaParams { bc: 16, order: UpdateOrder::Descend }
+    }
+}
+
+/// Result of an SU-FA pass.
+#[derive(Clone, Debug)]
+pub struct SufaResult {
+    pub out: Mat,
+    /// Max-misprediction recoveries (hardware stalls).
+    pub stalls: u64,
+}
+
+/// Run SU-FA over the per-row selections. `sel.rows[i]` must be ordered by
+/// estimated score (descending). For [`UpdateOrder::Ascend`] the list is
+/// consumed back-to-front. On-demand KV traffic: only the union of selected
+/// keys is charged.
+pub fn sufa_attention(
+    inp: &AttnInputs,
+    sel: &Selection,
+    p: &SufaParams,
+    c: &mut OpCounter,
+) -> SufaResult {
+    let (t, s, d) = (inp.t(), inp.s(), inp.d());
+    assert_eq!(sel.rows.len(), t);
+    let f = 4u64;
+
+    // Traffic: Q once, O once, and only the KV rows some query selected
+    // (produced on demand by the PE array — see sim::units::PeArray).
+    let kv_rows = sel.union_keys(s).len();
+    c.dram(f * (2 * t * d) as u64);
+    c.dram(f * (2 * kv_rows * d) as u64);
+
+    let mut out = Mat::zeros(t, d);
+    let mut stalls = 0u64;
+
+    for i in 0..t {
+        let keys = &sel.rows[i];
+        if keys.is_empty() {
+            continue;
+        }
+        let order: Vec<usize> = match p.order {
+            UpdateOrder::Descend => keys.clone(),
+            UpdateOrder::Ascend => keys.iter().rev().copied().collect(),
+        };
+        let ntiles = ceil_div(order.len(), p.bc);
+        c.sram(f * ((order.len() * d) as u64)); // staged KV tiles
+
+        let mut m = f32::NEG_INFINITY;
+        let mut l = 0.0f32;
+        let mut acc = vec![0.0f32; d];
+
+        for tile in 0..ntiles {
+            let lo = tile * p.bc;
+            let hi = (lo + p.bc).min(order.len());
+            let width = hi - lo;
+
+            // Scores for this tile.
+            let mut scores = vec![0.0f32; width];
+            for (w, &j) in order[lo..hi].iter().enumerate() {
+                let mut dot = 0.0f32;
+                for pth in 0..d {
+                    dot += inp.q.at(i, pth) * inp.k.at(j, pth);
+                }
+                scores[w] = dot * inp.scale;
+            }
+            c.tally(OpKind::Mul, (width * d + width) as u64);
+            c.tally(OpKind::Add, (width * (d - 1)) as u64);
+
+            match p.order {
+                UpdateOrder::Descend => {
+                    if tile == 0 {
+                        // The ONLY max reduction of the whole row.
+                        m = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                        c.tally(OpKind::Cmp, (width - 1) as u64);
+                    }
+                    // Misprediction recovery: a score above m would overflow
+                    // exp — detected for free by the exponent sign, repaired
+                    // with one FA-style rescale (a stall).
+                    let tile_max = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                    if tile_max > m {
+                        stalls += 1;
+                        let corr = (m - tile_max).exp();
+                        c.tally(OpKind::Exp, 1);
+                        c.tally(OpKind::Mul, (d + 1) as u64);
+                        l *= corr;
+                        for x in acc.iter_mut() {
+                            *x *= corr;
+                        }
+                        m = tile_max;
+                    }
+                }
+                UpdateOrder::Ascend => {
+                    // Sorted guarantee: this tile holds the new max — no
+                    // comparisons, but l and the accumulator must rescale
+                    // (the extra multiplications of Fig. 11b).
+                    let tile_max = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                    c.tally(OpKind::Cmp, (width - 1) as u64); // in-tile only
+                    let m_new = if tile_max > m { tile_max } else { m };
+                    if tile > 0 {
+                        let corr = (m - m_new).exp();
+                        c.tally(OpKind::Add, 1);
+                        c.tally(OpKind::Exp, 1);
+                        c.tally(OpKind::Mul, (d + 1) as u64);
+                        l *= corr;
+                        for x in acc.iter_mut() {
+                            *x *= corr;
+                        }
+                    }
+                    m = m_new;
+                }
+            }
+
+            // P = exp(S − m); accumulate l and O.
+            c.tally(OpKind::Add, width as u64);
+            c.tally(OpKind::Exp, width as u64);
+            c.tally(OpKind::Add, (width - 1) as u64);
+            for (w, &j) in order[lo..hi].iter().enumerate() {
+                let prob = (scores[w] - m).exp();
+                l += prob;
+                for pth in 0..d {
+                    acc[pth] += prob * inp.v.at(j, pth);
+                }
+            }
+            c.tally(OpKind::Add, width as u64); // l accumulation
+            c.tally(OpKind::Mul, (width * d) as u64);
+            c.tally(OpKind::Add, (width * d) as u64);
+        }
+
+        c.tally(OpKind::Div, 1);
+        c.tally(OpKind::Mul, d as u64);
+        let inv = 1.0 / l;
+        for pth in 0..d {
+            *out.at_mut(i, pth) = acc[pth] * inv;
+        }
+    }
+
+    SufaResult { out, stalls }
+}
+
+/// Sort each selection row by the *true* attention scores, descending —
+/// the perfect-prediction oracle order used in tests and upper-bound
+/// studies.
+pub fn sort_selection_by_true_scores(inp: &AttnInputs, sel: &Selection) -> Selection {
+    let d = inp.d();
+    let rows = sel
+        .rows
+        .iter()
+        .enumerate()
+        .map(|(i, keys)| {
+            let mut scored: Vec<(f32, usize)> = keys
+                .iter()
+                .map(|&j| {
+                    let mut dot = 0.0f32;
+                    for p in 0..d {
+                        dot += inp.q.at(i, p) * inp.k.at(j, p);
+                    }
+                    (dot * inp.scale, j)
+                })
+                .collect();
+            scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+            scored.into_iter().map(|(_, j)| j).collect()
+        })
+        .collect();
+    Selection { rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::ref_attn::{dense_attention, masked_attention_oracle};
+    use crate::util::Rng;
+
+    fn inputs(t: usize, s: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        (
+            Mat::randn(t, d, 1.0, &mut rng),
+            Mat::randn(s, d, 1.0, &mut rng),
+            Mat::randn(s, d, 1.0, &mut rng),
+        )
+    }
+
+    #[test]
+    fn full_selection_sorted_matches_dense() {
+        let (q, k, v) = inputs(6, 40, 8, 1);
+        let inp = AttnInputs::new(&q, &k, &v);
+        let sel = sort_selection_by_true_scores(&inp, &Selection::full(6, 40));
+        let mut c = OpCounter::new();
+        let r = sufa_attention(&inp, &sel, &SufaParams::default(), &mut c);
+        let mut dc = OpCounter::new();
+        let dense = dense_attention(&inp, usize::MAX, &mut dc);
+        assert!(r.out.max_abs_diff(&dense) < 1e-4);
+        assert_eq!(r.stalls, 0, "perfectly sorted input must not stall");
+    }
+
+    #[test]
+    fn ascend_matches_descend_numerically() {
+        let (q, k, v) = inputs(5, 32, 8, 2);
+        let inp = AttnInputs::new(&q, &k, &v);
+        let sel = sort_selection_by_true_scores(&inp, &Selection::full(5, 32));
+        let mut c1 = OpCounter::new();
+        let mut c2 = OpCounter::new();
+        let d = sufa_attention(&inp, &sel, &SufaParams { bc: 8, order: UpdateOrder::Descend }, &mut c1);
+        let a = sufa_attention(&inp, &sel, &SufaParams { bc: 8, order: UpdateOrder::Ascend }, &mut c2);
+        assert!(d.out.max_abs_diff(&a.out) < 1e-4);
+    }
+
+    #[test]
+    fn ascend_costs_more_multiplications() {
+        // Fig. 11(b): ascend pays an extra multiplication per update step.
+        let (q, k, v) = inputs(8, 64, 16, 3);
+        let inp = AttnInputs::new(&q, &k, &v);
+        let sel = sort_selection_by_true_scores(&inp, &Selection::full(8, 64));
+        let mut cd = OpCounter::new();
+        let mut ca = OpCounter::new();
+        sufa_attention(&inp, &sel, &SufaParams { bc: 8, order: UpdateOrder::Descend }, &mut cd);
+        sufa_attention(&inp, &sel, &SufaParams { bc: 8, order: UpdateOrder::Ascend }, &mut ca);
+        assert!(ca.mul > cd.mul);
+        assert!(ca.exp > cd.exp);
+        // Descend does exactly one max reduction per row; ascend does one
+        // per tile (in-tile only) — both beat FA2's cross-tile refreshes.
+        assert!(cd.cmp < ca.cmp);
+    }
+
+    #[test]
+    fn descend_eliminates_fa2_overhead() {
+        let (q, k, v) = inputs(8, 128, 16, 4);
+        let inp = AttnInputs::new(&q, &k, &v);
+        let sel = sort_selection_by_true_scores(&inp, &Selection::full(8, 128));
+        let mut cs = OpCounter::new();
+        sufa_attention(&inp, &sel, &SufaParams { bc: 16, order: UpdateOrder::Descend }, &mut cs);
+        let mut cf = OpCounter::new();
+        crate::attention::flash2::flash2_attention(
+            &inp,
+            &crate::attention::Flash2Params { bc: 16, ..Default::default() },
+            &mut cf,
+        );
+        // Same matmul work, strictly fewer exp and cmp.
+        assert!(cs.exp < cf.exp, "sufa exp {} !< fa2 exp {}", cs.exp, cf.exp);
+        assert!(cs.cmp < cf.cmp);
+        // exp savings = T × (Tc − 1) corrections.
+        assert_eq!(cf.exp - cs.exp, 8 * (128 / 16 - 1));
+    }
+
+    #[test]
+    fn topk_selection_matches_masked_oracle() {
+        let (q, k, v) = inputs(6, 50, 8, 5);
+        let inp = AttnInputs::new(&q, &k, &v);
+        // Keep top-10 true keys per row.
+        let full = sort_selection_by_true_scores(&inp, &Selection::full(6, 50));
+        let sel = Selection { rows: full.rows.iter().map(|r| r[..10].to_vec()).collect() };
+        let mut c = OpCounter::new();
+        let r = sufa_attention(&inp, &sel, &SufaParams::default(), &mut c);
+        let oracle = masked_attention_oracle(&inp, &sel);
+        assert!(r.out.max_abs_diff(&oracle) < 1e-4);
+    }
+
+    #[test]
+    fn mis_sorted_input_stalls_but_stays_correct() {
+        let (q, k, v) = inputs(4, 64, 8, 6);
+        let inp = AttnInputs::new(&q, &k, &v);
+        // Adversarial: ascending order fed to the Descend path.
+        let sorted = sort_selection_by_true_scores(&inp, &Selection::full(4, 64));
+        let reversed =
+            Selection { rows: sorted.rows.iter().map(|r| r.iter().rev().copied().collect()).collect() };
+        let mut c = OpCounter::new();
+        let r = sufa_attention(&inp, &reversed, &SufaParams { bc: 8, order: UpdateOrder::Descend }, &mut c);
+        let mut dc = OpCounter::new();
+        let dense = dense_attention(&inp, usize::MAX, &mut dc);
+        assert!(r.stalls > 0, "reversed order must trigger recoveries");
+        assert!(r.out.max_abs_diff(&dense) < 1e-4, "recovery must preserve numerics");
+    }
+
+    #[test]
+    fn on_demand_kv_traffic_scales_with_union() {
+        let (q, k, v) = inputs(4, 100, 8, 7);
+        let inp = AttnInputs::new(&q, &k, &v);
+        let narrow = Selection { rows: vec![vec![0, 1, 2, 3]; 4] };
+        let wide = Selection { rows: vec![(0..100).collect(); 4] };
+        let mut cn = OpCounter::new();
+        let mut cw = OpCounter::new();
+        sufa_attention(&inp, &narrow, &SufaParams::default(), &mut cn);
+        sufa_attention(&inp, &wide, &SufaParams::default(), &mut cw);
+        assert!(cn.dram_bytes < cw.dram_bytes);
+        // narrow: 2·T·d + 2·4·d floats.
+        assert_eq!(cn.dram_bytes, 4 * (2 * 4 * 8 + 2 * 4 * 8) as u64);
+    }
+
+    #[test]
+    fn empty_rows_are_skipped() {
+        let (q, k, v) = inputs(3, 10, 4, 8);
+        let inp = AttnInputs::new(&q, &k, &v);
+        let sel = Selection { rows: vec![vec![], vec![1], vec![]] };
+        let mut c = OpCounter::new();
+        let r = sufa_attention(&inp, &sel, &SufaParams::default(), &mut c);
+        assert!(r.out.row(0).iter().all(|&x| x == 0.0));
+        assert!(r.out.row(2).iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,342 @@
+//! Architecture-evaluation figures: Fig. 19–23(a), Table III.
+
+use super::{f, header, row};
+use crate::config::{AccelConfig, ModelConfig};
+use crate::sim::area::ChipBudget;
+use crate::sim::baselines::{table3_specs, Baseline};
+use crate::sim::dram::DramChannel;
+use crate::sim::gpu::GpuModel;
+use crate::sim::pipeline::{simulate, FeatureSet, FormalKind, PredictKind, SimReport, TopkKind, WorkloadShape};
+use crate::util::stats::geomean;
+
+fn ltpp_shape(m: &ModelConfig, keep: f64) -> WorkloadShape {
+    WorkloadShape::new(128, m.seq_len, m.head_dim(), m.hidden, keep)
+}
+
+/// Fig. 19: STAR throughput gain over LP-on-A100 per task/model at
+/// 0/1/2% loss budgets. Returns (model, loss_idx, speedup).
+pub fn fig19_throughput_vs_gpu() -> Vec<(String, usize, f64)> {
+    header("Fig. 19 — STAR speedup over LP on A100");
+    let gpu = GpuModel::a100();
+    let cfg = AccelConfig::default();
+    let dram = DramChannel::accel_256();
+    let keeps = [0.25, 0.2, 0.15]; // 0/1/2% loss budgets
+    let mut out = Vec::new();
+    row("model", &["0% loss".into(), "1% loss".into(), "2% loss".into()]);
+    for m in ModelConfig::suite() {
+        let mut cells = Vec::new();
+        for (li, keep) in keeps.iter().enumerate() {
+            let shape = ltpp_shape(&m, *keep);
+            let star = simulate(&shape, &FeatureSet::star(), &cfg, &dram);
+            let gpu_t = gpu.lp_job_time(&shape);
+            let speedup = gpu_t / star.total_s;
+            cells.push(format!("{speedup:>8.1}x"));
+            out.push((m.name.clone(), li, speedup));
+        }
+        row(&m.name, &cells);
+    }
+    for li in 0..3 {
+        let v: Vec<f64> = out.iter().filter(|r| r.1 == li).map(|r| r.2).collect();
+        row(&format!("geomean @{li}% loss"), &[format!("{:>8.1}x", geomean(&v))]);
+    }
+    out
+}
+
+/// Fig. 20: cumulative throughput-gain breakdown over the dense-GPU
+/// baseline. Returns (step, cumulative_gain).
+pub fn fig20_gain_breakdown() -> Vec<(&'static str, f64)> {
+    header("Fig. 20 — throughput gain breakdown (vs dense A100)");
+    let gpu = GpuModel::a100();
+    let cfg = AccelConfig::default();
+    let dram = DramChannel::accel_256();
+    let m = ModelConfig::preset("gpt2").unwrap();
+    let shape = ltpp_shape(&m, 0.2);
+    let gpu_t = gpu.dense_job_time(&shape);
+
+    let steps: [(&'static str, FeatureSet); 5] = [
+        ("dense ASIC", FeatureSet::dense_asic()),
+        (
+            "+LP (no engines)",
+            FeatureSet {
+                predict: PredictKind::LowBitMul,
+                topk: TopkKind::Vanilla,
+                formal: FormalKind::Dense,
+                on_demand_kv: true,
+                tiled_dataflow: false,
+                oo_scheduler: false,
+                sufa_tailored: false,
+            },
+        ),
+        (
+            "+DLZS/SADS engines",
+            FeatureSet {
+                predict: PredictKind::DlzsCross,
+                topk: TopkKind::Sads,
+                formal: FormalKind::Dense,
+                on_demand_kv: true,
+                tiled_dataflow: false,
+                oo_scheduler: false,
+                sufa_tailored: false,
+            },
+        ),
+        (
+            "+SU-FA (tailored)",
+            FeatureSet {
+                predict: PredictKind::DlzsCross,
+                topk: TopkKind::Sads,
+                formal: FormalKind::SufaDescend,
+                on_demand_kv: true,
+                tiled_dataflow: false,
+                oo_scheduler: false,
+                sufa_tailored: true,
+            },
+        ),
+        ("+RASS + tiled (STAR)", FeatureSet::star()),
+    ];
+    let mut out = Vec::new();
+    row("configuration", &["gain vs GPU".into(), "step gain".into()]);
+    let mut prev = gpu_t;
+    for (name, feats) in steps {
+        // The paper's "dedicated ASIC datapath" reference point is an
+        // NVDLA-class dense MAC array (~4 TOPS), not a STAR-sized chip:
+        // Table III's implied GPU throughput (24423/9.2 ≈ 2.7 TOPS) and
+        // the 1.5× dense-ASIC step are only mutually consistent at that
+        // size. Later steps use the STAR configuration.
+        let step_cfg = if name == "dense ASIC" {
+            AccelConfig { pe_macs_per_cycle: 2048, sufa_exp_units: 32, ..cfg.clone() }
+        } else {
+            cfg.clone()
+        };
+        let r = simulate(&shape, &feats, &step_cfg, &dram);
+        let cum = gpu_t / r.total_s;
+        let step = prev / r.total_s;
+        row(name, &[format!("{cum:>8.2}x"), format!("{step:>8.2}x")]);
+        out.push((name, cum));
+        prev = r.total_s;
+    }
+    out
+}
+
+/// Fig. 21: area & power breakdown of the STAR accelerator. Returns
+/// (unit, area_mm2, power_mw).
+pub fn fig21_area_power() -> Vec<(String, f64, f64)> {
+    header("Fig. 21 — area & power breakdown (TSMC 28 nm)");
+    let b = ChipBudget::for_config(&AccelConfig::default());
+    let mut out = Vec::new();
+    row("unit", &["area mm²".into(), "power mW".into()]);
+    for u in &b.units {
+        row(u.name, &[f(u.area_mm2), f(u.power_mw)]);
+        out.push((u.name.to_string(), u.area_mm2, u.power_mw));
+    }
+    row("TOTAL", &[f(b.total_area_mm2()), f(b.total_power_mw())]);
+    row(
+        "LP share",
+        &[
+            format!("{:>8.1}%", 100.0 * b.lp_area_share()),
+            format!("{:>8.1}%", 100.0 * b.lp_power_share()),
+        ],
+    );
+    out
+}
+
+/// Fig. 22: (a) memory-access reduction vs the vanilla-DS baseline and
+/// (b) energy-efficiency gain over the A100. Returns
+/// ((reduction_rass, reduction_full), [gain_0, gain_1, gain_2]).
+pub fn fig22_memory_energy() -> ((f64, f64), [f64; 3]) {
+    header("Fig. 22 — memory-access reduction & energy-efficiency gain");
+    let cfg = AccelConfig::default();
+    let dram = DramChannel::accel_256();
+    let m = ModelConfig::preset("gpt2").unwrap();
+    // LTPP regime for the traffic comparison (T = 512).
+    let shape = WorkloadShape::new(512, m.seq_len, m.head_dim(), m.hidden, 0.2);
+
+    let base = simulate(&shape, &FeatureSet::ds_baseline(), &cfg, &dram);
+    let mut rass_only = FeatureSet::star();
+    rass_only.tiled_dataflow = false; // RASS scheduling without full tiling
+    let rass = simulate(&shape, &rass_only, &cfg, &dram);
+    let full = simulate(&shape, &FeatureSet::star(), &cfg, &dram);
+    let red_rass = 1.0 - rass.dram_bytes as f64 / base.dram_bytes as f64;
+    let red_full = 1.0 - full.dram_bytes as f64 / base.dram_bytes as f64;
+    row("mem reduction (RASS)", &[format!("{:>8.1}%", 100.0 * red_rass)]);
+    row("mem reduction (+SU-FA+tiled)", &[format!("{:>8.1}%", 100.0 * red_full)]);
+
+    let gpu = GpuModel::a100();
+    let mut gains = [0.0f64; 3];
+    for (li, keep) in [0.25, 0.2, 0.15].iter().enumerate() {
+        let mut per_model = Vec::new();
+        for m in ModelConfig::suite() {
+            let shape = ltpp_shape(&m, *keep);
+            let star = simulate(&shape, &FeatureSet::star(), &cfg, &dram);
+            let star_eff = star.energy_eff_gops_w();
+            let gpu_eff = gpu.dense_gops_per_w(&shape);
+            per_model.push(star_eff / gpu_eff);
+        }
+        gains[li] = geomean(&per_model);
+        row(&format!("energy-eff gain @{li}% loss"), &[format!("{:>8.1}x", gains[li])]);
+    }
+    ((red_rass, red_full), gains)
+}
+
+/// Fig. 23(a): single-core throughput vs SRAM capacity, STAR vs the
+/// untiled baseline, 256 GB/s DRAM. Returns (kb, star_gops, base_gops).
+pub fn fig23a_sram_single_core() -> Vec<(usize, f64, f64)> {
+    header("Fig. 23(a) — SRAM sweep, single core (256 GB/s DRAM)");
+    let dram = DramChannel::accel_256();
+    let m = ModelConfig::preset("gpt2").unwrap();
+    let shape = ltpp_shape(&m, 0.2);
+    let mut base_feats = FeatureSet::star();
+    base_feats.formal = FormalKind::Dense; // no softmax tiling
+    base_feats.tiled_dataflow = false;
+    base_feats.oo_scheduler = false;
+    base_feats.sufa_tailored = false;
+    let mut out = Vec::new();
+    row("SRAM kB", &["STAR GOPS".into(), "baseline GOPS".into()]);
+    for kb in [64usize, 128, 192, 256, 316, 412, 512] {
+        let cfg = AccelConfig { sram_bytes: kb * 1024, ..AccelConfig::default() };
+        let star = simulate(&shape, &FeatureSet::star(), &cfg, &dram);
+        let base = simulate(&shape, &base_feats, &cfg, &dram);
+        row(&format!("{kb}"), &[f(star.eff_gops), f(base.eff_gops)]);
+        out.push((kb, star.eff_gops, base.eff_gops));
+    }
+    out
+}
+
+/// Table III: SOTA comparison — published rows plus our simulator's
+/// measured row for STAR. Returns the measured STAR (gops, gops/w).
+pub fn table3_comparison() -> (f64, f64) {
+    header("Table III — comparison with SOTA accelerators (28 nm norm.)");
+    row(
+        "design",
+        &[
+            "tech".into(),
+            "area".into(),
+            "power".into(),
+            "GOPS".into(),
+            "GOPS/W".into(),
+            "GOPS/mm²".into(),
+        ],
+    );
+    for s in table3_specs() {
+        row(
+            s.name,
+            &[
+                format!("{:>6.0}nm", s.tech_nm),
+                f(s.area_mm2),
+                f(s.power_w),
+                f(s.throughput_gops),
+                f(s.energy_eff_28nm()),
+                f(s.area_eff_28nm()),
+            ],
+        );
+    }
+    // Our simulator's measured STAR numbers on a representative LTPP job.
+    let cfg = AccelConfig::default();
+    let dram = DramChannel::accel_256();
+    let shape = WorkloadShape::new(128, 4096, 128, 4096, 0.2);
+    let r = simulate(&shape, &FeatureSet::star(), &cfg, &dram);
+    let budget = ChipBudget::for_config(&cfg);
+    let gops = r.eff_gops;
+    let gops_w = r.energy_eff_gops_w();
+    row(
+        "STAR (this sim)",
+        &[
+            "28nm".into(),
+            f(budget.total_area_mm2()),
+            f(budget.total_power_mw() / 1e3),
+            f(gops),
+            f(gops_w),
+            f(gops / budget.total_area_mm2()),
+        ],
+    );
+    (gops, gops_w)
+}
+
+/// Helper shared by tests: STAR report on a model's LTPP job.
+pub fn star_report(model: &str, keep: f64) -> SimReport {
+    let m = ModelConfig::preset(model).unwrap();
+    simulate(
+        &ltpp_shape(&m, keep),
+        &FeatureSet::star(),
+        &AccelConfig::default(),
+        &DramChannel::accel_256(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig19_speedups_in_paper_band() {
+        // Paper: average 6.3×/7.0×/9.2× at 0/1/2% loss. Shape check:
+        // monotone in loss budget and within ~2× of the paper's averages.
+        let rows = fig19_throughput_vs_gpu();
+        let avg = |li: usize| {
+            let v: Vec<f64> = rows.iter().filter(|r| r.1 == li).map(|r| r.2).collect();
+            geomean(&v)
+        };
+        let (a0, a1, a2) = (avg(0), avg(1), avg(2));
+        assert!(a0 < a1 && a1 < a2, "monotone in loss: {a0} {a1} {a2}");
+        assert!((3.0..20.0).contains(&a0), "0% gain {a0}");
+        assert!((4.0..25.0).contains(&a2), "2% gain {a2}");
+    }
+
+    #[test]
+    fn fig20_every_step_helps() {
+        let rows = fig20_gain_breakdown();
+        for w in rows.windows(2) {
+            assert!(
+                w[1].1 > w[0].1 * 0.98,
+                "{} ({}) should not regress from {} ({})",
+                w[1].0,
+                w[1].1,
+                w[0].0,
+                w[0].1
+            );
+        }
+        // Dense ASIC ≈ 1.5× over GPU; full STAR ≈ 10× (paper's chain).
+        assert!((0.8..3.0).contains(&rows[0].1), "dense ASIC {}", rows[0].1);
+        assert!(rows.last().unwrap().1 > 4.0, "full STAR {}", rows.last().unwrap().1);
+    }
+
+    #[test]
+    fn fig21_matches_paper_totals() {
+        let rows = fig21_area_power();
+        let area: f64 = rows.iter().map(|r| r.1).sum();
+        let power: f64 = rows.iter().map(|r| r.2).sum();
+        assert!((area - 5.69).abs() < 0.05, "area {area}");
+        assert!((power - 949.85).abs() < 5.0, "power {power}");
+    }
+
+    #[test]
+    fn fig22_reductions_and_gains() {
+        let ((rass, full), gains) = fig22_memory_energy();
+        // Paper: 23% with RASS, 79% with SU-FA + tiled dataflow.
+        assert!(rass > 0.05, "RASS reduction {rass}");
+        assert!(full > 0.35, "full reduction {full}");
+        assert!(full > rass);
+        // Paper: 49.8×/51.6×/71.2× energy-efficiency gains.
+        assert!(gains[0] > 15.0, "gain@0% {}", gains[0]);
+        assert!(gains[2] > gains[0], "gains rise with sparsity");
+    }
+
+    #[test]
+    fn fig23a_star_saturates_baseline_stays_bound() {
+        let rows = fig23a_sram_single_core();
+        let star316 = rows.iter().find(|r| r.0 == 316).unwrap().1;
+        let star512 = rows.iter().find(|r| r.0 == 512).unwrap().1;
+        assert!((star512 - star316).abs() / star512 < 0.05, "STAR saturates by 316 kB");
+        // Baseline below STAR everywhere.
+        for (kb, star, base) in &rows {
+            assert!(star > base, "kb={kb}: star {star} !> base {base}");
+        }
+    }
+
+    #[test]
+    fn table3_measured_star_near_published() {
+        let (gops, gops_w) = table3_comparison();
+        // Published: 24423 GOPS / 7183 GOPS/W. Accept a 2.5× band.
+        assert!((10_000.0..60_000.0).contains(&gops), "GOPS {gops}");
+        assert!((2_800.0..18_000.0).contains(&gops_w), "GOPS/W {gops_w}");
+    }
+}

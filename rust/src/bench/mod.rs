@@ -1,0 +1,95 @@
+//! The benchmark harness: one function per table/figure of the paper's
+//! evaluation (plus the motivation figures), each printing the same
+//! rows/series the paper reports and returning the numbers for
+//! assertions. `cargo bench` and `star bench <name>` both route here.
+//!
+//! | Paper artifact | Function |
+//! |---|---|
+//! | Fig. 1 (memory/compute growth) | [`motivation::fig1_memory_compute`] |
+//! | Fig. 3 (MAT vs TP) | [`motivation::fig3_mat_breakdown`] |
+//! | Fig. 4 (operation intensity) | [`motivation::fig4_operation_intensity`] |
+//! | Fig. 5 (FA-2 overhead) | [`motivation::fig5_fa2_overhead`] |
+//! | Fig. 7 (QKV vs attention) | [`motivation::fig7_qkv_crossover`] |
+//! | Fig. 9 (Type I/II/III mix) | [`algorithm::fig9_distribution_mix`] |
+//! | Fig. 11 (update orders) | [`algorithm::fig11_update_orders`] |
+//! | Fig. 16 (LP computation reduction) | [`algorithm::fig16_lp_reduction`] |
+//! | Fig. 17 (top-k hit rates) | [`algorithm::fig17_hit_rates`] |
+//! | Fig. 18 (ablation + RC trade-off) | [`algorithm::fig18_ablation`] |
+//! | Table II (accuracy proxy) | [`algorithm::table2_accuracy`] |
+//! | Fig. 19 (throughput vs A100) | [`arch::fig19_throughput_vs_gpu`] |
+//! | Fig. 20 (gain breakdown) | [`arch::fig20_gain_breakdown`] |
+//! | Fig. 21 (area/power) | [`arch::fig21_area_power`] |
+//! | Fig. 22 (memory + energy) | [`arch::fig22_memory_energy`] |
+//! | Fig. 23(a) (SRAM, single core) | [`arch::fig23a_sram_single_core`] |
+//! | Table III (SOTA comparison) | [`arch::table3_comparison`] |
+//! | Fig. 23(b) (SRAM, multi-core) | [`spatial_eval::fig23b_sram_multicore`] |
+//! | Fig. 24 (spatial ablation/lateral) | [`spatial_eval::fig24_spatial`] |
+
+pub mod algorithm;
+pub mod arch;
+pub mod motivation;
+pub mod spatial_eval;
+
+use crate::Result;
+
+/// Print a section header.
+pub(crate) fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Render one row of right-aligned cells after a label.
+pub(crate) fn row(label: &str, cells: &[String]) {
+    let cells = cells.join("  ");
+    println!("{label:<26} {cells}");
+}
+
+/// Format a float with 3 significant-ish digits, right aligned.
+pub(crate) fn f(x: f64) -> String {
+    if x == 0.0 {
+        format!("{:>9}", "0")
+    } else if x.abs() >= 1000.0 || x.abs() < 0.01 {
+        format!("{x:>9.2e}")
+    } else {
+        format!("{x:>9.3}")
+    }
+}
+
+/// All bench names, in paper order.
+pub const ALL: [&str; 18] = [
+    "fig1", "fig3", "fig4", "fig5", "fig7", "fig9", "fig11", "fig16", "fig17", "fig18",
+    "table2", "fig19", "fig20", "fig21", "fig22", "fig23", "table3", "fig24",
+];
+
+/// Run one named bench (or `all`).
+pub fn run(name: &str) -> Result<()> {
+    match name {
+        "fig1" => drop(motivation::fig1_memory_compute()),
+        "fig3" => drop(motivation::fig3_mat_breakdown()),
+        "fig4" => drop(motivation::fig4_operation_intensity()),
+        "fig5" => drop(motivation::fig5_fa2_overhead()),
+        "fig7" => drop(motivation::fig7_qkv_crossover()),
+        "fig9" => drop(algorithm::fig9_distribution_mix()),
+        "fig11" => drop(algorithm::fig11_update_orders()),
+        "fig16" => drop(algorithm::fig16_lp_reduction()),
+        "fig17" => drop(algorithm::fig17_hit_rates()),
+        "fig18" => drop(algorithm::fig18_ablation()),
+        "table2" => drop(algorithm::table2_accuracy()),
+        "fig19" => drop(arch::fig19_throughput_vs_gpu()),
+        "fig20" => drop(arch::fig20_gain_breakdown()),
+        "fig21" => drop(arch::fig21_area_power()),
+        "fig22" => drop(arch::fig22_memory_energy()),
+        "fig23" => {
+            drop(arch::fig23a_sram_single_core());
+            drop(spatial_eval::fig23b_sram_multicore());
+        }
+        "table3" => drop(arch::table3_comparison()),
+        "fig24" => drop(spatial_eval::fig24_spatial()),
+        "all" => {
+            for n in ALL {
+                run(n)?;
+            }
+        }
+        other => anyhow::bail!("unknown bench {other:?}; try one of {ALL:?} or `all`"),
+    }
+    Ok(())
+}

@@ -1,0 +1,192 @@
+//! Motivation figures: Fig. 1, 3, 4, 5, 7.
+
+use super::{f, header, row};
+use crate::arith::{EquivWeights, OpCounter};
+use crate::attention::{dense_attention, flash2_attention, AttnInputs, Flash2Params};
+use crate::config::{AccelConfig, ModelConfig};
+use crate::sim::baselines::Baseline;
+use crate::sim::dram::DramChannel;
+use crate::sim::pipeline::{simulate, WorkloadShape};
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+/// Fig. 1: attention memory footprint and compute share vs sequence
+/// length (Llama-13B shapes). Returns (S, attn_mem_norm, attn/ffn ops).
+pub fn fig1_memory_compute() -> Vec<(usize, f64, f64)> {
+    header("Fig. 1 — attention memory & compute growth (Llama-13B shapes)");
+    let m = ModelConfig::preset("llama-13b").unwrap();
+    let h = m.hidden as f64;
+    let base_mem = 512.0 * 512.0; // BERT-era S=512 attention matrix
+    let mut out = Vec::new();
+    row(
+        "S",
+        &["mem(norm)".into(), "attn GFLOP".into(), "ffn GFLOP".into(), "attn/ffn+qkv".into()],
+    );
+    for s in [512usize, 2048, 8192, 16384, 26000, 32768] {
+        let sf = s as f64;
+        let mem_norm = sf * sf / base_mem;
+        // Attention: 4·S²·H ops; FFN (two 4H layers): 16·S·H²; QKV: 8·S·H².
+        let attn = 4.0 * sf * sf * h;
+        let ffn = 16.0 * sf * h * h;
+        let qkv = 8.0 * sf * h * h;
+        let ratio = attn / (ffn + qkv);
+        row(&format!("{s}"), &[f(mem_norm), f(attn / 1e9), f(ffn / 1e9), f(ratio)]);
+        out.push((s, mem_norm, ratio));
+    }
+    out
+}
+
+/// Fig. 3: latency breakdown (MAT share) for FACT/Energon vs token
+/// parallelism. Returns (name, tp, mat_fraction).
+pub fn fig3_mat_breakdown() -> Vec<(&'static str, usize, f64)> {
+    header("Fig. 3 — MAT share of latency for SOTA DS accelerators vs TP");
+    let dram = DramChannel::ddr4();
+    let mut out = Vec::new();
+    row("accel/TP", &["64".into(), "128".into(), "256".into(), "512".into()]);
+    for b in [Baseline::Fact, Baseline::Energon] {
+        let mut cells = Vec::new();
+        for tp in [64usize, 128, 256, 512] {
+            let r = simulate(
+                &WorkloadShape::new(tp, 2048, 64, 768, 0.25),
+                &b.features(),
+                &b.config(),
+                &dram,
+            );
+            cells.push(format!("{:>8.1}%", 100.0 * r.mat_fraction()));
+            out.push((b.name(), tp, r.mat_fraction()));
+        }
+        row(b.name(), &cells);
+    }
+    out
+}
+
+/// Fig. 4: operation intensity (ops/byte) of FFN vs MHA, and MHA's OI
+/// growth with token parallelism. Returns (label, oi).
+pub fn fig4_operation_intensity() -> Vec<(String, f64)> {
+    header("Fig. 4 — operation intensity (ops/byte, INT16)");
+    let m = ModelConfig::preset("gpt2").unwrap();
+    let (h, s) = (m.hidden as f64, m.seq_len as f64);
+    let e = 2.0;
+    let mut out = Vec::new();
+    // FFN: 16·S·H² ops over (weights 8H² + acts ~10·S·H) bytes.
+    let ffn_oi = 16.0 * s * h * h / ((8.0 * h * h + 10.0 * s * h) * e);
+    out.push(("FFN".to_string(), ffn_oi));
+    // MHA at TP=1 (decode): 4·S·H ops over K+V bytes.
+    for tp in [1usize, 16, 64, 256] {
+        let t = tp as f64;
+        let ops = 4.0 * t * s * h;
+        let bytes = (2.0 * s * h + 2.0 * t * h) * e; // K,V + Q,O
+        out.push((format!("MHA TP={tp}"), ops / bytes));
+    }
+    for (label, oi) in &out {
+        row(label, &[f(*oi)]);
+    }
+    assert!(out[0].1 > out[1].1, "FFN OI should exceed MHA at TP=1");
+    out
+}
+
+/// Fig. 5: FA-2's extra exponentiations/comparisons vs the vanilla
+/// baseline, by sequence length (B_c = 16). Returns
+/// (S, extra_exp, extra_cmp, extra_equiv_adds).
+pub fn fig5_fa2_overhead() -> Vec<(usize, u64, u64, f64)> {
+    header("Fig. 5 — FlashAttention-2 overhead vs vanilla (Bc=16)");
+    let ew = EquivWeights::default();
+    let mut rng = Rng::new(5);
+    let mut out = Vec::new();
+    row("S", &["extra exp".into(), "extra cmp".into(), "extra equiv-adds".into()]);
+    for s in [256usize, 512, 1024, 2048] {
+        let d = 64;
+        let q = Mat::randn(s, d, 1.0, &mut rng);
+        let k = Mat::randn(s, d, 1.0, &mut rng);
+        let v = Mat::randn(s, d, 1.0, &mut rng);
+        let inp = AttnInputs::new(&q, &k, &v);
+        let mut cv = OpCounter::new();
+        let o_ref = dense_attention(&inp, usize::MAX, &mut cv);
+        let mut cf = OpCounter::new();
+        let p = Flash2Params { bc: 16, count_rescale_as_exp: true, ..Default::default() };
+        let o_fa = flash2_attention(&inp, &p, &mut cf);
+        assert!(o_fa.max_abs_diff(&o_ref) < 1e-3, "FA2 must be exact");
+        let extra_exp = cf.exp.saturating_sub(cv.exp);
+        let extra_cmp = cf.cmp.saturating_sub(cv.cmp);
+        let extra = cf.equivalent_adds(&ew) - cv.equivalent_adds(&ew);
+        row(&format!("{s}"), &[f(extra_exp as f64), f(extra_cmp as f64), f(extra)]);
+        out.push((s, extra_exp, extra_cmp, extra));
+    }
+    out
+}
+
+/// Fig. 7: QKV-generation vs attention computation crossover. Returns
+/// (model, crossover S).
+pub fn fig7_qkv_crossover() -> Vec<(String, usize)> {
+    header("Fig. 7 — QKV vs attention crossover sequence length");
+    let mut out = Vec::new();
+    for name in ["bloom-1b7", "opt-6b7"] {
+        let m = ModelConfig::preset(name).unwrap();
+        let h = m.hidden as f64;
+        // QKV: 6·S·H²; attention: 4·S²·H ⇒ crossover at S = 1.5·H.
+        let mut cross = 0usize;
+        for s in (256..=8192).step_by(64) {
+            let qkv = 6.0 * s as f64 * h * h;
+            let attn = 4.0 * (s as f64) * (s as f64) * h;
+            if attn > qkv {
+                cross = s;
+                break;
+            }
+        }
+        row(name, &[format!("{cross} tokens")]);
+        out.push((name.to_string(), cross));
+    }
+    // Paper: Bloom-1B7 ≈ 2k, OPT-6B7 ≈ 4k.
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_attention_share_grows_and_crosses_over() {
+        // Under standard FLOP accounting (attn 4S²H vs QKV+FFN 24SH²) the
+        // crossover sits at S = 6H; the paper's "13× at 26k" does not
+        // close with these formulas (EXPERIMENTS.md §Fig1 discusses).
+        let rows = fig1_memory_compute();
+        assert!(rows.windows(2).all(|w| w[1].2 > w[0].2), "ratio must grow with S");
+        assert!(rows[0].2 < 0.1, "attention negligible at S=512");
+        assert!(rows.last().unwrap().2 > 1.0, "attention dominates at 32k");
+        // >2000× memory growth vs the 512-token era at 32k+.
+        assert!(rows.last().unwrap().1 > 2000.0);
+    }
+
+    #[test]
+    fn fig3_energon_mat_dominant_at_high_tp() {
+        let rows = fig3_mat_breakdown();
+        let energon512 = rows.iter().find(|r| r.0 == "Energon" && r.1 == 512).unwrap();
+        assert!(energon512.2 > 0.5, "MAT {}", energon512.2);
+    }
+
+    #[test]
+    fn fig4_mha_oi_grows_with_tp() {
+        let rows = fig4_operation_intensity();
+        let get = |label: &str| rows.iter().find(|r| r.0 == label).unwrap().1;
+        assert!(get("MHA TP=256") > get("MHA TP=16"));
+        assert!(get("FFN") > get("MHA TP=1"));
+    }
+
+    #[test]
+    fn fig5_overhead_grows_with_s() {
+        let rows = fig5_fa2_overhead();
+        assert!(rows.windows(2).all(|w| w[1].3 > w[0].3), "monotone overhead");
+        // Paper: S=2048 ⇒ millions of extra exps.
+        let s2048 = rows.iter().find(|r| r.0 == 2048).unwrap();
+        assert!(s2048.1 > 1_000_000, "extra exp {}", s2048.1);
+    }
+
+    #[test]
+    fn fig7_crossovers_match_paper_ballpark() {
+        let rows = fig7_qkv_crossover();
+        let bloom = rows.iter().find(|r| r.0 == "bloom-1b7").unwrap().1;
+        let opt = rows.iter().find(|r| r.0 == "opt-6b7").unwrap().1;
+        assert!((2048..=4096).contains(&bloom), "bloom crossover {bloom}");
+        assert!((4096..=8192).contains(&opt), "opt crossover {opt}");
+    }
+}

@@ -1,0 +1,131 @@
+//! Spatial-architecture figures: Fig. 23(b) and Fig. 24.
+
+use super::{f, header, row};
+use crate::config::SpatialConfig;
+use crate::spatial::sim::{spatial_run, CoreKind, Dataflow};
+use crate::util::stats::geomean;
+
+const WORKLOADS: [(usize, usize, usize); 3] =
+    [(16384, 64, 768), (32768, 64, 768), (16384, 128, 4096)];
+
+/// Fig. 23(b): multi-core throughput vs per-core SRAM under the shared
+/// 512 GB/s DRAM, with and without the memory-access optimizations.
+/// Returns (kb, opt_tops, base_tops).
+pub fn fig23b_sram_multicore() -> Vec<(usize, f64, f64)> {
+    header("Fig. 23(b) — SRAM sweep, 5×5 mesh (512 GB/s shared DRAM)");
+    let mut out = Vec::new();
+    row("SRAM kB", &["DRAttn+MRCA TOPS".into(), "baseline TOPS".into()]);
+    for kb in [128usize, 256, 412, 512] {
+        let mut cfg = SpatialConfig::mesh5x5();
+        cfg.core.sram_bytes = kb * 1024;
+        let opt =
+            spatial_run(&cfg, CoreKind::Star, Dataflow::DrAttentionMrca, 16384, 64, 768, 0.2);
+        let base = spatial_run(
+            &cfg,
+            CoreKind::StarNoMemOpt,
+            Dataflow::RingAttention,
+            16384,
+            64,
+            768,
+            0.2,
+        );
+        row(&format!("{kb}"), &[f(opt.eff_tops()), f(base.eff_tops())]);
+        out.push((kb, opt.eff_tops(), base.eff_tops()));
+    }
+    out
+}
+
+/// Fig. 24: (a)(b) DRAttention/MRCA ablation on 5×5 and 6×6; (c)(d)
+/// lateral comparison of compute units. Returns, per mesh:
+/// (mesh, dra_gain, mrca_gain_total, spatten_gain, star_gain).
+pub fn fig24_spatial() -> Vec<(String, f64, f64, f64, f64)> {
+    let mut out = Vec::new();
+    for (mesh_name, cfg) in
+        [("5x5", SpatialConfig::mesh5x5()), ("6x6", SpatialConfig::mesh6x6())]
+    {
+        header(&format!("Fig. 24 — {mesh_name} mesh"));
+        let mut dra_gains = Vec::new();
+        let mut full_gains = Vec::new();
+        let mut spatten_gains = Vec::new();
+        let mut star_gains = Vec::new();
+        row("workload", &["DRAttn".into(), "+MRCA".into(), "SpAtten".into(), "STAR".into()]);
+        for (s, d, h) in WORKLOADS {
+            // (a)(b): dataflow ablation with STAR cores.
+            let base =
+                spatial_run(&cfg, CoreKind::Star, Dataflow::RingAttention, s, d, h, 0.2);
+            let dra =
+                spatial_run(&cfg, CoreKind::Star, Dataflow::DrAttentionNaive, s, d, h, 0.2);
+            let full =
+                spatial_run(&cfg, CoreKind::Star, Dataflow::DrAttentionMrca, s, d, h, 0.2);
+            let dra_gain = base.total_s / dra.total_s;
+            let full_gain = base.total_s / full.total_s;
+            // (c)(d): lateral comparison, Spatial-Simba as the baseline.
+            let simba =
+                spatial_run(&cfg, CoreKind::Simba, Dataflow::RingAttention, s, d, h, 0.2);
+            let spatten =
+                spatial_run(&cfg, CoreKind::Spatten, Dataflow::RingAttention, s, d, h, 0.2);
+            let spatten_gain = simba.total_s / spatten.total_s;
+            let star_gain = simba.total_s / full.total_s;
+            row(
+                &format!("S={s} d={d} H={h}"),
+                &[
+                    format!("{dra_gain:>7.2}x"),
+                    format!("{full_gain:>7.2}x"),
+                    format!("{spatten_gain:>7.2}x"),
+                    format!("{star_gain:>7.2}x"),
+                ],
+            );
+            dra_gains.push(dra_gain);
+            full_gains.push(full_gain);
+            spatten_gains.push(spatten_gain);
+            star_gains.push(star_gain);
+        }
+        let (dg, fg, sg, tg) = (
+            geomean(&dra_gains),
+            geomean(&full_gains),
+            geomean(&spatten_gains),
+            geomean(&star_gains),
+        );
+        row(
+            "geomean",
+            &[
+                format!("{dg:>7.2}x"),
+                format!("{fg:>7.2}x"),
+                format!("{sg:>7.2}x"),
+                format!("{tg:>7.2}x"),
+            ],
+        );
+        out.push((mesh_name.to_string(), dg, fg, sg, tg));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig23b_opt_beats_baseline_everywhere() {
+        let rows = fig23b_sram_multicore();
+        for (kb, opt, base) in &rows {
+            assert!(opt > base, "kb={kb}: {opt} !> {base}");
+        }
+        // Paper at 412 kB: baseline ~3 TOPS vs 24.1 TOPS (12×). Accept
+        // the ordering plus a ≥3× margin.
+        let at412 = rows.iter().find(|r| r.0 == 412).unwrap();
+        assert!(at412.1 / at412.2 > 3.0, "gain {}", at412.1 / at412.2);
+    }
+
+    #[test]
+    fn fig24_orderings_hold() {
+        let rows = fig24_spatial();
+        for (mesh, dra, full, spatten, star) in &rows {
+            assert!(*dra > 1.0, "{mesh}: DRAttention gain {dra}");
+            assert!(full > dra, "{mesh}: MRCA should add on top");
+            assert!(*spatten > 1.0, "{mesh}: SpAtten gain {spatten}");
+            assert!(star > spatten, "{mesh}: STAR {star} !> SpAtten {spatten}");
+            // Paper: Spatial-STAR 20.1× (5×5) / 22.8× (6×6); shape check.
+            assert!(*star > 4.0, "{mesh}: STAR lateral gain {star}");
+        }
+    }
+}

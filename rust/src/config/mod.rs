@@ -1,0 +1,323 @@
+//! Configuration system: model shape presets (the paper's benchmark suite),
+//! accelerator configuration, sparsity configuration and the spatial-mesh
+//! configuration (Table IV). Configs serialize to/from the JSON subset in
+//! [`crate::util::json`].
+
+use crate::util::json::Json;
+
+/// Transformer model shapes. These are the models of the paper's evaluation
+/// (Table II / Figs. 16–19); we use them as *shape presets* for workload
+/// generation — see DESIGN.md §4 for the accuracy-experiment substitution.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    /// Hidden dimension H.
+    pub hidden: usize,
+    /// Number of attention heads N_h.
+    pub heads: usize,
+    /// Number of transformer layers.
+    pub layers: usize,
+    /// Default / maximum sequence length used in experiments.
+    pub seq_len: usize,
+    /// Decoder-style (causal) attention?
+    pub causal: bool,
+}
+
+impl ModelConfig {
+    /// Per-head dimension d_h = H / N_h.
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// Named presets matching the paper's benchmark suite.
+    pub fn preset(name: &str) -> Option<ModelConfig> {
+        let (hidden, heads, layers, seq_len, causal) = match name {
+            "bert-base" => (768, 12, 12, 512, false),
+            "bert-large" => (1024, 16, 24, 512, false),
+            "vit" => (768, 12, 12, 197, false),
+            "pvt" => (512, 8, 12, 1024, false),
+            "gpt2" => (768, 12, 12, 1024, true),
+            "bloom-1b7" => (2048, 16, 24, 2048, true),
+            "opt-6b7" => (4096, 32, 32, 2048, true),
+            "llama-7b" => (4096, 32, 32, 4096, true),
+            "llama-13b" => (5120, 40, 40, 4096, true),
+            "tiny" => (128, 4, 2, 256, true), // e2e example model
+            _ => return None,
+        };
+        Some(ModelConfig { name: name.to_string(), hidden, heads, layers, seq_len, causal })
+    }
+
+    /// All presets used by the benchmark suite.
+    pub fn suite() -> Vec<ModelConfig> {
+        ["bert-base", "bert-large", "vit", "pvt", "gpt2", "bloom-1b7", "llama-7b", "llama-13b"]
+            .iter()
+            .map(|n| ModelConfig::preset(n).unwrap())
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("hidden", Json::num(self.hidden as f64)),
+            ("heads", Json::num(self.heads as f64)),
+            ("layers", Json::num(self.layers as f64)),
+            ("seq_len", Json::num(self.seq_len as f64)),
+            ("causal", Json::Bool(self.causal)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<ModelConfig> {
+        Some(ModelConfig {
+            name: j.get("name")?.as_str()?.to_string(),
+            hidden: j.get("hidden")?.as_usize()?,
+            heads: j.get("heads")?.as_usize()?,
+            layers: j.get("layers")?.as_usize()?,
+            seq_len: j.get("seq_len")?.as_usize()?,
+            causal: j.get("causal")?.as_bool()?,
+        })
+    }
+}
+
+/// Sparsity configuration: the knobs of the three DS stages.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparsityConfig {
+    /// Top-k ratio γ ∈ (0, 1]: fraction of keys retained per query row.
+    pub topk_ratio: f64,
+    /// Number of SADS sub-segments n per row.
+    pub segments: usize,
+    /// Sphere radius r for early termination (score units).
+    pub radius: f32,
+    /// Magnitude bitwidth W of the prediction datapath.
+    pub predict_bits: u32,
+}
+
+impl Default for SparsityConfig {
+    fn default() -> Self {
+        // Paper defaults: γ ∈ [0.15, 0.2] preferred, n = 4, r = 5.
+        SparsityConfig { topk_ratio: 0.2, segments: 4, radius: 5.0, predict_bits: 7 }
+    }
+}
+
+impl SparsityConfig {
+    /// The "standard" configuration (0% accuracy-loss budget).
+    pub fn standard() -> Self {
+        SparsityConfig { topk_ratio: 0.25, ..Default::default() }
+    }
+
+    /// The "aggressive" configuration (≤2% loss budget).
+    pub fn aggressive() -> Self {
+        SparsityConfig { topk_ratio: 0.15, ..Default::default() }
+    }
+
+    /// Keys retained for a row of length `s`.
+    pub fn keep(&self, s: usize) -> usize {
+        ((s as f64 * self.topk_ratio).round() as usize).clamp(1, s)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("topk_ratio", Json::num(self.topk_ratio)),
+            ("segments", Json::num(self.segments as f64)),
+            ("radius", Json::num(self.radius as f64)),
+            ("predict_bits", Json::num(self.predict_bits as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<SparsityConfig> {
+        Some(SparsityConfig {
+            topk_ratio: j.get("topk_ratio")?.as_f64()?,
+            segments: j.get("segments")?.as_usize()?,
+            radius: j.get("radius")?.as_f64()? as f32,
+            predict_bits: j.get("predict_bits")?.as_usize()? as u32,
+        })
+    }
+}
+
+/// Single-core STAR accelerator configuration (Sec. V-A).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AccelConfig {
+    /// Clock frequency in Hz (paper: 1 GHz at 28 nm).
+    pub freq_hz: f64,
+    /// Queries processed in parallel (paper: 128).
+    pub query_parallel: usize,
+    /// PE array MACs per cycle (KV on-demand generation + QK/AV matmuls).
+    pub pe_macs_per_cycle: usize,
+    /// DLZS shifter lanes per cycle.
+    pub dlzs_lanes: usize,
+    /// SADS comparator lanes per cycle.
+    pub sads_lanes: usize,
+    /// SU-FA exponentiation units.
+    pub sufa_exp_units: usize,
+    /// On-chip SRAM bytes.
+    pub sram_bytes: usize,
+    /// Off-chip DRAM bandwidth bytes/s.
+    pub dram_bw: f64,
+    /// Process node in nm (for energy/area scaling).
+    pub tech_nm: f64,
+}
+
+impl Default for AccelConfig {
+    fn default() -> Self {
+        AccelConfig {
+            freq_hz: 1e9,
+            query_parallel: 128,
+            // Sized so peak dense throughput lands at the paper's 24423 GOPS
+            // order: 8192 MACs ≈ 16.4 TOPS dense + sparsity ≈ paper's GOPS.
+            pe_macs_per_cycle: 8192,
+            // Shift-add lanes are cheap (the LP part is only 18.1% of
+            // area, Fig. 21), so the DLZS unit is twice the PE width —
+            // prediction must never be the steady-state bottleneck.
+            dlzs_lanes: 16384,
+            sads_lanes: 4096,
+            sufa_exp_units: 128,
+            sram_bytes: 316 * 1024, // the Fig. 23(a) saturation point
+            dram_bw: 256e9,         // Fig. 23(a): 256 GB/s
+            tech_nm: 28.0,
+        }
+    }
+}
+
+impl AccelConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("freq_hz", Json::num(self.freq_hz)),
+            ("query_parallel", Json::num(self.query_parallel as f64)),
+            ("pe_macs_per_cycle", Json::num(self.pe_macs_per_cycle as f64)),
+            ("dlzs_lanes", Json::num(self.dlzs_lanes as f64)),
+            ("sads_lanes", Json::num(self.sads_lanes as f64)),
+            ("sufa_exp_units", Json::num(self.sufa_exp_units as f64)),
+            ("sram_bytes", Json::num(self.sram_bytes as f64)),
+            ("dram_bw", Json::num(self.dram_bw)),
+            ("tech_nm", Json::num(self.tech_nm)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<AccelConfig> {
+        Some(AccelConfig {
+            freq_hz: j.get("freq_hz")?.as_f64()?,
+            query_parallel: j.get("query_parallel")?.as_usize()?,
+            pe_macs_per_cycle: j.get("pe_macs_per_cycle")?.as_usize()?,
+            dlzs_lanes: j.get("dlzs_lanes")?.as_usize()?,
+            sads_lanes: j.get("sads_lanes")?.as_usize()?,
+            sufa_exp_units: j.get("sufa_exp_units")?.as_usize()?,
+            sram_bytes: j.get("sram_bytes")?.as_usize()?,
+            dram_bw: j.get("dram_bw")?.as_f64()?,
+            tech_nm: j.get("tech_nm")?.as_f64()?,
+        })
+    }
+}
+
+/// Spatial-architecture configuration (Table IV).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpatialConfig {
+    /// Mesh rows (paper: 5 or 6).
+    pub mesh_rows: usize,
+    /// Mesh cols.
+    pub mesh_cols: usize,
+    /// Die-to-die link bandwidth bytes/s (Table IV: 250 GB/s).
+    pub link_bw: f64,
+    /// Die-to-die link latency seconds (Table IV: 20 ns).
+    pub link_latency: f64,
+    /// Die-to-die energy pJ/bit (Table IV: 1.0).
+    pub link_pj_per_bit: f64,
+    /// Total (shared) DRAM bandwidth bytes/s (Table IV HBM2: 512 GB/s).
+    pub dram_bw_total: f64,
+    /// DRAM access latency seconds (Table IV: 100 ns).
+    pub dram_latency: f64,
+    /// DRAM energy pJ/bit (Table IV: 6.0).
+    pub dram_pj_per_bit: f64,
+    /// Per-core accelerator config.
+    pub core: AccelConfig,
+}
+
+impl SpatialConfig {
+    /// The paper's 5×5 configuration.
+    pub fn mesh5x5() -> Self {
+        SpatialConfig {
+            mesh_rows: 5,
+            mesh_cols: 5,
+            link_bw: 250e9,
+            link_latency: 20e-9,
+            link_pj_per_bit: 1.0,
+            dram_bw_total: 512e9,
+            dram_latency: 100e-9,
+            dram_pj_per_bit: 6.0,
+            core: AccelConfig { sram_bytes: 412 * 1024, ..AccelConfig::default() },
+        }
+    }
+
+    /// The paper's 6×6 scaling configuration.
+    pub fn mesh6x6() -> Self {
+        SpatialConfig { mesh_rows: 6, mesh_cols: 6, ..Self::mesh5x5() }
+    }
+
+    pub fn cores(&self) -> usize {
+        self.mesh_rows * self.mesh_cols
+    }
+
+    /// Effective per-core DRAM bandwidth under full contention — the paper
+    /// quotes 512 GB/s total → 20.5 GB/s per core for 5×5.
+    pub fn dram_bw_per_core(&self) -> f64 {
+        self.dram_bw_total / self.cores() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_have_integer_head_dims() {
+        for m in ModelConfig::suite() {
+            assert_eq!(m.hidden % m.heads, 0, "{}", m.name);
+            assert!(m.head_dim() >= 32);
+        }
+    }
+
+    #[test]
+    fn llama13b_shape() {
+        let m = ModelConfig::preset("llama-13b").unwrap();
+        assert_eq!(m.hidden, 5120);
+        assert_eq!(m.heads, 40);
+        assert_eq!(m.head_dim(), 128);
+        assert!(m.causal);
+    }
+
+    #[test]
+    fn unknown_preset_is_none() {
+        assert!(ModelConfig::preset("nope").is_none());
+    }
+
+    #[test]
+    fn model_json_roundtrip() {
+        let m = ModelConfig::preset("gpt2").unwrap();
+        let j = m.to_json();
+        assert_eq!(ModelConfig::from_json(&j).unwrap(), m);
+        // Through text too.
+        let j2 = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(ModelConfig::from_json(&j2).unwrap(), m);
+    }
+
+    #[test]
+    fn sparsity_keep_clamped() {
+        let c = SparsityConfig { topk_ratio: 0.25, ..Default::default() };
+        assert_eq!(c.keep(1024), 256);
+        assert_eq!(c.keep(1), 1);
+        let tiny = SparsityConfig { topk_ratio: 1e-9, ..Default::default() };
+        assert_eq!(tiny.keep(1000), 1);
+    }
+
+    #[test]
+    fn accel_json_roundtrip() {
+        let a = AccelConfig::default();
+        assert_eq!(AccelConfig::from_json(&a.to_json()).unwrap(), a);
+    }
+
+    #[test]
+    fn spatial_per_core_bandwidth_matches_paper() {
+        let s = SpatialConfig::mesh5x5();
+        // 512 GB/s / 25 = 20.48 GB/s ≈ the paper's "20.5 GB/s per core".
+        assert!((s.dram_bw_per_core() - 20.48e9).abs() < 1e6);
+        assert_eq!(SpatialConfig::mesh6x6().cores(), 36);
+    }
+}

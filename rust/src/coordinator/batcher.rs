@@ -1,0 +1,169 @@
+//! Dynamic batching for LTPP.
+//!
+//! The accelerator processes `query_parallel` (128) queries per pass;
+//! serving single requests would waste almost the entire datapath. The
+//! batcher accumulates routed requests per variant and emits a batch
+//! when (a) the accumulated query rows reach the target parallelism, or
+//! (b) the oldest waiting request has been queued longer than the
+//! latency budget (so tail latency stays bounded at low load).
+
+use super::router::Request;
+use std::collections::VecDeque;
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Target query rows per batch (the accelerator's T).
+    pub target_t: usize,
+    /// Max queueing delay before a partial batch is flushed, seconds.
+    pub max_wait_s: f64,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { target_t: 128, max_wait_s: 2e-3 }
+    }
+}
+
+/// An emitted batch: requests whose query rows sum to ≤ target_t.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub variant: String,
+    pub requests: Vec<Request>,
+    /// When the batch was sealed (seconds, caller clock).
+    pub sealed_s: f64,
+}
+
+impl Batch {
+    pub fn rows(&self) -> usize {
+        self.requests.iter().map(|r| r.t).sum()
+    }
+
+    /// Padding waste if executed at `target` rows.
+    pub fn padding(&self, target: usize) -> usize {
+        target.saturating_sub(self.rows())
+    }
+}
+
+/// Per-variant dynamic batcher.
+#[derive(Clone, Debug)]
+pub struct Batcher {
+    pub variant: String,
+    cfg: BatcherConfig,
+    queue: VecDeque<Request>,
+    queued_rows: usize,
+}
+
+impl Batcher {
+    pub fn new(variant: &str, cfg: BatcherConfig) -> Batcher {
+        Batcher { variant: variant.to_string(), cfg, queue: VecDeque::new(), queued_rows: 0 }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn pending_rows(&self) -> usize {
+        self.queued_rows
+    }
+
+    /// Enqueue a routed request.
+    pub fn push(&mut self, req: Request) {
+        self.queued_rows += req.t;
+        self.queue.push_back(req);
+    }
+
+    /// Poll at time `now`: emit the next batch if the policy says so.
+    pub fn poll(&mut self, now: f64) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let oldest_wait = now - self.queue.front().unwrap().arrival_s;
+        let full = self.queued_rows >= self.cfg.target_t;
+        if !full && oldest_wait < self.cfg.max_wait_s {
+            return None;
+        }
+        Some(self.seal(now))
+    }
+
+    /// Force-flush whatever is queued (shutdown path).
+    pub fn flush(&mut self, now: f64) -> Option<Batch> {
+        if self.queue.is_empty() {
+            None
+        } else {
+            Some(self.seal(now))
+        }
+    }
+
+    fn seal(&mut self, now: f64) -> Batch {
+        let mut requests = Vec::new();
+        let mut rows = 0;
+        while let Some(front) = self.queue.front() {
+            if rows + front.t > self.cfg.target_t && !requests.is_empty() {
+                break;
+            }
+            let r = self.queue.pop_front().unwrap();
+            rows += r.t;
+            self.queued_rows -= r.t;
+            requests.push(r);
+        }
+        Batch { variant: self.variant.clone(), requests, sealed_s: now }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, t: usize, at: f64) -> Request {
+        Request::new(id, "tiny", t, 256, at)
+    }
+
+    #[test]
+    fn emits_when_full() {
+        let mut b = Batcher::new("v", BatcherConfig { target_t: 64, max_wait_s: 1.0 });
+        for i in 0..3 {
+            b.push(req(i, 16, 0.0));
+        }
+        assert!(b.poll(0.0).is_none(), "48 rows < 64 and no timeout");
+        b.push(req(3, 16, 0.0));
+        let batch = b.poll(0.0).expect("full batch");
+        assert_eq!(batch.rows(), 64);
+        assert_eq!(batch.requests.len(), 4);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn emits_partial_on_timeout() {
+        let mut b = Batcher::new("v", BatcherConfig { target_t: 128, max_wait_s: 0.01 });
+        b.push(req(0, 8, 0.0));
+        assert!(b.poll(0.005).is_none());
+        let batch = b.poll(0.02).expect("timeout flush");
+        assert_eq!(batch.rows(), 8);
+        assert_eq!(batch.padding(128), 120);
+    }
+
+    #[test]
+    fn never_splits_over_target_unless_single() {
+        let mut b = Batcher::new("v", BatcherConfig { target_t: 32, max_wait_s: 0.0 });
+        b.push(req(0, 24, 0.0));
+        b.push(req(1, 24, 0.0));
+        let first = b.poll(1.0).unwrap();
+        assert_eq!(first.requests.len(), 1, "24+24 > 32: second waits");
+        let second = b.poll(2.0).unwrap();
+        assert_eq!(second.requests.len(), 1);
+        // An oversize single request still goes through alone.
+        b.push(req(2, 100, 0.0));
+        let third = b.poll(3.0).unwrap();
+        assert_eq!(third.rows(), 100);
+    }
+
+    #[test]
+    fn flush_drains() {
+        let mut b = Batcher::new("v", BatcherConfig::default());
+        assert!(b.flush(0.0).is_none());
+        b.push(req(0, 4, 0.0));
+        assert_eq!(b.flush(0.0).unwrap().rows(), 4);
+        assert_eq!(b.pending_rows(), 0);
+    }
+}

@@ -1,0 +1,147 @@
+//! Serving metrics: latency distribution, throughput, batching quality.
+
+use crate::util::Summary;
+use std::sync::Mutex;
+
+/// Thread-safe metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    latency: Summary,
+    queue: Summary,
+    batch_rows: Summary,
+    requests: u64,
+    rejected: u64,
+    batches: u64,
+    rows: u64,
+    first_s: Option<f64>,
+    last_s: f64,
+}
+
+/// A point-in-time copy for reporting.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub rows: u64,
+    pub latency_p50_s: f64,
+    pub latency_p95_s: f64,
+    pub latency_mean_s: f64,
+    pub queue_mean_s: f64,
+    pub mean_batch_rows: f64,
+    /// Served query rows per second over the observation window.
+    pub rows_per_s: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_response(&self, latency_s: f64, queue_s: f64, now: f64) {
+        let mut m = self.inner.lock().unwrap();
+        m.latency.add(latency_s);
+        m.queue.add(queue_s);
+        m.requests += 1;
+        if m.first_s.is_none() {
+            m.first_s = Some(now);
+        }
+        m.last_s = m.last_s.max(now);
+    }
+
+    pub fn record_batch(&self, rows: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.batch_rows.add(rows as f64);
+        m.batches += 1;
+        m.rows += rows as u64;
+    }
+
+    pub fn record_rejection(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        let window = (m.last_s - m.first_s.unwrap_or(0.0)).max(1e-9);
+        MetricsSnapshot {
+            requests: m.requests,
+            rejected: m.rejected,
+            batches: m.batches,
+            rows: m.rows,
+            latency_p50_s: m.latency.percentile(50.0),
+            latency_p95_s: m.latency.percentile(95.0),
+            latency_mean_s: m.latency.mean(),
+            queue_mean_s: m.queue.mean(),
+            mean_batch_rows: m.batch_rows.mean(),
+            rows_per_s: m.rows as f64 / window,
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    pub fn render(&self) -> String {
+        format!(
+            "requests={} rejected={} batches={} rows={} \
+             p50={:.3}ms p95={:.3}ms mean={:.3}ms queue={:.3}ms \
+             batch_rows={:.1} throughput={:.0} rows/s",
+            self.requests,
+            self.rejected,
+            self.batches,
+            self.rows,
+            self.latency_p50_s * 1e3,
+            self.latency_p95_s * 1e3,
+            self.latency_mean_s * 1e3,
+            self.queue_mean_s * 1e3,
+            self.mean_batch_rows,
+            self.rows_per_s
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_response(0.010, 0.002, 1.0);
+        m.record_response(0.020, 0.004, 2.0);
+        m.record_batch(64);
+        m.record_batch(128);
+        m.record_rejection();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.rows, 192);
+        assert!((s.latency_mean_s - 0.015).abs() < 1e-12);
+        assert!((s.mean_batch_rows - 96.0).abs() < 1e-12);
+        assert!((s.rows_per_s - 192.0).abs() < 1e-6);
+        assert!(s.render().contains("requests=2"));
+    }
+
+    #[test]
+    fn thread_safe() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let hs: Vec<_> = (0..4)
+            .map(|i| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for j in 0..100 {
+                        m.record_response(0.001 * i as f64, 0.0, j as f64);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(m.snapshot().requests, 400);
+    }
+}

@@ -1,0 +1,32 @@
+//! The LTPP coordinator — Layer 3's serving contribution.
+//!
+//! STAR's architectural premise is *large-scale token parallel
+//! processing*: the accelerator wants 128 queries per batch, so the
+//! serving layer must aggregate requests into LTPP batches and keep the
+//! stage pipeline full. The coordinator owns the event loop:
+//!
+//! * [`router`] — admits requests, validates them against the loaded
+//!   model variants, and routes each to the variant queue whose compiled
+//!   shape fits (artifacts have static shapes; routing = shape bucketing).
+//! * [`batcher`] — dynamic batching: emit a batch when it reaches the
+//!   target query parallelism or when the oldest request exceeds the
+//!   latency budget.
+//! * [`scheduler`] — the tiled out-of-order stage scheduler (the paper's
+//!   "tiled & OoO scheduler", Fig. 12): stage-tiles of independent
+//!   batches issue out of order so no unit idles at stage boundaries.
+//! * [`server`] — the thread-based serving loop gluing the above to an
+//!   execution backend: the PJRT [`crate::runtime::Engine`] (real
+//!   numerics) or the cycle-level simulator (timing studies).
+//! * [`metrics`] — latency/throughput accounting.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod scheduler;
+pub mod server;
+
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use router::{Request, Response, Router, Variant};
+pub use scheduler::{Stage, StageJob, TiledScheduler};
+pub use server::{Backend, Server, ServerConfig};

@@ -1,0 +1,152 @@
+//! Request admission and variant routing.
+//!
+//! Compiled PJRT artifacts have static shapes, so serving works vLLM-
+//! style with shape buckets: each [`Variant`] is one compiled entry
+//! point (model, T queries, S context); the router sends a request to
+//! the smallest variant that fits it and rejects what fits nowhere.
+
+use crate::tensor::Mat;
+
+/// An inference request: `t` query rows over a context of `s` keys.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub model: String,
+    /// Query rows this request contributes to the LTPP batch.
+    pub t: usize,
+    /// Context (key/value) length.
+    pub s: usize,
+    /// Arrival timestamp, seconds (caller-provided monotonic clock).
+    pub arrival_s: f64,
+    /// Optional payload: the actual Q rows (used by the PJRT backend).
+    pub q: Option<Mat>,
+}
+
+impl Request {
+    pub fn new(id: u64, model: &str, t: usize, s: usize, arrival_s: f64) -> Request {
+        Request { id, model: model.to_string(), t, s, arrival_s, q: None }
+    }
+}
+
+/// A served response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    /// Output rows (empty in simulation mode).
+    pub output: Option<Mat>,
+    /// End-to-end latency, seconds.
+    pub latency_s: f64,
+    /// Queueing share of the latency.
+    pub queue_s: f64,
+    /// Which variant served it.
+    pub variant: String,
+}
+
+/// One compiled shape bucket.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Variant {
+    /// Artifact entry name, e.g. `"sparse_attention"`.
+    pub name: String,
+    pub model: String,
+    /// Maximum query rows per batch (the accelerator's T, e.g. 128).
+    pub max_t: usize,
+    /// Context length the artifact was lowered for.
+    pub s: usize,
+}
+
+/// Routing error.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RouteError {
+    UnknownModel(String),
+    TooLong { s: usize, max: usize },
+    TooWide { t: usize, max: usize },
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::UnknownModel(m) => write!(f, "unknown model {m:?}"),
+            RouteError::TooLong { s, max } => write!(f, "context {s} exceeds max {max}"),
+            RouteError::TooWide { t, max } => write!(f, "batch rows {t} exceed max {max}"),
+        }
+    }
+}
+
+/// Routes requests to variants.
+#[derive(Clone, Debug, Default)]
+pub struct Router {
+    variants: Vec<Variant>,
+}
+
+impl Router {
+    pub fn new(variants: Vec<Variant>) -> Router {
+        let mut v = variants;
+        // Prefer the tightest context bucket.
+        v.sort_by_key(|x| x.s);
+        Router { variants: v }
+    }
+
+    pub fn variants(&self) -> &[Variant] {
+        &self.variants
+    }
+
+    /// Pick the smallest variant of the request's model that fits.
+    pub fn route(&self, req: &Request) -> Result<&Variant, RouteError> {
+        let of_model: Vec<&Variant> =
+            self.variants.iter().filter(|v| v.model == req.model).collect();
+        if of_model.is_empty() {
+            return Err(RouteError::UnknownModel(req.model.clone()));
+        }
+        let max_s = of_model.iter().map(|v| v.s).max().unwrap();
+        let max_t = of_model.iter().map(|v| v.max_t).max().unwrap();
+        if req.t > max_t {
+            return Err(RouteError::TooWide { t: req.t, max: max_t });
+        }
+        of_model
+            .into_iter()
+            .find(|v| v.s >= req.s && v.max_t >= req.t)
+            .ok_or(RouteError::TooLong { s: req.s, max: max_s })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router() -> Router {
+        Router::new(vec![
+            Variant { name: "attn_s2048".into(), model: "tiny".into(), max_t: 128, s: 2048 },
+            Variant { name: "attn_s512".into(), model: "tiny".into(), max_t: 128, s: 512 },
+            Variant { name: "attn_gpt2".into(), model: "gpt2".into(), max_t: 64, s: 1024 },
+        ])
+    }
+
+    #[test]
+    fn routes_to_tightest_bucket() {
+        let r = router();
+        let v = r.route(&Request::new(1, "tiny", 16, 300, 0.0)).unwrap();
+        assert_eq!(v.name, "attn_s512");
+        let v = r.route(&Request::new(2, "tiny", 16, 600, 0.0)).unwrap();
+        assert_eq!(v.name, "attn_s2048");
+    }
+
+    #[test]
+    fn rejects_unknown_model() {
+        let r = router();
+        let e = r.route(&Request::new(1, "llama", 1, 10, 0.0)).unwrap_err();
+        assert_eq!(e, RouteError::UnknownModel("llama".into()));
+    }
+
+    #[test]
+    fn rejects_oversize() {
+        let r = router();
+        assert_eq!(
+            r.route(&Request::new(1, "tiny", 16, 4096, 0.0)).unwrap_err(),
+            RouteError::TooLong { s: 4096, max: 2048 }
+        );
+        assert_eq!(
+            r.route(&Request::new(1, "gpt2", 256, 100, 0.0)).unwrap_err(),
+            RouteError::TooWide { t: 256, max: 64 }
+        );
+    }
+}

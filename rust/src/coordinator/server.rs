@@ -1,0 +1,372 @@
+//! The thread-based serving loop (std threads + mpsc; the environment
+//! has no tokio — DESIGN.md §2).
+//!
+//! Architecture: callers `submit()` requests through a channel to the
+//! dispatcher thread, which routes (shape buckets), batches (dynamic
+//! batching per variant), and hands sealed batches to a worker pool.
+//! Workers execute on the configured backend — the PJRT engine for real
+//! numerics, or the cycle-level simulator for timing studies — and reply
+//! per-request. Python never runs anywhere in this path.
+
+use super::batcher::{Batch, Batcher, BatcherConfig};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::router::{Request, Response, Router};
+use crate::config::AccelConfig;
+use crate::runtime::Engine;
+use crate::sim::dram::DramChannel;
+use crate::sim::pipeline::{simulate, FeatureSet, WorkloadShape};
+use crate::tensor::Mat;
+use crate::Result;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// How batches actually execute. This is pure (Send) configuration: the
+/// PJRT client is **not** thread-safe, so each worker thread constructs
+/// its own [`Engine`] lazily from `artifact_dir` on first use.
+pub enum Backend {
+    /// Execute the AOT-compiled PJRT artifact named by each variant.
+    /// `contexts` maps variant name → (K, V) context matrices.
+    Pjrt { artifact_dir: PathBuf, contexts: BTreeMap<String, (Mat, Mat)> },
+    /// Model the accelerator: latency from the cycle-level simulator,
+    /// stretched by `time_scale` wall-clock seconds per simulated second.
+    Sim { feats: FeatureSet, accel: AccelConfig, dram: DramChannel, d: usize, h: usize, keep: f64, time_scale: f64 },
+}
+
+/// Server construction knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub batcher: BatcherConfig,
+    pub workers: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { batcher: BatcherConfig::default(), workers: 2 }
+    }
+}
+
+enum Msg {
+    Submit(Request, Sender<Response>),
+    Tick,
+    Shutdown,
+}
+
+/// The running server.
+pub struct Server {
+    tx: Sender<Msg>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    started: Instant,
+    stopped: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Spawn the dispatcher and worker pool.
+    pub fn start(router: Router, backend: Backend, cfg: ServerConfig) -> Server {
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = channel::<Msg>();
+        let started = Instant::now();
+        let stopped = Arc::new(AtomicBool::new(false));
+
+        // Worker pool input.
+        let (work_tx, work_rx) = channel::<(Batch, Vec<Sender<Response>>)>();
+        let work_rx = Arc::new(std::sync::Mutex::new(work_rx));
+        let backend = Arc::new(backend);
+        let mut workers = Vec::new();
+        for _ in 0..cfg.workers.max(1) {
+            let rx = work_rx.clone();
+            let be = backend.clone();
+            let m = metrics.clone();
+            workers.push(std::thread::spawn(move || {
+                // Per-worker PJRT engine, built on first use (the client
+                // is not Send; it must live on this thread).
+                let mut engine: Option<Engine> = None;
+                loop {
+                    let job = rx.lock().unwrap().recv();
+                    match job {
+                        Ok((batch, replies)) => {
+                            execute_batch(&be, &mut engine, batch, replies, &m, started)
+                        }
+                        Err(_) => break,
+                    }
+                }
+            }));
+        }
+
+        let m = metrics.clone();
+        let stop_flag = stopped.clone();
+        let dispatcher = std::thread::spawn(move || {
+            let mut batchers: BTreeMap<String, Batcher> = BTreeMap::new();
+            let mut waiting: BTreeMap<u64, Sender<Response>> = BTreeMap::new();
+            let now = || started.elapsed().as_secs_f64();
+            loop {
+                // Block briefly so timeout-flushes still happen at low load.
+                let msg = rx.recv_timeout(std::time::Duration::from_millis(1)).unwrap_or(Msg::Tick);
+                match msg {
+                    Msg::Submit(req, reply) => match router.route(&req) {
+                        Ok(variant) => {
+                            waiting.insert(req.id, reply);
+                            batchers
+                                .entry(variant.name.clone())
+                                .or_insert_with(|| Batcher::new(&variant.name, cfg.batcher))
+                                .push(req);
+                        }
+                        Err(e) => {
+                            m.record_rejection();
+                            let _ = reply.send(Response {
+                                id: req.id,
+                                output: None,
+                                latency_s: 0.0,
+                                queue_s: 0.0,
+                                variant: format!("rejected: {e}"),
+                            });
+                        }
+                    },
+                    Msg::Tick => {}
+                    Msg::Shutdown => {
+                        for b in batchers.values_mut() {
+                            if let Some(batch) = b.flush(now()) {
+                                dispatch(batch, &mut waiting, &work_tx, &m);
+                            }
+                        }
+                        stop_flag.store(true, Ordering::SeqCst);
+                        break;
+                    }
+                }
+                let t = now();
+                for b in batchers.values_mut() {
+                    while let Some(batch) = b.poll(t) {
+                        dispatch(batch, &mut waiting, &work_tx, &m);
+                    }
+                }
+            }
+            drop(work_tx); // close the pool
+            for w in workers {
+                let _ = w.join();
+            }
+        });
+
+        Server { tx, dispatcher: Some(dispatcher), metrics, started, stopped }
+    }
+
+    /// Monotonic server clock, seconds.
+    pub fn now(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Submit a request; the response arrives on the returned channel.
+    pub fn submit(&self, mut req: Request) -> Result<Receiver<Response>> {
+        let (tx, rx) = channel();
+        req.arrival_s = self.now();
+        self.tx
+            .send(Msg::Submit(req, tx))
+            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+        Ok(rx)
+    }
+
+    /// Flush, stop all threads, and return the final metrics.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if !self.stopped.load(Ordering::SeqCst) {
+            let _ = self.tx.send(Msg::Shutdown);
+            if let Some(h) = self.dispatcher.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn dispatch(
+    batch: Batch,
+    waiting: &mut BTreeMap<u64, Sender<Response>>,
+    work_tx: &Sender<(Batch, Vec<Sender<Response>>)>,
+    metrics: &Metrics,
+) {
+    metrics.record_batch(batch.rows());
+    let replies: Vec<Sender<Response>> = batch
+        .requests
+        .iter()
+        .map(|r| waiting.remove(&r.id).expect("reply channel registered at submit"))
+        .collect();
+    let _ = work_tx.send((batch, replies));
+}
+
+fn execute_batch(
+    backend: &Backend,
+    engine_slot: &mut Option<Engine>,
+    batch: Batch,
+    replies: Vec<Sender<Response>>,
+    metrics: &Metrics,
+    started: Instant,
+) {
+    let sealed = batch.sealed_s;
+    match backend {
+        Backend::Pjrt { artifact_dir, contexts } => {
+            let out = ensure_engine(engine_slot, artifact_dir)
+                .and_then(|engine| run_pjrt(engine, contexts, &batch));
+            let now = started.elapsed().as_secs_f64();
+            for (i, (req, reply)) in batch.requests.iter().zip(replies).enumerate() {
+                let output = out.as_ref().ok().map(|rows| rows[i].clone());
+                let latency = now - req.arrival_s;
+                let queue = sealed - req.arrival_s;
+                metrics.record_response(latency, queue, now);
+                let _ = reply.send(Response {
+                    id: req.id,
+                    output,
+                    latency_s: latency,
+                    queue_s: queue,
+                    variant: batch.variant.clone(),
+                });
+            }
+        }
+        Backend::Sim { feats, accel, dram, d, h, keep, time_scale } => {
+            let rows = batch.rows().max(1);
+            let s = batch.requests.iter().map(|r| r.s).max().unwrap_or(1);
+            let shape = WorkloadShape::new(rows, s, *d, *h, *keep);
+            let rep = simulate(&shape, feats, accel, dram);
+            let wall = rep.total_s * *time_scale;
+            if wall > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(wall.min(0.050)));
+            }
+            let now = started.elapsed().as_secs_f64();
+            for (req, reply) in batch.requests.iter().zip(replies) {
+                let latency = now - req.arrival_s;
+                let queue = sealed - req.arrival_s;
+                metrics.record_response(latency, queue, now);
+                let _ = reply.send(Response {
+                    id: req.id,
+                    output: None,
+                    latency_s: latency,
+                    queue_s: queue,
+                    variant: batch.variant.clone(),
+                });
+            }
+        }
+    }
+}
+
+/// Build the worker's engine on first use.
+fn ensure_engine<'a>(
+    slot: &'a mut Option<Engine>,
+    dir: &std::path::Path,
+) -> Result<&'a Engine> {
+    if slot.is_none() {
+        *slot = Some(Engine::load_dir(dir)?);
+    }
+    Ok(slot.as_ref().unwrap())
+}
+
+/// Assemble the padded Q batch, execute the artifact, slice per request.
+fn run_pjrt(
+    engine: &Engine,
+    contexts: &BTreeMap<String, (Mat, Mat)>,
+    batch: &Batch,
+) -> Result<Vec<Mat>> {
+    let entry = engine
+        .get(&batch.variant)
+        .ok_or_else(|| anyhow::anyhow!("no artifact for variant {}", batch.variant))?;
+    let (t_max, d) = (entry.entry.inputs[0][0], entry.entry.inputs[0][1]);
+    let (k, v) = contexts
+        .get(&batch.variant)
+        .ok_or_else(|| anyhow::anyhow!("no KV context for variant {}", batch.variant))?;
+    let mut q = Mat::zeros(t_max, d);
+    let mut row = 0;
+    for req in &batch.requests {
+        if let Some(rq) = &req.q {
+            for i in 0..rq.rows.min(t_max - row) {
+                q.row_mut(row + i).copy_from_slice(rq.row(i));
+            }
+        }
+        row += req.t;
+    }
+    let outputs = engine.run(&batch.variant, &[q, k.clone(), v.clone()])?;
+    let o = &outputs[0];
+    // Slice each request's rows back out.
+    let mut per_req = Vec::with_capacity(batch.requests.len());
+    let mut at = 0;
+    for req in &batch.requests {
+        let rows = req.t.min(o.rows - at);
+        per_req.push(Mat::from_fn(rows, o.cols, |i, j| o.at(at + i, j)));
+        at += req.t;
+    }
+    Ok(per_req)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::Variant;
+
+    fn sim_server(target_t: usize) -> Server {
+        let router = Router::new(vec![Variant {
+            name: "attn".into(),
+            model: "tiny".into(),
+            max_t: 128,
+            s: 2048,
+        }]);
+        let backend = Backend::Sim {
+            feats: FeatureSet::star(),
+            accel: AccelConfig::default(),
+            dram: DramChannel::accel_256(),
+            d: 64,
+            h: 128,
+            keep: 0.2,
+            time_scale: 0.0,
+        };
+        let cfg = ServerConfig {
+            batcher: BatcherConfig { target_t, max_wait_s: 0.005 },
+            workers: 2,
+        };
+        Server::start(router, backend, cfg)
+    }
+
+    #[test]
+    fn serves_and_batches() {
+        let server = sim_server(32);
+        let mut rxs = Vec::new();
+        for i in 0..8u64 {
+            rxs.push(server.submit(Request::new(i, "tiny", 8, 256, 0.0)).unwrap());
+        }
+        for rx in rxs {
+            let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.variant, "attn");
+            assert!(resp.latency_s >= 0.0);
+        }
+        let snap = server.shutdown();
+        assert_eq!(snap.requests, 8);
+        assert!(snap.batches >= 2, "8×8 rows at target 32 → ≥2 batches, got {}", snap.batches);
+        assert!(snap.mean_batch_rows <= 32.0 + 1e-9);
+    }
+
+    #[test]
+    fn rejects_unroutable() {
+        let server = sim_server(32);
+        let rx = server.submit(Request::new(99, "nope", 1, 16, 0.0)).unwrap();
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        assert!(resp.variant.starts_with("rejected"));
+        let snap = server.shutdown();
+        assert_eq!(snap.rejected, 1);
+    }
+
+    #[test]
+    fn timeout_flushes_partial_batch() {
+        let server = sim_server(1024); // never fills
+        let rx = server.submit(Request::new(1, "tiny", 4, 128, 0.0)).unwrap();
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.variant, "attn");
+        server.shutdown();
+    }
+}

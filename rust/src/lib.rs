@@ -1,0 +1,48 @@
+//! # STAR: cross-stage tiling sparse-attention accelerator — full-system reproduction
+//!
+//! This crate is Layer 3 of the three-layer Rust + JAX + Pallas stack described
+//! in `DESIGN.md`. It contains:
+//!
+//! * [`tensor`], [`arith`] — numeric substrates: a minimal f32 matrix type,
+//!   integer quantization, the leading-zero codec and the DLZS/SLZS
+//!   approximate multipliers, and the operation-accounting machinery used to
+//!   report "equivalent additions" the way the paper does.
+//! * [`attention`] — counted software implementations of dense softmax
+//!   attention, FlashAttention-2 and the paper's Sorted-Updating
+//!   FlashAttention (SU-FA), in both ascending and descending update order.
+//! * [`sparsity`] — the prediction stage (DLZS / SLZS predictors), the top-k
+//!   stage (vanilla sorting and SADS distributed sorting with sphere-radius
+//!   early termination), the Type I/II/III attention-distribution analysis,
+//!   and the Appendix-A design-space exploration.
+//! * [`sim`] — the cycle-level single-core STAR accelerator model, its
+//!   energy/area models, the SRAM/DRAM memory system, the A100 roofline
+//!   model and the FACT/Energon/ELSA/SpAtten/Simba baselines.
+//! * [`spatial`] — the 2D-mesh NoC, the MRCA communication algorithm
+//!   (Alg. 1), the DRAttention dataflow and the Ring-Attention baseline,
+//!   plus the 5×5/6×6 multi-core spatial simulator.
+//! * [`runtime`] — the PJRT engine that loads the AOT-compiled HLO-text
+//!   artifacts produced by `python/compile/aot.py` and executes them on the
+//!   request path (python never runs at serving time).
+//! * [`coordinator`] — the LTPP serving layer: request router, dynamic
+//!   batcher, tiled out-of-order scheduler and a thread-based server.
+//! * [`workload`], [`config`], [`bench`] — workload/trace generation, the
+//!   config system, and the harness that regenerates every table and figure
+//!   of the paper's evaluation.
+
+pub mod arith;
+pub mod attention;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod runtime;
+pub mod sim;
+pub mod sparsity;
+pub mod spatial;
+pub mod tensor;
+pub mod testing;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

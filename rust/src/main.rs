@@ -1,0 +1,199 @@
+//! `star` — the STAR coordinator binary.
+//!
+//! Subcommands:
+//!   bench <name|all>        regenerate a paper table/figure
+//!   sim [--model M]...      single-core cycle-level simulation
+//!   spatial [--mesh 5x5]    multi-core spatial simulation
+//!   serve [--requests N]    run the LTPP serving loop (PJRT or sim)
+//!   dse [--seq S]           sub-segment design-space exploration
+//!   info                    list artifacts and configuration presets
+
+use star::cli::Args;
+use star::config::{AccelConfig, ModelConfig, SpatialConfig};
+use star::coordinator::{Backend, BatcherConfig, Request, Router, Server, ServerConfig, Variant};
+use star::runtime::engine::artifacts_available;
+use star::sim::dram::DramChannel;
+use star::sim::pipeline::{simulate, FeatureSet, WorkloadShape};
+use star::spatial::sim::{spatial_run, CoreKind, Dataflow};
+use star::util::logging;
+use star::Result;
+
+fn main() {
+    logging::init_from_env();
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("bench") => {
+            let name = args.positional.first().map(String::as_str).unwrap_or("all");
+            star::bench::run(name)
+        }
+        Some("sim") => cmd_sim(args),
+        Some("spatial") => cmd_spatial(args),
+        Some("serve") => cmd_serve(args),
+        Some("dse") => cmd_dse(args),
+        Some("info") => cmd_info(),
+        _ => {
+            eprintln!(
+                "usage: star <bench|sim|spatial|serve|dse|info> [--options]\n\
+                 benches: {:?}",
+                star::bench::ALL
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let model = ModelConfig::preset(args.get_or("model", "gpt2"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model preset"))?;
+    let t = args.get_usize("tp", 128);
+    let s = args.get_usize("seq", model.seq_len);
+    let keep = args.get_f64("keep", 0.2);
+    let shape = WorkloadShape::new(t, s, model.head_dim(), model.hidden, keep);
+    let cfg = AccelConfig::default();
+    let dram = DramChannel::accel_256();
+    let r = simulate(&shape, &FeatureSet::star(), &cfg, &dram);
+    println!(
+        "STAR single-core: model={} T={t} S={s} keep={keep}\n\
+         latency = {:.3} ms   eff = {:.0} GOPS   energy-eff = {:.0} GOPS/W\n\
+         MAT share = {:.1}%   DRAM = {}   stalls = {}",
+        model.name,
+        r.total_s * 1e3,
+        r.eff_gops,
+        r.energy_eff_gops_w(),
+        100.0 * r.mat_fraction(),
+        star::util::fmt_bytes(r.dram_bytes as f64),
+        r.stall_cycles,
+    );
+    Ok(())
+}
+
+fn cmd_spatial(args: &Args) -> Result<()> {
+    let cfg = match args.get_or("mesh", "5x5") {
+        "6x6" => SpatialConfig::mesh6x6(),
+        _ => SpatialConfig::mesh5x5(),
+    };
+    let s = args.get_usize("seq", 16384);
+    let r = spatial_run(&cfg, CoreKind::Star, Dataflow::DrAttentionMrca, s, 64, 768, 0.2);
+    println!(
+        "Spatial-STAR {}x{}: S={s}  latency = {:.3} ms  throughput = {:.1} TOPS  \
+         exposed comm = {:.1} us  NoC = {}",
+        cfg.mesh_rows,
+        cfg.mesh_cols,
+        r.total_s * 1e3,
+        r.eff_tops(),
+        r.exposed_comm_s * 1e6,
+        star::util::fmt_bytes(r.noc_bytes as f64),
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let n = args.get_usize("requests", 64);
+    let dir = star::runtime::manifest::default_dir();
+    let use_pjrt = artifacts_available(&dir) && !args.flag("sim");
+    let router = Router::new(vec![Variant {
+        name: "sparse_attention".into(),
+        model: "gpt2".into(),
+        max_t: 128,
+        s: 1024,
+    }]);
+    let backend = if use_pjrt {
+        let mut contexts = std::collections::BTreeMap::new();
+        let mut rng = star::util::Rng::new(1);
+        contexts.insert(
+            "sparse_attention".to_string(),
+            (
+                star::tensor::Mat::randn(1024, 64, 1.0, &mut rng),
+                star::tensor::Mat::randn(1024, 64, 1.0, &mut rng),
+            ),
+        );
+        println!("serving with the PJRT backend from {dir:?}");
+        Backend::Pjrt { artifact_dir: dir, contexts }
+    } else {
+        println!("serving with the simulated backend (no artifacts found or --sim)");
+        Backend::Sim {
+            feats: FeatureSet::star(),
+            accel: AccelConfig::default(),
+            dram: DramChannel::accel_256(),
+            d: 64,
+            h: 768,
+            keep: 0.2,
+            time_scale: 1.0,
+        }
+    };
+    let server = Server::start(router, backend, ServerConfig {
+        batcher: BatcherConfig { target_t: 128, max_wait_s: 2e-3 },
+        workers: 2,
+    });
+    let mut rng = star::util::Rng::new(2);
+    let mut rxs = Vec::new();
+    for id in 0..n as u64 {
+        let t = 8 * rng.range(1, 5);
+        let mut req = Request::new(id, "gpt2", t, 1024, 0.0);
+        req.q = Some(star::tensor::Mat::randn(t, 64, 1.0, &mut rng));
+        rxs.push(server.submit(req)?);
+    }
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    let snap = server.shutdown();
+    println!("{}", snap.render());
+    Ok(())
+}
+
+fn cmd_dse(args: &Args) -> Result<()> {
+    let s = args.get_usize("seq", 1024);
+    let keep = args.get_f64("keep", 0.2);
+    let mut rng = star::util::Rng::new(42);
+    let gen = star::workload::ScoreGen::default();
+    let rows = gen.rows(64, s, &mut rng);
+    let res = star::sparsity::dse::explore_segments(
+        &rows,
+        keep,
+        5.0,
+        16,
+        &[2, 4, 8, 16, 32],
+        &star::sparsity::dse::DseWeights::default(),
+    );
+    println!("DSE over sub-segment count (S={s}, keep={keep}):");
+    for c in &res.evaluated {
+        println!(
+            "  n={:<3} sort={:<12.0} sufa={:<12.0} recall={:.3} obj={:.0}",
+            c.segments, c.cost_sort, c.cost_sufa, c.recall, c.objective
+        );
+    }
+    println!("best: n={} (objective {:.0})", res.best.segments, res.best.objective);
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("model presets:");
+    for m in ModelConfig::suite() {
+        println!(
+            "  {:<12} H={:<5} heads={:<3} layers={:<3} S={}",
+            m.name, m.hidden, m.heads, m.layers, m.seq_len
+        );
+    }
+    let dir = star::runtime::manifest::default_dir();
+    if artifacts_available(&dir) {
+        let m = star::runtime::Manifest::load(&dir)?;
+        println!("artifacts in {dir:?}:");
+        for e in &m.entries {
+            println!("  {:<24} {:?} -> {:?}", e.name, e.inputs, e.outputs);
+        }
+    } else {
+        println!("no artifacts at {dir:?} (run `make artifacts`)");
+    }
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! The PJRT execution engine: compile HLO-text artifacts once, execute
+//! many times from the L3 hot path.
+
+use super::manifest::{ArtifactEntry, Manifest};
+use crate::tensor::Mat;
+use crate::Result;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One compiled entry point.
+pub struct Execution {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Execution {
+    /// Execute with `Mat` inputs; returns one `Mat` per declared output.
+    /// Output shapes come from the manifest (1-D outputs come back as
+    /// single-row matrices).
+    pub fn run(&self, inputs: &[Mat]) -> Result<Vec<Mat>> {
+        anyhow::ensure!(
+            inputs.len() == self.entry.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.entry.name,
+            self.entry.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (m, shape) in inputs.iter().zip(&self.entry.inputs) {
+            let expect: usize = shape.iter().product();
+            anyhow::ensure!(
+                m.data.len() == expect,
+                "{}: input element count {} != manifest {:?}",
+                self.entry.name,
+                m.data.len(),
+                shape
+            );
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(&m.data).reshape(&dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.entry.outputs.len(),
+            "{}: got {} outputs, manifest says {}",
+            self.entry.name,
+            parts.len(),
+            self.entry.outputs.len()
+        );
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, shape) in parts.into_iter().zip(&self.entry.outputs) {
+            let data = lit.to_vec::<f32>()?;
+            let (rows, cols) = match shape.len() {
+                0 => (1, 1),
+                1 => (1, shape[0]),
+                2 => (shape[0], shape[1]),
+                _ => (shape[..shape.len() - 1].iter().product(), shape[shape.len() - 1]),
+            };
+            anyhow::ensure!(data.len() == rows * cols, "{}: output shape mismatch", self.entry.name);
+            out.push(Mat::from_vec(rows, cols, data));
+        }
+        Ok(out)
+    }
+}
+
+/// The engine: a PJRT CPU client plus every compiled artifact.
+pub struct Engine {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executions: BTreeMap<String, Execution>,
+}
+
+impl Engine {
+    /// Load and compile every artifact in `dir` (per its manifest).
+    pub fn load_dir(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut engine = Engine {
+            dir: dir.to_path_buf(),
+            manifest: manifest.clone(),
+            client,
+            executions: BTreeMap::new(),
+        };
+        for entry in &manifest.entries {
+            engine.compile_entry(entry)?;
+        }
+        Ok(engine)
+    }
+
+    /// Compile a single HLO-text file into an [`Execution`].
+    fn compile_entry(&mut self, entry: &ArtifactEntry) -> Result<()> {
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.executions.insert(entry.name.clone(), Execution { entry: entry.clone(), exe });
+        Ok(())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.executions.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Execution> {
+        self.executions.get(name)
+    }
+
+    /// Execute entry `name` on `inputs`.
+    pub fn run(&self, name: &str, inputs: &[Mat]) -> Result<Vec<Mat>> {
+        let exec = self
+            .executions
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no artifact named {name:?} (have {:?})", self.names()))?;
+        exec.run(inputs)
+    }
+}
+
+/// True when an artifact directory with a manifest exists — integration
+/// tests and examples use this to skip gracefully before `make artifacts`.
+pub fn artifacts_available(dir: &Path) -> bool {
+    dir.join("manifest.json").is_file()
+}

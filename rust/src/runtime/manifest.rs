@@ -1,0 +1,159 @@
+//! Artifact manifest: `artifacts/manifest.json`, written by
+//! `python/compile/aot.py` alongside the HLO-text files.
+
+use crate::util::json::Json;
+use crate::Result;
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled entry point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    /// Logical name, e.g. `"sparse_attention"` or `"transformer_block"`.
+    pub name: String,
+    /// HLO-text file name relative to the artifact directory.
+    pub file: String,
+    /// Input shapes in call order (row-major f32).
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes (the lowering returns a tuple in this order).
+    pub outputs: Vec<Vec<usize>>,
+}
+
+impl ArtifactEntry {
+    pub fn to_json(&self) -> Json {
+        let shapes = |ss: &[Vec<usize>]| {
+            Json::Arr(
+                ss.iter()
+                    .map(|s| Json::Arr(s.iter().map(|&d| Json::num(d as f64)).collect()))
+                    .collect(),
+            )
+        };
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("file", Json::str(&self.file)),
+            ("inputs", shapes(&self.inputs)),
+            ("outputs", shapes(&self.outputs)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<ArtifactEntry> {
+        let shapes = |key: &str| -> Option<Vec<Vec<usize>>> {
+            j.get(key)?
+                .as_arr()?
+                .iter()
+                .map(|s| s.as_arr().map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect()))
+                .collect()
+        };
+        Some(ArtifactEntry {
+            name: j.get("name")?.as_str()?.to_string(),
+            file: j.get("file")?.as_str()?.to_string(),
+            inputs: shapes("inputs")?,
+            outputs: shapes("outputs")?,
+        })
+    }
+}
+
+/// The manifest: all entry points of one artifact directory.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "artifacts",
+            Json::Arr(self.entries.iter().map(|e| e.to_json()).collect()),
+        )])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Manifest> {
+        let entries = j
+            .get("artifacts")?
+            .as_arr()?
+            .iter()
+            .map(ArtifactEntry::from_json)
+            .collect::<Option<Vec<_>>>()?;
+        Some(Manifest { entries })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parse manifest: {e}"))?;
+        Manifest::from_json(&j).ok_or_else(|| anyhow::anyhow!("malformed manifest.json"))
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join("manifest.json"), self.to_json().pretty())?;
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn hlo_path(&self, dir: &Path, name: &str) -> Option<PathBuf> {
+        self.get(name).map(|e| dir.join(&e.file))
+    }
+}
+
+/// Default artifact directory: `$STAR_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("STAR_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        Manifest {
+            entries: vec![
+                ArtifactEntry {
+                    name: "sparse_attention".into(),
+                    file: "sparse_attention.hlo.txt".into(),
+                    inputs: vec![vec![8, 64], vec![128, 64], vec![128, 64]],
+                    outputs: vec![vec![8, 64]],
+                },
+                ArtifactEntry {
+                    name: "block".into(),
+                    file: "block.hlo.txt".into(),
+                    inputs: vec![vec![8, 128]],
+                    outputs: vec![vec![8, 128], vec![8]],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = sample();
+        let j = m.to_json();
+        assert_eq!(Manifest::from_json(&j).unwrap(), m);
+        let reparsed = Json::parse(&j.pretty()).unwrap();
+        assert_eq!(Manifest::from_json(&reparsed).unwrap(), m);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("star-manifest-{}", std::process::id()));
+        let m = sample();
+        m.save(&dir).unwrap();
+        let loaded = Manifest::load(&dir).unwrap();
+        assert_eq!(loaded, m);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lookup() {
+        let m = sample();
+        assert!(m.get("block").is_some());
+        assert!(m.get("nope").is_none());
+        assert_eq!(
+            m.hlo_path(Path::new("artifacts"), "block").unwrap(),
+            Path::new("artifacts").join("block.hlo.txt")
+        );
+    }
+}

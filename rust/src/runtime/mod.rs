@@ -1,0 +1,19 @@
+//! The PJRT runtime — the only place numerics execute on the request
+//! path.
+//!
+//! `python/compile/aot.py` lowers the L2 JAX model (which embeds the L1
+//! Pallas kernels) to **HLO text** artifacts under `artifacts/`, plus a
+//! `manifest.json` describing each entry point (name, file, input/output
+//! shapes). This module loads the manifest, compiles every artifact on
+//! the PJRT CPU client once at startup, and executes them with [`Mat`]
+//! inputs. Python never runs at serving time.
+//!
+//! Interchange is HLO *text*, not serialized `HloModuleProto`: jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see `/opt/xla-example`).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, Execution};
+pub use manifest::{ArtifactEntry, Manifest};

@@ -1,0 +1,136 @@
+//! Area model: the Fig. 21 breakdown of the STAR accelerator at 28 nm.
+//!
+//! Anchored on the paper's totals — 5.69 mm², 949.85 mW, with the LP part
+//! (DLZS + SADS) at 18.1% of area and 14.1% of power — and on each unit's
+//! datapath widths from [`crate::config::AccelConfig`]. Used by Table III
+//! (area efficiency) and the Fig. 21 bench.
+
+use crate::config::AccelConfig;
+
+/// Area/power of one architectural unit.
+#[derive(Clone, Debug)]
+pub struct UnitBudget {
+    pub name: &'static str,
+    pub area_mm2: f64,
+    pub power_mw: f64,
+}
+
+/// Full-chip budget (Fig. 21).
+#[derive(Clone, Debug)]
+pub struct ChipBudget {
+    pub units: Vec<UnitBudget>,
+}
+
+impl ChipBudget {
+    /// Build the budget for an accelerator configuration. Per-unit
+    /// densities are calibrated so the *default* config reproduces the
+    /// paper's totals; other configs scale linearly in datapath width.
+    pub fn for_config(cfg: &AccelConfig) -> ChipBudget {
+        let d = AccelConfig::default();
+        // Paper anchors at the default config (28 nm, 1 GHz).
+        let total_area = 5.69;
+        let total_power = 949.85;
+        // Shares: LP (DLZS+SADS) 18.1% area / 14.1% power; the rest split
+        // across PE array (KV gen + score matmuls), SU-FA engine, scheduler
+        // and SRAM in proportions typical of MAC-dominated designs.
+        let shares: [(&'static str, f64, f64); 6] = [
+            ("dlzs-unit", 0.101, 0.079),
+            ("sads-unit", 0.080, 0.062),
+            ("pe-array", 0.392, 0.468),
+            ("sufa-unit", 0.153, 0.186),
+            ("scheduler", 0.044, 0.035),
+            ("sram", 0.230, 0.170),
+        ];
+        let scale = |name: &str| -> f64 {
+            match name {
+                "dlzs-unit" => cfg.dlzs_lanes as f64 / d.dlzs_lanes as f64,
+                "sads-unit" => cfg.sads_lanes as f64 / d.sads_lanes as f64,
+                "pe-array" => cfg.pe_macs_per_cycle as f64 / d.pe_macs_per_cycle as f64,
+                "sufa-unit" => cfg.sufa_exp_units as f64 / d.sufa_exp_units as f64,
+                // SRAM macro area grows sublinearly with capacity (bank
+                // periphery amortizes — CACTI-like exponent, calibrated so
+                // the Sec. III-A example of 5 MB ⇒ ~5.7 mm² holds).
+                "sram" => (cfg.sram_bytes as f64 / d.sram_bytes as f64).powf(0.55),
+                _ => 1.0,
+            }
+        };
+        let units = shares
+            .iter()
+            .map(|&(name, ashare, pshare)| UnitBudget {
+                name,
+                area_mm2: total_area * ashare * scale(name),
+                power_mw: total_power * pshare * scale(name),
+            })
+            .collect();
+        ChipBudget { units }
+    }
+
+    pub fn total_area_mm2(&self) -> f64 {
+        self.units.iter().map(|u| u.area_mm2).sum()
+    }
+
+    pub fn total_power_mw(&self) -> f64 {
+        self.units.iter().map(|u| u.power_mw).sum()
+    }
+
+    /// Area share of the LP (prediction) part — DLZS + SADS.
+    pub fn lp_area_share(&self) -> f64 {
+        let lp: f64 = self
+            .units
+            .iter()
+            .filter(|u| u.name == "dlzs-unit" || u.name == "sads-unit")
+            .map(|u| u.area_mm2)
+            .sum();
+        lp / self.total_area_mm2()
+    }
+
+    /// Power share of the LP part.
+    pub fn lp_power_share(&self) -> f64 {
+        let lp: f64 = self
+            .units
+            .iter()
+            .filter(|u| u.name == "dlzs-unit" || u.name == "sads-unit")
+            .map(|u| u.power_mw)
+            .sum();
+        lp / self.total_power_mw()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_reproduces_paper_totals() {
+        let b = ChipBudget::for_config(&AccelConfig::default());
+        assert!((b.total_area_mm2() - 5.69).abs() < 0.01, "area {}", b.total_area_mm2());
+        assert!((b.total_power_mw() - 949.85).abs() < 1.0, "power {}", b.total_power_mw());
+    }
+
+    #[test]
+    fn lp_shares_match_fig21() {
+        let b = ChipBudget::for_config(&AccelConfig::default());
+        assert!((b.lp_area_share() - 0.181).abs() < 0.005, "{}", b.lp_area_share());
+        assert!((b.lp_power_share() - 0.141).abs() < 0.005, "{}", b.lp_power_share());
+    }
+
+    #[test]
+    fn area_scales_with_datapath() {
+        let mut cfg = AccelConfig::default();
+        cfg.pe_macs_per_cycle *= 2;
+        let b = ChipBudget::for_config(&cfg);
+        assert!(b.total_area_mm2() > 5.69);
+        let pe = b.units.iter().find(|u| u.name == "pe-array").unwrap();
+        assert!((pe.area_mm2 - 2.0 * 5.69 * 0.392).abs() < 0.01);
+    }
+
+    #[test]
+    fn sram_area_tracks_capacity() {
+        // The Sec. III-A(2) example: 5 MB of SRAM ⇒ ~5.7 mm² at 28 nm.
+        let mut cfg = AccelConfig::default();
+        cfg.sram_bytes = 5 * 1024 * 1024;
+        let b = ChipBudget::for_config(&cfg);
+        let sram = b.units.iter().find(|u| u.name == "sram").unwrap();
+        assert!((4.0..8.0).contains(&sram.area_mm2), "5MB SRAM area {}", sram.area_mm2);
+    }
+}

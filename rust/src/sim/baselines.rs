@@ -1,0 +1,335 @@
+//! SOTA accelerator baselines: FACT, Energon, ELSA, SpAtten, Simba/NVDLA.
+//!
+//! Two layers of modeling:
+//!
+//! 1. **Published specs** (Table III): the numbers the papers report, with
+//!    the tech-normalization rule of the Table III footnote
+//!    (f ∝ s, power ∝ (1/s)(1.0/Vdd)², s = tech/28nm) so comparisons are
+//!    apples-to-apples at 28 nm / 1.0 V.
+//! 2. **Behavioral models**: each baseline mapped onto the cycle-level
+//!    simulator as a [`FeatureSet`] + [`AccelConfig`], used where the
+//!    paper runs the baselines on *its* workloads (Fig. 3, Fig. 24(c)(d)).
+
+use super::energy::normalize_to_28nm;
+use super::pipeline::{FeatureSet, FormalKind, PredictKind, TopkKind};
+use crate::config::AccelConfig;
+
+/// Published datasheet row for one accelerator (Table III).
+#[derive(Clone, Debug)]
+pub struct BaselineSpec {
+    pub name: &'static str,
+    pub tech_nm: f64,
+    pub freq_hz: f64,
+    pub area_mm2: f64,
+    pub power_w: f64,
+    /// Effective (sparsity-counted) throughput, GOPS, as published.
+    pub throughput_gops: f64,
+    /// Energy efficiency as published in Table III (GOPS/W, already
+    /// normalized to 28 nm / 1.0 V by the paper's rule).
+    pub energy_eff_gops_w: f64,
+    /// Area efficiency as published in Table III (GOPS/mm², 28 nm-normalized).
+    pub area_eff_gops_mm2: f64,
+    /// Optimization coverage: computation only, or compute + memory.
+    pub memory_optimized: bool,
+    /// Cross-stage coordinated (only STAR).
+    pub cross_stage: bool,
+}
+
+impl BaselineSpec {
+    /// Energy efficiency normalized to 28 nm / 1.0 V, GOPS/W (Table III row).
+    pub fn energy_eff_28nm(&self) -> f64 {
+        self.energy_eff_gops_w
+    }
+
+    /// Area efficiency normalized to 28 nm, GOPS/mm² (Table III row).
+    pub fn area_eff_28nm(&self) -> f64 {
+        self.area_eff_gops_mm2
+    }
+
+    /// Raw GOPS/W from this row's own throughput/power, re-normalized with
+    /// the footnote rule — used to sanity-check the published rows.
+    pub fn energy_eff_raw_28nm(&self) -> f64 {
+        let (gops, watts) = normalize_to_28nm(self.throughput_gops, self.power_w, self.tech_nm, 1.0);
+        gops / watts
+    }
+}
+
+/// Table III rows (published numbers; STAR's row is what our simulator is
+/// calibrated against).
+pub fn table3_specs() -> Vec<BaselineSpec> {
+    vec![
+        BaselineSpec {
+            name: "FACT",
+            tech_nm: 28.0,
+            freq_hz: 500e6,
+            area_mm2: 6.03,
+            power_w: 0.22,
+            throughput_gops: 928.0,
+            energy_eff_gops_w: 2754.0,
+            area_eff_gops_mm2: 154.0,
+            memory_optimized: false,
+            cross_stage: false,
+        },
+        BaselineSpec {
+            name: "Energon",
+            tech_nm: 45.0,
+            freq_hz: 1e9,
+            area_mm2: 4.20,
+            power_w: 2.72,
+            throughput_gops: 1153.0,
+            energy_eff_gops_w: 450.0,
+            area_eff_gops_mm2: 709.0,
+            memory_optimized: false,
+            cross_stage: false,
+        },
+        BaselineSpec {
+            name: "ELSA",
+            tech_nm: 40.0,
+            freq_hz: 1e9,
+            area_mm2: 1.26,
+            power_w: 1.5,
+            throughput_gops: 1090.0,
+            energy_eff_gops_w: 1004.0,
+            area_eff_gops_mm2: 1765.0,
+            memory_optimized: false,
+            cross_stage: false,
+        },
+        BaselineSpec {
+            name: "STAR",
+            tech_nm: 28.0,
+            freq_hz: 1e9,
+            area_mm2: 5.69,
+            power_w: 3.45,
+            throughput_gops: 24423.0,
+            energy_eff_gops_w: 7183.0,
+            area_eff_gops_mm2: 4292.0,
+            memory_optimized: true,
+            cross_stage: true,
+        },
+    ]
+}
+
+/// Which accelerator a behavioral model mimics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Baseline {
+    /// FACT (ISCA'23): symmetric leading-zero (SLZS) eager prediction,
+    /// vanilla top-k, stage-serial execution.
+    Fact,
+    /// Energon (TCAD'22): multi-round low-bit filtering, stage-serial.
+    Energon,
+    /// ELSA (ISCA'21): hashing-based approximation ≈ low-bit prediction +
+    /// per-row thresholding, stage-serial.
+    Elsa,
+    /// SpAtten (HPCA'21): cascade token/head pruning; coarse top-k with
+    /// progressive KV reduction, stage-serial.
+    Spatten,
+    /// Simba-style NVDLA core: dense SIMD MACs, no sparsity machinery.
+    Simba,
+    /// The full STAR core.
+    Star,
+}
+
+impl Baseline {
+    pub fn name(self) -> &'static str {
+        match self {
+            Baseline::Fact => "FACT",
+            Baseline::Energon => "Energon",
+            Baseline::Elsa => "ELSA",
+            Baseline::Spatten => "SpAtten",
+            Baseline::Simba => "Simba",
+            Baseline::Star => "STAR",
+        }
+    }
+
+    /// Map the baseline onto the simulator's feature axes.
+    pub fn features(self) -> FeatureSet {
+        match self {
+            Baseline::Star => FeatureSet::star(),
+            Baseline::Simba => FeatureSet::dense_asic(),
+            Baseline::Fact => FeatureSet {
+                predict: PredictKind::Slzs,
+                topk: TopkKind::Threshold,
+                formal: FormalKind::Dense,
+                on_demand_kv: false,
+                tiled_dataflow: false,
+                oo_scheduler: false,
+                sufa_tailored: false,
+            },
+            Baseline::Energon => FeatureSet {
+                // Multi-round filter ≈ two low-bit prediction passes; we
+                // model one pass here and account the second in `config`
+                // by halving prediction lanes.
+                predict: PredictKind::LowBitMul,
+                topk: TopkKind::Threshold,
+                formal: FormalKind::Dense,
+                on_demand_kv: false,
+                tiled_dataflow: false,
+                oo_scheduler: false,
+                sufa_tailored: false,
+            },
+            Baseline::Elsa => FeatureSet {
+                predict: PredictKind::LowBitMul,
+                topk: TopkKind::Threshold,
+                formal: FormalKind::Dense,
+                on_demand_kv: false,
+                tiled_dataflow: false,
+                oo_scheduler: false,
+                sufa_tailored: false,
+            },
+            Baseline::Spatten => FeatureSet {
+                predict: PredictKind::LowBitMul,
+                topk: TopkKind::Threshold,
+                formal: FormalKind::Dense,
+                // SpAtten's cascade pruning progressively shrinks KV, which
+                // we approximate as on-demand generation.
+                on_demand_kv: true,
+                tiled_dataflow: false,
+                oo_scheduler: false,
+                sufa_tailored: false,
+            },
+        }
+    }
+
+    /// An [`AccelConfig`] scaled to the baseline's published datapath.
+    pub fn config(self) -> AccelConfig {
+        let d = AccelConfig::default();
+        match self {
+            Baseline::Star => d,
+            Baseline::Simba => AccelConfig {
+                // Simba PE cluster: dense MACs only, no prediction units.
+                pe_macs_per_cycle: 4096,
+                dlzs_lanes: 1,
+                sads_lanes: 1,
+                sufa_exp_units: 32,
+                sram_bytes: 512 * 1024,
+                ..d
+            },
+            Baseline::Fact => AccelConfig {
+                freq_hz: 500e6,
+                pe_macs_per_cycle: 4096,
+                dlzs_lanes: 1024,
+                sads_lanes: 256,
+                sufa_exp_units: 32,
+                sram_bytes: 192 * 1024,
+                ..d
+            },
+            Baseline::Energon => AccelConfig {
+                tech_nm: 45.0,
+                pe_macs_per_cycle: 2048,
+                dlzs_lanes: 512, // halved: pays two filter rounds
+                sads_lanes: 256,
+                sufa_exp_units: 32,
+                sram_bytes: 128 * 1024,
+                ..d
+            },
+            Baseline::Elsa => AccelConfig {
+                tech_nm: 40.0,
+                pe_macs_per_cycle: 1024,
+                dlzs_lanes: 1024,
+                sads_lanes: 256,
+                sufa_exp_units: 16,
+                sram_bytes: 96 * 1024,
+                ..d
+            },
+            Baseline::Spatten => AccelConfig {
+                pe_macs_per_cycle: 4096,
+                dlzs_lanes: 512,
+                sads_lanes: 512,
+                sufa_exp_units: 32,
+                // SpAtten's published design carries ~384 kB of SRAM.
+                sram_bytes: 384 * 1024,
+                ..d
+            },
+        }
+    }
+
+    /// Baselines compared in the spatial lateral study (Fig. 24(c)(d)).
+    pub fn spatial_suite() -> [Baseline; 3] {
+        [Baseline::Simba, Baseline::Spatten, Baseline::Star]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::dram::DramChannel;
+    use crate::sim::pipeline::{simulate, WorkloadShape};
+
+    #[test]
+    fn table3_normalized_ratios_match_paper() {
+        // Paper: STAR is 2.6× / 15.9× / 7.2× more energy-efficient than
+        // FACT / Energon / ELSA after tech normalization, and 27.1× /
+        // 6.1× / 2.4× more area-efficient.
+        let specs = table3_specs();
+        let star = specs.iter().find(|s| s.name == "STAR").unwrap();
+        let fact = specs.iter().find(|s| s.name == "FACT").unwrap();
+        let energon = specs.iter().find(|s| s.name == "Energon").unwrap();
+        let elsa = specs.iter().find(|s| s.name == "ELSA").unwrap();
+
+        let e_ratio = |b: &BaselineSpec| star.energy_eff_28nm() / b.energy_eff_28nm();
+        assert!((e_ratio(fact) - 2.6).abs() < 0.3, "FACT energy ratio {}", e_ratio(fact));
+        assert!((e_ratio(energon) - 15.9).abs() < 2.5, "Energon energy ratio {}", e_ratio(energon));
+        assert!((e_ratio(elsa) - 7.2).abs() < 1.5, "ELSA energy ratio {}", e_ratio(elsa));
+
+        let a_ratio = |b: &BaselineSpec| star.area_eff_28nm() / b.area_eff_28nm();
+        assert!((a_ratio(fact) - 27.1).abs() < 3.0, "FACT area ratio {}", a_ratio(fact));
+        assert!((a_ratio(energon) - 6.1).abs() < 2.0, "Energon area ratio {}", a_ratio(energon));
+        assert!((a_ratio(elsa) - 2.4).abs() < 1.0, "ELSA area ratio {}", a_ratio(elsa));
+    }
+
+    #[test]
+    fn star_outruns_every_behavioral_baseline() {
+        let shape = WorkloadShape::new(128, 2048, 64, 768, 0.2);
+        let dram = DramChannel::accel_256();
+        let star = simulate(&shape, &FeatureSet::star(), &Baseline::Star.config(), &dram);
+        for b in [Baseline::Fact, Baseline::Energon, Baseline::Elsa, Baseline::Spatten, Baseline::Simba] {
+            let r = simulate(&shape, &b.features(), &b.config(), &dram);
+            assert!(
+                star.total_s < r.total_s,
+                "STAR {} !< {} {}",
+                star.total_s,
+                b.name(),
+                r.total_s
+            );
+        }
+    }
+
+    #[test]
+    fn serial_baselines_get_memory_bound_at_high_tp() {
+        // Fig. 3: FACT/Energon MAT fraction grows with token parallelism
+        // and averages ~72% at high TP.
+        let dram = DramChannel::ddr4();
+        for b in [Baseline::Fact, Baseline::Energon] {
+            let lo = simulate(
+                &WorkloadShape::new(64, 2048, 64, 768, 0.25),
+                &b.features(),
+                &b.config(),
+                &dram,
+            );
+            let hi = simulate(
+                &WorkloadShape::new(512, 2048, 64, 768, 0.25),
+                &b.features(),
+                &b.config(),
+                &dram,
+            );
+            // The Â-spill component of MAT grows with TP for both; the
+            // *total* MAT share stays dominant for Energon (1 GHz) but is
+            // partially hidden behind FACT's 500 MHz compute in our
+            // overlap model (EXPERIMENTS.md §Fig3 discusses this).
+            assert!(
+                hi.predict.mem_s > lo.predict.mem_s,
+                "{}: Â spill traffic should grow with TP",
+                b.name()
+            );
+            if b == Baseline::Energon {
+                assert!(hi.mat_fraction() > 0.5, "{} MAT {}", b.name(), hi.mat_fraction());
+            }
+        }
+    }
+
+    #[test]
+    fn names_and_suite() {
+        assert_eq!(Baseline::Spatten.name(), "SpAtten");
+        assert_eq!(Baseline::spatial_suite().len(), 3);
+    }
+}

@@ -1,0 +1,106 @@
+//! Off-chip DRAM channel model: bandwidth, latency, energy, and simple
+//! contention (the Ramulator substitution — DESIGN.md §2).
+//!
+//! The model is transaction-level: a transfer of B bytes on a channel with
+//! bandwidth `bw` and access latency `lat` takes `lat + B/bw` seconds and
+//! costs `8·B·pJ_bit` picojoules. Contention from `sharers` cores divides
+//! the bandwidth (the Fig. 23(b) setting: 512 GB/s shared by 25 cores →
+//! 20.5 GB/s effective).
+
+/// A DRAM channel.
+#[derive(Clone, Copy, Debug)]
+pub struct DramChannel {
+    /// Peak bandwidth, bytes/s.
+    pub bw: f64,
+    /// First-word access latency, seconds.
+    pub latency: f64,
+    /// Energy per bit moved, picojoules.
+    pub pj_per_bit: f64,
+}
+
+impl DramChannel {
+    /// HBM2-class channel (Table IV: 512 GB/s, 100 ns, 6 pJ/bit).
+    pub fn hbm2() -> DramChannel {
+        DramChannel { bw: 512e9, latency: 100e-9, pj_per_bit: 6.0 }
+    }
+
+    /// DDR4-class channel (Sec. III-A(2): 25.6 GB/s, ~15 pJ/bit).
+    pub fn ddr4() -> DramChannel {
+        DramChannel { bw: 25.6e9, latency: 60e-9, pj_per_bit: 15.0 }
+    }
+
+    /// Single-core accelerator channel (Fig. 23(a): 256 GB/s).
+    pub fn accel_256() -> DramChannel {
+        DramChannel { bw: 256e9, latency: 100e-9, pj_per_bit: 6.0 }
+    }
+
+    /// Effective channel when shared equally by `sharers` cores.
+    pub fn shared_by(&self, sharers: usize) -> DramChannel {
+        DramChannel { bw: self.bw / sharers.max(1) as f64, ..*self }
+    }
+
+    /// Time to move `bytes` in one streaming transaction.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            0.0
+        } else {
+            self.latency + bytes as f64 / self.bw
+        }
+    }
+
+    /// Time for `bytes` split into `bursts` dependent transactions (e.g.
+    /// per-tile fetches that cannot be coalesced).
+    pub fn burst_time(&self, bytes: u64, bursts: u64) -> f64 {
+        if bytes == 0 {
+            0.0
+        } else {
+            self.latency * bursts.max(1) as f64 + bytes as f64 / self.bw
+        }
+    }
+
+    /// Energy in joules for `bytes` moved.
+    pub fn energy_j(&self, bytes: u64) -> f64 {
+        bytes as f64 * 8.0 * self.pj_per_bit * 1e-12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_includes_latency() {
+        let ch = DramChannel::hbm2();
+        let t = ch.transfer_time(512_000_000_000);
+        assert!((t - (100e-9 + 1.0)).abs() < 1e-6);
+        assert_eq!(ch.transfer_time(0), 0.0);
+    }
+
+    #[test]
+    fn sharing_divides_bandwidth() {
+        let ch = DramChannel::hbm2().shared_by(25);
+        assert!((ch.bw - 20.48e9).abs() < 1e6); // the paper's 20.5 GB/s
+    }
+
+    #[test]
+    fn bursts_pay_latency_repeatedly() {
+        let ch = DramChannel::hbm2();
+        let coalesced = ch.transfer_time(1 << 20);
+        let bursty = ch.burst_time(1 << 20, 1024);
+        assert!(bursty > coalesced);
+        assert!((bursty - coalesced - 1023.0 * 100e-9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ddr_two_orders_below_sram_bw() {
+        // Sec. III-A(2): off-chip ~two orders of magnitude below on-chip.
+        let sram_bw = crate::sim::sram::Sram::new(1).bw;
+        assert!(sram_bw / DramChannel::ddr4().bw > 100.0);
+    }
+
+    #[test]
+    fn energy_linear_in_bytes() {
+        let ch = DramChannel::hbm2();
+        assert!((ch.energy_j(1000) - 1000.0 * 8.0 * 6.0 * 1e-12).abs() < 1e-18);
+    }
+}

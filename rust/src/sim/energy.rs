@@ -1,0 +1,178 @@
+//! Energy model: per-operation energies at TSMC 28 nm / 1.0 V plus the
+//! paper's tech-scaling normalization (Table III footnote: `f ∝ s`,
+//! `P_core ∝ (1/s)(1.0/Vdd)²` with `s = Tech/28 nm`).
+//!
+//! Per-op values are standard 28 nm datapath numbers (Horowitz ISSCC'14
+//! style), chosen so that the relative costs match the paper's accounting:
+//! an exponentiation is ~an order of magnitude above a multiply, DRAM is
+//! orders of magnitude above SRAM (Sec. III-A(2): DRAM 5–20 pJ/bit vs SRAM
+//! 0.1 pJ/bit).
+
+use crate::arith::OpCounter;
+
+/// Per-operation dynamic energies in picojoules (28 nm, 1.0 V).
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyModel {
+    /// INT8-class add (the prediction datapath accumulator).
+    pub add_pj: f64,
+    /// INT16/FP16-class multiply (formal-compute MAC).
+    pub mul_pj: f64,
+    pub cmp_pj: f64,
+    pub div_pj: f64,
+    /// Exponential unit evaluation (LUT + interpolation pipeline).
+    pub exp_pj: f64,
+    /// Barrel shift (DLZS "multiply").
+    pub shift_pj: f64,
+    /// Leading-zero priority encode.
+    pub lz_encode_pj: f64,
+    /// On-chip SRAM access energy per bit.
+    pub sram_pj_per_bit: f64,
+    /// Off-chip DRAM access energy per bit.
+    pub dram_pj_per_bit: f64,
+    /// PSP saving: fraction of sign-induced bit-flip energy avoided per
+    /// shift (Fig. 8a right); folded into `shift_pj` when enabled.
+    pub psp_saving: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        EnergyModel {
+            add_pj: 0.03,
+            mul_pj: 0.8,
+            cmp_pj: 0.03,
+            div_pj: 3.0,
+            exp_pj: 6.0,
+            shift_pj: 0.05,
+            lz_encode_pj: 0.04,
+            sram_pj_per_bit: 0.1,
+            dram_pj_per_bit: 6.0, // HBM2-class (Table IV); DDR4 would be ~15
+            psp_saving: 0.3,
+        }
+    }
+}
+
+impl EnergyModel {
+    /// DDR4-class off-chip memory (the Sec. III-A(2) example).
+    pub fn with_ddr4(self) -> Self {
+        EnergyModel { dram_pj_per_bit: 15.0, ..self }
+    }
+
+    /// Scale this 28 nm model to another technology node, following the
+    /// paper's normalization: energy/op ∝ s·Vdd² relative to 28 nm/1.0 V
+    /// (power ∝ (1/s)Vdd⁻² with f ∝ s ⇒ energy ∝ ...; we apply the same
+    /// rule the paper uses to normalize *to* 28 nm, inverted).
+    pub fn scaled_to(&self, tech_nm: f64, vdd: f64) -> EnergyModel {
+        let s = tech_nm / 28.0;
+        let f = s * vdd * vdd;
+        EnergyModel {
+            add_pj: self.add_pj * f,
+            mul_pj: self.mul_pj * f,
+            cmp_pj: self.cmp_pj * f,
+            div_pj: self.div_pj * f,
+            exp_pj: self.exp_pj * f,
+            shift_pj: self.shift_pj * f,
+            lz_encode_pj: self.lz_encode_pj * f,
+            sram_pj_per_bit: self.sram_pj_per_bit * f,
+            dram_pj_per_bit: self.dram_pj_per_bit, // IO energy does not scale with core tech
+            psp_saving: self.psp_saving,
+        }
+    }
+
+    /// Dynamic energy (picojoules) of a counted op mix, `psp` controlling
+    /// whether shifts enjoy the pre-flip saving.
+    pub fn of_ops(&self, c: &OpCounter, psp: bool) -> f64 {
+        let shift_pj = if psp { self.shift_pj * (1.0 - self.psp_saving) } else { self.shift_pj };
+        c.add as f64 * self.add_pj
+            + c.mul as f64 * self.mul_pj
+            + c.cmp as f64 * self.cmp_pj
+            + c.div as f64 * self.div_pj
+            + c.exp as f64 * self.exp_pj
+            + c.shift as f64 * shift_pj
+            + c.lz_encode as f64 * self.lz_encode_pj
+            + c.sram_bytes as f64 * 8.0 * self.sram_pj_per_bit
+            + c.dram_bytes as f64 * 8.0 * self.dram_pj_per_bit
+    }
+}
+
+/// Energy totals per category, in joules.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnergyBreakdown {
+    pub compute_j: f64,
+    pub sram_j: f64,
+    pub dram_j: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_j(&self) -> f64 {
+        self.compute_j + self.sram_j + self.dram_j
+    }
+}
+
+/// The paper's Table III normalization: scale a (throughput, power) pair
+/// reported at `tech_nm`/`vdd` to 28 nm / 1.0 V. Returns (gops, watts).
+pub fn normalize_to_28nm(gops: f64, watts: f64, tech_nm: f64, vdd: f64) -> (f64, f64) {
+    let s = tech_nm / 28.0;
+    // f ∝ s: a 45 nm design at 1 GHz runs s× faster at 28 nm.
+    let gops_n = gops * s;
+    // P_core ∝ (1/s)(1.0/Vdd)².
+    let watts_n = watts * (1.0 / s) * (1.0 / vdd).powi(2);
+    (gops_n, watts_n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::OpKind;
+
+    #[test]
+    fn dram_orders_of_magnitude_above_sram() {
+        let m = EnergyModel::default();
+        assert!(m.dram_pj_per_bit / m.sram_pj_per_bit >= 50.0);
+    }
+
+    #[test]
+    fn exp_much_costlier_than_mul() {
+        let m = EnergyModel::default();
+        assert!(m.exp_pj / m.mul_pj >= 5.0);
+        assert!(m.mul_pj / m.shift_pj >= 10.0, "shifts must be far cheaper than multiplies");
+    }
+
+    #[test]
+    fn psp_reduces_shift_energy() {
+        let m = EnergyModel::default();
+        let mut c = OpCounter::new();
+        c.tally(OpKind::Shift, 1000);
+        assert!(m.of_ops(&c, true) < m.of_ops(&c, false));
+    }
+
+    #[test]
+    fn of_ops_counts_memory() {
+        let m = EnergyModel::default();
+        let mut c = OpCounter::new();
+        c.dram(1); // one byte
+        let e = m.of_ops(&c, false);
+        assert!((e - 8.0 * m.dram_pj_per_bit).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tech_scaling_45_to_28() {
+        // Energon: 45 nm, 1153 GOPS, 2.72 W. Normalized to 28 nm it must
+        // get faster and (per the paper's rule) lower-power per op.
+        let (g, w) = normalize_to_28nm(1153.0, 2.72, 45.0, 1.0);
+        assert!(g > 1153.0);
+        assert!(w < 2.72);
+        // Efficiency 450 GOPS/W → paper's normalized comparison keeps
+        // STAR 15.9× ahead; just sanity-check the direction & magnitude.
+        let eff = g / w;
+        assert!((eff / (1153.0 / 2.72) - (45.0f64 / 28.0).powi(2)).abs() < 1.0);
+    }
+
+    #[test]
+    fn scaled_model_roundtrip_identity() {
+        let m = EnergyModel::default();
+        let same = m.scaled_to(28.0, 1.0);
+        assert!((same.mul_pj - m.mul_pj).abs() < 1e-12);
+        let m45 = m.scaled_to(45.0, 1.0);
+        assert!(m45.mul_pj > m.mul_pj);
+    }
+}

@@ -1,0 +1,172 @@
+//! A100 GPU comparison model (the paper's Fig. 19 / Fig. 20 / Fig. 22
+//! baseline).
+//!
+//! The paper measures TensorRT-LLM on a real A100; we cannot. The
+//! substitution (DESIGN.md §2) is a calibrated throughput model anchored
+//! on the paper's *own* measurements rather than on datasheet rooflines:
+//!
+//! * Table III implies the A100 sustains ≈ 24423/9.2 ≈ 2.7 effective
+//!   TOPS on the paper's LTPP attention jobs (≈ 1% of FP16 peak — the
+//!   mix of tall-skinny GEMMs, softmax, INT16-equivalent precision and
+//!   framework overhead keeps tensor cores mostly idle).
+//! * Fig. 20 implies the dense 16-TOPS-class ASIC datapath beats the
+//!   dense GPU by 1.5×, consistent with the same effective utilization.
+//! * `nvidia-smi`-measured *dynamic* power (total − idle) on these jobs
+//!   is a small fraction of the 400 W board power (Fig. 22(b) implies
+//!   ≈ 25–30 W).
+//! * Naive LP (sparsity prediction) on the GPU yields only 1.08×–1.78×
+//!   because SIMT warps cannot exploit token-granular sparsity.
+
+use super::pipeline::WorkloadShape;
+
+/// GPU device model: peak compute, memory bandwidth, power, and the
+/// calibrated effective utilization.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuModel {
+    /// Peak dense FP16 tensor-core throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// Board power, watts.
+    pub power_w: f64,
+    /// Dynamic (idle-subtracted) power fraction on attention jobs.
+    pub dynamic_frac: f64,
+    /// Sustained fraction of peak on the paper's LTPP attention jobs
+    /// (attention + on-the-fly KV projection, INT16-equivalent).
+    pub eff_util: f64,
+    /// Fraction of nominally-skippable work a SIMT datapath actually
+    /// skips under an irregular token-level sparsity mask.
+    pub sparse_skip_eff: f64,
+    /// LP prediction-stage overhead as a fraction of the dense job.
+    pub lp_overhead: f64,
+}
+
+impl GpuModel {
+    /// NVIDIA A100-80GB SXM: 312 TFLOPS FP16 TC, 2.04 TB/s HBM2e, 400 W,
+    /// with utilization calibrated to the paper's measurements.
+    pub fn a100() -> GpuModel {
+        GpuModel {
+            peak_flops: 312e12,
+            hbm_bw: 2.04e12,
+            power_w: 400.0,
+            dynamic_frac: 0.065,
+            eff_util: 0.010,
+            sparse_skip_eff: 0.50,
+            lp_overhead: 0.12,
+        }
+    }
+
+    /// Dense-equivalent FLOPs of the whole job: attention (QKᵀ + PV) plus
+    /// the on-demand K/V projections — the same accounting the
+    /// accelerator simulator uses.
+    pub fn job_flops(shape: &WorkloadShape) -> f64 {
+        4.0 * shape.t as f64 * shape.s as f64 * shape.d as f64
+            + 4.0 * shape.s as f64 * shape.h as f64 * shape.d as f64
+    }
+
+    /// HBM bytes for one FP16 job (X, Q in; O out; KV transient).
+    pub fn job_bytes(shape: &WorkloadShape) -> f64 {
+        let e = 2.0;
+        (shape.s * shape.h) as f64
+            + ((shape.t + 2 * shape.s) * shape.d + shape.t * shape.d) as f64 * e
+    }
+
+    /// Execution time of the dense job.
+    pub fn dense_job_time(&self, shape: &WorkloadShape) -> f64 {
+        let tc = Self::job_flops(shape) / (self.peak_flops * self.eff_util);
+        let tm = Self::job_bytes(shape) / self.hbm_bw;
+        tc.max(tm)
+    }
+
+    /// Execution time with the LP (sparsity-prediction) mechanism ported
+    /// naively onto the GPU: the prediction pass is pure overhead, and
+    /// only `sparse_skip_eff` of the pruned work is actually saved.
+    pub fn lp_job_time(&self, shape: &WorkloadShape) -> f64 {
+        let dense = self.dense_job_time(shape);
+        let predict = self.lp_overhead * dense;
+        let saved = (1.0 - shape.keep_ratio) * self.sparse_skip_eff;
+        predict + dense * (1.0 - saved)
+    }
+
+    /// Speedup of LP-on-GPU over dense-on-GPU; the paper measures
+    /// 1.08×–1.78× for this quantity.
+    pub fn lp_gain(&self, shape: &WorkloadShape) -> f64 {
+        self.dense_job_time(shape) / self.lp_job_time(shape)
+    }
+
+    /// Dynamic energy of a job (idle-subtracted, per the paper's
+    /// `nvidia-smi` methodology).
+    pub fn energy_j(&self, time_s: f64) -> f64 {
+        self.dynamic_frac * self.power_w * time_s
+    }
+
+    /// Dynamic power, watts.
+    pub fn dynamic_w(&self) -> f64 {
+        self.dynamic_frac * self.power_w
+    }
+
+    /// Effective throughput in GOPS on the dense-equivalent accounting.
+    pub fn eff_gops(&self, shape: &WorkloadShape, time_s: f64) -> f64 {
+        Self::job_flops(shape) / time_s / 1e9
+    }
+
+    /// Energy efficiency in GOPS/W on a dense job.
+    pub fn dense_gops_per_w(&self, shape: &WorkloadShape) -> f64 {
+        let t = self.dense_job_time(shape);
+        self.eff_gops(shape, t) / self.dynamic_w()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> WorkloadShape {
+        WorkloadShape::new(128, 4096, 128, 4096, 0.2)
+    }
+
+    #[test]
+    fn lp_gain_in_paper_band() {
+        // Fig. 19: naive LP on the A100 yields 1.08×–1.78×.
+        let gpu = GpuModel::a100();
+        for s in [1024usize, 2048, 4096, 8192] {
+            for k in [0.15, 0.2, 0.25] {
+                let shape = WorkloadShape::new(128, s, 128, 4096, k);
+                let g = gpu.lp_gain(&shape);
+                assert!((1.05..1.9).contains(&g), "gain {g} at S={s} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn effective_throughput_matches_table3_implication() {
+        // Table III: STAR 24423 GOPS at up to 9.2× over the GPU ⇒ the GPU
+        // sustains ~2–4 effective TOPS on these jobs.
+        let gpu = GpuModel::a100();
+        let t = gpu.dense_job_time(&shape());
+        let gops = gpu.eff_gops(&shape(), t);
+        assert!((1500.0..5000.0).contains(&gops), "GPU effective GOPS {gops}");
+    }
+
+    #[test]
+    fn dynamic_power_in_measured_band() {
+        // Fig. 22(b) implies ~25–30 W idle-subtracted on attention jobs.
+        let gpu = GpuModel::a100();
+        assert!((20.0..40.0).contains(&gpu.dynamic_w()), "{}", gpu.dynamic_w());
+    }
+
+    #[test]
+    fn energy_scales_with_time() {
+        let gpu = GpuModel::a100();
+        assert!((gpu.energy_j(2.0) - 2.0 * gpu.energy_j(1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gpu_efficiency_two_orders_below_star() {
+        // Fig. 22(b): STAR reaches 49.8×–71.2× the GPU's GOPS/W; the GPU
+        // lands around 7183 / 71 ≈ 100 GOPS/W.
+        let gpu = GpuModel::a100();
+        let eff = gpu.dense_gops_per_w(&shape());
+        assert!((50.0..250.0).contains(&eff), "GPU GOPS/W {eff}");
+    }
+}

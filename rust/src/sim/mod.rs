@@ -1,0 +1,32 @@
+//! Cycle-level and energy/area modeling of the STAR accelerator and its
+//! comparison points.
+//!
+//! The paper evaluates RTL (Synopsys DC, TSMC 28 nm) + CACTI + Ramulator +
+//! a cycle-level simulator; none of that toolchain exists here, so this
+//! module is the substitution (DESIGN.md §2): analytic per-unit cycle
+//! models anchored on the paper's own reported throughputs, a pJ/op energy
+//! model with the paper's tech-scaling rule, and a bandwidth/latency memory
+//! system. Absolute numbers are *models*; the benches compare shapes and
+//! ratios, which is what the substitution preserves.
+//!
+//! * [`energy`] — pJ/op tables at 28 nm + tech/voltage scaling (Table III
+//!   footnote), SRAM/DRAM per-bit energies.
+//! * [`area`]   — per-unit area model and the Fig. 21 breakdown.
+//! * [`sram`], [`dram`] — the memory system.
+//! * [`units`]  — cycle models for the six STAR units (Fig. 12).
+//! * [`pipeline`] — the single-core simulator: stage-serial vs cross-stage
+//!   tiled execution, feature flags for every ablation of Fig. 20/22/23.
+//! * [`gpu`]    — the A100 roofline comparison model.
+//! * [`baselines`] — FACT / Energon / ELSA / SpAtten / Simba models.
+
+pub mod area;
+pub mod baselines;
+pub mod dram;
+pub mod energy;
+pub mod gpu;
+pub mod pipeline;
+pub mod sram;
+pub mod units;
+
+pub use energy::{EnergyBreakdown, EnergyModel};
+pub use pipeline::{simulate, FeatureSet, FormalKind, PredictKind, SimReport, TopkKind, WorkloadShape};

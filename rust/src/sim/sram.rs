@@ -1,0 +1,120 @@
+//! On-chip SRAM model: capacity, bandwidth, and working-set fit checks.
+//!
+//! SRAM is the hinge of the whole paper: the row-wise dependencies of
+//! top-k/softmax force intermediates on chip, and when they don't fit they
+//! spill to DRAM (Sec. III-A(2)). The model answers two questions: does a
+//! stage's working set fit, and how long does on-chip streaming take.
+
+/// SRAM bank array.
+#[derive(Clone, Copy, Debug)]
+pub struct Sram {
+    pub bytes: usize,
+    /// Aggregate read+write bandwidth in bytes/s (the paper quotes 19 TB/s
+    /// class on-chip bandwidth).
+    pub bw: f64,
+}
+
+impl Sram {
+    pub fn new(bytes: usize) -> Sram {
+        Sram { bytes, bw: 19e12 }
+    }
+
+    pub fn fits(&self, working_set: usize) -> bool {
+        working_set <= self.bytes
+    }
+
+    /// Bytes that overflow the capacity (0 when it fits).
+    pub fn spill(&self, working_set: usize) -> usize {
+        working_set.saturating_sub(self.bytes)
+    }
+
+    /// Time to stream `bytes` through the SRAM ports.
+    pub fn stream_time(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.bw
+    }
+}
+
+/// Working-set calculator for the DS stages of a (T, S, d_h) attention
+/// workload, in bytes. Element width `ew` (2 for INT16/FP16).
+#[derive(Clone, Copy, Debug)]
+pub struct WorkingSets {
+    pub t: usize,
+    pub s: usize,
+    pub d: usize,
+    pub ew: usize,
+}
+
+impl WorkingSets {
+    /// Estimated attention matrix Â (1 byte/score in the prediction path).
+    pub fn ahat(&self) -> usize {
+        self.t * self.s
+    }
+
+    /// Full-precision score tile for the formal stage (per tile of width
+    /// `bc`, T rows).
+    pub fn score_tile(&self, bc: usize) -> usize {
+        self.t * bc * self.ew
+    }
+
+    /// Q + O + running (m, l) state resident during SU-FA.
+    pub fn sufa_state(&self) -> usize {
+        self.t * self.d * self.ew * 2 + self.t * 2 * self.ew
+    }
+
+    /// KV tile of width `bc`.
+    pub fn kv_tile(&self, bc: usize) -> usize {
+        2 * bc * self.d * self.ew
+    }
+
+    /// Dense (untiled) softmax working set: the whole T×S score matrix in
+    /// formal precision — what the baselines must hold (or spill).
+    pub fn dense_scores(&self) -> usize {
+        self.t * self.s * self.ew
+    }
+
+    /// Full K+V residency (no on-demand generation).
+    pub fn dense_kv(&self) -> usize {
+        2 * self.s * self.d * self.ew
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_and_spill() {
+        let s = Sram::new(1024);
+        assert!(s.fits(1024));
+        assert!(!s.fits(1025));
+        assert_eq!(s.spill(1500), 476);
+        assert_eq!(s.spill(10), 0);
+    }
+
+    #[test]
+    fn bloom7b_t512_needs_megabytes() {
+        // The Sec. III-A(2) example: Bloom-7B (d_h=128), T=512, S=4096:
+        // dense scores at INT16 = 512·4096·2 = 4 MiB — the "substantial
+        // 5 MB of SRAM" ballpark once KV residency is added.
+        let ws = WorkingSets { t: 512, s: 4096, d: 128, ew: 2 };
+        let need = ws.dense_scores() + ws.dense_kv();
+        assert!(need > 4 * 1024 * 1024, "need {need}");
+        assert!(!Sram::new(316 * 1024).fits(need));
+    }
+
+    #[test]
+    fn tiled_working_set_fits_316kb() {
+        // STAR's point: with cross-stage tiling, the resident set is tiles
+        // + SU-FA state, which fits the 316 kB budget even at T=128.
+        let ws = WorkingSets { t: 128, s: 16384, d: 128, ew: 2 };
+        let tiled = ws.score_tile(16) + ws.kv_tile(16) + ws.sufa_state();
+        assert!(Sram::new(316 * 1024).fits(tiled), "tiled set {tiled}");
+        assert!(!Sram::new(316 * 1024).fits(ws.dense_scores()));
+    }
+
+    #[test]
+    fn stream_time_linear() {
+        let s = Sram::new(1024);
+        assert!((s.stream_time(19_000_000_000_000) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,329 @@
+//! Cycle/op models for the STAR units (Fig. 12).
+//!
+//! Each unit turns a stage's work into (cycles, op counts). The models are
+//! throughput-style: `cycles = ops / lanes`, which matches a fully
+//! pipelined datapath; serialization effects (stage bubbles, stalls,
+//! memory waits) are composed in [`super::pipeline`].
+
+use crate::arith::{OpCounter, OpKind};
+use crate::config::AccelConfig;
+use crate::util::ceil_div;
+
+/// Work description for one attention head-group job.
+#[derive(Clone, Copy, Debug)]
+pub struct StageWork {
+    /// Queries in parallel.
+    pub t: usize,
+    /// Context length.
+    pub s: usize,
+    /// Head dimension.
+    pub d: usize,
+    /// Hidden dimension (for KV generation).
+    pub h: usize,
+    /// Keys kept per row (absolute).
+    pub keep: usize,
+    /// SADS segments.
+    pub segments: usize,
+    /// SADS survivor ratio ρ.
+    pub rho: f64,
+    /// Fraction of keys in the union of all rows' selections (on-demand KV).
+    pub union_ratio: f64,
+    /// SU-FA tile size.
+    pub bc: usize,
+}
+
+impl StageWork {
+    /// Reasonable defaults for a (t, s, d, h) job with keep-ratio `k`.
+    pub fn new(t: usize, s: usize, d: usize, h: usize, k: f64) -> StageWork {
+        let keep = ((s as f64 * k).round() as usize).clamp(1, s);
+        StageWork {
+            t,
+            s,
+            d,
+            h,
+            keep,
+            // DSE-style sub-segment sizing: ~256-element segments
+            // (Appendix A; n = 4 at the paper's S = 1024 example).
+            segments: (s / 256).clamp(2, 64),
+            rho: 0.4, // the paper's typical ρ at r = 5
+            union_ratio: (1.5 * k).min(1.0),
+            bc: 16,
+        }
+    }
+}
+
+/// DLZS prediction unit: shift+accumulate lanes.
+pub struct DlzsUnit {
+    pub lanes: usize,
+}
+
+impl DlzsUnit {
+    /// Cross-phase prediction: phase 1.1 (K̂ = X·LZ(W_k), no online encode)
+    /// + phase 1.2 (Â = LZ(Q)·K̂ᵀ).
+    pub fn cross_phase(&self, w: &StageWork) -> (u64, OpCounter) {
+        let mut c = OpCounter::new();
+        let shifts = (w.s * w.h * w.d + w.t * w.s * w.d) as u64;
+        c.tally(OpKind::Shift, shifts);
+        c.tally(OpKind::Add, shifts);
+        c.tally(OpKind::LzEncode, (w.t * w.d) as u64); // Q only
+        // Compact code loads for W_k; int8 activations.
+        c.sram((w.s * w.h) as u64 + (w.h * w.d) as u64 + (w.t * w.d) as u64);
+        c.sram((w.t * w.s) as u64); // Â tile writes (1 B/score)
+        (shifts.div_ceil(self.lanes as u64), c)
+    }
+
+    /// SLZS attention-only prediction (FACT-style): K comes from the dense
+    /// KV path; both Q and K pay online LZ conversion and full-width loads.
+    pub fn slzs_attention(&self, w: &StageWork) -> (u64, OpCounter) {
+        let mut c = OpCounter::new();
+        let shifts = (w.t * w.s * w.d) as u64;
+        c.tally(OpKind::Shift, shifts);
+        c.tally(OpKind::Add, shifts);
+        c.tally(OpKind::LzEncode, ((w.t + w.s) * w.d) as u64);
+        c.sram((2 * (w.t + w.s) * w.d) as u64); // full 8-bit operands ×2 phases
+        c.sram((w.t * w.s) as u64);
+        (shifts.div_ceil(self.lanes as u64), c)
+    }
+}
+
+/// Low-bit multiplier array (the 4-bit-MSB prediction baseline).
+pub struct LowBitPredictUnit {
+    pub macs_per_cycle: usize,
+}
+
+impl LowBitPredictUnit {
+    pub fn attention(&self, w: &StageWork) -> (u64, OpCounter) {
+        let mut c = OpCounter::new();
+        let macs = (w.t * w.s * w.d) as u64;
+        c.tally(OpKind::Mul, macs);
+        c.tally(OpKind::Add, macs);
+        c.sram((2 * (w.t + w.s) * w.d) as u64);
+        c.sram((w.t * w.s) as u64);
+        (macs.div_ceil(self.macs_per_cycle as u64), c)
+    }
+}
+
+/// SADS sorting unit: comparator lanes.
+pub struct SadsUnit {
+    pub lanes: usize,
+}
+
+impl SadsUnit {
+    /// Distributed sorting with sphere-radius pruning (Sec. IV-B
+    /// complexity): per row ≈ 2S (max + filter) + ρ·S·keep/n (selection)
+    /// + keep·n (merge).
+    pub fn sads(&self, w: &StageWork) -> (u64, OpCounter) {
+        let n = w.segments.max(1);
+        let per_row = 2.0 * w.s as f64
+            + w.rho * w.s as f64 * w.keep as f64 / n as f64
+            + (w.keep * n) as f64;
+        let cmps = (w.t as f64 * per_row) as u64;
+        let mut c = OpCounter::new();
+        c.tally(OpKind::Cmp, cmps);
+        c.sram((w.t * w.s) as u64); // Â reads
+        c.sram((w.t * w.keep * 2) as u64); // index writes
+        (cmps.div_ceil(self.lanes as u64), c)
+    }
+
+    /// Vanilla top-k: keep passes of a full-row scan (Sec. III-A(1)).
+    pub fn vanilla(&self, w: &StageWork) -> (u64, OpCounter) {
+        let cmps = (w.t * w.keep * w.s) as u64;
+        let mut c = OpCounter::new();
+        c.tally(OpKind::Cmp, cmps);
+        c.sram((w.t * w.s * w.keep.min(8)) as u64); // repeated row scans
+        c.sram((w.t * w.keep * 2) as u64);
+        (cmps.div_ceil(self.lanes as u64), c)
+    }
+
+    /// Multi-round threshold filter (Energon/ELSA-class selection): two
+    /// full-row comparison passes against refined thresholds.
+    pub fn threshold(&self, w: &StageWork) -> (u64, OpCounter) {
+        let cmps = (2 * w.t * w.s) as u64;
+        let mut c = OpCounter::new();
+        c.tally(OpKind::Cmp, cmps);
+        c.sram((2 * w.t * w.s) as u64); // Â read per round
+        c.sram((w.t * w.keep * 2) as u64);
+        (cmps.div_ceil(self.lanes as u64), c)
+    }
+}
+
+/// PE array: INT16 MACs for KV generation and the formal-stage matmuls.
+pub struct PeArray {
+    pub macs_per_cycle: usize,
+}
+
+impl PeArray {
+    /// KV generation; `union_ratio` < 1 for on-demand generation.
+    pub fn kv_generation(&self, w: &StageWork, union_ratio: f64) -> (u64, OpCounter) {
+        let rows = (w.s as f64 * union_ratio).ceil() as u64;
+        let macs = rows * (w.h * w.d * 2) as u64; // K and V
+        let mut c = OpCounter::new();
+        c.tally(OpKind::Mul, macs);
+        c.tally(OpKind::Add, macs);
+        c.sram(rows * (w.h * 2) as u64); // X rows (INT16)
+        c.sram(rows * (w.d * 2 * 2) as u64); // K,V writes
+        (macs.div_ceil(self.macs_per_cycle as u64), c)
+    }
+
+    /// Formal-stage matmuls over `keep` keys per row: QKᵀ + PV.
+    pub fn formal_matmuls(&self, w: &StageWork) -> (u64, OpCounter) {
+        let macs = (2 * w.t * w.keep * w.d) as u64;
+        let mut c = OpCounter::new();
+        c.tally(OpKind::Mul, macs);
+        c.tally(OpKind::Add, macs);
+        c.sram((w.t * w.keep * 2 * 2) as u64); // score tile read/write
+        (macs.div_ceil(self.macs_per_cycle as u64), c)
+    }
+}
+
+/// SU-FA execution unit: exponential lanes + the update datapath.
+pub struct SufaUnit {
+    pub exp_units: usize,
+}
+
+/// Which softmax/update scheme the formal stage runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SoftmaxKind {
+    /// Descending sorted updating (the paper's SU-FA).
+    SufaDescend,
+    /// Ascending sorted updating (Fig. 11b comparison).
+    SufaAscend,
+    /// FlashAttention-2 online softmax.
+    Flash2,
+    /// Row-complete softmax (vanilla; requires the whole row on chip).
+    Dense,
+}
+
+impl SufaUnit {
+    /// Cycle/op cost of the softmax-side work for the formal stage.
+    /// Returns (cycles, ops). Matmul work is accounted in [`PeArray`].
+    pub fn softmax(&self, w: &StageWork, kind: SoftmaxKind) -> (u64, OpCounter) {
+        let mut c = OpCounter::new();
+        let tiles = ceil_div(w.keep, w.bc).max(1) as u64;
+        let t = w.t as u64;
+        let keep = w.keep as u64;
+        let d = w.d as u64;
+        match kind {
+            SoftmaxKind::SufaDescend => {
+                // One max reduction on the first tile; then pure accumulate.
+                c.tally(OpKind::Cmp, t * (w.bc.min(w.keep) as u64 - 1));
+                c.tally(OpKind::Exp, t * keep);
+                c.tally(OpKind::Add, t * (2 * keep));
+                c.tally(OpKind::Div, t);
+                c.tally(OpKind::Mul, t * d);
+            }
+            SoftmaxKind::SufaAscend => {
+                c.tally(OpKind::Cmp, t * keep.saturating_sub(tiles)); // in-tile maxes
+                c.tally(OpKind::Exp, t * (keep + (tiles - 1)));
+                c.tally(OpKind::Add, t * (2 * keep + (tiles - 1)));
+                c.tally(OpKind::Mul, t * ((tiles - 1) * (d + 1) + d));
+                c.tally(OpKind::Div, t);
+            }
+            SoftmaxKind::Flash2 => {
+                c.tally(OpKind::Cmp, t * (keep + 2 * (tiles - 1)));
+                c.tally(OpKind::Exp, t * (keep + (tiles - 1)));
+                c.tally(OpKind::Add, t * (2 * keep + (tiles - 1)));
+                c.tally(OpKind::Mul, t * ((tiles - 1) * (d + 1) + d));
+                c.tally(OpKind::Div, t);
+            }
+            SoftmaxKind::Dense => {
+                c.tally(OpKind::Cmp, t * (keep - 1));
+                c.tally(OpKind::Exp, t * keep);
+                c.tally(OpKind::Add, t * (2 * keep));
+                c.tally(OpKind::Div, t * keep);
+            }
+        }
+        // The exponential lanes bound the softmax throughput.
+        let cycles = c.exp.max(1).div_ceil(self.exp_units as u64);
+        (cycles, c)
+    }
+}
+
+/// Build the units from an accelerator config.
+pub struct Units {
+    pub dlzs: DlzsUnit,
+    pub lowbit: LowBitPredictUnit,
+    pub sads: SadsUnit,
+    pub pe: PeArray,
+    pub sufa: SufaUnit,
+}
+
+impl Units {
+    pub fn from_config(cfg: &AccelConfig) -> Units {
+        Units {
+            dlzs: DlzsUnit { lanes: cfg.dlzs_lanes },
+            lowbit: LowBitPredictUnit { macs_per_cycle: cfg.pe_macs_per_cycle },
+            sads: SadsUnit { lanes: cfg.sads_lanes },
+            pe: PeArray { macs_per_cycle: cfg.pe_macs_per_cycle },
+            sufa: SufaUnit { exp_units: cfg.sufa_exp_units },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn work() -> StageWork {
+        StageWork::new(128, 2048, 64, 768, 0.2)
+    }
+
+    #[test]
+    fn dlzs_cross_phase_is_multiplier_free() {
+        let u = DlzsUnit { lanes: 2048 };
+        let (cycles, c) = u.cross_phase(&work());
+        assert_eq!(c.mul, 0);
+        assert!(c.shift > 0 && cycles > 0);
+        // Only Q is encoded online.
+        assert_eq!(c.lz_encode, (128 * 64) as u64);
+    }
+
+    #[test]
+    fn slzs_encodes_both_sides() {
+        let u = DlzsUnit { lanes: 2048 };
+        let (_, c) = u.slzs_attention(&work());
+        assert_eq!(c.lz_encode, ((128 + 2048) * 64) as u64);
+    }
+
+    #[test]
+    fn sads_far_cheaper_than_vanilla() {
+        let u = SadsUnit { lanes: 1024 };
+        let w = work();
+        let (cs, _) = u.sads(&w);
+        let (cv, _) = u.vanilla(&w);
+        let ratio = cs as f64 / cv as f64;
+        assert!(ratio < 0.2, "sads/vanilla cycle ratio {ratio}");
+    }
+
+    #[test]
+    fn on_demand_kv_saves_macs() {
+        let pe = PeArray { macs_per_cycle: 8192 };
+        let w = work();
+        let (c_dense, _) = pe.kv_generation(&w, 1.0);
+        let (c_od, _) = pe.kv_generation(&w, 0.3);
+        assert!((c_od as f64 / c_dense as f64 - 0.3).abs() < 0.01);
+    }
+
+    #[test]
+    fn sufa_descend_cheapest_softmax() {
+        let u = SufaUnit { exp_units: 128 };
+        let w = work();
+        let (_, cd) = u.softmax(&w, SoftmaxKind::SufaDescend);
+        let (_, ca) = u.softmax(&w, SoftmaxKind::SufaAscend);
+        let (_, cf) = u.softmax(&w, SoftmaxKind::Flash2);
+        assert!(cd.exp < ca.exp && ca.exp <= cf.exp);
+        assert!(cd.mul < ca.mul);
+        assert!(cd.cmp < cf.cmp);
+        // Fig. 11b: ascend ≈ flash2 minus the comparisons.
+        assert!(ca.cmp < cf.cmp);
+    }
+
+    #[test]
+    fn stagework_defaults_sane() {
+        let w = StageWork::new(4, 100, 8, 32, 0.25);
+        assert_eq!(w.keep, 25);
+        assert!((w.union_ratio - 0.375).abs() < 1e-12);
+        let w2 = StageWork::new(4, 100, 8, 32, 0.9);
+        assert_eq!(w2.union_ratio, 1.0);
+    }
+}

@@ -1,0 +1,157 @@
+//! The Type I/II/III attention-row taxonomy of Fig. 9.
+//!
+//! * **Type I** — a few highly dominant tokens (sharp spike; the rest far
+//!   below). Common in ViT/GPT/LLaMA (~22%).
+//! * **Type II** — large tokens evenly distributed across regions (~73%,
+//!   the dominant case; the reason local maxima stand in for global ones).
+//! * **Type III** — large tokens concentrated in one region (negligible,
+//!   →0 in GPT-2/LLaMA).
+//!
+//! The classifier mirrors how the paper *uses* the taxonomy: it looks at
+//! where the top-k mass sits relative to the sub-segment structure SADS
+//! partitions a row into.
+
+/// Distribution type of one attention row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DistType {
+    TypeI,
+    TypeII,
+    TypeIII,
+}
+
+/// Classification parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ClassifyParams {
+    /// Number of regions the row is partitioned into (matches SADS n).
+    pub regions: usize,
+    /// Fraction of the row treated as "large" tokens (top-k ratio).
+    pub top_fraction: f64,
+    /// Softmax-mass share above which the few leaders count as dominant.
+    pub dominance_mass: f64,
+    /// How many leaders may carry the dominant mass for Type I.
+    pub dominant_leaders: usize,
+    /// Fraction of large tokens inside one region that makes it Type III.
+    pub concentration: f64,
+}
+
+impl Default for ClassifyParams {
+    fn default() -> Self {
+        ClassifyParams {
+            regions: 4,
+            top_fraction: 0.1,
+            dominance_mass: 0.5,
+            dominant_leaders: 4,
+            concentration: 0.7,
+        }
+    }
+}
+
+/// Classify one attention-score row (pre-softmax logits).
+pub fn classify_row(row: &[f32], p: &ClassifyParams) -> DistType {
+    let s = row.len();
+    assert!(s >= p.regions, "row shorter than region count");
+    let k = ((s as f64 * p.top_fraction).ceil() as usize).clamp(1, s);
+
+    // Softmax mass of the leaders (numerically stable).
+    let top = crate::tensor::topk_indices(row, k);
+    let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let total: f64 = row.iter().map(|&x| ((x - m) as f64).exp()).sum();
+    let leaders = p.dominant_leaders.min(top.len());
+    let leader_mass: f64 =
+        top[..leaders].iter().map(|&j| ((row[j] - m) as f64).exp()).sum::<f64>() / total;
+
+    // Type I: a handful of tokens carry most of the softmax mass.
+    if leader_mass >= p.dominance_mass {
+        return DistType::TypeI;
+    }
+
+    // Count large tokens per region.
+    let region_len = s.div_ceil(p.regions);
+    let mut counts = vec![0usize; p.regions];
+    for &j in &top {
+        counts[(j / region_len).min(p.regions - 1)] += 1;
+    }
+    let max_region = counts.iter().copied().max().unwrap_or(0);
+
+    // Type III: large tokens pile into one region.
+    if max_region as f64 >= p.concentration * k as f64 {
+        return DistType::TypeIII;
+    }
+    DistType::TypeII
+}
+
+/// Fractions of each type over a set of rows — the Fig. 9 statistic.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TypeMix {
+    pub type1: f64,
+    pub type2: f64,
+    pub type3: f64,
+}
+
+impl TypeMix {
+    pub fn of(rows: &[Vec<f32>], p: &ClassifyParams) -> TypeMix {
+        let mut c = [0usize; 3];
+        for r in rows {
+            match classify_row(r, p) {
+                DistType::TypeI => c[0] += 1,
+                DistType::TypeII => c[1] += 1,
+                DistType::TypeIII => c[2] += 1,
+            }
+        }
+        let n = rows.len().max(1) as f64;
+        TypeMix { type1: c[0] as f64 / n, type2: c[1] as f64 / n, type3: c[2] as f64 / n }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn spike_row_is_type1() {
+        let mut row = vec![0.0f32; 128];
+        row[10] = 12.0;
+        row[90] = 11.0;
+        assert_eq!(classify_row(&row, &ClassifyParams::default()), DistType::TypeI);
+    }
+
+    #[test]
+    fn dispersed_row_is_type2() {
+        // Moderately large tokens in every region, none dominant.
+        let mut rng = Rng::new(1);
+        let mut row: Vec<f32> = (0..128).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+        for region in 0..4 {
+            for i in 0..4 {
+                row[region * 32 + i * 7] = 3.0 + 0.1 * i as f32;
+            }
+        }
+        assert_eq!(classify_row(&row, &ClassifyParams::default()), DistType::TypeII);
+    }
+
+    #[test]
+    fn concentrated_row_is_type3() {
+        let mut rng = Rng::new(2);
+        let mut row: Vec<f32> = (0..128).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+        // All large tokens in region 2, many of them (so no Type-I spike).
+        for i in 0..13 {
+            row[64 + i * 2] = 4.0 + 0.05 * i as f32;
+        }
+        assert_eq!(classify_row(&row, &ClassifyParams::default()), DistType::TypeIII);
+    }
+
+    #[test]
+    fn mix_sums_to_one() {
+        let mut rng = Rng::new(3);
+        let rows: Vec<Vec<f32>> =
+            (0..50).map(|_| (0..64).map(|_| rng.normal_f32(0.0, 1.0)).collect()).collect();
+        let mix = TypeMix::of(&rows, &ClassifyParams::default());
+        assert!((mix.type1 + mix.type2 + mix.type3 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "row shorter")]
+    fn too_short_rows_rejected() {
+        classify_row(&[1.0, 2.0], &ClassifyParams::default());
+    }
+}

@@ -1,0 +1,182 @@
+//! Design-space exploration over the SADS sub-segment count (Appendix A).
+//!
+//! The trade-off (end of Sec. IV-C): smaller sub-segments `S_i` (more
+//! segments n) cut sorting comparisons but fragment SU-FA's tiles — each
+//! segment boundary forces a partial tile, adding exponential-unit work and
+//! synchronization — and hurt selection recall. The DSE minimizes
+//!
+//! `J(n) = α · C_sort(n) + β · C_sufa(n) + λ · (1 − recall(n))`
+//!
+//! where `C_sort` is measured by running SADS on sample rows, `C_sufa`
+//! counts the fragmented-tile exponential work, and recall is measured
+//! against the exact top-k. A successive-halving grid search (the paper's
+//! strategy) spends few sample rows on obviously-bad candidates and
+//! refines the survivors.
+
+use super::topk::{sads_topk, SadsParams};
+use crate::arith::{EquivWeights, OpCounter};
+use crate::tensor::topk_indices;
+use crate::util::ceil_div;
+
+/// DSE objective weights; α/β follow the paper's per-model settings
+/// (e.g. 0.4/0.42 for GPT-2).
+#[derive(Clone, Copy, Debug)]
+pub struct DseWeights {
+    pub alpha: f64,
+    pub beta: f64,
+    /// Recall-loss penalty; large enough that accuracy dominates ties.
+    pub lambda: f64,
+}
+
+impl Default for DseWeights {
+    fn default() -> Self {
+        DseWeights { alpha: 0.4, beta: 0.42, lambda: 1e6 }
+    }
+}
+
+/// One evaluated candidate.
+#[derive(Clone, Debug)]
+pub struct DseCandidate {
+    pub segments: usize,
+    pub cost_sort: f64,
+    pub cost_sufa: f64,
+    pub recall: f64,
+    pub objective: f64,
+}
+
+/// Result of the exploration.
+#[derive(Clone, Debug)]
+pub struct DseResult {
+    pub best: DseCandidate,
+    pub evaluated: Vec<DseCandidate>,
+}
+
+/// Evaluate one segment count on a set of sample rows.
+fn evaluate(
+    rows: &[Vec<f32>],
+    k_ratio: f64,
+    radius: f32,
+    segments: usize,
+    sufa_bc: usize,
+    w: &DseWeights,
+) -> DseCandidate {
+    let ew = EquivWeights::default();
+    let mut cost_sort = 0.0;
+    let mut cost_sufa = 0.0;
+    let mut recall_acc = 0.0;
+    for row in rows {
+        let s = row.len();
+        let k = ((s as f64 * k_ratio).round() as usize).clamp(1, s);
+        let mut c = OpCounter::new();
+        let (sel, _) = sads_topk(row, k, &SadsParams { segments, radius }, &mut c);
+        cost_sort += c.equivalent_adds(&ew);
+
+        // SU-FA fragmentation: each segment's winners tile independently
+        // (segments sync at their boundaries), so the tile count is
+        // n · ⌈(k/n)/B_c⌉ instead of ⌈k/B_c⌉; every extra tile costs one
+        // boundary rescale (exp + add) worth of work.
+        let per_seg = ceil_div(k, segments);
+        let tiles = segments * ceil_div(per_seg, sufa_bc);
+        let ideal_tiles = ceil_div(k, sufa_bc);
+        cost_sufa += (tiles - ideal_tiles.min(tiles)) as f64 * (ew.exp + ew.add);
+
+        let truth = topk_indices(row, k);
+        recall_acc += super::hitrate::hit_rate(&sel, &truth);
+    }
+    let n = rows.len().max(1) as f64;
+    let (cost_sort, cost_sufa, recall) = (cost_sort / n, cost_sufa / n, recall_acc / n);
+    let objective = w.alpha * cost_sort + w.beta * cost_sufa + w.lambda * (1.0 - recall);
+    DseCandidate { segments, cost_sort, cost_sufa, recall, objective }
+}
+
+/// Successive-halving DSE: start with all candidate segment counts on a
+/// small row sample; halve the candidate set on progressively larger
+/// samples until one winner remains.
+pub fn explore_segments(
+    sample_rows: &[Vec<f32>],
+    k_ratio: f64,
+    radius: f32,
+    sufa_bc: usize,
+    candidates: &[usize],
+    w: &DseWeights,
+) -> DseResult {
+    assert!(!sample_rows.is_empty() && !candidates.is_empty());
+    let mut live: Vec<usize> = candidates.to_vec();
+    let mut all: Vec<DseCandidate> = Vec::new();
+    let mut budget = (sample_rows.len() / 4).max(1);
+
+    while live.len() > 1 && budget <= sample_rows.len() {
+        let rows = &sample_rows[..budget];
+        let mut scored: Vec<DseCandidate> = live
+            .iter()
+            .map(|&n| evaluate(rows, k_ratio, radius, n, sufa_bc, w))
+            .collect();
+        scored.sort_by(|a, b| a.objective.partial_cmp(&b.objective).unwrap());
+        let keep = ceil_div(scored.len(), 2);
+        live = scored[..keep].iter().map(|c| c.segments).collect();
+        all.extend(scored);
+        if budget == sample_rows.len() {
+            break;
+        }
+        budget = (budget * 2).min(sample_rows.len());
+    }
+
+    // Final full-sample evaluation of the survivor(s).
+    let mut finals: Vec<DseCandidate> = live
+        .iter()
+        .map(|&n| evaluate(sample_rows, k_ratio, radius, n, sufa_bc, w))
+        .collect();
+    finals.sort_by(|a, b| a.objective.partial_cmp(&b.objective).unwrap());
+    let best = finals[0].clone();
+    all.extend(finals);
+    DseResult { best, evaluated: all }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sample(n_rows: usize, s: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n_rows).map(|_| (0..s).map(|_| rng.normal_f32(0.0, 2.0)).collect()).collect()
+    }
+
+    #[test]
+    fn picks_a_candidate_with_high_recall() {
+        let rows = sample(32, 512, 1);
+        let r = explore_segments(&rows, 0.2, 5.0, 16, &[1, 2, 4, 8, 16], &DseWeights::default());
+        assert!(r.best.recall > 0.85, "best recall {}", r.best.recall);
+        assert!([1, 2, 4, 8, 16].contains(&r.best.segments));
+    }
+
+    #[test]
+    fn more_segments_cheaper_sorting_in_eval() {
+        let rows = sample(16, 1024, 2);
+        let w = DseWeights::default();
+        let c1 = evaluate(&rows, 0.25, 5.0, 1, 16, &w);
+        let c8 = evaluate(&rows, 0.25, 5.0, 8, 16, &w);
+        assert!(c8.cost_sort < c1.cost_sort);
+        // ...but fragments SU-FA more.
+        assert!(c8.cost_sufa >= c1.cost_sufa);
+    }
+
+    #[test]
+    fn lambda_dominates_when_recall_collapses() {
+        // With a tiny radius, many segments lose recall; a huge λ must
+        // push the DSE towards fewer segments than a λ=0 run would pick.
+        let rows = sample(24, 512, 3);
+        let strict =
+            explore_segments(&rows, 0.2, 0.5, 16, &[1, 4, 16, 64], &DseWeights { lambda: 1e9, ..Default::default() });
+        let loose =
+            explore_segments(&rows, 0.2, 0.5, 16, &[1, 4, 16, 64], &DseWeights { lambda: 0.0, ..Default::default() });
+        assert!(strict.best.recall >= loose.best.recall);
+    }
+
+    #[test]
+    fn evaluated_log_is_nonempty_and_sorted_runs_exist() {
+        let rows = sample(8, 256, 4);
+        let r = explore_segments(&rows, 0.2, 5.0, 16, &[2, 4], &DseWeights::default());
+        assert!(!r.evaluated.is_empty());
+    }
+}

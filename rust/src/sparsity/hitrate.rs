@@ -1,0 +1,116 @@
+//! Predicted-vs-true top-k hit-rate analysis (Fig. 17a).
+//!
+//! The hit rate of a predictor at ratio `k` is
+//! `|predicted top-k ∩ true top-k| / k`, averaged over rows. Fig. 17
+//! profiles it layer-by-layer; the workload generator reproduces the
+//! paper's depth trend (deeper layers → more separable scores → higher
+//! hit rate) by sharpening the score distribution with depth.
+
+use crate::tensor::{topk_indices, Mat};
+
+/// Hit rate between two index sets (order-insensitive).
+pub fn hit_rate(predicted: &[usize], truth: &[usize]) -> f64 {
+    if truth.is_empty() {
+        return 1.0;
+    }
+    let hits = truth.iter().filter(|t| predicted.contains(t)).count();
+    hits as f64 / truth.len() as f64
+}
+
+/// Average top-k hit rate between an estimated and a true score matrix.
+pub fn matrix_hit_rate(estimated: &Mat, exact: &Mat, k: usize) -> f64 {
+    assert_eq!((estimated.rows, estimated.cols), (exact.rows, exact.cols));
+    let mut acc = 0.0;
+    for i in 0..exact.rows {
+        let p = topk_indices(estimated.row(i), k);
+        let t = topk_indices(exact.row(i), k);
+        acc += hit_rate(&p, &t);
+    }
+    acc / exact.rows as f64
+}
+
+/// Output-level error induced by replacing the true top-k with the
+/// predicted top-k: relative Frobenius error between masked-attention
+/// outputs. This is the link from hit rate to task accuracy the paper's
+/// Fig. 17(b) rests on.
+pub fn selection_output_error(
+    inp: &crate::attention::AttnInputs,
+    predicted: &crate::attention::Selection,
+    truth: &crate::attention::Selection,
+) -> f32 {
+    let po = crate::attention::masked_attention_oracle(inp, predicted);
+    let to = crate::attention::masked_attention_oracle(inp, truth);
+    po.rel_err(&to)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{AttnInputs, Selection};
+    use crate::util::Rng;
+
+    #[test]
+    fn identical_sets_hit_1() {
+        assert_eq!(hit_rate(&[1, 2, 3], &[3, 2, 1]), 1.0);
+        assert_eq!(hit_rate(&[], &[]), 1.0);
+    }
+
+    #[test]
+    fn disjoint_sets_hit_0() {
+        assert_eq!(hit_rate(&[1, 2], &[3, 4]), 0.0);
+    }
+
+    #[test]
+    fn partial_overlap() {
+        assert!((hit_rate(&[1, 2, 3, 4], &[3, 4, 5, 6]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matrix_hit_rate_of_exact_is_1() {
+        let mut rng = Rng::new(1);
+        let m = Mat::randn(6, 40, 1.0, &mut rng);
+        assert_eq!(matrix_hit_rate(&m, &m, 8), 1.0);
+    }
+
+    #[test]
+    fn noisier_estimates_hit_less() {
+        let mut rng = Rng::new(2);
+        let exact = Mat::randn(16, 128, 1.0, &mut rng);
+        let jitter = |sigma: f32, rng: &mut Rng| {
+            Mat::from_vec(
+                exact.rows,
+                exact.cols,
+                exact.data.iter().map(|&x| x + rng.normal_f32(0.0, sigma)).collect(),
+            )
+        };
+        let mild = jitter(0.1, &mut rng);
+        let harsh = jitter(2.0, &mut rng);
+        let hm = matrix_hit_rate(&mild, &exact, 16);
+        let hh = matrix_hit_rate(&harsh, &exact, 16);
+        assert!(hm > hh, "mild {hm} !> harsh {hh}");
+        assert!(hm > 0.8);
+    }
+
+    #[test]
+    fn good_selection_means_small_output_error() {
+        let mut rng = Rng::new(3);
+        let q = Mat::randn(4, 16, 1.0, &mut rng);
+        let k = Mat::randn(64, 16, 1.0, &mut rng);
+        let v = Mat::randn(64, 16, 1.0, &mut rng);
+        let inp = AttnInputs::new(&q, &k, &v);
+        let truth = {
+            let full = crate::attention::sufa::sort_selection_by_true_scores(
+                &inp,
+                &Selection::full(4, 64),
+            );
+            Selection { rows: full.rows.iter().map(|r| r[..16].to_vec()).collect() }
+        };
+        // Identical selection → zero error.
+        assert_eq!(selection_output_error(&inp, &truth, &truth), 0.0);
+        // Dropping to the *bottom* 16 keys → large error.
+        let full =
+            crate::attention::sufa::sort_selection_by_true_scores(&inp, &Selection::full(4, 64));
+        let bad = Selection { rows: full.rows.iter().map(|r| r[48..].to_vec()).collect() };
+        assert!(selection_output_error(&inp, &bad, &truth) > 0.2);
+    }
+}

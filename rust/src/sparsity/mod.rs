@@ -1,0 +1,25 @@
+//! The dynamic-sparsity pipeline: *pre-compute* (prediction) and *top-k*
+//! stages, plus the analyses built on them.
+//!
+//! * [`predictor`] — cross-phase DLZS prediction (Sec. IV-A): estimate K
+//!   from X and the pre-converted LZ(W_k), then estimate Â with LZ-encoded
+//!   Q; SLZS and low-bit-multiply baselines for comparison.
+//! * [`topk`] — the top-k stage: vanilla per-row selection (O(S·S·k)) and
+//!   SADS distributed sorting with sphere-radius early termination
+//!   (Sec. IV-B), both with comparison accounting.
+//! * [`distribution`] — the Type I/II/III row-distribution taxonomy of
+//!   Fig. 9 and its classifier.
+//! * [`hitrate`] — predicted-vs-true top-k hit-rate analysis (Fig. 17).
+//! * [`dse`] — the Appendix-A design-space exploration over sub-segment
+//!   size and top-k ratio.
+
+pub mod distribution;
+pub mod dse;
+pub mod hitrate;
+pub mod predictor;
+pub mod topk;
+
+pub use distribution::{classify_row, DistType};
+pub use hitrate::hit_rate;
+pub use predictor::{PredictScheme, Predictor};
+pub use topk::{sads_topk, vanilla_topk, SadsParams, SadsStats};

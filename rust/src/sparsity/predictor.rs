@@ -1,0 +1,286 @@
+//! The *pre-compute* stage: estimating the attention matrix Â cheaply.
+//!
+//! Cross-phase DLZS (Fig. 8a):
+//!  * **Phase 1.1 (Key prediction)** — `K̂ = X · Ŵ_k` where `W_k` was
+//!    pre-converted to LZ format offline; the datapath shifts X by
+//!    `W − LZ(W_k)` — zero online conversion cost for the weights.
+//!  * **Phase 1.2 (Attention prediction)** — `Â = Q̂ · K̂ᵀ` where **Q** (not
+//!    K̂) is LZ-encoded, so the phase-1.1 estimation error in K̂ is not
+//!    compounded by a second leading-zero truncation of the same values.
+//!
+//! Baselines: SLZS (both operands LZ-encoded, as FACT [9]) and a low-bit
+//! (4-bit MSB) multiply predictor (the ablation baseline of Fig. 18a).
+
+use crate::arith::dlzs::{dlzs_mul, slzs_mul};
+use crate::arith::{IntBits, LzCode, OpCounter, OpKind, QuantMat};
+use crate::tensor::Mat;
+
+/// Prediction arithmetic scheme.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PredictScheme {
+    /// Differential LZ: encode one operand only (the paper's scheme).
+    Dlzs,
+    /// Symmetric LZ: encode both operands (FACT-style baseline).
+    Slzs,
+    /// Low-precision multiply (4-bit MSB), no log-domain approximation.
+    LowBitMul,
+}
+
+/// Configured predictor for the pre-compute stage.
+#[derive(Clone, Debug)]
+pub struct Predictor {
+    pub scheme: PredictScheme,
+    /// Quantized magnitude bitwidth W of the prediction datapath.
+    pub w: u32,
+}
+
+impl Predictor {
+    pub fn new(scheme: PredictScheme, w: u32) -> Predictor {
+        Predictor { scheme, w }
+    }
+
+    /// The paper's default: DLZS on an 8-bit (W = 7) prediction path.
+    pub fn star_default() -> Predictor {
+        Predictor::new(PredictScheme::Dlzs, 7)
+    }
+
+    fn bits(&self) -> IntBits {
+        match self.w {
+            0..=3 => IntBits::Int4,
+            4..=7 => IntBits::Int8,
+            _ => IntBits::Int16,
+        }
+    }
+
+    /// Estimate `a · bᵀ` (a: [m, d], b: [n, d]) with the configured scheme.
+    /// Returns scores in the same scale as the exact product so downstream
+    /// top-k thresholds are comparable across schemes.
+    pub fn approx_scores(&self, a: &Mat, b: &Mat, c: &mut OpCounter) -> Mat {
+        let bits = self.bits();
+        let qa = QuantMat::quantize(a, bits);
+        let qb = QuantMat::quantize(b, bits);
+        let (m, n, d) = (a.rows, b.rows, a.cols);
+        assert_eq!(a.cols, b.cols);
+        let scale = qa.scale * qb.scale;
+        let mut out = Mat::zeros(m, n);
+
+        match self.scheme {
+            PredictScheme::Dlzs => {
+                // Differential: LZ-encode ONE side (the `a` side, playing the
+                // role of Q in phase 1.2). One LZ encode per element of a.
+                let a_codes: Vec<LzCode> =
+                    qa.q.iter().map(|&x| LzCode::encode(x, self.w)).collect();
+                c.tally(OpKind::LzEncode, (m * d) as u64);
+                // Per product: one shift, one add (accumulate).
+                c.tally(OpKind::Shift, (m * n * d) as u64);
+                c.tally(OpKind::Add, (m * n * d) as u64);
+                for i in 0..m {
+                    for j in 0..n {
+                        let mut acc = 0i64;
+                        for p in 0..d {
+                            acc += dlzs_mul(qb.at(j, p), a_codes[i * d + p]);
+                        }
+                        *out.at_mut(i, j) = acc as f32 * scale;
+                    }
+                }
+                // Traffic: DLZS loads the compact LZ codes (~4+1 bits) for
+                // the encoded side instead of full W+1-bit operands.
+                c.sram((m * d) as u64); // ≈1 byte/code
+                c.sram((n * d * 2) as u64);
+            }
+            PredictScheme::Slzs => {
+                let a_codes: Vec<LzCode> =
+                    qa.q.iter().map(|&x| LzCode::encode(x, self.w)).collect();
+                let b_codes: Vec<LzCode> =
+                    qb.q.iter().map(|&x| LzCode::encode(x, self.w)).collect();
+                // Symmetric: both operand sets pay conversion.
+                c.tally(OpKind::LzEncode, ((m + n) * d) as u64);
+                c.tally(OpKind::Shift, (m * n * d) as u64);
+                c.tally(OpKind::Add, (m * n * d) as u64);
+                for i in 0..m {
+                    for j in 0..n {
+                        let mut acc = 0i64;
+                        for p in 0..d {
+                            acc += slzs_mul(a_codes[i * d + p], b_codes[j * d + p]);
+                        }
+                        *out.at_mut(i, j) = acc as f32 * scale;
+                    }
+                }
+                // SLZS must fetch full-width operands for the encode step.
+                c.sram((m * d * 2) as u64);
+                c.sram((n * d * 2) as u64);
+            }
+            PredictScheme::LowBitMul => {
+                let ta = qa.truncate_to_msb(4.min(self.w));
+                let tb = qb.truncate_to_msb(4.min(self.w));
+                c.tally(OpKind::Mul, (m * n * d) as u64);
+                c.tally(OpKind::Add, (m * n * d) as u64);
+                for i in 0..m {
+                    for j in 0..n {
+                        let mut acc = 0i64;
+                        for p in 0..d {
+                            acc += ta.at(i, p) as i64 * tb.at(j, p) as i64;
+                        }
+                        *out.at_mut(i, j) = acc as f32 * scale;
+                    }
+                }
+                c.sram((m * d * 2) as u64);
+                c.sram((n * d * 2) as u64);
+            }
+        }
+        out
+    }
+
+    /// Cross-phase prediction (Fig. 8a): phase 1.1 estimates K̂ = X·W_k with
+    /// pre-converted LZ weights (no online conversion), phase 1.2 estimates
+    /// Â = Q·K̂ᵀ with LZ-encoded Q. Returns (K̂, Â).
+    pub fn cross_phase(
+        &self,
+        x: &Mat,  // [S, H_in]
+        wk: &Mat, // [H_in, d]
+        q: &Mat,  // [T, d]
+        c: &mut OpCounter,
+    ) -> (Mat, Mat) {
+        let bits = self.bits();
+        let (s, h) = (x.rows, x.cols);
+        let d = wk.cols;
+        assert_eq!(wk.rows, h);
+
+        let qx = QuantMat::quantize(x, bits);
+        let qw = QuantMat::quantize(wk, bits);
+        // W_k codes are produced OFFLINE: no LzEncode ops are charged here
+        // (cross-phase advantage #1) and only ~5-bit codes are loaded.
+        let w_codes: Vec<LzCode> = qw.q.iter().map(|&v| LzCode::encode(v, self.w)).collect();
+        c.sram((h * d) as u64); // compact code loads
+        c.sram((s * h * 2) as u64);
+
+        let mut khat = Mat::zeros(s, d);
+        c.tally(OpKind::Shift, (s * h * d) as u64);
+        c.tally(OpKind::Add, (s * h * d) as u64);
+        for i in 0..s {
+            for j in 0..d {
+                let mut acc = 0i64;
+                for p in 0..h {
+                    acc += dlzs_mul(qx.at(i, p), w_codes[p * d + j]);
+                }
+                *khat.at_mut(i, j) = acc as f32 * (qx.scale * qw.scale);
+            }
+        }
+
+        // Phase 1.2: LZ-encode Q (NOT K̂) to avoid compounding the phase-1.1
+        // approximation error (cross-phase advantage #2).
+        let ahat = self.approx_scores(q, &khat, c);
+        (khat, ahat)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::topk_indices;
+    use crate::util::Rng;
+
+    fn mats(seed: u64, m: usize, n: usize, d: usize) -> (Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        (Mat::randn(m, d, 1.0, &mut rng), Mat::randn(n, d, 1.0, &mut rng))
+    }
+
+    #[test]
+    fn dlzs_scores_correlate_with_exact() {
+        let (a, b) = mats(1, 16, 64, 32);
+        let exact = a.matmul(&b.transpose());
+        let mut c = OpCounter::new();
+        let est = Predictor::star_default().approx_scores(&a, &b, &mut c);
+        // Rank fidelity is what matters for top-k: check per-row hit rate.
+        let mut hits = 0usize;
+        let k = 16;
+        for i in 0..a.rows {
+            let te = topk_indices(exact.row(i), k);
+            let tp = topk_indices(est.row(i), k);
+            hits += te.iter().filter(|x| tp.contains(x)).count();
+        }
+        let rate = hits as f64 / (a.rows * k) as f64;
+        assert!(rate > 0.8, "dlzs top-k hit rate {rate}");
+    }
+
+    #[test]
+    fn dlzs_beats_slzs_on_hit_rate() {
+        let (a, b) = mats(2, 24, 96, 32);
+        let exact = a.matmul(&b.transpose());
+        let k = 19; // top-20%
+        let mut rate = |scheme| {
+            let mut c = OpCounter::new();
+            let est = Predictor::new(scheme, 7).approx_scores(&a, &b, &mut c);
+            let mut hits = 0usize;
+            for i in 0..a.rows {
+                let te = topk_indices(exact.row(i), k);
+                let tp = topk_indices(est.row(i), k);
+                hits += te.iter().filter(|x| tp.contains(x)).count();
+            }
+            hits as f64 / (a.rows * k) as f64
+        };
+        let d = rate(PredictScheme::Dlzs);
+        let s = rate(PredictScheme::Slzs);
+        assert!(d > s, "dlzs {d} !> slzs {s}");
+    }
+
+    #[test]
+    fn dlzs_is_multiplier_free() {
+        let (a, b) = mats(3, 4, 8, 16);
+        let mut c = OpCounter::new();
+        Predictor::star_default().approx_scores(&a, &b, &mut c);
+        assert_eq!(c.mul, 0);
+        assert!(c.shift > 0);
+        // Differential: encodes only the a-side.
+        assert_eq!(c.lz_encode, (4 * 16) as u64);
+    }
+
+    #[test]
+    fn slzs_pays_double_conversion() {
+        let (a, b) = mats(4, 4, 8, 16);
+        let mut cd = OpCounter::new();
+        let mut cs = OpCounter::new();
+        Predictor::new(PredictScheme::Dlzs, 7).approx_scores(&a, &b, &mut cd);
+        Predictor::new(PredictScheme::Slzs, 7).approx_scores(&a, &b, &mut cs);
+        assert_eq!(cs.lz_encode, ((4 + 8) * 16) as u64);
+        assert!(cd.lz_encode < cs.lz_encode);
+        // ...and heavier operand traffic (full-width loads for both sides).
+        assert!(cd.sram_bytes < cs.sram_bytes);
+    }
+
+    #[test]
+    fn cross_phase_produces_usable_khat_and_ahat() {
+        let mut rng = Rng::new(5);
+        let (s, h, d, t) = (48, 32, 16, 8);
+        let x = Mat::randn(s, h, 1.0, &mut rng);
+        let wk = Mat::randn(h, d, 0.3, &mut rng);
+        let q = Mat::randn(t, d, 1.0, &mut rng);
+        let k_true = x.matmul(&wk);
+        let a_true = q.matmul(&k_true.transpose());
+        let mut c = OpCounter::new();
+        let (khat, ahat) = Predictor::star_default().cross_phase(&x, &wk, &q, &mut c);
+        assert!(khat.rel_err(&k_true) < 0.5, "khat rel err {}", khat.rel_err(&k_true));
+        // Top-k fidelity of the end-to-end estimate.
+        let k = 12;
+        let mut hits = 0usize;
+        for i in 0..t {
+            let te = topk_indices(a_true.row(i), k);
+            let tp = topk_indices(ahat.row(i), k);
+            hits += te.iter().filter(|x| tp.contains(x)).count();
+        }
+        let rate = hits as f64 / (t * k) as f64;
+        assert!(rate > 0.7, "cross-phase hit rate {rate}");
+        // Cross-phase charges no online conversion for W_k.
+        assert_eq!(c.lz_encode, (t * d) as u64);
+        assert_eq!(c.mul, 0);
+    }
+
+    #[test]
+    fn lowbit_baseline_uses_multipliers() {
+        let (a, b) = mats(6, 4, 8, 16);
+        let mut c = OpCounter::new();
+        Predictor::new(PredictScheme::LowBitMul, 7).approx_scores(&a, &b, &mut c);
+        assert!(c.mul > 0);
+        assert_eq!(c.shift, 0);
+    }
+}

@@ -1,0 +1,277 @@
+//! The *top-k* stage: selecting the vital Q–K pairs from the estimated Â.
+//!
+//! * [`vanilla_topk`] — the baseline most DS accelerators use: per-row
+//!   selection where extracting each of the `S·k` winners scans the whole
+//!   remaining row — O(S·S·k) comparisons per row (Sec. III-A(1)).
+//! * [`sads_topk`] — Sphere-search Aided Distributed Sorting (Sec. IV-B):
+//!   the row splits into `n` sub-segments; each finds its local max
+//!   (`len−1` comparisons), eliminates every element with `Δ = max − x > r`
+//!   (one comparison each — justified by Eq. 5: softmax(x) < e^−Δ), and
+//!   runs the selection passes only over the surviving ρ fraction:
+//!   O(S·S·k·ρ/n) total. Survivor lists merge into one descending order for
+//!   SU-FA.
+
+use crate::arith::{OpCounter, OpKind};
+
+/// SADS configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SadsParams {
+    /// Number of sub-segments n.
+    pub segments: usize,
+    /// Sphere radius r (score units); elements with max − x > r are pruned.
+    pub radius: f32,
+}
+
+impl Default for SadsParams {
+    fn default() -> Self {
+        SadsParams { segments: 4, radius: 5.0 }
+    }
+}
+
+/// Statistics from one SADS row pass.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SadsStats {
+    /// Fraction of elements surviving the sphere filter (ρ).
+    pub rho: f64,
+    /// Comparisons spent (same number tallied into the OpCounter).
+    pub comparisons: u64,
+}
+
+/// Baseline per-row top-k: repeated max-extraction scans (what "selecting
+/// each element requires O(S) operations" describes). Returns indices in
+/// descending score order.
+pub fn vanilla_topk(row: &[f32], k: usize, c: &mut OpCounter) -> Vec<usize> {
+    let s = row.len();
+    let k = k.min(s);
+    let mut taken = vec![false; s];
+    let mut out = Vec::with_capacity(k);
+    for _ in 0..k {
+        let mut best = usize::MAX;
+        let mut best_v = f32::NEG_INFINITY;
+        for (j, &x) in row.iter().enumerate() {
+            if !taken[j] {
+                c.tally(OpKind::Cmp, 1);
+                if x > best_v {
+                    best_v = x;
+                    best = j;
+                }
+            }
+        }
+        taken[best] = true;
+        out.push(best);
+    }
+    out
+}
+
+/// SADS: distributed per-segment selection with sphere-radius early
+/// termination. Returns (indices in descending estimated-score order,
+/// stats). Each segment contributes ⌈k/n⌉ winners (clipped to its size);
+/// the result is truncated to `k`.
+pub fn sads_topk(
+    row: &[f32],
+    k: usize,
+    p: &SadsParams,
+    c: &mut OpCounter,
+) -> (Vec<usize>, SadsStats) {
+    let s = row.len();
+    let k = k.min(s);
+    if k == 0 || s == 0 {
+        return (Vec::new(), SadsStats::default());
+    }
+    let n = p.segments.max(1).min(s);
+    let seg_len = s.div_ceil(n);
+    let per_seg = k.div_ceil(n);
+
+    let mut cmp_count = 0u64;
+    let mut survivors_total = 0usize;
+    // Per-segment winners, each list already descending.
+    let mut seg_lists: Vec<Vec<(f32, usize)>> = Vec::with_capacity(n);
+
+    for seg in 0..n {
+        let lo = seg * seg_len;
+        if lo >= s {
+            break;
+        }
+        let hi = (lo + seg_len).min(s);
+        let len = hi - lo;
+
+        // 1) Local max: len − 1 comparisons.
+        let mut mx = f32::NEG_INFINITY;
+        for &x in &row[lo..hi] {
+            if x > mx {
+                mx = x;
+            }
+        }
+        cmp_count += (len - 1) as u64;
+
+        // 2) Sphere filter: one comparison per element against (max − r).
+        let floor = mx - p.radius;
+        let feasible: Vec<usize> = (lo..hi).filter(|&j| row[j] >= floor).collect();
+        cmp_count += len as u64;
+        survivors_total += feasible.len();
+
+        // 3) Selection passes restricted to the feasible region.
+        let take = per_seg.min(feasible.len());
+        let mut taken = vec![false; feasible.len()];
+        let mut winners = Vec::with_capacity(take);
+        for _ in 0..take {
+            let mut bi = usize::MAX;
+            let mut bv = f32::NEG_INFINITY;
+            for (fi, &j) in feasible.iter().enumerate() {
+                if !taken[fi] {
+                    cmp_count += 1;
+                    if row[j] > bv {
+                        bv = row[j];
+                        bi = fi;
+                    }
+                }
+            }
+            taken[bi] = true;
+            winners.push((row[feasible[bi]], feasible[bi]));
+        }
+        seg_lists.push(winners);
+    }
+
+    // 4) n-way merge of descending lists → global descending order (the
+    //    order SU-FA consumes). One comparison per output per live list.
+    let mut cursors = vec![0usize; seg_lists.len()];
+    let mut merged: Vec<usize> = Vec::with_capacity(k);
+    while merged.len() < k {
+        let mut best_list = usize::MAX;
+        let mut best_v = f32::NEG_INFINITY;
+        for (li, list) in seg_lists.iter().enumerate() {
+            if cursors[li] < list.len() {
+                cmp_count += 1;
+                if list[cursors[li]].0 > best_v {
+                    best_v = list[cursors[li]].0;
+                    best_list = li;
+                }
+            }
+        }
+        if best_list == usize::MAX {
+            break; // all lists exhausted (aggressive pruning)
+        }
+        merged.push(seg_lists[best_list][cursors[best_list]].1);
+        cursors[best_list] += 1;
+    }
+
+    c.tally(OpKind::Cmp, cmp_count);
+    let stats = SadsStats { rho: survivors_total as f64 / s as f64, comparisons: cmp_count };
+    (merged, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::topk_indices;
+    use crate::util::Rng;
+
+    fn rand_row(s: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..s).map(|_| rng.normal_f32(0.0, 2.0)).collect()
+    }
+
+    #[test]
+    fn vanilla_matches_oracle() {
+        let row = rand_row(200, 1);
+        let mut c = OpCounter::new();
+        let got = vanilla_topk(&row, 20, &mut c);
+        assert_eq!(got, topk_indices(&row, 20));
+        // Comparison count ≈ k·S (minus the extracted ones).
+        assert!(c.cmp as usize >= 20 * (200 - 20));
+    }
+
+    #[test]
+    fn sads_descending_order() {
+        let row = rand_row(256, 2);
+        let mut c = OpCounter::new();
+        let (sel, _) = sads_topk(&row, 32, &SadsParams::default(), &mut c);
+        for w in sel.windows(2) {
+            assert!(row[w[0]] >= row[w[1]], "not descending");
+        }
+        assert_eq!(sel.len(), 32);
+        let mut uniq = sel.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 32, "duplicates in selection");
+    }
+
+    #[test]
+    fn sads_recall_high_on_dispersed_rows() {
+        // Type-II-like rows (dispersed maxima) are SADS's design target.
+        let mut total_hits = 0usize;
+        let mut total = 0usize;
+        for seed in 0..10u64 {
+            let row = rand_row(512, 100 + seed);
+            let k = 64;
+            let truth = topk_indices(&row, k);
+            let mut c = OpCounter::new();
+            let (sel, _) = sads_topk(&row, k, &SadsParams::default(), &mut c);
+            total_hits += truth.iter().filter(|t| sel.contains(t)).count();
+            total += k;
+        }
+        let recall = total_hits as f64 / total as f64;
+        assert!(recall > 0.85, "sads recall {recall}");
+    }
+
+    #[test]
+    fn sads_far_fewer_comparisons_than_vanilla() {
+        let row = rand_row(1024, 3);
+        let k = 256; // k-ratio 0.25, the paper's complexity example
+        let mut cv = OpCounter::new();
+        vanilla_topk(&row, k, &mut cv);
+        let mut cs = OpCounter::new();
+        let (_, stats) = sads_topk(&row, k, &SadsParams::default(), &mut cs);
+        let ratio = cs.cmp as f64 / cv.cmp as f64;
+        // Paper: ~10% of standard sorting for S=1024, n=4, k=0.25, ρ≈0.4.
+        assert!(ratio < 0.35, "sads/vanilla cmp ratio {ratio} (rho={})", stats.rho);
+    }
+
+    #[test]
+    fn radius_controls_rho() {
+        let row = rand_row(512, 4);
+        let mut c = OpCounter::new();
+        let (_, tight) = sads_topk(&row, 64, &SadsParams { segments: 4, radius: 1.0 }, &mut c);
+        let (_, loose) = sads_topk(&row, 64, &SadsParams { segments: 4, radius: 20.0 }, &mut c);
+        assert!(tight.rho < loose.rho);
+        assert!((loose.rho - 1.0).abs() < 1e-9, "radius 20σ keeps everything");
+    }
+
+    #[test]
+    fn more_segments_fewer_comparisons() {
+        let row = rand_row(1024, 5);
+        let mut cmp_for = |n: usize| {
+            let mut c = OpCounter::new();
+            sads_topk(&row, 128, &SadsParams { segments: n, radius: 5.0 }, &mut c);
+            c.cmp
+        };
+        let c2 = cmp_for(2);
+        let c8 = cmp_for(8);
+        assert!(c8 < c2, "n=8 ({c8}) !< n=2 ({c2})");
+    }
+
+    #[test]
+    fn aggressive_radius_may_underfill_but_never_panics() {
+        // A row with one huge spike: radius filters everything else.
+        let mut row = vec![0.0f32; 128];
+        row[7] = 100.0;
+        let mut c = OpCounter::new();
+        let (sel, stats) = sads_topk(&row, 32, &SadsParams { segments: 4, radius: 5.0 }, &mut c);
+        assert!(sel.contains(&7));
+        // Segments without the spike keep elements within r of their own
+        // local max (all zeros → all survive), so underfill need not occur;
+        // the spike's own segment prunes hard.
+        assert!(stats.rho <= 1.0);
+    }
+
+    #[test]
+    fn edge_cases() {
+        let mut c = OpCounter::new();
+        assert!(sads_topk(&[], 4, &SadsParams::default(), &mut c).0.is_empty());
+        let (one, _) = sads_topk(&[1.0], 4, &SadsParams::default(), &mut c);
+        assert_eq!(one, vec![0]);
+        let row = rand_row(16, 6);
+        let (all, _) = sads_topk(&row, 16, &SadsParams { segments: 4, radius: 1e9 }, &mut c);
+        assert_eq!(all.len(), 16);
+    }
+}

@@ -1,0 +1,227 @@
+//! 2D-mesh Network-on-Chip model (Table IV).
+//!
+//! Transaction-level: messages are routed dimension-order (X then Y);
+//! every directed link between adjacent routers has the Table IV
+//! bandwidth/latency; a *step* accumulates the bytes each link must carry
+//! and its serialization time is set by the most-loaded link (input-queued
+//! routers ⇒ a link is a serial resource) plus the hop latency of the
+//! longest path. DRAM sits on both vertical edges of the mesh
+//! (Fig. 13): a memory transaction travels over the NoC to the nearer
+//! edge and shares the total DRAM bandwidth with every other core.
+
+use crate::config::SpatialConfig;
+use std::collections::BTreeMap;
+
+/// Router coordinate (row-major).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Coord {
+    pub row: usize,
+    pub col: usize,
+}
+
+impl Coord {
+    pub fn manhattan(&self, other: &Coord) -> usize {
+        self.row.abs_diff(other.row) + self.col.abs_diff(other.col)
+    }
+}
+
+/// A directed link between two adjacent routers (node ids).
+pub type Link = (usize, usize);
+
+/// The mesh fabric.
+#[derive(Clone, Debug)]
+pub struct Mesh {
+    pub rows: usize,
+    pub cols: usize,
+    /// Per-link bandwidth, bytes/s.
+    pub link_bw: f64,
+    /// Per-hop latency, seconds.
+    pub hop_latency: f64,
+    /// Link energy, pJ/bit.
+    pub link_pj_per_bit: f64,
+}
+
+impl Mesh {
+    pub fn from_config(cfg: &SpatialConfig) -> Mesh {
+        Mesh {
+            rows: cfg.mesh_rows,
+            cols: cfg.mesh_cols,
+            link_bw: cfg.link_bw,
+            hop_latency: cfg.link_latency,
+            link_pj_per_bit: cfg.link_pj_per_bit,
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn id(&self, c: Coord) -> usize {
+        debug_assert!(c.row < self.rows && c.col < self.cols);
+        c.row * self.cols + c.col
+    }
+
+    pub fn coord(&self, id: usize) -> Coord {
+        debug_assert!(id < self.nodes());
+        Coord { row: id / self.cols, col: id % self.cols }
+    }
+
+    /// Dimension-order (X-first) route between two nodes, as a list of
+    /// directed links.
+    pub fn xy_route(&self, from: usize, to: usize) -> Vec<Link> {
+        let (a, b) = (self.coord(from), self.coord(to));
+        let mut links = Vec::with_capacity(a.manhattan(&b));
+        let mut cur = a;
+        while cur.col != b.col {
+            let next = Coord {
+                row: cur.row,
+                col: if b.col > cur.col { cur.col + 1 } else { cur.col - 1 },
+            };
+            links.push((self.id(cur), self.id(next)));
+            cur = next;
+        }
+        while cur.row != b.row {
+            let next = Coord {
+                row: if b.row > cur.row { cur.row + 1 } else { cur.row - 1 },
+                col: cur.col,
+            };
+            links.push((self.id(cur), self.id(next)));
+            cur = next;
+        }
+        links
+    }
+
+    /// Hops from a node to its nearer vertical DRAM edge (plus one hop
+    /// onto the memory controller).
+    pub fn hops_to_dram(&self, id: usize) -> usize {
+        let c = self.coord(id);
+        c.col.min(self.cols - 1 - c.col) + 1
+    }
+}
+
+/// Traffic accumulated over one communication step: bytes per directed
+/// link. Serialization time of the step is governed by the hottest link.
+#[derive(Clone, Debug, Default)]
+pub struct StepTraffic {
+    bytes_per_link: BTreeMap<Link, u64>,
+    /// Longest routed path in hops (sets the pipeline-fill latency).
+    max_hops: usize,
+    total_bytes_hops: u64,
+}
+
+impl StepTraffic {
+    pub fn new() -> StepTraffic {
+        StepTraffic::default()
+    }
+
+    /// Route `bytes` from `from` to `to` and accumulate on every link of
+    /// the path.
+    pub fn send(&mut self, mesh: &Mesh, from: usize, to: usize, bytes: u64) {
+        if from == to || bytes == 0 {
+            return;
+        }
+        let route = mesh.xy_route(from, to);
+        self.max_hops = self.max_hops.max(route.len());
+        for link in &route {
+            *self.bytes_per_link.entry(*link).or_insert(0) += bytes;
+            self.total_bytes_hops += bytes;
+        }
+    }
+
+    /// Bytes on the most-loaded link.
+    pub fn max_link_bytes(&self) -> u64 {
+        self.bytes_per_link.values().copied().max().unwrap_or(0)
+    }
+
+    /// Number of distinct links used.
+    pub fn links_used(&self) -> usize {
+        self.bytes_per_link.len()
+    }
+
+    /// Wall time of this step's communication: worst-link serialization
+    /// (wormhole flits stream, so hop latency is paid once per path) plus
+    /// the longest path's hop latency.
+    pub fn time(&self, mesh: &Mesh) -> f64 {
+        if self.bytes_per_link.is_empty() {
+            return 0.0;
+        }
+        self.max_link_bytes() as f64 / mesh.link_bw + self.max_hops as f64 * mesh.hop_latency
+    }
+
+    /// NoC energy of the step in joules (every byte pays per-hop energy).
+    pub fn energy_j(&self, mesh: &Mesh) -> f64 {
+        self.total_bytes_hops as f64 * 8.0 * mesh.link_pj_per_bit * 1e-12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mesh5() -> Mesh {
+        Mesh { rows: 5, cols: 5, link_bw: 250e9, hop_latency: 20e-9, link_pj_per_bit: 1.0 }
+    }
+
+    #[test]
+    fn id_coord_roundtrip() {
+        let m = mesh5();
+        for id in 0..m.nodes() {
+            assert_eq!(m.id(m.coord(id)), id);
+        }
+    }
+
+    #[test]
+    fn xy_route_goes_x_first() {
+        let m = mesh5();
+        let from = m.id(Coord { row: 0, col: 0 });
+        let to = m.id(Coord { row: 2, col: 3 });
+        let route = m.xy_route(from, to);
+        assert_eq!(route.len(), 5);
+        // First three hops move along the row (X), then two along Y.
+        assert_eq!(route[0], (0, 1));
+        assert_eq!(route[2], (2, 3));
+        assert_eq!(route[3], (3, 8));
+        // Each hop is between adjacent routers.
+        for (a, b) in &route {
+            assert_eq!(m.coord(*a).manhattan(&m.coord(*b)), 1);
+        }
+    }
+
+    #[test]
+    fn route_to_self_is_empty() {
+        let m = mesh5();
+        assert!(m.xy_route(7, 7).is_empty());
+    }
+
+    #[test]
+    fn contention_serializes_on_shared_link() {
+        let m = mesh5();
+        // Two flows sharing the (0,1)->(0,2) link vs two disjoint flows.
+        let mut shared = StepTraffic::new();
+        shared.send(&m, 0, 3, 1 << 20);
+        shared.send(&m, 1, 4, 1 << 20);
+        let mut disjoint = StepTraffic::new();
+        disjoint.send(&m, 0, 1, 1 << 20);
+        disjoint.send(&m, 5, 6, 1 << 20);
+        assert!(shared.time(&m) > disjoint.time(&m));
+        assert_eq!(disjoint.max_link_bytes(), 1 << 20);
+        assert_eq!(shared.max_link_bytes(), 2 << 20);
+    }
+
+    #[test]
+    fn dram_edge_distance() {
+        let m = mesh5();
+        assert_eq!(m.hops_to_dram(m.id(Coord { row: 2, col: 0 })), 1);
+        assert_eq!(m.hops_to_dram(m.id(Coord { row: 2, col: 2 })), 3);
+        assert_eq!(m.hops_to_dram(m.id(Coord { row: 2, col: 4 })), 1);
+    }
+
+    #[test]
+    fn energy_counts_hops() {
+        let m = mesh5();
+        let mut t = StepTraffic::new();
+        t.send(&m, 0, 2, 1000); // 2 hops
+        let expect = 2.0 * 1000.0 * 8.0 * 1.0 * 1e-12;
+        assert!((t.energy_j(&m) - expect).abs() < 1e-18);
+    }
+}

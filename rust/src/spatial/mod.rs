@@ -1,0 +1,31 @@
+//! The spatial (multi-core) extension of STAR: a 2D-mesh NoC of STAR
+//! cores running the DRAttention dataflow via the MRCA communication
+//! algorithm (Sec. V-B).
+//!
+//! * [`mesh`] — the 2D mesh Network-on-Chip: dimension-order (XY) routed,
+//!   input-queued routers modeled at transaction level with per-link
+//!   contention, plus edge-attached DRAM (Table IV).
+//! * [`mrca`] — Alg. 1, the Mesh-friendly Ring Communication Algorithm:
+//!   progress waves + reflux tides realize a logical ring on a physical
+//!   1D mesh without wrap-around links. Includes the correctness checker.
+//! * [`drattention`] — the Distributed Ring-flow Attention dataflow:
+//!   Q sub-blocks (plus running (m, l) softmax state) circulate; X/KV
+//!   stays column-resident; compute overlaps communication.
+//! * [`ring`] — the Ring-Attention (ICLR'23) baseline: KV circulates on a
+//!   logical ring naively mapped onto the mesh (wrap-around hop pays the
+//!   full mesh diameter), no topology awareness.
+//! * [`sim`] — the multi-core simulator composing a per-core model
+//!   (STAR / SpAtten / Simba) with a dataflow and the shared-DRAM NoC;
+//!   regenerates Fig. 23(b) and Fig. 24.
+
+pub mod drattention;
+pub mod mesh;
+pub mod mrca;
+pub mod ring;
+pub mod sim;
+
+pub use drattention::{drattention_run, DrAttentionReport};
+pub use mesh::{Coord, Mesh, StepTraffic};
+pub use mrca::{mrca_schedule, verify_schedule, Send, StepSends};
+pub use ring::{ring_attention_run, RingReport};
+pub use sim::{spatial_run, CoreKind, Dataflow, SpatialReport};

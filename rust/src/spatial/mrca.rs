@@ -1,0 +1,282 @@
+//! MRCA — Mesh-friendly Ring Communication Algorithm (Alg. 1).
+//!
+//! DRAttention needs ring-style circulation of Q chunks, but a physical
+//! 2D mesh has no wrap-around links. MRCA realizes a *logically
+//! equivalent* orchestration with neighbor-only transfers: **progress
+//! waves** spread chunks outward from their origin in both directions;
+//! at half time the transferred chunks are **replicated** locally, and
+//! **reflux tides** then carry the copies back so every CU computes
+//! against every chunk exactly once within N steps.
+//!
+//! The paper prints Alg. 1 for the 5-unit (odd) case, where replication
+//! happens at step ⌊N/2⌋+1. For even N the same formulas hold with the
+//! replication step at ⌈N/2⌉ — the two coincide for odd N, so we
+//! implement the unified rule (replication at ⌈N/2⌉; reflux sends for
+//! t > ⌊N/2⌋ except the replication step) and verify completeness for
+//! every N with [`verify_schedule`].
+//!
+//! CUs and chunks are 1-indexed (1..=N) to match the paper's notation.
+
+/// One chunk transfer: `src` forwards `chunk` to the adjacent `dest`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Send {
+    pub src: usize,
+    pub dest: usize,
+    pub chunk: usize,
+}
+
+/// The sends of one time step.
+#[derive(Clone, Debug, Default)]
+pub struct StepSends {
+    pub step: usize,
+    pub sends: Vec<Send>,
+    /// Sends at the replication step keep a local copy at the source.
+    pub replicate: bool,
+}
+
+/// Build the full N-step MRCA schedule for `n` CUs on a 1D mesh.
+pub fn mrca_schedule(n: usize) -> Vec<StepSends> {
+    assert!(n >= 1, "need at least one CU");
+    let half = n / 2; // ⌊N/2⌋
+    let rep_step = n.div_ceil(2); // ⌈N/2⌉: replication step
+    let mut steps = Vec::with_capacity(n);
+    for t in 1..=n {
+        let mut sends = Vec::new();
+        for src in 1..=n {
+            // Progress wave, upward (lines 4–6).
+            if t <= src && src < n {
+                sends.push(Send { src, dest: src + 1, chunk: src - t + 1 });
+            }
+            // Progress wave, downward (lines 7–9).
+            if 1 < src && src <= n - t + 1 {
+                sends.push(Send { src, dest: src - 1, chunk: src + t - 1 });
+            }
+            // Reflux tides (lines 10–19), except at the replication step.
+            if t > half && t != rep_step && n >= 2 {
+                if t - half <= src && src < t {
+                    sends.push(Send { src, dest: src + 1, chunk: src + n - t + 1 });
+                }
+                if n - t + 1 < src && src < n - t + 1 + half {
+                    // src + t − n − 1, ordered to stay in usize range
+                    // (the guard gives src + t > n + 1).
+                    sends.push(Send { src, dest: src - 1, chunk: src + t - n - 1 });
+                }
+            }
+        }
+        steps.push(StepSends { step: t, sends, replicate: t == rep_step });
+    }
+    steps
+}
+
+/// Result of checking a schedule.
+#[derive(Clone, Debug)]
+pub struct ScheduleCheck {
+    /// Every (CU, chunk) pair computed exactly once within N steps.
+    pub complete: bool,
+    /// Max chunks resident on any CU at any step.
+    pub max_resident: usize,
+    /// Max sends issued by one CU in one step (router port pressure).
+    pub max_sends_per_cu: usize,
+    /// Which chunk each CU computed at each step: `compute[t-1][cu-1]`.
+    pub compute: Vec<Vec<usize>>,
+}
+
+/// Simulate the schedule and verify the MRCA invariants:
+///
+/// 1. every transfer is between adjacent CUs,
+/// 2. a chunk is only sent by a CU that currently holds it,
+/// 3. each CU computes each chunk exactly once over the N steps
+///    (one chunk per step — the ring-equivalence property).
+///
+/// Residency model: a send moves the chunk (copy-and-drop) except at the
+/// replication step, where the source keeps a copy; a resident chunk is
+/// dropped once it has been computed here and has no future sends from
+/// this CU (this is what bounds storage).
+pub fn verify_schedule(n: usize, steps: &[StepSends]) -> Result<ScheduleCheck, String> {
+    let mut resident: Vec<Vec<bool>> = vec![vec![false; n + 1]; n + 1]; // [cu][chunk]
+    for cu in 1..=n {
+        resident[cu][cu] = true;
+    }
+    let mut computed: Vec<Vec<bool>> = vec![vec![false; n + 1]; n + 1];
+    let mut compute_log = Vec::with_capacity(n);
+    let mut max_resident = 1;
+    let mut max_sends_per_cu = 0;
+
+    for (ti, step) in steps.iter().enumerate() {
+        let t = ti + 1;
+        // -- validity of sends against current residency --
+        let mut sends_by_cu = vec![0usize; n + 1];
+        for s in &step.sends {
+            if s.src.abs_diff(s.dest) != 1 {
+                return Err(format!("step {t}: non-neighbor send {s:?}"));
+            }
+            if !(1..=n).contains(&s.chunk) {
+                return Err(format!("step {t}: chunk id out of range {s:?}"));
+            }
+            if !resident[s.src][s.chunk] {
+                return Err(format!("step {t}: {s:?} but chunk not resident at src"));
+            }
+            sends_by_cu[s.src] += 1;
+        }
+        max_sends_per_cu = max_sends_per_cu.max(sends_by_cu.iter().copied().max().unwrap_or(0));
+
+        // -- compute assignment: prefer a resident chunk that is leaving
+        //    and never returns to this CU --
+        let mut row = Vec::with_capacity(n);
+        for cu in 1..=n {
+            let cands: Vec<usize> =
+                (1..=n).filter(|&c| resident[cu][c] && !computed[cu][c]).collect();
+            let Some(&first) = cands.first() else {
+                return Err(format!("step {t}: CU{cu} has no uncomputed resident chunk"));
+            };
+            let outgoing: Vec<usize> =
+                step.sends.iter().filter(|s| s.src == cu).map(|s| s.chunk).collect();
+            let returns = |c: usize| {
+                steps[t..].iter().any(|st| st.sends.iter().any(|s| s.dest == cu && s.chunk == c))
+            };
+            let pick = cands
+                .iter()
+                .copied()
+                .find(|&c| outgoing.contains(&c) && !returns(c))
+                .unwrap_or(first);
+            computed[cu][pick] = true;
+            row.push(pick);
+        }
+        compute_log.push(row);
+
+        // -- apply the sends --
+        let snapshot = resident.clone();
+        for s in &step.sends {
+            if snapshot[s.src][s.chunk] {
+                resident[s.dest][s.chunk] = true;
+                if !step.replicate {
+                    resident[s.src][s.chunk] = false;
+                }
+            }
+        }
+        // -- drop dead chunks (computed here, never sent from here again) --
+        for cu in 1..=n {
+            for c in 1..=n {
+                if resident[cu][c] && computed[cu][c] {
+                    let needed = steps[t..]
+                        .iter()
+                        .any(|st| st.sends.iter().any(|s| s.src == cu && s.chunk == c));
+                    if !needed {
+                        resident[cu][c] = false;
+                    }
+                }
+            }
+        }
+        let cur_max = (1..=n).map(|cu| (1..=n).filter(|&c| resident[cu][c]).count()).max().unwrap();
+        max_resident = max_resident.max(cur_max);
+    }
+
+    let complete = (1..=n).all(|cu| (1..=n).all(|c| computed[cu][c]));
+    Ok(ScheduleCheck {
+        complete,
+        max_resident,
+        max_sends_per_cu,
+        compute: compute_log,
+    })
+}
+
+/// Total chunk-hops of the schedule (each send is one neighbor hop) —
+/// the NoC traffic MRCA pays per ring rotation of one chunk unit.
+pub fn total_hops(steps: &[StepSends]) -> usize {
+    steps.iter().map(|s| s.sends.len()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_n5_step1_and_2() {
+        let sched = mrca_schedule(5);
+        // Step 1: every interior CU launches both waves with its own chunk.
+        let s1 = &sched[0];
+        assert!(s1.sends.contains(&Send { src: 1, dest: 2, chunk: 1 }));
+        assert!(s1.sends.contains(&Send { src: 2, dest: 3, chunk: 2 }));
+        assert!(s1.sends.contains(&Send { src: 2, dest: 1, chunk: 2 }));
+        assert!(s1.sends.contains(&Send { src: 5, dest: 4, chunk: 5 }));
+        // Step 2 (paper text): CU2 forwards chunk1 up and chunk3 down.
+        let s2 = &sched[1];
+        assert!(s2.sends.contains(&Send { src: 2, dest: 3, chunk: 1 }));
+        assert!(s2.sends.contains(&Send { src: 2, dest: 1, chunk: 3 }));
+    }
+
+    #[test]
+    fn paper_example_n5_reflux_step4() {
+        // Paper: at step 4, CU3 transfers chunk1 to CU2 and chunk5 to CU4.
+        let sched = mrca_schedule(5);
+        let s4 = &sched[3];
+        assert!(s4.sends.contains(&Send { src: 3, dest: 2, chunk: 1 }));
+        assert!(s4.sends.contains(&Send { src: 3, dest: 4, chunk: 5 }));
+    }
+
+    #[test]
+    fn replication_at_ceil_half() {
+        assert!(mrca_schedule(5)[2].replicate); // step 3 = ⌈5/2⌉
+        assert!(mrca_schedule(6)[2].replicate); // step 3 = ⌈6/2⌉
+        assert!(!mrca_schedule(5)[3].replicate);
+    }
+
+    #[test]
+    fn complete_for_all_mesh_sizes() {
+        // 1..=16 covers every row/column length of the 5×5 and 6×6 meshes
+        // and beyond.
+        for n in 1..=16 {
+            let sched = mrca_schedule(n);
+            assert_eq!(sched.len(), n);
+            let chk = verify_schedule(n, &sched)
+                .unwrap_or_else(|e| panic!("N={n}: schedule invalid: {e}"));
+            assert!(chk.complete, "N={n}: schedule incomplete");
+        }
+    }
+
+    #[test]
+    fn compute_is_one_chunk_per_cu_per_step() {
+        let sched = mrca_schedule(5);
+        let chk = verify_schedule(5, &sched).unwrap();
+        assert_eq!(chk.compute.len(), 5);
+        for row in &chk.compute {
+            assert_eq!(row.len(), 5);
+        }
+        // Column cu-1 across steps is a permutation of 1..=5.
+        for cu in 1..=5usize {
+            let mut seen: Vec<usize> = chk.compute.iter().map(|r| r[cu - 1]).collect();
+            seen.sort_unstable();
+            assert_eq!(seen, vec![1, 2, 3, 4, 5]);
+        }
+        // Step 1: each CU computes its own chunk (Fig. 15).
+        assert_eq!(chk.compute[0], vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn storage_stays_bounded() {
+        for n in 2..=16 {
+            let chk = verify_schedule(n, &mrca_schedule(n)).unwrap();
+            // Paper: ≤2 chunks during progress waves; replication can
+            // transiently add one more.
+            assert!(chk.max_resident <= 3, "N={n}: max resident {}", chk.max_resident);
+            // Five-direction router: ≤2 outgoing chunk sends per step.
+            assert!(chk.max_sends_per_cu <= 2, "N={n}: {} sends", chk.max_sends_per_cu);
+        }
+    }
+
+    #[test]
+    fn hop_count_close_to_ring() {
+        // A wrap-around ring moves N chunks × N-1 steps = N(N-1) hops.
+        // MRCA pays the same order (replication adds O(N)).
+        for n in [5usize, 6, 8] {
+            let hops = total_hops(&mrca_schedule(n));
+            let ring = n * (n - 1);
+            // Reflux adds up to ~50% extra hops on even N (replication
+            // copies travel twice); still O(N²) like the ideal ring.
+            assert!(
+                hops as f64 <= 1.6 * ring as f64 && hops >= ring - n,
+                "N={n}: {hops} hops vs ring {ring}"
+            );
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! The multi-core spatial simulator: per-core model × dataflow ×
+//! mesh/DRAM configuration (the ASTRA-sim substitution, DESIGN.md §2).
+//!
+//! Regenerates:
+//! * Fig. 23(b) — SRAM sweep under the 5×5 mesh with shared DRAM,
+//! * Fig. 24(a)(b) — DRAttention / MRCA ablation on 5×5 and 6×6,
+//! * Fig. 24(c)(d) — lateral comparison of Spatial-Simba /
+//!   Spatial-SpAtten / Spatial-STAR.
+
+use super::drattention::{drattention_run, RingMapping};
+use super::ring::ring_attention_run;
+use crate::config::SpatialConfig;
+use crate::sim::baselines::Baseline;
+use crate::sim::pipeline::FeatureSet;
+
+/// Which compute core populates the mesh nodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CoreKind {
+    /// Simba/NVDLA-style dense SIMD MAC core (Fig. 24 baseline).
+    Simba,
+    /// SpAtten sparse-attention core.
+    Spatten,
+    /// Full STAR core.
+    Star,
+    /// STAR datapath *without* SU-FA and RASS (the Fig. 23(b) baseline).
+    StarNoMemOpt,
+}
+
+impl CoreKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            CoreKind::Simba => "Spatial-Simba",
+            CoreKind::Spatten => "Spatial-SpAtten",
+            CoreKind::Star => "Spatial-STAR",
+            CoreKind::StarNoMemOpt => "Spatial-STAR(no mem-opt)",
+        }
+    }
+
+    pub fn features(self) -> FeatureSet {
+        match self {
+            CoreKind::Simba => Baseline::Simba.features(),
+            CoreKind::Spatten => Baseline::Spatten.features(),
+            CoreKind::Star => FeatureSet::star(),
+            CoreKind::StarNoMemOpt => {
+                let mut f = FeatureSet::star();
+                f.formal = crate::sim::pipeline::FormalKind::Dense;
+                f.tiled_dataflow = false;
+                f.oo_scheduler = false;
+                f.sufa_tailored = false;
+                f
+            }
+        }
+    }
+
+    /// Keep-ratio the core actually achieves (dense cores keep all keys).
+    pub fn keep_ratio(self, requested: f64) -> f64 {
+        match self {
+            CoreKind::Simba => 1.0,
+            _ => requested,
+        }
+    }
+}
+
+/// Which dataflow orchestrates the mesh.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dataflow {
+    /// Ring-Attention baseline: KV circulates over all nodes.
+    RingAttention,
+    /// DRAttention with the naive logical-ring mapping (no MRCA).
+    DrAttentionNaive,
+    /// DRAttention + MRCA (the full Spatial-STAR dataflow).
+    DrAttentionMrca,
+}
+
+impl Dataflow {
+    pub fn name(self) -> &'static str {
+        match self {
+            Dataflow::RingAttention => "Ring-Attention",
+            Dataflow::DrAttentionNaive => "DRAttention",
+            Dataflow::DrAttentionMrca => "DRAttention+MRCA",
+        }
+    }
+}
+
+/// Uniform result across dataflows.
+#[derive(Clone, Debug)]
+pub struct SpatialReport {
+    pub core: CoreKind,
+    pub dataflow: Dataflow,
+    pub total_s: f64,
+    pub eff_gops: f64,
+    pub exposed_comm_s: f64,
+    pub noc_bytes: u64,
+}
+
+impl SpatialReport {
+    pub fn eff_tops(&self) -> f64 {
+        self.eff_gops / 1e3
+    }
+}
+
+/// Run one spatial configuration on one attention layer.
+pub fn spatial_run(
+    cfg: &SpatialConfig,
+    core: CoreKind,
+    dataflow: Dataflow,
+    s: usize,
+    d: usize,
+    h: usize,
+    keep_ratio: f64,
+) -> SpatialReport {
+    let feats = core.features();
+    let k = core.keep_ratio(keep_ratio);
+    let mut core_cfg = cfg.clone();
+    core_cfg.core = match core {
+        CoreKind::Simba => Baseline::Simba.config(),
+        CoreKind::Spatten => Baseline::Spatten.config(),
+        _ => cfg.core.clone(),
+    };
+    match dataflow {
+        Dataflow::RingAttention => {
+            let r = ring_attention_run(&core_cfg, &feats, s, d, h, k);
+            SpatialReport {
+                core,
+                dataflow,
+                total_s: r.total_s,
+                eff_gops: r.eff_gops,
+                exposed_comm_s: r.exposed_comm_s,
+                noc_bytes: r.noc_bytes,
+            }
+        }
+        Dataflow::DrAttentionNaive | Dataflow::DrAttentionMrca => {
+            let mapping = if dataflow == Dataflow::DrAttentionMrca {
+                RingMapping::Mrca
+            } else {
+                RingMapping::NaiveWrap
+            };
+            let r = drattention_run(&core_cfg, &feats, mapping, s, d, h, k);
+            SpatialReport {
+                core,
+                dataflow,
+                total_s: r.total_s,
+                eff_gops: r.eff_gops,
+                exposed_comm_s: r.exposed_comm_s,
+                noc_bytes: r.noc_bytes,
+            }
+        }
+    }
+}
+
+/// The Fig. 24(a)/(b) ablation triple: (ring baseline, +DRAttention,
+/// +MRCA) gains relative to the ring baseline.
+pub fn ablation_gains(cfg: &SpatialConfig, s: usize, d: usize, h: usize, k: f64) -> (f64, f64) {
+    let base = spatial_run(cfg, CoreKind::Star, Dataflow::RingAttention, s, d, h, k);
+    let dra = spatial_run(cfg, CoreKind::Star, Dataflow::DrAttentionNaive, s, d, h, k);
+    let full = spatial_run(cfg, CoreKind::Star, Dataflow::DrAttentionMrca, s, d, h, k);
+    (base.total_s / dra.total_s, base.total_s / full.total_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(core: CoreKind, df: Dataflow) -> SpatialReport {
+        spatial_run(&SpatialConfig::mesh5x5(), core, df, 16384, 64, 768, 0.2)
+    }
+
+    #[test]
+    fn spatial_star_dominates_lateral_comparison() {
+        // Fig. 24(c): Spatial-STAR > Spatial-SpAtten > Spatial-Simba.
+        let simba = run(CoreKind::Simba, Dataflow::RingAttention);
+        let spatten = run(CoreKind::Spatten, Dataflow::RingAttention);
+        let star = run(CoreKind::Star, Dataflow::DrAttentionMrca);
+        assert!(spatten.eff_gops > simba.eff_gops, "spatten {} !> simba {}", spatten.eff_gops, simba.eff_gops);
+        assert!(star.eff_gops > spatten.eff_gops, "star {} !> spatten {}", star.eff_gops, spatten.eff_gops);
+    }
+
+    #[test]
+    fn ablation_gains_ordered() {
+        // Fig. 24(a): DRAttention alone ≈ 3.1×, +MRCA more.
+        let (dra, full) = ablation_gains(&SpatialConfig::mesh5x5(), 16384, 64, 768, 0.2);
+        assert!(dra > 1.0, "DRAttention gain {dra}");
+        assert!(full >= dra, "full {full} !>= dra {dra}");
+    }
+
+    #[test]
+    fn mem_opt_matters_under_shared_dram() {
+        // Fig. 23(b): without SU-FA/RASS/tiling the shared-DRAM mesh is
+        // memory-bound.
+        let with_opt = run(CoreKind::Star, Dataflow::DrAttentionMrca);
+        let without = run(CoreKind::StarNoMemOpt, Dataflow::DrAttentionMrca);
+        assert!(
+            with_opt.eff_gops > 2.0 * without.eff_gops,
+            "with {} vs without {}",
+            with_opt.eff_gops,
+            without.eff_gops
+        );
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(CoreKind::Star.name(), "Spatial-STAR");
+        assert_eq!(Dataflow::DrAttentionMrca.name(), "DRAttention+MRCA");
+    }
+}

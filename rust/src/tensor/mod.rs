@@ -1,0 +1,235 @@
+//! Minimal dense-tensor substrate: a row-major f32 matrix with the handful
+//! of operations the algorithm layer needs (matmul, transpose, row softmax,
+//! row top-k). Kept deliberately small — numerics on the request path run
+//! through the AOT-compiled HLO artifacts ([`crate::runtime`]); this type
+//! exists for oracles, simulators and workload generation.
+
+use crate::util::Rng;
+
+/// Row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// I.i.d. normal entries (mean 0, std as given).
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Mat {
+        Mat::from_fn(rows, cols, |_, _| rng.normal_f32(0.0, std))
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |i, j| self.at(j, i))
+    }
+
+    /// Dense matmul: self [m,k] × other [k,n] → [m,n].
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        // ikj loop order: streams `other` rows, vectorizes the inner j loop.
+        for i in 0..m {
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[p * n..(p + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Scale every element in place.
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// Elementwise addition.
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        )
+    }
+
+    /// Row-wise numerically-stable softmax (Eq. 1 of the paper).
+    pub fn softmax_rows(&self) -> Mat {
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            softmax_inplace(out.row_mut(i));
+        }
+        out
+    }
+
+    /// Max |a - b| over all elements.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Relative Frobenius error ‖a−b‖/‖b‖ (b taken as reference).
+    pub fn rel_err(&self, reference: &Mat) -> f32 {
+        let mut num = 0.0f32;
+        for (a, b) in self.data.iter().zip(&reference.data) {
+            num += (a - b) * (a - b);
+        }
+        let den = reference.fro_norm().max(1e-30);
+        num.sqrt() / den
+    }
+}
+
+/// In-place numerically stable softmax over a slice.
+pub fn softmax_inplace(xs: &mut [f32]) {
+    if xs.is_empty() {
+        return;
+    }
+    let m = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in xs.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// Indices of the `k` largest values of `xs` (ties broken by lower index),
+/// returned in descending value order. This is the oracle the top-k stage
+/// is measured against.
+pub fn topk_indices(xs: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| {
+        xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    idx.truncate(k.min(xs.len()));
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(4, 7, 1.0, &mut rng);
+        let eye = Mat::from_fn(7, 7, |i, j| if i == j { 1.0 } else { 0.0 });
+        let b = a.matmul(&eye);
+        assert!(a.max_abs_diff(&b) < 1e-6);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(5);
+        let a = Mat::randn(3, 8, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::new(7);
+        let a = Mat::randn(6, 33, 4.0, &mut rng);
+        let s = a.softmax_rows();
+        for i in 0..s.rows {
+            let sum: f32 = s.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "row {i} sums to {sum}");
+            assert!(s.row(i).iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn softmax_shift_invariance() {
+        let mut a = vec![1.0f32, 2.0, 3.0];
+        let mut b = vec![1001.0f32, 1002.0, 1003.0];
+        softmax_inplace(&mut a);
+        softmax_inplace(&mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn topk_descending_and_ties() {
+        let xs = [0.5f32, 2.0, 2.0, -1.0, 3.0];
+        assert_eq!(topk_indices(&xs, 3), vec![4, 1, 2]);
+        assert_eq!(topk_indices(&xs, 0), Vec::<usize>::new());
+        assert_eq!(topk_indices(&xs, 99).len(), 5);
+    }
+
+    #[test]
+    fn rel_err_zero_for_identical() {
+        let mut rng = Rng::new(11);
+        let a = Mat::randn(5, 5, 1.0, &mut rng);
+        assert_eq!(a.rel_err(&a), 0.0);
+    }
+}

@@ -1,0 +1,146 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! Provides seeded random-case generation with failure reporting and a
+//! simple halving shrink for integer-vector inputs. Used by the unit tests
+//! and `rust/tests/prop_invariants.rs`.
+
+use crate::util::Rng;
+
+/// Number of cases per property (override with `STAR_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("STAR_PROP_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(64)
+}
+
+/// Run `prop` on `cases` random inputs produced by `gen`. On failure, retry
+/// with shrunken inputs produced by `shrink` (if any) and panic with the
+/// smallest failing case found.
+pub fn check_with<T: Clone + std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Greedy shrink: keep taking the first failing shrink candidate.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut progress = true;
+            let mut rounds = 0;
+            while progress && rounds < 200 {
+                progress = false;
+                rounds += 1;
+                for cand in shrink(&best) {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        progress = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case={case})\n  input (shrunk): {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+/// Run `prop` on `default_cases()` random inputs without shrinking.
+pub fn check<T: Clone + std::fmt::Debug>(
+    seed: u64,
+    gen: impl FnMut(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    check_with(seed, default_cases(), gen, |_| Vec::new(), prop);
+}
+
+/// Assert helper producing `Result<(), String>` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Shrinker for `Vec<T>`: halve the length and drop single elements.
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if v.len() > 1 {
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[v.len() / 2..].to_vec());
+        for i in 0..v.len().min(8) {
+            let mut c = v.to_vec();
+            c.remove(i);
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Shrinker for `usize`: towards zero by halving.
+pub fn shrink_usize(x: usize) -> Vec<usize> {
+    if x == 0 {
+        Vec::new()
+    } else {
+        vec![x / 2, x - 1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(1, |r| r.below(100), |&x| {
+            prop_assert!(x < 100, "x={x} out of range");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_case() {
+        check(2, |r| r.below(100), |&x| {
+            prop_assert!(x < 50, "x={x} >= 50");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shrink_finds_small_counterexample() {
+        // Property: all vectors have length < 4. Shrinking should find a
+        // counterexample of exactly length 4.
+        let caught = std::panic::catch_unwind(|| {
+            check_with(
+                3,
+                64,
+                |r| (0..r.range(0, 20)).map(|i| i as u32).collect::<Vec<u32>>(),
+                |v| shrink_vec(v),
+                |v| {
+                    prop_assert!(v.len() < 4, "len={}", v.len());
+                    Ok(())
+                },
+            );
+        });
+        let msg = format!("{:?}", caught.unwrap_err().downcast_ref::<String>().unwrap());
+        assert!(msg.contains("len=4"), "expected shrink to len=4, got: {msg}");
+    }
+
+    #[test]
+    fn shrink_usize_terminates() {
+        let mut x = 1_000_000usize;
+        let mut steps = 0;
+        while x > 0 {
+            x = shrink_usize(x)[0];
+            steps += 1;
+            assert!(steps < 64);
+        }
+    }
+}

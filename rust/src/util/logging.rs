@@ -1,0 +1,118 @@
+//! Lightweight logging + wall-clock timing helpers (no `log` facade needed).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+/// Log levels in increasing verbosity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the global log level (e.g. from `--verbose` / `STAR_LOG`).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Initialize level from the `STAR_LOG` environment variable if present.
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("STAR_LOG") {
+        let lvl = match v.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "debug" => Level::Debug,
+            _ => Level::Info,
+        };
+        set_level(lvl);
+    }
+}
+
+/// True if messages at `level` should be emitted.
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit a log line to stderr with a level tag.
+pub fn log(level: Level, msg: &str) {
+    if enabled(level) {
+        let tag = match level {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+        };
+        eprintln!("[star {tag}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, &format!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! warn_ {
+    ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, &format!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! debug_ {
+    ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, &format!($($t)*)) };
+}
+
+/// RAII wall-clock timer; reports at Debug level on drop.
+pub struct ScopedTimer {
+    label: String,
+    start: Instant,
+}
+
+impl ScopedTimer {
+    pub fn new(label: &str) -> Self {
+        ScopedTimer { label: label.to_string(), start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Drop for ScopedTimer {
+    fn drop(&mut self) {
+        log(Level::Debug, &format!("{}: {:.3}s", self.label, self.elapsed_secs()));
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+
+    #[test]
+    fn timed_returns_result() {
+        let (v, secs) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

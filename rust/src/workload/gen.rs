@@ -1,0 +1,273 @@
+//! Synthetic workload generators.
+//!
+//! Two levels:
+//! 1. **Score-level** ([`ScoreGen`]): raw attention-logit rows with a
+//!    controlled Type I/II/III mix and a depth-dependent separability trend
+//!    (deeper layers → more distinguishable scores, the Fig. 17a effect).
+//! 2. **Tensor-level** ([`AttnWorkload`]): full Q/K/V/X/W_k tensors for one
+//!    head of a model preset, for end-to-end runs through prediction →
+//!    top-k → SU-FA and through the cycle-level simulator.
+
+use crate::config::ModelConfig;
+use crate::sparsity::distribution::ClassifyParams;
+use crate::sparsity::DistType;
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+/// Target fractions for the three row types (Fig. 9).
+#[derive(Clone, Copy, Debug)]
+pub struct TypeMixSpec {
+    pub type1: f64,
+    pub type2: f64,
+    pub type3: f64,
+}
+
+impl TypeMixSpec {
+    /// Decoder-model mix (GPT/LLaMA): ~22% Type I, ~78% Type II, ~0% III.
+    pub fn decoder() -> Self {
+        TypeMixSpec { type1: 0.22, type2: 0.78, type3: 0.0 }
+    }
+
+    /// Encoder-model mix (BERT): ~12% Type I, ~83% Type II, ~5% III.
+    pub fn encoder() -> Self {
+        TypeMixSpec { type1: 0.12, type2: 0.83, type3: 0.05 }
+    }
+
+    /// The paper's overall average: 73% Type II dominates.
+    pub fn average() -> Self {
+        TypeMixSpec { type1: 0.22, type2: 0.73, type3: 0.05 }
+    }
+}
+
+/// Generator for synthetic attention-logit rows.
+#[derive(Clone, Debug)]
+pub struct ScoreGen {
+    pub mix: TypeMixSpec,
+    /// Base logit std; higher → sharper softmax.
+    pub sigma: f32,
+    /// Regions used to plant Type II/III structure (matches SADS n).
+    pub regions: usize,
+}
+
+impl Default for ScoreGen {
+    fn default() -> Self {
+        ScoreGen { mix: TypeMixSpec::average(), sigma: 1.0, regions: 4 }
+    }
+}
+
+impl ScoreGen {
+    /// Generate one row of length `s` of the given type.
+    pub fn row_of_type(&self, s: usize, ty: DistType, rng: &mut Rng) -> Vec<f32> {
+        let mut row: Vec<f32> = (0..s).map(|_| rng.normal_f32(0.0, self.sigma)).collect();
+        let region_len = s.div_ceil(self.regions);
+        match ty {
+            DistType::TypeI => {
+                // 1–3 dominant spikes far above everything else (distinct
+                // positions: accidental double-planting would distort mass).
+                let spikes = rng.range(1, 4);
+                for j in rng.sample_indices(s, spikes) {
+                    row[j] = 8.0 * self.sigma + rng.f32() * 2.0;
+                }
+            }
+            DistType::TypeII => {
+                // A few moderately-large tokens planted in EVERY region.
+                for r in 0..self.regions {
+                    let lo = r * region_len;
+                    let hi = ((r + 1) * region_len).min(s);
+                    if lo >= hi {
+                        continue;
+                    }
+                    for j in rng.sample_indices(hi - lo, 3.min(hi - lo)) {
+                        row[lo + j] = 3.0 * self.sigma + rng.f32();
+                    }
+                }
+            }
+            DistType::TypeIII => {
+                // Many large tokens piled into one region, with a narrow
+                // value spread so no single token dominates the mass.
+                let r = rng.below(self.regions);
+                let lo = r * region_len;
+                let hi = ((r + 1) * region_len).min(s);
+                let count = ((hi - lo) / 2).max(8).min(hi - lo);
+                for j in rng.sample_indices(hi - lo, count) {
+                    row[lo + j] = 4.0 * self.sigma + 0.3 * rng.f32();
+                }
+            }
+        }
+        row
+    }
+
+    /// Sample a row type from the mix.
+    pub fn sample_type(&self, rng: &mut Rng) -> DistType {
+        let u = rng.f64();
+        if u < self.mix.type1 {
+            DistType::TypeI
+        } else if u < self.mix.type1 + self.mix.type2 {
+            DistType::TypeII
+        } else {
+            DistType::TypeIII
+        }
+    }
+
+    /// Generate `n` rows of length `s` following the mix.
+    pub fn rows(&self, n: usize, s: usize, rng: &mut Rng) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|_| {
+                let ty = self.sample_type(rng);
+                self.row_of_type(s, ty, rng)
+            })
+            .collect()
+    }
+
+    /// Rows for a given layer of a `depth`-layer model: deeper layers get
+    /// sharper (more separable) score distributions — the mechanism behind
+    /// the paper's rising layer-wise hit rate (Fig. 17a).
+    pub fn layer_rows(
+        &self,
+        layer: usize,
+        depth: usize,
+        n: usize,
+        s: usize,
+        rng: &mut Rng,
+    ) -> Vec<Vec<f32>> {
+        assert!(layer < depth);
+        let sharpen = 1.0 + 1.5 * layer as f32 / depth.max(1) as f32;
+        let g = ScoreGen { sigma: self.sigma * sharpen, ..self.clone() };
+        g.rows(n, s, rng)
+    }
+
+    /// Default classifier params consistent with this generator.
+    pub fn classify_params(&self) -> ClassifyParams {
+        ClassifyParams { regions: self.regions, ..ClassifyParams::default() }
+    }
+}
+
+/// Tensor-level workload for one attention head.
+#[derive(Clone, Debug)]
+pub struct AttnWorkload {
+    pub model: ModelConfig,
+    /// Input activations X [S, H] (for on-demand KV generation).
+    pub x: Mat,
+    /// Key/value projection slices for this head: [H, d_h].
+    pub wk: Mat,
+    pub wv: Mat,
+    /// Query tensor [T, d_h] (T queries processed in parallel).
+    pub q: Mat,
+    /// Exact K = X·W_k and V = X·W_v (oracles; hardware generates on demand).
+    pub k: Mat,
+    pub v: Mat,
+}
+
+impl AttnWorkload {
+    /// Build a head workload: T parallel queries against an S-token context.
+    pub fn generate(model: &ModelConfig, s: usize, t: usize, rng: &mut Rng) -> AttnWorkload {
+        let h = model.hidden;
+        let d = model.head_dim();
+        // Activation/weight scales chosen to yield logits with O(1..4) std
+        // after the 1/√d scaling — the regime real transformers live in.
+        let x = Mat::randn(s, h, 1.0, rng);
+        let wk = Mat::randn(h, d, 1.0 / (h as f32).sqrt(), rng);
+        let wv = Mat::randn(h, d, 1.0 / (h as f32).sqrt(), rng);
+        let k = x.matmul(&wk);
+        let v = x.matmul(&wv);
+        let q = Mat::randn(t, d, 1.0, rng);
+        AttnWorkload { model: model.clone(), x, wk, wv, q, k, v }
+    }
+
+    pub fn s(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn t(&self) -> usize {
+        self.q.rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.q.cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::distribution::{classify_row, TypeMix};
+
+    #[test]
+    fn planted_types_classify_correctly() {
+        let g = ScoreGen::default();
+        let mut rng = Rng::new(1);
+        let p = g.classify_params();
+        let mut ok = 0;
+        let n = 60;
+        for ty in [DistType::TypeI, DistType::TypeII, DistType::TypeIII] {
+            for _ in 0..n {
+                let row = g.row_of_type(256, ty, &mut rng);
+                if classify_row(&row, &p) == ty {
+                    ok += 1;
+                }
+            }
+        }
+        let acc = ok as f64 / (3 * n) as f64;
+        assert!(acc > 0.8, "planted-type classification accuracy {acc}");
+    }
+
+    #[test]
+    fn generated_mix_tracks_spec() {
+        let g = ScoreGen { mix: TypeMixSpec::average(), ..Default::default() };
+        let mut rng = Rng::new(2);
+        let rows = g.rows(400, 256, &mut rng);
+        let mix = TypeMix::of(&rows, &g.classify_params());
+        assert!((mix.type2 - 0.73).abs() < 0.15, "type2 {}", mix.type2);
+        assert!(mix.type2 > mix.type1 && mix.type1 > mix.type3);
+    }
+
+    #[test]
+    fn deeper_layers_more_separable() {
+        // Proxy: top-16 softmax mass grows with depth.
+        let g = ScoreGen::default();
+        let mut rng = Rng::new(3);
+        let mass = |rows: &[Vec<f32>]| -> f64 {
+            let mut acc = 0.0;
+            for r in rows {
+                let top = crate::tensor::topk_indices(r, 16);
+                let m = r.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let tot: f64 = r.iter().map(|&x| ((x - m) as f64).exp()).sum();
+                acc += top.iter().map(|&j| ((r[j] - m) as f64).exp()).sum::<f64>() / tot;
+            }
+            acc / rows.len() as f64
+        };
+        let shallow = mass(&g.layer_rows(0, 12, 50, 256, &mut rng));
+        let deep = mass(&g.layer_rows(11, 12, 50, 256, &mut rng));
+        assert!(deep > shallow, "deep {deep} !> shallow {shallow}");
+    }
+
+    #[test]
+    fn workload_shapes_consistent() {
+        let m = ModelConfig::preset("tiny").unwrap();
+        let mut rng = Rng::new(4);
+        let w = AttnWorkload::generate(&m, 64, 16, &mut rng);
+        assert_eq!(w.s(), 64);
+        assert_eq!(w.t(), 16);
+        assert_eq!(w.d(), m.head_dim());
+        assert_eq!(w.k.rows, 64);
+        assert_eq!(w.k.cols, m.head_dim());
+        // K really is X·W_k.
+        let k2 = w.x.matmul(&w.wk);
+        assert!(w.k.max_abs_diff(&k2) < 1e-5);
+    }
+
+    #[test]
+    fn logit_scale_reasonable() {
+        let m = ModelConfig::preset("tiny").unwrap();
+        let mut rng = Rng::new(5);
+        let w = AttnWorkload::generate(&m, 128, 8, &mut rng);
+        let scale = 1.0 / (w.d() as f32).sqrt();
+        let mut a = w.q.matmul(&w.k.transpose());
+        a.scale(scale);
+        let std = {
+            let mean: f32 = a.data.iter().sum::<f32>() / a.data.len() as f32;
+            (a.data.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / a.data.len() as f32).sqrt()
+        };
+        assert!((0.2..6.0).contains(&std), "logit std {std}");
+    }
+}

@@ -1,0 +1,14 @@
+//! Workload generation and traces.
+//!
+//! The paper's accuracy-side experiments run on real LLMs we cannot host
+//! here; DESIGN.md §4 explains the substitution: synthetic attention whose
+//! row-score distributions follow the *measured* Type I/II/III mix of
+//! Fig. 9 (≈73% Type II, ≈22% Type I in decoder models, ≈0–5% Type III),
+//! plus full QKV tensor workloads shaped by the model presets in
+//! [`crate::config::ModelConfig`].
+
+pub mod gen;
+pub mod trace;
+
+pub use gen::{AttnWorkload, ScoreGen, TypeMixSpec};
+pub use trace::{RequestTrace, TraceRequest};

@@ -1,0 +1,148 @@
+//! Request traces for the LTPP serving experiments.
+//!
+//! A trace is a sequence of attention requests (arrival time, sequence
+//! length, query parallelism) that the coordinator replays. Traces
+//! round-trip through JSON so experiments are reproducible and shareable.
+
+use crate::util::json::Json;
+use crate::util::Rng;
+
+/// One request in a trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRequest {
+    /// Arrival time in seconds from trace start.
+    pub arrival: f64,
+    /// Context length S.
+    pub seq_len: usize,
+    /// Queries processed in parallel T (prefill chunk or decode batch).
+    pub queries: usize,
+    /// Model preset name.
+    pub model: String,
+}
+
+/// A replayable request trace.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RequestTrace {
+    pub requests: Vec<TraceRequest>,
+}
+
+impl RequestTrace {
+    /// Poisson arrivals with rate `lambda` req/s, log-uniform sequence
+    /// lengths in [s_min, s_max], fixed query parallelism.
+    pub fn poisson(
+        n: usize,
+        lambda: f64,
+        s_min: usize,
+        s_max: usize,
+        queries: usize,
+        model: &str,
+        rng: &mut Rng,
+    ) -> RequestTrace {
+        let mut t = 0.0;
+        let mut requests = Vec::with_capacity(n);
+        for _ in 0..n {
+            t += rng.exponential(lambda);
+            let ls = (s_min as f64).ln() + rng.f64() * ((s_max as f64).ln() - (s_min as f64).ln());
+            let seq_len = ls.exp().round() as usize;
+            requests.push(TraceRequest {
+                arrival: t,
+                seq_len: seq_len.clamp(s_min, s_max),
+                queries,
+                model: model.to_string(),
+            });
+        }
+        RequestTrace { requests }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.requests
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("arrival", Json::num(r.arrival)),
+                        ("seq_len", Json::num(r.seq_len as f64)),
+                        ("queries", Json::num(r.queries as f64)),
+                        ("model", Json::str(&r.model)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Option<RequestTrace> {
+        let arr = j.as_arr()?;
+        let mut requests = Vec::with_capacity(arr.len());
+        for r in arr {
+            requests.push(TraceRequest {
+                arrival: r.get("arrival")?.as_f64()?,
+                seq_len: r.get("seq_len")?.as_usize()?,
+                queries: r.get("queries")?.as_usize()?,
+                model: r.get("model")?.as_str()?.to_string(),
+            });
+        }
+        Some(RequestTrace { requests })
+    }
+
+    /// Write to a file as pretty JSON.
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_json().pretty())?;
+        Ok(())
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: &std::path::Path) -> crate::Result<RequestTrace> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        RequestTrace::from_json(&j).ok_or_else(|| anyhow::anyhow!("malformed trace"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_arrivals_monotone() {
+        let mut rng = Rng::new(1);
+        let tr = RequestTrace::poisson(100, 50.0, 128, 4096, 64, "gpt2", &mut rng);
+        assert_eq!(tr.requests.len(), 100);
+        for w in tr.requests.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        assert!(tr.requests.iter().all(|r| (128..=4096).contains(&r.seq_len)));
+    }
+
+    #[test]
+    fn mean_interarrival_close_to_rate() {
+        let mut rng = Rng::new(2);
+        let tr = RequestTrace::poisson(2000, 100.0, 256, 256, 1, "tiny", &mut rng);
+        let total = tr.requests.last().unwrap().arrival;
+        let mean = total / 2000.0;
+        assert!((mean - 0.01).abs() < 0.002, "mean interarrival {mean}");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut rng = Rng::new(3);
+        let tr = RequestTrace::poisson(10, 10.0, 128, 1024, 32, "bloom-1b7", &mut rng);
+        let j = tr.to_json();
+        let back = RequestTrace::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        for (a, b) in tr.requests.iter().zip(&back.requests) {
+            assert_eq!(a.seq_len, b.seq_len);
+            assert_eq!(a.model, b.model);
+            assert!((a.arrival - b.arrival).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut rng = Rng::new(4);
+        let tr = RequestTrace::poisson(5, 10.0, 128, 256, 8, "tiny", &mut rng);
+        let path = std::env::temp_dir().join("star_trace_test.json");
+        tr.save(&path).unwrap();
+        let back = RequestTrace::load(&path).unwrap();
+        assert_eq!(back.requests.len(), 5);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,91 @@
+//! Integration: the serving stack (router → batcher → scheduler →
+//! backend) under load, with the simulated backend.
+
+use star::config::AccelConfig;
+use star::coordinator::{
+    Backend, BatcherConfig, Request, Router, Server, ServerConfig, Stage, TiledScheduler, Variant,
+};
+use star::sim::dram::DramChannel;
+use star::sim::pipeline::FeatureSet;
+use star::util::Rng;
+
+fn server(target_t: usize, workers: usize) -> Server {
+    let router = Router::new(vec![
+        Variant { name: "attn_small".into(), model: "tiny".into(), max_t: 128, s: 512 },
+        Variant { name: "attn_big".into(), model: "tiny".into(), max_t: 128, s: 4096 },
+    ]);
+    let backend = Backend::Sim {
+        feats: FeatureSet::star(),
+        accel: AccelConfig::default(),
+        dram: DramChannel::accel_256(),
+        d: 64,
+        h: 768,
+        keep: 0.2,
+        time_scale: 0.0,
+    };
+    Server::start(
+        router,
+        backend,
+        ServerConfig { batcher: BatcherConfig { target_t, max_wait_s: 1e-3 }, workers },
+    )
+}
+
+#[test]
+fn hundred_requests_across_buckets() {
+    let srv = server(64, 4);
+    let mut rng = Rng::new(5);
+    let mut rxs = Vec::new();
+    for id in 0..100u64 {
+        let s = if rng.chance(0.5) { 256 } else { 2048 };
+        rxs.push(srv.submit(Request::new(id, "tiny", 8, s, 0.0)).unwrap());
+    }
+    let mut small = 0;
+    let mut big = 0;
+    for rx in rxs {
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+        match resp.variant.as_str() {
+            "attn_small" => small += 1,
+            "attn_big" => big += 1,
+            other => panic!("unexpected variant {other}"),
+        }
+    }
+    assert_eq!(small + big, 100);
+    assert!(small > 10 && big > 10, "both buckets used: {small}/{big}");
+    let snap = srv.shutdown();
+    assert_eq!(snap.requests, 100);
+    assert!(snap.mean_batch_rows > 8.0, "batching actually batched: {}", snap.mean_batch_rows);
+}
+
+#[test]
+fn shutdown_flushes_everything() {
+    let srv = server(10_000, 1); // never fills naturally
+    let mut rxs = Vec::new();
+    for id in 0..5u64 {
+        rxs.push(srv.submit(Request::new(id, "tiny", 4, 256, 0.0)).unwrap());
+    }
+    // Don't wait for the timeout: shut down immediately.
+    let snap = srv.shutdown();
+    assert_eq!(snap.requests, 5);
+    for rx in rxs {
+        assert!(rx.try_recv().is_ok(), "response delivered on shutdown flush");
+    }
+}
+
+#[test]
+fn scheduler_throughput_with_many_batches() {
+    // The OoO scheduler drains an LTPP burst completely and issues
+    // every tile exactly once.
+    let mut s = TiledScheduler::new();
+    for b in 0..50u64 {
+        s.admit(b, 4, b as f64);
+    }
+    let mut done = Vec::new();
+    let mut last_stage: Option<Stage> = None;
+    while let Some(job) = s.issue(last_stage) {
+        last_stage = Some(job.stage);
+        s.complete(&job);
+        done.extend(s.take_done());
+    }
+    assert_eq!(done.len(), 50);
+    assert_eq!(s.issued(), 50 * 4 * 4);
+}

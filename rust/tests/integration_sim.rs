@@ -1,0 +1,95 @@
+//! Integration: the full single-core simulation stack — workload
+//! generation → prediction → top-k → SU-FA → cycle/energy model — and
+//! the consistency between the algorithm layer and the simulator.
+
+use star::arith::{EquivWeights, OpCounter};
+use star::attention::{dense_attention, sufa_attention, AttnInputs, Selection, SufaParams};
+use star::config::{AccelConfig, ModelConfig};
+use star::sim::baselines::Baseline;
+use star::sim::dram::DramChannel;
+use star::sim::pipeline::{simulate, FeatureSet, WorkloadShape};
+use star::sparsity::topk::{sads_topk, SadsParams};
+use star::sparsity::{PredictScheme, Predictor};
+use star::util::Rng;
+use star::workload::AttnWorkload;
+
+/// The whole algorithm pipeline on a real workload stays numerically
+/// close to dense attention at a moderate keep ratio.
+#[test]
+fn pipeline_end_to_end_numerics() {
+    let m = ModelConfig::preset("gpt2").unwrap();
+    let mut rng = Rng::new(99);
+    let wl = AttnWorkload::generate(&m, 256, 64, &mut rng);
+    let inp = AttnInputs::new(&wl.q, &wl.k, &wl.v);
+    let pred = Predictor::new(PredictScheme::Dlzs, 7);
+    let mut c = OpCounter::new();
+    let mut est = pred.approx_scores(&wl.q, &wl.k, &mut c);
+    est.scale(1.0 / (wl.q.cols as f32).sqrt());
+    let keep = 128; // 50% of 256
+    let mut rows = Vec::new();
+    for i in 0..est.rows {
+        let (idx, _) = sads_topk(est.row(i), keep, &SadsParams::default(), &mut c);
+        rows.push(idx);
+    }
+    let sel = Selection { rows };
+    let r = sufa_attention(&inp, &sel, &SufaParams::default(), &mut c);
+    let mut cd = OpCounter::new();
+    let dense = dense_attention(&inp, usize::MAX, &mut cd);
+    let rel = r.out.rel_err(&dense);
+    assert!(rel < 0.35, "pipeline rel err {rel}");
+    // And it must be cheaper in equivalent adds than dense.
+    let ew = EquivWeights::default();
+    assert!(c.equivalent_adds(&ew) < cd.equivalent_adds(&ew));
+}
+
+/// Simulator consistency: STAR beats the dense ASIC (the same-scope
+/// in-job comparison: both generate KV on their own PE array) on both
+/// latency and energy, for every model in the suite.
+#[test]
+fn feature_ladder_monotone_for_suite() {
+    let cfg = AccelConfig::default();
+    let dram = DramChannel::accel_256();
+    for m in ModelConfig::suite() {
+        let shape = WorkloadShape::new(128, m.seq_len.min(2048), m.head_dim(), m.hidden, 0.2);
+        let star = simulate(&shape, &FeatureSet::star(), &cfg, &dram);
+        let dense = simulate(&shape, &FeatureSet::dense_asic(), &cfg, &dram);
+        assert!(
+            star.total_s < dense.total_s,
+            "{}: star {} !< dense {}",
+            m.name,
+            star.total_s,
+            dense.total_s
+        );
+        assert!(star.energy.total_j() < dense.energy.total_j(), "{}", m.name);
+    }
+}
+
+/// Energy accounting is internally consistent: breakdown parts sum to
+/// the total, and all are non-negative.
+#[test]
+fn energy_breakdown_consistent() {
+    let cfg = AccelConfig::default();
+    let dram = DramChannel::accel_256();
+    let r = simulate(&WorkloadShape::new(128, 2048, 64, 768, 0.2), &FeatureSet::star(), &cfg, &dram);
+    let e = r.energy;
+    assert!(e.compute_j >= 0.0 && e.sram_j >= 0.0 && e.dram_j >= 0.0);
+    assert!((e.compute_j + e.sram_j + e.dram_j - e.total_j()).abs() < 1e-12);
+    assert!(r.total_s > 0.0 && r.eff_gops > 0.0);
+}
+
+/// Every behavioral baseline simulates without panicking across a grid
+/// of shapes, and reports sane numbers.
+#[test]
+fn baseline_grid_sane() {
+    let dram = DramChannel::accel_256();
+    for b in [Baseline::Fact, Baseline::Energon, Baseline::Elsa, Baseline::Spatten, Baseline::Simba] {
+        for t in [1usize, 32, 256] {
+            for s in [128usize, 1024] {
+                let shape = WorkloadShape::new(t, s, 64, 768, 0.25);
+                let r = simulate(&shape, &b.features(), &b.config(), &dram);
+                assert!(r.total_s.is_finite() && r.total_s > 0.0, "{} t={t} s={s}", b.name());
+                assert!(r.mat_fraction() >= 0.0 && r.mat_fraction() <= 1.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! Integration: MRCA schedules drive the DRAttention dataflow on the
+//! mesh, and the spatial simulator's orderings hold across sizes.
+
+use star::config::SpatialConfig;
+use star::spatial::mesh::{Coord, Mesh};
+use star::spatial::mrca::{mrca_schedule, verify_schedule};
+use star::spatial::sim::{spatial_run, CoreKind, Dataflow};
+
+/// MRCA is complete and bounded for every row length used by any mesh
+/// from 2×2 to 8×8.
+#[test]
+fn mrca_complete_for_all_practical_meshes() {
+    for n in 2..=8 {
+        let sched = mrca_schedule(n);
+        let chk = verify_schedule(n, &sched).unwrap();
+        assert!(chk.complete, "N={n}");
+        assert!(chk.max_resident <= 3, "N={n} resident {}", chk.max_resident);
+    }
+}
+
+/// The mesh routes MRCA sends as single hops (that is the point).
+#[test]
+fn mrca_sends_are_single_hop_on_mesh() {
+    let mesh = Mesh::from_config(&SpatialConfig::mesh5x5());
+    for st in mrca_schedule(5) {
+        for s in &st.sends {
+            let from = mesh.id(Coord { row: 2, col: s.src - 1 });
+            let to = mesh.id(Coord { row: 2, col: s.dest - 1 });
+            assert_eq!(mesh.xy_route(from, to).len(), 1);
+        }
+    }
+}
+
+/// Dataflow ordering (ring < naive DRA < MRCA DRA in latency) holds on
+/// both evaluated mesh sizes and across sequence lengths.
+#[test]
+fn dataflow_ordering_robust() {
+    for cfg in [SpatialConfig::mesh5x5(), SpatialConfig::mesh6x6()] {
+        for s in [8192usize, 32768] {
+            let ring = spatial_run(&cfg, CoreKind::Star, Dataflow::RingAttention, s, 64, 768, 0.2);
+            let dra = spatial_run(&cfg, CoreKind::Star, Dataflow::DrAttentionNaive, s, 64, 768, 0.2);
+            let full = spatial_run(&cfg, CoreKind::Star, Dataflow::DrAttentionMrca, s, 64, 768, 0.2);
+            assert!(dra.total_s < ring.total_s, "S={s}: dra !< ring");
+            assert!(full.total_s <= dra.total_s, "S={s}: mrca !<= dra");
+        }
+    }
+}
+
+/// Throughput grows with mesh size for the MRCA dataflow (sub-linear is
+/// allowed: shared DRAM).
+#[test]
+fn more_cores_do_not_hurt_with_mrca() {
+    let s = 32768;
+    let mut prev = 0.0;
+    for (r, c) in [(2usize, 2usize), (4, 4), (6, 6)] {
+        let mut cfg = SpatialConfig::mesh5x5();
+        cfg.mesh_rows = r;
+        cfg.mesh_cols = c;
+        let rep = spatial_run(&cfg, CoreKind::Star, Dataflow::DrAttentionMrca, s, 64, 768, 0.2);
+        assert!(rep.eff_gops > prev * 0.8, "{r}x{c}: {} vs prev {}", rep.eff_gops, prev);
+        prev = rep.eff_gops;
+    }
+}

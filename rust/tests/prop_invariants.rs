@@ -1,0 +1,168 @@
+//! Property-based tests over the coordinator and algorithm invariants
+//! (randomized via the in-tree mini-prop framework; the offline
+//! environment has no proptest crate).
+
+use star::arith::OpCounter;
+use star::attention::{masked_attention_oracle, sufa_attention, AttnInputs, Selection, SufaParams};
+use star::coordinator::{Batch, Batcher, BatcherConfig, Request};
+use star::spatial::mrca::{mrca_schedule, total_hops, verify_schedule};
+use star::sparsity::topk::{sads_topk, vanilla_topk, SadsParams};
+use star::tensor::Mat;
+use star::testing;
+use star::util::Rng;
+
+/// SU-FA equals the masked-softmax oracle for ANY true-score-descending
+/// selection, on random shapes and sparsity patterns.
+#[test]
+fn prop_sufa_equals_masked_oracle() {
+    testing::check(
+        601,
+        |rng: &mut Rng| {
+            (rng.range(1, 12), rng.range(4, 96), rng.range(2, 24), rng.next_u64())
+        },
+        |&(t, s, d, seed)| {
+            let mut rng = Rng::new(seed);
+            let q = Mat::randn(t, d, 1.0, &mut rng);
+            let k = Mat::randn(s, d, 1.0, &mut rng);
+            let v = Mat::randn(s, d, 1.0, &mut rng);
+            let inp = AttnInputs::new(&q, &k, &v);
+            let keep = rng.range(1, s + 1);
+            // Selection sorted by TRUE scores (descending).
+            let exact = q.matmul(&k.transpose());
+            let mut c = OpCounter::new();
+            let rows: Vec<Vec<usize>> =
+                (0..t).map(|i| vanilla_topk(exact.row(i), keep, &mut c)).collect();
+            let sel = Selection { rows };
+            let r = sufa_attention(&inp, &sel, &SufaParams::default(), &mut c);
+            let want = masked_attention_oracle(&inp, &sel);
+            let err = r.out.max_abs_diff(&want);
+            star::prop_assert!(err < 1e-4, "t={t} s={s} d={d} keep={keep}: err {err}");
+            Ok(())
+        },
+    );
+}
+
+/// SADS returns at most min(k, s) distinct in-range indices (fewer only
+/// under tight-radius pruning), and never out-compares vanilla.
+#[test]
+fn prop_sads_selection_wellformed_and_cheaper() {
+    testing::check(
+        802,
+        |rng: &mut Rng| {
+            let s = rng.range(8, 512);
+            (s, rng.range(1, s + 1), rng.range(1, 9), 2.0 + rng.f32() * 6.0, rng.next_u64())
+        },
+        |&(s, k, segments, radius, seed)| {
+            let mut rng = Rng::new(seed);
+            let row: Vec<f32> = (0..s).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            let p = SadsParams { segments, radius };
+            let mut cs = OpCounter::new();
+            let (idx, stats) = sads_topk(&row, k, &p, &mut cs);
+            // A tight sphere radius may prune a segment below its quota —
+            // by Eq. 5 those elements are negligible, so SADS returns
+            // fewer than k. Never more, and never empty.
+            star::prop_assert!(idx.len() <= k.min(s), "len {} > {}", idx.len(), k.min(s));
+            star::prop_assert!(!idx.is_empty(), "selection must be non-empty");
+            // With an effectively-unbounded radius the quota is exact.
+            let mut c2 = OpCounter::new();
+            let p_wide = SadsParams { segments, radius: 1e9 };
+            let (idx_wide, _) = sads_topk(&row, k, &p_wide, &mut c2);
+            star::prop_assert!(idx_wide.len() == k.min(s), "wide-radius len {}", idx_wide.len());
+            let mut seen = vec![false; s];
+            for &j in &idx {
+                star::prop_assert!(j < s, "index {j} out of range");
+                star::prop_assert!(!seen[j], "duplicate index {j}");
+                seen[j] = true;
+            }
+            star::prop_assert!((0.0..=1.0).contains(&stats.rho), "rho {}", stats.rho);
+            let mut cv = OpCounter::new();
+            let _ = vanilla_topk(&row, k, &mut cv);
+            star::prop_assert!(
+                cs.cmp <= cv.cmp + s as u64,
+                "sads {} !<= vanilla {}",
+                cs.cmp,
+                cv.cmp
+            );
+            Ok(())
+        },
+    );
+}
+
+/// The global maximum always survives SADS (it anchors its segment's
+/// sphere), so the softmax-critical element is never lost.
+#[test]
+fn prop_sads_keeps_global_max() {
+    testing::check(
+        803,
+        |rng: &mut Rng| {
+            let s = rng.range(4, 256);
+            (s, rng.range(1, s.min(32) + 1), rng.range(1, 7), rng.next_u64())
+        },
+        |&(s, k, segments, seed)| {
+            let mut rng = Rng::new(seed);
+            let row: Vec<f32> = (0..s).map(|_| rng.normal_f32(0.0, 3.0)).collect();
+            let arg_max =
+                (0..s).max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap()).unwrap();
+            let p = SadsParams { segments, radius: 5.0 };
+            let mut c = OpCounter::new();
+            let (idx, _) = sads_topk(&row, k, &p, &mut c);
+            star::prop_assert!(idx.contains(&arg_max), "global max not selected");
+            Ok(())
+        },
+    );
+}
+
+/// MRCA completeness + neighbor-only + bounded storage for every N.
+#[test]
+fn prop_mrca_invariants() {
+    for n in 1..=20 {
+        let sched = mrca_schedule(n);
+        assert_eq!(sched.len(), n);
+        let chk = verify_schedule(n, &sched).unwrap_or_else(|e| panic!("N={n}: {e}"));
+        assert!(chk.complete, "N={n}");
+        assert!(chk.max_resident <= 3, "N={n}");
+        assert!(chk.max_sends_per_cu <= 2, "N={n}");
+        assert!(total_hops(&sched) <= 2 * n * n, "N={n}: hop budget");
+    }
+}
+
+/// Batcher conservation: every pushed request is emitted exactly once,
+/// in arrival order, and batches never exceed the target (except a
+/// single oversize request).
+#[test]
+fn prop_batcher_conserves_requests() {
+    testing::check(
+        604,
+        |rng: &mut Rng| (rng.range(8, 128), rng.range(1, 40), rng.next_u64()),
+        |&(target, n, seed)| {
+            let mut rng = Rng::new(seed);
+            let cfg = BatcherConfig { target_t: target, max_wait_s: 0.0 };
+            let mut b = Batcher::new("v", cfg);
+            let mut pushed = Vec::new();
+            for id in 0..n as u64 {
+                let t = rng.range(1, target * 2);
+                pushed.push(id);
+                b.push(Request::new(id, "m", t, 64, 0.0));
+            }
+            let mut emitted = Vec::new();
+            let mut guard = 0;
+            while let Some(batch) = poll_or_flush(&mut b) {
+                let rows = batch.rows();
+                if batch.requests.len() > 1 {
+                    star::prop_assert!(rows <= target, "batch over target: {rows}");
+                }
+                for r in &batch.requests {
+                    emitted.push(r.id);
+                }
+                guard += 1;
+                star::prop_assert!(guard < 1000, "batcher must terminate");
+            }
+            star::prop_assert!(emitted == pushed, "exactly-once order: {emitted:?} vs {pushed:?}");
+            Ok(())
+        },
+    );
+}
+
+fn poll_or_flush(b: &mut Batcher) -> Option<Batch> {
+    b.poll(1e9).or_else(|| b.flush(1e9))
+}
