@@ -1,83 +1,85 @@
-//! End-to-end driver: a small transformer model (4 layers of the
-//! AOT-compiled block, ~1.3M parameters at H=128) served through the
-//! full stack — PJRT artifacts for the numerics, the coordinator's
-//! batching for the request flow — plus the cycle-level simulator
-//! projecting the same workload onto the STAR ASIC. Reports
-//! latency/throughput per layer and end to end (EXPERIMENTS.md §E2E).
+//! End-to-end driver: the full serving stack — router → dynamic batcher
+//! → worker pool — executing *real* sparse attention through the native
+//! pipeline backend, plus the cycle-level simulator projecting the same
+//! configuration onto the STAR ASIC (one `PipelineConfig` describes
+//! both). Reports latency/throughput and the per-stage breakdown.
 //!
-//!     make artifacts && cargo run --release --example e2e_inference
+//!     cargo run --release --example e2e_inference
 
 use star::config::AccelConfig;
-use star::runtime::engine::artifacts_available;
-use star::runtime::Engine;
+use star::coordinator::{Backend, BatcherConfig, Request, Router, Server, ServerConfig, Variant};
+use star::pipeline::PipelineConfig;
 use star::sim::dram::DramChannel;
-use star::sim::pipeline::{simulate, FeatureSet, WorkloadShape};
+use star::sim::pipeline::{simulate, WorkloadShape};
 use star::tensor::Mat;
-use star::util::{Rng, Summary};
-
-const LAYERS: usize = 4;
+use star::util::Rng;
+use std::collections::BTreeMap;
 
 fn main() -> star::Result<()> {
-    let dir = star::runtime::manifest::default_dir();
-    if !artifacts_available(&dir) {
-        eprintln!("no artifacts at {dir:?}; run `make artifacts` first");
-        return Ok(());
-    }
-    let engine = Engine::load_dir(&dir)?;
-    let entry = engine.get("transformer_block").expect("block artifact");
-    let (s, h) = (entry.entry.inputs[0][0], entry.entry.inputs[0][1]);
-    println!("e2e model: {LAYERS} layers, S={s}, H={h} (sparse attention inside each block)");
+    let (s, d, h) = (1024usize, 64usize, 768usize);
+    let pipeline = PipelineConfig::star().with_threads(1);
 
-    // Per-layer weights (fixed seed — a 'checkpoint').
+    // KV context per variant (a fixed 'session' the requests attend into).
     let mut rng = Rng::new(2024);
-    let layers: Vec<Vec<Mat>> = (0..LAYERS)
-        .map(|_| {
-            entry.entry.inputs[1..]
-                .iter()
-                .map(|shape| Mat::randn(shape[0], shape[1], (1.0 / (h as f32).sqrt()) * 1.0, &mut rng))
-                .collect()
-        })
-        .collect();
-
-    // Serve a stream of sequences through the 4-layer stack.
-    let mut lat = Summary::new();
-    let mut per_layer = Summary::new();
-    let n_seqs: usize = 16;
-    let t_all = std::time::Instant::now();
-    for i in 0..n_seqs as u64 {
-        let mut x = Mat::randn(s, h, 1.0, &mut Rng::new(100 + i));
-        let t0 = std::time::Instant::now();
-        for weights in &layers {
-            let mut inputs = vec![x.clone()];
-            inputs.extend(weights.iter().cloned());
-            let t1 = std::time::Instant::now();
-            let out = engine.run("transformer_block", &inputs)?;
-            per_layer.add(t1.elapsed().as_secs_f64());
-            x = out.into_iter().next().unwrap();
-        }
-        lat.add(t0.elapsed().as_secs_f64());
-        for v in &x.data {
-            assert!(v.is_finite(), "activations must stay finite through the stack");
-        }
-    }
-    let wall = t_all.elapsed().as_secs_f64();
-    println!(
-        "PJRT (CPU, interpret-mode Pallas): per-layer p50 = {:.2} ms, per-seq p50 = {:.2} ms, \
-         throughput = {:.1} seq/s ({:.0} tok/s)",
-        1e3 * per_layer.median(),
-        1e3 * lat.median(),
-        n_seqs as f64 / wall,
-        (n_seqs * s) as f64 / wall,
+    let mut contexts = BTreeMap::new();
+    contexts.insert(
+        "sparse_attention".to_string(),
+        (Mat::randn(s, d, 1.0, &mut rng), Mat::randn(s, d, 1.0, &mut rng)),
+    );
+    let router = Router::new(vec![Variant {
+        name: "sparse_attention".into(),
+        model: "gpt2".into(),
+        max_t: 128,
+        s,
+    }]);
+    let server = Server::start(
+        router,
+        Backend::Native { pipeline, contexts },
+        ServerConfig { batcher: BatcherConfig { target_t: 128, max_wait_s: 2e-3 }, workers: 2 },
     );
 
-    // The same workload projected on the STAR ASIC by the simulator.
-    let shape = WorkloadShape::new(s, s, 32, h, 0.2);
-    let r = simulate(&shape, &FeatureSet::star(), &AccelConfig::default(), &DramChannel::accel_256());
+    // An open-loop client: 64 requests of 8–32 query rows each.
+    let n: u64 = 64;
+    let t_all = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for id in 0..n {
+        let t = 8 * rng.range(1, 5);
+        let mut req = Request::new(id, "gpt2", t, s, 0.0);
+        req.q = Some(Mat::randn(t, d, 1.0, &mut rng));
+        rxs.push(server.submit(req)?);
+    }
+    let mut rows_served = 0usize;
+    for rx in rxs {
+        let resp = rx.recv().expect("response");
+        let out = resp.output.expect("native backend returns real outputs");
+        assert!(out.data.iter().all(|x| x.is_finite()), "outputs must stay finite");
+        rows_served += out.rows;
+    }
+    let wall = t_all.elapsed().as_secs_f64();
+    let snap = server.shutdown();
+    println!("native serving (predict -> top-k -> KV-gen -> SU-FA in-process):");
+    println!("{}", snap.render());
     println!(
-        "STAR ASIC projection: {:.1} us/layer-head-group, {:.0} GOPS, {:.0} GOPS/W",
+        "end-to-end: {n} requests, {rows_served} query rows in {:.1} ms ({:.0} rows/s)",
+        wall * 1e3,
+        rows_served as f64 / wall,
+    );
+
+    // The very configuration just served, projected on the STAR ASIC:
+    // the pipeline config converts losslessly to the simulator's
+    // FeatureSet (same stage axes, same scheduling flags).
+    let shape = WorkloadShape::new(128, s, d, h, pipeline.keep_ratio);
+    let r = simulate(
+        &shape,
+        &pipeline.feature_set(),
+        &AccelConfig::default(),
+        &DramChannel::accel_256(),
+    );
+    println!(
+        "STAR ASIC projection (same FeatureSet): {:.1} us/batch, {:.0} GOPS, {:.0} GOPS/W",
         r.total_s * 1e6,
         r.eff_gops,
-        r.energy_eff_gops_w()
+        r.energy_eff_gops_w(),
     );
     Ok(())
 }

@@ -73,9 +73,37 @@ impl Selection {
         Selection { rows: vec![(0..s).collect(); t] }
     }
 
-    /// Causal selection: row i attends to keys 0..=i (for T == S).
+    /// Causal selection: row i attends to keys 0..=i. **Only meaningful
+    /// for square attention (T == S)**: with S < T the tail rows would
+    /// reference keys that don't exist, and with S > T the late keys are
+    /// silently never attended. Consumption sites that assume causality
+    /// must pair this with [`Selection::assert_in_range`] (the attention
+    /// kernels do so on every selection).
     pub fn causal(t: usize) -> Selection {
         Selection { rows: (0..t).map(|i| (0..=i).collect()).collect() }
+    }
+
+    /// Causal selection checked against an explicit context length:
+    /// asserts `t == s`, the invariant [`Selection::causal`] silently
+    /// assumes.
+    pub fn causal_checked(t: usize, s: usize) -> Selection {
+        assert_eq!(t, s, "Selection::causal assumes a square T == S attention (got T={t}, S={s})");
+        Selection::causal(t)
+    }
+
+    /// Panic if any selected index is out of range for a context of `s`
+    /// keys. Called by every consumer that indexes K/V with the selection
+    /// so a T ≠ S misuse of [`Selection::causal`] fails loudly instead of
+    /// reading the wrong rows.
+    pub fn assert_in_range(&self, s: usize) {
+        for (i, row) in self.rows.iter().enumerate() {
+            if let Some(&bad) = row.iter().find(|&&j| j >= s) {
+                panic!(
+                    "selection row {i} references key {bad} but the context has only {s} keys \
+                     (Selection::causal used with T != S?)"
+                );
+            }
+        }
     }
 
     /// Total number of selected (query, key) pairs.
@@ -83,10 +111,14 @@ impl Selection {
         self.rows.iter().map(|r| r.len()).sum()
     }
 
-    /// Density relative to a T×S dense attention.
+    /// Density relative to a T×S dense attention. Convention: an *empty
+    /// problem* (no query rows, or `s == 0`) is vacuously dense and
+    /// returns 1.0 — so `Selection::full(t, s).density(s) == 1.0` for
+    /// every shape, and density ratios stay well-defined in degenerate
+    /// sweeps.
     pub fn density(&self, s: usize) -> f64 {
         if self.rows.is_empty() || s == 0 {
-            return 0.0;
+            return 1.0;
         }
         self.nnz() as f64 / (self.rows.len() * s) as f64
     }
@@ -128,5 +160,31 @@ mod tests {
     fn union_keys_dedup() {
         let sel = Selection { rows: vec![vec![3, 1], vec![1, 5]] };
         assert_eq!(sel.union_keys(8), vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn density_empty_problem_is_vacuously_dense() {
+        // Convention: consistent with Selection::full always being 1.0.
+        assert_eq!(Selection::full(0, 8).density(8), 1.0);
+        assert_eq!(Selection::full(4, 0).density(0), 1.0);
+        assert_eq!(Selection { rows: vec![] }.density(16), 1.0);
+    }
+
+    #[test]
+    fn causal_checked_accepts_square() {
+        assert_eq!(Selection::causal_checked(5, 5).nnz(), 15);
+    }
+
+    #[test]
+    #[should_panic(expected = "assumes a square")]
+    fn causal_checked_rejects_rectangular() {
+        let _ = Selection::causal_checked(8, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "references key")]
+    fn assert_in_range_catches_causal_misuse() {
+        // causal(8) against a 4-key context: rows 4..8 reference keys ≥ 4.
+        Selection::causal(8).assert_in_range(4);
     }
 }

@@ -57,6 +57,7 @@ pub fn dense_attention(inp: &AttnInputs, sram_budget: usize, c: &mut OpCounter) 
 pub fn masked_attention_oracle(inp: &AttnInputs, sel: &Selection) -> Mat {
     let (t, d) = (inp.t(), inp.d());
     assert_eq!(sel.rows.len(), t);
+    sel.assert_in_range(inp.s());
     let mut out = Mat::zeros(t, d);
     for i in 0..t {
         let keys = &sel.rows[i];

@@ -66,6 +66,9 @@ pub fn sufa_attention(
 ) -> SufaResult {
     let (t, s, d) = (inp.t(), inp.s(), inp.d());
     assert_eq!(sel.rows.len(), t);
+    // Fail loudly on selections built for a different context length
+    // (e.g. Selection::causal with T != S) instead of reading wrong rows.
+    sel.assert_in_range(s);
     let f = 4u64;
 
     // Traffic: Q once, O once, and only the KV rows some query selected

@@ -1,16 +1,18 @@
 //! Algorithm-performance figures: Fig. 9, 11, 16, 17, 18 and Table II.
+//!
+//! Every figure/table that exercises the predict → top-k → KV-gen →
+//! formal sequence runs it through [`SparseAttentionPipeline`] — the
+//! harness configures stages, it no longer hand-wires them.
 
 use super::{f, header, row};
 use crate::arith::{EquivWeights, OpCounter};
-use crate::attention::{
-    dense_attention, sufa_attention, AttnInputs, Selection, SufaParams, UpdateOrder,
-};
+use crate::attention::{dense_attention, AttnInputs};
 use crate::config::{ModelConfig, SparsityConfig};
+use crate::pipeline::{PipelineConfig, PipelineInputs, SparseAttentionPipeline};
+use crate::sim::pipeline::{FormalKind, PredictKind, TopkKind};
 use crate::sparsity::distribution::TypeMix;
-use crate::sparsity::topk::{sads_topk, vanilla_topk, SadsParams};
-use crate::sparsity::hitrate::matrix_hit_rate;
-use crate::sparsity::{hit_rate, DistType, PredictScheme, Predictor};
-use crate::tensor::Mat;
+use crate::sparsity::{hit_rate, DistType};
+use crate::tensor::{topk_indices, Mat};
 use crate::util::stats::geomean;
 use crate::util::Rng;
 use crate::workload::{AttnWorkload, ScoreGen, TypeMixSpec};
@@ -45,7 +47,9 @@ pub fn fig9_distribution_mix() -> Vec<(String, [f64; 3])> {
 }
 
 /// Fig. 11: multiplication/exponential counts of ascend vs descend
-/// updating. Returns (order, mul, exp) for an 8k-token selection.
+/// updating. Returns (order, mul, exp) for an 8k-token selection. The
+/// pipeline runs with oracle scores (`PredictKind::None`) so the
+/// selection is the true top-25%, exactly the figure's setup.
 pub fn fig11_update_orders() -> Vec<(&'static str, u64, u64)> {
     header("Fig. 11 — SU-FA update orders (S=8192, keep 25%)");
     let mut rng = Rng::new(11);
@@ -53,23 +57,19 @@ pub fn fig11_update_orders() -> Vec<(&'static str, u64, u64)> {
     let q = Mat::randn(t, d, 1.0, &mut rng);
     let k = Mat::randn(s, d, 1.0, &mut rng);
     let v = Mat::randn(s, d, 1.0, &mut rng);
-    let inp = AttnInputs::new(&q, &k, &v);
-    // True-score descending selection.
-    let keep = s / 4;
-    let mut sel_rows = Vec::with_capacity(t);
-    for i in 0..t {
-        let scores: Vec<f32> =
-            (0..s).map(|j| (0..d).map(|x| q.at(i, x) * k.at(j, x)).sum()).collect();
-        let mut c = OpCounter::new();
-        sel_rows.push(vanilla_topk(&scores, keep, &mut c));
-    }
-    let sel = Selection { rows: sel_rows };
     let mut out = Vec::new();
     row("order", &["mul".into(), "exp".into(), "cmp".into()]);
-    for (name, order) in [("descend", UpdateOrder::Descend), ("ascend", UpdateOrder::Ascend)] {
-        let mut c = OpCounter::new();
-        let p = SufaParams { order, ..Default::default() };
-        let _ = sufa_attention(&inp, &sel, &p, &mut c);
+    for (name, formal) in
+        [("descend", FormalKind::SufaDescend), ("ascend", FormalKind::SufaAscend)]
+    {
+        let cfg = PipelineConfig {
+            predict: PredictKind::None,
+            topk: TopkKind::Vanilla,
+            formal,
+            ..PipelineConfig::star().with_keep(0.25)
+        };
+        let r = SparseAttentionPipeline::new(cfg).run(&PipelineInputs::qkv(&q, &k, &v));
+        let c = &r.ops.formal;
         row(name, &[f(c.mul as f64), f(c.exp as f64), f(c.cmp as f64)]);
         out.push((name, c.mul, c.exp));
     }
@@ -131,9 +131,9 @@ pub fn fig17_hit_rates() -> Vec<(&'static str, usize, usize, f64)> {
     let model = ModelConfig::preset("gpt2").unwrap();
     let mut out = Vec::new();
     row("scheme/layer", &["top-20%".into(), "top-10%".into(), "top-5%".into()]);
-    for scheme in [PredictScheme::Slzs, PredictScheme::Dlzs] {
-        let name = match scheme {
-            PredictScheme::Slzs => "SLZS",
+    for predict in [PredictKind::Slzs, PredictKind::DlzsCross] {
+        let name = match predict {
+            PredictKind::Slzs => "SLZS",
             _ => "DLZS",
         };
         for layer in [0usize, 5, 11] {
@@ -142,15 +142,28 @@ pub fn fig17_hit_rates() -> Vec<(&'static str, usize, usize, f64)> {
             let sigma = 1.0 + 0.15 * layer as f32;
             let mut rng = Rng::new(17 + layer as u64);
             let wl = AttnWorkload::generate(&model, 256, 64, &mut rng);
-            let pred = Predictor::new(scheme, 7);
+            let q = scale(&wl.q, sigma);
+            let exact = q.matmul(&wl.k.transpose());
+            // One pipeline run at the widest keep: vanilla selections come
+            // back in descending estimated-score order, so the top-10%/5%
+            // selections are exact prefixes of the top-20% one.
+            let cfg = PipelineConfig {
+                predict,
+                topk: TopkKind::Vanilla,
+                ..PipelineConfig::star().with_keep(0.20)
+            };
+            let r = SparseAttentionPipeline::new(cfg)
+                .run(&PipelineInputs::qkv(&q, &wl.k, &wl.v));
+            let s = exact.cols;
             let mut cells = Vec::new();
             for pct in [20usize, 10, 5] {
-                let keep = (256 * pct / 100).max(1);
-                let mut c = OpCounter::new();
-                let q = scale(&wl.q, sigma);
-                let est = pred.approx_scores(&q, &wl.k, &mut c);
-                let exact = q.matmul(&wl.k.transpose());
-                let hr = matrix_hit_rate(&est, &exact, keep);
+                let keep = ((s as f64 * pct as f64 / 100.0).round() as usize).clamp(1, r.keep);
+                let hr = (0..exact.rows)
+                    .map(|i| {
+                        hit_rate(&r.selection.rows[i][..keep], &topk_indices(exact.row(i), keep))
+                    })
+                    .sum::<f64>()
+                    / exact.rows as f64;
                 cells.push(format!("{:>8.1}%", 100.0 * hr));
                 out.push((name, layer, pct, hr));
             }
@@ -175,54 +188,23 @@ pub fn fig18_ablation() -> Vec<(String, f64, f64)> {
     let ew = EquivWeights::default();
     let mut rng = Rng::new(18);
     let (t, s, d) = (64usize, 1024usize, 64usize);
-    let keep = s / 4;
-    let gen = ScoreGen::default();
 
     // Shared true attention inputs.
     let q = Mat::randn(t, d, 1.0, &mut rng);
     let k = Mat::randn(s, d, 1.0, &mut rng);
     let v = Mat::randn(s, d, 1.0, &mut rng);
-    let inp = AttnInputs::new(&q, &k, &v);
-    // Estimated rows with realistic Type I/II structure for the sorters.
-    let est_rows: Vec<Vec<f32>> = gen.rows(t, s, &mut rng);
+    let inputs = PipelineInputs::qkv(&q, &k, &v);
 
+    // Each ablation point is one pipeline configuration; the equivalent-
+    // adds come from the pipeline's per-stage counters.
     let count = |dlzs: bool, sads: bool, sufa: bool| -> f64 {
-        let mut c = OpCounter::new();
-        // --- prediction stage ---
-        if dlzs {
-            let pred = Predictor::new(PredictScheme::Dlzs, 7);
-            let _ = pred.approx_scores(&q, &k, &mut c);
-        } else {
-            let pred = Predictor::new(PredictScheme::LowBitMul, 4);
-            let _ = pred.approx_scores(&q, &k, &mut c);
-        }
-        // --- top-k stage ---
-        let mut sel_rows = Vec::with_capacity(t);
-        for row in est_rows.iter() {
-            if sads {
-                let (idx, _) = sads_topk(row, keep, &SadsParams::default(), &mut c);
-                sel_rows.push(idx);
-            } else {
-                sel_rows.push(vanilla_topk(row, keep, &mut c));
-            }
-        }
-        let sel = Selection { rows: sel_rows };
-        // --- formal stage ---
-        if sufa {
-            let p = SufaParams { order: UpdateOrder::Descend, ..Default::default() };
-            let _ = sufa_attention(&inp, &sel, &p, &mut c);
-        } else {
-            // FA-2 over the selected pairs ≈ masked flash; approximate by
-            // SU-FA's op profile plus FA's per-tile refresh overhead,
-            // measured directly via the ascend order (which retains the
-            // rescale work) plus the comparison stream.
-            let p = SufaParams { order: UpdateOrder::Ascend, ..Default::default() };
-            let r = sufa_attention(&inp, &sel, &p, &mut c);
-            // FA also pays the cross-tile max comparisons.
-            c.tally(crate::arith::OpKind::Cmp, (t * keep) as u64);
-            let _ = r;
-        }
-        c.equivalent_adds(&ew)
+        let cfg = PipelineConfig {
+            predict: if dlzs { PredictKind::DlzsCross } else { PredictKind::LowBitMul },
+            topk: if sads { TopkKind::Sads } else { TopkKind::Vanilla },
+            formal: if sufa { FormalKind::SufaDescend } else { FormalKind::Flash2 },
+            ..PipelineConfig::star().with_keep(0.25)
+        };
+        SparseAttentionPipeline::new(cfg).run(&inputs).equivalent_adds(&ew)
     };
 
     let baseline = count(false, false, false);
@@ -242,21 +224,17 @@ pub fn fig18_ablation() -> Vec<(String, f64, f64)> {
 
     header("Fig. 18(b) — accuracy proxy vs reduced complexity over γ");
     row("γ", &["out err".into(), "complexity kept".into()]);
+    let inp = AttnInputs::new(&q, &k, &v);
+    let mut cd = OpCounter::new();
+    let dense = dense_attention(&inp, usize::MAX, &mut cd);
     for gamma in [0.05, 0.1, 0.15, 0.2, 0.3, 0.5] {
-        let keep_g = ((s as f64 * gamma) as usize).max(1);
-        let mut c = OpCounter::new();
-        let mut sel_rows = Vec::with_capacity(t);
-        for row in est_rows.iter() {
-            let (idx, _) = sads_topk(row, keep_g, &SadsParams::default(), &mut c);
-            sel_rows.push(idx);
-        }
-        let sel = Selection { rows: sel_rows };
-        let p = SufaParams::default();
-        let r = sufa_attention(&inp, &sel, &p, &mut c);
-        let mut cd = OpCounter::new();
-        let dense = dense_attention(&inp, usize::MAX, &mut cd);
+        let cfg = PipelineConfig {
+            predict: PredictKind::DlzsCross,
+            ..PipelineConfig::star().with_keep(gamma)
+        };
+        let r = SparseAttentionPipeline::new(cfg).run(&inputs);
         let err = r.out.rel_err(&dense);
-        let kept = c.equivalent_adds(&ew) / cd.equivalent_adds(&ew);
+        let kept = r.equivalent_adds(&ew) / cd.equivalent_adds(&ew);
         row(&format!("{gamma:.2}"), &[f(err as f64), f(kept)]);
     }
     out
@@ -276,36 +254,21 @@ pub fn table2_accuracy() -> Vec<(String, &'static str, f64, f64)> {
         let s = m.seq_len.min(512);
         let wl = AttnWorkload::generate(&m, s, 64, &mut rng);
         let inp = AttnInputs::new(&wl.q, &wl.k, &wl.v);
+        let mut cd = OpCounter::new();
+        let dense = dense_attention(&inp, usize::MAX, &mut cd);
+        // Truth: exact top-k in logit units (the pipeline's estimate is
+        // scaled the same way, so the SADS radius is calibrated).
+        let mut exact = wl.q.matmul(&wl.k.transpose());
+        exact.scale(inp.scale);
         for (cfg_name, cfg) in
             [("standard", SparsityConfig::standard()), ("aggressive", SparsityConfig::aggressive())]
         {
-            let keep = cfg.keep(s);
-            let pred = Predictor::new(PredictScheme::Dlzs, cfg.predict_bits);
-            let mut c = OpCounter::new();
-            // Scores in softmax-logit units (/√d): the sphere radius r=5
-            // is calibrated to that scale (Sec. IV-B).
-            let inv_sqrt_d = 1.0 / (wl.q.cols as f32).sqrt();
-            let mut est = pred.approx_scores(&wl.q, &wl.k, &mut c);
-            est.scale(inv_sqrt_d);
-            let mut exact = wl.q.matmul(&wl.k.transpose());
-            exact.scale(inv_sqrt_d);
-            let mut hit_acc = 0.0;
-            let mut sel_rows = Vec::new();
-            let mut truth_rows = Vec::new();
-            for i in 0..est.rows {
-                let (sel, _) =
-                    sads_topk(est.row(i), keep, &SadsParams { radius: cfg.radius, segments: cfg.segments }, &mut c);
-                let truth = vanilla_topk(exact.row(i), keep, &mut c);
-                hit_acc += hit_rate(&sel, &truth);
-                sel_rows.push(sel);
-                truth_rows.push(truth);
-            }
-            let hr = hit_acc / est.rows as f64;
-            let sel = Selection { rows: sel_rows };
-            let p = SufaParams::default();
-            let r = sufa_attention(&inp, &sel, &p, &mut c);
-            let mut cd = OpCounter::new();
-            let dense = dense_attention(&inp, usize::MAX, &mut cd);
+            let pipe = SparseAttentionPipeline::new(PipelineConfig::from_sparsity(&cfg));
+            let r = pipe.run(&PipelineInputs::qkv(&wl.q, &wl.k, &wl.v));
+            let hr = (0..exact.rows)
+                .map(|i| hit_rate(&r.selection.rows[i], &topk_indices(exact.row(i), r.keep)))
+                .sum::<f64>()
+                / exact.rows as f64;
             let err = r.out.rel_err(&dense) as f64;
             row(&m.name, &[cfg_name.into(), f(err), format!("{:>8.1}%", 100.0 * hr)]);
             out.push((m.name.clone(), cfg_name, err, hr));

@@ -16,10 +16,17 @@ struct Inner {
     batch_rows: Summary,
     requests: u64,
     rejected: u64,
+    failed: u64,
     batches: u64,
     rows: u64,
     first_s: Option<f64>,
     last_s: f64,
+    // Per-stage busy time of the native sparse-attention pipeline.
+    stage_predict_s: f64,
+    stage_topk_s: f64,
+    stage_kv_gen_s: f64,
+    stage_formal_s: f64,
+    stalls: u64,
 }
 
 /// A point-in-time copy for reporting.
@@ -27,6 +34,9 @@ struct Inner {
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub rejected: u64,
+    /// Batches whose backend execution errored (responses carried no
+    /// output; the error text went to the `Response::variant` field).
+    pub failed: u64,
     pub batches: u64,
     pub rows: u64,
     pub latency_p50_s: f64,
@@ -36,6 +46,14 @@ pub struct MetricsSnapshot {
     pub mean_batch_rows: f64,
     /// Served query rows per second over the observation window.
     pub rows_per_s: f64,
+    /// Aggregate busy seconds per pipeline stage (native backend only;
+    /// all zero for the PJRT/simulator backends).
+    pub stage_predict_s: f64,
+    pub stage_topk_s: f64,
+    pub stage_kv_gen_s: f64,
+    pub stage_formal_s: f64,
+    /// SU-FA max-misprediction recoveries across all served batches.
+    pub stalls: u64,
 }
 
 impl Metrics {
@@ -65,12 +83,28 @@ impl Metrics {
         self.inner.lock().unwrap().rejected += 1;
     }
 
+    /// One batch whose backend execution failed.
+    pub fn record_failure(&self) {
+        self.inner.lock().unwrap().failed += 1;
+    }
+
+    /// Accumulate one batch's per-stage pipeline timing (native backend).
+    pub fn record_stage_times(&self, t: &crate::pipeline::StageTiming, stalls: u64) {
+        let mut m = self.inner.lock().unwrap();
+        m.stage_predict_s += t.predict_s;
+        m.stage_topk_s += t.topk_s;
+        m.stage_kv_gen_s += t.kv_gen_s;
+        m.stage_formal_s += t.formal_s;
+        m.stalls += stalls;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
         let window = (m.last_s - m.first_s.unwrap_or(0.0)).max(1e-9);
         MetricsSnapshot {
             requests: m.requests,
             rejected: m.rejected,
+            failed: m.failed,
             batches: m.batches,
             rows: m.rows,
             latency_p50_s: m.latency.percentile(50.0),
@@ -79,18 +113,24 @@ impl Metrics {
             queue_mean_s: m.queue.mean(),
             mean_batch_rows: m.batch_rows.mean(),
             rows_per_s: m.rows as f64 / window,
+            stage_predict_s: m.stage_predict_s,
+            stage_topk_s: m.stage_topk_s,
+            stage_kv_gen_s: m.stage_kv_gen_s,
+            stage_formal_s: m.stage_formal_s,
+            stalls: m.stalls,
         }
     }
 }
 
 impl MetricsSnapshot {
     pub fn render(&self) -> String {
-        format!(
-            "requests={} rejected={} batches={} rows={} \
+        let mut s = format!(
+            "requests={} rejected={} failed={} batches={} rows={} \
              p50={:.3}ms p95={:.3}ms mean={:.3}ms queue={:.3}ms \
              batch_rows={:.1} throughput={:.0} rows/s",
             self.requests,
             self.rejected,
+            self.failed,
             self.batches,
             self.rows,
             self.latency_p50_s * 1e3,
@@ -99,7 +139,20 @@ impl MetricsSnapshot {
             self.queue_mean_s * 1e3,
             self.mean_batch_rows,
             self.rows_per_s
-        )
+        );
+        let stage_total =
+            self.stage_predict_s + self.stage_topk_s + self.stage_kv_gen_s + self.stage_formal_s;
+        if stage_total > 0.0 {
+            s.push_str(&format!(
+                "\nstages: predict={:.3}ms topk={:.3}ms kv_gen={:.3}ms formal={:.3}ms stalls={}",
+                self.stage_predict_s * 1e3,
+                self.stage_topk_s * 1e3,
+                self.stage_kv_gen_s * 1e3,
+                self.stage_formal_s * 1e3,
+                self.stalls
+            ));
+        }
+        s
     }
 }
 

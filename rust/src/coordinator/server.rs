@@ -4,20 +4,53 @@
 //! Architecture: callers `submit()` requests through a channel to the
 //! dispatcher thread, which routes (shape buckets), batches (dynamic
 //! batching per variant), and hands sealed batches to a worker pool.
-//! Workers execute on the configured backend — the PJRT engine for real
-//! numerics, or the cycle-level simulator for timing studies — and reply
-//! per-request. Python never runs anywhere in this path.
+//! Workers execute on the configured backend — the native
+//! [`crate::pipeline::SparseAttentionPipeline`] for real sparse-attention
+//! numerics, the PJRT engine (behind the `pjrt` feature), or the
+//! cycle-level simulator for timing studies — and reply per-request.
+//! Python never runs anywhere in this path.
+//!
+//! # Run the native server
+//!
+//! ```no_run
+//! use star::coordinator::{Backend, Request, Router, Server, ServerConfig, Variant};
+//! use star::pipeline::PipelineConfig;
+//! use star::tensor::Mat;
+//! use star::util::Rng;
+//! use std::collections::BTreeMap;
+//!
+//! let mut rng = Rng::new(1);
+//! let (s, d) = (1024, 64);
+//! let mut contexts = BTreeMap::new();
+//! contexts.insert(
+//!     "sparse_attention".to_string(),
+//!     (Mat::randn(s, d, 1.0, &mut rng), Mat::randn(s, d, 1.0, &mut rng)),
+//! );
+//! let router = Router::new(vec![Variant {
+//!     name: "sparse_attention".into(), model: "gpt2".into(), max_t: 128, s,
+//! }]);
+//! let backend = Backend::Native { pipeline: PipelineConfig::star(), contexts };
+//! let server = Server::start(router, backend, ServerConfig::default());
+//! let mut req = Request::new(0, "gpt2", 8, s, 0.0);
+//! req.q = Some(Mat::randn(8, d, 1.0, &mut rng));
+//! let out = server.submit(req).unwrap().recv().unwrap();
+//! assert!(out.output.is_some());
+//! println!("{}", server.shutdown().render()); // includes per-stage times
+//! ```
 
 use super::batcher::{Batch, Batcher, BatcherConfig};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::router::{Request, Response, Router};
 use crate::config::AccelConfig;
+use crate::pipeline::{PipelineConfig, PipelineInputs, SparseAttentionPipeline};
+#[cfg(feature = "pjrt")]
 use crate::runtime::Engine;
 use crate::sim::dram::DramChannel;
 use crate::sim::pipeline::{simulate, FeatureSet, WorkloadShape};
 use crate::tensor::Mat;
 use crate::Result;
 use std::collections::BTreeMap;
+#[cfg(feature = "pjrt")]
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -28,8 +61,16 @@ use std::time::Instant;
 /// PJRT client is **not** thread-safe, so each worker thread constructs
 /// its own [`Engine`] lazily from `artifact_dir` on first use.
 pub enum Backend {
+    /// Serve real sparse attention natively: every batch runs the tiled
+    /// predict → top-k → KV-gen → SU-FA pipeline in-process. `contexts`
+    /// maps variant name → (K, V) context matrices. Per-stage busy times
+    /// and SU-FA stalls land in the server metrics. Note each server
+    /// worker runs its own pipeline; set `pipeline.threads = 1` to avoid
+    /// oversubscription when `ServerConfig::workers` is large.
+    Native { pipeline: PipelineConfig, contexts: BTreeMap<String, (Mat, Mat)> },
     /// Execute the AOT-compiled PJRT artifact named by each variant.
     /// `contexts` maps variant name → (K, V) context matrices.
+    #[cfg(feature = "pjrt")]
     Pjrt { artifact_dir: PathBuf, contexts: BTreeMap<String, (Mat, Mat)> },
     /// Model the accelerator: latency from the cycle-level simulator,
     /// stretched by `time_scale` wall-clock seconds per simulated second.
@@ -82,14 +123,14 @@ impl Server {
             let be = backend.clone();
             let m = metrics.clone();
             workers.push(std::thread::spawn(move || {
-                // Per-worker PJRT engine, built on first use (the client
-                // is not Send; it must live on this thread).
-                let mut engine: Option<Engine> = None;
+                // Per-worker backend state (the PJRT client is not Send;
+                // it must be built lazily on this thread).
+                let mut state = WorkerState::default();
                 loop {
                     let job = rx.lock().unwrap().recv();
                     match job {
                         Ok((batch, replies)) => {
-                            execute_batch(&be, &mut engine, batch, replies, &m, started)
+                            execute_batch(&be, &mut state, batch, replies, &m, started)
                         }
                         Err(_) => break,
                     }
@@ -204,9 +245,17 @@ fn dispatch(
     let _ = work_tx.send((batch, replies));
 }
 
+/// Per-worker backend state.
+#[derive(Default)]
+struct WorkerState {
+    /// Per-worker PJRT engine, built on first use.
+    #[cfg(feature = "pjrt")]
+    engine: Option<Engine>,
+}
+
 fn execute_batch(
     backend: &Backend,
-    engine_slot: &mut Option<Engine>,
+    #[allow(unused_variables)] state: &mut WorkerState,
     batch: Batch,
     replies: Vec<Sender<Response>>,
     metrics: &Metrics,
@@ -214,12 +263,26 @@ fn execute_batch(
 ) {
     let sealed = batch.sealed_s;
     match backend {
-        Backend::Pjrt { artifact_dir, contexts } => {
-            let out = ensure_engine(engine_slot, artifact_dir)
-                .and_then(|engine| run_pjrt(engine, contexts, &batch));
+        Backend::Native { pipeline, contexts } => {
+            let out = run_native(pipeline, contexts, &batch, metrics);
             let now = started.elapsed().as_secs_f64();
+            // Surface misconfiguration instead of silently serving empty
+            // outputs: count it and carry the message to every client of
+            // the batch (mirroring the "rejected: …" path).
+            let error = out
+                .as_ref()
+                .err()
+                .map(|e| {
+                    metrics.record_failure();
+                    eprintln!("native backend error on variant {}: {e}", batch.variant);
+                    format!("error: {e}")
+                });
+            let mut rows = out.unwrap_or_default();
             for (i, (req, reply)) in batch.requests.iter().zip(replies).enumerate() {
-                let output = out.as_ref().ok().map(|rows| rows[i].clone());
+                let (output, variant) = match &error {
+                    None => (rows[i].take(), batch.variant.clone()),
+                    Some(msg) => (None, msg.clone()),
+                };
                 let latency = now - req.arrival_s;
                 let queue = sealed - req.arrival_s;
                 metrics.record_response(latency, queue, now);
@@ -228,7 +291,36 @@ fn execute_batch(
                     output,
                     latency_s: latency,
                     queue_s: queue,
-                    variant: batch.variant.clone(),
+                    variant,
+                });
+            }
+        }
+        #[cfg(feature = "pjrt")]
+        Backend::Pjrt { artifact_dir, contexts } => {
+            let out = ensure_engine(&mut state.engine, artifact_dir)
+                .and_then(|engine| run_pjrt(engine, contexts, &batch));
+            let now = started.elapsed().as_secs_f64();
+            // Same error surfacing as the Native arm: count the failed
+            // batch and carry the message to every client.
+            let error = out.as_ref().err().map(|e| {
+                metrics.record_failure();
+                eprintln!("pjrt backend error on variant {}: {e}", batch.variant);
+                format!("error: {e}")
+            });
+            for (i, (req, reply)) in batch.requests.iter().zip(replies).enumerate() {
+                let (output, variant) = match &error {
+                    None => (out.as_ref().ok().map(|rows| rows[i].clone()), batch.variant.clone()),
+                    Some(msg) => (None, msg.clone()),
+                };
+                let latency = now - req.arrival_s;
+                let queue = sealed - req.arrival_s;
+                metrics.record_response(latency, queue, now);
+                let _ = reply.send(Response {
+                    id: req.id,
+                    output,
+                    latency_s: latency,
+                    queue_s: queue,
+                    variant,
                 });
             }
         }
@@ -258,7 +350,74 @@ fn execute_batch(
     }
 }
 
+/// Execute one LTPP batch through the native sparse-attention pipeline:
+/// concatenate the requests' Q rows, run predict → top-k → KV-gen →
+/// SU-FA once over the whole batch against the variant's KV context, and
+/// slice outputs back per request. Requests without a Q payload ride the
+/// batch for timing but get no output.
+fn run_native(
+    cfg: &PipelineConfig,
+    contexts: &BTreeMap<String, (Mat, Mat)>,
+    batch: &Batch,
+    metrics: &Metrics,
+) -> Result<Vec<Option<Mat>>> {
+    let (k, v) = contexts
+        .get(&batch.variant)
+        .ok_or_else(|| anyhow::anyhow!("no KV context for variant {}", batch.variant))?;
+    // Validate as errors, not panics: an assert here would kill the worker
+    // thread for the server's remaining lifetime and drop the replies.
+    anyhow::ensure!(
+        k.rows == v.rows && k.cols == v.cols,
+        "variant {}: malformed KV context (K {}x{}, V {}x{})",
+        batch.variant,
+        k.rows,
+        k.cols,
+        v.rows,
+        v.cols
+    );
+    if let Err(e) = cfg.validate() {
+        anyhow::bail!("invalid pipeline config: {e}");
+    }
+    let d = k.cols;
+    let with_q: Vec<(usize, &Mat)> = batch
+        .requests
+        .iter()
+        .enumerate()
+        .filter_map(|(i, r)| r.q.as_ref().map(|q| (i, q)))
+        .collect();
+    for (i, q) in &with_q {
+        anyhow::ensure!(
+            q.cols == d,
+            "request {} head dim {} != context head dim {d}",
+            batch.requests[*i].id,
+            q.cols
+        );
+    }
+    let total: usize = with_q.iter().map(|(_, q)| q.rows).sum();
+    let mut outs: Vec<Option<Mat>> = vec![None; batch.requests.len()];
+    if total == 0 {
+        return Ok(outs);
+    }
+    let mut qcat = Mat::zeros(total, d);
+    let mut at = 0;
+    for (_, q) in &with_q {
+        for i in 0..q.rows {
+            qcat.row_mut(at + i).copy_from_slice(q.row(i));
+        }
+        at += q.rows;
+    }
+    let report = SparseAttentionPipeline::new(*cfg).run(&PipelineInputs::qkv(&qcat, k, v));
+    metrics.record_stage_times(&report.timing, report.stalls);
+    let mut at = 0;
+    for (ri, q) in with_q {
+        outs[ri] = Some(Mat::from_fn(q.rows, d, |i, j| report.out.at(at + i, j)));
+        at += q.rows;
+    }
+    Ok(outs)
+}
+
 /// Build the worker's engine on first use.
+#[cfg(feature = "pjrt")]
 fn ensure_engine<'a>(
     slot: &'a mut Option<Engine>,
     dir: &std::path::Path,
@@ -270,6 +429,7 @@ fn ensure_engine<'a>(
 }
 
 /// Assemble the padded Q batch, execute the artifact, slice per request.
+#[cfg(feature = "pjrt")]
 fn run_pjrt(
     engine: &Engine,
     contexts: &BTreeMap<String, (Mat, Mat)>,
@@ -368,5 +528,49 @@ mod tests {
         let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
         assert_eq!(resp.variant, "attn");
         server.shutdown();
+    }
+
+    #[test]
+    fn native_backend_serves_real_outputs() {
+        use crate::util::Rng;
+        let (s, d) = (256usize, 32usize);
+        let mut rng = Rng::new(9);
+        let kctx = crate::tensor::Mat::randn(s, d, 1.0, &mut rng);
+        let vctx = crate::tensor::Mat::randn(s, d, 1.0, &mut rng);
+        let mut contexts = BTreeMap::new();
+        contexts.insert("attn".to_string(), (kctx, vctx));
+        let router = Router::new(vec![Variant {
+            name: "attn".into(),
+            model: "tiny".into(),
+            max_t: 64,
+            s,
+        }]);
+        let backend = Backend::Native {
+            pipeline: crate::pipeline::PipelineConfig::star().with_threads(1),
+            contexts,
+        };
+        let server = Server::start(
+            router,
+            backend,
+            ServerConfig { batcher: BatcherConfig { target_t: 16, max_wait_s: 1e-3 }, workers: 2 },
+        );
+        let mut rxs = Vec::new();
+        for id in 0..6u64 {
+            let mut req = Request::new(id, "tiny", 8, s, 0.0);
+            req.q = Some(crate::tensor::Mat::randn(8, d, 1.0, &mut rng));
+            rxs.push(server.submit(req).unwrap());
+        }
+        for rx in rxs {
+            let resp = rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+            let out = resp.output.expect("native backend returns real outputs");
+            assert_eq!((out.rows, out.cols), (8, d));
+            assert!(out.data.iter().all(|x| x.is_finite()));
+        }
+        let snap = server.shutdown();
+        assert_eq!(snap.requests, 6);
+        assert!(
+            snap.stage_formal_s > 0.0,
+            "native serving must report per-stage times"
+        );
     }
 }

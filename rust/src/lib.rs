@@ -14,6 +14,10 @@
 //!   stage (vanilla sorting and SADS distributed sorting with sphere-radius
 //!   early termination), the Type I/II/III attention-distribution analysis,
 //!   and the Appendix-A design-space exploration.
+//! * [`pipeline`] — the four stages composed into one config-driven
+//!   subsystem: tiled predict → top-k → KV-gen → SU-FA execution with
+//!   per-stage accounting, shared by the bench harness, the native
+//!   serving backend and the examples.
 //! * [`sim`] — the cycle-level single-core STAR accelerator model, its
 //!   energy/area models, the SRAM/DRAM memory system, the A100 roofline
 //!   model and the FACT/Energon/ELSA/SpAtten/Simba baselines.
@@ -22,7 +26,9 @@
 //!   plus the 5×5/6×6 multi-core spatial simulator.
 //! * [`runtime`] — the PJRT engine that loads the AOT-compiled HLO-text
 //!   artifacts produced by `python/compile/aot.py` and executes them on the
-//!   request path (python never runs at serving time).
+//!   request path (python never runs at serving time). Gated behind the
+//!   off-by-default `pjrt` cargo feature: it needs the `xla` crate, which
+//!   the offline build environment does not ship.
 //! * [`coordinator`] — the LTPP serving layer: request router, dynamic
 //!   batcher, tiled out-of-order scheduler and a thread-based server.
 //! * [`workload`], [`config`], [`bench`] — workload/trace generation, the
@@ -35,6 +41,8 @@ pub mod bench;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod pipeline;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod sparsity;

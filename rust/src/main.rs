@@ -4,14 +4,17 @@
 //!   bench <name|all>        regenerate a paper table/figure
 //!   sim [--model M]...      single-core cycle-level simulation
 //!   spatial [--mesh 5x5]    multi-core spatial simulation
-//!   serve [--requests N]    run the LTPP serving loop (PJRT or sim)
+//!   serve [--requests N]    run the LTPP serving loop (native pipeline
+//!                           by default; --sim for the simulator backend;
+//!                           PJRT artifacts with the `pjrt` feature)
 //!   dse [--seq S]           sub-segment design-space exploration
-//!   info                    list artifacts and configuration presets
+//!   info                    list configuration presets (and artifacts
+//!                           under the `pjrt` feature)
 
 use star::cli::Args;
 use star::config::{AccelConfig, ModelConfig, SpatialConfig};
 use star::coordinator::{Backend, BatcherConfig, Request, Router, Server, ServerConfig, Variant};
-use star::runtime::engine::artifacts_available;
+use star::pipeline::PipelineConfig;
 use star::sim::dram::DramChannel;
 use star::sim::pipeline::{simulate, FeatureSet, WorkloadShape};
 use star::spatial::sim::{spatial_run, CoreKind, Dataflow};
@@ -100,38 +103,13 @@ fn cmd_spatial(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let n = args.get_usize("requests", 64);
-    let dir = star::runtime::manifest::default_dir();
-    let use_pjrt = artifacts_available(&dir) && !args.flag("sim");
     let router = Router::new(vec![Variant {
         name: "sparse_attention".into(),
         model: "gpt2".into(),
         max_t: 128,
         s: 1024,
     }]);
-    let backend = if use_pjrt {
-        let mut contexts = std::collections::BTreeMap::new();
-        let mut rng = star::util::Rng::new(1);
-        contexts.insert(
-            "sparse_attention".to_string(),
-            (
-                star::tensor::Mat::randn(1024, 64, 1.0, &mut rng),
-                star::tensor::Mat::randn(1024, 64, 1.0, &mut rng),
-            ),
-        );
-        println!("serving with the PJRT backend from {dir:?}");
-        Backend::Pjrt { artifact_dir: dir, contexts }
-    } else {
-        println!("serving with the simulated backend (no artifacts found or --sim)");
-        Backend::Sim {
-            feats: FeatureSet::star(),
-            accel: AccelConfig::default(),
-            dram: DramChannel::accel_256(),
-            d: 64,
-            h: 768,
-            keep: 0.2,
-            time_scale: 1.0,
-        }
-    };
+    let backend = pick_serve_backend(args);
     let server = Server::start(router, backend, ServerConfig {
         batcher: BatcherConfig { target_t: 128, max_wait_s: 2e-3 },
         workers: 2,
@@ -150,6 +128,49 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let snap = server.shutdown();
     println!("{}", snap.render());
     Ok(())
+}
+
+/// Backend selection for `star serve`: PJRT artifacts when compiled with
+/// the `pjrt` feature and artifacts exist, the cycle-level simulator
+/// under `--sim`, and the native sparse-attention pipeline otherwise.
+fn pick_serve_backend(args: &Args) -> Backend {
+    if args.flag("sim") {
+        println!("serving with the simulated backend (--sim)");
+        return Backend::Sim {
+            feats: FeatureSet::star(),
+            accel: AccelConfig::default(),
+            dram: DramChannel::accel_256(),
+            d: 64,
+            h: 768,
+            keep: 0.2,
+            time_scale: 1.0,
+        };
+    }
+    let contexts = serve_contexts();
+    #[cfg(feature = "pjrt")]
+    {
+        let dir = star::runtime::manifest::default_dir();
+        if star::runtime::engine::artifacts_available(&dir) && !args.flag("native") {
+            println!("serving with the PJRT backend from {dir:?}");
+            return Backend::Pjrt { artifact_dir: dir, contexts };
+        }
+    }
+    println!("serving with the native sparse-attention pipeline");
+    Backend::Native { pipeline: PipelineConfig::star().with_threads(1), contexts }
+}
+
+/// The fixed gpt2-shaped KV context both serve backends attend into.
+fn serve_contexts() -> std::collections::BTreeMap<String, (star::tensor::Mat, star::tensor::Mat)> {
+    let mut contexts = std::collections::BTreeMap::new();
+    let mut rng = star::util::Rng::new(1);
+    contexts.insert(
+        "sparse_attention".to_string(),
+        (
+            star::tensor::Mat::randn(1024, 64, 1.0, &mut rng),
+            star::tensor::Mat::randn(1024, 64, 1.0, &mut rng),
+        ),
+    );
+    contexts
 }
 
 fn cmd_dse(args: &Args) -> Result<()> {
@@ -185,15 +206,31 @@ fn cmd_info() -> Result<()> {
             m.name, m.hidden, m.heads, m.layers, m.seq_len
         );
     }
-    let dir = star::runtime::manifest::default_dir();
-    if artifacts_available(&dir) {
-        let m = star::runtime::Manifest::load(&dir)?;
-        println!("artifacts in {dir:?}:");
-        for e in &m.entries {
-            println!("  {:<24} {:?} -> {:?}", e.name, e.inputs, e.outputs);
-        }
-    } else {
-        println!("no artifacts at {dir:?} (run `make artifacts`)");
+    println!("pipeline presets:");
+    for (name, cfg) in [
+        ("star", PipelineConfig::star()),
+        ("ds_baseline", PipelineConfig::ds_baseline()),
+        ("dense_oracle", PipelineConfig::dense_oracle()),
+    ] {
+        println!(
+            "  {:<12} predict={:?} topk={:?} formal={:?} keep={} tile={}",
+            name, cfg.predict, cfg.topk, cfg.formal, cfg.keep_ratio, cfg.tile_t
+        );
     }
+    #[cfg(feature = "pjrt")]
+    {
+        let dir = star::runtime::manifest::default_dir();
+        if star::runtime::engine::artifacts_available(&dir) {
+            let m = star::runtime::Manifest::load(&dir)?;
+            println!("artifacts in {dir:?}:");
+            for e in &m.entries {
+                println!("  {:<24} {:?} -> {:?}", e.name, e.inputs, e.outputs);
+            }
+        } else {
+            println!("no artifacts at {dir:?} (run `make artifacts`)");
+        }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    println!("PJRT runtime disabled (build with --features pjrt to list artifacts)");
     Ok(())
 }

@@ -1,0 +1,240 @@
+//! [`PipelineConfig`] — the one config vocabulary for sparse-attention
+//! execution, shared with the cycle-level simulator.
+//!
+//! The simulator's [`crate::sim::pipeline::FeatureSet`] names the same
+//! three stage axes (prediction scheme × top-k engine × formal kernel);
+//! `PipelineConfig` reuses those enums verbatim and adds the *algorithm*
+//! knobs the simulator abstracts away: keep ratio, query-tile size, SU-FA
+//! key-tile size, SADS parameters and the prediction bitwidth. The two
+//! convert losslessly over the shared axes ([`PipelineConfig::feature_set`]
+//! / [`PipelineConfig::from_features`]), so an algorithm run and a
+//! cycle-level run of the same configuration are one struct apart.
+
+use crate::config::SparsityConfig;
+use crate::sim::pipeline::{FeatureSet, FormalKind, PredictKind, TopkKind};
+use crate::sparsity::topk::SadsParams;
+
+/// Full configuration of a [`super::SparseAttentionPipeline`].
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineConfig {
+    /// Prediction-stage scheme. [`PredictKind::None`] means *oracle*
+    /// scores: exact Q·Kᵀ feeds the top-k stage (no prediction ops are
+    /// charged) — the upper-bound configuration of Fig. 11 / Fig. 18(b).
+    pub predict: PredictKind,
+    /// Top-k engine. [`TopkKind::Threshold`] has no counted software
+    /// implementation and is executed as `Vanilla` (the threshold engines
+    /// it models are only distinguished at the cycle level).
+    pub topk: TopkKind,
+    /// Formal-compute kernel. [`FormalKind::Flash2`] is approximated as
+    /// ascending SU-FA plus the cross-tile max-comparison stream FA-2
+    /// pays (the Fig. 18a baseline accounting).
+    pub formal: FormalKind,
+    /// Top-k keep ratio γ ∈ (0, 1]; 1.0 keeps every key.
+    pub keep_ratio: f64,
+    /// Query-tile size B_r: how many query rows flow through
+    /// predict → top-k → KV-gen → formal together. Intermediates stay
+    /// `tile_t × S` instead of `T × S`.
+    pub tile_t: usize,
+    /// SU-FA key-tile size B_c.
+    pub bc: usize,
+    /// Magnitude bitwidth W of the prediction datapath.
+    pub predict_bits: u32,
+    /// SADS sub-segment count and sphere radius (radius in logit units —
+    /// estimated scores are scaled by 1/√d before top-k).
+    pub sads: SadsParams,
+    /// Generate only the union of selected KV rows (charged as on-chip
+    /// generation instead of a DRAM KV load) when activations are given.
+    pub on_demand_kv: bool,
+    /// Worker threads for independent query tiles (`std::thread::scope`);
+    /// 0 picks `available_parallelism`. Results are deterministic and
+    /// identical for every thread count.
+    pub threads: usize,
+}
+
+impl PipelineConfig {
+    /// The paper's STAR configuration: cross-phase DLZS prediction, SADS
+    /// top-k, descending SU-FA, on-demand KV, γ = 0.2.
+    pub fn star() -> PipelineConfig {
+        PipelineConfig {
+            predict: PredictKind::DlzsCross,
+            topk: TopkKind::Sads,
+            formal: FormalKind::SufaDescend,
+            keep_ratio: 0.2,
+            tile_t: 64,
+            bc: 16,
+            predict_bits: 7,
+            sads: SadsParams::default(),
+            on_demand_kv: true,
+            threads: 0,
+        }
+    }
+
+    /// Generic DS-accelerator baseline (Fig. 18a "baseline"): low-bit
+    /// multiply prediction, vanilla sorting, FA-2-style formal compute,
+    /// precomputed KV.
+    pub fn ds_baseline() -> PipelineConfig {
+        PipelineConfig {
+            predict: PredictKind::LowBitMul,
+            topk: TopkKind::Vanilla,
+            formal: FormalKind::Flash2,
+            on_demand_kv: false,
+            ..PipelineConfig::star()
+        }
+    }
+
+    /// Dense oracle: no prediction, no top-k, exact dense softmax. With
+    /// `keep_ratio = 1.0` this reproduces
+    /// [`crate::attention::dense_attention`] bit-for-bit per row.
+    pub fn dense_oracle() -> PipelineConfig {
+        PipelineConfig {
+            predict: PredictKind::None,
+            topk: TopkKind::None,
+            formal: FormalKind::Dense,
+            keep_ratio: 1.0,
+            on_demand_kv: false,
+            ..PipelineConfig::star()
+        }
+    }
+
+    /// STAR pipeline parameterized by a serving [`SparsityConfig`].
+    pub fn from_sparsity(cfg: &SparsityConfig) -> PipelineConfig {
+        PipelineConfig {
+            keep_ratio: cfg.topk_ratio,
+            predict_bits: cfg.predict_bits,
+            sads: SadsParams { segments: cfg.segments, radius: cfg.radius },
+            ..PipelineConfig::star()
+        }
+    }
+
+    /// Algorithm-side view of a simulator [`FeatureSet`] (the shared axes
+    /// carry over; algorithm knobs take their STAR defaults).
+    pub fn from_features(f: &FeatureSet, keep_ratio: f64) -> PipelineConfig {
+        PipelineConfig {
+            predict: f.predict,
+            topk: f.topk,
+            formal: f.formal,
+            on_demand_kv: f.on_demand_kv,
+            keep_ratio,
+            ..PipelineConfig::star()
+        }
+    }
+
+    /// Simulator view of this configuration. The algorithm layer always
+    /// executes cross-stage tiled with out-of-order tile issue and
+    /// stall-absorbing SU-FA, so those architectural flags are always
+    /// set — `threads` is a *host* knob (how many CPU workers run the
+    /// software model) and deliberately does not alter the simulated
+    /// hardware features.
+    pub fn feature_set(&self) -> FeatureSet {
+        FeatureSet {
+            predict: self.predict,
+            topk: self.topk,
+            formal: self.formal,
+            on_demand_kv: self.on_demand_kv,
+            tiled_dataflow: true,
+            oo_scheduler: true,
+            sufa_tailored: true,
+        }
+    }
+
+    /// Check the invariants [`super::SparseAttentionPipeline::new`]
+    /// enforces. `Err` carries the violation, letting servers treat a
+    /// misconfiguration as a recoverable error instead of a panic; the
+    /// constructor and the serving backend share this single source of
+    /// truth.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tile_t == 0 {
+            return Err("tile_t must be positive".into());
+        }
+        if self.bc == 0 {
+            return Err("bc must be positive".into());
+        }
+        if !(self.keep_ratio > 0.0 && self.keep_ratio <= 1.0) {
+            return Err(format!("keep_ratio must be in (0, 1], got {}", self.keep_ratio));
+        }
+        Ok(())
+    }
+
+    /// Keys retained for a context of `s` keys (≥ 1, ≤ s; matches
+    /// [`SparsityConfig::keep`]).
+    pub fn keep(&self, s: usize) -> usize {
+        if s == 0 {
+            return 0;
+        }
+        if self.topk == TopkKind::None {
+            return s;
+        }
+        ((s as f64 * self.keep_ratio).round() as usize).clamp(1, s)
+    }
+
+    /// Builder-style keep-ratio override.
+    pub fn with_keep(mut self, keep_ratio: f64) -> PipelineConfig {
+        self.keep_ratio = keep_ratio;
+        self
+    }
+
+    /// Builder-style tile-size override.
+    pub fn with_tile(mut self, tile_t: usize) -> PipelineConfig {
+        assert!(tile_t > 0, "tile_t must be positive");
+        self.tile_t = tile_t;
+        self
+    }
+
+    /// Builder-style thread-count override.
+    pub fn with_threads(mut self, threads: usize) -> PipelineConfig {
+        self.threads = threads;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn star_roundtrips_through_feature_set() {
+        let cfg = PipelineConfig::star();
+        let feats = cfg.feature_set();
+        assert_eq!(feats.predict, PredictKind::DlzsCross);
+        assert_eq!(feats.topk, TopkKind::Sads);
+        assert_eq!(feats.formal, FormalKind::SufaDescend);
+        assert!(feats.on_demand_kv && feats.tiled_dataflow && feats.sufa_tailored);
+        let back = PipelineConfig::from_features(&feats, cfg.keep_ratio);
+        assert_eq!(back.predict, cfg.predict);
+        assert_eq!(back.topk, cfg.topk);
+        assert_eq!(back.formal, cfg.formal);
+        assert_eq!(back.on_demand_kv, cfg.on_demand_kv);
+        assert_eq!(back.keep_ratio, cfg.keep_ratio);
+    }
+
+    #[test]
+    fn ds_baseline_matches_sim_ds_baseline_axes() {
+        let cfg = PipelineConfig::ds_baseline();
+        let sim = FeatureSet::ds_baseline();
+        assert_eq!(cfg.predict, sim.predict);
+        assert_eq!(cfg.topk, sim.topk);
+        assert_eq!(cfg.formal, sim.formal);
+        assert_eq!(cfg.on_demand_kv, sim.on_demand_kv);
+    }
+
+    #[test]
+    fn keep_clamps_and_dense_keeps_all() {
+        let cfg = PipelineConfig::star().with_keep(0.25);
+        assert_eq!(cfg.keep(1024), 256);
+        assert_eq!(cfg.keep(1), 1);
+        assert_eq!(cfg.keep(0), 0);
+        assert_eq!(PipelineConfig::dense_oracle().keep(77), 77);
+        let tiny = PipelineConfig::star().with_keep(1e-9);
+        assert_eq!(tiny.keep(1000), 1);
+    }
+
+    #[test]
+    fn from_sparsity_carries_knobs() {
+        let sc = SparsityConfig { topk_ratio: 0.15, segments: 8, radius: 3.0, predict_bits: 5 };
+        let cfg = PipelineConfig::from_sparsity(&sc);
+        assert_eq!(cfg.keep_ratio, 0.15);
+        assert_eq!(cfg.sads.segments, 8);
+        assert_eq!(cfg.sads.radius, 3.0);
+        assert_eq!(cfg.predict_bits, 5);
+    }
+}

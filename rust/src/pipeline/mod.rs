@@ -1,0 +1,29 @@
+//! The sparse-attention **pipeline subsystem**: the paper's four stages —
+//! prediction (Sec. IV-A), top-k (Sec. IV-B), on-demand KV generation and
+//! formal compute (Sec. IV-C) — composed behind one config-driven API and
+//! executed with cross-stage tiling.
+//!
+//! * [`config`] — [`PipelineConfig`]: predict scheme × top-k engine ×
+//!   formal kernel × keep ratio × tile size, sharing its stage-axis enums
+//!   with the cycle-level simulator's
+//!   [`crate::sim::pipeline::FeatureSet`] so algorithm runs and
+//!   cycle-level runs speak one config vocabulary.
+//! * [`exec`] — [`SparseAttentionPipeline`]: tiled execution (per query
+//!   tile: predict → SADS → union-KV-gen → SU-FA, intermediates stay
+//!   tile-sized), parallel over independent tiles with
+//!   `std::thread::scope`, deterministic for every tile size and thread
+//!   count.
+//! * [`report`] — per-stage [`StageOps`] counters and [`StageTiming`]
+//!   breakdowns aggregated across tiles.
+//!
+//! Every layer runs sparse attention through this module: the bench
+//! harness ([`crate::bench::algorithm`]), the native serving backend
+//! ([`crate::coordinator::server::Backend::Native`]) and the examples.
+
+pub mod config;
+pub mod exec;
+pub mod report;
+
+pub use config::PipelineConfig;
+pub use exec::{PipelineInputs, PipelineReport, SparseAttentionPipeline};
+pub use report::{StageOps, StageTiming};

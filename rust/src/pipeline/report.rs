@@ -1,0 +1,103 @@
+//! Per-stage accounting for pipeline runs: operation counters and wall
+//! times broken down by the four paper stages.
+
+use crate::arith::{EquivWeights, OpCounter};
+
+/// Operation counters per pipeline stage.
+#[derive(Clone, Debug, Default)]
+pub struct StageOps {
+    pub predict: OpCounter,
+    pub topk: OpCounter,
+    pub kv_gen: OpCounter,
+    pub formal: OpCounter,
+}
+
+impl StageOps {
+    /// Merge another breakdown into this one (tile/worker aggregation).
+    pub fn merge(&mut self, other: &StageOps) {
+        self.predict.merge(&other.predict);
+        self.topk.merge(&other.topk);
+        self.kv_gen.merge(&other.kv_gen);
+        self.formal.merge(&other.formal);
+    }
+
+    /// All stages folded into one counter.
+    pub fn total(&self) -> OpCounter {
+        let mut c = self.predict.clone();
+        c.merge(&self.topk);
+        c.merge(&self.kv_gen);
+        c.merge(&self.formal);
+        c
+    }
+
+    /// Equivalent additions of the whole run under `w`.
+    pub fn equivalent_adds(&self, w: &EquivWeights) -> f64 {
+        self.total().equivalent_adds(w)
+    }
+}
+
+/// Wall time per stage, in seconds. Under multi-threaded execution these
+/// are *aggregate busy times* summed across workers (they can exceed the
+/// end-to-end wall clock); ratios between stages remain meaningful.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageTiming {
+    pub predict_s: f64,
+    pub topk_s: f64,
+    pub kv_gen_s: f64,
+    pub formal_s: f64,
+}
+
+impl StageTiming {
+    pub fn merge(&mut self, other: &StageTiming) {
+        self.predict_s += other.predict_s;
+        self.topk_s += other.topk_s;
+        self.kv_gen_s += other.kv_gen_s;
+        self.formal_s += other.formal_s;
+    }
+
+    /// Total busy time across stages.
+    pub fn busy_s(&self) -> f64 {
+        self.predict_s + self.topk_s + self.kv_gen_s + self.formal_s
+    }
+
+    /// The stage dominating busy time: (name, seconds).
+    pub fn bottleneck(&self) -> (&'static str, f64) {
+        let stages = [
+            ("predict", self.predict_s),
+            ("topk", self.topk_s),
+            ("kv_gen", self.kv_gen_s),
+            ("formal", self.formal_s),
+        ];
+        stages
+            .into_iter()
+            .fold(("predict", 0.0), |best, s| if s.1 > best.1 { s } else { best })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::OpKind;
+
+    #[test]
+    fn stage_ops_total_merges_all_stages() {
+        let mut s = StageOps::default();
+        s.predict.tally(OpKind::Shift, 5);
+        s.topk.tally(OpKind::Cmp, 7);
+        s.kv_gen.tally(OpKind::Mul, 2);
+        s.formal.tally(OpKind::Exp, 3);
+        let t = s.total();
+        assert_eq!((t.shift, t.cmp, t.mul, t.exp), (5, 7, 2, 3));
+        let mut s2 = StageOps::default();
+        s2.merge(&s);
+        s2.merge(&s);
+        assert_eq!(s2.total().cmp, 14);
+    }
+
+    #[test]
+    fn timing_bottleneck_picks_max() {
+        let t = StageTiming { predict_s: 0.1, topk_s: 0.4, kv_gen_s: 0.2, formal_s: 0.3 };
+        assert_eq!(t.bottleneck().0, "topk");
+        assert!((t.busy_s() - 1.0).abs() < 1e-12);
+    }
+}

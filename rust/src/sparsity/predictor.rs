@@ -56,79 +56,59 @@ impl Predictor {
     /// Returns scores in the same scale as the exact product so downstream
     /// top-k thresholds are comparable across schemes.
     pub fn approx_scores(&self, a: &Mat, b: &Mat, c: &mut OpCounter) -> Mat {
+        self.prepare(a, b, c).score_rows(0, a.rows, c)
+    }
+
+    /// One-time operand preparation for tiled prediction: quantize both
+    /// sides (scale from the FULL tensors) and LZ-encode whichever sides
+    /// the scheme converts, charging the conversion ops/traffic once.
+    /// Per-query-tile work then happens in [`PreparedPredict::score_rows`],
+    /// whose rows are bit-identical to the corresponding rows of a whole-
+    /// matrix [`Predictor::approx_scores`] call — the property that makes
+    /// the cross-stage tiled pipeline numerically equal to stage-serial
+    /// execution.
+    pub fn prepare(&self, a: &Mat, b: &Mat, c: &mut OpCounter) -> PreparedPredict {
         let bits = self.bits();
+        assert_eq!(a.cols, b.cols);
         let qa = QuantMat::quantize(a, bits);
         let qb = QuantMat::quantize(b, bits);
         let (m, n, d) = (a.rows, b.rows, a.cols);
-        assert_eq!(a.cols, b.cols);
         let scale = qa.scale * qb.scale;
-        let mut out = Mat::zeros(m, n);
 
-        match self.scheme {
+        // Keep only the operands the scheme's datapath actually reads —
+        // the prepared struct is shared across worker threads for the
+        // whole tiled run.
+        let ops = match self.scheme {
             PredictScheme::Dlzs => {
                 // Differential: LZ-encode ONE side (the `a` side, playing the
                 // role of Q in phase 1.2). One LZ encode per element of a.
-                let a_codes: Vec<LzCode> =
-                    qa.q.iter().map(|&x| LzCode::encode(x, self.w)).collect();
+                let a_codes = qa.q.iter().map(|&x| LzCode::encode(x, self.w)).collect();
                 c.tally(OpKind::LzEncode, (m * d) as u64);
-                // Per product: one shift, one add (accumulate).
-                c.tally(OpKind::Shift, (m * n * d) as u64);
-                c.tally(OpKind::Add, (m * n * d) as u64);
-                for i in 0..m {
-                    for j in 0..n {
-                        let mut acc = 0i64;
-                        for p in 0..d {
-                            acc += dlzs_mul(qb.at(j, p), a_codes[i * d + p]);
-                        }
-                        *out.at_mut(i, j) = acc as f32 * scale;
-                    }
-                }
                 // Traffic: DLZS loads the compact LZ codes (~4+1 bits) for
                 // the encoded side instead of full W+1-bit operands.
                 c.sram((m * d) as u64); // ≈1 byte/code
                 c.sram((n * d * 2) as u64);
+                PreparedOps::Dlzs { a_codes, qb }
             }
             PredictScheme::Slzs => {
-                let a_codes: Vec<LzCode> =
-                    qa.q.iter().map(|&x| LzCode::encode(x, self.w)).collect();
-                let b_codes: Vec<LzCode> =
-                    qb.q.iter().map(|&x| LzCode::encode(x, self.w)).collect();
+                let a_codes = qa.q.iter().map(|&x| LzCode::encode(x, self.w)).collect();
+                let b_codes = qb.q.iter().map(|&x| LzCode::encode(x, self.w)).collect();
                 // Symmetric: both operand sets pay conversion.
                 c.tally(OpKind::LzEncode, ((m + n) * d) as u64);
-                c.tally(OpKind::Shift, (m * n * d) as u64);
-                c.tally(OpKind::Add, (m * n * d) as u64);
-                for i in 0..m {
-                    for j in 0..n {
-                        let mut acc = 0i64;
-                        for p in 0..d {
-                            acc += slzs_mul(a_codes[i * d + p], b_codes[j * d + p]);
-                        }
-                        *out.at_mut(i, j) = acc as f32 * scale;
-                    }
-                }
                 // SLZS must fetch full-width operands for the encode step.
                 c.sram((m * d * 2) as u64);
                 c.sram((n * d * 2) as u64);
+                PreparedOps::Slzs { a_codes, b_codes }
             }
             PredictScheme::LowBitMul => {
                 let ta = qa.truncate_to_msb(4.min(self.w));
                 let tb = qb.truncate_to_msb(4.min(self.w));
-                c.tally(OpKind::Mul, (m * n * d) as u64);
-                c.tally(OpKind::Add, (m * n * d) as u64);
-                for i in 0..m {
-                    for j in 0..n {
-                        let mut acc = 0i64;
-                        for p in 0..d {
-                            acc += ta.at(i, p) as i64 * tb.at(j, p) as i64;
-                        }
-                        *out.at_mut(i, j) = acc as f32 * scale;
-                    }
-                }
                 c.sram((m * d * 2) as u64);
                 c.sram((n * d * 2) as u64);
+                PreparedOps::LowBit { ta, tb }
             }
-        }
-        out
+        };
+        PreparedPredict { rows: m, keys: n, d, ops, scale }
     }
 
     /// Cross-phase prediction (Fig. 8a): phase 1.1 estimates K̂ = X·W_k with
@@ -141,6 +121,17 @@ impl Predictor {
         q: &Mat,  // [T, d]
         c: &mut OpCounter,
     ) -> (Mat, Mat) {
+        let khat = self.khat_phase(x, wk, c);
+        // Phase 1.2: LZ-encode Q (NOT K̂) to avoid compounding the phase-1.1
+        // approximation error (cross-phase advantage #2).
+        let ahat = self.approx_scores(q, &khat, c);
+        (khat, ahat)
+    }
+
+    /// Phase 1.1 alone: estimate K̂ = X·W_k with the pre-converted LZ
+    /// weights. The tiled pipeline runs this once as a prologue and feeds
+    /// K̂ into a [`Predictor::prepare`] for per-tile phase-1.2 scoring.
+    pub fn khat_phase(&self, x: &Mat, wk: &Mat, c: &mut OpCounter) -> Mat {
         let bits = self.bits();
         let (s, h) = (x.rows, x.cols);
         let d = wk.cols;
@@ -166,11 +157,91 @@ impl Predictor {
                 *khat.at_mut(i, j) = acc as f32 * (qx.scale * qw.scale);
             }
         }
+        khat
+    }
+}
 
-        // Phase 1.2: LZ-encode Q (NOT K̂) to avoid compounding the phase-1.1
-        // approximation error (cross-phase advantage #2).
-        let ahat = self.approx_scores(q, &khat, c);
-        (khat, ahat)
+/// Per-scheme operands the tiled datapath reads.
+enum PreparedOps {
+    /// Differential: LZ codes of the `a` side, quantized `b` side.
+    Dlzs { a_codes: Vec<LzCode>, qb: QuantMat },
+    /// Symmetric: LZ codes of both sides.
+    Slzs { a_codes: Vec<LzCode>, b_codes: Vec<LzCode> },
+    /// Low-bit multiply: MSB-truncated operands.
+    LowBit { ta: QuantMat, tb: QuantMat },
+}
+
+/// Quantized + LZ-encoded operands ready for tiled score estimation.
+/// Immutable and `Sync`: the pipeline shares one across worker threads.
+pub struct PreparedPredict {
+    rows: usize,
+    keys: usize,
+    d: usize,
+    ops: PreparedOps,
+    scale: f32,
+}
+
+impl PreparedPredict {
+    /// Number of `a` rows (query rows) available.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of `b` rows (key rows) scored per query row.
+    pub fn keys(&self) -> usize {
+        self.keys
+    }
+
+    /// Estimate rows `lo..hi` of `Â = a·bᵀ`. Row `i` of the result is
+    /// bit-identical to row `lo + i` of the whole-matrix estimate.
+    pub fn score_rows(&self, lo: usize, hi: usize, c: &mut OpCounter) -> Mat {
+        let (n, d) = (self.keys, self.d);
+        assert!(lo <= hi && hi <= self.rows, "tile {lo}..{hi} out of range");
+        let m = hi - lo;
+        let mut out = Mat::zeros(m, n);
+        match &self.ops {
+            PreparedOps::Dlzs { a_codes, qb } => {
+                // Per product: one shift, one add (accumulate).
+                c.tally(OpKind::Shift, (m * n * d) as u64);
+                c.tally(OpKind::Add, (m * n * d) as u64);
+                for i in 0..m {
+                    for j in 0..n {
+                        let mut acc = 0i64;
+                        for p in 0..d {
+                            acc += dlzs_mul(qb.at(j, p), a_codes[(lo + i) * d + p]);
+                        }
+                        *out.at_mut(i, j) = acc as f32 * self.scale;
+                    }
+                }
+            }
+            PreparedOps::Slzs { a_codes, b_codes } => {
+                c.tally(OpKind::Shift, (m * n * d) as u64);
+                c.tally(OpKind::Add, (m * n * d) as u64);
+                for i in 0..m {
+                    for j in 0..n {
+                        let mut acc = 0i64;
+                        for p in 0..d {
+                            acc += slzs_mul(a_codes[(lo + i) * d + p], b_codes[j * d + p]);
+                        }
+                        *out.at_mut(i, j) = acc as f32 * self.scale;
+                    }
+                }
+            }
+            PreparedOps::LowBit { ta, tb } => {
+                c.tally(OpKind::Mul, (m * n * d) as u64);
+                c.tally(OpKind::Add, (m * n * d) as u64);
+                for i in 0..m {
+                    for j in 0..n {
+                        let mut acc = 0i64;
+                        for p in 0..d {
+                            acc += ta.at(lo + i, p) as i64 * tb.at(j, p) as i64;
+                        }
+                        *out.at_mut(i, j) = acc as f32 * self.scale;
+                    }
+                }
+            }
+        }
+        out
     }
 }
 
@@ -273,6 +344,30 @@ mod tests {
         // Cross-phase charges no online conversion for W_k.
         assert_eq!(c.lz_encode, (t * d) as u64);
         assert_eq!(c.mul, 0);
+    }
+
+    #[test]
+    fn tiled_score_rows_match_whole_matrix_estimate() {
+        // The tiled-pipeline contract: per-tile estimates are row slices
+        // of the whole-matrix estimate, bit for bit, for every scheme.
+        for scheme in [PredictScheme::Dlzs, PredictScheme::Slzs, PredictScheme::LowBitMul] {
+            let (a, b) = mats(7, 20, 48, 16);
+            let pred = Predictor::new(scheme, 7);
+            let mut c = OpCounter::new();
+            let full = pred.approx_scores(&a, &b, &mut c);
+            let mut ct = OpCounter::new();
+            let prep = pred.prepare(&a, &b, &mut ct);
+            assert_eq!((prep.rows(), prep.keys()), (20, 48));
+            for lo in (0..20).step_by(6) {
+                let hi = (lo + 6).min(20);
+                let tile = prep.score_rows(lo, hi, &mut ct);
+                for i in 0..(hi - lo) {
+                    assert_eq!(tile.row(i), full.row(lo + i), "{scheme:?} row {}", lo + i);
+                }
+            }
+            // Tiled accounting sums to the whole-matrix accounting.
+            assert_eq!(ct, c, "{scheme:?} op accounting drifted under tiling");
+        }
     }
 
     #[test]

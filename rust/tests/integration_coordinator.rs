@@ -1,13 +1,17 @@
 //! Integration: the serving stack (router → batcher → scheduler →
-//! backend) under load, with the simulated backend.
+//! backend) under load, with the simulated and native backends.
 
+use star::attention::{masked_attention_oracle, AttnInputs};
 use star::config::AccelConfig;
 use star::coordinator::{
     Backend, BatcherConfig, Request, Router, Server, ServerConfig, Stage, TiledScheduler, Variant,
 };
+use star::pipeline::{PipelineConfig, PipelineInputs, SparseAttentionPipeline};
 use star::sim::dram::DramChannel;
 use star::sim::pipeline::FeatureSet;
+use star::tensor::Mat;
 use star::util::Rng;
+use std::collections::BTreeMap;
 
 fn server(target_t: usize, workers: usize) -> Server {
     let router = Router::new(vec![
@@ -69,6 +73,61 @@ fn shutdown_flushes_everything() {
     for rx in rxs {
         assert!(rx.try_recv().is_ok(), "response delivered on shutdown flush");
     }
+}
+
+#[test]
+fn native_backend_round_trip_matches_inline_pipeline() {
+    // End to end through router → batcher → workers, the server must
+    // return exactly what an inline pipeline run over the same Q and KV
+    // context computes — real sparse attention, served.
+    let (s, d) = (512usize, 32usize);
+    let mut rng = Rng::new(77);
+    let kctx = Mat::randn(s, d, 1.0, &mut rng);
+    let vctx = Mat::randn(s, d, 1.0, &mut rng);
+    let pipeline = PipelineConfig::star().with_threads(1);
+    let mut contexts = BTreeMap::new();
+    contexts.insert("attn_native".to_string(), (kctx.clone(), vctx.clone()));
+    let router = Router::new(vec![Variant {
+        name: "attn_native".into(),
+        model: "tiny".into(),
+        max_t: 128,
+        s,
+    }]);
+    let srv = Server::start(
+        router,
+        Backend::Native { pipeline, contexts },
+        // target_t = 1 row seals a batch per request, so each response is
+        // comparable to an inline single-request pipeline run.
+        ServerConfig { batcher: BatcherConfig { target_t: 1, max_wait_s: 1e-4 }, workers: 2 },
+    );
+    let mut submitted = Vec::new();
+    for id in 0..8u64 {
+        let t = 4 + (id as usize % 3) * 2;
+        let q = Mat::randn(t, d, 1.0, &mut rng);
+        let mut req = Request::new(id, "tiny", t, s, 0.0);
+        req.q = Some(q.clone());
+        submitted.push((q, srv.submit(req).unwrap()));
+    }
+    for (q, rx) in submitted {
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+        assert_eq!(resp.variant, "attn_native");
+        let out = resp.output.expect("native round trip returns outputs");
+        let inline = SparseAttentionPipeline::new(PipelineConfig::star().with_threads(1))
+            .run(&PipelineInputs::qkv(&q, &kctx, &vctx));
+        assert_eq!(
+            out.max_abs_diff(&inline.out),
+            0.0,
+            "served output must equal the inline pipeline result"
+        );
+        // And that result is the exact softmax over the pipeline's selection.
+        let inp = AttnInputs::new(&q, &kctx, &vctx);
+        let oracle = masked_attention_oracle(&inp, &inline.selection);
+        assert!(out.max_abs_diff(&oracle) < 1e-4);
+    }
+    let snap = srv.shutdown();
+    assert_eq!(snap.requests, 8);
+    assert!(snap.stage_predict_s > 0.0 && snap.stage_formal_s > 0.0, "per-stage metrics recorded");
+    assert_eq!(snap.rejected, 0);
 }
 
 #[test]

@@ -1,8 +1,11 @@
 //! Integration: PJRT runtime × AOT artifacts.
 //!
-//! These tests need `make artifacts` to have run; they skip (pass
-//! trivially with a notice) when the artifact directory is absent so
-//! `cargo test` works in a fresh checkout.
+//! Compiled only under the `pjrt` feature (the runtime needs the `xla`
+//! crate, absent offline). These tests additionally need `make artifacts`
+//! to have run; they skip (pass trivially with a notice) when the
+//! artifact directory is absent so `cargo test` works in a fresh
+//! checkout.
+#![cfg(feature = "pjrt")]
 
 use star::runtime::engine::artifacts_available;
 use star::runtime::{Engine, Manifest};

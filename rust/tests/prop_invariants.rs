@@ -5,6 +5,7 @@
 use star::arith::OpCounter;
 use star::attention::{masked_attention_oracle, sufa_attention, AttnInputs, Selection, SufaParams};
 use star::coordinator::{Batch, Batcher, BatcherConfig, Request};
+use star::pipeline::{PipelineConfig, PipelineInputs, SparseAttentionPipeline};
 use star::spatial::mrca::{mrca_schedule, total_hops, verify_schedule};
 use star::sparsity::topk::{sads_topk, vanilla_topk, SadsParams};
 use star::tensor::Mat;
@@ -107,6 +108,61 @@ fn prop_sads_keeps_global_max() {
             let mut c = OpCounter::new();
             let (idx, _) = sads_topk(&row, k, &p, &mut c);
             star::prop_assert!(idx.contains(&arg_max), "global max not selected");
+            Ok(())
+        },
+    );
+}
+
+/// Pipeline invariant: on random shapes/tile sizes, every selection row
+/// holds distinct in-range key indices bounded by the configured keep,
+/// and total op counts are monotone in the keep ratio.
+#[test]
+fn prop_pipeline_selection_wellformed_and_ops_monotone_in_keep() {
+    testing::check(
+        905,
+        |rng: &mut Rng| {
+            (
+                rng.range(1, 24),   // t
+                rng.range(8, 160),  // s
+                rng.range(4, 32),   // d
+                rng.range(1, 12),   // tile_t
+                rng.next_u64(),
+            )
+        },
+        |&(t, s, d, tile_t, seed)| {
+            let mut rng = Rng::new(seed);
+            let q = Mat::randn(t, d, 1.0, &mut rng);
+            let k = Mat::randn(s, d, 1.0, &mut rng);
+            let v = Mat::randn(s, d, 1.0, &mut rng);
+            let inputs = PipelineInputs::qkv(&q, &k, &v);
+            let lo_cfg = PipelineConfig::star().with_keep(0.1).with_tile(tile_t).with_threads(1);
+            let hi_cfg = PipelineConfig::star().with_keep(0.4).with_tile(tile_t).with_threads(1);
+            let lo = SparseAttentionPipeline::new(lo_cfg).run(&inputs);
+            let hi = SparseAttentionPipeline::new(hi_cfg).run(&inputs);
+            for r in [&lo, &hi] {
+                star::prop_assert!(r.selection.rows.len() == t, "row count {}", r.selection.rows.len());
+                for (i, row) in r.selection.rows.iter().enumerate() {
+                    star::prop_assert!(row.len() <= r.keep, "row {i} keeps {} > {}", row.len(), r.keep);
+                    let mut seen = vec![false; s];
+                    for &j in row {
+                        star::prop_assert!(j < s, "row {i}: index {j} out of range for S={s}");
+                        star::prop_assert!(!seen[j], "row {i}: duplicate index {j}");
+                        seen[j] = true;
+                    }
+                }
+            }
+            // More kept keys can only mean more work, for every op class
+            // the stages emit.
+            let (a, b) = (lo.total_ops(), hi.total_ops());
+            star::prop_assert!(a.mul <= b.mul, "mul not monotone: {} > {}", a.mul, b.mul);
+            star::prop_assert!(a.add <= b.add, "add not monotone: {} > {}", a.add, b.add);
+            star::prop_assert!(a.exp <= b.exp, "exp not monotone: {} > {}", a.exp, b.exp);
+            star::prop_assert!(
+                a.equiv() <= b.equiv(),
+                "equiv adds not monotone: {} > {}",
+                a.equiv(),
+                b.equiv()
+            );
             Ok(())
         },
     );

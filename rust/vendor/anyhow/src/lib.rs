@@ -1,0 +1,120 @@
+//! Minimal offline shim of the `anyhow` API surface this workspace uses:
+//! [`Error`], [`Result`], and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! The real crate is unavailable in the offline build environment; this
+//! shim keeps the call sites source-compatible. Like the real `anyhow`,
+//! [`Error`] deliberately does **not** implement `std::error::Error`, so
+//! the blanket `From<E: std::error::Error>` conversion stays coherent and
+//! `?` works on `io::Error` & friends.
+
+use std::fmt;
+
+/// A string-backed error value with an optional cause chain rendered into
+/// the message at conversion time.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Attach context, mirroring `anyhow::Error::context` semantics
+    /// (context first, original error after).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` on real anyhow prints the cause chain; the shim keeps the
+        // chain inline in the message, so both render the same string.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result` alias with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/nonexistent/anyhow-shim-test")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        let f = || -> Result<()> { bail!("stop {}", "now") };
+        assert_eq!(f().unwrap_err().to_string(), "stop now");
+        let g = |x: i32| -> Result<()> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(())
+        };
+        assert!(g(1).is_ok());
+        assert_eq!(g(-1).unwrap_err().to_string(), "x must be positive, got -1");
+    }
+
+    #[test]
+    fn context_prepends() {
+        let e = Error::msg("root").context("while loading");
+        assert_eq!(e.to_string(), "while loading: root");
+    }
+}
