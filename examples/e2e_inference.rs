@@ -34,7 +34,7 @@ fn main() -> star::Result<()> {
     }]);
     let server = Server::start(
         router,
-        Backend::Native { pipeline, contexts },
+        Backend::native(pipeline, contexts),
         ServerConfig { batcher: BatcherConfig { target_t: 128, max_wait_s: 2e-3 }, workers: 2 },
     );
 

@@ -28,10 +28,7 @@ fn main() -> star::Result<()> {
         (Mat::randn(1024, 64, 1.0, &mut rng), Mat::randn(1024, 64, 1.0, &mut rng)),
     );
     println!("backend: native sparse-attention pipeline (STAR config)");
-    let backend = Backend::Native {
-        pipeline: PipelineConfig::star().with_threads(1),
-        contexts,
-    };
+    let backend = Backend::native(PipelineConfig::star().with_threads(1), contexts);
     let server = Server::start(
         router,
         backend,

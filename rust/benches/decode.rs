@@ -1,0 +1,9 @@
+//! `cargo bench --bench decode` — decode throughput on the paged
+//! KV-cache (writes `BENCH_decode.json` at the repo root).
+//! Plain main (criterion is unavailable offline).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    star::bench::run("decode").unwrap();
+    println!("[decode bench in {:?}]", t0.elapsed());
+}

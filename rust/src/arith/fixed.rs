@@ -36,6 +36,37 @@ impl IntBits {
     }
 }
 
+/// Quantize one row with its own max-abs scale (per-row symmetric
+/// quantization). The result depends only on the row's contents — never
+/// on neighbouring rows — which is what lets the paged KV-cache
+/// ([`crate::kvcache`]) freeze a key's quantized operand at append time
+/// and still match what a later full prefill would compute bit for bit.
+pub fn quantize_row(row: &[f32], bits: IntBits) -> (Vec<i32>, f32) {
+    let amax = row.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    let scale = if amax == 0.0 { 1.0 } else { amax / bits.qmax() as f32 };
+    let qmax = bits.qmax();
+    let q = row.iter().map(|&x| ((x / scale).round() as i32).clamp(-qmax, qmax)).collect();
+    (q, scale)
+}
+
+/// Keep only the top `msb` magnitude bits of one signed value (the scalar
+/// core of [`QuantMat::truncate_to_msb`], shared with the decode-path
+/// low-bit predictor).
+pub fn truncate_msb(v: i32, msb: u32) -> i32 {
+    let mag = v.unsigned_abs();
+    if mag == 0 {
+        return 0;
+    }
+    let top = 32 - mag.leading_zeros(); // highest set bit position
+    let drop = top.saturating_sub(msb);
+    let t = ((mag >> drop) << drop) as i32;
+    if v < 0 {
+        -t
+    } else {
+        t
+    }
+}
+
 /// A quantized matrix: `i32` storage plus the common scale.
 #[derive(Clone, Debug)]
 pub struct QuantMat {
@@ -110,24 +141,7 @@ impl QuantMat {
     pub fn truncate_to_msb(&self, msb: u32) -> QuantMat {
         let w = self.bits.magnitude_bits();
         assert!(msb <= w);
-        let q = self
-            .q
-            .iter()
-            .map(|&v| {
-                let mag = v.unsigned_abs();
-                if mag == 0 {
-                    return 0;
-                }
-                let top = 32 - mag.leading_zeros(); // highest set bit position
-                let drop = top.saturating_sub(msb);
-                let t = ((mag >> drop) << drop) as i32;
-                if v < 0 {
-                    -t
-                } else {
-                    t
-                }
-            })
-            .collect();
+        let q = self.q.iter().map(|&v| truncate_msb(v, msb)).collect();
         QuantMat { rows: self.rows, cols: self.cols, q, scale: self.scale, bits: self.bits }
     }
 }
@@ -176,6 +190,16 @@ mod tests {
         let t = q.truncate_to_msb(2);
         // 100 = 0b1100100 → keep top-2 bits → 0b1100000 = 96.
         assert_eq!(t.q, vec![96, -96, 3, 0]);
+    }
+
+    #[test]
+    fn quantize_row_matches_single_row_matrix_quantization() {
+        let mut rng = Rng::new(7);
+        let m = Mat::randn(1, 16, 1.5, &mut rng);
+        let q = QuantMat::quantize(&m, IntBits::Int8);
+        let (qr, s) = quantize_row(m.row(0), IntBits::Int8);
+        assert_eq!(qr, q.q);
+        assert_eq!(s, q.scale);
     }
 
     #[test]

@@ -1,0 +1,195 @@
+//! Decode-throughput benchmark for the paged KV-cache subsystem: a
+//! multi-turn session (prefill + N single-token decode steps) through
+//! [`SparseAttentionPipeline::decode_step`], reporting tokens/s,
+//! per-step latency percentiles, per-stage op counters and the cache's
+//! hit/eviction accounting. `star bench decode` writes the result to
+//! `BENCH_decode.json` at the repo root (see [`super::trajectory`]).
+
+use super::{f, header, row};
+use crate::kvcache::{CacheStats, SessionConfig, SessionStore};
+use crate::pipeline::{PipelineConfig, SparseAttentionPipeline, StageOps};
+use crate::tensor::Mat;
+use crate::util::{Rng, Summary};
+
+/// Everything `BENCH_decode.json` reports.
+#[derive(Clone, Debug)]
+pub struct DecodeBenchResult {
+    pub prefill_tokens: usize,
+    pub decode_tokens: usize,
+    pub d: usize,
+    pub keep_ratio: f64,
+    pub page_size: usize,
+    /// Decoded tokens per second of wall time.
+    pub tokens_per_s: f64,
+    /// Per-step wall-time percentiles, milliseconds.
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    /// Accumulated per-stage ops across all decode steps.
+    pub ops: StageOps,
+    /// One full causal prefill at the final length — what a stateless
+    /// server would redo per turn instead of a decode step.
+    pub reprefill_ops: StageOps,
+    /// Mean equivalent additions per decoded token.
+    pub equiv_adds_per_token: f64,
+    /// Equivalent additions of the full re-prefill baseline.
+    pub reprefill_equiv_adds: f64,
+    /// Cache counters at the end of the run.
+    pub cache: CacheStats,
+    /// Mean cached KV rows read per decode step.
+    pub union_rows_mean: f64,
+    /// Per-step latency distribution (kept for percentile queries).
+    pub step_wall: Summary,
+}
+
+/// Run the decode benchmark on the STAR configuration (single host
+/// thread so per-step latency is stable).
+pub fn decode_throughput() -> DecodeBenchResult {
+    let (prefill_tokens, decode_tokens, d) = (256usize, 192usize, 64usize);
+    let cfg = PipelineConfig::star().with_keep(0.2).with_tile(16).with_threads(1);
+    let pipe = SparseAttentionPipeline::new(cfg);
+    let total = prefill_tokens + decode_tokens;
+
+    let mut rng = Rng::new(2024);
+    let q = Mat::randn(total, d, 1.0, &mut rng);
+    let k = Mat::randn(total, d, 1.0, &mut rng);
+    let v = Mat::randn(total, d, 1.0, &mut rng);
+    let slice = |m: &Mat, lo: usize, hi: usize| Mat::from_fn(hi - lo, d, |i, j| m.at(lo + i, j));
+
+    // Session open: one prefill chunk.
+    let mut store = SessionStore::new(SessionConfig::for_pipeline(&cfg, d, 0));
+    // Prefill phase is session warm-up; only decode steps are timed.
+    pipe.prefill(
+        &mut store,
+        1,
+        &slice(&q, 0, prefill_tokens),
+        &slice(&k, 0, prefill_tokens),
+        &slice(&v, 0, prefill_tokens),
+    )
+    .expect("prefill");
+
+    // Decode phase: single-token steps.
+    let mut ops = StageOps::default();
+    let mut step_wall = Summary::new();
+    let mut union_rows = 0usize;
+    let t0 = std::time::Instant::now();
+    for pos in prefill_tokens..total {
+        let r = pipe
+            .decode_step(
+                &mut store,
+                1,
+                &slice(&q, pos, pos + 1),
+                &slice(&k, pos, pos + 1),
+                &slice(&v, pos, pos + 1),
+            )
+            .expect("decode step");
+        step_wall.add(r.wall_s);
+        ops.merge(&r.ops);
+        union_rows += r.union_rows;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // Baseline: the stateless server re-prefills the whole conversation.
+    let mut re_store = SessionStore::new(SessionConfig::for_pipeline(&cfg, d, 0));
+    let re = pipe.prefill(&mut re_store, 1, &q, &k, &v).expect("re-prefill baseline");
+
+    let result = DecodeBenchResult {
+        prefill_tokens,
+        decode_tokens,
+        d,
+        keep_ratio: cfg.keep_ratio,
+        page_size: store.config().page_size,
+        tokens_per_s: decode_tokens as f64 / wall.max(1e-12),
+        p50_ms: step_wall.percentile(50.0) * 1e3,
+        p95_ms: step_wall.percentile(95.0) * 1e3,
+        p99_ms: step_wall.percentile(99.0) * 1e3,
+        mean_ms: step_wall.mean() * 1e3,
+        equiv_adds_per_token: ops.total().equiv() / decode_tokens as f64,
+        reprefill_equiv_adds: re.ops.total().equiv(),
+        ops,
+        reprefill_ops: re.ops,
+        cache: store.stats(),
+        union_rows_mean: union_rows as f64 / decode_tokens as f64,
+        step_wall,
+    };
+
+    header("decode throughput (paged KV-cache, STAR config)");
+    row(
+        "session",
+        &[
+            format!("prefill={prefill_tokens}"),
+            format!("decode={decode_tokens}"),
+            format!("d={d}"),
+            format!("page={}", result.page_size),
+        ],
+    );
+    row(
+        "throughput",
+        &[
+            format!("{:.0} tok/s", result.tokens_per_s),
+            format!("p50={:.3}ms", result.p50_ms),
+            format!("p95={:.3}ms", result.p95_ms),
+            format!("mean={:.3}ms", result.mean_ms),
+        ],
+    );
+    row(
+        "work/token",
+        &[
+            f(result.equiv_adds_per_token),
+            "eq-adds vs".to_string(),
+            f(result.reprefill_equiv_adds),
+            "re-prefill".to_string(),
+        ],
+    );
+    let stats = result.cache;
+    row(
+        "cache",
+        &[
+            format!("hits={}", stats.page_hits),
+            format!("alloc={}", stats.pages_allocated),
+            format!("evicted={}", stats.pages_evicted),
+            format!("remat={}", stats.pages_rematerialized),
+        ],
+    );
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_bench_runs_and_beats_reprefill() {
+        let r = decode_throughput();
+        assert!(r.tokens_per_s > 0.0);
+        assert!(r.p95_ms >= r.p50_ms);
+        // A decode step must cost far less than re-prefilling the whole
+        // conversation — the point of caching across time.
+        assert!(
+            r.equiv_adds_per_token * 10.0 < r.reprefill_equiv_adds,
+            "decode token {} eq-adds !<< re-prefill {}",
+            r.equiv_adds_per_token,
+            r.reprefill_equiv_adds
+        );
+        assert!(r.cache.page_hits > 0);
+        assert_eq!(r.cache.pages_evicted, 0, "unbounded pool never evicts");
+        // DLZS prediction dominates shifts; formal pays the exponentials.
+        assert!(r.ops.predict.shift > 0 && r.ops.formal.exp > 0);
+    }
+
+    #[test]
+    fn bench_decode_writes_trajectory_json() {
+        // `cargo test` itself materializes the repo-root trajectory file
+        // (the acceptance artifact), and this guards its schema.
+        crate::bench::run("decode").unwrap();
+        let path = crate::bench::trajectory::out_dir().join("BENCH_decode.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("decode"));
+        assert!(j.get("tokens_per_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("stage_ops").unwrap().get("predict").is_some());
+        assert!(j.get("step_latency_ms").unwrap().get("p95").is_some());
+        assert!(j.get("cache").unwrap().get("page_hits").is_some());
+    }
+}

@@ -24,13 +24,22 @@
 //! | Table III (SOTA comparison) | [`arch::table3_comparison`] |
 //! | Fig. 23(b) (SRAM, multi-core) | [`spatial_eval::fig23b_sram_multicore`] |
 //! | Fig. 24 (spatial ablation/lateral) | [`spatial_eval::fig24_spatial`] |
+//! | Decode throughput (KV-cache) | [`decode::decode_throughput`] |
+//!
+//! Every subcommand also writes its numbers to `BENCH_<name>.json` at
+//! the repo root ([`trajectory`]), so the perf trajectory is tracked
+//! across PRs.
 
 pub mod algorithm;
 pub mod arch;
+pub mod decode;
 pub mod motivation;
 pub mod spatial_eval;
+pub mod trajectory;
 
+use crate::util::json::Json;
 use crate::Result;
+use trajectory::{stage_ops_json, table};
 
 /// Print a section header.
 pub(crate) fn header(title: &str) {
@@ -54,42 +63,253 @@ pub(crate) fn f(x: f64) -> String {
     }
 }
 
-/// All bench names, in paper order.
-pub const ALL: [&str; 18] = [
+/// All bench names, in paper order (plus the serving-side `decode`).
+pub const ALL: [&str; 19] = [
     "fig1", "fig3", "fig4", "fig5", "fig7", "fig9", "fig11", "fig16", "fig17", "fig18",
-    "table2", "fig19", "fig20", "fig21", "fig22", "fig23", "table3", "fig24",
+    "table2", "fig19", "fig20", "fig21", "fig22", "fig23", "table3", "fig24", "decode",
 ];
 
-/// Run one named bench (or `all`).
+fn n(x: f64) -> Json {
+    Json::num(x)
+}
+
+/// Run one named bench (or `all`), writing its machine-readable payload
+/// to `BENCH_<name>.json` (see [`trajectory`]).
 pub fn run(name: &str) -> Result<()> {
-    match name {
-        "fig1" => drop(motivation::fig1_memory_compute()),
-        "fig3" => drop(motivation::fig3_mat_breakdown()),
-        "fig4" => drop(motivation::fig4_operation_intensity()),
-        "fig5" => drop(motivation::fig5_fa2_overhead()),
-        "fig7" => drop(motivation::fig7_qkv_crossover()),
-        "fig9" => drop(algorithm::fig9_distribution_mix()),
-        "fig11" => drop(algorithm::fig11_update_orders()),
-        "fig16" => drop(algorithm::fig16_lp_reduction()),
-        "fig17" => drop(algorithm::fig17_hit_rates()),
-        "fig18" => drop(algorithm::fig18_ablation()),
-        "table2" => drop(algorithm::table2_accuracy()),
-        "fig19" => drop(arch::fig19_throughput_vs_gpu()),
-        "fig20" => drop(arch::fig20_gain_breakdown()),
-        "fig21" => drop(arch::fig21_area_power()),
-        "fig22" => drop(arch::fig22_memory_energy()),
-        "fig23" => {
-            drop(arch::fig23a_sram_single_core());
-            drop(spatial_eval::fig23b_sram_multicore());
+    let payload: Json = match name {
+        "fig1" => {
+            let rows = motivation::fig1_memory_compute();
+            table(
+                name,
+                &["seq_len", "attn_mem_norm", "attn_ffn_ops"],
+                rows.into_iter().map(|(s, m, c)| vec![n(s as f64), n(m), n(c)]).collect(),
+            )
         }
-        "table3" => drop(arch::table3_comparison()),
-        "fig24" => drop(spatial_eval::fig24_spatial()),
+        "fig3" => {
+            let rows = motivation::fig3_mat_breakdown();
+            table(
+                name,
+                &["accel", "token_parallelism", "mat_fraction"],
+                rows.into_iter()
+                    .map(|(a, tp, mf)| vec![Json::str(a), n(tp as f64), n(mf)])
+                    .collect(),
+            )
+        }
+        "fig4" => {
+            let rows = motivation::fig4_operation_intensity();
+            table(
+                name,
+                &["label", "ops_per_byte"],
+                rows.into_iter().map(|(l, oi)| vec![Json::str(&l), n(oi)]).collect(),
+            )
+        }
+        "fig5" => {
+            let rows = motivation::fig5_fa2_overhead();
+            table(
+                name,
+                &["seq_len", "extra_exp", "extra_cmp", "extra_equiv_adds"],
+                rows.into_iter()
+                    .map(|(s, e, c, a)| vec![n(s as f64), n(e as f64), n(c as f64), n(a)])
+                    .collect(),
+            )
+        }
+        "fig7" => {
+            let rows = motivation::fig7_qkv_crossover();
+            table(
+                name,
+                &["model", "crossover_seq_len"],
+                rows.into_iter().map(|(m, s)| vec![Json::str(&m), n(s as f64)]).collect(),
+            )
+        }
+        "fig9" => {
+            let rows = algorithm::fig9_distribution_mix();
+            table(
+                name,
+                &["family", "share_type1", "share_type2", "share_type3"],
+                rows.into_iter()
+                    .map(|(f, sh)| vec![Json::str(&f), n(sh[0]), n(sh[1]), n(sh[2])])
+                    .collect(),
+            )
+        }
+        "fig11" => {
+            let rows = algorithm::fig11_update_orders();
+            table(
+                name,
+                &["order", "mul", "exp"],
+                rows.into_iter()
+                    .map(|(o, m, e)| vec![Json::str(o), n(m as f64), n(e as f64)])
+                    .collect(),
+            )
+        }
+        "fig16" => {
+            let rows = algorithm::fig16_lp_reduction();
+            table(
+                name,
+                &["task", "loss_pct", "attn_reduction", "attn_plus_qkv_reduction"],
+                rows.into_iter()
+                    .map(|(t, l, a, aq)| vec![Json::str(&t), n(l as f64), n(a), n(aq)])
+                    .collect(),
+            )
+        }
+        "fig17" => {
+            let rows = algorithm::fig17_hit_rates();
+            table(
+                name,
+                &["scheme", "layer", "topk_pct", "hit_rate"],
+                rows.into_iter()
+                    .map(|(s, l, k, h)| vec![Json::str(s), n(l as f64), n(k as f64), n(h)])
+                    .collect(),
+            )
+        }
+        "fig18" => {
+            let rows = algorithm::fig18_ablation();
+            table(
+                name,
+                &["config", "equiv_adds", "reduction_vs_baseline"],
+                rows.into_iter().map(|(c, a, r)| vec![Json::str(&c), n(a), n(r)]).collect(),
+            )
+        }
+        "table2" => {
+            let rows = algorithm::table2_accuracy();
+            table(
+                name,
+                &["model", "config", "rel_err", "hit_rate"],
+                rows.into_iter()
+                    .map(|(m, c, e, h)| vec![Json::str(&m), Json::str(c), n(e), n(h)])
+                    .collect(),
+            )
+        }
+        "fig19" => {
+            let rows = arch::fig19_throughput_vs_gpu();
+            table(
+                name,
+                &["model", "loss_idx", "speedup_vs_a100"],
+                rows.into_iter()
+                    .map(|(m, l, s)| vec![Json::str(&m), n(l as f64), n(s)])
+                    .collect(),
+            )
+        }
+        "fig20" => {
+            let rows = arch::fig20_gain_breakdown();
+            table(
+                name,
+                &["step", "cumulative_gain"],
+                rows.into_iter().map(|(s, g)| vec![Json::str(s), n(g)]).collect(),
+            )
+        }
+        "fig21" => {
+            let rows = arch::fig21_area_power();
+            table(
+                name,
+                &["unit", "area_mm2", "power_mw"],
+                rows.into_iter().map(|(u, a, p)| vec![Json::str(&u), n(a), n(p)]).collect(),
+            )
+        }
+        "fig22" => {
+            let ((r_rass, r_full), gains) = arch::fig22_memory_energy();
+            Json::obj(vec![
+                ("bench", Json::str(name)),
+                ("memory_reduction_rass", n(r_rass)),
+                ("memory_reduction_full", n(r_full)),
+                (
+                    "energy_eff_gain_by_loss",
+                    Json::Arr(gains.iter().map(|&g| n(g)).collect()),
+                ),
+            ])
+        }
+        "fig23" => {
+            let single = arch::fig23a_sram_single_core();
+            let multi = spatial_eval::fig23b_sram_multicore();
+            Json::obj(vec![
+                ("bench", Json::str(name)),
+                (
+                    "single_core",
+                    table(
+                        "fig23a",
+                        &["sram_kb", "star_gops", "baseline_gops"],
+                        single
+                            .into_iter()
+                            .map(|(kb, s, b)| vec![n(kb as f64), n(s), n(b)])
+                            .collect(),
+                    ),
+                ),
+                (
+                    "multi_core",
+                    table(
+                        "fig23b",
+                        &["sram_kb", "optimized_tops", "baseline_tops"],
+                        multi
+                            .into_iter()
+                            .map(|(kb, o, b)| vec![n(kb as f64), n(o), n(b)])
+                            .collect(),
+                    ),
+                ),
+            ])
+        }
+        "table3" => {
+            let (gops, gops_w) = arch::table3_comparison();
+            Json::obj(vec![
+                ("bench", Json::str(name)),
+                ("star_gops", n(gops)),
+                ("star_gops_per_w", n(gops_w)),
+            ])
+        }
+        "fig24" => {
+            let rows = spatial_eval::fig24_spatial();
+            table(
+                name,
+                &["mesh", "dra_gain", "mrca_gain_total", "spatten_gain", "star_gain"],
+                rows.into_iter()
+                    .map(|(m, a, b, c, d)| vec![Json::str(&m), n(a), n(b), n(c), n(d)])
+                    .collect(),
+            )
+        }
+        "decode" => {
+            let r = decode::decode_throughput();
+            Json::obj(vec![
+                ("bench", Json::str(name)),
+                ("prefill_tokens", n(r.prefill_tokens as f64)),
+                ("decode_tokens", n(r.decode_tokens as f64)),
+                ("head_dim", n(r.d as f64)),
+                ("keep_ratio", n(r.keep_ratio)),
+                ("page_size", n(r.page_size as f64)),
+                ("tokens_per_s", n(r.tokens_per_s)),
+                (
+                    "step_latency_ms",
+                    Json::obj(vec![
+                        ("p50", n(r.p50_ms)),
+                        ("p95", n(r.p95_ms)),
+                        ("p99", n(r.p99_ms)),
+                        ("mean", n(r.mean_ms)),
+                    ]),
+                ),
+                ("equiv_adds_per_token", n(r.equiv_adds_per_token)),
+                ("reprefill_equiv_adds", n(r.reprefill_equiv_adds)),
+                ("union_rows_mean", n(r.union_rows_mean)),
+                ("stage_ops", stage_ops_json(&r.ops)),
+                ("reprefill_stage_ops", stage_ops_json(&r.reprefill_ops)),
+                (
+                    "cache",
+                    Json::obj(vec![
+                        ("appended_tokens", n(r.cache.appended_tokens as f64)),
+                        ("pages_allocated", n(r.cache.pages_allocated as f64)),
+                        ("pages_evicted", n(r.cache.pages_evicted as f64)),
+                        ("sessions_evicted", n(r.cache.sessions_evicted as f64)),
+                        ("pages_rematerialized", n(r.cache.pages_rematerialized as f64)),
+                        ("page_hits", n(r.cache.page_hits as f64)),
+                    ]),
+                ),
+            ])
+        }
         "all" => {
-            for n in ALL {
-                run(n)?;
+            for bench in ALL {
+                run(bench)?;
             }
+            return Ok(());
         }
         other => anyhow::bail!("unknown bench {other:?}; try one of {ALL:?} or `all`"),
-    }
+    };
+    let path = trajectory::write(name, payload)?;
+    println!("[trajectory: {}]", path.display());
     Ok(())
 }

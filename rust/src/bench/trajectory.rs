@@ -1,0 +1,111 @@
+//! Machine-readable benchmark output: every `star bench <name>` run
+//! writes a `BENCH_<name>.json` at the repository root (override the
+//! directory with `STAR_BENCH_DIR`), so the performance trajectory is
+//! tracked across PRs instead of living in scrollback.
+//!
+//! The schema is deliberately uniform: `{bench, columns, rows}` for
+//! tabular figures, with richer objects (throughput, per-stage op
+//! counters, latency percentiles) for the serving-style benches like
+//! `BENCH_decode.json`.
+
+use crate::arith::OpCounter;
+use crate::pipeline::StageOps;
+use crate::util::json::Json;
+use std::path::PathBuf;
+
+/// Where `BENCH_*.json` files land: `STAR_BENCH_DIR` when set; else the
+/// repository root when the binary still runs on the machine it was
+/// built on (so `cargo test`/`cargo run` write there regardless of
+/// cwd); else the current directory (a relocated binary must not fail
+/// on the build machine's baked-in path).
+pub fn out_dir() -> PathBuf {
+    if let Some(dir) = std::env::var_os("STAR_BENCH_DIR") {
+        return PathBuf::from(dir);
+    }
+    let repo = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/.."));
+    if repo.is_dir() {
+        return repo;
+    }
+    PathBuf::from(".")
+}
+
+/// Write `BENCH_<name>.json` into [`out_dir`]; returns the path written.
+pub fn write(name: &str, payload: Json) -> crate::Result<PathBuf> {
+    write_to(&out_dir(), name, payload)
+}
+
+/// Write `BENCH_<name>.json` into an explicit directory.
+pub fn write_to(dir: &std::path::Path, name: &str, payload: Json) -> crate::Result<PathBuf> {
+    let path = dir.join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, payload.pretty())?;
+    Ok(path)
+}
+
+/// A tabular bench payload: column names plus rows of JSON values.
+pub fn table(name: &str, columns: &[&str], rows: Vec<Vec<Json>>) -> Json {
+    for r in &rows {
+        debug_assert_eq!(r.len(), columns.len(), "{name}: row width != column count");
+    }
+    Json::obj(vec![
+        ("bench", Json::str(name)),
+        ("columns", Json::Arr(columns.iter().map(|c| Json::str(c)).collect())),
+        ("rows", Json::Arr(rows.into_iter().map(Json::Arr).collect())),
+    ])
+}
+
+/// One operation counter as a JSON object.
+pub fn ops_json(c: &OpCounter) -> Json {
+    Json::obj(vec![
+        ("add", Json::num(c.add as f64)),
+        ("mul", Json::num(c.mul as f64)),
+        ("cmp", Json::num(c.cmp as f64)),
+        ("div", Json::num(c.div as f64)),
+        ("exp", Json::num(c.exp as f64)),
+        ("shift", Json::num(c.shift as f64)),
+        ("lz_encode", Json::num(c.lz_encode as f64)),
+        ("dram_bytes", Json::num(c.dram_bytes as f64)),
+        ("sram_bytes", Json::num(c.sram_bytes as f64)),
+        ("equivalent_adds", Json::num(c.equiv())),
+    ])
+}
+
+/// Per-stage operation counters as a JSON object.
+pub fn stage_ops_json(s: &StageOps) -> Json {
+    Json::obj(vec![
+        ("predict", ops_json(&s.predict)),
+        ("topk", ops_json(&s.topk)),
+        ("kv_gen", ops_json(&s.kv_gen)),
+        ("formal", ops_json(&s.formal)),
+        ("total", ops_json(&s.total())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::OpKind;
+
+    #[test]
+    fn table_schema_and_write_round_trip() {
+        let t = table("demo", &["s", "x"], vec![vec![Json::num(1.0), Json::num(2.5)]]);
+        assert_eq!(t.get("bench").unwrap().as_str(), Some("demo"));
+        assert_eq!(t.get("columns").unwrap().as_arr().unwrap().len(), 2);
+        let dir = std::env::temp_dir().join("star_bench_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = write_to(&dir, "demo", t).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("rows").unwrap().as_arr().unwrap().len(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn ops_json_carries_all_counters() {
+        let mut s = StageOps::default();
+        s.predict.tally(OpKind::Shift, 3);
+        s.formal.tally(OpKind::Exp, 2);
+        let j = stage_ops_json(&s);
+        assert_eq!(j.get("predict").unwrap().get("shift").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("total").unwrap().get("exp").unwrap().as_f64(), Some(2.0));
+    }
+}

@@ -99,6 +99,9 @@ impl Batcher {
         let mut requests = Vec::new();
         let mut rows = 0;
         while let Some(front) = self.queue.front() {
+            // A lone oversize request still seals alone (escape hatch for
+            // direct Batcher users); the server path never reaches this —
+            // `Router::admit` rejects t > target_t at admission.
             if rows + front.t > self.cfg.target_t && !requests.is_empty() {
                 break;
             }

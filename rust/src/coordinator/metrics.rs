@@ -27,6 +27,12 @@ struct Inner {
     stage_kv_gen_s: f64,
     stage_formal_s: f64,
     stalls: u64,
+    // Decode/KV-cache counters (session-aware native backend).
+    decode_steps: u64,
+    decode_tokens: u64,
+    cache_page_hits: u64,
+    cache_pages_rematerialized: u64,
+    cache_sessions_evicted: u64,
 }
 
 /// A point-in-time copy for reporting.
@@ -34,8 +40,9 @@ struct Inner {
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub rejected: u64,
-    /// Batches whose backend execution errored (responses carried no
-    /// output; the error text went to the `Response::variant` field).
+    /// Batches (or individual decode requests) whose backend execution
+    /// errored — the responses carried no output and the error text went
+    /// to the `Response::variant` field.
     pub failed: u64,
     pub batches: u64,
     pub rows: u64,
@@ -54,6 +61,17 @@ pub struct MetricsSnapshot {
     pub stage_formal_s: f64,
     /// SU-FA max-misprediction recoveries across all served batches.
     pub stalls: u64,
+    /// Decode steps served against the paged KV-cache.
+    pub decode_steps: u64,
+    /// Tokens appended across those decode steps.
+    pub decode_tokens: u64,
+    /// Distinct already-resident pages read per decode step, summed
+    /// (cache hits; same per-step page units as the misses below).
+    pub cache_page_hits: u64,
+    /// Pages rebuilt from history after eviction (cache misses).
+    pub cache_pages_rematerialized: u64,
+    /// LRU whole-session evictions.
+    pub cache_sessions_evicted: u64,
 }
 
 impl Metrics {
@@ -98,6 +116,16 @@ impl Metrics {
         m.stalls += stalls;
     }
 
+    /// Account one decode step served against the paged KV-cache.
+    pub fn record_decode(&self, r: &crate::pipeline::DecodeReport) {
+        let mut m = self.inner.lock().unwrap();
+        m.decode_steps += 1;
+        m.decode_tokens += r.positions.len() as u64;
+        m.cache_page_hits += r.page_hits as u64;
+        m.cache_pages_rematerialized += r.rematerialized_pages as u64;
+        m.cache_sessions_evicted += r.evicted_sessions.len() as u64;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
         let window = (m.last_s - m.first_s.unwrap_or(0.0)).max(1e-9);
@@ -118,6 +146,11 @@ impl Metrics {
             stage_kv_gen_s: m.stage_kv_gen_s,
             stage_formal_s: m.stage_formal_s,
             stalls: m.stalls,
+            decode_steps: m.decode_steps,
+            decode_tokens: m.decode_tokens,
+            cache_page_hits: m.cache_page_hits,
+            cache_pages_rematerialized: m.cache_pages_rematerialized,
+            cache_sessions_evicted: m.cache_sessions_evicted,
         }
     }
 }
@@ -150,6 +183,16 @@ impl MetricsSnapshot {
                 self.stage_kv_gen_s * 1e3,
                 self.stage_formal_s * 1e3,
                 self.stalls
+            ));
+        }
+        if self.decode_steps > 0 {
+            s.push_str(&format!(
+                "\nkvcache: steps={} tokens={} page_hits={} rematerialized={} evicted={}",
+                self.decode_steps,
+                self.decode_tokens,
+                self.cache_page_hits,
+                self.cache_pages_rematerialized,
+                self.cache_sessions_evicted
             ));
         }
         s

@@ -6,18 +6,26 @@
 //! stage pipeline full. The coordinator owns the event loop:
 //!
 //! * [`router`] — admits requests, validates them against the loaded
-//!   model variants, and routes each to the variant queue whose compiled
-//!   shape fits (artifacts have static shapes; routing = shape bucketing).
-//! * [`batcher`] — dynamic batching: emit a batch when it reaches the
-//!   target query parallelism or when the oldest request exceeds the
-//!   latency budget.
+//!   model variants and the batcher's row target
+//!   ([`Router::admit`]), and routes each to the variant queue whose
+//!   compiled shape fits (artifacts have static shapes; routing = shape
+//!   bucketing). Decode requests ([`Request::decode`]) carry a session
+//!   id plus new-token Q/K/V rows.
+//! * [`batcher`] — dynamic + continuous batching: emit a batch when it
+//!   reaches the target query parallelism or when the oldest request
+//!   exceeds the latency budget. Decode sessions re-enter the batcher
+//!   on every step, so decode chunks and prefill chunks mix in one
+//!   LTPP batch up to `target_t`.
 //! * [`scheduler`] — the tiled out-of-order stage scheduler (the paper's
 //!   "tiled & OoO scheduler", Fig. 12): stage-tiles of independent
 //!   batches issue out of order so no unit idles at stage boundaries.
 //! * [`server`] — the thread-based serving loop gluing the above to an
-//!   execution backend: the PJRT [`crate::runtime::Engine`] (real
-//!   numerics) or the cycle-level simulator (timing studies).
-//! * [`metrics`] — latency/throughput accounting.
+//!   execution backend: the native pipeline (session-aware — decode
+//!   requests run against a shared [`crate::kvcache::SessionStore`]),
+//!   the PJRT [`crate::runtime::Engine`] (real numerics, `pjrt`
+//!   feature) or the cycle-level simulator (timing studies).
+//! * [`metrics`] — latency/throughput accounting, per-stage busy times,
+//!   and KV-cache hit/eviction/re-materialization counters.
 
 pub mod batcher;
 pub mod metrics;

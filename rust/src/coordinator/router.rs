@@ -18,13 +18,52 @@ pub struct Request {
     pub s: usize,
     /// Arrival timestamp, seconds (caller-provided monotonic clock).
     pub arrival_s: f64,
-    /// Optional payload: the actual Q rows (used by the PJRT backend).
+    /// Optional payload: the actual Q rows (used by the native and PJRT
+    /// backends).
     pub q: Option<Mat>,
+    /// Decode-session id: when set, the native backend appends `kv` to
+    /// this session's paged KV-cache and decodes against the cached
+    /// context instead of the variant's static context.
+    pub session: Option<u64>,
+    /// The new tokens' (K, V) rows for a decode request.
+    pub kv: Option<(Mat, Mat)>,
 }
 
 impl Request {
     pub fn new(id: u64, model: &str, t: usize, s: usize, arrival_s: f64) -> Request {
-        Request { id, model: model.to_string(), t, s, arrival_s, q: None }
+        Request { id, model: model.to_string(), t, s, arrival_s, q: None, session: None, kv: None }
+    }
+
+    /// A decode-step request: append one chunk of tokens (`q`/`k`/`v`
+    /// rows) to `session` and attend causally against its cached
+    /// context. `s` **must** equal the session length *after* the append
+    /// — it routes the shape bucket AND serves as the ordering guard:
+    /// the backend rejects a step whose claimed context length does not
+    /// match the session (e.g. two same-session steps racing through
+    /// different batches), turning silent context permutation into a
+    /// per-request error.
+    pub fn decode(
+        id: u64,
+        model: &str,
+        session: u64,
+        q: Mat,
+        k: Mat,
+        v: Mat,
+        s: usize,
+        arrival_s: f64,
+    ) -> Request {
+        let t = q.rows;
+        let mut req = Request::new(id, model, t, s, arrival_s);
+        req.q = Some(q);
+        req.session = Some(session);
+        req.kv = Some((k, v));
+        req
+    }
+
+    /// Whether this request decodes against a session (vs stateless
+    /// prefill).
+    pub fn is_decode(&self) -> bool {
+        self.session.is_some()
     }
 }
 
@@ -60,6 +99,9 @@ pub enum RouteError {
     UnknownModel(String),
     TooLong { s: usize, max: usize },
     TooWide { t: usize, max: usize },
+    /// More query rows than the batcher's target: such a request could
+    /// never seal a within-target batch (split it into chunks instead).
+    OverTarget { t: usize, target: usize },
 }
 
 impl std::fmt::Display for RouteError {
@@ -68,6 +110,9 @@ impl std::fmt::Display for RouteError {
             RouteError::UnknownModel(m) => write!(f, "unknown model {m:?}"),
             RouteError::TooLong { s, max } => write!(f, "context {s} exceeds max {max}"),
             RouteError::TooWide { t, max } => write!(f, "batch rows {t} exceed max {max}"),
+            RouteError::OverTarget { t, target } => {
+                write!(f, "request rows {t} exceed batch target {target}; split into chunks")
+            }
         }
     }
 }
@@ -107,6 +152,18 @@ impl Router {
             .find(|v| v.s >= req.s && v.max_t >= req.t)
             .ok_or(RouteError::TooLong { s: req.s, max: max_s })
     }
+
+    /// Route plus batch-level admission: additionally reject requests
+    /// whose query rows exceed the batcher's `target_t` — previously
+    /// such a request flowed through unchecked and sealed an over-target
+    /// batch via [`super::batcher::Batcher`]'s oversize escape hatch.
+    /// `target_t = 0` disables the check.
+    pub fn admit(&self, req: &Request, target_t: usize) -> Result<&Variant, RouteError> {
+        if target_t > 0 && req.t > target_t {
+            return Err(RouteError::OverTarget { t: req.t, target: target_t });
+        }
+        self.route(req)
+    }
 }
 
 #[cfg(test)]
@@ -135,6 +192,36 @@ mod tests {
         let r = router();
         let e = r.route(&Request::new(1, "llama", 1, 10, 0.0)).unwrap_err();
         assert_eq!(e, RouteError::UnknownModel("llama".into()));
+    }
+
+    #[test]
+    fn admit_enforces_batch_target() {
+        let r = router();
+        // Routable by shape (max_t = 128) but wider than the batch
+        // target: admission must reject it.
+        let req = Request::new(1, "tiny", 48, 300, 0.0);
+        assert_eq!(
+            r.admit(&req, 32).unwrap_err(),
+            RouteError::OverTarget { t: 48, target: 32 }
+        );
+        // Within target: admit behaves exactly like route.
+        assert_eq!(r.admit(&req, 64).unwrap().name, "attn_s512");
+        // target 0 disables the check.
+        assert!(r.admit(&req, 0).is_ok());
+    }
+
+    #[test]
+    fn decode_request_carries_session_payload() {
+        let q = Mat::zeros(2, 4);
+        let k = Mat::zeros(2, 4);
+        let v = Mat::zeros(2, 4);
+        let req = Request::decode(5, "tiny", 9, q, k, v, 34, 0.0);
+        assert!(req.is_decode());
+        assert_eq!(req.session, Some(9));
+        assert_eq!(req.t, 2);
+        assert_eq!(req.s, 34);
+        assert!(req.kv.is_some() && req.q.is_some());
+        assert!(!Request::new(1, "tiny", 2, 34, 0.0).is_decode());
     }
 
     #[test]

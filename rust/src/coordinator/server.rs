@@ -29,7 +29,7 @@
 //! let router = Router::new(vec![Variant {
 //!     name: "sparse_attention".into(), model: "gpt2".into(), max_t: 128, s,
 //! }]);
-//! let backend = Backend::Native { pipeline: PipelineConfig::star(), contexts };
+//! let backend = Backend::native(PipelineConfig::star(), contexts);
 //! let server = Server::start(router, backend, ServerConfig::default());
 //! let mut req = Request::new(0, "gpt2", 8, s, 0.0);
 //! req.q = Some(Mat::randn(8, d, 1.0, &mut rng));
@@ -42,6 +42,7 @@ use super::batcher::{Batch, Batcher, BatcherConfig};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::router::{Request, Response, Router};
 use crate::config::AccelConfig;
+use crate::kvcache::SessionStore;
 use crate::pipeline::{PipelineConfig, PipelineInputs, SparseAttentionPipeline};
 #[cfg(feature = "pjrt")]
 use crate::runtime::Engine;
@@ -54,7 +55,7 @@ use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// How batches actually execute. This is pure (Send) configuration: the
@@ -63,11 +64,20 @@ use std::time::Instant;
 pub enum Backend {
     /// Serve real sparse attention natively: every batch runs the tiled
     /// predict → top-k → KV-gen → SU-FA pipeline in-process. `contexts`
-    /// maps variant name → (K, V) context matrices. Per-stage busy times
-    /// and SU-FA stalls land in the server metrics. Note each server
-    /// worker runs its own pipeline; set `pipeline.threads = 1` to avoid
-    /// oversubscription when `ServerConfig::workers` is large.
-    Native { pipeline: PipelineConfig, contexts: BTreeMap<String, (Mat, Mat)> },
+    /// maps variant name → (K, V) context matrices for stateless prefill
+    /// requests; decode requests (`Request::decode`) run against the
+    /// shared `sessions` store instead and report cache-hit/eviction
+    /// metrics. Per-stage busy times and SU-FA stalls land in the server
+    /// metrics. Note each server worker runs its own pipeline; set
+    /// `pipeline.threads = 1` to avoid oversubscription when
+    /// `ServerConfig::workers` is large.
+    Native {
+        pipeline: PipelineConfig,
+        contexts: BTreeMap<String, (Mat, Mat)>,
+        /// Shared paged KV-cache session store (`None` = prefill-only
+        /// server: decode requests are answered with an error).
+        sessions: Option<Arc<Mutex<SessionStore>>>,
+    },
     /// Execute the AOT-compiled PJRT artifact named by each variant.
     /// `contexts` maps variant name → (K, V) context matrices.
     #[cfg(feature = "pjrt")]
@@ -75,6 +85,23 @@ pub enum Backend {
     /// Model the accelerator: latency from the cycle-level simulator,
     /// stretched by `time_scale` wall-clock seconds per simulated second.
     Sim { feats: FeatureSet, accel: AccelConfig, dram: DramChannel, d: usize, h: usize, keep: f64, time_scale: f64 },
+}
+
+impl Backend {
+    /// Prefill-only native backend (no session store).
+    pub fn native(pipeline: PipelineConfig, contexts: BTreeMap<String, (Mat, Mat)>) -> Backend {
+        Backend::Native { pipeline, contexts, sessions: None }
+    }
+
+    /// Session-aware native backend: decode requests share `store`'s
+    /// paged KV-cache across all workers.
+    pub fn native_with_sessions(
+        pipeline: PipelineConfig,
+        contexts: BTreeMap<String, (Mat, Mat)>,
+        store: SessionStore,
+    ) -> Backend {
+        Backend::Native { pipeline, contexts, sessions: Some(Arc::new(Mutex::new(store))) }
+    }
 }
 
 /// Server construction knobs.
@@ -148,7 +175,11 @@ impl Server {
                 // Block briefly so timeout-flushes still happen at low load.
                 let msg = rx.recv_timeout(std::time::Duration::from_millis(1)).unwrap_or(Msg::Tick);
                 match msg {
-                    Msg::Submit(req, reply) => match router.route(&req) {
+                    // Admission = routing + the batch-target check: an
+                    // over-target request would otherwise seal an
+                    // over-target batch via the batcher's oversize
+                    // escape hatch.
+                    Msg::Submit(req, reply) => match router.admit(&req, cfg.batcher.target_t) {
                         Ok(variant) => {
                             waiting.insert(req.id, reply);
                             batchers
@@ -263,12 +294,14 @@ fn execute_batch(
 ) {
     let sealed = batch.sealed_s;
     match backend {
-        Backend::Native { pipeline, contexts } => {
-            let out = run_native(pipeline, contexts, &batch, metrics);
+        Backend::Native { pipeline, contexts, sessions } => {
+            let out = run_native(pipeline, contexts, sessions.as_ref(), &batch, metrics);
             let now = started.elapsed().as_secs_f64();
             // Surface misconfiguration instead of silently serving empty
-            // outputs: count it and carry the message to every client of
-            // the batch (mirroring the "rejected: …" path).
+            // outputs: count a batch-level failure and carry the message
+            // to every client of the batch (mirroring the "rejected: …"
+            // path). Decode-request failures are per-request (they carry
+            // per-session side effects) and arrive in `errors`.
             let error = out
                 .as_ref()
                 .err()
@@ -277,10 +310,13 @@ fn execute_batch(
                     eprintln!("native backend error on variant {}: {e}", batch.variant);
                     format!("error: {e}")
                 });
-            let mut rows = out.unwrap_or_default();
+            let (mut rows, errors) = out.unwrap_or_default();
             for (i, (req, reply)) in batch.requests.iter().zip(replies).enumerate() {
                 let (output, variant) = match &error {
-                    None => (rows[i].take(), batch.variant.clone()),
+                    None => match errors[i].clone() {
+                        None => (rows[i].take(), batch.variant.clone()),
+                        Some(msg) => (None, msg),
+                    },
                     Some(msg) => (None, msg.clone()),
                 };
                 let latency = now - req.arrival_s;
@@ -350,54 +386,116 @@ fn execute_batch(
     }
 }
 
-/// Execute one LTPP batch through the native sparse-attention pipeline:
-/// concatenate the requests' Q rows, run predict → top-k → KV-gen →
-/// SU-FA once over the whole batch against the variant's KV context, and
-/// slice outputs back per request. Requests without a Q payload ride the
-/// batch for timing but get no output.
+/// Execute one LTPP batch through the native sparse-attention pipeline.
+/// The batch can mix the two request kinds continuous batching
+/// interleaves: **decode steps** (a session id + new-token Q/K/V rows)
+/// run one at a time against the shared paged KV-cache; **stateless
+/// prefill** requests are concatenated and run once against the
+/// variant's KV context, outputs sliced back per request. Requests
+/// without a Q payload ride the batch for timing but get no output.
 fn run_native(
     cfg: &PipelineConfig,
     contexts: &BTreeMap<String, (Mat, Mat)>,
+    sessions: Option<&Arc<Mutex<SessionStore>>>,
     batch: &Batch,
     metrics: &Metrics,
-) -> Result<Vec<Option<Mat>>> {
-    let (k, v) = contexts
-        .get(&batch.variant)
-        .ok_or_else(|| anyhow::anyhow!("no KV context for variant {}", batch.variant))?;
-    // Validate as errors, not panics: an assert here would kill the worker
-    // thread for the server's remaining lifetime and drop the replies.
-    anyhow::ensure!(
-        k.rows == v.rows && k.cols == v.cols,
-        "variant {}: malformed KV context (K {}x{}, V {}x{})",
-        batch.variant,
-        k.rows,
-        k.cols,
-        v.rows,
-        v.cols
-    );
+) -> Result<(Vec<Option<Mat>>, Vec<Option<String>>)> {
     if let Err(e) = cfg.validate() {
         anyhow::bail!("invalid pipeline config: {e}");
     }
-    let d = k.cols;
+    let mut outs: Vec<Option<Mat>> = vec![None; batch.requests.len()];
+    let mut errors: Vec<Option<String>> = vec![None; batch.requests.len()];
+
+    // ---- Validate the stateless-prefill side BEFORE any decode step
+    // runs: decode steps mutate their sessions, so a batch-level error
+    // raised after them would discard outputs of appends that already
+    // happened (and a retry would be rejected by the ordering guard).
     let with_q: Vec<(usize, &Mat)> = batch
         .requests
         .iter()
         .enumerate()
-        .filter_map(|(i, r)| r.q.as_ref().map(|q| (i, q)))
+        .filter_map(|(i, r)| if r.is_decode() { None } else { r.q.as_ref().map(|q| (i, q)) })
         .collect();
-    for (i, q) in &with_q {
+    let prefill_ctx = if with_q.is_empty() {
+        None
+    } else {
+        let (k, v) = contexts
+            .get(&batch.variant)
+            .ok_or_else(|| anyhow::anyhow!("no KV context for variant {}", batch.variant))?;
+        // Validate as errors, not panics: an assert here would kill the
+        // worker thread for the server's remaining lifetime and drop the
+        // replies.
         anyhow::ensure!(
-            q.cols == d,
-            "request {} head dim {} != context head dim {d}",
-            batch.requests[*i].id,
-            q.cols
+            k.rows == v.rows && k.cols == v.cols,
+            "variant {}: malformed KV context (K {}x{}, V {}x{})",
+            batch.variant,
+            k.rows,
+            k.cols,
+            v.rows,
+            v.cols
         );
+        for (i, q) in &with_q {
+            anyhow::ensure!(
+                q.cols == k.cols,
+                "request {} head dim {} != context head dim {}",
+                batch.requests[*i].id,
+                q.cols,
+                k.cols
+            );
+        }
+        Some((k, v))
+    };
+
+    // ---- Decode steps against the shared session store. A decode step
+    // mutates its session, so a failing request must NOT fail the whole
+    // batch (earlier decode requests already appended their tokens — a
+    // blanket retry would duplicate context). Failures are per-request.
+    for (i, req) in batch.requests.iter().enumerate() {
+        let Some(sid) = req.session else { continue };
+        let step = || -> Result<crate::pipeline::DecodeReport> {
+            let store = sessions.ok_or_else(|| {
+                anyhow::anyhow!("decode request {} but the server has no session store", req.id)
+            })?;
+            let (q, (kn, vn)) = match (&req.q, &req.kv) {
+                (Some(q), Some(kv)) => (q, kv),
+                _ => anyhow::bail!("decode request {} lacks a Q or KV payload", req.id),
+            };
+            let pipeline = SparseAttentionPipeline::new(*cfg);
+            let mut store = store.lock().unwrap();
+            // Ordering guard: `Request::decode` carries the session length
+            // after the append. Concurrent same-session steps that would
+            // land out of order (silently permuting the context) are
+            // rejected here instead.
+            let expected = store.len(sid) + q.rows;
+            anyhow::ensure!(
+                req.s == expected,
+                "decode step out of order for session {sid}: request claims context {} but \
+                 the session would be {expected} after this append",
+                req.s
+            );
+            pipeline.decode_step(&mut store, sid, q, kn, vn)
+        };
+        match step() {
+            Ok(report) => {
+                metrics.record_stage_times(&report.timing, report.stalls);
+                metrics.record_decode(&report);
+                outs[i] = Some(report.out);
+            }
+            Err(e) => {
+                metrics.record_failure();
+                eprintln!("decode error on request {}: {e}", req.id);
+                errors[i] = Some(format!("error: {e}"));
+            }
+        }
     }
+
+    // ---- Stateless prefill requests, concatenated as one LTPP pass
+    // (pre-validated above; the pipeline run itself cannot fail). ----
+    let Some((k, v)) = prefill_ctx else {
+        return Ok((outs, errors));
+    };
+    let d = k.cols;
     let total: usize = with_q.iter().map(|(_, q)| q.rows).sum();
-    let mut outs: Vec<Option<Mat>> = vec![None; batch.requests.len()];
-    if total == 0 {
-        return Ok(outs);
-    }
     let mut qcat = Mat::zeros(total, d);
     let mut at = 0;
     for (_, q) in &with_q {
@@ -413,7 +511,7 @@ fn run_native(
         outs[ri] = Some(Mat::from_fn(q.rows, d, |i, j| report.out.at(at + i, j)));
         at += q.rows;
     }
-    Ok(outs)
+    Ok((outs, errors))
 }
 
 /// Build the worker's engine on first use.
@@ -545,10 +643,8 @@ mod tests {
             max_t: 64,
             s,
         }]);
-        let backend = Backend::Native {
-            pipeline: crate::pipeline::PipelineConfig::star().with_threads(1),
-            contexts,
-        };
+        let backend =
+            Backend::native(crate::pipeline::PipelineConfig::star().with_threads(1), contexts);
         let server = Server::start(
             router,
             backend,

@@ -1,0 +1,33 @@
+//! Paged KV-cache + decode-session subsystem.
+//!
+//! STAR's cross-stage tiling coordinates the four pipeline stages
+//! *within* one run; this module extends the same idea across **time**:
+//! decode step `t` reuses the prediction metadata and generated KV of
+//! steps `0..t` instead of recomputing them. Concretely:
+//!
+//! * [`page`] — [`KvPage`] (K/V rows + frozen per-row quantized predict
+//!   operands) and [`PagedKvCache`], the block-granular pool with
+//!   capacity accounting. Pages are sized to the pipeline's query-tile
+//!   size so cached state composes with cross-stage tiling.
+//! * [`session`] — [`SessionStore`]: sessions keyed by id, LRU
+//!   whole-session eviction, and re-materialization from host history
+//!   after eviction.
+//! * [`predict`] — [`QueryOperand`] / [`score_row`]: incremental DLZS /
+//!   SLZS / low-bit prediction of one query row against cached page
+//!   operands, with **per-row** quantization scales on both sides.
+//!
+//! The per-row scales are the load-bearing design decision: a frozen
+//! key operand never depends on later tokens, and a query operand never
+//! depends on its batch, so N single-token
+//! [`crate::pipeline::SparseAttentionPipeline::decode_step`] calls are
+//! bit-identical to one length-N causal prefill — for every chunking,
+//! tile size, thread count, and across eviction/re-materialization
+//! (property-tested in `rust/tests/prop_decode_parity.rs`).
+
+pub mod page;
+pub mod predict;
+pub mod session;
+
+pub use page::{gather_rows, CacheStats, KvPage, PageId, PagedKvCache};
+pub use predict::{score_row, QueryOperand};
+pub use session::{AppendOutcome, SessionConfig, SessionStore};

@@ -1,0 +1,307 @@
+//! KV pages and the block-granular page pool.
+//!
+//! A [`KvPage`] holds up to `page_size` tokens' K/V rows **plus the
+//! cached prediction metadata** for those keys: each K row quantized with
+//! its own per-row scale at append time (see
+//! [`crate::arith::quantize_row`]). Freezing the operand per row is what
+//! makes cached prediction bit-identical to re-running a full prefill —
+//! a row's quantization never depends on tokens appended later.
+//!
+//! The [`PagedKvCache`] is the pool: fixed-capacity slots with a free
+//! list and capacity accounting. *Which* pages belong to which session —
+//! and who gets evicted — is the [`super::session::SessionStore`]'s job;
+//! the pool only allocates, frees and counts.
+
+use crate::arith::{quantize_row, IntBits, LzCode};
+
+/// Index of a page slot in the pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct PageId(pub usize);
+
+/// One fixed-capacity KV page plus cached predict metadata.
+#[derive(Clone, Debug)]
+pub struct KvPage {
+    capacity: usize,
+    d: usize,
+    len: usize,
+    /// K rows, row-major `[len, d]` within a `capacity × d` budget.
+    k: Vec<f32>,
+    /// V rows, row-major `[len, d]`.
+    v: Vec<f32>,
+    /// Cached predict operands: per-row quantized K values (`[len, d]`).
+    qk: Vec<i32>,
+    /// LZ codes of `qk` (`[len, d]`), frozen at append — read by the
+    /// SLZS scheme so decode never re-encodes cached keys.
+    k_codes: Vec<LzCode>,
+    /// Per-row quantization scales, frozen at append.
+    k_scales: Vec<f32>,
+}
+
+impl KvPage {
+    pub fn new(capacity: usize, d: usize) -> KvPage {
+        assert!(capacity > 0 && d > 0, "page must have positive capacity and head dim");
+        KvPage {
+            capacity,
+            d,
+            len: 0,
+            k: Vec::with_capacity(capacity * d),
+            v: Vec::with_capacity(capacity * d),
+            qk: Vec::with_capacity(capacity * d),
+            k_codes: Vec::with_capacity(capacity * d),
+            k_scales: Vec::with_capacity(capacity),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len == self.capacity
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Append one token's K/V rows and freeze its prediction metadata:
+    /// the row quantized at `bits` with its own scale, plus the LZ codes
+    /// of the quantized values at magnitude bitwidth `w`.
+    pub fn push(&mut self, k_row: &[f32], v_row: &[f32], bits: IntBits, w: u32) {
+        assert!(!self.is_full(), "push into a full page");
+        assert_eq!(k_row.len(), self.d);
+        assert_eq!(v_row.len(), self.d);
+        self.k.extend_from_slice(k_row);
+        self.v.extend_from_slice(v_row);
+        let (q, scale) = quantize_row(k_row, bits);
+        self.k_codes.extend(q.iter().map(|&x| LzCode::encode(x, w)));
+        self.qk.extend(q);
+        self.k_scales.push(scale);
+        self.len += 1;
+    }
+
+    pub fn k_row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.len);
+        &self.k[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn v_row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.len);
+        &self.v[i * self.d..(i + 1) * self.d]
+    }
+
+    /// The cached quantized K operand of row `i`.
+    pub fn qk_row(&self, i: usize) -> &[i32] {
+        debug_assert!(i < self.len);
+        &self.qk[i * self.d..(i + 1) * self.d]
+    }
+
+    /// The frozen LZ codes of row `i`'s quantized K operand.
+    pub fn k_codes_row(&self, i: usize) -> &[LzCode] {
+        debug_assert!(i < self.len);
+        &self.k_codes[i * self.d..(i + 1) * self.d]
+    }
+
+    /// The frozen per-row quantization scale of row `i`.
+    pub fn k_scale(&self, i: usize) -> f32 {
+        self.k_scales[i]
+    }
+
+    fn reset(&mut self, capacity: usize, d: usize) {
+        self.capacity = capacity;
+        self.d = d;
+        self.len = 0;
+        self.k.clear();
+        self.v.clear();
+        self.qk.clear();
+        self.k_codes.clear();
+        self.k_scales.clear();
+    }
+}
+
+/// Gather the K/V rows of the given (sorted, absolute) key indices from
+/// a session's pages (append order, `page_size`-token pages) into
+/// compact matrices — the formal stage's cache read. Shared by
+/// [`super::session::SessionStore::gather`] and the decode executor.
+pub fn gather_rows(
+    pages: &[&KvPage],
+    page_size: usize,
+    keys: &[usize],
+    d: usize,
+) -> (crate::tensor::Mat, crate::tensor::Mat) {
+    use crate::tensor::Mat;
+    let mut k = Mat::zeros(keys.len(), d);
+    let mut v = Mat::zeros(keys.len(), d);
+    for (i, &key) in keys.iter().enumerate() {
+        let page = pages[key / page_size];
+        k.row_mut(i).copy_from_slice(page.k_row(key % page_size));
+        v.row_mut(i).copy_from_slice(page.v_row(key % page_size));
+    }
+    (k, v)
+}
+
+/// Lifetime counters of a page pool / session store.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    /// Tokens appended across all sessions.
+    pub appended_tokens: u64,
+    /// Pages handed out (fresh allocations and reused free slots).
+    pub pages_allocated: u64,
+    /// Pages reclaimed by LRU session eviction.
+    pub pages_evicted: u64,
+    /// Whole-session evictions.
+    pub sessions_evicted: u64,
+    /// Pages rebuilt from session history after an eviction.
+    pub pages_rematerialized: u64,
+    /// Resident pages served to decode formal-compute reads (cache hits).
+    pub page_hits: u64,
+}
+
+/// Block-granular page pool with capacity accounting.
+#[derive(Clone, Debug)]
+pub struct PagedKvCache {
+    page_size: usize,
+    d: usize,
+    /// Maximum resident pages (0 = unbounded).
+    capacity_pages: usize,
+    slots: Vec<KvPage>,
+    /// Slot indices available for reuse.
+    free: Vec<usize>,
+    pub stats: CacheStats,
+}
+
+impl PagedKvCache {
+    pub fn new(page_size: usize, d: usize, capacity_pages: usize) -> PagedKvCache {
+        assert!(page_size > 0 && d > 0, "page_size and d must be positive");
+        PagedKvCache {
+            page_size,
+            d,
+            capacity_pages,
+            slots: Vec::new(),
+            free: Vec::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Resident (allocated, not freed) pages.
+    pub fn resident_pages(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    /// Maximum resident pages (0 = unbounded).
+    pub fn capacity_pages(&self) -> usize {
+        self.capacity_pages
+    }
+
+    /// Whether one more page can be allocated without eviction.
+    pub fn has_room(&self) -> bool {
+        self.capacity_pages == 0 || self.resident_pages() < self.capacity_pages
+    }
+
+    /// Allocate an empty page; `None` when at capacity (the caller must
+    /// evict first).
+    pub fn alloc(&mut self) -> Option<PageId> {
+        if !self.has_room() {
+            return None;
+        }
+        self.stats.pages_allocated += 1;
+        if let Some(slot) = self.free.pop() {
+            let (ps, d) = (self.page_size, self.d);
+            self.slots[slot].reset(ps, d);
+            Some(PageId(slot))
+        } else {
+            self.slots.push(KvPage::new(self.page_size, self.d));
+            Some(PageId(self.slots.len() - 1))
+        }
+    }
+
+    /// Return a page to the free list.
+    pub fn free_page(&mut self, id: PageId) {
+        debug_assert!(!self.free.contains(&id.0), "double free of page {}", id.0);
+        self.free.push(id.0);
+    }
+
+    pub fn get(&self, id: PageId) -> &KvPage {
+        &self.slots[id.0]
+    }
+
+    pub fn get_mut(&mut self, id: PageId) -> &mut KvPage {
+        &mut self.slots[id.0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn page_push_and_read_back() {
+        let mut p = KvPage::new(4, 3);
+        p.push(&[1.0, -2.0, 0.5], &[0.1, 0.2, 0.3], IntBits::Int8, 7);
+        p.push(&[0.0, 0.0, 0.0], &[1.0, 1.0, 1.0], IntBits::Int8, 7);
+        assert_eq!(p.len(), 2);
+        assert!(!p.is_full());
+        assert_eq!(p.k_row(0), &[1.0, -2.0, 0.5]);
+        assert_eq!(p.v_row(1), &[1.0, 1.0, 1.0]);
+        // Zero row: quantizes to zeros with a finite scale; codes carry
+        // the zero sentinel.
+        assert!(p.qk_row(1).iter().all(|&q| q == 0));
+        assert!(p.k_codes_row(1).iter().all(|c| c.is_zero()));
+        assert!(p.k_scale(1).is_finite());
+    }
+
+    #[test]
+    fn metadata_is_frozen_per_row() {
+        // The quantized operand of row 0 must not change when row 1 (with
+        // a much larger magnitude) arrives — the decode-parity invariant.
+        let mut p = KvPage::new(2, 2);
+        p.push(&[1.0, 0.5], &[0.0, 0.0], IntBits::Int8, 7);
+        let before: Vec<i32> = p.qk_row(0).to_vec();
+        let codes_before: Vec<LzCode> = p.k_codes_row(0).to_vec();
+        let scale_before = p.k_scale(0);
+        p.push(&[100.0, -50.0], &[0.0, 0.0], IntBits::Int8, 7);
+        assert_eq!(p.qk_row(0), &before[..]);
+        assert_eq!(p.k_codes_row(0), &codes_before[..]);
+        assert_eq!(p.k_scale(0), scale_before);
+    }
+
+    #[test]
+    fn pool_capacity_accounting() {
+        let mut pool = PagedKvCache::new(8, 4, 2);
+        let a = pool.alloc().unwrap();
+        let _b = pool.alloc().unwrap();
+        assert_eq!(pool.resident_pages(), 2);
+        assert!(pool.alloc().is_none(), "at capacity");
+        pool.free_page(a);
+        assert_eq!(pool.resident_pages(), 1);
+        let c = pool.alloc().expect("freed slot reusable");
+        assert_eq!(c, a, "free list reuses slots");
+        assert!(pool.get(c).is_empty(), "reused page starts empty");
+        assert_eq!(pool.stats.pages_allocated, 3);
+    }
+
+    #[test]
+    fn unbounded_pool_never_refuses() {
+        let mut pool = PagedKvCache::new(4, 2, 0);
+        for _ in 0..64 {
+            assert!(pool.alloc().is_some());
+        }
+        assert_eq!(pool.resident_pages(), 64);
+    }
+}

@@ -1,0 +1,238 @@
+//! Incremental (per-row) sparse prediction over cached page operands.
+//!
+//! The batch pipeline prepares prediction operands once per run with
+//! *globally* chosen quantization scales ([`crate::sparsity::PreparedPredict`]).
+//! That is the right contract for one-shot prefill, but it cannot be
+//! cached across decode steps: a global scale changes whenever a new
+//! token extends the tensor, which would silently requantize every
+//! cached key. The decode path therefore uses **per-row scales** on both
+//! sides — each K row's operand is frozen when the token is appended
+//! ([`super::page::KvPage::push`]) and each query row is encoded with a
+//! scale drawn from that row alone ([`QueryOperand::encode`]). Scoring a
+//! query at sequence position `p` then depends only on tokens `0..=p`,
+//! which makes N single-token decode steps bit-identical to one length-N
+//! causal prefill for every chunking, tile size and thread count.
+
+use super::page::KvPage;
+use crate::arith::{dlzs_mul, quantize_row, slzs_mul, truncate_msb, LzCode, OpCounter, OpKind};
+use crate::sim::pipeline::PredictKind;
+use crate::sparsity::bits_for;
+
+/// One query row's prediction operand: the row quantized with its own
+/// scale, LZ-encoded or MSB-truncated as the scheme requires.
+#[derive(Clone, Debug)]
+pub struct QueryOperand {
+    /// Original f32 row (oracle scoring under [`PredictKind::None`]).
+    raw: Vec<f32>,
+    /// Quantized row (low-bit path: already MSB-truncated).
+    q: Vec<i32>,
+    /// LZ codes of the quantized row (DLZS/SLZS schemes only).
+    codes: Vec<LzCode>,
+    scale: f32,
+    kind: PredictKind,
+    w: u32,
+}
+
+impl QueryOperand {
+    /// Encode one query row for the given scheme, charging the encode
+    /// ops the datapath pays per decode step.
+    pub fn encode(row: &[f32], kind: PredictKind, w: u32, c: &mut OpCounter) -> QueryOperand {
+        let d = row.len();
+        let (mut q, scale) = match kind {
+            PredictKind::None => (Vec::new(), 1.0),
+            _ => quantize_row(row, bits_for(w)),
+        };
+        let codes = match kind {
+            PredictKind::DlzsCross | PredictKind::Slzs => {
+                c.tally(OpKind::LzEncode, d as u64);
+                c.sram(d as u64); // compact code store (~1 byte/code)
+                q.iter().map(|&x| LzCode::encode(x, w)).collect()
+            }
+            PredictKind::LowBitMul => {
+                let msb = 4.min(w);
+                for v in q.iter_mut() {
+                    *v = truncate_msb(*v, msb);
+                }
+                c.sram((d * 2) as u64);
+                Vec::new()
+            }
+            PredictKind::None => Vec::new(),
+        };
+        QueryOperand { raw: row.to_vec(), q, codes, scale, kind, w }
+    }
+
+    pub fn d(&self) -> usize {
+        self.raw.len()
+    }
+}
+
+/// Score one query row against keys `0..limit` of a session's resident
+/// pages (concatenated in append order). Returns `limit` scores already
+/// in logit units (`attn_scale` applied). Key `j`'s score depends only
+/// on the query row and key `j`'s frozen operand — the bit-identity
+/// anchor of the decode subsystem.
+pub fn score_row(
+    qop: &QueryOperand,
+    pages: &[&KvPage],
+    limit: usize,
+    attn_scale: f32,
+    c: &mut OpCounter,
+) -> Vec<f32> {
+    let d = qop.d();
+    let mut out = Vec::with_capacity(limit);
+    'pages: for page in pages {
+        for r in 0..page.len() {
+            if out.len() == limit {
+                break 'pages;
+            }
+            debug_assert_eq!(page.d(), d, "query/page head-dim mismatch");
+            let score = match qop.kind {
+                PredictKind::None => {
+                    // Oracle scores: exact dot product, nothing charged.
+                    let krow = page.k_row(r);
+                    let mut dot = 0.0f32;
+                    for p in 0..d {
+                        dot += qop.raw[p] * krow[p];
+                    }
+                    dot * attn_scale
+                }
+                PredictKind::DlzsCross => {
+                    // Differential: plain quantized K, LZ-encoded Q (the
+                    // same operand roles as PreparedPredict's DLZS arm).
+                    let krow = page.qk_row(r);
+                    let mut acc = 0i64;
+                    for p in 0..d {
+                        acc += dlzs_mul(krow[p], qop.codes[p]);
+                    }
+                    acc as f32 * (qop.scale * page.k_scale(r)) * attn_scale
+                }
+                PredictKind::Slzs => {
+                    // Symmetric: both sides LZ-encoded. The key-side codes
+                    // were frozen (and their conversion charged) at append
+                    // — the caching win; decode only reads them.
+                    let kcodes = page.k_codes_row(r);
+                    let mut acc = 0i64;
+                    for p in 0..d {
+                        acc += slzs_mul(kcodes[p], qop.codes[p]);
+                    }
+                    acc as f32 * (qop.scale * page.k_scale(r)) * attn_scale
+                }
+                PredictKind::LowBitMul => {
+                    let krow = page.qk_row(r);
+                    let msb = 4.min(qop.w);
+                    let mut acc = 0i64;
+                    for p in 0..d {
+                        acc += truncate_msb(krow[p], msb) as i64 * qop.q[p] as i64;
+                    }
+                    acc as f32 * (qop.scale * page.k_scale(r)) * attn_scale
+                }
+            };
+            out.push(score);
+        }
+    }
+    assert_eq!(out.len(), limit, "session shorter than requested limit");
+    // Per-product accounting, mirroring PreparedPredict::score_rows with
+    // m = 1, n = limit.
+    match qop.kind {
+        PredictKind::None => {}
+        PredictKind::DlzsCross | PredictKind::Slzs => {
+            c.tally(OpKind::Shift, (limit * d) as u64);
+            c.tally(OpKind::Add, (limit * d) as u64);
+            c.sram((limit * d * 2) as u64);
+        }
+        PredictKind::LowBitMul => {
+            c.tally(OpKind::Mul, (limit * d) as u64);
+            c.tally(OpKind::Add, (limit * d) as u64);
+            c.sram((limit * d * 2) as u64);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::IntBits;
+    use crate::tensor::{topk_indices, Mat};
+    use crate::util::Rng;
+
+    fn pages_from(k: &Mat, v: &Mat, page_size: usize) -> Vec<KvPage> {
+        let mut pages = Vec::new();
+        for i in 0..k.rows {
+            if pages.last().map(|p: &KvPage| p.is_full()).unwrap_or(true) {
+                pages.push(KvPage::new(page_size, k.cols));
+            }
+            pages.last_mut().unwrap().push(k.row(i), v.row(i), IntBits::Int8, 7);
+        }
+        pages
+    }
+
+    #[test]
+    fn scores_are_chunking_invariant() {
+        // The same keys split across different page sizes must yield the
+        // exact same scores for the same query row.
+        let mut rng = Rng::new(11);
+        let (s, d) = (37, 16);
+        let k = Mat::randn(s, d, 1.0, &mut rng);
+        let v = Mat::randn(s, d, 1.0, &mut rng);
+        let q = Mat::randn(1, d, 1.0, &mut rng);
+        for kind in [PredictKind::DlzsCross, PredictKind::Slzs, PredictKind::LowBitMul] {
+            let mut c = OpCounter::new();
+            let qop = QueryOperand::encode(q.row(0), kind, 7, &mut c);
+            let mut reference: Option<Vec<f32>> = None;
+            for page_size in [1usize, 4, 16, 64] {
+                let pages = pages_from(&k, &v, page_size);
+                let refs: Vec<&KvPage> = pages.iter().collect();
+                let got = score_row(&qop, &refs, s, 0.25, &mut c);
+                match &reference {
+                    None => reference = Some(got),
+                    Some(want) => assert_eq!(&got, want, "{kind:?} page_size={page_size}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn limit_sees_only_the_causal_prefix() {
+        let mut rng = Rng::new(12);
+        let (s, d) = (24, 8);
+        let k = Mat::randn(s, d, 1.0, &mut rng);
+        let v = Mat::randn(s, d, 1.0, &mut rng);
+        let q = Mat::randn(1, d, 1.0, &mut rng);
+        let mut c = OpCounter::new();
+        let qop = QueryOperand::encode(q.row(0), PredictKind::DlzsCross, 7, &mut c);
+        let pages = pages_from(&k, &v, 5);
+        let refs: Vec<&KvPage> = pages.iter().collect();
+        let full = score_row(&qop, &refs, s, 1.0, &mut c);
+        for limit in [1usize, 5, 13, 24] {
+            let partial = score_row(&qop, &refs, limit, 1.0, &mut c);
+            assert_eq!(partial, full[..limit], "limit={limit}");
+        }
+    }
+
+    #[test]
+    fn dlzs_cached_scores_keep_topk_fidelity() {
+        // Per-row-scale DLZS over cached operands should still rank the
+        // true top keys highly (same property the batch predictor has).
+        let mut rng = Rng::new(13);
+        let (s, d) = (96, 32);
+        let k = Mat::randn(s, d, 1.0, &mut rng);
+        let v = Mat::randn(s, d, 1.0, &mut rng);
+        let q = Mat::randn(1, d, 1.0, &mut rng);
+        let exact: Vec<f32> = (0..s)
+            .map(|j| (0..d).map(|p| q.at(0, p) * k.at(j, p)).sum())
+            .collect();
+        let mut c = OpCounter::new();
+        let qop = QueryOperand::encode(q.row(0), PredictKind::DlzsCross, 7, &mut c);
+        let pages = pages_from(&k, &v, 16);
+        let refs: Vec<&KvPage> = pages.iter().collect();
+        let est = score_row(&qop, &refs, s, 1.0, &mut c);
+        assert!(c.mul == 0 && c.shift > 0, "DLZS stays multiplier-free");
+        let kk = 24;
+        let te = topk_indices(&exact, kk);
+        let tp = topk_indices(&est, kk);
+        let hits = te.iter().filter(|x| tp.contains(x)).count();
+        let rate = hits as f64 / kk as f64;
+        assert!(rate > 0.7, "cached DLZS hit rate {rate}");
+    }
+}

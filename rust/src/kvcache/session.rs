@@ -1,0 +1,479 @@
+//! Sessions over the paged pool: ownership, LRU eviction and
+//! re-materialization.
+//!
+//! A [`SessionStore`] keys decode state by session id. Each session owns
+//! a list of pages in the shared [`PagedKvCache`] plus its **host-side
+//! token history** (the durable truth — in a real deployment the
+//! activations the KV regenerates from). Eviction is whole-session and
+//! LRU: when the pool is at capacity, the least-recently-touched *other*
+//! session loses its pages (history survives). The next decode step of
+//! an evicted session re-materializes its pages from history — charged
+//! as DRAM reload + requantization in the step's [`StageOps`] — and
+//! rebuilds **bit-identical** metadata, because page operands are
+//! quantized per row ([`crate::arith::quantize_row`]).
+
+use super::page::{CacheStats, KvPage, PagedKvCache, PageId};
+use crate::arith::{IntBits, OpKind};
+use crate::pipeline::{PipelineConfig, StageOps};
+use crate::sim::pipeline::PredictKind;
+use crate::sparsity::bits_for;
+use crate::tensor::Mat;
+use std::collections::BTreeMap;
+
+/// Construction knobs for a [`SessionStore`].
+#[derive(Clone, Copy, Debug)]
+pub struct SessionConfig {
+    /// Tokens per page. Size it to the pipeline's query-tile size so
+    /// cached state composes with cross-stage tiling
+    /// ([`SessionConfig::for_pipeline`]).
+    pub page_size: usize,
+    /// Head dimension of the cached K/V rows.
+    pub d: usize,
+    /// Maximum resident pages across all sessions (0 = unbounded).
+    pub capacity_pages: usize,
+    /// Magnitude bitwidth W of the cached prediction operands; must
+    /// match the serving pipeline's `predict_bits` (enforced by
+    /// `decode_step`).
+    pub predict_bits: u32,
+    /// The serving pipeline's prediction scheme — determines which
+    /// append-time conversion work is charged (SLZS pays the key-side
+    /// LZ encode once per appended token; DLZS never encodes keys).
+    pub predict: PredictKind,
+}
+
+impl SessionConfig {
+    pub fn new(page_size: usize, d: usize, capacity_pages: usize) -> SessionConfig {
+        SessionConfig {
+            page_size,
+            d,
+            capacity_pages,
+            predict_bits: 7,
+            predict: PredictKind::DlzsCross,
+        }
+    }
+
+    /// Page size, predict bitwidth and scheme drawn from the pipeline
+    /// that will serve the sessions — one config source, no drift.
+    pub fn for_pipeline(cfg: &PipelineConfig, d: usize, capacity_pages: usize) -> SessionConfig {
+        SessionConfig {
+            page_size: cfg.tile_t,
+            d,
+            capacity_pages,
+            predict_bits: cfg.predict_bits,
+            predict: cfg.predict,
+        }
+    }
+}
+
+/// Per-session state.
+#[derive(Clone, Debug, Default)]
+struct Session {
+    /// Host-side K history, row-major `[len, d]`.
+    hist_k: Vec<f32>,
+    /// Host-side V history.
+    hist_v: Vec<f32>,
+    len: usize,
+    /// Resident pages in append order; empty ⇒ evicted (or brand new).
+    pages: Vec<PageId>,
+    last_touch: u64,
+}
+
+/// What one [`SessionStore::append`] call did beyond appending.
+#[derive(Clone, Debug, Default)]
+pub struct AppendOutcome {
+    /// Global position of the first appended token.
+    pub start: usize,
+    /// Sessions evicted to make room (LRU order).
+    pub evicted_sessions: Vec<u64>,
+    /// Pages rebuilt from history because this session had been evicted.
+    pub rematerialized_pages: usize,
+}
+
+/// The paged KV-cache session store.
+#[derive(Clone, Debug)]
+pub struct SessionStore {
+    cfg: SessionConfig,
+    bits: IntBits,
+    cache: PagedKvCache,
+    sessions: BTreeMap<u64, Session>,
+    clock: u64,
+}
+
+impl SessionStore {
+    pub fn new(cfg: SessionConfig) -> SessionStore {
+        assert!(cfg.page_size > 0 && cfg.d > 0, "page_size and d must be positive");
+        SessionStore {
+            bits: bits_for(cfg.predict_bits),
+            cache: PagedKvCache::new(cfg.page_size, cfg.d, cfg.capacity_pages),
+            sessions: BTreeMap::new(),
+            clock: 0,
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &SessionConfig {
+        &self.cfg
+    }
+
+    /// Tokens stored for a session (0 for unknown ids).
+    pub fn len(&self, sid: u64) -> usize {
+        self.sessions.get(&sid).map(|s| s.len).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self, sid: u64) -> bool {
+        self.len(sid) == 0
+    }
+
+    pub fn contains(&self, sid: u64) -> bool {
+        self.sessions.contains_key(&sid)
+    }
+
+    /// Whether the session's pages are currently in the pool.
+    pub fn is_resident(&self, sid: u64) -> bool {
+        self.sessions.get(&sid).map(|s| !s.pages.is_empty()).unwrap_or(false)
+    }
+
+    pub fn session_count(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn resident_pages(&self) -> usize {
+        self.cache.resident_pages()
+    }
+
+    /// Lifetime cache counters (allocations, evictions, hits…).
+    pub fn stats(&self) -> CacheStats {
+        self.cache.stats
+    }
+
+    /// Count resident pages served to a decode read (cache hits).
+    pub fn record_hits(&mut self, pages: u64) {
+        self.cache.stats.page_hits += pages;
+    }
+
+    /// Append new tokens' K/V rows to a session (creating it on first
+    /// use), re-materializing evicted pages first and evicting LRU
+    /// *other* sessions when the pool is full. Errors only when this
+    /// session alone cannot fit the pool — checked **up front**, before
+    /// any state changes, so a failed append never leaves a partial
+    /// chunk behind (a retry would otherwise duplicate context).
+    pub fn append(
+        &mut self,
+        sid: u64,
+        k: &Mat,
+        v: &Mat,
+        ops: &mut StageOps,
+    ) -> crate::Result<AppendOutcome> {
+        anyhow::ensure!(k.rows == v.rows, "K/V row count mismatch ({} vs {})", k.rows, v.rows);
+        anyhow::ensure!(
+            k.cols == self.cfg.d && v.cols == self.cfg.d,
+            "K/V head dim ({}, {}) != store head dim {}",
+            k.cols,
+            v.cols,
+            self.cfg.d
+        );
+        if self.cfg.capacity_pages > 0 {
+            // Other sessions can always be evicted, so the only hard
+            // failure is this session alone outgrowing the pool. With
+            // this pre-check, the allocation loop below cannot fail.
+            let needed = (self.len(sid) + k.rows).div_ceil(self.cfg.page_size);
+            anyhow::ensure!(
+                needed <= self.cfg.capacity_pages,
+                "kv-cache capacity ({} pages of {} tokens) exhausted by session {sid} alone \
+                 (needs {needed} pages)",
+                self.cfg.capacity_pages,
+                self.cfg.page_size
+            );
+        }
+        self.touch(sid);
+        let mut evicted = Vec::new();
+        let rematerialized_pages = self.rematerialize(sid, ops, &mut evicted)?;
+        let start = self.sessions.get(&sid).unwrap().len;
+        for i in 0..k.rows {
+            self.push_row(sid, k.row(i), v.row(i), &mut evicted)?;
+        }
+        // Appended KV is generated on chip (SRAM write) together with its
+        // frozen prediction operand.
+        ops.kv_gen.sram((4 * 2 * k.rows * self.cfg.d) as u64);
+        ops.predict.sram((2 * k.rows * self.cfg.d) as u64);
+        if self.cfg.predict == PredictKind::Slzs {
+            // SLZS pays the key-side LZ conversion once, here — decode
+            // steps read the frozen codes.
+            ops.predict.tally(OpKind::LzEncode, (k.rows * self.cfg.d) as u64);
+        }
+        self.cache.stats.appended_tokens += k.rows as u64;
+        Ok(AppendOutcome { start, evicted_sessions: evicted, rematerialized_pages })
+    }
+
+    /// Drop a finished session, returning its pages to the pool.
+    pub fn remove(&mut self, sid: u64) {
+        if let Some(s) = self.sessions.remove(&sid) {
+            for pid in s.pages {
+                self.cache.free_page(pid);
+            }
+        }
+    }
+
+    /// The session's resident pages in append order: key `j` lives in
+    /// page `j / page_size`, row `j % page_size`.
+    pub fn pages_of(&self, sid: u64) -> Vec<&KvPage> {
+        match self.sessions.get(&sid) {
+            None => Vec::new(),
+            Some(s) => {
+                assert!(
+                    s.len == 0 || !s.pages.is_empty(),
+                    "session {sid} read while evicted (append re-materializes first)"
+                );
+                s.pages.iter().map(|&pid| self.cache.get(pid)).collect()
+            }
+        }
+    }
+
+    /// Gather the K/V rows of the given (sorted, absolute) key indices
+    /// into compact matrices — the formal stage's cache read.
+    pub fn gather(&self, sid: u64, keys: &[usize]) -> (Mat, Mat) {
+        super::page::gather_rows(&self.pages_of(sid), self.cfg.page_size, keys, self.cfg.d)
+    }
+
+    fn touch(&mut self, sid: u64) {
+        let clock = self.clock;
+        self.clock += 1;
+        self.sessions.entry(sid).or_default().last_touch = clock;
+    }
+
+    /// Rebuild an evicted session's pages from host history. Rebuilt
+    /// operands are bit-identical to the originals (per-row scales).
+    fn rematerialize(
+        &mut self,
+        sid: u64,
+        ops: &mut StageOps,
+        evicted: &mut Vec<u64>,
+    ) -> crate::Result<usize> {
+        let needs = {
+            let s = self.sessions.get(&sid).unwrap();
+            s.len > 0 && s.pages.is_empty()
+        };
+        if !needs {
+            return Ok(0);
+        }
+        // Move the history out instead of cloning it (it can be thousands
+        // of tokens), rebuild, then reinstall — including on the (defended
+        // against, see `append`'s capacity pre-check) error path.
+        let (hist_k, hist_v, len) = {
+            let s = self.sessions.get_mut(&sid).unwrap();
+            (std::mem::take(&mut s.hist_k), std::mem::take(&mut s.hist_v), s.len)
+        };
+        let built = self.rebuild_pages(sid, &hist_k, &hist_v, len, evicted);
+        let s = self.sessions.get_mut(&sid).unwrap();
+        s.hist_k = hist_k;
+        s.hist_v = hist_v;
+        let built = built?;
+        // Evicted KV comes back from off-chip memory and is requantized
+        // (SLZS additionally re-encodes the rebuilt key operands).
+        let d = self.cfg.d;
+        ops.kv_gen.dram((4 * 2 * len * d) as u64);
+        ops.predict.sram((2 * len * d) as u64);
+        if self.cfg.predict == PredictKind::Slzs {
+            ops.predict.tally(OpKind::LzEncode, (len * d) as u64);
+        }
+        self.cache.stats.pages_rematerialized += built as u64;
+        Ok(built)
+    }
+
+    /// The page-building loop of [`SessionStore::rematerialize`]: fresh
+    /// pages fill sequentially, so a page boundary is exactly `i %
+    /// page_size == 0`.
+    fn rebuild_pages(
+        &mut self,
+        sid: u64,
+        hist_k: &[f32],
+        hist_v: &[f32],
+        len: usize,
+        evicted: &mut Vec<u64>,
+    ) -> crate::Result<usize> {
+        let d = self.cfg.d;
+        let ps = self.cfg.page_size;
+        let mut built = 0usize;
+        let mut cur: Option<PageId> = None;
+        for i in 0..len {
+            if i % ps == 0 {
+                let pid = self.alloc_for(sid, evicted)?;
+                self.sessions.get_mut(&sid).unwrap().pages.push(pid);
+                cur = Some(pid);
+                built += 1;
+            }
+            self.cache.get_mut(cur.unwrap()).push(
+                &hist_k[i * d..(i + 1) * d],
+                &hist_v[i * d..(i + 1) * d],
+                self.bits,
+                self.cfg.predict_bits,
+            );
+        }
+        Ok(built)
+    }
+
+    fn push_row(
+        &mut self,
+        sid: u64,
+        k_row: &[f32],
+        v_row: &[f32],
+        evicted: &mut Vec<u64>,
+    ) -> crate::Result<()> {
+        let need_page = {
+            let s = self.sessions.get(&sid).unwrap();
+            s.pages.last().map(|&pid| self.cache.get(pid).is_full()).unwrap_or(true)
+        };
+        if need_page {
+            let pid = self.alloc_for(sid, evicted)?;
+            self.sessions.get_mut(&sid).unwrap().pages.push(pid);
+        }
+        let pid = *self.sessions.get(&sid).unwrap().pages.last().unwrap();
+        self.cache.get_mut(pid).push(k_row, v_row, self.bits, self.cfg.predict_bits);
+        let s = self.sessions.get_mut(&sid).unwrap();
+        s.hist_k.extend_from_slice(k_row);
+        s.hist_v.extend_from_slice(v_row);
+        s.len += 1;
+        Ok(())
+    }
+
+    fn alloc_for(&mut self, sid: u64, evicted: &mut Vec<u64>) -> crate::Result<PageId> {
+        loop {
+            if let Some(pid) = self.cache.alloc() {
+                return Ok(pid);
+            }
+            match self.evict_lru_other(sid) {
+                Some(victim) => evicted.push(victim),
+                None => anyhow::bail!(
+                    "kv-cache capacity ({} pages of {} tokens) exhausted by session {sid} alone",
+                    self.cfg.capacity_pages,
+                    self.cfg.page_size
+                ),
+            }
+        }
+    }
+
+    fn evict_lru_other(&mut self, keep: u64) -> Option<u64> {
+        let victim = self
+            .sessions
+            .iter()
+            .filter(|(id, s)| **id != keep && !s.pages.is_empty())
+            .min_by_key(|(_, s)| s.last_touch)
+            .map(|(id, _)| *id)?;
+        let pages = std::mem::take(&mut self.sessions.get_mut(&victim).unwrap().pages);
+        self.cache.stats.pages_evicted += pages.len() as u64;
+        self.cache.stats.sessions_evicted += 1;
+        for pid in pages {
+            self.cache.free_page(pid);
+        }
+        Some(victim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn toks(n: usize, d: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        (Mat::randn(n, d, 1.0, &mut rng), Mat::randn(n, d, 1.0, &mut rng))
+    }
+
+    fn store(page_size: usize, d: usize, cap: usize) -> SessionStore {
+        SessionStore::new(SessionConfig::new(page_size, d, cap))
+    }
+
+    #[test]
+    fn append_builds_pages_and_history() {
+        let mut st = store(2, 4, 0);
+        let (k, v) = toks(5, 4, 1);
+        let mut ops = StageOps::default();
+        let out = st.append(7, &k, &v, &mut ops).unwrap();
+        assert_eq!(out.start, 0);
+        assert_eq!(st.len(7), 5);
+        assert_eq!(st.resident_pages(), 3, "5 tokens / page_size 2");
+        let pages = st.pages_of(7);
+        assert_eq!(pages[2].len(), 1, "last page partially filled");
+        assert_eq!(pages[1].k_row(0), k.row(2));
+        // Second append continues at position 5.
+        let (k2, v2) = toks(1, 4, 2);
+        let out2 = st.append(7, &k2, &v2, &mut ops).unwrap();
+        assert_eq!(out2.start, 5);
+        assert_eq!(st.pages_of(7)[2].len(), 2);
+    }
+
+    #[test]
+    fn lru_eviction_and_rematerialization_round_trip() {
+        // Pool of 2 pages × 2 tokens; two sessions cannot both stay.
+        let mut st = store(2, 4, 2);
+        let mut ops = StageOps::default();
+        let (ka, va) = toks(3, 4, 3);
+        st.append(1, &ka, &va, &mut ops).unwrap(); // fills the pool (2 pages)
+        let (kb, vb) = toks(2, 4, 4);
+        let out = st.append(2, &kb, &vb, &mut ops).unwrap();
+        assert_eq!(out.evicted_sessions, vec![1], "LRU victim is session 1");
+        assert!(!st.is_resident(1));
+        assert!(st.is_resident(2));
+        assert_eq!(st.len(1), 3, "history survives eviction");
+        // Touching session 1 again re-materializes bit-identical pages
+        // (evicting session 2 in turn) and the new token extends them.
+        let (k1, v1) = toks(1, 4, 5);
+        let out = st.append(1, &k1, &v1, &mut ops).unwrap();
+        assert_eq!(out.rematerialized_pages, 2);
+        assert_eq!(out.evicted_sessions, vec![2]);
+        assert_eq!(st.len(1), 4);
+        let pages = st.pages_of(1);
+        assert_eq!(pages[0].k_row(1), ka.row(1));
+        assert_eq!(pages[0].qk_row(1).len(), 4);
+        assert_eq!(pages[1].k_row(1), k1.row(0), "appended token lands after history");
+        let stats = st.stats();
+        assert_eq!(stats.sessions_evicted, 2);
+        assert!(stats.pages_rematerialized >= 2);
+    }
+
+    #[test]
+    fn single_session_over_capacity_errors_atomically() {
+        let mut st = store(2, 4, 2);
+        let mut ops = StageOps::default();
+        let (k, v) = toks(5, 4, 6); // needs 3 pages, pool holds 2
+        let err = st.append(1, &k, &v, &mut ops).unwrap_err();
+        assert!(err.to_string().contains("exhausted"), "{err}");
+        // The failed append left no state behind: a retry with a smaller
+        // chunk starts from scratch instead of duplicating context.
+        assert_eq!(st.len(1), 0);
+        assert_eq!(st.resident_pages(), 0);
+        let (k2, v2) = toks(4, 4, 7);
+        let out = st.append(1, &k2, &v2, &mut ops).unwrap();
+        assert_eq!(out.start, 0);
+        assert_eq!(st.len(1), 4);
+    }
+
+    #[test]
+    fn gather_reads_back_exact_rows() {
+        let mut st = store(3, 8, 0);
+        let mut ops = StageOps::default();
+        let (k, v) = toks(10, 8, 7);
+        st.append(4, &k, &v, &mut ops).unwrap();
+        let keys = [0usize, 3, 4, 9];
+        let (gk, gv) = st.gather(4, &keys);
+        for (i, &key) in keys.iter().enumerate() {
+            assert_eq!(gk.row(i), k.row(key));
+            assert_eq!(gv.row(i), v.row(key));
+        }
+    }
+
+    #[test]
+    fn remove_frees_pool_space() {
+        let mut st = store(2, 4, 2);
+        let mut ops = StageOps::default();
+        let (k, v) = toks(4, 4, 8);
+        st.append(1, &k, &v, &mut ops).unwrap();
+        st.remove(1);
+        assert!(!st.contains(1));
+        assert_eq!(st.resident_pages(), 0);
+        // The freed pool accepts a new session without eviction.
+        let (k2, v2) = toks(4, 4, 9);
+        let out = st.append(2, &k2, &v2, &mut ops).unwrap();
+        assert!(out.evicted_sessions.is_empty());
+    }
+}

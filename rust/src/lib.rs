@@ -17,7 +17,15 @@
 //! * [`pipeline`] — the four stages composed into one config-driven
 //!   subsystem: tiled predict → top-k → KV-gen → SU-FA execution with
 //!   per-stage accounting, shared by the bench harness, the native
-//!   serving backend and the examples.
+//!   serving backend and the examples. Its `prefill`/`decode_step`
+//!   entry points run the same stages causally for autoregressive
+//!   serving.
+//! * [`kvcache`] — the paged KV-cache + decode-session subsystem:
+//!   block-granular pages (sized to the pipeline tile) holding K/V rows
+//!   plus frozen per-row prediction operands, an LRU session store with
+//!   capacity accounting and eviction/re-materialization, and the
+//!   incremental per-row DLZS scorer decode steps run against cached
+//!   pages.
 //! * [`sim`] — the cycle-level single-core STAR accelerator model, its
 //!   energy/area models, the SRAM/DRAM memory system, the A100 roofline
 //!   model and the FACT/Energon/ELSA/SpAtten/Simba baselines.
@@ -29,8 +37,10 @@
 //!   request path (python never runs at serving time). Gated behind the
 //!   off-by-default `pjrt` cargo feature: it needs the `xla` crate, which
 //!   the offline build environment does not ship.
-//! * [`coordinator`] — the LTPP serving layer: request router, dynamic
-//!   batcher, tiled out-of-order scheduler and a thread-based server.
+//! * [`coordinator`] — the LTPP serving layer: request router (with
+//!   batch-target admission), dynamic batcher (decode steps re-enter it
+//!   each turn and mix with prefill chunks — continuous batching), tiled
+//!   out-of-order scheduler and a thread-based session-aware server.
 //! * [`workload`], [`config`], [`bench`] — workload/trace generation, the
 //!   config system, and the harness that regenerates every table and figure
 //!   of the paper's evaluation.
@@ -41,6 +51,7 @@ pub mod bench;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod kvcache;
 pub mod pipeline;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

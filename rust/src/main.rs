@@ -156,7 +156,13 @@ fn pick_serve_backend(args: &Args) -> Backend {
         }
     }
     println!("serving with the native sparse-attention pipeline");
-    Backend::Native { pipeline: PipelineConfig::star().with_threads(1), contexts }
+    let pipeline = PipelineConfig::star().with_threads(1);
+    // Session-aware by default: decode requests share a paged KV-cache
+    // sized to the pipeline's tile (64 pages ≈ 4k cached tokens).
+    let store = star::kvcache::SessionStore::new(star::kvcache::SessionConfig::for_pipeline(
+        &pipeline, 64, 64,
+    ));
+    Backend::native_with_sessions(pipeline, contexts, store)
 }
 
 /// The fixed gpt2-shaped KV context both serve backends attend into.

@@ -18,6 +18,7 @@ use super::config::PipelineConfig;
 use super::report::{StageOps, StageTiming};
 use crate::arith::{EquivWeights, OpCounter, OpKind};
 use crate::attention::{sufa_attention, AttnInputs, Selection, SufaParams, UpdateOrder};
+use crate::kvcache::{gather_rows, score_row, KvPage, QueryOperand, SessionStore};
 use crate::sim::pipeline::{FormalKind, PredictKind, TopkKind};
 use crate::sparsity::topk::{sads_topk, vanilla_topk};
 use crate::sparsity::{PredictScheme, Predictor, PreparedPredict};
@@ -231,27 +232,8 @@ impl SparseAttentionPipeline {
         // ---- Tiled parallel section. ----
         let ntiles = t.div_ceil(self.cfg.tile_t.min(t.max(1)));
         let ctx = TileCtx { cfg: &self.cfg, inp, score: &score, kt: kt.as_ref(), keep };
-        let workers = match self.cfg.threads {
-            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
-            n => n,
-        }
-        .clamp(1, ntiles.max(1));
-
-        let mut tiles: Vec<TileOut> = if workers <= 1 || ntiles <= 1 {
-            (0..ntiles).map(|ti| run_tile(&ctx, ti)).collect()
-        } else {
-            std::thread::scope(|scope| {
-                let ctx = &ctx;
-                let handles: Vec<_> = (0..workers)
-                    .map(|w| {
-                        scope.spawn(move || {
-                            (w..ntiles).step_by(workers).map(|ti| run_tile(ctx, ti)).collect::<Vec<_>>()
-                        })
-                    })
-                    .collect();
-                handles.into_iter().flat_map(|h| h.join().expect("tile worker panicked")).collect()
-            })
-        };
+        let mut tiles: Vec<TileOut> =
+            parallel_tiles(ntiles, self.cfg.threads, |ti| run_tile(&ctx, ti));
         tiles.sort_by_key(|tile| tile.lo);
 
         // ---- Merge. ----
@@ -286,6 +268,352 @@ impl SparseAttentionPipeline {
             tiles: n_tiles,
             keep,
         }
+    }
+}
+
+/// Result of one [`SparseAttentionPipeline::decode_step`] (or causal
+/// prefill chunk).
+#[derive(Clone, Debug)]
+pub struct DecodeReport {
+    /// Attention outputs for the appended tokens `[chunk, d]`.
+    pub out: Mat,
+    /// Per-new-row key selections in **absolute** token positions.
+    pub selection: Selection,
+    /// Global positions of the appended tokens within the session.
+    pub positions: std::ops::Range<usize>,
+    /// Per-stage operation counters for this step.
+    pub ops: StageOps,
+    /// Per-stage busy times for this step.
+    pub timing: StageTiming,
+    /// End-to-end wall time of the step, seconds.
+    pub wall_s: f64,
+    /// SU-FA max-misprediction recoveries.
+    pub stalls: u64,
+    /// Cached KV rows read, summed per row's union.
+    pub union_rows: usize,
+    /// Mean SADS survivor fraction ρ (0 when SADS did not run).
+    pub rho_mean: f64,
+    /// Keys kept for the last (longest-context) appended row.
+    pub keep_last: usize,
+    /// Cache hits: distinct pages read by this step's selections,
+    /// excluding pages re-materialized by this very step (those are the
+    /// misses, reported in `rematerialized_pages`).
+    pub page_hits: usize,
+    /// Pages rebuilt from history because the session had been evicted.
+    pub rematerialized_pages: usize,
+    /// Sessions evicted (LRU) to make room for this step.
+    pub evicted_sessions: Vec<u64>,
+}
+
+/// One decoded row's results, merged after the parallel section.
+struct DecodeRowOut {
+    out: Vec<f32>,
+    sel: Vec<usize>,
+    ops: StageOps,
+    timing: StageTiming,
+    stalls: u64,
+    union_rows: usize,
+    rho: Option<f64>,
+    /// Distinct page indices this row's selection read (ascending).
+    pages: Vec<usize>,
+}
+
+impl SparseAttentionPipeline {
+    /// Causal prefill of a fresh session: row `i` attends keys `0..=i`.
+    /// Implemented as one big [`SparseAttentionPipeline::decode_step`]
+    /// chunk — which is the point: any chunking of the same tokens
+    /// through `decode_step` produces bit-identical outputs and
+    /// selections (see `rust/tests/prop_decode_parity.rs`).
+    pub fn prefill(
+        &self,
+        store: &mut SessionStore,
+        session: u64,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+    ) -> crate::Result<DecodeReport> {
+        anyhow::ensure!(
+            store.is_empty(session),
+            "prefill into non-empty session {session} (use decode_step to extend it)"
+        );
+        self.decode_step(store, session, q, k, v)
+    }
+
+    /// One autoregressive decode step: append the chunk's K/V rows to
+    /// the session's paged cache, then compute causal sparse attention
+    /// for each new query row against the whole cached context — DLZS
+    /// prediction runs against the *frozen* per-page operands, top-k
+    /// selects over the causal prefix, and the formal stage streams the
+    /// selected KV rows back out of the cache.
+    pub fn decode_step(
+        &self,
+        store: &mut SessionStore,
+        session: u64,
+        q: &Mat,
+        k_new: &Mat,
+        v_new: &Mat,
+    ) -> crate::Result<DecodeReport> {
+        let started = Instant::now();
+        anyhow::ensure!(
+            q.rows == k_new.rows && q.rows == v_new.rows,
+            "decode chunk rows disagree (Q {}, K {}, V {})",
+            q.rows,
+            k_new.rows,
+            v_new.rows
+        );
+        anyhow::ensure!(
+            q.cols == k_new.cols && q.cols == v_new.cols,
+            "decode chunk head dims disagree (Q {}, K {}, V {})",
+            q.cols,
+            k_new.cols,
+            v_new.cols
+        );
+        anyhow::ensure!(
+            q.cols == store.config().d,
+            "chunk head dim {} != session store head dim {}",
+            q.cols,
+            store.config().d
+        );
+        // The cached key operands were quantized at the store's bitwidth;
+        // scoring them at a different W would silently skew prediction.
+        anyhow::ensure!(
+            self.cfg.predict_bits == store.config().predict_bits,
+            "pipeline predict_bits {} != session store predict_bits {}",
+            self.cfg.predict_bits,
+            store.config().predict_bits
+        );
+        if let Err(e) = self.cfg.validate() {
+            anyhow::bail!("invalid pipeline config: {e}");
+        }
+        let d = q.cols;
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut ops = StageOps::default();
+        let mut timing = StageTiming::default();
+
+        // Append + re-materialize under the KV-gen stage clock.
+        let t0 = Instant::now();
+        let outcome = store.append(session, k_new, v_new, &mut ops)?;
+        timing.kv_gen_s += t0.elapsed().as_secs_f64();
+
+        let base = outcome.start;
+        let rows = q.rows;
+        let page_size = store.config().page_size;
+
+        // Causal per-row section: rows are independent, so they tile and
+        // parallelize exactly like `run` — and because every per-row
+        // quantity depends only on tokens 0..=pos, the schedule can never
+        // change the math.
+        let tile = self.cfg.tile_t.min(rows.max(1));
+        let ntiles = rows.div_ceil(tile);
+        let mut tiles_out: Vec<(usize, Vec<DecodeRowOut>)> = {
+            let pages: Vec<&KvPage> = store.pages_of(session);
+            let cfg = &self.cfg;
+            parallel_tiles(ntiles, self.cfg.threads, |ti| {
+                let lo = ti * tile;
+                let hi = (lo + tile).min(rows);
+                let outs = (lo..hi)
+                    .map(|r| decode_row(cfg, &pages, q.row(r), base + r, scale, page_size))
+                    .collect();
+                (ti, outs)
+            })
+        };
+        tiles_out.sort_by_key(|(ti, _)| *ti);
+
+        // Merge in row order.
+        let mut out = Mat::zeros(rows, d);
+        let mut sel_rows = Vec::with_capacity(rows);
+        let mut stalls = 0u64;
+        let mut union_rows = 0usize;
+        let (mut rho_sum, mut rho_n) = (0.0, 0usize);
+        let mut touched: std::collections::BTreeSet<usize> = std::collections::BTreeSet::new();
+        let mut row_i = 0usize;
+        for (_, tile_rows) in tiles_out {
+            for r in tile_rows {
+                out.row_mut(row_i).copy_from_slice(&r.out);
+                sel_rows.push(r.sel);
+                ops.merge(&r.ops);
+                timing.merge(&r.timing);
+                stalls += r.stalls;
+                union_rows += r.union_rows;
+                if let Some(rho) = r.rho {
+                    rho_sum += rho;
+                    rho_n += 1;
+                }
+                touched.extend(r.pages.iter().copied());
+                row_i += 1;
+            }
+        }
+        // Hits = distinct pages read minus the pages this step had to
+        // rebuild (hits and misses in the same per-step page units).
+        let page_hits = touched.len().saturating_sub(outcome.rematerialized_pages);
+        store.record_hits(page_hits as u64);
+
+        Ok(DecodeReport {
+            out,
+            selection: Selection { rows: sel_rows },
+            positions: base..base + rows,
+            ops,
+            timing,
+            wall_s: started.elapsed().as_secs_f64(),
+            stalls,
+            union_rows,
+            rho_mean: if rho_n > 0 { rho_sum / rho_n as f64 } else { 0.0 },
+            keep_last: if base + rows > 0 { self.cfg.keep(base + rows) } else { 0 },
+            page_hits,
+            rematerialized_pages: outcome.rematerialized_pages,
+            evicted_sessions: outcome.evicted_sessions,
+        })
+    }
+}
+
+/// Run `ntiles` independent tile jobs, strided across worker threads
+/// (`threads == 0` picks `available_parallelism`) under
+/// `std::thread::scope`. Shared by the batch tile path and the decode
+/// row path; results come back unordered — callers sort by their tile
+/// key. Determinism is the jobs' responsibility (both callers' jobs are
+/// pure functions of the tile index).
+fn parallel_tiles<T: Send>(
+    ntiles: usize,
+    threads: usize,
+    job: impl Fn(usize) -> T + Sync,
+) -> Vec<T> {
+    let workers = match threads {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        n => n,
+    }
+    .clamp(1, ntiles.max(1));
+    if workers <= 1 || ntiles <= 1 {
+        (0..ntiles).map(job).collect()
+    } else {
+        std::thread::scope(|scope| {
+            let job = &job;
+            let handles: Vec<_> = (0..workers)
+                .map(|w| {
+                    scope.spawn(move || {
+                        (w..ntiles).step_by(workers).map(job).collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().expect("tile worker panicked")).collect()
+        })
+    }
+}
+
+/// Formal-compute dispatch shared by the batch tile path and the decode
+/// row path: SU-FA (descending/ascending), the FA-2 approximation
+/// (ascending SU-FA plus `fa2_cmp` cross-tile max comparisons — the
+/// Fig. 18a baseline accounting), or the dense masked softmax. Returns
+/// (output, stalls).
+fn formal_compute(
+    cfg: &PipelineConfig,
+    inp: &AttnInputs,
+    sel: &Selection,
+    fa2_cmp: u64,
+    c: &mut OpCounter,
+) -> (Mat, u64) {
+    match cfg.formal {
+        FormalKind::SufaDescend | FormalKind::SufaAscend => {
+            let order = if cfg.formal == FormalKind::SufaDescend {
+                UpdateOrder::Descend
+            } else {
+                UpdateOrder::Ascend
+            };
+            let r = sufa_attention(inp, sel, &SufaParams { bc: cfg.bc, order }, c);
+            (r.out, r.stalls)
+        }
+        FormalKind::Flash2 => {
+            let p = SufaParams { bc: cfg.bc, order: UpdateOrder::Ascend };
+            let r = sufa_attention(inp, sel, &p, c);
+            c.tally(OpKind::Cmp, fa2_cmp);
+            (r.out, r.stalls)
+        }
+        FormalKind::Dense => (dense_formal(inp, sel, c), 0),
+    }
+}
+
+/// Decode one query row at global position `pos` through all four
+/// stages against the cached context `0..=pos`. Everything here depends
+/// only on the query row and the frozen page operands of the causal
+/// prefix — the invariant that makes chunking/tiling/threading
+/// bit-invisible.
+fn decode_row(
+    cfg: &PipelineConfig,
+    pages: &[&KvPage],
+    qrow: &[f32],
+    pos: usize,
+    attn_scale: f32,
+    page_size: usize,
+) -> DecodeRowOut {
+    let limit = pos + 1;
+    let d = qrow.len();
+    let mut ops = StageOps::default();
+    let mut timing = StageTiming::default();
+
+    // ---- Stage 1: predict over cached page operands. ----
+    let t0 = Instant::now();
+    let est: Option<Vec<f32>> = if cfg.topk == TopkKind::None {
+        None
+    } else {
+        let qop = QueryOperand::encode(qrow, cfg.predict, cfg.predict_bits, &mut ops.predict);
+        Some(score_row(&qop, pages, limit, attn_scale, &mut ops.predict))
+    };
+    timing.predict_s += t0.elapsed().as_secs_f64();
+
+    // ---- Stage 2: top-k over the causal prefix. ----
+    let t0 = Instant::now();
+    let keep = cfg.keep(limit);
+    let mut rho = None;
+    let sel: Vec<usize> = match (cfg.topk, &est) {
+        (TopkKind::None, _) | (_, None) => (0..limit).collect(),
+        (TopkKind::Sads, Some(e)) => {
+            let (idx, stats) = sads_topk(e, keep, &cfg.sads, &mut ops.topk);
+            rho = Some(stats.rho);
+            idx
+        }
+        (TopkKind::Vanilla | TopkKind::Threshold, Some(e)) => vanilla_topk(e, keep, &mut ops.topk),
+    };
+    timing.topk_s += t0.elapsed().as_secs_f64();
+
+    // ---- Stage 3: cache read — gather this row's selected KV rows. ----
+    let t0 = Instant::now();
+    let mut union = sel.clone();
+    union.sort_unstable();
+    let u = union.len();
+    let (ku, vu) = gather_rows(pages, page_size, &union, d);
+    let mut row_pages = Vec::new();
+    for &j in &union {
+        if row_pages.last() != Some(&(j / page_size)) {
+            row_pages.push(j / page_size);
+        }
+    }
+    ops.kv_gen.sram(4 * (2 * u * d) as u64); // cached KV streams from SRAM
+    timing.kv_gen_s += t0.elapsed().as_secs_f64();
+
+    // ---- Stage 4: formal compute on the compacted rows. The selection
+    // is remapped monotonically (ascending union order), so per-key
+    // visit order — and therefore the math — is unchanged. ----
+    let t0 = Instant::now();
+    let remapped: Vec<usize> =
+        sel.iter().map(|&j| union.binary_search(&j).expect("selected key in union")).collect();
+    let q_mat = Mat::from_vec(1, d, qrow.to_vec());
+    let tile_inp = AttnInputs { q: &q_mat, k: &ku, v: &vu, scale: attn_scale };
+    let csel = Selection { rows: vec![remapped] };
+    let (out_row, stalls) = formal_compute(cfg, &tile_inp, &csel, keep as u64, &mut ops.formal);
+    // The formal stage's KV traffic came from the cache, not DRAM.
+    let kv_bytes = 4 * (2 * u * d) as u64;
+    ops.formal.dram_bytes -= kv_bytes.min(ops.formal.dram_bytes);
+    ops.formal.sram(kv_bytes);
+    timing.formal_s += t0.elapsed().as_secs_f64();
+
+    DecodeRowOut {
+        out: out_row.row(0).to_vec(),
+        sel,
+        ops,
+        timing,
+        stalls,
+        union_rows: u,
+        rho,
+        pages: row_pages,
     }
 }
 
@@ -367,31 +695,8 @@ fn run_tile(ctx: &TileCtx, ti: usize) -> TileOut {
     let t0 = Instant::now();
     let q_tile = Mat::from_fn(rows, d, |i, j| inp.q.at(lo + i, j));
     let tile_inp = AttnInputs { q: &q_tile, k: inp.k, v: inp.v, scale: inp.scale };
-    let mut stalls = 0u64;
-    let out = match cfg.formal {
-        FormalKind::SufaDescend | FormalKind::SufaAscend => {
-            let order = if cfg.formal == FormalKind::SufaDescend {
-                UpdateOrder::Descend
-            } else {
-                UpdateOrder::Ascend
-            };
-            let p = SufaParams { bc: cfg.bc, order };
-            let r = sufa_attention(&tile_inp, &sel, &p, &mut ops.formal);
-            stalls = r.stalls;
-            r.out
-        }
-        FormalKind::Flash2 => {
-            // FA-2 over the selected pairs ≈ SU-FA's op profile with the
-            // per-step rescales retained (ascend order) plus FA's
-            // cross-tile max-comparison stream.
-            let p = SufaParams { bc: cfg.bc, order: UpdateOrder::Ascend };
-            let r = sufa_attention(&tile_inp, &sel, &p, &mut ops.formal);
-            ops.formal.tally(OpKind::Cmp, (rows * ctx.keep) as u64);
-            stalls = r.stalls;
-            r.out
-        }
-        FormalKind::Dense => dense_formal(&tile_inp, &sel, &mut ops.formal),
-    };
+    let (out, stalls) =
+        formal_compute(cfg, &tile_inp, &sel, (rows * ctx.keep) as u64, &mut ops.formal);
     if on_demand {
         // Under the cross-stage tiled dataflow the formal stage streams
         // the just-generated KV from SRAM, not DRAM: reclassify the KV
@@ -534,5 +839,60 @@ mod tests {
         let r = SparseAttentionPipeline::star(0.2).run(&PipelineInputs::qkv(&q, &wl.k, &wl.v));
         assert_eq!(r.out.rows, 0);
         assert_eq!(r.selection.rows.len(), 0);
+    }
+
+    #[test]
+    fn decode_step_is_causal_and_counts_stages() {
+        use crate::kvcache::{SessionConfig, SessionStore};
+        let mut rng = Rng::new(9);
+        let (n, d) = (24usize, 16usize);
+        let q = Mat::randn(n, d, 1.0, &mut rng);
+        let k = Mat::randn(n, d, 1.0, &mut rng);
+        let v = Mat::randn(n, d, 1.0, &mut rng);
+        let pipe = SparseAttentionPipeline::new(PipelineConfig::star().with_keep(0.5).with_tile(5));
+        let mut store = SessionStore::new(SessionConfig::for_pipeline(pipe.config(), d, 0));
+        let r = pipe.prefill(&mut store, 1, &q, &k, &v).unwrap();
+        assert_eq!(r.positions, 0..n);
+        assert_eq!(r.out.rows, n);
+        assert_eq!(r.selection.rows.len(), n);
+        for (i, row) in r.selection.rows.iter().enumerate() {
+            assert!(!row.is_empty());
+            assert!(row.iter().all(|&j| j <= i), "row {i} attends beyond its causal prefix");
+        }
+        assert!(r.ops.predict.shift > 0, "DLZS prediction ran");
+        assert_eq!(r.ops.predict.mul, 0, "DLZS stays multiplier-free");
+        assert!(r.ops.topk.cmp > 0 && r.ops.formal.exp > 0);
+        assert!(r.page_hits > 0 && r.union_rows > 0);
+        // Extending the session continues at position n.
+        let q1 = Mat::randn(1, d, 1.0, &mut rng);
+        let k1 = Mat::randn(1, d, 1.0, &mut rng);
+        let v1 = Mat::randn(1, d, 1.0, &mut rng);
+        let r1 = pipe.decode_step(&mut store, 1, &q1, &k1, &v1).unwrap();
+        assert_eq!(r1.positions, n..n + 1);
+        assert_eq!(r1.keep_last, pipe.config().keep(n + 1));
+        assert!(
+            pipe.prefill(&mut store, 1, &q1, &k1, &v1).is_err(),
+            "prefill must refuse a non-empty session"
+        );
+    }
+
+    #[test]
+    fn decode_outputs_are_exact_softmax_over_their_selections() {
+        use crate::attention::{masked_attention_oracle, AttnInputs};
+        use crate::kvcache::{SessionConfig, SessionStore};
+        let mut rng = Rng::new(10);
+        let (n, d) = (32usize, 8usize);
+        let q = Mat::randn(n, d, 1.0, &mut rng);
+        let k = Mat::randn(n, d, 1.0, &mut rng);
+        let v = Mat::randn(n, d, 1.0, &mut rng);
+        let pipe = SparseAttentionPipeline::star(0.4);
+        let mut store = SessionStore::new(SessionConfig::for_pipeline(pipe.config(), d, 0));
+        let r = pipe.prefill(&mut store, 3, &q, &k, &v).unwrap();
+        // The selections are absolute positions, so the masked oracle
+        // over the full (uncompacted) K/V must reproduce the outputs.
+        let inp = AttnInputs::new(&q, &k, &v);
+        let oracle = masked_attention_oracle(&inp, &r.selection);
+        let err = r.out.max_abs_diff(&oracle);
+        assert!(err < 1e-4, "masked-oracle parity err {err}");
     }
 }

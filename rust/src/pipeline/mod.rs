@@ -12,7 +12,12 @@
 //!   tile: predict → SADS → union-KV-gen → SU-FA, intermediates stay
 //!   tile-sized), parallel over independent tiles with
 //!   `std::thread::scope`, deterministic for every tile size and thread
-//!   count.
+//!   count. Also the autoregressive entry points
+//!   [`SparseAttentionPipeline::prefill`] /
+//!   [`SparseAttentionPipeline::decode_step`], which run the same four
+//!   stages *causally* over a [`crate::kvcache::SessionStore`] — cached
+//!   prediction operands and KV pages instead of per-run preparation,
+//!   with N single-token steps bit-identical to one length-N prefill.
 //! * [`report`] — per-stage [`StageOps`] counters and [`StageTiming`]
 //!   breakdowns aggregated across tiles.
 //!
@@ -25,5 +30,5 @@ pub mod exec;
 pub mod report;
 
 pub use config::PipelineConfig;
-pub use exec::{PipelineInputs, PipelineReport, SparseAttentionPipeline};
+pub use exec::{DecodeReport, PipelineInputs, PipelineReport, SparseAttentionPipeline};
 pub use report::{StageOps, StageTiming};

@@ -21,5 +21,5 @@ pub mod topk;
 
 pub use distribution::{classify_row, DistType};
 pub use hitrate::hit_rate;
-pub use predictor::{PredictScheme, Predictor, PreparedPredict};
+pub use predictor::{bits_for, PredictScheme, Predictor, PreparedPredict};
 pub use topk::{sads_topk, vanilla_topk, SadsParams, SadsStats};

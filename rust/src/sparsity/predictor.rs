@@ -26,6 +26,17 @@ pub enum PredictScheme {
     LowBitMul,
 }
 
+/// Storage width for a prediction datapath of magnitude bitwidth `W` —
+/// the one rule every prediction path (whole-tensor [`Predictor`] and the
+/// per-row KV-cache operands in [`crate::kvcache`]) must share.
+pub fn bits_for(w: u32) -> IntBits {
+    match w {
+        0..=3 => IntBits::Int4,
+        4..=7 => IntBits::Int8,
+        _ => IntBits::Int16,
+    }
+}
+
 /// Configured predictor for the pre-compute stage.
 #[derive(Clone, Debug)]
 pub struct Predictor {
@@ -45,11 +56,7 @@ impl Predictor {
     }
 
     fn bits(&self) -> IntBits {
-        match self.w {
-            0..=3 => IntBits::Int4,
-            4..=7 => IntBits::Int8,
-            _ => IntBits::Int16,
-        }
+        bits_for(self.w)
     }
 
     /// Estimate `a · bᵀ` (a: [m, d], b: [n, d]) with the configured scheme.

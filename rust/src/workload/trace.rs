@@ -12,12 +12,24 @@ use crate::util::Rng;
 pub struct TraceRequest {
     /// Arrival time in seconds from trace start.
     pub arrival: f64,
-    /// Context length S.
+    /// Context length S (for decode steps: session length after this
+    /// step's tokens are appended).
     pub seq_len: usize,
-    /// Queries processed in parallel T (prefill chunk or decode batch).
+    /// Queries processed in parallel T (prefill chunk or decode chunk).
     pub queries: usize,
     /// Model preset name.
     pub model: String,
+    /// Decode-session id for multi-turn traces (`None` = stateless
+    /// prefill request). Steps of one session share the id and must
+    /// replay in arrival order.
+    pub session: Option<u64>,
+}
+
+impl TraceRequest {
+    /// Whether this request decodes against a session.
+    pub fn is_decode(&self) -> bool {
+        self.session.is_some()
+    }
 }
 
 /// A replayable request trace.
@@ -49,8 +61,54 @@ impl RequestTrace {
                 seq_len: seq_len.clamp(s_min, s_max),
                 queries,
                 model: model.to_string(),
+                session: None,
             });
         }
+        RequestTrace { requests }
+    }
+
+    /// Multi-turn decode trace: `sessions` conversations arriving as a
+    /// Poisson process with rate `session_lambda` (sessions/s). Each
+    /// session opens with a `prefill_len`-token prefill, then emits
+    /// `decode_tokens` single-token decode steps at `token_rate`
+    /// tokens/s (exponential gaps). Requests are globally sorted by
+    /// arrival, so concurrent sessions interleave — exactly the mix
+    /// continuous batching must handle.
+    pub fn multi_turn(
+        sessions: usize,
+        prefill_len: usize,
+        decode_tokens: usize,
+        session_lambda: f64,
+        token_rate: f64,
+        model: &str,
+        rng: &mut Rng,
+    ) -> RequestTrace {
+        let mut requests = Vec::with_capacity(sessions * (1 + decode_tokens));
+        let mut start = 0.0f64;
+        for sid in 0..sessions as u64 {
+            start += rng.exponential(session_lambda);
+            requests.push(TraceRequest {
+                arrival: start,
+                seq_len: prefill_len,
+                queries: prefill_len,
+                model: model.to_string(),
+                session: Some(sid),
+            });
+            let mut t = start;
+            for step in 0..decode_tokens {
+                t += rng.exponential(token_rate);
+                requests.push(TraceRequest {
+                    arrival: t,
+                    seq_len: prefill_len + step + 1,
+                    queries: 1,
+                    model: model.to_string(),
+                    session: Some(sid),
+                });
+            }
+        }
+        requests.sort_by(|a, b| {
+            a.arrival.partial_cmp(&b.arrival).unwrap().then(a.session.cmp(&b.session))
+        });
         RequestTrace { requests }
     }
 
@@ -59,12 +117,16 @@ impl RequestTrace {
             self.requests
                 .iter()
                 .map(|r| {
-                    Json::obj(vec![
+                    let mut fields = vec![
                         ("arrival", Json::num(r.arrival)),
                         ("seq_len", Json::num(r.seq_len as f64)),
                         ("queries", Json::num(r.queries as f64)),
                         ("model", Json::str(&r.model)),
-                    ])
+                    ];
+                    if let Some(sid) = r.session {
+                        fields.push(("session", Json::num(sid as f64)));
+                    }
+                    Json::obj(fields)
                 })
                 .collect(),
         )
@@ -79,6 +141,8 @@ impl RequestTrace {
                 seq_len: r.get("seq_len")?.as_usize()?,
                 queries: r.get("queries")?.as_usize()?,
                 model: r.get("model")?.as_str()?.to_string(),
+                // Optional for backward compatibility with stateless traces.
+                session: r.get("session").and_then(|s| s.as_usize()).map(|s| s as u64),
             });
         }
         Some(RequestTrace { requests })
@@ -120,6 +184,54 @@ mod tests {
         let total = tr.requests.last().unwrap().arrival;
         let mean = total / 2000.0;
         assert!((mean - 0.01).abs() < 0.002, "mean interarrival {mean}");
+    }
+
+    #[test]
+    fn multi_turn_structure() {
+        let mut rng = Rng::new(6);
+        let tr = RequestTrace::multi_turn(3, 64, 5, 2.0, 40.0, "tiny", &mut rng);
+        assert_eq!(tr.requests.len(), 3 * (1 + 5));
+        // Globally sorted by arrival.
+        for w in tr.requests.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+        for sid in 0..3u64 {
+            let steps: Vec<&TraceRequest> =
+                tr.requests.iter().filter(|r| r.session == Some(sid)).collect();
+            assert_eq!(steps.len(), 6);
+            // First step is the prefill, then single-token decodes with a
+            // context that grows by one per step.
+            assert_eq!((steps[0].queries, steps[0].seq_len), (64, 64));
+            for (i, s) in steps[1..].iter().enumerate() {
+                assert_eq!(s.queries, 1);
+                assert_eq!(s.seq_len, 64 + i + 1);
+                assert!(s.is_decode());
+            }
+            // Per-session arrivals stay ordered after the global sort.
+            for w in steps.windows(2) {
+                assert!(w[1].arrival >= w[0].arrival);
+            }
+        }
+    }
+
+    #[test]
+    fn multi_turn_json_roundtrip_keeps_sessions() {
+        let mut rng = Rng::new(7);
+        let tr = RequestTrace::multi_turn(2, 32, 3, 5.0, 50.0, "gpt2", &mut rng);
+        let back = RequestTrace::from_json(&Json::parse(&tr.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(tr.requests.len(), back.requests.len());
+        for (a, b) in tr.requests.iter().zip(&back.requests) {
+            assert_eq!(a.session, b.session);
+            assert_eq!(a.seq_len, b.seq_len);
+            assert_eq!(a.queries, b.queries);
+        }
+        // Stateless traces still parse (no session field in their JSON).
+        let stateless = RequestTrace::poisson(4, 10.0, 128, 256, 8, "tiny", &mut rng);
+        let s = stateless.to_json().to_string();
+        assert!(!s.contains("session"));
+        let back = RequestTrace::from_json(&Json::parse(&s).unwrap()).unwrap();
+        assert!(back.requests.iter().all(|r| !r.is_decode()));
     }
 
     #[test]

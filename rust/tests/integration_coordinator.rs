@@ -95,20 +95,19 @@ fn native_backend_round_trip_matches_inline_pipeline() {
     }]);
     let srv = Server::start(
         router,
-        Backend::Native { pipeline, contexts },
-        // target_t = 1 row seals a batch per request, so each response is
-        // comparable to an inline single-request pipeline run.
-        ServerConfig { batcher: BatcherConfig { target_t: 1, max_wait_s: 1e-4 }, workers: 2 },
+        Backend::native(pipeline, contexts),
+        // Submitting one request at a time (awaiting each response before
+        // the next submit) keeps every batch single-request, so each
+        // response is comparable to an inline pipeline run. (target_t = 1
+        // no longer works for this: Router::admit rejects t > target_t.)
+        ServerConfig { batcher: BatcherConfig { target_t: 8, max_wait_s: 1e-4 }, workers: 2 },
     );
-    let mut submitted = Vec::new();
     for id in 0..8u64 {
         let t = 4 + (id as usize % 3) * 2;
         let q = Mat::randn(t, d, 1.0, &mut rng);
         let mut req = Request::new(id, "tiny", t, s, 0.0);
         req.q = Some(q.clone());
-        submitted.push((q, srv.submit(req).unwrap()));
-    }
-    for (q, rx) in submitted {
+        let rx = srv.submit(req).unwrap();
         let resp = rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
         assert_eq!(resp.variant, "attn_native");
         let out = resp.output.expect("native round trip returns outputs");
@@ -128,6 +127,128 @@ fn native_backend_round_trip_matches_inline_pipeline() {
     assert_eq!(snap.requests, 8);
     assert!(snap.stage_predict_s > 0.0 && snap.stage_formal_s > 0.0, "per-stage metrics recorded");
     assert_eq!(snap.rejected, 0);
+}
+
+#[test]
+fn admission_rejects_requests_wider_than_the_batch_target() {
+    // Regression: a request with t > target_t used to flow through
+    // unchecked and seal an over-target batch via the batcher's
+    // oversize escape hatch. Router::admit now rejects it explicitly.
+    let srv = server(16, 2);
+    // Routable by shape (max_t = 128) but wider than target_t = 16.
+    let rx = srv.submit(Request::new(1, "tiny", 48, 256, 0.0)).unwrap();
+    let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+    assert!(
+        resp.variant.starts_with("rejected") && resp.variant.contains("target"),
+        "expected an over-target rejection, got {:?}",
+        resp.variant
+    );
+    assert!(resp.output.is_none());
+    // A within-target request still serves, and no over-target batch
+    // was ever sealed.
+    let rx = srv.submit(Request::new(2, "tiny", 16, 256, 0.0)).unwrap();
+    let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+    assert_eq!(resp.variant, "attn_small");
+    let snap = srv.shutdown();
+    assert_eq!(snap.rejected, 1);
+    assert!(snap.mean_batch_rows <= 16.0 + 1e-9, "no over-target batch sealed");
+}
+
+#[test]
+fn decode_sessions_serve_through_continuous_batching() {
+    use star::kvcache::{SessionConfig, SessionStore};
+
+    let (s, d) = (512usize, 16usize);
+    let pipeline = PipelineConfig::star().with_keep(0.3).with_tile(8).with_threads(1);
+    let mut rng = Rng::new(41);
+    let kctx = Mat::randn(s, d, 1.0, &mut rng);
+    let vctx = Mat::randn(s, d, 1.0, &mut rng);
+    let mut contexts = BTreeMap::new();
+    contexts.insert("attn_native".to_string(), (kctx.clone(), vctx.clone()));
+    let router = Router::new(vec![Variant {
+        name: "attn_native".into(),
+        model: "tiny".into(),
+        max_t: 128,
+        s,
+    }]);
+    let store = SessionStore::new(SessionConfig::for_pipeline(&pipeline, d, 0));
+    let srv = Server::start(
+        router,
+        Backend::native_with_sessions(pipeline, contexts, store),
+        ServerConfig { batcher: BatcherConfig { target_t: 32, max_wait_s: 1e-3 }, workers: 2 },
+    );
+
+    // Token stream for one conversation: a 12-token prefill chunk, then
+    // 6 single-token decode steps, interleaved with stateless prefill
+    // requests so batches mix both kinds.
+    let n = 18usize;
+    let q = Mat::randn(n, d, 1.0, &mut rng);
+    let k = Mat::randn(n, d, 1.0, &mut rng);
+    let v = Mat::randn(n, d, 1.0, &mut rng);
+    let sub = |m: &Mat, lo: usize, hi: usize| Mat::from_fn(hi - lo, d, |i, j| m.at(lo + i, j));
+
+    let mut served = Mat::zeros(n, d);
+    let mut id = 0u64;
+    let mut step = |lo: usize, hi: usize, served: &mut Mat| {
+        id += 1;
+        let rx = srv
+            .submit(Request::decode(
+                id,
+                "tiny",
+                7,
+                sub(&q, lo, hi),
+                sub(&k, lo, hi),
+                sub(&v, lo, hi),
+                hi,
+                0.0,
+            ))
+            .unwrap();
+        // Stateless traffic in the same window.
+        let mut req = Request::new(10_000 + id, "tiny", 4, s, 0.0);
+        req.q = Some(Mat::randn(4, d, 1.0, &mut Rng::new(id)));
+        let rx2 = srv.submit(req).unwrap();
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+        let out = resp.output.expect("decode output");
+        assert_eq!((out.rows, out.cols), (hi - lo, d));
+        for i in 0..(hi - lo) {
+            served.row_mut(lo + i).copy_from_slice(out.row(i));
+        }
+        let resp2 = rx2.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+        assert!(resp2.output.is_some(), "stateless prefill still served");
+    };
+    step(0, 12, &mut served);
+    for p in 12..n {
+        step(p, p + 1, &mut served);
+    }
+
+    // Ordering guard: a step claiming the wrong post-append context
+    // length is rejected per-request — no output, no session mutation,
+    // and the rest of the batch is unaffected.
+    let bad =
+        Request::decode(500, "tiny", 7, sub(&q, 0, 1), sub(&k, 0, 1), sub(&v, 0, 1), 99, 0.0);
+    let rx = srv.submit(bad).unwrap();
+    let resp = rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+    assert!(
+        resp.variant.starts_with("error:") && resp.variant.contains("out of order"),
+        "expected an out-of-order rejection, got {:?}",
+        resp.variant
+    );
+    assert!(resp.output.is_none());
+
+    // Served decode outputs must equal an offline run over the same
+    // token stream, bit for bit (PipelineConfig is Copy; `pipeline` is
+    // the exact config the server ran).
+    let mut offline_store = SessionStore::new(SessionConfig::for_pipeline(&pipeline, d, 0));
+    let offline = SparseAttentionPipeline::new(pipeline)
+        .prefill(&mut offline_store, 1, &q, &k, &v)
+        .unwrap();
+    assert_eq!(served.max_abs_diff(&offline.out), 0.0, "served decode != offline decode");
+
+    let snap = srv.shutdown();
+    assert_eq!(snap.decode_steps, 7, "one prefill chunk + 6 decode steps");
+    assert_eq!(snap.decode_tokens, n as u64, "the rejected step appended nothing");
+    assert!(snap.cache_page_hits > 0, "cache hits recorded");
+    assert_eq!(snap.failed, 1, "exactly the out-of-order step failed");
 }
 
 #[test]

@@ -1,0 +1,219 @@
+//! Property: decode *is* prefill, bit for bit.
+//!
+//! N single-token `decode_step` calls must produce bit-identical outputs
+//! and selections to one full causal prefill of length N — across chunk
+//! boundaries, tile sizes (which also change the KV page size), thread
+//! counts, pipeline configurations, and LRU eviction followed by
+//! re-materialization. This is the contract that makes the paged
+//! KV-cache a pure optimization: caching across time never changes the
+//! math (ISSUE 3 acceptance criterion).
+
+use star::attention::Selection;
+use star::kvcache::{SessionConfig, SessionStore};
+use star::pipeline::{PipelineConfig, SparseAttentionPipeline};
+use star::sim::pipeline::{FormalKind, PredictKind, TopkKind};
+use star::tensor::Mat;
+use star::util::Rng;
+
+fn toks(n: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+    let mut rng = Rng::new(seed);
+    (
+        Mat::randn(n, d, 1.0, &mut rng),
+        Mat::randn(n, d, 1.0, &mut rng),
+        Mat::randn(n, d, 1.0, &mut rng),
+    )
+}
+
+fn sub(m: &Mat, lo: usize, hi: usize) -> Mat {
+    Mat::from_fn(hi - lo, m.cols, |i, j| m.at(lo + i, j))
+}
+
+/// Feed the tokens through a fresh session in the given chunk sizes;
+/// return the concatenated outputs and selections.
+fn run_chunks(
+    cfg: &PipelineConfig,
+    capacity_pages: usize,
+    chunks: &[usize],
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+) -> (Mat, Selection) {
+    let n = q.rows;
+    assert_eq!(chunks.iter().sum::<usize>(), n, "chunking must cover all tokens");
+    let pipe = SparseAttentionPipeline::new(*cfg);
+    let mut store = SessionStore::new(SessionConfig::for_pipeline(cfg, q.cols, capacity_pages));
+    let mut out = Mat::zeros(n, q.cols);
+    let mut sel_rows = Vec::with_capacity(n);
+    let mut at = 0usize;
+    for &c in chunks {
+        let r = pipe
+            .decode_step(&mut store, 1, &sub(q, at, at + c), &sub(k, at, at + c), &sub(v, at, at + c))
+            .expect("decode step");
+        assert_eq!(r.positions, at..at + c, "positions track the session");
+        for i in 0..c {
+            out.row_mut(at + i).copy_from_slice(r.out.row(i));
+        }
+        sel_rows.extend(r.selection.rows);
+        at += c;
+    }
+    (out, Selection { rows: sel_rows })
+}
+
+fn assert_bit_identical(
+    (got_out, got_sel): &(Mat, Selection),
+    (want_out, want_sel): &(Mat, Selection),
+    what: &str,
+) {
+    assert_eq!(got_sel, want_sel, "{what}: selection drift");
+    assert_eq!(got_out.max_abs_diff(want_out), 0.0, "{what}: output drift");
+}
+
+#[test]
+fn single_token_decode_equals_full_prefill_across_tiles_and_threads() {
+    let (n, d) = (40usize, 16usize);
+    for seed in [1u64, 2] {
+        let (q, k, v) = toks(n, d, seed);
+        let base = PipelineConfig::star().with_keep(0.3);
+        // Reference: one full prefill, default tile, single thread.
+        let full = run_chunks(&base.with_tile(64).with_threads(1), 0, &[n], &q, &k, &v);
+        // Per-token decode under varying tile sizes (⇒ varying KV page
+        // sizes) and thread counts.
+        for (tile, threads) in [(64usize, 1usize), (4, 1), (7, 4), (16, 2)] {
+            let cfg = base.with_tile(tile).with_threads(threads);
+            let stepped = run_chunks(&cfg, 0, &vec![1; n], &q, &k, &v);
+            assert_bit_identical(
+                &stepped,
+                &full,
+                &format!("seed={seed} tile={tile} threads={threads} per-token"),
+            );
+            let whole = run_chunks(&cfg, 0, &[n], &q, &k, &v);
+            assert_bit_identical(
+                &whole,
+                &full,
+                &format!("seed={seed} tile={tile} threads={threads} one-chunk"),
+            );
+        }
+    }
+}
+
+#[test]
+fn arbitrary_chunking_is_invariant() {
+    let (n, d) = (48usize, 8usize);
+    let (q, k, v) = toks(n, d, 3);
+    let cfg = PipelineConfig::star().with_keep(0.25).with_tile(8).with_threads(2);
+    let full = run_chunks(&cfg, 0, &[n], &q, &k, &v);
+    let mut rng = Rng::new(99);
+    for trial in 0..4 {
+        let mut chunks = Vec::new();
+        let mut left = n;
+        while left > 0 {
+            let c = rng.range(1, 9.min(left + 1));
+            chunks.push(c);
+            left -= c;
+        }
+        // Robustness: empty decode chunks are legal no-ops.
+        if trial == 0 {
+            chunks.insert(1, 0);
+        }
+        let got = run_chunks(&cfg, 0, &chunks, &q, &k, &v);
+        assert_bit_identical(&got, &full, &format!("trial={trial} chunks={chunks:?}"));
+    }
+}
+
+#[test]
+fn parity_holds_across_pipeline_configurations() {
+    let (n, d) = (36usize, 16usize);
+    let (q, k, v) = toks(n, d, 4);
+    let configs: Vec<(&str, PipelineConfig)> = vec![
+        ("star", PipelineConfig::star().with_keep(0.3)),
+        ("ds_baseline", PipelineConfig::ds_baseline().with_keep(0.3)),
+        ("dense_oracle", PipelineConfig::dense_oracle()),
+        (
+            "slzs_ascend",
+            PipelineConfig {
+                predict: PredictKind::Slzs,
+                topk: TopkKind::Sads,
+                formal: FormalKind::SufaAscend,
+                ..PipelineConfig::star().with_keep(0.4)
+            },
+        ),
+        (
+            "oracle_vanilla",
+            PipelineConfig {
+                predict: PredictKind::None,
+                topk: TopkKind::Vanilla,
+                ..PipelineConfig::star().with_keep(0.2)
+            },
+        ),
+    ];
+    for (label, cfg) in configs {
+        let cfg = cfg.with_tile(8).with_threads(1);
+        let full = run_chunks(&cfg, 0, &[n], &q, &k, &v);
+        let stepped = run_chunks(&cfg, 0, &vec![1; n], &q, &k, &v);
+        assert_bit_identical(&stepped, &full, label);
+        // Causality: row at position p selects only keys ≤ p.
+        for (p, row) in full.1.rows.iter().enumerate() {
+            assert!(row.iter().all(|&j| j <= p), "{label}: row {p} selects a future key");
+        }
+    }
+}
+
+#[test]
+fn eviction_and_rematerialization_preserve_parity() {
+    // Two sessions ping-pong in a pool that cannot hold both: every
+    // switch evicts the other session and every step after an eviction
+    // re-materializes pages from history. Outputs must match the
+    // unbounded-pool run bit for bit, for both sessions.
+    let (n, d) = (40usize, 8usize);
+    let (qa, ka, va) = toks(n, d, 5);
+    let (qb, kb, vb) = toks(n, d, 6);
+    let cfg = PipelineConfig::star().with_keep(0.3).with_tile(8).with_threads(1);
+    let full_a = run_chunks(&cfg, 0, &[n], &qa, &ka, &va);
+    let full_b = run_chunks(&cfg, 0, &[n], &qb, &kb, &vb);
+
+    // 40 tokens / page_size 8 = 5 pages per session; capacity 6 < 10.
+    let pipe = SparseAttentionPipeline::new(cfg);
+    let mut store = SessionStore::new(SessionConfig::for_pipeline(&cfg, d, 6));
+    let mut out_a = Mat::zeros(n, d);
+    let mut out_b = Mat::zeros(n, d);
+    let mut sel_a = Vec::new();
+    let mut sel_b = Vec::new();
+    let chunk = 4usize;
+    for start in (0..n).step_by(chunk) {
+        let end = start + chunk;
+        let ra = pipe
+            .decode_step(&mut store, 1, &sub(&qa, start, end), &sub(&ka, start, end), &sub(&va, start, end))
+            .expect("session A step");
+        for i in 0..chunk {
+            out_a.row_mut(start + i).copy_from_slice(ra.out.row(i));
+        }
+        sel_a.extend(ra.selection.rows);
+        let rb = pipe
+            .decode_step(&mut store, 2, &sub(&qb, start, end), &sub(&kb, start, end), &sub(&vb, start, end))
+            .expect("session B step");
+        for i in 0..chunk {
+            out_b.row_mut(start + i).copy_from_slice(rb.out.row(i));
+        }
+        sel_b.extend(rb.selection.rows);
+    }
+    let stats = store.stats();
+    assert!(stats.sessions_evicted > 0, "the pool was sized to force eviction");
+    assert!(stats.pages_rematerialized > 0, "evicted sessions were rebuilt");
+    assert_bit_identical(&(out_a, Selection { rows: sel_a }), &full_a, "evicted session A");
+    assert_bit_identical(&(out_b, Selection { rows: sel_b }), &full_b, "evicted session B");
+}
+
+#[test]
+fn decode_matches_masked_oracle_numerically() {
+    // Sanity beyond self-consistency: the decoded outputs are the exact
+    // softmax over each row's (causal, absolute-indexed) selection.
+    use star::attention::{masked_attention_oracle, AttnInputs};
+    let (n, d) = (32usize, 16usize);
+    let (q, k, v) = toks(n, d, 7);
+    let cfg = PipelineConfig::star().with_keep(0.4).with_tile(8).with_threads(1);
+    let (out, sel) = run_chunks(&cfg, 0, &vec![2; n / 2], &q, &k, &v);
+    let inp = AttnInputs::new(&q, &k, &v);
+    let oracle = masked_attention_oracle(&inp, &sel);
+    let err = out.max_abs_diff(&oracle);
+    assert!(err < 1e-4, "masked-oracle parity err {err}");
+}
