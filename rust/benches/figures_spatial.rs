@@ -1,9 +1,10 @@
-//! `cargo bench --bench figures_spatial` — regenerates: fig24.
+//! `cargo bench --bench figures_spatial` — regenerates: fig24 plus the
+//! measured sequence-sharded study (spatial-exec).
 //! Plain main (criterion is unavailable offline); prints the paper's
 //! rows/series plus wall time per figure.
 
 fn main() {
-    for name in ["fig24", ] {
+    for name in ["fig24", "spatial-exec"] {
         let t0 = std::time::Instant::now();
         star::bench::run(name).unwrap();
         println!("[{name} regenerated in {:?}]", t0.elapsed());

@@ -25,6 +25,7 @@
 //! | Fig. 23(b) (SRAM, multi-core) | [`spatial_eval::fig23b_sram_multicore`] |
 //! | Fig. 24 (spatial ablation/lateral) | [`spatial_eval::fig24_spatial`] |
 //! | Decode throughput (KV-cache) | [`decode::decode_throughput`] |
+//! | Spatial-exec (measured sharding) | [`spatial_exec::spatial_exec`] |
 //!
 //! Every subcommand also writes its numbers to `BENCH_<name>.json` at
 //! the repo root ([`trajectory`]), so the perf trajectory is tracked
@@ -35,6 +36,7 @@ pub mod arch;
 pub mod decode;
 pub mod motivation;
 pub mod spatial_eval;
+pub mod spatial_exec;
 pub mod trajectory;
 
 use crate::util::json::Json;
@@ -63,10 +65,12 @@ pub(crate) fn f(x: f64) -> String {
     }
 }
 
-/// All bench names, in paper order (plus the serving-side `decode`).
-pub const ALL: [&str; 19] = [
+/// All bench names, in paper order (plus the serving-side `decode` and
+/// the measured-sharding `spatial-exec`).
+pub const ALL: [&str; 20] = [
     "fig1", "fig3", "fig4", "fig5", "fig7", "fig9", "fig11", "fig16", "fig17", "fig18",
     "table2", "fig19", "fig20", "fig21", "fig22", "fig23", "table3", "fig24", "decode",
+    "spatial-exec",
 ];
 
 fn n(x: f64) -> Json {
@@ -76,6 +80,8 @@ fn n(x: f64) -> Json {
 /// Run one named bench (or `all`), writing its machine-readable payload
 /// to `BENCH_<name>.json` (see [`trajectory`]).
 pub fn run(name: &str) -> Result<()> {
+    // CLI spelling `spatial-exec` ↔ file `BENCH_spatial_exec.json`.
+    let name = if name == "spatial-exec" { "spatial_exec" } else { name };
     let payload: Json = match name {
         "fig1" => {
             let rows = motivation::fig1_memory_compute();
@@ -300,6 +306,11 @@ pub fn run(name: &str) -> Result<()> {
                     ]),
                 ),
             ])
+        }
+        "spatial_exec" => {
+            let r = spatial_exec::spatial_exec();
+            anyhow::ensure!(r.parity_ok, "spatial-exec: sharded output diverged from single-core");
+            spatial_exec::payload(&r)
         }
         "all" => {
             for bench in ALL {

@@ -1,0 +1,255 @@
+//! `star bench spatial-exec` — **measured** multi-worker Spatial-STAR.
+//!
+//! The spatial simulator ([`crate::spatial::sim`]) predicts the
+//! DRAttention/MRCA speedups analytically; this bench *executes* the
+//! same sequence-sharded dataflow ([`crate::pipeline::ShardedPipeline`])
+//! on real worker threads and measures wall-clock, so the analytic
+//! model and the execution engine cross-validate each other in one
+//! `BENCH_spatial_exec.json`: per worker count, the measured wall time
+//! and speedup next to the analytic DRAttention+MRCA prediction on a
+//! 1×N mesh. Every sharded run is also checked bit-identical against
+//! the single-core pipeline (the `parity_ok` field), so the trajectory
+//! can never silently report speedup from wrong numerics.
+
+use super::{header, row};
+use crate::bench::trajectory::stage_ops_json;
+use crate::config::SpatialConfig;
+use crate::pipeline::{PipelineConfig, PipelineInputs, ShardedPipeline, SparseAttentionPipeline};
+use crate::spatial::sim::{spatial_run, CoreKind, Dataflow};
+use crate::tensor::Mat;
+use crate::util::json::Json;
+use crate::util::Rng;
+use std::time::Instant;
+
+/// One worker-count measurement.
+#[derive(Clone, Debug)]
+pub struct ExecPoint {
+    /// Effective worker count.
+    pub shards: usize,
+    /// Measured wall time, seconds (best of [`RUNS`] runs).
+    pub wall_s: f64,
+    /// Single-core wall / this wall.
+    pub speedup: f64,
+    /// Ring steps of one run.
+    pub ring_steps: usize,
+    /// Modeled ring payload bytes of one run.
+    pub ring_payload_bytes: u64,
+    /// Selected KV rows gathered to home workers in one run.
+    pub gathered_kv_rows: usize,
+    /// Analytic DRAttention+MRCA latency on a 1×shards mesh, seconds.
+    pub analytic_total_s: f64,
+    /// Analytic 1-worker latency / analytic latency at this count.
+    pub analytic_speedup: f64,
+}
+
+/// Full report of one bench invocation.
+#[derive(Clone, Debug)]
+pub struct SpatialExecReport {
+    pub t: usize,
+    pub s: usize,
+    pub d: usize,
+    pub keep: f64,
+    /// Single-core `SparseAttentionPipeline` wall time (1 thread).
+    pub single_wall_s: f64,
+    /// Per-stage op counters of the largest-worker-count run (identical
+    /// to the single-core run for predict/top-k by construction).
+    pub ops: crate::pipeline::StageOps,
+    pub points: Vec<ExecPoint>,
+    /// Every sharded output/selection matched the single-core run
+    /// bit for bit.
+    pub parity_ok: bool,
+}
+
+/// Wall-clock samples per configuration (best-of, to shed scheduler
+/// noise).
+pub const RUNS: usize = 2;
+
+fn best_wall<T>(runs: usize, mut job: impl FnMut() -> T) -> (T, f64) {
+    let mut best = f64::INFINITY;
+    let mut out = None;
+    for _ in 0..runs.max(1) {
+        let t0 = Instant::now();
+        let r = job();
+        best = best.min(t0.elapsed().as_secs_f64());
+        out = Some(r);
+    }
+    (out.unwrap(), best)
+}
+
+/// Run the executable spatial study on a `t × s` head-`d` workload at
+/// `keep`, for each worker count in `shard_counts`.
+pub fn spatial_exec_with(
+    t: usize,
+    s: usize,
+    d: usize,
+    keep: f64,
+    shard_counts: &[usize],
+) -> SpatialExecReport {
+    header(&format!(
+        "Spatial-exec — measured sequence-sharded prefill (T={t} S={s} d={d} keep={keep})"
+    ));
+    let mut rng = Rng::new(2024);
+    let q = Mat::randn(t, d, 1.0, &mut rng);
+    let k = Mat::randn(s, d, 1.0, &mut rng);
+    let v = Mat::randn(s, d, 1.0, &mut rng);
+    let inputs = PipelineInputs::qkv(&q, &k, &v);
+    // One thread on the single-core pipeline: the sharded engine's
+    // parallelism must come from its workers, not a second thread pool.
+    let cfg = PipelineConfig::star().with_keep(keep).with_threads(1);
+
+    let (single, single_wall_s) =
+        best_wall(RUNS, || SparseAttentionPipeline::new(cfg).run(&inputs));
+    row(
+        "single-core",
+        &[format!("{:>9.1} ms", single_wall_s * 1e3), "1.00x".into(), "(baseline)".into()],
+    );
+
+    // Analytic 1-worker reference for the simulator column.
+    let analytic_base = analytic(1, s, d, keep).total_s;
+
+    let mut parity_ok = true;
+    let mut ops = None;
+    let mut points = Vec::with_capacity(shard_counts.len());
+    for &w in shard_counts {
+        let pipe = ShardedPipeline::new(cfg, w);
+        let (r, wall_s) = best_wall(RUNS, || pipe.run(&inputs));
+        let ok = r.out.max_abs_diff(&single.out) == 0.0 && r.selection == single.selection;
+        if !ok {
+            eprintln!("spatial-exec: PARITY FAILURE at {w} workers");
+        }
+        parity_ok &= ok;
+        let a = analytic(r.shards, s, d, keep);
+        let point = ExecPoint {
+            shards: r.shards,
+            wall_s,
+            speedup: single_wall_s / wall_s,
+            ring_steps: r.ring_steps,
+            ring_payload_bytes: r.ring_payload_bytes,
+            gathered_kv_rows: r.union_rows,
+            analytic_total_s: a.total_s,
+            analytic_speedup: analytic_base / a.total_s,
+        };
+        row(
+            &format!("{} workers", point.shards),
+            &[
+                format!("{:>9.1} ms", point.wall_s * 1e3),
+                format!("{:>5.2}x", point.speedup),
+                format!(
+                    "analytic {:>5.2}x  ring {} steps / {} B  parity {}",
+                    point.analytic_speedup,
+                    point.ring_steps,
+                    point.ring_payload_bytes,
+                    if ok { "ok" } else { "FAIL" }
+                ),
+            ],
+        );
+        ops = Some(r.ops);
+        points.push(point);
+    }
+
+    SpatialExecReport {
+        t,
+        s,
+        d,
+        keep,
+        single_wall_s,
+        ops: ops.unwrap_or_default(),
+        points,
+        parity_ok,
+    }
+}
+
+/// The default study: an over-target sequence (T = 256 query rows — two
+/// LTPP batches wide — over a 4096-key context) across 1/2/4 workers.
+pub fn spatial_exec() -> SpatialExecReport {
+    spatial_exec_with(256, 4096, 64, 0.2, &[1, 2, 4])
+}
+
+/// Analytic DRAttention+MRCA prediction for `w` workers on a 1×w mesh
+/// (the ring the executable engine realizes), same context length.
+fn analytic(w: usize, s: usize, d: usize, keep: f64) -> crate::spatial::sim::SpatialReport {
+    let mut cfg = SpatialConfig::mesh5x5();
+    cfg.mesh_rows = 1;
+    cfg.mesh_cols = w.max(1);
+    spatial_run(&cfg, CoreKind::Star, Dataflow::DrAttentionMrca, s, d, 768, keep)
+}
+
+/// The `BENCH_spatial_exec.json` payload.
+pub fn payload(r: &SpatialExecReport) -> Json {
+    let n = Json::num;
+    Json::obj(vec![
+        ("bench", Json::str("spatial_exec")),
+        ("t", n(r.t as f64)),
+        ("s", n(r.s as f64)),
+        ("d", n(r.d as f64)),
+        ("keep_ratio", n(r.keep)),
+        ("single_core_wall_s", n(r.single_wall_s)),
+        ("parity_ok", Json::Bool(r.parity_ok)),
+        (
+            "columns",
+            Json::Arr(
+                [
+                    "shards",
+                    "wall_s",
+                    "speedup",
+                    "ring_steps",
+                    "ring_payload_bytes",
+                    "gathered_kv_rows",
+                    "analytic_total_s",
+                    "analytic_speedup",
+                ]
+                .iter()
+                .map(|c| Json::str(c))
+                .collect(),
+            ),
+        ),
+        (
+            "rows",
+            Json::Arr(
+                r.points
+                    .iter()
+                    .map(|p| {
+                        Json::Arr(vec![
+                            n(p.shards as f64),
+                            n(p.wall_s),
+                            n(p.speedup),
+                            n(p.ring_steps as f64),
+                            n(p.ring_payload_bytes as f64),
+                            n(p.gathered_kv_rows as f64),
+                            n(p.analytic_total_s),
+                            n(p.analytic_speedup),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("stage_ops", stage_ops_json(&r.ops)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_study_is_parity_clean_and_monotone_in_axis() {
+        // Tiny sizes: this is a schema/parity test, not a perf test —
+        // wall-clock ordering is asserted nowhere (CI machines are
+        // noisy), only correctness and the shard axis.
+        let r = spatial_exec_with(16, 128, 16, 0.25, &[1, 2, 4]);
+        assert!(r.parity_ok, "sharded runs must match the single-core pipeline");
+        assert_eq!(r.points.len(), 3);
+        for pair in r.points.windows(2) {
+            assert!(pair[0].shards < pair[1].shards, "shard axis must ascend");
+        }
+        for p in &r.points {
+            assert_eq!(p.ring_steps, p.shards);
+            assert!(p.wall_s > 0.0 && p.analytic_total_s > 0.0);
+            assert!(p.shards > 1 || p.ring_payload_bytes == 0);
+        }
+        let j = payload(&r);
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("spatial_exec"));
+        assert_eq!(j.get("parity_ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 3);
+    }
+}

@@ -28,13 +28,20 @@ impl Default for BatcherConfig {
 /// An emitted batch: requests whose query rows sum to ≤ target_t.
 #[derive(Clone, Debug)]
 pub struct Batch {
+    /// The variant the batch executes on.
     pub variant: String,
+    /// The batched requests, admission order.
     pub requests: Vec<Request>,
     /// When the batch was sealed (seconds, caller clock).
     pub sealed_s: f64,
+    /// Over-target prefill admitted onto the sequence-sharded path
+    /// ([`super::router::Admission::Sharded`]): the batch bypassed the
+    /// batcher and executes on the sharded pipeline.
+    pub sharded: bool,
 }
 
 impl Batch {
+    /// Total query rows across the batch's requests.
     pub fn rows(&self) -> usize {
         self.requests.iter().map(|r| r.t).sum()
     }
@@ -48,6 +55,7 @@ impl Batch {
 /// Per-variant dynamic batcher.
 #[derive(Clone, Debug)]
 pub struct Batcher {
+    /// The variant whose requests this batcher accumulates.
     pub variant: String,
     cfg: BatcherConfig,
     queue: VecDeque<Request>,
@@ -55,14 +63,17 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// An empty batcher for one variant queue.
     pub fn new(variant: &str, cfg: BatcherConfig) -> Batcher {
         Batcher { variant: variant.to_string(), cfg, queue: VecDeque::new(), queued_rows: 0 }
     }
 
+    /// Requests currently queued.
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
 
+    /// Query rows currently queued.
     pub fn pending_rows(&self) -> usize {
         self.queued_rows
     }
@@ -110,7 +121,7 @@ impl Batcher {
             self.queued_rows -= r.t;
             requests.push(r);
         }
-        Batch { variant: self.variant.clone(), requests, sealed_s: now }
+        Batch { variant: self.variant.clone(), requests, sealed_s: now, sharded: false }
     }
 }
 

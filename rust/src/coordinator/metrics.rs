@@ -33,31 +33,51 @@ struct Inner {
     cache_page_hits: u64,
     cache_pages_rematerialized: u64,
     cache_sessions_evicted: u64,
+    // Sequence-sharded over-target prefill path.
+    sharded_prefills: u64,
+    ring_steps: u64,
+    ring_payload_bytes: u64,
+    gathered_kv_rows: u64,
+    /// Per-shard stage busy times, indexed by ring position (grown on
+    /// demand to the largest worker count seen).
+    shard_stage_s: Vec<crate::pipeline::StageTiming>,
 }
 
 /// A point-in-time copy for reporting.
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
+    /// Responses delivered (including error responses).
     pub requests: u64,
+    /// Requests rejected at admission.
     pub rejected: u64,
     /// Batches (or individual decode requests) whose backend execution
     /// errored — the responses carried no output and the error text went
     /// to the `Response::variant` field.
     pub failed: u64,
+    /// Batches dispatched to the worker pool.
     pub batches: u64,
+    /// Query rows across all dispatched batches.
     pub rows: u64,
+    /// Median end-to-end latency, seconds.
     pub latency_p50_s: f64,
+    /// 95th-percentile end-to-end latency, seconds.
     pub latency_p95_s: f64,
+    /// Mean end-to-end latency, seconds.
     pub latency_mean_s: f64,
+    /// Mean queueing share of the latency, seconds.
     pub queue_mean_s: f64,
+    /// Mean query rows per sealed batch (batching quality).
     pub mean_batch_rows: f64,
     /// Served query rows per second over the observation window.
     pub rows_per_s: f64,
-    /// Aggregate busy seconds per pipeline stage (native backend only;
-    /// all zero for the PJRT/simulator backends).
+    /// Aggregate predict-stage busy seconds (native backend only; all
+    /// stage times are zero for the PJRT/simulator backends).
     pub stage_predict_s: f64,
+    /// Aggregate top-k-stage busy seconds.
     pub stage_topk_s: f64,
+    /// Aggregate KV-generation busy seconds.
     pub stage_kv_gen_s: f64,
+    /// Aggregate formal-compute busy seconds.
     pub stage_formal_s: f64,
     /// SU-FA max-misprediction recoveries across all served batches.
     pub stalls: u64,
@@ -72,13 +92,29 @@ pub struct MetricsSnapshot {
     pub cache_pages_rematerialized: u64,
     /// LRU whole-session evictions.
     pub cache_sessions_evicted: u64,
+    /// Over-target prefill requests served on the sequence-sharded
+    /// pipeline.
+    pub sharded_prefills: u64,
+    /// Ring steps executed across all sharded runs.
+    pub ring_steps: u64,
+    /// Modeled bytes forwarded on the worker ring across all sharded
+    /// runs.
+    pub ring_payload_bytes: u64,
+    /// Selected KV rows gathered to Q-block home workers across all
+    /// sharded runs.
+    pub gathered_kv_rows: u64,
+    /// Per-shard stage busy times (ring position → timing), summed over
+    /// all sharded runs.
+    pub shard_stage_s: Vec<crate::pipeline::StageTiming>,
 }
 
 impl Metrics {
+    /// An empty metrics sink.
     pub fn new() -> Metrics {
         Metrics::default()
     }
 
+    /// Account one delivered response and its latency split.
     pub fn record_response(&self, latency_s: f64, queue_s: f64, now: f64) {
         let mut m = self.inner.lock().unwrap();
         m.latency.add(latency_s);
@@ -90,6 +126,7 @@ impl Metrics {
         m.last_s = m.last_s.max(now);
     }
 
+    /// Account one dispatched batch of `rows` query rows.
     pub fn record_batch(&self, rows: usize) {
         let mut m = self.inner.lock().unwrap();
         m.batch_rows.add(rows as f64);
@@ -97,6 +134,7 @@ impl Metrics {
         m.rows += rows as u64;
     }
 
+    /// Account one admission rejection.
     pub fn record_rejection(&self) {
         self.inner.lock().unwrap().rejected += 1;
     }
@@ -116,6 +154,22 @@ impl Metrics {
         m.stalls += stalls;
     }
 
+    /// Account one sequence-sharded prefill run: per-shard stage busy
+    /// times plus ring-step/payload/gather counters.
+    pub fn record_sharded(&self, r: &crate::pipeline::ShardedReport) {
+        let mut m = self.inner.lock().unwrap();
+        m.sharded_prefills += 1;
+        m.ring_steps += r.ring_steps as u64;
+        m.ring_payload_bytes += r.ring_payload_bytes;
+        m.gathered_kv_rows += r.union_rows as u64;
+        if m.shard_stage_s.len() < r.per_shard.len() {
+            m.shard_stage_s.resize(r.per_shard.len(), crate::pipeline::StageTiming::default());
+        }
+        for st in &r.per_shard {
+            m.shard_stage_s[st.shard].merge(&st.timing);
+        }
+    }
+
     /// Account one decode step served against the paged KV-cache.
     pub fn record_decode(&self, r: &crate::pipeline::DecodeReport) {
         let mut m = self.inner.lock().unwrap();
@@ -126,6 +180,7 @@ impl Metrics {
         m.cache_sessions_evicted += r.evicted_sessions.len() as u64;
     }
 
+    /// A point-in-time copy of every counter.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().unwrap();
         let window = (m.last_s - m.first_s.unwrap_or(0.0)).max(1e-9);
@@ -151,11 +206,17 @@ impl Metrics {
             cache_page_hits: m.cache_page_hits,
             cache_pages_rematerialized: m.cache_pages_rematerialized,
             cache_sessions_evicted: m.cache_sessions_evicted,
+            sharded_prefills: m.sharded_prefills,
+            ring_steps: m.ring_steps,
+            ring_payload_bytes: m.ring_payload_bytes,
+            gathered_kv_rows: m.gathered_kv_rows,
+            shard_stage_s: m.shard_stage_s.clone(),
         }
     }
 }
 
 impl MetricsSnapshot {
+    /// One-paragraph human-readable summary (the `star serve` footer).
     pub fn render(&self) -> String {
         let mut s = format!(
             "requests={} rejected={} failed={} batches={} rows={} \
@@ -195,6 +256,19 @@ impl MetricsSnapshot {
                 self.cache_sessions_evicted
             ));
         }
+        if self.sharded_prefills > 0 {
+            let busy: Vec<String> =
+                self.shard_stage_s.iter().map(|t| format!("{:.3}ms", t.busy_s() * 1e3)).collect();
+            s.push_str(&format!(
+                "\nsharded: prefills={} ring_steps={} payload={}B gathered_kv_rows={} \
+                 shard_busy=[{}]",
+                self.sharded_prefills,
+                self.ring_steps,
+                self.ring_payload_bytes,
+                self.gathered_kv_rows,
+                busy.join(" ")
+            ));
+        }
         s
     }
 }
@@ -220,6 +294,29 @@ mod tests {
         assert!((s.mean_batch_rows - 96.0).abs() < 1e-12);
         assert!((s.rows_per_s - 192.0).abs() < 1e-6);
         assert!(s.render().contains("requests=2"));
+    }
+
+    #[test]
+    fn records_sharded_runs() {
+        use crate::pipeline::{PipelineConfig, PipelineInputs, ShardedPipeline};
+        use crate::tensor::Mat;
+        use crate::util::Rng;
+        let mut rng = Rng::new(3);
+        let q = Mat::randn(8, 8, 1.0, &mut rng);
+        let k = Mat::randn(32, 8, 1.0, &mut rng);
+        let v = Mat::randn(32, 8, 1.0, &mut rng);
+        let r = ShardedPipeline::new(PipelineConfig::star().with_keep(0.25), 2)
+            .run(&PipelineInputs::qkv(&q, &k, &v));
+        assert_eq!(r.shards, 2);
+        let m = Metrics::new();
+        m.record_sharded(&r);
+        m.record_sharded(&r);
+        let s = m.snapshot();
+        assert_eq!(s.sharded_prefills, 2);
+        assert_eq!(s.ring_steps, 2 * r.ring_steps as u64);
+        assert_eq!(s.gathered_kv_rows, 2 * r.union_rows as u64);
+        assert_eq!(s.shard_stage_s.len(), r.shards);
+        assert!(s.render().contains("sharded: prefills=2"));
     }
 
     #[test]

@@ -10,7 +10,10 @@
 //!   ([`Router::admit`]), and routes each to the variant queue whose
 //!   compiled shape fits (artifacts have static shapes; routing = shape
 //!   bucketing). Decode requests ([`Request::decode`]) carry a session
-//!   id plus new-token Q/K/V rows.
+//!   id plus new-token Q/K/V rows. Stateless prefill *wider than the
+//!   batch target* is admitted onto the sequence-sharded execution
+//!   path ([`router::Admission::Sharded`] →
+//!   [`crate::pipeline::ShardedPipeline`]) instead of being rejected.
 //! * [`batcher`] — dynamic + continuous batching: emit a batch when it
 //!   reaches the target query parallelism or when the oldest request
 //!   exceeds the latency budget. Decode sessions re-enter the batcher
@@ -22,10 +25,11 @@
 //! * [`server`] — the thread-based serving loop gluing the above to an
 //!   execution backend: the native pipeline (session-aware — decode
 //!   requests run against a shared [`crate::kvcache::SessionStore`]),
-//!   the PJRT [`crate::runtime::Engine`] (real numerics, `pjrt`
+//!   the PJRT `crate::runtime::Engine` (real numerics, `pjrt`
 //!   feature) or the cycle-level simulator (timing studies).
 //! * [`metrics`] — latency/throughput accounting, per-stage busy times,
-//!   and KV-cache hit/eviction/re-materialization counters.
+//!   KV-cache hit/eviction/re-materialization counters, and the sharded
+//!   path's per-shard stage timings + ring-step counters.
 
 pub mod batcher;
 pub mod metrics;
@@ -35,6 +39,6 @@ pub mod server;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use router::{Request, Response, Router, Variant};
+pub use router::{Admission, Request, Response, RouteError, Router, Variant};
 pub use scheduler::{Stage, StageJob, TiledScheduler};
 pub use server::{Backend, Server, ServerConfig};

@@ -10,7 +10,9 @@ use crate::tensor::Mat;
 /// An inference request: `t` query rows over a context of `s` keys.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Caller-chosen request id (responses echo it).
     pub id: u64,
+    /// Model name, matched against [`Variant::model`].
     pub model: String,
     /// Query rows this request contributes to the LTPP batch.
     pub t: usize,
@@ -30,6 +32,7 @@ pub struct Request {
 }
 
 impl Request {
+    /// A stateless prefill request (attach Q via the `q` field).
     pub fn new(id: u64, model: &str, t: usize, s: usize, arrival_s: f64) -> Request {
         Request { id, model: model.to_string(), t, s, arrival_s, q: None, session: None, kv: None }
     }
@@ -70,6 +73,7 @@ impl Request {
 /// A served response.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// The request's id.
     pub id: u64,
     /// Output rows (empty in simulation mode).
     pub output: Option<Mat>,
@@ -86,6 +90,7 @@ pub struct Response {
 pub struct Variant {
     /// Artifact entry name, e.g. `"sparse_attention"`.
     pub name: String,
+    /// Model this variant serves.
     pub model: String,
     /// Maximum query rows per batch (the accelerator's T, e.g. 128).
     pub max_t: usize,
@@ -96,11 +101,17 @@ pub struct Variant {
 /// Routing error.
 #[derive(Clone, Debug, PartialEq)]
 pub enum RouteError {
+    /// No variant is loaded for the requested model.
     UnknownModel(String),
+    /// The context exceeds every variant of the model.
     TooLong { s: usize, max: usize },
+    /// The request's query rows exceed every variant's compiled batch.
     TooWide { t: usize, max: usize },
-    /// More query rows than the batcher's target: such a request could
-    /// never seal a within-target batch (split it into chunks instead).
+    /// A *decode* step wider than the batcher's target: decode chunks
+    /// mutate their session, cannot ride the sharded stateless path,
+    /// and could never seal a within-target batch (split the chunk
+    /// instead). Over-target *prefill* is not an error — it routes to
+    /// the sequence-sharded pipeline ([`Admission::Sharded`]).
     OverTarget { t: usize, target: usize },
 }
 
@@ -124,6 +135,7 @@ pub struct Router {
 }
 
 impl Router {
+    /// A router over the loaded variants (kept sorted by context size).
     pub fn new(variants: Vec<Variant>) -> Router {
         let mut v = variants;
         // Prefer the tightest context bucket.
@@ -131,17 +143,25 @@ impl Router {
         Router { variants: v }
     }
 
+    /// The loaded variants, ascending by context length.
     pub fn variants(&self) -> &[Variant] {
         &self.variants
     }
 
+    /// All variants of `model`, ascending by context length
+    /// ([`RouteError::UnknownModel`] when none is loaded).
+    fn buckets_of(&self, model: &str) -> Result<Vec<&Variant>, RouteError> {
+        let of_model: Vec<&Variant> =
+            self.variants.iter().filter(|v| v.model == model).collect();
+        if of_model.is_empty() {
+            return Err(RouteError::UnknownModel(model.to_string()));
+        }
+        Ok(of_model)
+    }
+
     /// Pick the smallest variant of the request's model that fits.
     pub fn route(&self, req: &Request) -> Result<&Variant, RouteError> {
-        let of_model: Vec<&Variant> =
-            self.variants.iter().filter(|v| v.model == req.model).collect();
-        if of_model.is_empty() {
-            return Err(RouteError::UnknownModel(req.model.clone()));
-        }
+        let of_model = self.buckets_of(&req.model)?;
         let max_s = of_model.iter().map(|v| v.s).max().unwrap();
         let max_t = of_model.iter().map(|v| v.max_t).max().unwrap();
         if req.t > max_t {
@@ -153,16 +173,77 @@ impl Router {
             .ok_or(RouteError::TooLong { s: req.s, max: max_s })
     }
 
-    /// Route plus batch-level admission: additionally reject requests
-    /// whose query rows exceed the batcher's `target_t` — previously
-    /// such a request flowed through unchecked and sealed an over-target
-    /// batch via [`super::batcher::Batcher`]'s oversize escape hatch.
-    /// `target_t = 0` disables the check.
-    pub fn admit(&self, req: &Request, target_t: usize) -> Result<&Variant, RouteError> {
-        if target_t > 0 && req.t > target_t {
+    /// Context-only routing for the sharded path: the smallest bucket of
+    /// the model that fits `req.s`, ignoring `max_t` — the sharded
+    /// engine partitions query rows itself.
+    fn route_by_context(&self, req: &Request) -> Result<&Variant, RouteError> {
+        let of_model = self.buckets_of(&req.model)?;
+        let max_s = of_model.iter().map(|v| v.s).max().unwrap();
+        of_model
+            .into_iter()
+            .find(|v| v.s >= req.s)
+            .ok_or(RouteError::TooLong { s: req.s, max: max_s })
+    }
+
+    /// Route plus batch-level admission. Within the batcher's `target_t`
+    /// the request enters the dynamic batcher as usual
+    /// ([`Admission::Batched`]). A *stateless prefill* too wide for that
+    /// path — wider than `target_t`, or wider than every variant's
+    /// compiled `max_t` — is admitted onto the sequence-sharded
+    /// execution path instead of being rejected
+    /// ([`Admission::Sharded`], served by
+    /// [`crate::pipeline::ShardedPipeline`]): it bypasses the batcher
+    /// (it alone exceeds a whole batch) and is routed by context length
+    /// only, because the sharded engine partitions query rows itself.
+    /// Admission is therefore monotone in `t` for prefill: no width is
+    /// rejected, only an impossible context. Over-target *decode* steps
+    /// are still rejected ([`RouteError::OverTarget`]) — they mutate
+    /// session state and must stay within the continuous-batching path.
+    /// `target_t = 0` disables the over-target check.
+    pub fn admit(&self, req: &Request, target_t: usize) -> Result<Admission<'_>, RouteError> {
+        let over_target = target_t > 0 && req.t > target_t;
+        if over_target && req.is_decode() {
             return Err(RouteError::OverTarget { t: req.t, target: target_t });
         }
-        self.route(req)
+        if !over_target {
+            return match self.route(req) {
+                Ok(v) => Ok(Admission::Batched(v)),
+                // A prefill wider than every compiled variant can still
+                // execute sharded — without this fallback a t between
+                // max_t and target_t would be rejected while a wider
+                // one is served.
+                Err(RouteError::TooWide { .. }) if !req.is_decode() => {
+                    self.route_by_context(req).map(Admission::Sharded)
+                }
+                Err(e) => Err(e),
+            };
+        }
+        self.route_by_context(req).map(Admission::Sharded)
+    }
+}
+
+/// How an admitted request will execute (see [`Router::admit`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Admission<'a> {
+    /// Within the batch target: enters the dynamic batcher for this
+    /// variant.
+    Batched(&'a Variant),
+    /// Over-target stateless prefill: bypasses the batcher and executes
+    /// on the sequence-sharded pipeline against this variant's context.
+    Sharded(&'a Variant),
+}
+
+impl<'a> Admission<'a> {
+    /// The variant serving the request, whichever path it takes.
+    pub fn variant(&self) -> &'a Variant {
+        match self {
+            Admission::Batched(v) | Admission::Sharded(v) => v,
+        }
+    }
+
+    /// Whether the request takes the sequence-sharded path.
+    pub fn is_sharded(&self) -> bool {
+        matches!(self, Admission::Sharded(_))
     }
 }
 
@@ -195,19 +276,60 @@ mod tests {
     }
 
     #[test]
-    fn admit_enforces_batch_target() {
+    fn admit_routes_over_target_prefill_to_the_sharded_path() {
         let r = router();
-        // Routable by shape (max_t = 128) but wider than the batch
-        // target: admission must reject it.
+        // Wider than the batch target: a stateless prefill is admitted,
+        // but onto the sharded path (routed by context only).
         let req = Request::new(1, "tiny", 48, 300, 0.0);
+        let adm = r.admit(&req, 32).unwrap();
+        assert!(adm.is_sharded());
+        assert_eq!(adm.variant().name, "attn_s512");
+        // Even wider than every variant's max_t: still sharded — the
+        // sharded engine partitions query rows itself.
+        let wide = Request::new(2, "tiny", 4096, 300, 0.0);
+        assert!(r.admit(&wide, 32).unwrap().is_sharded());
+        // But an impossible context still fails.
+        let long = Request::new(3, "tiny", 4096, 9999, 0.0);
+        assert_eq!(r.admit(&long, 32).unwrap_err(), RouteError::TooLong { s: 9999, max: 2048 });
+        // Within target: admit behaves exactly like route.
+        let adm = r.admit(&req, 64).unwrap();
+        assert!(!adm.is_sharded());
+        assert_eq!(adm.variant().name, "attn_s512");
+        // target 0 disables the check.
+        assert!(!r.admit(&req, 0).unwrap().is_sharded());
+    }
+
+    #[test]
+    fn admit_still_rejects_over_target_decode() {
+        let r = router();
+        let q = Mat::zeros(48, 4);
+        let k = Mat::zeros(48, 4);
+        let v = Mat::zeros(48, 4);
+        let req = Request::decode(9, "tiny", 5, q, k, v, 300, 0.0);
         assert_eq!(
             r.admit(&req, 32).unwrap_err(),
             RouteError::OverTarget { t: 48, target: 32 }
         );
-        // Within target: admit behaves exactly like route.
-        assert_eq!(r.admit(&req, 64).unwrap().name, "attn_s512");
-        // target 0 disables the check.
-        assert!(r.admit(&req, 0).is_ok());
+    }
+
+    #[test]
+    fn admission_is_monotone_in_width_for_prefill() {
+        let r = router();
+        // Wider than every compiled max_t (128) but within the batch
+        // target (256): without the TooWide fallback this narrower
+        // request would be rejected while a t > 256 one is served.
+        let mid = Request::new(4, "tiny", 200, 300, 0.0);
+        let adm = r.admit(&mid, 256).unwrap();
+        assert!(adm.is_sharded());
+        assert_eq!(adm.variant().name, "attn_s512");
+        // Same with the over-target check disabled: width never rejects
+        // a stateless prefill.
+        assert!(r.admit(&mid, 0).unwrap().is_sharded());
+        // A decode step wider than max_t (but within target) is still
+        // TooWide — it cannot ride the sharded stateless path.
+        let (q, k, v) = (Mat::zeros(200, 4), Mat::zeros(200, 4), Mat::zeros(200, 4));
+        let wd = Request::decode(5, "tiny", 3, q, k, v, 300, 0.0);
+        assert!(matches!(r.admit(&wd, 256).unwrap_err(), RouteError::TooWide { .. }));
     }
 
     #[test]

@@ -13,13 +13,18 @@ use std::collections::BTreeMap;
 /// DS pipeline stages, in dependency order.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Stage {
+    /// Approximate score estimation (Sec. IV-A).
     Predict,
+    /// Vital-key selection (Sec. IV-B).
     TopK,
+    /// On-demand KV generation for the selected union.
     KvGen,
+    /// Formal attention compute (SU-FA).
     Formal,
 }
 
 impl Stage {
+    /// The stage that depends on this one (`None` after `Formal`).
     pub fn next(self) -> Option<Stage> {
         match self {
             Stage::Predict => Some(Stage::TopK),
@@ -29,14 +34,18 @@ impl Stage {
         }
     }
 
+    /// Every stage, in dependency order.
     pub const ALL: [Stage; 4] = [Stage::Predict, Stage::TopK, Stage::KvGen, Stage::Formal];
 }
 
 /// One schedulable tile of work.
 #[derive(Clone, Debug, PartialEq)]
 pub struct StageJob {
+    /// The batch this tile belongs to.
     pub batch_id: u64,
+    /// Which pipeline stage the tile runs.
     pub stage: Stage,
+    /// Tile index within the batch's stage.
     pub tile: usize,
     /// Issue deadline proxy (batch arrival time) for oldest-first issue.
     pub deadline: f64,
@@ -60,6 +69,7 @@ pub struct TiledScheduler {
 }
 
 impl TiledScheduler {
+    /// An empty scheduler.
     pub fn new() -> TiledScheduler {
         TiledScheduler::default()
     }
@@ -141,10 +151,12 @@ impl TiledScheduler {
         std::mem::take(&mut self.done)
     }
 
+    /// Batches admitted but not yet fully complete.
     pub fn in_flight(&self) -> usize {
         self.tiles.len()
     }
 
+    /// Total jobs issued so far (utilization accounting).
     pub fn issued(&self) -> u64 {
         self.issued
     }

@@ -12,7 +12,7 @@
 //!
 //! # Run the native server
 //!
-//! ```no_run
+//! ```
 //! use star::coordinator::{Backend, Request, Router, Server, ServerConfig, Variant};
 //! use star::pipeline::PipelineConfig;
 //! use star::tensor::Mat;
@@ -20,7 +20,7 @@
 //! use std::collections::BTreeMap;
 //!
 //! let mut rng = Rng::new(1);
-//! let (s, d) = (1024, 64);
+//! let (s, d) = (128, 16);
 //! let mut contexts = BTreeMap::new();
 //! contexts.insert(
 //!     "sparse_attention".to_string(),
@@ -29,7 +29,7 @@
 //! let router = Router::new(vec![Variant {
 //!     name: "sparse_attention".into(), model: "gpt2".into(), max_t: 128, s,
 //! }]);
-//! let backend = Backend::native(PipelineConfig::star(), contexts);
+//! let backend = Backend::native(PipelineConfig::star().with_threads(1), contexts);
 //! let server = Server::start(router, backend, ServerConfig::default());
 //! let mut req = Request::new(0, "gpt2", 8, s, 0.0);
 //! req.q = Some(Mat::randn(8, d, 1.0, &mut rng));
@@ -37,13 +37,18 @@
 //! assert!(out.output.is_some());
 //! println!("{}", server.shutdown().render()); // includes per-stage times
 //! ```
+//!
+//! Requests wider than the batch target do not reject: they execute on
+//! the sequence-sharded pipeline (bit-identical outputs — see
+//! [`crate::pipeline::ShardedPipeline`]), with per-shard stage timings
+//! and ring counters in the final [`MetricsSnapshot`].
 
 use super::batcher::{Batch, Batcher, BatcherConfig};
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::router::{Request, Response, Router};
+use super::router::{Admission, Request, Response, Router};
 use crate::config::AccelConfig;
 use crate::kvcache::SessionStore;
-use crate::pipeline::{PipelineConfig, PipelineInputs, SparseAttentionPipeline};
+use crate::pipeline::{PipelineConfig, PipelineInputs, ShardedPipeline, SparseAttentionPipeline};
 #[cfg(feature = "pjrt")]
 use crate::runtime::Engine;
 use crate::sim::dram::DramChannel;
@@ -77,6 +82,12 @@ pub enum Backend {
         /// Shared paged KV-cache session store (`None` = prefill-only
         /// server: decode requests are answered with an error).
         sessions: Option<Arc<Mutex<SessionStore>>>,
+        /// Worker count for over-target prefill on the sequence-sharded
+        /// pipeline ([`crate::pipeline::ShardedPipeline`]); 0 = auto
+        /// (the server divides the available cores among its pool
+        /// workers). Never changes outputs — sharded execution is
+        /// bit-identical at every worker count.
+        shards: usize,
     },
     /// Execute the AOT-compiled PJRT artifact named by each variant.
     /// `contexts` maps variant name → (K, V) context matrices.
@@ -90,7 +101,7 @@ pub enum Backend {
 impl Backend {
     /// Prefill-only native backend (no session store).
     pub fn native(pipeline: PipelineConfig, contexts: BTreeMap<String, (Mat, Mat)>) -> Backend {
-        Backend::Native { pipeline, contexts, sessions: None }
+        Backend::Native { pipeline, contexts, sessions: None, shards: 0 }
     }
 
     /// Session-aware native backend: decode requests share `store`'s
@@ -100,14 +111,30 @@ impl Backend {
         contexts: BTreeMap<String, (Mat, Mat)>,
         store: SessionStore,
     ) -> Backend {
-        Backend::Native { pipeline, contexts, sessions: Some(Arc::new(Mutex::new(store))) }
+        Backend::Native {
+            pipeline,
+            contexts,
+            sessions: Some(Arc::new(Mutex::new(store))),
+            shards: 0,
+        }
+    }
+
+    /// Builder-style worker-count override for the sequence-sharded
+    /// over-target prefill path (no-op on non-native backends).
+    pub fn with_shards(mut self, n: usize) -> Backend {
+        if let Backend::Native { shards, .. } = &mut self {
+            *shards = n;
+        }
+        self
     }
 }
 
 /// Server construction knobs.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
+    /// Dynamic-batching policy (target rows, latency budget).
     pub batcher: BatcherConfig,
+    /// Worker threads executing sealed batches.
     pub workers: usize,
 }
 
@@ -127,6 +154,8 @@ enum Msg {
 pub struct Server {
     tx: Sender<Msg>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
+    /// Live metrics sink (snapshot any time; final copy from
+    /// [`Server::shutdown`]).
     pub metrics: Arc<Metrics>,
     started: Instant,
     stopped: Arc<AtomicBool>,
@@ -139,6 +168,25 @@ impl Server {
         let (tx, rx) = channel::<Msg>();
         let started = Instant::now();
         let stopped = Arc::new(AtomicBool::new(false));
+
+        // Over-target prefills run the sharded engine inside *each* pool
+        // worker: an auto (0) shard count would spawn one thread per core
+        // per worker — `workers × cores` threads under a burst. Divide
+        // the machine among the pool instead (outputs are worker-count
+        // invariant, so this only caps contention).
+        let backend = match backend {
+            Backend::Native { pipeline, contexts, sessions, shards: 0 } => {
+                let cores =
+                    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+                Backend::Native {
+                    pipeline,
+                    contexts,
+                    sessions,
+                    shards: (cores / cfg.workers.max(1)).max(1),
+                }
+            }
+            b => b,
+        };
 
         // Worker pool input.
         let (work_tx, work_rx) = channel::<(Batch, Vec<Sender<Response>>)>();
@@ -175,12 +223,25 @@ impl Server {
                 // Block briefly so timeout-flushes still happen at low load.
                 let msg = rx.recv_timeout(std::time::Duration::from_millis(1)).unwrap_or(Msg::Tick);
                 match msg {
-                    // Admission = routing + the batch-target check: an
-                    // over-target request would otherwise seal an
-                    // over-target batch via the batcher's oversize
-                    // escape hatch.
+                    // Admission = routing + the batch-target check.
+                    // Over-target *prefill* comes back as
+                    // Admission::Sharded: it bypasses the batcher (it
+                    // alone exceeds a whole batch) and dispatches
+                    // immediately as a single-request batch for the
+                    // sequence-sharded pipeline. Over-target decode is
+                    // still rejected.
                     Msg::Submit(req, reply) => match router.admit(&req, cfg.batcher.target_t) {
-                        Ok(variant) => {
+                        Ok(Admission::Sharded(variant)) => {
+                            waiting.insert(req.id, reply);
+                            let batch = Batch {
+                                variant: variant.name.clone(),
+                                requests: vec![req],
+                                sealed_s: now(),
+                                sharded: true,
+                            };
+                            dispatch(batch, &mut waiting, &work_tx, &m);
+                        }
+                        Ok(Admission::Batched(variant)) => {
                             waiting.insert(req.id, reply);
                             batchers
                                 .entry(variant.name.clone())
@@ -294,8 +355,12 @@ fn execute_batch(
 ) {
     let sealed = batch.sealed_s;
     match backend {
-        Backend::Native { pipeline, contexts, sessions } => {
-            let out = run_native(pipeline, contexts, sessions.as_ref(), &batch, metrics);
+        Backend::Native { pipeline, contexts, sessions, shards } => {
+            let out = if batch.sharded {
+                run_sharded_native(pipeline, *shards, contexts, &batch, metrics)
+            } else {
+                run_native(pipeline, contexts, sessions.as_ref(), &batch, metrics)
+            };
             let now = started.elapsed().as_secs_f64();
             // Surface misconfiguration instead of silently serving empty
             // outputs: count a batch-level failure and carry the message
@@ -333,8 +398,19 @@ fn execute_batch(
         }
         #[cfg(feature = "pjrt")]
         Backend::Pjrt { artifact_dir, contexts } => {
-            let out = ensure_engine(&mut state.engine, artifact_dir)
-                .and_then(|engine| run_pjrt(engine, contexts, &batch));
+            // AOT artifacts have static shapes: a sharded over-target
+            // batch cannot execute here — refuse it explicitly rather
+            // than letting run_pjrt silently truncate the query rows.
+            let out = if batch.sharded {
+                Err(anyhow::anyhow!(
+                    "sharded prefill is not supported on the PJRT backend \
+                     (static-shape artifacts); raise target_t or serve with \
+                     Backend::Native"
+                ))
+            } else {
+                ensure_engine(&mut state.engine, artifact_dir)
+                    .and_then(|engine| run_pjrt(engine, contexts, &batch))
+            };
             let now = started.elapsed().as_secs_f64();
             // Same error surfacing as the Native arm: count the failed
             // batch and carry the message to every client.
@@ -510,6 +586,56 @@ fn run_native(
     for (ri, q) in with_q {
         outs[ri] = Some(Mat::from_fn(q.rows, d, |i, j| report.out.at(at + i, j)));
         at += q.rows;
+    }
+    Ok((outs, errors))
+}
+
+/// Execute an over-target prefill batch on the sequence-sharded
+/// pipeline ([`crate::pipeline::ShardedPipeline`]). Such batches carry
+/// exactly the requests `Router::admit` marked [`Admission::Sharded`]
+/// (in practice one — each alone exceeds the batch target); outputs are
+/// bit-identical to what the single-core pipeline would have produced,
+/// so routing over-target traffic here never changes served numerics.
+/// Per-shard stage timings and ring counters land in the metrics.
+fn run_sharded_native(
+    cfg: &PipelineConfig,
+    shards: usize,
+    contexts: &BTreeMap<String, (Mat, Mat)>,
+    batch: &Batch,
+    metrics: &Metrics,
+) -> Result<(Vec<Option<Mat>>, Vec<Option<String>>)> {
+    if let Err(e) = cfg.validate() {
+        anyhow::bail!("invalid pipeline config: {e}");
+    }
+    let (k, v) = contexts
+        .get(&batch.variant)
+        .ok_or_else(|| anyhow::anyhow!("no KV context for variant {}", batch.variant))?;
+    anyhow::ensure!(
+        k.rows == v.rows && k.cols == v.cols,
+        "variant {}: malformed KV context (K {}x{}, V {}x{})",
+        batch.variant,
+        k.rows,
+        k.cols,
+        v.rows,
+        v.cols
+    );
+    let mut outs: Vec<Option<Mat>> = vec![None; batch.requests.len()];
+    let errors: Vec<Option<String>> = vec![None; batch.requests.len()];
+    let pipeline = ShardedPipeline::new(*cfg, shards);
+    for (i, req) in batch.requests.iter().enumerate() {
+        anyhow::ensure!(!req.is_decode(), "decode request {} on the sharded path", req.id);
+        let Some(q) = &req.q else { continue };
+        anyhow::ensure!(
+            q.cols == k.cols,
+            "request {} head dim {} != context head dim {}",
+            req.id,
+            q.cols,
+            k.cols
+        );
+        let report = pipeline.run(&PipelineInputs::qkv(q, k, v));
+        metrics.record_stage_times(&report.timing, report.stalls);
+        metrics.record_sharded(&report);
+        outs[i] = Some(report.out);
     }
     Ok((outs, errors))
 }

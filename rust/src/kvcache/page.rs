@@ -38,6 +38,7 @@ pub struct KvPage {
 }
 
 impl KvPage {
+    /// An empty page for `capacity` tokens of head dimension `d`.
     pub fn new(capacity: usize, d: usize) -> KvPage {
         assert!(capacity > 0 && d > 0, "page must have positive capacity and head dim");
         KvPage {
@@ -52,22 +53,27 @@ impl KvPage {
         }
     }
 
+    /// Tokens currently stored.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// Whether the page holds no tokens.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// Whether another token would not fit.
     pub fn is_full(&self) -> bool {
         self.len == self.capacity
     }
 
+    /// Maximum tokens per page.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
+    /// Head dimension of the cached rows.
     pub fn d(&self) -> usize {
         self.d
     }
@@ -88,11 +94,13 @@ impl KvPage {
         self.len += 1;
     }
 
+    /// The f32 K row at in-page index `i`.
     pub fn k_row(&self, i: usize) -> &[f32] {
         debug_assert!(i < self.len);
         &self.k[i * self.d..(i + 1) * self.d]
     }
 
+    /// The f32 V row at in-page index `i`.
     pub fn v_row(&self, i: usize) -> &[f32] {
         debug_assert!(i < self.len);
         &self.v[i * self.d..(i + 1) * self.d]
@@ -175,10 +183,13 @@ pub struct PagedKvCache {
     slots: Vec<KvPage>,
     /// Slot indices available for reuse.
     free: Vec<usize>,
+    /// Lifetime counters (allocations, evictions, hits…).
     pub stats: CacheStats,
 }
 
 impl PagedKvCache {
+    /// An empty pool of `capacity_pages` pages (0 = unbounded), each
+    /// holding `page_size` tokens of head dimension `d`.
     pub fn new(page_size: usize, d: usize, capacity_pages: usize) -> PagedKvCache {
         assert!(page_size > 0 && d > 0, "page_size and d must be positive");
         PagedKvCache {
@@ -191,10 +202,12 @@ impl PagedKvCache {
         }
     }
 
+    /// Tokens per page.
     pub fn page_size(&self) -> usize {
         self.page_size
     }
 
+    /// Head dimension of the cached rows.
     pub fn d(&self) -> usize {
         self.d
     }
@@ -237,10 +250,12 @@ impl PagedKvCache {
         self.free.push(id.0);
     }
 
+    /// Read a page by id.
     pub fn get(&self, id: PageId) -> &KvPage {
         &self.slots[id.0]
     }
 
+    /// Mutate a page by id (append path).
     pub fn get_mut(&mut self, id: PageId) -> &mut KvPage {
         &mut self.slots[id.0]
     }

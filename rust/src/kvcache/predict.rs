@@ -61,6 +61,7 @@ impl QueryOperand {
         QueryOperand { raw: row.to_vec(), q, codes, scale, kind, w }
     }
 
+    /// Head dimension of the encoded row.
     pub fn d(&self) -> usize {
         self.raw.len()
     }

@@ -42,6 +42,7 @@ pub struct SessionConfig {
 }
 
 impl SessionConfig {
+    /// A config with the STAR default prediction scheme/bitwidth.
     pub fn new(page_size: usize, d: usize, capacity_pages: usize) -> SessionConfig {
         SessionConfig {
             page_size,
@@ -100,6 +101,7 @@ pub struct SessionStore {
 }
 
 impl SessionStore {
+    /// An empty store over a fresh page pool.
     pub fn new(cfg: SessionConfig) -> SessionStore {
         assert!(cfg.page_size > 0 && cfg.d > 0, "page_size and d must be positive");
         SessionStore {
@@ -111,6 +113,7 @@ impl SessionStore {
         }
     }
 
+    /// The store's construction knobs.
     pub fn config(&self) -> &SessionConfig {
         &self.cfg
     }
@@ -120,10 +123,12 @@ impl SessionStore {
         self.sessions.get(&sid).map(|s| s.len).unwrap_or(0)
     }
 
+    /// Whether the session holds no tokens (unknown ids are empty).
     pub fn is_empty(&self, sid: u64) -> bool {
         self.len(sid) == 0
     }
 
+    /// Whether the session id has ever been appended to.
     pub fn contains(&self, sid: u64) -> bool {
         self.sessions.contains_key(&sid)
     }
@@ -133,10 +138,12 @@ impl SessionStore {
         self.sessions.get(&sid).map(|s| !s.pages.is_empty()).unwrap_or(false)
     }
 
+    /// Sessions tracked (resident or evicted).
     pub fn session_count(&self) -> usize {
         self.sessions.len()
     }
 
+    /// Pages currently resident across all sessions.
     pub fn resident_pages(&self) -> usize {
         self.cache.resident_pages()
     }

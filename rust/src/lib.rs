@@ -19,7 +19,10 @@
 //!   per-stage accounting, shared by the bench harness, the native
 //!   serving backend and the examples. Its `prefill`/`decode_step`
 //!   entry points run the same stages causally for autoregressive
-//!   serving.
+//!   serving, and [`pipeline::ShardedPipeline`] runs the same stages
+//!   **sequence-sharded** across worker threads (executable
+//!   Spatial-STAR / DRAttention) with bit-identical outputs at every
+//!   worker count.
 //! * [`kvcache`] — the paged KV-cache + decode-session subsystem:
 //!   block-granular pages (sized to the pipeline tile) holding K/V rows
 //!   plus frozen per-row prediction operands, an LRU session store with
@@ -31,8 +34,11 @@
 //!   model and the FACT/Energon/ELSA/SpAtten/Simba baselines.
 //! * [`spatial`] — the 2D-mesh NoC, the MRCA communication algorithm
 //!   (Alg. 1), the DRAttention dataflow and the Ring-Attention baseline,
-//!   plus the 5×5/6×6 multi-core spatial simulator.
-//! * [`runtime`] — the PJRT engine that loads the AOT-compiled HLO-text
+//!   plus the 5×5/6×6 multi-core spatial simulator. The *analytic*
+//!   counterpart of [`pipeline::ShardedPipeline`], which executes the
+//!   same dataflow on real threads (`star bench spatial-exec`
+//!   cross-validates the two).
+//! * `runtime` — the PJRT engine that loads the AOT-compiled HLO-text
 //!   artifacts produced by `python/compile/aot.py` and executes them on the
 //!   request path (python never runs at serving time). Gated behind the
 //!   off-by-default `pjrt` cargo feature: it needs the `xla` crate, which

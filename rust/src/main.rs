@@ -6,7 +6,8 @@
 //!   spatial [--mesh 5x5]    multi-core spatial simulation
 //!   serve [--requests N]    run the LTPP serving loop (native pipeline
 //!                           by default; --sim for the simulator backend;
-//!                           PJRT artifacts with the `pjrt` feature)
+//!                           --shards N pins the sequence-sharded worker
+//!                           count; PJRT artifacts with the `pjrt` feature)
 //!   dse [--seq S]           sub-segment design-space exploration
 //!   info                    list configuration presets (and artifacts
 //!                           under the `pjrt` feature)
@@ -122,6 +123,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         req.q = Some(star::tensor::Mat::randn(t, 64, 1.0, &mut rng));
         rxs.push(server.submit(req)?);
     }
+    // One over-target prefill (t > target_t = 128): admitted onto the
+    // sequence-sharded pipeline instead of being rejected.
+    let t_wide = 192;
+    let mut wide = Request::new(n as u64, "gpt2", t_wide, 1024, 0.0);
+    wide.q = Some(star::tensor::Mat::randn(t_wide, 64, 1.0, &mut rng));
+    rxs.push(server.submit(wide)?);
     for rx in rxs {
         let _ = rx.recv();
     }
@@ -162,7 +169,10 @@ fn pick_serve_backend(args: &Args) -> Backend {
     let store = star::kvcache::SessionStore::new(star::kvcache::SessionConfig::for_pipeline(
         &pipeline, 64, 64,
     ));
+    // Over-target prefill runs sequence-sharded; `--shards N` pins the
+    // worker count (0 = one per core — outputs are identical either way).
     Backend::native_with_sessions(pipeline, contexts, store)
+        .with_shards(args.get_usize("shards", 0))
 }
 
 /// The fixed gpt2-shaped KV context both serve backends attend into.

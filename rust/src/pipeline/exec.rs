@@ -32,8 +32,11 @@ use std::time::Instant;
 /// accounting, exactly as the STAR datapath works.
 #[derive(Clone, Debug)]
 pub struct PipelineInputs<'a> {
+    /// Query rows `[T, d]`.
     pub q: &'a Mat,
+    /// Key rows `[S, d]`.
     pub k: &'a Mat,
+    /// Value rows `[S, d]`.
     pub v: &'a Mat,
     /// Input activations X `[S, H]`.
     pub x: Option<&'a Mat>,
@@ -69,14 +72,17 @@ impl<'a> PipelineInputs<'a> {
         inp
     }
 
+    /// Query rows T.
     pub fn t(&self) -> usize {
         self.q.rows
     }
 
+    /// Context length S.
     pub fn s(&self) -> usize {
         self.k.rows
     }
 
+    /// Head dimension d.
     pub fn d(&self) -> usize {
         self.q.cols
     }
@@ -127,14 +133,78 @@ impl PipelineReport {
     }
 }
 
-/// How the top-k stage obtains its scores.
-enum ScoreSource {
+/// How the top-k stage obtains its scores. Shared with the sharded
+/// engine ([`super::sharded`]) so both prologues are one code path.
+pub(crate) enum ScoreSource {
     /// No scores: selection is the full natural-order key set.
     None,
     /// Oracle: exact Q·Kᵀ (no prediction ops charged).
     Exact,
     /// Counted approximate prediction over prepared operands.
     Prepared(PreparedPredict),
+}
+
+/// The predict-stage prologue: prepare operands once, with globally
+/// chosen quantization scales. Extracted from [`SparseAttentionPipeline::run`]
+/// so the sharded pipeline runs the *identical* preparation — the
+/// global-scale contract is what keeps per-shard scoring bit-identical
+/// to single-core scoring.
+pub(crate) fn prepare_score_source(
+    cfg: &PipelineConfig,
+    inp: &PipelineInputs,
+    c: &mut OpCounter,
+) -> ScoreSource {
+    // Scores feed the top-k stage only; dense execution (topk = None)
+    // selects every key in natural order and skips prediction.
+    if cfg.topk == TopkKind::None {
+        return ScoreSource::None;
+    }
+    match cfg.predict {
+        PredictKind::None => ScoreSource::Exact,
+        PredictKind::DlzsCross => {
+            let pred = Predictor::new(PredictScheme::Dlzs, cfg.predict_bits);
+            match (inp.x, inp.wk) {
+                (Some(x), Some(wk)) => {
+                    // Phase 1.1 once; phase 1.2 runs per tile.
+                    let khat = pred.khat_phase(x, wk, c);
+                    ScoreSource::Prepared(pred.prepare(inp.q, &khat, c))
+                }
+                // No activations: plain DLZS on (Q, K).
+                _ => ScoreSource::Prepared(pred.prepare(inp.q, inp.k, c)),
+            }
+        }
+        PredictKind::Slzs => {
+            let pred = Predictor::new(PredictScheme::Slzs, cfg.predict_bits);
+            ScoreSource::Prepared(pred.prepare(inp.q, inp.k, c))
+        }
+        PredictKind::LowBitMul => {
+            let pred = Predictor::new(PredictScheme::LowBitMul, cfg.predict_bits);
+            ScoreSource::Prepared(pred.prepare(inp.q, inp.k, c))
+        }
+    }
+}
+
+/// Charge on-demand generation of `u` union KV rows from `[u, h]`
+/// activations into `d` columns. Shared by the batch tile path and the
+/// sharded home phase so the KV-gen accounting can never drift between
+/// the two engines.
+pub(crate) fn charge_on_demand_kv_gen(c: &mut OpCounter, u: usize, h: usize, d: usize) {
+    // Generate K and V rows for the union only: d columns × h MACs
+    // each, for two matrices. X rows stream on chip (int8).
+    c.tally(OpKind::Mul, 2 * (u * h * d) as u64);
+    c.tally(OpKind::Add, 2 * (u * h.saturating_sub(1) * d) as u64);
+    c.dram((u * h) as u64);
+    c.sram(2 * (2 * u * d) as u64); // generated INT16 KV tile
+}
+
+/// Reclassify the formal stage's KV share of DRAM traffic (`u` K+V rows
+/// of `d` f32 columns) as on-chip: under cross-stage tiling the formal
+/// stage streams just-generated/cached KV out of SRAM, not DRAM (Q and
+/// O still move). Shared by the tile, decode-row and sharded home paths.
+pub(crate) fn kv_traffic_on_chip(c: &mut OpCounter, u: usize, d: usize) {
+    let kv_bytes = 4 * (2 * u * d) as u64;
+    c.dram_bytes -= kv_bytes.min(c.dram_bytes);
+    c.sram(kv_bytes);
 }
 
 /// Shared read-only context for tile workers.
@@ -161,12 +231,33 @@ struct TileOut {
 }
 
 /// The composed four-stage pipeline. Construct once, run on many inputs.
+///
+/// ```
+/// use star::pipeline::{PipelineInputs, SparseAttentionPipeline};
+/// use star::tensor::Mat;
+/// use star::util::Rng;
+///
+/// let mut rng = Rng::new(1);
+/// let (q, k, v) = (
+///     Mat::randn(8, 16, 1.0, &mut rng),
+///     Mat::randn(64, 16, 1.0, &mut rng),
+///     Mat::randn(64, 16, 1.0, &mut rng),
+/// );
+/// // The paper's STAR stack (DLZS → SADS → on-demand KV → SU-FA) at keep 25%.
+/// let report = SparseAttentionPipeline::star(0.25).run(&PipelineInputs::qkv(&q, &k, &v));
+/// assert_eq!((report.out.rows, report.out.cols), (8, 16));
+/// assert_eq!(report.keep, 16);
+/// assert!(report.density(64) <= 0.25 + 1e-9);
+/// assert!(report.ops.predict.shift > 0, "DLZS prediction is multiplier-free");
+/// ```
 #[derive(Clone, Debug)]
 pub struct SparseAttentionPipeline {
     cfg: PipelineConfig,
 }
 
 impl SparseAttentionPipeline {
+    /// Build a pipeline; panics on an invalid config (servers use
+    /// [`PipelineConfig::validate`] to fail softly instead).
     pub fn new(cfg: PipelineConfig) -> SparseAttentionPipeline {
         if let Err(e) = cfg.validate() {
             panic!("invalid PipelineConfig: {e}");
@@ -179,6 +270,7 @@ impl SparseAttentionPipeline {
         SparseAttentionPipeline::new(PipelineConfig::star().with_keep(keep_ratio))
     }
 
+    /// The configuration this pipeline executes.
     pub fn config(&self) -> &PipelineConfig {
         &self.cfg
     }
@@ -194,35 +286,7 @@ impl SparseAttentionPipeline {
 
         // ---- Prologue (predict stage, once): prepare operands. ----
         let t0 = Instant::now();
-        // Scores feed the top-k stage only; dense execution (topk = None)
-        // selects every key in natural order and skips prediction.
-        let score = if self.cfg.topk == TopkKind::None {
-            ScoreSource::None
-        } else {
-            match self.cfg.predict {
-                PredictKind::None => ScoreSource::Exact,
-                PredictKind::DlzsCross => {
-                    let pred = Predictor::new(PredictScheme::Dlzs, self.cfg.predict_bits);
-                    match (inp.x, inp.wk) {
-                        (Some(x), Some(wk)) => {
-                            // Phase 1.1 once; phase 1.2 runs per tile.
-                            let khat = pred.khat_phase(x, wk, &mut ops.predict);
-                            ScoreSource::Prepared(pred.prepare(inp.q, &khat, &mut ops.predict))
-                        }
-                        // No activations: plain DLZS on (Q, K).
-                        _ => ScoreSource::Prepared(pred.prepare(inp.q, inp.k, &mut ops.predict)),
-                    }
-                }
-                PredictKind::Slzs => {
-                    let pred = Predictor::new(PredictScheme::Slzs, self.cfg.predict_bits);
-                    ScoreSource::Prepared(pred.prepare(inp.q, inp.k, &mut ops.predict))
-                }
-                PredictKind::LowBitMul => {
-                    let pred = Predictor::new(PredictScheme::LowBitMul, self.cfg.predict_bits);
-                    ScoreSource::Prepared(pred.prepare(inp.q, inp.k, &mut ops.predict))
-                }
-            }
-        };
+        let score = prepare_score_source(&self.cfg, inp, &mut ops.predict);
         let kt = match score {
             ScoreSource::Exact => Some(inp.k.transpose()),
             _ => None,
@@ -499,12 +563,12 @@ fn parallel_tiles<T: Send>(
     }
 }
 
-/// Formal-compute dispatch shared by the batch tile path and the decode
-/// row path: SU-FA (descending/ascending), the FA-2 approximation
-/// (ascending SU-FA plus `fa2_cmp` cross-tile max comparisons — the
-/// Fig. 18a baseline accounting), or the dense masked softmax. Returns
-/// (output, stalls).
-fn formal_compute(
+/// Formal-compute dispatch shared by the batch tile path, the decode
+/// row path and the sharded engine: SU-FA (descending/ascending), the
+/// FA-2 approximation (ascending SU-FA plus `fa2_cmp` cross-tile max
+/// comparisons — the Fig. 18a baseline accounting), or the dense masked
+/// softmax. Returns (output, stalls).
+pub(crate) fn formal_compute(
     cfg: &PipelineConfig,
     inp: &AttnInputs,
     sel: &Selection,
@@ -600,9 +664,7 @@ fn decode_row(
     let csel = Selection { rows: vec![remapped] };
     let (out_row, stalls) = formal_compute(cfg, &tile_inp, &csel, keep as u64, &mut ops.formal);
     // The formal stage's KV traffic came from the cache, not DRAM.
-    let kv_bytes = 4 * (2 * u * d) as u64;
-    ops.formal.dram_bytes -= kv_bytes.min(ops.formal.dram_bytes);
-    ops.formal.sram(kv_bytes);
+    kv_traffic_on_chip(&mut ops.formal, u, d);
     timing.formal_s += t0.elapsed().as_secs_f64();
 
     DecodeRowOut {
@@ -681,13 +743,7 @@ fn run_tile(ctx: &TileCtx, ti: usize) -> TileOut {
     let u = union.len();
     let on_demand = cfg.on_demand_kv && inp.x.is_some() && inp.wk.is_some() && inp.wv.is_some();
     if on_demand {
-        let h = inp.x.unwrap().cols;
-        // Generate K and V rows for the union only: d columns × h MACs
-        // each, for two matrices. X rows stream on chip (int8).
-        ops.kv_gen.tally(OpKind::Mul, 2 * (u * h * d) as u64);
-        ops.kv_gen.tally(OpKind::Add, 2 * (u * h.saturating_sub(1) * d) as u64);
-        ops.kv_gen.dram((u * h) as u64);
-        ops.kv_gen.sram(2 * (2 * u * d) as u64); // generated INT16 KV tile
+        charge_on_demand_kv_gen(&mut ops.kv_gen, u, inp.x.unwrap().cols, d);
     }
     timing.kv_gen_s += t0.elapsed().as_secs_f64();
 
@@ -698,12 +754,7 @@ fn run_tile(ctx: &TileCtx, ti: usize) -> TileOut {
     let (out, stalls) =
         formal_compute(cfg, &tile_inp, &sel, (rows * ctx.keep) as u64, &mut ops.formal);
     if on_demand {
-        // Under the cross-stage tiled dataflow the formal stage streams
-        // the just-generated KV from SRAM, not DRAM: reclassify the KV
-        // share of the formal stage's traffic (Q and O still move).
-        let kv_bytes = 4 * (2 * u * d) as u64;
-        ops.formal.dram_bytes -= kv_bytes.min(ops.formal.dram_bytes);
-        ops.formal.sram(kv_bytes);
+        kv_traffic_on_chip(&mut ops.formal, u, d);
     }
     timing.formal_s += t0.elapsed().as_secs_f64();
 

@@ -18,17 +18,27 @@
 //!   stages *causally* over a [`crate::kvcache::SessionStore`] — cached
 //!   prediction operands and KV pages instead of per-run preparation,
 //!   with N single-token steps bit-identical to one length-N prefill.
+//! * [`sharded`] — [`ShardedPipeline`]: **executable Spatial-STAR**.
+//!   Prefill for sequences beyond one worker's reach runs the
+//!   DRAttention dataflow for real: the KV/context dimension is
+//!   partitioned across N snake-placed workers, Q sub-blocks circulate
+//!   on a thread ring, top-k merges distributedly, and the gathered
+//!   formal stage reproduces the single-core output **bit for bit** at
+//!   every worker count (`rust/tests/prop_sharded_parity.rs`).
 //! * [`report`] — per-stage [`StageOps`] counters and [`StageTiming`]
 //!   breakdowns aggregated across tiles.
 //!
 //! Every layer runs sparse attention through this module: the bench
-//! harness ([`crate::bench::algorithm`]), the native serving backend
+//! harness ([`crate::bench::algorithm`],
+//! [`crate::bench::spatial_exec`]), the native serving backend
 //! ([`crate::coordinator::server::Backend::Native`]) and the examples.
 
 pub mod config;
 pub mod exec;
 pub mod report;
+pub mod sharded;
 
 pub use config::PipelineConfig;
 pub use exec::{DecodeReport, PipelineInputs, PipelineReport, SparseAttentionPipeline};
 pub use report::{StageOps, StageTiming};
+pub use sharded::{ShardPlan, ShardStats, ShardedPipeline, ShardedReport};

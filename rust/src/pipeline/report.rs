@@ -6,9 +6,13 @@ use crate::arith::{EquivWeights, OpCounter};
 /// Operation counters per pipeline stage.
 #[derive(Clone, Debug, Default)]
 pub struct StageOps {
+    /// Prediction-stage ops (quantize/encode/score).
     pub predict: OpCounter,
+    /// Top-k-stage ops (comparisons).
     pub topk: OpCounter,
+    /// KV-generation ops (on-demand MACs, cache traffic).
     pub kv_gen: OpCounter,
+    /// Formal-compute ops (SU-FA / FA-2 / dense).
     pub formal: OpCounter,
 }
 
@@ -41,13 +45,18 @@ impl StageOps {
 /// end-to-end wall clock); ratios between stages remain meaningful.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StageTiming {
+    /// Prediction-stage busy time, seconds.
     pub predict_s: f64,
+    /// Top-k-stage busy time, seconds.
     pub topk_s: f64,
+    /// KV-generation busy time, seconds.
     pub kv_gen_s: f64,
+    /// Formal-compute busy time, seconds.
     pub formal_s: f64,
 }
 
 impl StageTiming {
+    /// Add another breakdown into this one (tile/worker aggregation).
     pub fn merge(&mut self, other: &StageTiming) {
         self.predict_s += other.predict_s;
         self.topk_s += other.topk_s;

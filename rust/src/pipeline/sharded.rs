@@ -1,0 +1,752 @@
+//! [`ShardedPipeline`] — **executable Spatial-STAR**: sequence-sharded
+//! multi-worker prefill running the DRAttention dataflow for real
+//! (threads and channels), not just analytically ([`crate::spatial`]).
+//!
+//! The serving problem it solves: the single-core
+//! [`super::SparseAttentionPipeline`] executes a whole request on one
+//! logical core, so the batcher's `target_t` caps the query rows one
+//! request may carry. This engine partitions the **KV/context dimension**
+//! across N workers (each owning a contiguous key range, placed on a
+//! logical mesh in snake order — [`crate::spatial::snake_coords`]) and
+//! circulates **Q sub-blocks** around the worker ring, exactly as
+//! DRAttention circulates Q while X/KV stays column-resident
+//! (Sec. V-B-1). Per ring step a worker runs the *local* half of the
+//! stages for the visiting block — predict over its key range, the SADS
+//! per-segment pass over its sub-segments — and forwards the block (with
+//! its accumulated candidate state, the executable stand-in for the
+//! circulating running-softmax payload) to its ring neighbor. After N
+//! steps the block is home with every shard's candidates; the home
+//! worker then
+//!
+//! 1. **merges** the distributed top-k ([`crate::sparsity::sads_merge`]
+//!    for SADS, [`crate::sparsity::merge_topk_candidates`] for the exact
+//!    engines) into the global per-row selection,
+//! 2. **gathers** the selected KV rows from their owning shards (the
+//!    sparse win: only `keep ≪ S` rows per query cross the ring), and
+//! 3. runs the **formal stage** (SU-FA) over the gathered rows in the
+//!    merged order.
+//!
+//! # The bit-identity contract
+//!
+//! Output, selection and stalls equal the single-core
+//! [`super::SparseAttentionPipeline::run`] **bit for bit, for every
+//! worker count** (`rust/tests/prop_sharded_parity.rs`). Three design
+//! decisions carry the proof:
+//!
+//! * **Global quantization.** The predict prologue is the *same code*
+//!   as the single-core path ([`super::exec`]'s score-source
+//!   preparation): operand scales are chosen from the full tensors, so
+//!   a shard scoring its key sub-range computes the identical dot
+//!   products ([`crate::sparsity::PreparedPredict::score_block`]).
+//! * **Segment-aligned sharding.** Key ranges are unions of whole SADS
+//!   sub-segments ([`crate::sparsity::sads_geometry`]), so each worker
+//!   runs the per-segment pass on exactly the slices the single-core
+//!   SADS would form, and the merge — whose tie-breaking depends only
+//!   on the global segment order — is shard-count invariant.
+//! * **Order-preserving gather.** The formal stage consumes the merged
+//!   selection remapped monotonically onto the gathered rows, so SU-FA
+//!   visits the same key *values* in the same order as the single-core
+//!   run over the full K/V — the same float sequence, stalls included.
+
+use super::config::PipelineConfig;
+use super::exec::{
+    charge_on_demand_kv_gen, formal_compute, kv_traffic_on_chip, prepare_score_source,
+    PipelineInputs, ScoreSource,
+};
+use super::report::{StageOps, StageTiming};
+use crate::attention::{AttnInputs, Selection};
+use crate::sim::pipeline::TopkKind;
+use crate::sparsity::topk::{
+    merge_topk_candidates, sads_geometry, sads_merge, sads_segment_winners, vanilla_topk,
+    SegmentWinners,
+};
+use crate::spatial::drattention::q_payload_bytes;
+use crate::spatial::mesh::{snake_coords, Coord};
+use crate::tensor::Mat;
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+/// How one sharded run partitions keys, queries and workers.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// Contiguous, ascending `[lo, hi)` key ranges, one per worker.
+    pub key_ranges: Vec<(usize, usize)>,
+    /// Global SADS sub-segment id range `[lo, hi)` per worker (all
+    /// `(0, 0)` when the top-k engine is not SADS).
+    pub seg_ranges: Vec<(usize, usize)>,
+    /// SADS sub-segment length (0 when SADS is off).
+    pub seg_len: usize,
+    /// Q sub-block row ranges, one per worker; block `b` is *homed* on
+    /// worker `b` and circulates from there.
+    pub q_blocks: Vec<(usize, usize)>,
+    /// Snake-ordered mesh placement, one coordinate per worker.
+    pub coords: Vec<Coord>,
+}
+
+impl ShardPlan {
+    /// Partition `t` query rows and `s` keys for `requested` workers
+    /// (0 = `available_parallelism`). The worker count is clamped so
+    /// every key range is non-empty, and — when SADS is the top-k
+    /// engine — so ranges align with whole sub-segments (the atomic
+    /// unit that keeps distributed selection bit-identical).
+    pub fn new(cfg: &PipelineConfig, t: usize, s: usize, requested: usize) -> ShardPlan {
+        let req = match requested {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            n => n,
+        }
+        .max(1);
+        let (key_ranges, seg_ranges, seg_len) = if cfg.topk == TopkKind::Sads {
+            let (nseg, seg_len) = sads_geometry(s, &cfg.sads);
+            let w = req.min(nseg.max(1));
+            let mut keys = Vec::with_capacity(w);
+            let mut segs = Vec::with_capacity(w);
+            for j in 0..w {
+                let (slo, shi) = (j * nseg / w, (j + 1) * nseg / w);
+                segs.push((slo, shi));
+                keys.push((slo * seg_len, (shi * seg_len).min(s)));
+            }
+            (keys, segs, seg_len)
+        } else {
+            let w = req.min(s.max(1));
+            let keys = (0..w).map(|j| (j * s / w, (j + 1) * s / w)).collect();
+            (keys, vec![(0, 0); w], 0)
+        };
+        let w = key_ranges.len();
+        let q_blocks = (0..w).map(|j| (j * t / w, (j + 1) * t / w)).collect();
+        // Square-ish logical mesh, snake-filled so ring neighbors are
+        // mesh neighbors.
+        let cols = (w as f64).sqrt().ceil() as usize;
+        let rows = w.div_ceil(cols.max(1));
+        let mut coords = snake_coords(rows, cols.max(1));
+        coords.truncate(w);
+        ShardPlan { key_ranges, seg_ranges, seg_len, q_blocks, coords }
+    }
+
+    /// Effective worker count (after clamping).
+    pub fn workers(&self) -> usize {
+        self.key_ranges.len()
+    }
+}
+
+/// One worker's contribution, carried in the circulating payload.
+#[derive(Clone, Debug, Default)]
+struct RowCandidates {
+    /// SADS: per-sub-segment winner lists (global segment ids).
+    sads: Vec<SegmentWinners>,
+    /// Exact engines: `(score, global key index)` proposals, in
+    /// per-shard extraction order (the home merge sorts by index).
+    exact: Vec<(f32, usize)>,
+}
+
+/// The circulating Q sub-block: row range plus accumulated candidates —
+/// the executable counterpart of DRAttention's Q + running-state
+/// payload.
+struct QBlockPayload {
+    block: usize,
+    lo: usize,
+    hi: usize,
+    rows: Vec<RowCandidates>,
+}
+
+impl QBlockPayload {
+    fn home(block: usize, lo: usize, hi: usize) -> QBlockPayload {
+        QBlockPayload { block, lo, hi, rows: vec![RowCandidates::default(); hi - lo] }
+    }
+
+    /// Modeled wire size: the Q sub-block + running softmax state
+    /// ([`q_payload_bytes`]) plus ~8 bytes per accumulated candidate.
+    fn wire_bytes(&self, d: usize) -> u64 {
+        let cands: usize = self
+            .rows
+            .iter()
+            .map(|r| r.exact.len() + r.sads.iter().map(|l| l.winners.len()).sum::<usize>())
+            .sum();
+        q_payload_bytes(self.hi - self.lo, d) + 8 * cands as u64
+    }
+}
+
+/// Per-worker execution statistics of one sharded run.
+#[derive(Clone, Debug)]
+pub struct ShardStats {
+    /// Worker index (= ring position).
+    pub shard: usize,
+    /// Snake-order mesh placement.
+    pub coord: Coord,
+    /// Owned key range start (inclusive).
+    pub key_lo: usize,
+    /// Owned key range end (exclusive).
+    pub key_hi: usize,
+    /// Query rows homed on this worker.
+    pub q_rows: usize,
+    /// Stage busy times on this worker (local passes + home phase).
+    pub timing: StageTiming,
+    /// Ring payloads this worker forwarded.
+    pub ring_sends: u64,
+    /// Modeled bytes of those payloads.
+    pub payload_bytes: u64,
+}
+
+/// Result of one [`ShardedPipeline::run`].
+#[derive(Clone, Debug)]
+pub struct ShardedReport {
+    /// Attention output `[T, d]` — bit-identical to the single-core
+    /// pipeline's output on the same inputs.
+    pub out: Mat,
+    /// Per-row key selections (absolute indices, merged order).
+    pub selection: Selection,
+    /// Per-stage operation counters summed over all workers.
+    pub ops: StageOps,
+    /// Per-stage busy times summed over all workers.
+    pub timing: StageTiming,
+    /// End-to-end wall time, seconds.
+    pub wall_s: f64,
+    /// SU-FA max-misprediction recoveries.
+    pub stalls: u64,
+    /// KV rows gathered, summed per Q block's union.
+    pub union_rows: usize,
+    /// Mean SADS survivor fraction ρ (0 when SADS did not run).
+    pub rho_mean: f64,
+    /// Keys kept per row.
+    pub keep: usize,
+    /// Effective worker count.
+    pub shards: usize,
+    /// Ring steps executed (= worker count; each block visits every
+    /// shard once, plus the homecoming hop folded into the last step).
+    pub ring_steps: usize,
+    /// Modeled bytes forwarded on the ring across all workers.
+    pub ring_payload_bytes: u64,
+    /// Per-worker statistics, ascending shard index.
+    pub per_shard: Vec<ShardStats>,
+}
+
+impl ShardedReport {
+    /// Selection density relative to dense `T × S` attention.
+    pub fn density(&self, s: usize) -> f64 {
+        self.selection.density(s)
+    }
+}
+
+/// One home worker's finished block plus that worker's statistics.
+struct WorkerOut {
+    block: usize,
+    lo: usize,
+    out: Mat,
+    sel_rows: Vec<Vec<usize>>,
+    ops: StageOps,
+    timing: StageTiming,
+    stalls: u64,
+    union_rows: usize,
+    rho_sum: f64,
+    rho_n: usize,
+    ring_sends: u64,
+    payload_bytes: u64,
+}
+
+/// Shared read-only context for the worker threads.
+struct ShardCtx<'a> {
+    cfg: &'a PipelineConfig,
+    inp: &'a PipelineInputs<'a>,
+    score: &'a ScoreSource,
+    /// K pre-transposed, for the oracle score path only.
+    kt: Option<&'a Mat>,
+    plan: &'a ShardPlan,
+    keep: usize,
+    /// SADS per-segment quota ⌈k/n⌉ (computed for every config; read
+    /// only when the top-k engine is SADS).
+    per_seg: usize,
+    s: usize,
+    d: usize,
+}
+
+/// The sequence-sharded pipeline. Construct once, run on many inputs;
+/// the worker count never changes the math (see module docs), only the
+/// wall clock.
+///
+/// ```
+/// use star::pipeline::{PipelineConfig, PipelineInputs, ShardedPipeline,
+///     SparseAttentionPipeline};
+/// use star::tensor::Mat;
+/// use star::util::Rng;
+///
+/// let mut rng = Rng::new(7);
+/// let (q, k, v) = (
+///     Mat::randn(12, 16, 1.0, &mut rng),
+///     Mat::randn(96, 16, 1.0, &mut rng),
+///     Mat::randn(96, 16, 1.0, &mut rng),
+/// );
+/// let inputs = PipelineInputs::qkv(&q, &k, &v);
+/// let cfg = PipelineConfig::star().with_keep(0.25).with_threads(1);
+/// let single = SparseAttentionPipeline::new(cfg).run(&inputs);
+/// let sharded = ShardedPipeline::new(cfg, 4).run(&inputs);
+/// assert_eq!(sharded.out.max_abs_diff(&single.out), 0.0);
+/// assert_eq!(sharded.selection, single.selection);
+/// assert!(sharded.shards >= 1 && sharded.ring_steps == sharded.shards);
+/// ```
+#[derive(Clone, Debug)]
+pub struct ShardedPipeline {
+    cfg: PipelineConfig,
+    shards: usize,
+}
+
+impl ShardedPipeline {
+    /// Build a sharded pipeline with `shards` workers (0 = one worker
+    /// per available core). Panics on an invalid config, like
+    /// [`super::SparseAttentionPipeline::new`].
+    pub fn new(cfg: PipelineConfig, shards: usize) -> ShardedPipeline {
+        if let Err(e) = cfg.validate() {
+            panic!("invalid PipelineConfig: {e}");
+        }
+        ShardedPipeline { cfg, shards }
+    }
+
+    /// The paper's STAR configuration at the given keep ratio.
+    pub fn star(keep_ratio: f64, shards: usize) -> ShardedPipeline {
+        ShardedPipeline::new(PipelineConfig::star().with_keep(keep_ratio), shards)
+    }
+
+    /// The configuration every worker executes.
+    pub fn config(&self) -> &PipelineConfig {
+        &self.cfg
+    }
+
+    /// Requested worker count (0 = auto).
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The partition this pipeline would use for a `t × s` problem.
+    pub fn plan(&self, t: usize, s: usize) -> ShardPlan {
+        ShardPlan::new(&self.cfg, t, s, self.shards)
+    }
+
+    /// Execute sequence-sharded prefill. Output, selection and stalls
+    /// are bit-identical to [`super::SparseAttentionPipeline::run`] on
+    /// the same inputs, for every worker count.
+    pub fn run(&self, inp: &PipelineInputs) -> ShardedReport {
+        let started = Instant::now();
+        let (t, s, d) = (inp.t(), inp.s(), inp.d());
+        let keep = self.cfg.keep(s);
+        let mut ops = StageOps::default();
+        let mut timing = StageTiming::default();
+
+        if t == 0 || s == 0 {
+            return ShardedReport {
+                out: Mat::zeros(t, d),
+                selection: Selection { rows: vec![Vec::new(); t] },
+                ops,
+                timing,
+                wall_s: started.elapsed().as_secs_f64(),
+                stalls: 0,
+                union_rows: 0,
+                rho_mean: 0.0,
+                keep,
+                shards: 0,
+                ring_steps: 0,
+                ring_payload_bytes: 0,
+                per_shard: Vec::new(),
+            };
+        }
+
+        // ---- Prologue: identical operand preparation (global scales)
+        // as the single-core pipeline — the quantization half of the
+        // bit-identity contract. ----
+        let t0 = Instant::now();
+        let score = prepare_score_source(&self.cfg, inp, &mut ops.predict);
+        let kt = match score {
+            ScoreSource::Exact => Some(inp.k.transpose()),
+            _ => None,
+        };
+        timing.predict_s += t0.elapsed().as_secs_f64();
+
+        let plan = self.plan(t, s);
+        let w = plan.workers();
+        let n_for_quota = self.cfg.sads.segments.max(1).min(s);
+        let ctx = ShardCtx {
+            cfg: &self.cfg,
+            inp,
+            score: &score,
+            kt: kt.as_ref(),
+            plan: &plan,
+            keep,
+            per_seg: keep.min(s).div_ceil(n_for_quota),
+            s,
+            d,
+        };
+
+        // ---- Ring circulation: one thread per worker, mpsc links to
+        // the next ring neighbor. Every thread computes its local pass
+        // on the payload it holds, forwards it, and receives the next —
+        // after `w` steps each block has visited every shard and is
+        // back home for merge + gather + formal. ----
+        let mut outs: Vec<WorkerOut> = std::thread::scope(|scope| {
+            let (txs, rxs): (Vec<_>, Vec<_>) =
+                (0..w).map(|_| channel::<QBlockPayload>()).unzip();
+            let ctx = &ctx;
+            let mut handles = Vec::with_capacity(w);
+            for (j, rx) in rxs.into_iter().enumerate() {
+                let tx_next = txs[(j + 1) % w].clone();
+                handles.push(scope.spawn(move || {
+                    let mut my_ops = StageOps::default();
+                    let mut my_timing = StageTiming::default();
+                    let (blo, bhi) = ctx.plan.q_blocks[j];
+                    let mut payload = QBlockPayload::home(j, blo, bhi);
+                    let mut ring_sends = 0u64;
+                    let mut payload_bytes = 0u64;
+                    for _step in 0..w {
+                        shard_local_pass(ctx, j, &mut payload, &mut my_ops, &mut my_timing);
+                        if w > 1 {
+                            payload_bytes += payload.wire_bytes(ctx.d);
+                            ring_sends += 1;
+                            tx_next.send(payload).expect("ring receiver alive");
+                            payload = rx.recv().expect("ring sender alive");
+                        }
+                    }
+                    debug_assert_eq!(payload.block, j, "payload did not come home");
+                    home_phase(ctx, payload, my_ops, my_timing, ring_sends, payload_bytes)
+                }));
+            }
+            drop(txs);
+            handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
+        });
+        outs.sort_by_key(|o| o.block);
+
+        // ---- Merge worker results in block order. ----
+        let mut out = Mat::zeros(t, d);
+        let mut sel_rows = Vec::with_capacity(t);
+        let mut stalls = 0u64;
+        let mut union_rows = 0usize;
+        let (mut rho_sum, mut rho_n) = (0.0, 0usize);
+        let mut ring_payload_bytes = 0u64;
+        let mut per_shard = Vec::with_capacity(w);
+        for o in outs {
+            for i in 0..o.out.rows {
+                out.row_mut(o.lo + i).copy_from_slice(o.out.row(i));
+            }
+            sel_rows.extend(o.sel_rows);
+            ops.merge(&o.ops);
+            timing.merge(&o.timing);
+            stalls += o.stalls;
+            union_rows += o.union_rows;
+            rho_sum += o.rho_sum;
+            rho_n += o.rho_n;
+            ring_payload_bytes += o.payload_bytes;
+            let (key_lo, key_hi) = plan.key_ranges[o.block];
+            per_shard.push(ShardStats {
+                shard: o.block,
+                coord: plan.coords[o.block],
+                key_lo,
+                key_hi,
+                q_rows: o.out.rows,
+                timing: o.timing,
+                ring_sends: o.ring_sends,
+                payload_bytes: o.payload_bytes,
+            });
+        }
+
+        ShardedReport {
+            out,
+            selection: Selection { rows: sel_rows },
+            ops,
+            timing,
+            wall_s: started.elapsed().as_secs_f64(),
+            stalls,
+            union_rows,
+            rho_mean: if rho_n > 0 { rho_sum / rho_n as f64 } else { 0.0 },
+            keep,
+            shards: w,
+            ring_steps: w,
+            ring_payload_bytes,
+            per_shard,
+        }
+    }
+}
+
+/// One ring step on worker `j`: run the shard-local halves of the
+/// predict and top-k stages for the visiting Q sub-block, over this
+/// worker's key range only.
+fn shard_local_pass(
+    ctx: &ShardCtx,
+    j: usize,
+    payload: &mut QBlockPayload,
+    ops: &mut StageOps,
+    timing: &mut StageTiming,
+) {
+    if ctx.cfg.topk == TopkKind::None || payload.hi == payload.lo {
+        return; // dense execution needs no scores; empty block carries nothing
+    }
+    let (lo, hi) = (payload.lo, payload.hi);
+    let (key_lo, key_hi) = ctx.plan.key_ranges[j];
+    let rows = hi - lo;
+    let kw = key_hi - key_lo;
+    let d = ctx.d;
+
+    // ---- Predict (local): score this block's rows against the owned
+    // key range. Bit-identical to the same elements of the single-core
+    // estimate (global scales / independent dot products). ----
+    let t0 = Instant::now();
+    let est: Mat = match ctx.score {
+        ScoreSource::None => unreachable!("topk != None implies a score source"),
+        ScoreSource::Exact => {
+            // Oracle scores: exact logits, nothing charged. matmul_cols
+            // slices the single-core q_tile × Kᵀ product bit for bit
+            // (one shared kernel, not two loops kept in sync by hand).
+            let q_block = Mat::from_fn(rows, d, |i, p| ctx.inp.q.at(lo + i, p));
+            let kt = ctx.kt.expect("kt prepared for oracle scores");
+            let mut e = q_block.matmul_cols(kt, key_lo, key_hi);
+            e.scale(ctx.inp.scale);
+            e
+        }
+        ScoreSource::Prepared(prep) => {
+            let mut e = prep.score_block(lo, hi, key_lo, key_hi, &mut ops.predict);
+            e.scale(ctx.inp.scale);
+            e
+        }
+    };
+    timing.predict_s += t0.elapsed().as_secs_f64();
+
+    // ---- Top-k (local): propose candidates from the owned range. ----
+    let t0 = Instant::now();
+    match ctx.cfg.topk {
+        TopkKind::None => unreachable!(),
+        TopkKind::Sads => {
+            let (seg_lo, seg_hi) = ctx.plan.seg_ranges[j];
+            let seg_len = ctx.plan.seg_len;
+            for i in 0..rows {
+                let row = est.row(i);
+                for seg in seg_lo..seg_hi {
+                    let glo = seg * seg_len;
+                    let ghi = (glo + seg_len).min(ctx.s);
+                    payload.rows[i].sads.push(sads_segment_winners(
+                        &row[glo - key_lo..ghi - key_lo],
+                        glo,
+                        seg,
+                        ctx.per_seg,
+                        ctx.cfg.sads.radius,
+                        &mut ops.topk,
+                    ));
+                }
+            }
+        }
+        // Threshold engines execute as vanilla selection, as in the
+        // single-core pipeline (see PipelineConfig docs).
+        TopkKind::Vanilla | TopkKind::Threshold => {
+            for i in 0..rows {
+                let local = vanilla_topk(est.row(i), ctx.keep.min(kw), &mut ops.topk);
+                // Proposal order is irrelevant here: the home phase sorts
+                // the full accumulated list by global index (the tie
+                // contract) before merging.
+                payload.rows[i]
+                    .exact
+                    .extend(local.into_iter().map(|jj| (est.at(i, jj), key_lo + jj)));
+            }
+        }
+    }
+    timing.topk_s += t0.elapsed().as_secs_f64();
+}
+
+/// The home phase for a block that has visited every shard: merge the
+/// distributed top-k, gather the selected KV rows, run the formal stage
+/// in the merged order.
+fn home_phase(
+    ctx: &ShardCtx,
+    payload: QBlockPayload,
+    mut ops: StageOps,
+    mut timing: StageTiming,
+    ring_sends: u64,
+    payload_bytes: u64,
+) -> WorkerOut {
+    let (lo, hi, block) = (payload.lo, payload.hi, payload.block);
+    let rows = hi - lo;
+    let (s, d) = (ctx.s, ctx.d);
+
+    // ---- Top-k (merge): the global budget over all shards' proposals.
+    let t0 = Instant::now();
+    let (mut rho_sum, mut rho_n) = (0.0, 0usize);
+    let mut sel_rows: Vec<Vec<usize>> = Vec::with_capacity(rows);
+    for mut rc in payload.rows {
+        match ctx.cfg.topk {
+            TopkKind::None => sel_rows.push((0..s).collect()),
+            TopkKind::Sads => {
+                // Ascending segment order restores the single-core merge's
+                // tie-breaking regardless of the ring visit order.
+                rc.sads.sort_by_key(|l| l.seg);
+                let survivors: usize = rc.sads.iter().map(|l| l.survivors).sum();
+                rho_sum += survivors as f64 / s as f64;
+                rho_n += 1;
+                let (sel, _) = sads_merge(&rc.sads, ctx.keep.min(s), &mut ops.topk);
+                sel_rows.push(sel);
+            }
+            TopkKind::Vanilla | TopkKind::Threshold => {
+                rc.exact.sort_by_key(|&(_, idx)| idx);
+                sel_rows.push(merge_topk_candidates(&rc.exact, ctx.keep, &mut ops.topk));
+            }
+        }
+    }
+    timing.topk_s += t0.elapsed().as_secs_f64();
+
+    // ---- KV gen + gather: produce the union of selected rows on their
+    // owning shards and stream them to this home worker — only the
+    // union crosses the ring (the sparse-attention win).
+    let t0 = Instant::now();
+    let sel = Selection { rows: sel_rows };
+    let union = sel.union_keys(s);
+    let u = union.len();
+    let inp = ctx.inp;
+    let on_demand = ctx.cfg.on_demand_kv && inp.x.is_some() && inp.wk.is_some() && inp.wv.is_some();
+    if on_demand {
+        // Union KV rows are generated on their owning shards; the charge
+        // is the single-core stage-3 accounting, shared so it cannot
+        // drift between the engines.
+        charge_on_demand_kv_gen(&mut ops.kv_gen, u, inp.x.unwrap().cols, d);
+    }
+    // When every key is selected (dense execution, keep = 1.0) the
+    // gather is the identity: attend the original K/V directly instead
+    // of copying the whole context per Q block.
+    let identity_union = u == s;
+    let gathered: Option<(Mat, Mat)> = if identity_union {
+        None
+    } else {
+        let mut ku = Mat::zeros(u, d);
+        let mut vu = Mat::zeros(u, d);
+        for (i, &key) in union.iter().enumerate() {
+            ku.row_mut(i).copy_from_slice(inp.k.row(key));
+            vu.row_mut(i).copy_from_slice(inp.v.row(key));
+        }
+        Some((ku, vu))
+    };
+    timing.kv_gen_s += t0.elapsed().as_secs_f64();
+
+    // ---- Formal: SU-FA over the gathered rows, selection remapped
+    // monotonically (ascending union order) so the per-key visit order
+    // — and therefore every float — matches the single-core run. An
+    // identity union needs no remap: positions already equal indices.
+    let t0 = Instant::now();
+    let remapped: Selection;
+    let formal_sel: &Selection = if identity_union {
+        &sel
+    } else {
+        remapped = Selection {
+            rows: sel
+                .rows
+                .iter()
+                .map(|row| {
+                    row.iter()
+                        .map(|&jj| union.binary_search(&jj).expect("selected key in union"))
+                        .collect()
+                })
+                .collect(),
+        };
+        &remapped
+    };
+    let q_block = Mat::from_fn(rows, d, |i, jj| inp.q.at(lo + i, jj));
+    let (kk, vv): (&Mat, &Mat) = match &gathered {
+        Some((ku, vu)) => (ku, vu),
+        None => (inp.k, inp.v),
+    };
+    let block_inp = AttnInputs { q: &q_block, k: kk, v: vv, scale: inp.scale };
+    let (out, stalls) =
+        formal_compute(ctx.cfg, &block_inp, formal_sel, (rows * ctx.keep) as u64, &mut ops.formal);
+    if on_demand {
+        // Under the sharded dataflow the formal stage streams the
+        // gathered KV out of on-chip buffers, not DRAM.
+        kv_traffic_on_chip(&mut ops.formal, u, d);
+    }
+    timing.formal_s += t0.elapsed().as_secs_f64();
+
+    WorkerOut {
+        block,
+        lo,
+        out,
+        sel_rows: sel.rows,
+        ops,
+        timing,
+        stalls,
+        union_rows: u,
+        rho_sum,
+        rho_n,
+        ring_sends,
+        payload_bytes,
+    }
+}
+
+// The parity contract (bit-identical to the single-core pipeline across
+// worker counts, tile sizes and sequence lengths) lives in
+// `rust/tests/prop_sharded_parity.rs`; the unit tests here cover the
+// partitioning geometry the contract rests on.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_aligns_with_sads_segments() {
+        let cfg = PipelineConfig::star(); // 4 sub-segments
+        for s in [64usize, 130, 257] {
+            for req in [1usize, 2, 3, 4, 9] {
+                let plan = ShardPlan::new(&cfg, 32, s, req);
+                let w = plan.workers();
+                assert!(w <= 4, "clamped to the segment count");
+                let (nseg, seg_len) = sads_geometry(s, &cfg.sads);
+                // Ranges tile 0..s contiguously and start on segment
+                // boundaries.
+                let mut at = 0usize;
+                let mut segs = 0usize;
+                for (j, &(lo, hi)) in plan.key_ranges.iter().enumerate() {
+                    assert_eq!(lo, at, "s={s} req={req}: gap before shard {j}");
+                    assert!(hi > lo, "s={s} req={req}: empty shard {j}");
+                    assert_eq!(lo % seg_len, 0, "s={s} req={req}: misaligned shard {j}");
+                    let (slo, shi) = plan.seg_ranges[j];
+                    assert_eq!(slo * seg_len, lo);
+                    segs += shi - slo;
+                    at = hi;
+                }
+                assert_eq!(at, s);
+                assert_eq!(segs, nseg, "every segment owned exactly once");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_covers_queries_and_mesh() {
+        let cfg = PipelineConfig::star();
+        let plan = ShardPlan::new(&cfg, 50, 256, 4);
+        let w = plan.workers();
+        assert_eq!(w, 4);
+        assert_eq!(plan.coords.len(), w);
+        // Q blocks tile 0..t; ring neighbors are mesh neighbors.
+        let mut at = 0;
+        for &(lo, hi) in &plan.q_blocks {
+            assert_eq!(lo, at);
+            at = hi;
+        }
+        assert_eq!(at, 50);
+        for pair in plan.coords.windows(2) {
+            assert_eq!(pair[0].manhattan(&pair[1]), 1, "snake placement broken");
+        }
+    }
+
+    #[test]
+    fn dense_and_exact_plans_split_evenly() {
+        let cfg = PipelineConfig::dense_oracle();
+        let plan = ShardPlan::new(&cfg, 16, 103, 4);
+        assert_eq!(plan.workers(), 4);
+        let mut at = 0;
+        for &(lo, hi) in &plan.key_ranges {
+            assert_eq!(lo, at);
+            assert!(hi - lo >= 103 / 4);
+            at = hi;
+        }
+        assert_eq!(at, 103);
+    }
+
+    #[test]
+    fn empty_problems_short_circuit() {
+        let pipe = ShardedPipeline::star(0.2, 4);
+        let q = Mat::zeros(0, 8);
+        let k = Mat::zeros(16, 8);
+        let v = Mat::zeros(16, 8);
+        let r = pipe.run(&PipelineInputs::qkv(&q, &k, &v));
+        assert_eq!(r.out.rows, 0);
+        assert_eq!(r.shards, 0);
+        assert_eq!(r.ring_steps, 0);
+    }
+}

@@ -6,7 +6,9 @@
 //!   Q; SLZS and low-bit-multiply baselines for comparison.
 //! * [`topk`] — the top-k stage: vanilla per-row selection (O(S·S·k)) and
 //!   SADS distributed sorting with sphere-radius early termination
-//!   (Sec. IV-B), both with comparison accounting.
+//!   (Sec. IV-B), both with comparison accounting. Exposed both as
+//!   whole-row entry points and as the segment/merge primitives the
+//!   sequence-sharded pipeline distributes across workers.
 //! * [`distribution`] — the Type I/II/III row-distribution taxonomy of
 //!   Fig. 9 and its classifier.
 //! * [`hitrate`] — predicted-vs-true top-k hit-rate analysis (Fig. 17).
@@ -22,4 +24,7 @@ pub mod topk;
 pub use distribution::{classify_row, DistType};
 pub use hitrate::hit_rate;
 pub use predictor::{bits_for, PredictScheme, Predictor, PreparedPredict};
-pub use topk::{sads_topk, vanilla_topk, SadsParams, SadsStats};
+pub use topk::{
+    merge_topk_candidates, sads_geometry, sads_merge, sads_segment_winners, sads_topk,
+    vanilla_topk, SadsParams, SadsStats, SegmentWinners,
+};

@@ -202,9 +202,29 @@ impl PreparedPredict {
     /// Estimate rows `lo..hi` of `Â = a·bᵀ`. Row `i` of the result is
     /// bit-identical to row `lo + i` of the whole-matrix estimate.
     pub fn score_rows(&self, lo: usize, hi: usize, c: &mut OpCounter) -> Mat {
-        let (n, d) = (self.keys, self.d);
+        self.score_block(lo, hi, 0, self.keys, c)
+    }
+
+    /// Estimate the `(lo..hi) × (key_lo..key_hi)` block of `Â = a·bᵀ`.
+    /// Element `(i, j)` is bit-identical to element `(lo + i, key_lo +
+    /// j)` of the whole-matrix estimate — each estimate is an
+    /// independent dot product over operands quantized with the *global*
+    /// scales frozen at [`Predictor::prepare`]. This is what lets the
+    /// sequence-sharded pipeline score a key sub-range per worker
+    /// without changing a single bit of the prediction.
+    pub fn score_block(
+        &self,
+        lo: usize,
+        hi: usize,
+        key_lo: usize,
+        key_hi: usize,
+        c: &mut OpCounter,
+    ) -> Mat {
+        let d = self.d;
         assert!(lo <= hi && hi <= self.rows, "tile {lo}..{hi} out of range");
+        assert!(key_lo <= key_hi && key_hi <= self.keys, "keys {key_lo}..{key_hi} out of range");
         let m = hi - lo;
+        let n = key_hi - key_lo;
         let mut out = Mat::zeros(m, n);
         match &self.ops {
             PreparedOps::Dlzs { a_codes, qb } => {
@@ -215,7 +235,7 @@ impl PreparedPredict {
                     for j in 0..n {
                         let mut acc = 0i64;
                         for p in 0..d {
-                            acc += dlzs_mul(qb.at(j, p), a_codes[(lo + i) * d + p]);
+                            acc += dlzs_mul(qb.at(key_lo + j, p), a_codes[(lo + i) * d + p]);
                         }
                         *out.at_mut(i, j) = acc as f32 * self.scale;
                     }
@@ -228,7 +248,8 @@ impl PreparedPredict {
                     for j in 0..n {
                         let mut acc = 0i64;
                         for p in 0..d {
-                            acc += slzs_mul(a_codes[(lo + i) * d + p], b_codes[j * d + p]);
+                            acc +=
+                                slzs_mul(a_codes[(lo + i) * d + p], b_codes[(key_lo + j) * d + p]);
                         }
                         *out.at_mut(i, j) = acc as f32 * self.scale;
                     }
@@ -241,7 +262,7 @@ impl PreparedPredict {
                     for j in 0..n {
                         let mut acc = 0i64;
                         for p in 0..d {
-                            acc += ta.at(lo + i, p) as i64 * tb.at(j, p) as i64;
+                            acc += ta.at(lo + i, p) as i64 * tb.at(key_lo + j, p) as i64;
                         }
                         *out.at_mut(i, j) = acc as f32 * self.scale;
                     }
@@ -374,6 +395,33 @@ mod tests {
             }
             // Tiled accounting sums to the whole-matrix accounting.
             assert_eq!(ct, c, "{scheme:?} op accounting drifted under tiling");
+        }
+    }
+
+    #[test]
+    fn key_blocked_scores_match_whole_matrix_estimate() {
+        // The sharded-pipeline contract: scoring a key sub-range per
+        // worker slices the whole-matrix estimate bit for bit, and the
+        // per-product accounting sums to the whole-matrix accounting.
+        for scheme in [PredictScheme::Dlzs, PredictScheme::Slzs, PredictScheme::LowBitMul] {
+            let (a, b) = mats(8, 20, 50, 16);
+            let pred = Predictor::new(scheme, 7);
+            let mut c = OpCounter::new();
+            let full = pred.approx_scores(&a, &b, &mut c);
+            let mut ct = OpCounter::new();
+            let prep = pred.prepare(&a, &b, &mut ct);
+            for (key_lo, key_hi) in [(0usize, 17usize), (17, 40), (40, 50)] {
+                let block = prep.score_block(3, 11, key_lo, key_hi, &mut ct);
+                for i in 0..8 {
+                    for j in 0..(key_hi - key_lo) {
+                        assert_eq!(
+                            block.at(i, j),
+                            full.at(3 + i, key_lo + j),
+                            "{scheme:?} ({i},{j})"
+                        );
+                    }
+                }
+            }
         }
     }
 

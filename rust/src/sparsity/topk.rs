@@ -10,6 +10,16 @@
 //!   runs the selection passes only over the surviving ρ fraction:
 //!   O(S·S·k·ρ/n) total. Survivor lists merge into one descending order for
 //!   SU-FA.
+//!
+//! SADS is *distributed by construction*: the per-segment pass
+//! ([`sads_segment_winners`]) reads only its own segment's scores, and
+//! the merge ([`sads_merge`]) reads only the per-segment winner lists.
+//! [`sads_topk`] composes the two on one core; the sequence-sharded
+//! pipeline ([`crate::pipeline::ShardedPipeline`]) runs the segment
+//! passes on the workers owning those key ranges and the merge at the
+//! query block's home worker — same functions, same comparisons, same
+//! selection, bit for bit. [`merge_topk_candidates`] is the analogous
+//! merge pass for the exact (vanilla) engine.
 
 use crate::arith::{OpCounter, OpKind};
 
@@ -57,16 +67,142 @@ pub fn vanilla_topk(row: &[f32], k: usize, c: &mut OpCounter) -> Vec<usize> {
                 }
             }
         }
+        if best == usize::MAX {
+            break; // every remaining score is -inf (fully masked row)
+        }
         taken[best] = true;
         out.push(best);
     }
     out
 }
 
+/// One sub-segment's output from the distributed phase of SADS:
+/// produced by [`sads_segment_winners`], consumed by [`sads_merge`].
+#[derive(Clone, Debug)]
+pub struct SegmentWinners {
+    /// Global sub-segment index (merge order is ascending `seg`).
+    pub seg: usize,
+    /// Per-segment winners `(score, global key index)`, descending.
+    pub winners: Vec<(f32, usize)>,
+    /// Elements surviving the sphere filter (the ρ numerator; the
+    /// denominator is the caller's global `s`).
+    pub survivors: usize,
+    /// Comparisons this segment spent (also tallied into the counter).
+    pub comparisons: u64,
+}
+
+/// The per-segment phase of SADS over one sub-segment's score slice:
+/// local max, sphere filter at `radius`, then up to `per_seg` selection
+/// passes over the survivors. `scores` is the segment's slice and `base`
+/// the global index of `scores[0]`, so winners carry global key indices
+/// — which is what lets a shard owning this key range run the phase
+/// locally, bit-identically to the single-core [`sads_topk`].
+pub fn sads_segment_winners(
+    scores: &[f32],
+    base: usize,
+    seg: usize,
+    per_seg: usize,
+    radius: f32,
+    c: &mut OpCounter,
+) -> SegmentWinners {
+    let len = scores.len();
+    assert!(len > 0, "empty SADS segment");
+    let mut cmp_count = 0u64;
+
+    // 1) Local max: len − 1 comparisons.
+    let mut mx = f32::NEG_INFINITY;
+    for &x in scores {
+        if x > mx {
+            mx = x;
+        }
+    }
+    cmp_count += (len - 1) as u64;
+
+    // 2) Sphere filter: one comparison per element against (max − r).
+    let floor = mx - radius;
+    let feasible: Vec<usize> = (0..len).filter(|&j| scores[j] >= floor).collect();
+    cmp_count += len as u64;
+    let survivors = feasible.len();
+
+    // 3) Selection passes restricted to the feasible region.
+    let take = per_seg.min(feasible.len());
+    let mut taken = vec![false; feasible.len()];
+    let mut winners = Vec::with_capacity(take);
+    for _ in 0..take {
+        let mut bi = usize::MAX;
+        let mut bv = f32::NEG_INFINITY;
+        for (fi, &j) in feasible.iter().enumerate() {
+            if !taken[fi] {
+                cmp_count += 1;
+                if scores[j] > bv {
+                    bv = scores[j];
+                    bi = fi;
+                }
+            }
+        }
+        if bi == usize::MAX {
+            break; // every survivor is -inf (fully masked segment)
+        }
+        taken[bi] = true;
+        winners.push((scores[feasible[bi]], base + feasible[bi]));
+    }
+
+    c.tally(OpKind::Cmp, cmp_count);
+    SegmentWinners { seg, winners, survivors, comparisons: cmp_count }
+}
+
+/// The merge phase of SADS: n-way merge of per-segment descending winner
+/// lists (ascending `seg` order) into one global descending order — the
+/// order SU-FA consumes — truncated to `k`. One comparison per output
+/// per live list; ties resolve to the earlier segment, which depends
+/// only on the global segment order, never on how segments were
+/// distributed across workers. Returns (indices, comparisons).
+pub fn sads_merge(lists: &[SegmentWinners], k: usize, c: &mut OpCounter) -> (Vec<usize>, u64) {
+    debug_assert!(lists.windows(2).all(|w| w[0].seg < w[1].seg), "merge wants ascending segments");
+    let mut cmp_count = 0u64;
+    let mut cursors = vec![0usize; lists.len()];
+    let mut merged: Vec<usize> = Vec::with_capacity(k);
+    while merged.len() < k {
+        let mut best_list = usize::MAX;
+        let mut best_v = f32::NEG_INFINITY;
+        for (li, list) in lists.iter().enumerate() {
+            if cursors[li] < list.winners.len() {
+                cmp_count += 1;
+                if list.winners[cursors[li]].0 > best_v {
+                    best_v = list.winners[cursors[li]].0;
+                    best_list = li;
+                }
+            }
+        }
+        if best_list == usize::MAX {
+            break; // all lists exhausted (aggressive pruning)
+        }
+        merged.push(lists[best_list].winners[cursors[best_list]].1);
+        cursors[best_list] += 1;
+    }
+    c.tally(OpKind::Cmp, cmp_count);
+    (merged, cmp_count)
+}
+
+/// The SADS sub-segment geometry for a row of `s` scores: (segment
+/// count, segment length). Shared by [`sads_topk`] and the sharded
+/// pipeline's key partitioner so both always agree on boundaries.
+pub fn sads_geometry(s: usize, p: &SadsParams) -> (usize, usize) {
+    if s == 0 {
+        return (0, 0);
+    }
+    let n = p.segments.max(1).min(s);
+    let seg_len = s.div_ceil(n);
+    // Trailing segments can be empty when seg_len rounds up past s.
+    (s.div_ceil(seg_len), seg_len)
+}
+
 /// SADS: distributed per-segment selection with sphere-radius early
 /// termination. Returns (indices in descending estimated-score order,
 /// stats). Each segment contributes ⌈k/n⌉ winners (clipped to its size);
-/// the result is truncated to `k`.
+/// the result is truncated to `k`. Composes [`sads_segment_winners`] and
+/// [`sads_merge`] — the sharded pipeline runs the same two phases on
+/// different workers.
 pub fn sads_topk(
     row: &[f32],
     k: usize,
@@ -79,85 +215,60 @@ pub fn sads_topk(
         return (Vec::new(), SadsStats::default());
     }
     let n = p.segments.max(1).min(s);
-    let seg_len = s.div_ceil(n);
+    let (nseg, seg_len) = sads_geometry(s, p);
     let per_seg = k.div_ceil(n);
 
-    let mut cmp_count = 0u64;
-    let mut survivors_total = 0usize;
-    // Per-segment winners, each list already descending.
-    let mut seg_lists: Vec<Vec<(f32, usize)>> = Vec::with_capacity(n);
-
-    for seg in 0..n {
+    let mut seg_lists: Vec<SegmentWinners> = Vec::with_capacity(nseg);
+    for seg in 0..nseg {
         let lo = seg * seg_len;
-        if lo >= s {
-            break;
-        }
         let hi = (lo + seg_len).min(s);
-        let len = hi - lo;
-
-        // 1) Local max: len − 1 comparisons.
-        let mut mx = f32::NEG_INFINITY;
-        for &x in &row[lo..hi] {
-            if x > mx {
-                mx = x;
-            }
-        }
-        cmp_count += (len - 1) as u64;
-
-        // 2) Sphere filter: one comparison per element against (max − r).
-        let floor = mx - p.radius;
-        let feasible: Vec<usize> = (lo..hi).filter(|&j| row[j] >= floor).collect();
-        cmp_count += len as u64;
-        survivors_total += feasible.len();
-
-        // 3) Selection passes restricted to the feasible region.
-        let take = per_seg.min(feasible.len());
-        let mut taken = vec![false; feasible.len()];
-        let mut winners = Vec::with_capacity(take);
-        for _ in 0..take {
-            let mut bi = usize::MAX;
-            let mut bv = f32::NEG_INFINITY;
-            for (fi, &j) in feasible.iter().enumerate() {
-                if !taken[fi] {
-                    cmp_count += 1;
-                    if row[j] > bv {
-                        bv = row[j];
-                        bi = fi;
-                    }
-                }
-            }
-            taken[bi] = true;
-            winners.push((row[feasible[bi]], feasible[bi]));
-        }
-        seg_lists.push(winners);
+        seg_lists.push(sads_segment_winners(&row[lo..hi], lo, seg, per_seg, p.radius, c));
     }
 
-    // 4) n-way merge of descending lists → global descending order (the
-    //    order SU-FA consumes). One comparison per output per live list.
-    let mut cursors = vec![0usize; seg_lists.len()];
-    let mut merged: Vec<usize> = Vec::with_capacity(k);
-    while merged.len() < k {
-        let mut best_list = usize::MAX;
-        let mut best_v = f32::NEG_INFINITY;
-        for (li, list) in seg_lists.iter().enumerate() {
-            if cursors[li] < list.len() {
-                cmp_count += 1;
-                if list[cursors[li]].0 > best_v {
-                    best_v = list[cursors[li]].0;
-                    best_list = li;
-                }
-            }
-        }
-        if best_list == usize::MAX {
-            break; // all lists exhausted (aggressive pruning)
-        }
-        merged.push(seg_lists[best_list][cursors[best_list]].1);
-        cursors[best_list] += 1;
-    }
+    let survivors_total: usize = seg_lists.iter().map(|l| l.survivors).sum();
+    let mut cmp_count: u64 = seg_lists.iter().map(|l| l.comparisons).sum();
+    let (merged, merge_cmp) = sads_merge(&seg_lists, k, c);
+    cmp_count += merge_cmp;
 
-    c.tally(OpKind::Cmp, cmp_count);
     let stats = SadsStats { rho: survivors_total as f64 / s as f64, comparisons: cmp_count };
     (merged, stats)
+}
+
+/// The merge pass of the *exact* distributed top-k: select the global
+/// top-`k` from per-shard candidate lists. `cands` are `(score, global
+/// key index)` pairs and **must be sorted by ascending key index**, so
+/// the scan's first-strict-maximum rule resolves score ties to the
+/// lowest index — exactly how [`vanilla_topk`] over the full row
+/// breaks them. When every shard proposes its local top-`min(k, len)`,
+/// the result (set *and* order) equals `vanilla_topk` on the
+/// concatenated row: any global winner is necessarily within its own
+/// shard's local top-`k`. Returns indices in descending score order.
+pub fn merge_topk_candidates(cands: &[(f32, usize)], k: usize, c: &mut OpCounter) -> Vec<usize> {
+    debug_assert!(cands.windows(2).all(|w| w[0].1 < w[1].1), "candidates must ascend by index");
+    let k = k.min(cands.len());
+    let mut cmp_count = 0u64;
+    let mut taken = vec![false; cands.len()];
+    let mut out = Vec::with_capacity(k);
+    for _ in 0..k {
+        let mut best = usize::MAX;
+        let mut best_v = f32::NEG_INFINITY;
+        for (ci, &(v, _)) in cands.iter().enumerate() {
+            if !taken[ci] {
+                cmp_count += 1;
+                if v > best_v {
+                    best_v = v;
+                    best = ci;
+                }
+            }
+        }
+        if best == usize::MAX {
+            break; // every remaining candidate is -inf
+        }
+        taken[best] = true;
+        out.push(cands[best].1);
+    }
+    c.tally(OpKind::Cmp, cmp_count);
+    out
 }
 
 #[cfg(test)]
@@ -265,6 +376,22 @@ mod tests {
     }
 
     #[test]
+    fn fully_masked_scores_select_nothing_instead_of_panicking() {
+        // -inf everywhere (fully masked rows): no element can win a
+        // strict comparison, so every selection pass must stop cleanly.
+        let mut c = OpCounter::new();
+        let row = [f32::NEG_INFINITY; 8];
+        assert!(vanilla_topk(&row, 4, &mut c).is_empty());
+        let l = sads_segment_winners(&row, 0, 0, 2, 1.0, &mut c);
+        assert!(l.winners.is_empty());
+        assert_eq!(l.survivors, 8, "-inf >= -inf: the sphere filter keeps them");
+        let cands: Vec<(f32, usize)> = (0..4).map(|j| (f32::NEG_INFINITY, j)).collect();
+        assert!(merge_topk_candidates(&cands, 2, &mut c).is_empty());
+        let (sel, _) = sads_topk(&[f32::NEG_INFINITY; 16], 4, &SadsParams::default(), &mut c);
+        assert!(sel.is_empty());
+    }
+
+    #[test]
     fn edge_cases() {
         let mut c = OpCounter::new();
         assert!(sads_topk(&[], 4, &SadsParams::default(), &mut c).0.is_empty());
@@ -273,5 +400,63 @@ mod tests {
         let row = rand_row(16, 6);
         let (all, _) = sads_topk(&row, 16, &SadsParams { segments: 4, radius: 1e9 }, &mut c);
         assert_eq!(all.len(), 16);
+    }
+
+    #[test]
+    fn distributed_sads_phases_equal_whole_row_sads() {
+        // The sharded pipeline's contract: running the segment phase on
+        // per-worker score slices and merging the lists afterwards must
+        // reproduce sads_topk on the whole row — selection, order, AND
+        // comparison counts, for divisible and non-divisible lengths.
+        for (s, k, seed) in [(256usize, 32usize, 21u64), (130, 20, 22), (257, 64, 23)] {
+            let row = rand_row(s, seed);
+            let p = SadsParams::default();
+            let mut cw = OpCounter::new();
+            let (want, stats) = sads_topk(&row, k, &p, &mut cw);
+
+            let n = p.segments.max(1).min(s);
+            let (nseg, seg_len) = sads_geometry(s, &p);
+            let per_seg = k.div_ceil(n);
+            let mut cd = OpCounter::new();
+            // "Workers": segments computed in scrambled order from slices.
+            let mut lists: Vec<SegmentWinners> = (0..nseg)
+                .rev()
+                .map(|seg| {
+                    let lo = seg * seg_len;
+                    let hi = (lo + seg_len).min(s);
+                    sads_segment_winners(&row[lo..hi], lo, seg, per_seg, p.radius, &mut cd)
+                })
+                .collect();
+            lists.sort_by_key(|l| l.seg);
+            let (got, _) = sads_merge(&lists, k.min(s), &mut cd);
+            assert_eq!(got, want, "s={s} k={k}: distributed selection drift");
+            assert_eq!(cd.cmp, cw.cmp, "s={s} k={k}: comparison accounting drift");
+            let survivors: usize = lists.iter().map(|l| l.survivors).sum();
+            assert!((survivors as f64 / s as f64 - stats.rho).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn candidate_merge_equals_whole_row_vanilla() {
+        // Exact engine: per-shard local top-k proposals + merge must equal
+        // vanilla_topk on the full row, including tie order.
+        for (s, k, shards, seed) in [(96usize, 24usize, 3usize, 31u64), (101, 17, 4, 32)] {
+            let mut row = rand_row(s, seed);
+            row[5] = row[40]; // plant a cross-shard tie
+            let mut cw = OpCounter::new();
+            let want = vanilla_topk(&row, k, &mut cw);
+            let mut cd = OpCounter::new();
+            let mut cands: Vec<(f32, usize)> = Vec::new();
+            for w in 0..shards {
+                let (lo, hi) = (w * s / shards, (w + 1) * s / shards);
+                let local = vanilla_topk(&row[lo..hi], k.min(hi - lo), &mut cd);
+                let mut local: Vec<(f32, usize)> =
+                    local.into_iter().map(|j| (row[lo + j], lo + j)).collect();
+                local.sort_by_key(|&(_, j)| j);
+                cands.extend(local);
+            }
+            let got = merge_topk_candidates(&cands, k, &mut cd);
+            assert_eq!(got, want, "s={s} k={k} shards={shards}");
+        }
     }
 }

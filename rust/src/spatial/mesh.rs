@@ -97,6 +97,35 @@ impl Mesh {
         let c = self.coord(id);
         c.col.min(self.cols - 1 - c.col) + 1
     }
+
+    /// Node ids in snake order (see [`snake_coords`]).
+    pub fn snake_order(&self) -> Vec<usize> {
+        snake_coords(self.rows, self.cols).into_iter().map(|c| self.id(c)).collect()
+    }
+}
+
+/// Boustrophedon ("snake") traversal of a `rows × cols` grid: row 0
+/// left→right, row 1 right→left, and so on. Consecutive positions are
+/// always mesh neighbors, so a logical ring of workers laid out in snake
+/// order forwards its payload over single-hop links everywhere except
+/// the wrap-around (which MRCA's progress/reflux schedule absorbs —
+/// Alg. 1). The executable sharded pipeline
+/// ([`crate::pipeline::ShardedPipeline`]) places its workers with this
+/// order so its ring matches the mesh the analytic simulator models.
+pub fn snake_coords(rows: usize, cols: usize) -> Vec<Coord> {
+    let mut out = Vec::with_capacity(rows * cols);
+    for r in 0..rows {
+        if r % 2 == 0 {
+            for c in 0..cols {
+                out.push(Coord { row: r, col: c });
+            }
+        } else {
+            for c in (0..cols).rev() {
+                out.push(Coord { row: r, col: c });
+            }
+        }
+    }
+    out
 }
 
 /// Traffic accumulated over one communication step: bytes per directed
@@ -214,6 +243,21 @@ mod tests {
         assert_eq!(m.hops_to_dram(m.id(Coord { row: 2, col: 0 })), 1);
         assert_eq!(m.hops_to_dram(m.id(Coord { row: 2, col: 2 })), 3);
         assert_eq!(m.hops_to_dram(m.id(Coord { row: 2, col: 4 })), 1);
+    }
+
+    #[test]
+    fn snake_order_is_neighbor_contiguous() {
+        for (rows, cols) in [(1usize, 4usize), (2, 3), (5, 5)] {
+            let coords = snake_coords(rows, cols);
+            assert_eq!(coords.len(), rows * cols);
+            for w in coords.windows(2) {
+                assert_eq!(w[0].manhattan(&w[1]), 1, "{w:?} not adjacent");
+            }
+        }
+        let m = mesh5();
+        let order = m.snake_order();
+        assert_eq!(order[4], 4);
+        assert_eq!(order[5], 9, "row 1 starts at its right edge");
     }
 
     #[test]

@@ -25,7 +25,7 @@ pub mod ring;
 pub mod sim;
 
 pub use drattention::{drattention_run, DrAttentionReport};
-pub use mesh::{Coord, Mesh, StepTraffic};
+pub use mesh::{snake_coords, Coord, Mesh, StepTraffic};
 pub use mrca::{mrca_schedule, verify_schedule, Send, StepSends};
 pub use ring::{ring_attention_run, RingReport};
 pub use sim::{spatial_run, CoreKind, Dataflow, SpatialReport};

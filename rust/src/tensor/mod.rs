@@ -1,8 +1,9 @@
 //! Minimal dense-tensor substrate: a row-major f32 matrix with the handful
 //! of operations the algorithm layer needs (matmul, transpose, row softmax,
-//! row top-k). Kept deliberately small — numerics on the request path run
-//! through the AOT-compiled HLO artifacts ([`crate::runtime`]); this type
-//! exists for oracles, simulators and workload generation.
+//! row top-k). Kept deliberately small — numerics on the request path can
+//! run through the AOT-compiled HLO artifacts (`crate::runtime`, behind the
+//! `pjrt` feature); this type exists for oracles, simulators and workload
+//! generation.
 
 use crate::util::Rng;
 
@@ -66,8 +67,18 @@ impl Mat {
 
     /// Dense matmul: self [m,k] × other [k,n] → [m,n].
     pub fn matmul(&self, other: &Mat) -> Mat {
+        self.matmul_cols(other, 0, other.cols)
+    }
+
+    /// Columns `[col_lo, col_hi)` of `self × other`. Each element is
+    /// computed with exactly [`Mat::matmul`]'s accumulation order
+    /// (ikj, skip-zero), so a column block slices the full product bit
+    /// for bit — the sharded pipeline's oracle-score path relies on
+    /// this to score one worker's key range.
+    pub fn matmul_cols(&self, other: &Mat, col_lo: usize, col_hi: usize) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.cols);
+        assert!(col_lo <= col_hi && col_hi <= other.cols, "column block out of range");
+        let (m, k, n) = (self.rows, self.cols, col_hi - col_lo);
         let mut out = Mat::zeros(m, n);
         // ikj loop order: streams `other` rows, vectorizes the inner j loop.
         for i in 0..m {
@@ -77,7 +88,7 @@ impl Mat {
                 if a == 0.0 {
                     continue;
                 }
-                let brow = &other.data[p * n..(p + 1) * n];
+                let brow = &other.data[p * other.cols + col_lo..p * other.cols + col_hi];
                 for (o, &b) in orow.iter_mut().zip(brow) {
                     *o += a * b;
                 }
@@ -186,6 +197,23 @@ mod tests {
         let eye = Mat::from_fn(7, 7, |i, j| if i == j { 1.0 } else { 0.0 });
         let b = a.matmul(&eye);
         assert!(a.max_abs_diff(&b) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_cols_slices_the_full_product_bit_for_bit() {
+        let mut rng = Rng::new(9);
+        let a = Mat::randn(5, 16, 1.0, &mut rng);
+        let b = Mat::randn(16, 23, 1.0, &mut rng);
+        let full = a.matmul(&b);
+        for (lo, hi) in [(0usize, 23usize), (0, 7), (7, 20), (20, 23), (5, 5)] {
+            let block = a.matmul_cols(&b, lo, hi);
+            assert_eq!((block.rows, block.cols), (5, hi - lo));
+            for i in 0..5 {
+                for j in lo..hi {
+                    assert_eq!(block.at(i, j - lo), full.at(i, j), "({i},{j})");
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,64 @@
+//! Integration: the bench trajectory output for the measured
+//! sequence-sharded study — `star bench spatial-exec` must write a
+//! schema-valid `BENCH_spatial_exec.json` with a non-empty, ascending
+//! shard-count axis and a passing parity flag.
+
+use star::bench::spatial_exec::{payload, spatial_exec_with};
+use star::bench::trajectory;
+use star::util::json::Json;
+
+#[test]
+fn spatial_exec_writes_a_schema_valid_trajectory() {
+    // Small sizes: schema and correctness only (wall-clock magnitudes
+    // are asserted nowhere — CI machines are noisy). The CLI path
+    // (`star bench spatial-exec`) goes through the same payload builder
+    // and trajectory writer exercised here, at the default sizes.
+    let report = spatial_exec_with(24, 160, 16, 0.25, &[1, 2, 4]);
+    let dir = std::env::temp_dir().join("star_spatial_exec_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = trajectory::write_to(&dir, "spatial_exec", payload(&report)).unwrap();
+    assert!(
+        path.file_name().unwrap().to_str().unwrap() == "BENCH_spatial_exec.json",
+        "trajectory file must be BENCH_spatial_exec.json, got {path:?}"
+    );
+
+    // Round-trip through the JSON parser and validate the schema.
+    let text = std::fs::read_to_string(&path).unwrap();
+    let j = Json::parse(&text).unwrap();
+    assert_eq!(j.get("bench").unwrap().as_str(), Some("spatial_exec"));
+    assert_eq!(j.get("parity_ok").unwrap().as_bool(), Some(true), "bit-parity must hold");
+    assert!(j.get("single_core_wall_s").unwrap().as_f64().unwrap() > 0.0);
+
+    let columns = j.get("columns").unwrap().as_arr().unwrap();
+    let want = [
+        "shards",
+        "wall_s",
+        "speedup",
+        "ring_steps",
+        "ring_payload_bytes",
+        "gathered_kv_rows",
+        "analytic_total_s",
+        "analytic_speedup",
+    ];
+    assert_eq!(columns.len(), want.len());
+    for (c, w) in columns.iter().zip(want) {
+        assert_eq!(c.as_str(), Some(w));
+    }
+
+    let rows = j.get("rows").unwrap().as_arr().unwrap();
+    assert!(!rows.is_empty(), "trajectory must be non-empty");
+    let mut prev_shards = 0usize;
+    for r in rows {
+        let cells = r.as_arr().unwrap();
+        assert_eq!(cells.len(), want.len());
+        let shards = cells[0].as_usize().unwrap();
+        assert!(shards > prev_shards, "shard-count axis must ascend: {shards} after {prev_shards}");
+        prev_shards = shards;
+        assert!(cells[1].as_f64().unwrap() > 0.0, "wall time positive");
+        assert!(cells[2].as_f64().unwrap() > 0.0, "speedup positive");
+        assert_eq!(cells[3].as_usize().unwrap(), shards, "ring steps = worker count");
+        assert!(cells[6].as_f64().unwrap() > 0.0, "analytic prediction present");
+    }
+
+    std::fs::remove_file(&path).ok();
+}

@@ -99,7 +99,8 @@ fn native_backend_round_trip_matches_inline_pipeline() {
         // Submitting one request at a time (awaiting each response before
         // the next submit) keeps every batch single-request, so each
         // response is comparable to an inline pipeline run. (target_t = 1
-        // no longer works for this: Router::admit rejects t > target_t.)
+        // would instead route every request onto the sharded path —
+        // this test exercises the batched native path specifically.)
         ServerConfig { batcher: BatcherConfig { target_t: 8, max_wait_s: 1e-4 }, workers: 2 },
     );
     for id in 0..8u64 {
@@ -130,28 +131,86 @@ fn native_backend_round_trip_matches_inline_pipeline() {
 }
 
 #[test]
-fn admission_rejects_requests_wider_than_the_batch_target() {
-    // Regression: a request with t > target_t used to flow through
-    // unchecked and seal an over-target batch via the batcher's
-    // oversize escape hatch. Router::admit now rejects it explicitly.
+fn admission_routes_over_target_prefill_and_rejects_over_target_decode() {
+    // Regression (two generations of it): a request with t > target_t
+    // used to flow through unchecked and seal an over-target batch via
+    // the batcher's oversize escape hatch; then Router::admit rejected
+    // it outright. Now over-target *prefill* is admitted onto the
+    // sequence-sharded path (served, not rejected), while over-target
+    // *decode* — which mutates session state — is still rejected.
     let srv = server(16, 2);
-    // Routable by shape (max_t = 128) but wider than target_t = 16.
+    // Routable by shape (max_t = 128) but wider than target_t = 16:
+    // served via the sharded path.
     let rx = srv.submit(Request::new(1, "tiny", 48, 256, 0.0)).unwrap();
+    let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+    assert_eq!(resp.variant, "attn_small", "over-target prefill must be served: {resp:?}");
+    // Over-target decode is still rejected.
+    let d = 8;
+    let (q, k, v) = (Mat::zeros(48, d), Mat::zeros(48, d), Mat::zeros(48, d));
+    let rx = srv.submit(Request::decode(2, "tiny", 5, q, k, v, 48, 0.0)).unwrap();
     let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
     assert!(
         resp.variant.starts_with("rejected") && resp.variant.contains("target"),
-        "expected an over-target rejection, got {:?}",
+        "expected an over-target decode rejection, got {:?}",
         resp.variant
     );
     assert!(resp.output.is_none());
-    // A within-target request still serves, and no over-target batch
-    // was ever sealed.
-    let rx = srv.submit(Request::new(2, "tiny", 16, 256, 0.0)).unwrap();
+    // A within-target request still serves normally.
+    let rx = srv.submit(Request::new(3, "tiny", 16, 256, 0.0)).unwrap();
     let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
     assert_eq!(resp.variant, "attn_small");
     let snap = srv.shutdown();
-    assert_eq!(snap.rejected, 1);
-    assert!(snap.mean_batch_rows <= 16.0 + 1e-9, "no over-target batch sealed");
+    assert_eq!(snap.rejected, 1, "only the decode step was rejected");
+}
+
+#[test]
+fn over_target_prefill_serves_bit_identical_sharded_outputs() {
+    // The t > target_t prefill path end to end through the native
+    // backend: admitted as Admission::Sharded, executed on the
+    // ShardedPipeline, and — the engine's contract — bit-identical to
+    // what the single-core pipeline computes inline over the same
+    // context. Per-shard metrics must land in the snapshot.
+    let (s, d) = (256usize, 16usize);
+    let mut rng = Rng::new(91);
+    let kctx = Mat::randn(s, d, 1.0, &mut rng);
+    let vctx = Mat::randn(s, d, 1.0, &mut rng);
+    let pipeline = PipelineConfig::star().with_keep(0.25).with_threads(1);
+    let mut contexts = BTreeMap::new();
+    contexts.insert("attn_native".to_string(), (kctx.clone(), vctx.clone()));
+    let router = Router::new(vec![Variant {
+        name: "attn_native".into(),
+        model: "tiny".into(),
+        max_t: 128,
+        s,
+    }]);
+    let srv = Server::start(
+        router,
+        Backend::native(pipeline, contexts).with_shards(2),
+        ServerConfig { batcher: BatcherConfig { target_t: 16, max_wait_s: 1e-3 }, workers: 2 },
+    );
+    // Wider than target_t AND wider than the variant's max_t: the
+    // sharded path partitions rows itself.
+    let t = 160usize;
+    let q = Mat::randn(t, d, 1.0, &mut rng);
+    let mut req = Request::new(1, "tiny", t, s, 0.0);
+    req.q = Some(q.clone());
+    let rx = srv.submit(req).unwrap();
+    let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+    assert_eq!(resp.variant, "attn_native");
+    let out = resp.output.expect("sharded prefill returns outputs");
+    let inline = SparseAttentionPipeline::new(PipelineConfig::star().with_keep(0.25).with_threads(1))
+        .run(&PipelineInputs::qkv(&q, &kctx, &vctx));
+    assert_eq!(
+        out.max_abs_diff(&inline.out),
+        0.0,
+        "sharded serving must equal the single-core pipeline bit for bit"
+    );
+    let snap = srv.shutdown();
+    assert_eq!(snap.requests, 1);
+    assert_eq!(snap.rejected, 0);
+    assert_eq!(snap.sharded_prefills, 1);
+    assert_eq!(snap.shard_stage_s.len(), 2, "per-shard timings recorded");
+    assert!(snap.ring_steps >= 2 && snap.gathered_kv_rows > 0);
 }
 
 #[test]

@@ -1,0 +1,155 @@
+//! Property: sequence-sharded execution never changes the math.
+//!
+//! [`star::pipeline::ShardedPipeline`] must produce **bit-identical**
+//! outputs, selections and stall counts to the single-core
+//! [`star::pipeline::SparseAttentionPipeline`] on the same inputs — for
+//! every worker count (including counts that split SADS segments
+//! unevenly), every tile size, and sequence lengths that do not divide
+//! evenly into segments or shards. The three pillars under test:
+//! global-scale quantization ([`star::sparsity::PreparedPredict`]),
+//! segment-aligned sharding of the SADS top-k, and the order-preserving
+//! KV gather ahead of the formal stage.
+
+use star::config::ModelConfig;
+use star::pipeline::{PipelineConfig, PipelineInputs, ShardedPipeline, SparseAttentionPipeline};
+use star::sim::pipeline::{FormalKind, PredictKind, TopkKind};
+use star::tensor::Mat;
+use star::util::Rng;
+use star::workload::AttnWorkload;
+
+fn workload(t: usize, s: usize, seed: u64) -> AttnWorkload {
+    let model = ModelConfig::preset("tiny").unwrap();
+    let mut rng = Rng::new(seed);
+    AttnWorkload::generate(&model, s, t, &mut rng)
+}
+
+/// Assert the full bit-identity contract between one sharded run and
+/// the single-core reference.
+fn assert_parity(
+    tag: &str,
+    single: &star::pipeline::PipelineReport,
+    sharded: &star::pipeline::ShardedReport,
+) {
+    assert_eq!(sharded.selection, single.selection, "{tag}: selection drift");
+    assert_eq!(
+        sharded.out.max_abs_diff(&single.out),
+        0.0,
+        "{tag}: output drift (max abs diff {})",
+        sharded.out.max_abs_diff(&single.out)
+    );
+    assert_eq!(sharded.stalls, single.stalls, "{tag}: SU-FA stall drift");
+    assert_eq!(sharded.keep, single.keep, "{tag}: keep drift");
+}
+
+#[test]
+fn star_stack_bit_identical_across_shard_counts() {
+    // The full STAR stack (cross-phase DLZS + SADS + on-demand KV +
+    // descending SU-FA) from workload activations.
+    for (t, s, seed) in [(24usize, 96usize, 11u64), (48, 130, 12)] {
+        let wl = workload(t, s, seed);
+        let inputs = PipelineInputs::from_workload(&wl);
+        for tile in [7usize, 64] {
+            let cfg = PipelineConfig::star().with_keep(0.25).with_tile(tile).with_threads(1);
+            let single = SparseAttentionPipeline::new(cfg).run(&inputs);
+            for shards in [1usize, 2, 4] {
+                let sharded = ShardedPipeline::new(cfg, shards).run(&inputs);
+                let tag = format!("t={t} s={s} tile={tile} shards={shards}");
+                assert_parity(&tag, &single, &sharded);
+                // SADS sharding is comparison-exact, and prediction
+                // work is the same dot products either way.
+                assert_eq!(sharded.ops.predict, single.ops.predict, "{tag}: predict ops");
+                assert_eq!(sharded.ops.topk, single.ops.topk, "{tag}: topk ops");
+            }
+        }
+    }
+}
+
+#[test]
+fn non_divisible_lengths_and_uneven_segment_splits() {
+    // S = 257 → SADS segment length 65 with a short tail segment; 3
+    // workers own {1, 1, 2} segments — the most lopsided split. T = 17
+    // does not divide into blocks evenly either.
+    let wl = workload(17, 257, 21);
+    let inputs = PipelineInputs::from_workload(&wl);
+    let cfg = PipelineConfig::star().with_keep(0.2).with_tile(5).with_threads(1);
+    let single = SparseAttentionPipeline::new(cfg).run(&inputs);
+    for shards in [1usize, 2, 3, 4, 16] {
+        let sharded = ShardedPipeline::new(cfg, shards).run(&inputs);
+        let tag = format!("shards={shards}");
+        assert_parity(&tag, &single, &sharded);
+        assert!(sharded.shards <= 4, "{tag}: clamped to the SADS segment count");
+    }
+}
+
+#[test]
+fn exact_and_oracle_engines_match_across_shards() {
+    // Vanilla top-k (exact distributed merge) under both an oracle
+    // score source (predict = None → exact Q·Kᵀ) and the low-bit
+    // multiply predictor, on plain Q/K/V inputs.
+    let mut rng = Rng::new(31);
+    let (t, s, d) = (19usize, 101usize, 16usize);
+    let q = Mat::randn(t, d, 1.0, &mut rng);
+    let k = Mat::randn(s, d, 1.0, &mut rng);
+    let v = Mat::randn(s, d, 1.0, &mut rng);
+    let inputs = PipelineInputs::qkv(&q, &k, &v);
+    for predict in [PredictKind::None, PredictKind::LowBitMul] {
+        let cfg = PipelineConfig {
+            predict,
+            topk: TopkKind::Vanilla,
+            on_demand_kv: false,
+            ..PipelineConfig::star().with_keep(0.3).with_threads(1)
+        };
+        let single = SparseAttentionPipeline::new(cfg).run(&inputs);
+        for shards in [1usize, 2, 4, 7] {
+            let sharded = ShardedPipeline::new(cfg, shards).run(&inputs);
+            assert_parity(&format!("{predict:?} shards={shards}"), &single, &sharded);
+        }
+    }
+}
+
+#[test]
+fn slzs_flash2_combination_matches_across_shards() {
+    // A non-default stage mix: symmetric LZ prediction into SADS into
+    // the FA-2-style formal kernel.
+    let wl = workload(21, 144, 41);
+    let inputs = PipelineInputs::from_workload(&wl);
+    let cfg = PipelineConfig {
+        predict: PredictKind::Slzs,
+        formal: FormalKind::Flash2,
+        ..PipelineConfig::star().with_keep(0.25).with_threads(1)
+    };
+    let single = SparseAttentionPipeline::new(cfg).run(&inputs);
+    for shards in [1usize, 3, 4] {
+        let sharded = ShardedPipeline::new(cfg, shards).run(&inputs);
+        assert_parity(&format!("slzs/fa2 shards={shards}"), &single, &sharded);
+    }
+}
+
+#[test]
+fn dense_oracle_matches_across_shards() {
+    // keep = 1.0 with the dense formal kernel: the sharded gather holds
+    // every key, and the remap is the identity.
+    let wl = workload(13, 64, 51);
+    let inputs = PipelineInputs::qkv(&wl.q, &wl.k, &wl.v);
+    let cfg = PipelineConfig::dense_oracle().with_threads(1);
+    let single = SparseAttentionPipeline::new(cfg).run(&inputs);
+    for shards in [1usize, 2, 4] {
+        let sharded = ShardedPipeline::new(cfg, shards).run(&inputs);
+        assert_parity(&format!("dense shards={shards}"), &single, &sharded);
+        assert_eq!(sharded.density(64), 1.0);
+    }
+}
+
+#[test]
+fn auto_shard_count_is_still_bit_identical() {
+    // shards = 0 → one worker per core: whatever the machine, the
+    // output cannot change (the property CI machines actually exercise
+    // with varying core counts).
+    let wl = workload(16, 128, 61);
+    let inputs = PipelineInputs::from_workload(&wl);
+    let cfg = PipelineConfig::star().with_keep(0.25).with_threads(1);
+    let single = SparseAttentionPipeline::new(cfg).run(&inputs);
+    let sharded = ShardedPipeline::new(cfg, 0).run(&inputs);
+    assert_parity("auto", &single, &sharded);
+    assert!(sharded.shards >= 1);
+}
