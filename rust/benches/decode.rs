@@ -2,6 +2,12 @@
 //! KV-cache (writes `BENCH_decode.json` at the repo root).
 //! Plain main (criterion is unavailable offline).
 
+// Count allocations so the bench's `hot_path_allocs` field is a real
+// measurement (the zero-allocation regression guard).
+#[global_allocator]
+static ALLOC: star::util::allocmeter::CountingAllocator =
+    star::util::allocmeter::CountingAllocator;
+
 fn main() {
     let t0 = std::time::Instant::now();
     star::bench::run("decode").unwrap();

@@ -42,11 +42,23 @@ impl IntBits {
 /// ([`crate::kvcache`]) freeze a key's quantized operand at append time
 /// and still match what a later full prefill would compute bit for bit.
 pub fn quantize_row(row: &[f32], bits: IntBits) -> (Vec<i32>, f32) {
+    let mut q = Vec::with_capacity(row.len());
+    let scale = quantize_row_into(row, bits, &mut q);
+    (q, scale)
+}
+
+/// [`quantize_row`] writing into a caller-provided buffer (cleared, then
+/// filled — no allocation once `out` has the capacity). Returns the
+/// per-row scale. This is the only per-row quantizer; the allocating
+/// entry point wraps it, so buffered and fresh results are bit-identical
+/// by construction.
+pub fn quantize_row_into(row: &[f32], bits: IntBits, out: &mut Vec<i32>) -> f32 {
     let amax = row.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
     let scale = if amax == 0.0 { 1.0 } else { amax / bits.qmax() as f32 };
     let qmax = bits.qmax();
-    let q = row.iter().map(|&x| ((x / scale).round() as i32).clamp(-qmax, qmax)).collect();
-    (q, scale)
+    out.clear();
+    out.extend(row.iter().map(|&x| ((x / scale).round() as i32).clamp(-qmax, qmax)));
+    scale
 }
 
 /// Keep only the top `msb` magnitude bits of one signed value (the scalar

@@ -15,6 +15,6 @@ pub mod lz;
 pub mod opcount;
 
 pub use dlzs::{dlzs_mul, slzs_mul, LzWeight};
-pub use fixed::{quantize_row, truncate_msb, IntBits, QuantMat};
+pub use fixed::{quantize_row, quantize_row_into, truncate_msb, IntBits, QuantMat};
 pub use lz::{lz_count, LzCode};
 pub use opcount::{EquivWeights, OpCounter, OpKind};

@@ -23,7 +23,7 @@ pub mod sufa;
 
 pub use flash2::{flash2_attention, Flash2Params};
 pub use ref_attn::{dense_attention, masked_attention_oracle};
-pub use sufa::{sufa_attention, SufaParams, UpdateOrder};
+pub use sufa::{sufa_attention, sufa_attention_rows_into, SufaParams, SufaScratch, UpdateOrder};
 
 use crate::tensor::Mat;
 
@@ -96,14 +96,7 @@ impl Selection {
     /// so a T ≠ S misuse of [`Selection::causal`] fails loudly instead of
     /// reading the wrong rows.
     pub fn assert_in_range(&self, s: usize) {
-        for (i, row) in self.rows.iter().enumerate() {
-            if let Some(&bad) = row.iter().find(|&&j| j >= s) {
-                panic!(
-                    "selection row {i} references key {bad} but the context has only {s} keys \
-                     (Selection::causal used with T != S?)"
-                );
-            }
-        }
+        assert_rows_in_range(&self.rows, s);
     }
 
     /// Total number of selected (query, key) pairs.
@@ -133,6 +126,21 @@ impl Selection {
             }
         }
         (0..s).filter(|&j| needed[j]).collect()
+    }
+}
+
+/// The range check behind [`Selection::assert_in_range`], usable on a
+/// bare row slice — the attention kernels' workspace-resident (arena)
+/// selection paths run the identical check without building a
+/// `Selection`.
+pub fn assert_rows_in_range(rows: &[Vec<usize>], s: usize) {
+    for (i, row) in rows.iter().enumerate() {
+        if let Some(&bad) = row.iter().find(|&&j| j >= s) {
+            panic!(
+                "selection row {i} references key {bad} but the context has only {s} keys \
+                 (Selection::causal used with T != S?)"
+            );
+        }
     }
 }
 

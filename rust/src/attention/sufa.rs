@@ -54,6 +54,57 @@ pub struct SufaResult {
     pub stalls: u64,
 }
 
+/// Reusable scratch for [`sufa_attention_rows_into`]: the running
+/// accumulator, the per-tile score buffer and the union-membership flags
+/// for the KV-traffic accounting. One per worker thread (owned by
+/// [`crate::pipeline::engine::TileWorkspace`]), reused across rows,
+/// tiles and requests.
+#[derive(Clone, Debug, Default)]
+pub struct SufaScratch {
+    /// Running output accumulator, one entry per head dimension.
+    acc: Vec<f32>,
+    /// Per-tile score buffer (`bc` wide).
+    scores: Vec<f32>,
+    /// Union-membership flags over the context (KV-traffic accounting).
+    needed: Vec<bool>,
+}
+
+impl SufaScratch {
+    /// Pre-grow every buffer for a head dimension `d`, key-tile width
+    /// `bc` and context length `s`, so the next pass allocates nothing.
+    pub fn reserve(&mut self, d: usize, bc: usize, s: usize) {
+        if self.acc.capacity() < d {
+            self.acc.reserve(d - self.acc.len());
+        }
+        if self.scores.capacity() < bc {
+            self.scores.reserve(bc - self.scores.len());
+        }
+        if self.needed.capacity() < s {
+            self.needed.reserve(s - self.needed.len());
+        }
+    }
+
+    /// Bytes of heap capacity currently held (workspace accounting).
+    pub fn capacity_bytes(&self) -> usize {
+        self.acc.capacity() * std::mem::size_of::<f32>()
+            + self.scores.capacity() * std::mem::size_of::<f32>()
+            + self.needed.capacity() * std::mem::size_of::<bool>()
+    }
+}
+
+/// Distinct keys selected by any row (the on-demand KV traffic unit),
+/// counted with reusable membership flags.
+fn union_key_count(rows: &[Vec<usize>], s: usize, needed: &mut Vec<bool>) -> usize {
+    needed.clear();
+    needed.resize(s, false);
+    for row in rows {
+        for &j in row {
+            needed[j] = true;
+        }
+    }
+    needed.iter().filter(|&&n| n).count()
+}
+
 /// Run SU-FA over the per-row selections. `sel.rows[i]` must be ordered by
 /// estimated score (descending). For [`UpdateOrder::Ascend`] the list is
 /// consumed back-to-front. On-demand KV traffic: only the union of selected
@@ -64,51 +115,80 @@ pub fn sufa_attention(
     p: &SufaParams,
     c: &mut OpCounter,
 ) -> SufaResult {
+    let mut scratch = SufaScratch::default();
+    let mut out = Mat::zeros(0, 0);
+    let stalls = sufa_attention_rows_into(inp, &sel.rows, p, c, &mut scratch, &mut out);
+    SufaResult { out, stalls }
+}
+
+/// [`sufa_attention`] over a bare selection-row slice, writing into a
+/// caller-provided output buffer with reusable [`SufaScratch`] — the
+/// tile engine's allocation-free formal stage. This is the only SU-FA
+/// kernel (the allocating entry point wraps it), so buffered and fresh
+/// results — outputs, stalls and op accounting — are identical by
+/// construction. Returns the stall count.
+pub fn sufa_attention_rows_into(
+    inp: &AttnInputs,
+    rows: &[Vec<usize>],
+    p: &SufaParams,
+    c: &mut OpCounter,
+    scratch: &mut SufaScratch,
+    out: &mut Mat,
+) -> u64 {
     let (t, s, d) = (inp.t(), inp.s(), inp.d());
-    assert_eq!(sel.rows.len(), t);
+    assert_eq!(rows.len(), t);
     // Fail loudly on selections built for a different context length
     // (e.g. Selection::causal with T != S) instead of reading wrong rows.
-    sel.assert_in_range(s);
+    super::assert_rows_in_range(rows, s);
     let f = 4u64;
 
     // Traffic: Q once, O once, and only the KV rows some query selected
     // (produced on demand by the PE array — see sim::units::PeArray).
-    let kv_rows = sel.union_keys(s).len();
+    let kv_rows = union_key_count(rows, s, &mut scratch.needed);
     c.dram(f * (2 * t * d) as u64);
     c.dram(f * (2 * kv_rows * d) as u64);
 
-    let mut out = Mat::zeros(t, d);
+    out.reset(t, d);
     let mut stalls = 0u64;
 
     for i in 0..t {
-        let keys = &sel.rows[i];
+        let keys = &rows[i];
         if keys.is_empty() {
             continue;
         }
-        let order: Vec<usize> = match p.order {
-            UpdateOrder::Descend => keys.clone(),
-            UpdateOrder::Ascend => keys.iter().rev().copied().collect(),
+        // Visit order without materializing it: Descend reads the sorted
+        // list as-is, Ascend back-to-front (same floats as the old
+        // `keys.clone()` / reversed copy, minus the per-row allocation).
+        let nkeys = keys.len();
+        let key_at = |idx: usize| match p.order {
+            UpdateOrder::Descend => keys[idx],
+            UpdateOrder::Ascend => keys[nkeys - 1 - idx],
         };
-        let ntiles = ceil_div(order.len(), p.bc);
-        c.sram(f * ((order.len() * d) as u64)); // staged KV tiles
+        let ntiles = ceil_div(nkeys, p.bc);
+        c.sram(f * ((nkeys * d) as u64)); // staged KV tiles
 
         let mut m = f32::NEG_INFINITY;
         let mut l = 0.0f32;
-        let mut acc = vec![0.0f32; d];
+        scratch.acc.clear();
+        scratch.acc.resize(d, 0.0);
+        let acc = &mut scratch.acc;
 
         for tile in 0..ntiles {
             let lo = tile * p.bc;
-            let hi = (lo + p.bc).min(order.len());
+            let hi = (lo + p.bc).min(nkeys);
             let width = hi - lo;
 
             // Scores for this tile.
-            let mut scores = vec![0.0f32; width];
-            for (w, &j) in order[lo..hi].iter().enumerate() {
+            scratch.scores.clear();
+            scratch.scores.resize(width, 0.0);
+            let scores = &mut scratch.scores;
+            for (w, slot) in scores.iter_mut().enumerate() {
+                let j = key_at(lo + w);
                 let mut dot = 0.0f32;
                 for pth in 0..d {
                     dot += inp.q.at(i, pth) * inp.k.at(j, pth);
                 }
-                scores[w] = dot * inp.scale;
+                *slot = dot * inp.scale;
             }
             c.tally(OpKind::Mul, (width * d + width) as u64);
             c.tally(OpKind::Add, (width * (d - 1)) as u64);
@@ -161,8 +241,9 @@ pub fn sufa_attention(
             c.tally(OpKind::Add, width as u64);
             c.tally(OpKind::Exp, width as u64);
             c.tally(OpKind::Add, (width - 1) as u64);
-            for (w, &j) in order[lo..hi].iter().enumerate() {
-                let prob = (scores[w] - m).exp();
+            for (w, &score) in scores.iter().enumerate() {
+                let j = key_at(lo + w);
+                let prob = (score - m).exp();
                 l += prob;
                 for pth in 0..d {
                     acc[pth] += prob * inp.v.at(j, pth);
@@ -181,7 +262,7 @@ pub fn sufa_attention(
         }
     }
 
-    SufaResult { out, stalls }
+    stalls
 }
 
 /// Sort each selection row by the *true* attention scores, descending —
@@ -315,6 +396,34 @@ mod tests {
         let dense = dense_attention(&inp, usize::MAX, &mut dc);
         assert!(r.stalls > 0, "reversed order must trigger recoveries");
         assert!(r.out.max_abs_diff(&dense) < 1e-4, "recovery must preserve numerics");
+    }
+
+    #[test]
+    fn rows_into_reuses_dirty_buffers_bit_identically() {
+        // Workspace contract: SU-FA into a dirty output buffer with
+        // dirty scratch equals the fresh run — outputs, stalls and op
+        // accounting — in both update orders, stalls included.
+        let (q, k, v) = inputs(5, 48, 8, 9);
+        let inp = AttnInputs::new(&q, &k, &v);
+        let sorted = sort_selection_by_true_scores(&inp, &Selection::full(5, 48));
+        let reversed = Selection {
+            rows: sorted.rows.iter().map(|r| r.iter().rev().copied().collect()).collect(),
+        };
+        let mut scratch = SufaScratch::default();
+        let mut out = Mat::randn(3, 3, 1.0, &mut Rng::new(2)); // dirty, wrong shape
+        for sel in [&sorted, &reversed] {
+            for order in [UpdateOrder::Descend, UpdateOrder::Ascend] {
+                let p = SufaParams { bc: 8, order };
+                let mut cw = OpCounter::new();
+                let want = sufa_attention(&inp, sel, &p, &mut cw);
+                let mut cg = OpCounter::new();
+                let stalls =
+                    sufa_attention_rows_into(&inp, &sel.rows, &p, &mut cg, &mut scratch, &mut out);
+                assert_eq!(out.max_abs_diff(&want.out), 0.0, "{order:?} output drift");
+                assert_eq!(stalls, want.stalls, "{order:?} stall drift");
+                assert_eq!(cg, cw, "{order:?} op drift");
+            }
+        }
     }
 
     #[test]

@@ -7,9 +7,9 @@
 
 use super::{f, header, row};
 use crate::kvcache::{CacheStats, SessionConfig, SessionStore};
-use crate::pipeline::{PipelineConfig, SparseAttentionPipeline, StageOps};
+use crate::pipeline::{PipelineConfig, SparseAttentionPipeline, StageOps, WorkspacePool};
 use crate::tensor::Mat;
-use crate::util::{Rng, Summary};
+use crate::util::{allocmeter, Rng, Summary};
 
 /// Everything `BENCH_decode.json` reports.
 #[derive(Clone, Debug)]
@@ -41,6 +41,19 @@ pub struct DecodeBenchResult {
     pub union_rows_mean: f64,
     /// Per-step latency distribution (kept for percentile queries).
     pub step_wall: Summary,
+    /// Heap allocations metered inside the decode rows' stage cores,
+    /// summed over the timed steps. The pool is warmed by the prefill,
+    /// so steady state is **zero** — the regression guard for the
+    /// allocation-free tile engine (`crate::pipeline::engine`). Real
+    /// measurement only when a counting allocator is installed
+    /// (`alloc_counter_on`); vacuously zero otherwise.
+    pub hot_path_allocs: u64,
+    /// Whether a counting allocator was observed (the `star` binary and
+    /// the bench drivers install one; plain `cargo test` does not).
+    pub alloc_counter_on: bool,
+    /// Peak tile-workspace capacity during the timed steps, bytes
+    /// (compare against `crate::sim::sram::Sram::STAR_BUDGET_BYTES`).
+    pub workspace_bytes: usize,
 }
 
 /// Run the decode benchmark on the STAR configuration (single host
@@ -57,15 +70,22 @@ pub fn decode_throughput() -> DecodeBenchResult {
     let v = Mat::randn(total, d, 1.0, &mut rng);
     let slice = |m: &Mat, lo: usize, hi: usize| Mat::from_fn(hi - lo, d, |i, j| m.at(lo + i, j));
 
-    // Session open: one prefill chunk.
+    // Session open: one prefill chunk. The workspace pool persists
+    // across the whole session, exactly as a serving worker holds it —
+    // the prefill warms it, so the timed decode steps run on warm
+    // buffers and must meter zero hot-path allocations.
+    let pool = WorkspacePool::new();
     let mut store = SessionStore::new(SessionConfig::for_pipeline(&cfg, d, 0));
-    // Prefill phase is session warm-up; only decode steps are timed.
-    pipe.prefill(
+    // Prefill phase is session warm-up (buffers and cache); only decode
+    // steps are timed. A prefill is one big decode chunk into the empty
+    // session (`SparseAttentionPipeline::prefill` is exactly this).
+    pipe.decode_step_pooled(
         &mut store,
         1,
         &slice(&q, 0, prefill_tokens),
         &slice(&k, 0, prefill_tokens),
         &slice(&v, 0, prefill_tokens),
+        &pool,
     )
     .expect("prefill");
 
@@ -73,20 +93,25 @@ pub fn decode_throughput() -> DecodeBenchResult {
     let mut ops = StageOps::default();
     let mut step_wall = Summary::new();
     let mut union_rows = 0usize;
+    let mut hot_path_allocs = 0u64;
+    let mut workspace_bytes = 0usize;
     let t0 = std::time::Instant::now();
     for pos in prefill_tokens..total {
         let r = pipe
-            .decode_step(
+            .decode_step_pooled(
                 &mut store,
                 1,
                 &slice(&q, pos, pos + 1),
                 &slice(&k, pos, pos + 1),
                 &slice(&v, pos, pos + 1),
+                &pool,
             )
             .expect("decode step");
         step_wall.add(r.wall_s);
         ops.merge(&r.ops);
         union_rows += r.union_rows;
+        hot_path_allocs += r.hot_path_allocs;
+        workspace_bytes = workspace_bytes.max(r.workspace_bytes);
     }
     let wall = t0.elapsed().as_secs_f64();
 
@@ -112,6 +137,9 @@ pub fn decode_throughput() -> DecodeBenchResult {
         cache: store.stats(),
         union_rows_mean: union_rows as f64 / decode_tokens as f64,
         step_wall,
+        hot_path_allocs,
+        alloc_counter_on: allocmeter::installed(),
+        workspace_bytes,
     };
 
     header("decode throughput (paged KV-cache, STAR config)");
@@ -152,6 +180,21 @@ pub fn decode_throughput() -> DecodeBenchResult {
             format!("remat={}", stats.pages_rematerialized),
         ],
     );
+    row(
+        "hot path",
+        &[
+            format!(
+                "allocs={}{}",
+                result.hot_path_allocs,
+                if result.alloc_counter_on { "" } else { " (no counting allocator)" }
+            ),
+            format!(
+                "workspace={} of {} sim SRAM",
+                crate::util::fmt_bytes(result.workspace_bytes as f64),
+                crate::util::fmt_bytes(crate::sim::sram::Sram::STAR_BUDGET_BYTES as f64),
+            ),
+        ],
+    );
     result
 }
 
@@ -176,6 +219,16 @@ mod tests {
         assert_eq!(r.cache.pages_evicted, 0, "unbounded pool never evicts");
         // DLZS prediction dominates shifts; formal pays the exponentials.
         assert!(r.ops.predict.shift > 0 && r.ops.formal.exp > 0);
+        // The zero-allocation contract: the prefill warms the pooled
+        // workspace, so the timed decode steps' stage cores must meter
+        // zero heap allocations (vacuously true without a counting
+        // allocator; the release bench run installs one and CI checks
+        // the JSON).
+        assert_eq!(
+            r.hot_path_allocs, 0,
+            "steady-state decode hot loop allocated on the heap"
+        );
+        assert!(r.workspace_bytes > 0, "decode rows ran inside a workspace");
     }
 
     #[test]
@@ -191,5 +244,12 @@ mod tests {
         assert!(j.get("stage_ops").unwrap().get("predict").is_some());
         assert!(j.get("step_latency_ms").unwrap().get("p95").is_some());
         assert!(j.get("cache").unwrap().get("page_hits").is_some());
+        // The zero-allocation regression guard the CI smoke greps for.
+        assert_eq!(j.get("hot_path_allocs").unwrap().as_f64(), Some(0.0));
+        assert!(j.get("workspace_bytes").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(
+            j.get("sram_budget_bytes").unwrap().as_f64(),
+            Some((316 * 1024) as f64)
+        );
     }
 }

@@ -292,6 +292,15 @@ pub fn run(name: &str) -> Result<()> {
                 ("equiv_adds_per_token", n(r.equiv_adds_per_token)),
                 ("reprefill_equiv_adds", n(r.reprefill_equiv_adds)),
                 ("union_rows_mean", n(r.union_rows_mean)),
+                // Zero-allocation hot-path guard (counting allocator) +
+                // workspace/SRAM correspondence (DESIGN.md §8).
+                ("hot_path_allocs", n(r.hot_path_allocs as f64)),
+                ("alloc_counter_on", Json::Bool(r.alloc_counter_on)),
+                ("workspace_bytes", n(r.workspace_bytes as f64)),
+                (
+                    "sram_budget_bytes",
+                    n(crate::sim::sram::Sram::STAR_BUDGET_BYTES as f64),
+                ),
                 ("stage_ops", stage_ops_json(&r.ops)),
                 ("reprefill_stage_ops", stage_ops_json(&r.reprefill_ops)),
                 (

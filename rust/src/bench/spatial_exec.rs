@@ -14,7 +14,9 @@
 use super::{header, row};
 use crate::bench::trajectory::stage_ops_json;
 use crate::config::SpatialConfig;
-use crate::pipeline::{PipelineConfig, PipelineInputs, ShardedPipeline, SparseAttentionPipeline};
+use crate::pipeline::{
+    PipelineConfig, PipelineInputs, ShardedPipeline, SparseAttentionPipeline, WorkspacePool,
+};
 use crate::spatial::sim::{spatial_run, CoreKind, Dataflow};
 use crate::tensor::Mat;
 use crate::util::json::Json;
@@ -58,6 +60,13 @@ pub struct SpatialExecReport {
     /// Every sharded output/selection matched the single-core run
     /// bit for bit.
     pub parity_ok: bool,
+    /// Heap allocations metered inside the workers' home-phase stage
+    /// cores across all measured runs (warm-pool steady state is zero;
+    /// the first run of each worker count warms cold workspaces).
+    pub hot_path_allocs: u64,
+    /// Peak per-worker tile-workspace capacity seen, bytes (compare
+    /// against `crate::sim::sram::Sram::STAR_BUDGET_BYTES`).
+    pub workspace_bytes: usize,
 }
 
 /// Wall-clock samples per configuration (best-of, to shed scheduler
@@ -110,9 +119,19 @@ pub fn spatial_exec_with(
     let mut parity_ok = true;
     let mut ops = None;
     let mut points = Vec::with_capacity(shard_counts.len());
+    // One pool across every measured run, as a serving worker would
+    // hold it: later runs reuse the earlier runs' warm workspaces.
+    let pool = WorkspacePool::new();
+    let mut hot_path_allocs = 0u64;
+    let mut workspace_bytes = 0usize;
     for &w in shard_counts {
         let pipe = ShardedPipeline::new(cfg, w);
-        let (r, wall_s) = best_wall(RUNS, || pipe.run(&inputs));
+        let (r, wall_s) = best_wall(RUNS, || {
+            let r = pipe.run_pooled(&inputs, &pool);
+            hot_path_allocs += r.hot_path_allocs;
+            workspace_bytes = workspace_bytes.max(r.workspace_bytes);
+            r
+        });
         let ok = r.out.max_abs_diff(&single.out) == 0.0 && r.selection == single.selection;
         if !ok {
             eprintln!("spatial-exec: PARITY FAILURE at {w} workers");
@@ -147,6 +166,18 @@ pub fn spatial_exec_with(
         points.push(point);
     }
 
+    row(
+        "hot path",
+        &[
+            format!("allocs={hot_path_allocs} (incl. cold-workspace warm-up)"),
+            format!(
+                "workspace={} of {} sim SRAM",
+                crate::util::fmt_bytes(workspace_bytes as f64),
+                crate::util::fmt_bytes(crate::sim::sram::Sram::STAR_BUDGET_BYTES as f64),
+            ),
+        ],
+    );
+
     SpatialExecReport {
         t,
         s,
@@ -156,6 +187,8 @@ pub fn spatial_exec_with(
         ops: ops.unwrap_or_default(),
         points,
         parity_ok,
+        hot_path_allocs,
+        workspace_bytes,
     }
 }
 
@@ -185,6 +218,9 @@ pub fn payload(r: &SpatialExecReport) -> Json {
         ("keep_ratio", n(r.keep)),
         ("single_core_wall_s", n(r.single_wall_s)),
         ("parity_ok", Json::Bool(r.parity_ok)),
+        ("hot_path_allocs", n(r.hot_path_allocs as f64)),
+        ("workspace_bytes", n(r.workspace_bytes as f64)),
+        ("sram_budget_bytes", n(crate::sim::sram::Sram::STAR_BUDGET_BYTES as f64)),
         (
             "columns",
             Json::Arr(
@@ -247,9 +283,12 @@ mod tests {
             assert!(p.wall_s > 0.0 && p.analytic_total_s > 0.0);
             assert!(p.shards > 1 || p.ring_payload_bytes == 0);
         }
+        assert!(r.workspace_bytes > 0, "sharded workers ran inside workspaces");
         let j = payload(&r);
         assert_eq!(j.get("bench").unwrap().as_str(), Some("spatial_exec"));
         assert_eq!(j.get("parity_ok").unwrap().as_bool(), Some(true));
         assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 3);
+        assert!(j.get("hot_path_allocs").is_some());
+        assert!(j.get("workspace_bytes").unwrap().as_f64().unwrap() > 0.0);
     }
 }

@@ -33,6 +33,8 @@ struct Inner {
     cache_page_hits: u64,
     cache_pages_rematerialized: u64,
     cache_sessions_evicted: u64,
+    // Peak per-worker tile-workspace residency (bytes) seen so far.
+    workspace_bytes: usize,
     // Sequence-sharded over-target prefill path.
     sharded_prefills: u64,
     ring_steps: u64,
@@ -92,6 +94,12 @@ pub struct MetricsSnapshot {
     pub cache_pages_rematerialized: u64,
     /// LRU whole-session evictions.
     pub cache_sessions_evicted: u64,
+    /// Peak bytes of tile-workspace capacity a single pool worker held
+    /// (the native pipelines' preallocated stage scratch —
+    /// `crate::pipeline::engine`). Reported next to the modeled SRAM
+    /// budget ([`crate::sim::sram::Sram::STAR_BUDGET_BYTES`]) so the
+    /// serving working set is checkable against the hardware model.
+    pub workspace_bytes: usize,
     /// Over-target prefill requests served on the sequence-sharded
     /// pipeline.
     pub sharded_prefills: u64,
@@ -154,6 +162,13 @@ impl Metrics {
         m.stalls += stalls;
     }
 
+    /// Record one worker's tile-workspace pool residency (bytes); the
+    /// snapshot keeps the peak.
+    pub fn record_workspace_bytes(&self, bytes: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.workspace_bytes = m.workspace_bytes.max(bytes);
+    }
+
     /// Account one sequence-sharded prefill run: per-shard stage busy
     /// times plus ring-step/payload/gather counters.
     pub fn record_sharded(&self, r: &crate::pipeline::ShardedReport) {
@@ -206,6 +221,7 @@ impl Metrics {
             cache_page_hits: m.cache_page_hits,
             cache_pages_rematerialized: m.cache_pages_rematerialized,
             cache_sessions_evicted: m.cache_sessions_evicted,
+            workspace_bytes: m.workspace_bytes,
             sharded_prefills: m.sharded_prefills,
             ring_steps: m.ring_steps,
             ring_payload_bytes: m.ring_payload_bytes,
@@ -244,6 +260,15 @@ impl MetricsSnapshot {
                 self.stage_kv_gen_s * 1e3,
                 self.stage_formal_s * 1e3,
                 self.stalls
+            ));
+        }
+        if self.workspace_bytes > 0 {
+            let budget = crate::sim::sram::Sram::STAR_BUDGET_BYTES;
+            s.push_str(&format!(
+                "\nworkspace: {} peak per worker (sim SRAM budget {}, {})",
+                crate::util::fmt_bytes(self.workspace_bytes as f64),
+                crate::util::fmt_bytes(budget as f64),
+                if self.workspace_bytes <= budget { "fits" } else { "exceeds" }
             ));
         }
         if self.decode_steps > 0 {
@@ -294,6 +319,20 @@ mod tests {
         assert!((s.mean_batch_rows - 96.0).abs() < 1e-12);
         assert!((s.rows_per_s - 192.0).abs() < 1e-6);
         assert!(s.render().contains("requests=2"));
+    }
+
+    #[test]
+    fn workspace_gauge_keeps_peak_and_renders_budget() {
+        let m = Metrics::new();
+        m.record_workspace_bytes(4096);
+        m.record_workspace_bytes(1024);
+        let s = m.snapshot();
+        assert_eq!(s.workspace_bytes, 4096);
+        let line = s.render();
+        assert!(line.contains("workspace:"), "{line}");
+        assert!(line.contains("fits"), "{line}");
+        m.record_workspace_bytes(400 * 1024 * 1024);
+        assert!(m.snapshot().render().contains("exceeds"));
     }
 
     #[test]

@@ -48,7 +48,9 @@ use super::metrics::{Metrics, MetricsSnapshot};
 use super::router::{Admission, Request, Response, Router};
 use crate::config::AccelConfig;
 use crate::kvcache::SessionStore;
-use crate::pipeline::{PipelineConfig, PipelineInputs, ShardedPipeline, SparseAttentionPipeline};
+use crate::pipeline::{
+    PipelineConfig, PipelineInputs, ShardedPipeline, SparseAttentionPipeline, WorkspacePool,
+};
 #[cfg(feature = "pjrt")]
 use crate::runtime::Engine;
 use crate::sim::dram::DramChannel;
@@ -340,6 +342,11 @@ fn dispatch(
 /// Per-worker backend state.
 #[derive(Default)]
 struct WorkerState {
+    /// Per-worker tile-workspace pool, keyed by shape class: the native
+    /// pipelines draw warm [`crate::pipeline::TileWorkspace`]s from
+    /// here, so steady-state serving performs zero hot-path allocations
+    /// (see `crate::pipeline::engine`). Per worker — never contended.
+    workspaces: WorkspacePool,
     /// Per-worker PJRT engine, built on first use.
     #[cfg(feature = "pjrt")]
     engine: Option<Engine>,
@@ -347,7 +354,7 @@ struct WorkerState {
 
 fn execute_batch(
     backend: &Backend,
-    #[allow(unused_variables)] state: &mut WorkerState,
+    state: &mut WorkerState,
     batch: Batch,
     replies: Vec<Sender<Response>>,
     metrics: &Metrics,
@@ -356,10 +363,11 @@ fn execute_batch(
     let sealed = batch.sealed_s;
     match backend {
         Backend::Native { pipeline, contexts, sessions, shards } => {
+            let pool = &state.workspaces;
             let out = if batch.sharded {
-                run_sharded_native(pipeline, *shards, contexts, &batch, metrics)
+                run_sharded_native(pipeline, *shards, contexts, &batch, metrics, pool)
             } else {
-                run_native(pipeline, contexts, sessions.as_ref(), &batch, metrics)
+                run_native(pipeline, contexts, sessions.as_ref(), &batch, metrics, pool)
             };
             let now = started.elapsed().as_secs_f64();
             // Surface misconfiguration instead of silently serving empty
@@ -475,6 +483,7 @@ fn run_native(
     sessions: Option<&Arc<Mutex<SessionStore>>>,
     batch: &Batch,
     metrics: &Metrics,
+    workspaces: &WorkspacePool,
 ) -> Result<(Vec<Option<Mat>>, Vec<Option<String>>)> {
     if let Err(e) = cfg.validate() {
         anyhow::bail!("invalid pipeline config: {e}");
@@ -549,12 +558,13 @@ fn run_native(
                  the session would be {expected} after this append",
                 req.s
             );
-            pipeline.decode_step(&mut store, sid, q, kn, vn)
+            pipeline.decode_step_pooled(&mut store, sid, q, kn, vn, workspaces)
         };
         match step() {
             Ok(report) => {
                 metrics.record_stage_times(&report.timing, report.stalls);
                 metrics.record_decode(&report);
+                metrics.record_workspace_bytes(report.workspace_bytes);
                 outs[i] = Some(report.out);
             }
             Err(e) => {
@@ -580,8 +590,10 @@ fn run_native(
         }
         at += q.rows;
     }
-    let report = SparseAttentionPipeline::new(*cfg).run(&PipelineInputs::qkv(&qcat, k, v));
+    let inputs = PipelineInputs::qkv(&qcat, k, v);
+    let report = SparseAttentionPipeline::new(*cfg).run_pooled(&inputs, workspaces);
     metrics.record_stage_times(&report.timing, report.stalls);
+    metrics.record_workspace_bytes(report.workspace_bytes);
     let mut at = 0;
     for (ri, q) in with_q {
         outs[ri] = Some(Mat::from_fn(q.rows, d, |i, j| report.out.at(at + i, j)));
@@ -603,6 +615,7 @@ fn run_sharded_native(
     contexts: &BTreeMap<String, (Mat, Mat)>,
     batch: &Batch,
     metrics: &Metrics,
+    workspaces: &WorkspacePool,
 ) -> Result<(Vec<Option<Mat>>, Vec<Option<String>>)> {
     if let Err(e) = cfg.validate() {
         anyhow::bail!("invalid pipeline config: {e}");
@@ -632,9 +645,10 @@ fn run_sharded_native(
             q.cols,
             k.cols
         );
-        let report = pipeline.run(&PipelineInputs::qkv(q, k, v));
+        let report = pipeline.run_pooled(&PipelineInputs::qkv(q, k, v), workspaces);
         metrics.record_stage_times(&report.timing, report.stalls);
         metrics.record_sharded(&report);
+        metrics.record_workspace_bytes(report.workspace_bytes);
         outs[i] = Some(report.out);
     }
     Ok((outs, errors))

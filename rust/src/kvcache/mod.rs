@@ -28,6 +28,6 @@ pub mod page;
 pub mod predict;
 pub mod session;
 
-pub use page::{gather_rows, CacheStats, KvPage, PageId, PagedKvCache};
-pub use predict::{score_row, QueryOperand};
+pub use page::{gather_rows, gather_rows_into, CacheStats, KvPage, PageId, PagedKvCache};
+pub use predict::{score_row, score_row_into, QueryOperand};
 pub use session::{AppendOutcome, SessionConfig, SessionStore};

@@ -146,14 +146,31 @@ pub fn gather_rows(
     d: usize,
 ) -> (crate::tensor::Mat, crate::tensor::Mat) {
     use crate::tensor::Mat;
-    let mut k = Mat::zeros(keys.len(), d);
-    let mut v = Mat::zeros(keys.len(), d);
+    let mut k = Mat::zeros(0, 0);
+    let mut v = Mat::zeros(0, 0);
+    gather_rows_into(pages, page_size, keys, d, &mut k, &mut v);
+    (k, v)
+}
+
+/// [`gather_rows`] writing into caller-provided staging buffers (which
+/// are [`crate::tensor::Mat::reset`] to `keys.len() × d` — no allocation
+/// once they have the capacity). This is the only cache-read gather; the
+/// allocating entry point wraps it.
+pub fn gather_rows_into(
+    pages: &[&KvPage],
+    page_size: usize,
+    keys: &[usize],
+    d: usize,
+    k: &mut crate::tensor::Mat,
+    v: &mut crate::tensor::Mat,
+) {
+    k.reset(keys.len(), d);
+    v.reset(keys.len(), d);
     for (i, &key) in keys.iter().enumerate() {
         let page = pages[key / page_size];
         k.row_mut(i).copy_from_slice(page.k_row(key % page_size));
         v.row_mut(i).copy_from_slice(page.v_row(key % page_size));
     }
-    (k, v)
 }
 
 /// Lifetime counters of a page pool / session store.

@@ -14,7 +14,7 @@
 //! causal prefill for every chunking, tile size and thread count.
 
 use super::page::KvPage;
-use crate::arith::{dlzs_mul, quantize_row, slzs_mul, truncate_msb, LzCode, OpCounter, OpKind};
+use crate::arith::{dlzs_mul, quantize_row_into, slzs_mul, truncate_msb, LzCode, OpCounter, OpKind};
 use crate::sim::pipeline::PredictKind;
 use crate::sparsity::bits_for;
 
@@ -34,36 +34,89 @@ pub struct QueryOperand {
 }
 
 impl QueryOperand {
+    /// An empty operand whose buffers [`QueryOperand::encode_into`] can
+    /// reuse across decode rows — the workspace-resident spelling of
+    /// [`QueryOperand::encode`].
+    pub fn reusable() -> QueryOperand {
+        QueryOperand {
+            raw: Vec::new(),
+            q: Vec::new(),
+            codes: Vec::new(),
+            scale: 1.0,
+            kind: PredictKind::None,
+            w: 0,
+        }
+    }
+
     /// Encode one query row for the given scheme, charging the encode
     /// ops the datapath pays per decode step.
     pub fn encode(row: &[f32], kind: PredictKind, w: u32, c: &mut OpCounter) -> QueryOperand {
+        let mut op = QueryOperand::reusable();
+        op.encode_into(row, kind, w, c);
+        op
+    }
+
+    /// [`QueryOperand::encode`] re-encoding in place: the raw, quantized
+    /// and code buffers are cleared and refilled, so a reused operand
+    /// allocates nothing once warm. This is the only encoder (the
+    /// allocating entry point wraps it), so reused and fresh operands
+    /// are bit-identical by construction.
+    pub fn encode_into(&mut self, row: &[f32], kind: PredictKind, w: u32, c: &mut OpCounter) {
         let d = row.len();
-        let (mut q, scale) = match kind {
-            PredictKind::None => (Vec::new(), 1.0),
-            _ => quantize_row(row, bits_for(w)),
+        let scale = match kind {
+            PredictKind::None => {
+                self.q.clear();
+                1.0
+            }
+            _ => quantize_row_into(row, bits_for(w), &mut self.q),
         };
-        let codes = match kind {
+        self.codes.clear();
+        match kind {
             PredictKind::DlzsCross | PredictKind::Slzs => {
                 c.tally(OpKind::LzEncode, d as u64);
                 c.sram(d as u64); // compact code store (~1 byte/code)
-                q.iter().map(|&x| LzCode::encode(x, w)).collect()
+                self.codes.extend(self.q.iter().map(|&x| LzCode::encode(x, w)));
             }
             PredictKind::LowBitMul => {
                 let msb = 4.min(w);
-                for v in q.iter_mut() {
+                for v in self.q.iter_mut() {
                     *v = truncate_msb(*v, msb);
                 }
                 c.sram((d * 2) as u64);
-                Vec::new()
             }
-            PredictKind::None => Vec::new(),
-        };
-        QueryOperand { raw: row.to_vec(), q, codes, scale, kind, w }
+            PredictKind::None => {}
+        }
+        self.raw.clear();
+        self.raw.extend_from_slice(row);
+        self.scale = scale;
+        self.kind = kind;
+        self.w = w;
     }
 
     /// Head dimension of the encoded row.
     pub fn d(&self) -> usize {
         self.raw.len()
+    }
+
+    /// Pre-grow the operand buffers for head dimension `d`, so the next
+    /// [`QueryOperand::encode_into`] allocates nothing.
+    pub fn reserve(&mut self, d: usize) {
+        if self.raw.capacity() < d {
+            self.raw.reserve(d - self.raw.len());
+        }
+        if self.q.capacity() < d {
+            self.q.reserve(d - self.q.len());
+        }
+        if self.codes.capacity() < d {
+            self.codes.reserve(d - self.codes.len());
+        }
+    }
+
+    /// Bytes of heap capacity currently held (workspace accounting).
+    pub fn capacity_bytes(&self) -> usize {
+        self.raw.capacity() * std::mem::size_of::<f32>()
+            + self.q.capacity() * std::mem::size_of::<i32>()
+            + self.codes.capacity() * std::mem::size_of::<LzCode>()
     }
 }
 
@@ -79,8 +132,24 @@ pub fn score_row(
     attn_scale: f32,
     c: &mut OpCounter,
 ) -> Vec<f32> {
-    let d = qop.d();
     let mut out = Vec::with_capacity(limit);
+    score_row_into(qop, pages, limit, attn_scale, c, &mut out);
+    out
+}
+
+/// [`score_row`] writing into a caller-provided buffer (cleared, then
+/// filled — no allocation once it has the capacity). This is the only
+/// cached-operand scorer; the allocating entry point wraps it.
+pub fn score_row_into(
+    qop: &QueryOperand,
+    pages: &[&KvPage],
+    limit: usize,
+    attn_scale: f32,
+    c: &mut OpCounter,
+    out: &mut Vec<f32>,
+) {
+    let d = qop.d();
+    out.clear();
     'pages: for page in pages {
         for r in 0..page.len() {
             if out.len() == limit {
@@ -147,7 +216,6 @@ pub fn score_row(
             c.sram((limit * d * 2) as u64);
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -166,6 +234,34 @@ mod tests {
             pages.last_mut().unwrap().push(k.row(i), v.row(i), IntBits::Int8, 7);
         }
         pages
+    }
+
+    #[test]
+    fn encode_into_reuses_dirty_operand_bit_identically() {
+        // The workspace contract: re-encoding a different row (and a
+        // different scheme) into a used operand equals a fresh encode —
+        // operand contents, scales AND charged ops.
+        let mut rng = Rng::new(21);
+        let rows: Vec<Vec<f32>> =
+            (0..4).map(|_| (0..16).map(|_| rng.normal_f32(0.0, 2.0)).collect()).collect();
+        let kinds = [
+            PredictKind::DlzsCross,
+            PredictKind::LowBitMul,
+            PredictKind::Slzs,
+            PredictKind::None,
+        ];
+        let mut reused = QueryOperand::reusable();
+        for (row, kind) in rows.iter().zip(kinds) {
+            let mut cw = OpCounter::new();
+            let fresh = QueryOperand::encode(row, kind, 7, &mut cw);
+            let mut cg = OpCounter::new();
+            reused.encode_into(row, kind, 7, &mut cg);
+            assert_eq!(reused.raw, fresh.raw, "{kind:?}");
+            assert_eq!(reused.q, fresh.q, "{kind:?}");
+            assert_eq!(reused.codes, fresh.codes, "{kind:?}");
+            assert_eq!(reused.scale, fresh.scale, "{kind:?}");
+            assert_eq!(cg, cw, "{kind:?} op drift");
+        }
     }
 
     #[test]

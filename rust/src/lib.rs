@@ -22,7 +22,13 @@
 //!   serving, and [`pipeline::ShardedPipeline`] runs the same stages
 //!   **sequence-sharded** across worker threads (executable
 //!   Spatial-STAR / DRAttention) with bit-identical outputs at every
-//!   worker count.
+//!   worker count. All three front-ends drive one allocation-free
+//!   tile-execution core ([`pipeline::engine`]): per-worker
+//!   [`pipeline::TileWorkspace`]s (pooled per shape class by
+//!   [`pipeline::WorkspacePool`]) hold every stage buffer, the
+//!   steady-state hot loop performs zero heap allocations (metered by
+//!   [`util::allocmeter`]), and workspace capacity is reported next to
+//!   the modeled SRAM budget (DESIGN.md §8).
 //! * [`kvcache`] — the paged KV-cache + decode-session subsystem:
 //!   block-granular pages (sized to the pipeline tile) holding K/V rows
 //!   plus frozen per-row prediction operands, an LRU session store with

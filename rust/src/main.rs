@@ -13,6 +13,7 @@
 //!                           under the `pjrt` feature)
 
 use star::cli::Args;
+use star::util::allocmeter::CountingAllocator;
 use star::config::{AccelConfig, ModelConfig, SpatialConfig};
 use star::coordinator::{Backend, BatcherConfig, Request, Router, Server, ServerConfig, Variant};
 use star::pipeline::PipelineConfig;
@@ -21,6 +22,12 @@ use star::sim::pipeline::{simulate, FeatureSet, WorkloadShape};
 use star::spatial::sim::{spatial_run, CoreKind, Dataflow};
 use star::util::logging;
 use star::Result;
+
+// Meter heap allocations per thread (one counter bump per alloc) so
+// `star bench decode` / `spatial-exec` report a real `hot_path_allocs`
+// — the zero-allocation regression guard of the tile engine.
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
 
 fn main() {
     logging::init_from_env();

@@ -1,0 +1,1115 @@
+//! The tile-execution core: one allocation-free implementation of the
+//! predict → top-k → KV-gen → SU-FA stage loop, driven by all three
+//! pipeline front-ends.
+//!
+//! STAR's central claim is that cross-stage coordinated tiling keeps a
+//! tile's operands resident in **fixed on-chip buffers** across all four
+//! stages (PAPER.md §IV). This module is the software realization of
+//! those buffers:
+//!
+//! * [`TileWorkspace`] — one preallocated, config-sized scratch set per
+//!   worker thread: the staged Q tile, the score tile, the top-k
+//!   candidate arena, the gathered-KV staging buffers and the SU-FA
+//!   accumulators. Reused across tiles *and across requests*; buffers
+//!   only ever grow, so the steady-state stage core performs **zero
+//!   heap allocations** (metered per thread by
+//!   [`crate::util::allocmeter`] and reported as
+//!   `hot_path_allocs` in every pipeline report).
+//! * `TileExecutor` (crate-internal) — the stage bodies themselves. The batch prefill
+//!   path ([`super::SparseAttentionPipeline::run`]), the autoregressive
+//!   decode path ([`super::SparseAttentionPipeline::decode_step`]) and
+//!   the sequence-sharded path ([`super::ShardedPipeline`]) all drive
+//!   these methods instead of keeping three divergent copies of the
+//!   loop.
+//! * [`WorkspacePool`] — workspaces keyed by [`ShapeClass`], so a
+//!   serving worker reuses one warm workspace per shape class across
+//!   requests and steady-state serving allocates nothing on the hot
+//!   path.
+//!
+//! # Workspace ↔ SRAM correspondence
+//!
+//! [`TileWorkspace::capacity_bytes`] is the software working set of one
+//! tile in flight — the direct analogue of the modeled on-chip SRAM
+//! residency ([`crate::sim::sram`]). Reports carry it as
+//! `workspace_bytes` next to the simulator's budget
+//! ([`crate::sim::sram::Sram::STAR_BUDGET_BYTES`]) so the reproduction's
+//! working set is checkable against the modeled hardware (DESIGN.md §8).
+//!
+//! # What "zero hot-path allocations" means
+//!
+//! The metered region is the four-stage compute core per tile/row. Three
+//! things are deliberately *outside* it and documented as such:
+//! capacity maintenance (`reserve`-style growth as a decode context
+//! lengthens — amortized, monotone), result materialization (the
+//! returned report's output matrix and selection rows must outlive the
+//! workspace), and the sharded ring payload (candidate lists that travel
+//! between threads must own their storage).
+
+use super::config::PipelineConfig;
+use super::exec::PipelineInputs;
+use super::report::{StageOps, StageTiming};
+use crate::arith::{OpCounter, OpKind};
+use crate::attention::{sufa_attention_rows_into, AttnInputs, SufaParams, SufaScratch, UpdateOrder};
+use crate::kvcache::{gather_rows_into, score_row_into, KvPage, QueryOperand};
+use crate::sim::pipeline::{FormalKind, PredictKind, TopkKind};
+use crate::sparsity::topk::{sads_topk_into, vanilla_topk_into, TopkScratch};
+use crate::sparsity::{PredictScheme, Predictor, PreparedPredict};
+use crate::tensor::Mat;
+use crate::util::allocmeter;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// How the top-k stage obtains its scores. Shared by the batch, decode
+/// and sharded front-ends so the predict prologue is one code path.
+pub(crate) enum ScoreSource {
+    /// No scores: selection is the full natural-order key set.
+    None,
+    /// Oracle: exact Q·Kᵀ (no prediction ops charged).
+    Exact,
+    /// Counted approximate prediction over prepared operands.
+    Prepared(PreparedPredict),
+}
+
+/// The predict-stage prologue: prepare operands once, with globally
+/// chosen quantization scales. The global-scale contract is what keeps
+/// per-tile (and per-shard) scoring bit-identical to whole-matrix
+/// scoring.
+pub(crate) fn prepare_score_source(
+    cfg: &PipelineConfig,
+    inp: &PipelineInputs,
+    c: &mut OpCounter,
+) -> ScoreSource {
+    // Scores feed the top-k stage only; dense execution (topk = None)
+    // selects every key in natural order and skips prediction.
+    if cfg.topk == TopkKind::None {
+        return ScoreSource::None;
+    }
+    match cfg.predict {
+        PredictKind::None => ScoreSource::Exact,
+        PredictKind::DlzsCross => {
+            let pred = Predictor::new(PredictScheme::Dlzs, cfg.predict_bits);
+            match (inp.x, inp.wk) {
+                (Some(x), Some(wk)) => {
+                    // Phase 1.1 once; phase 1.2 runs per tile.
+                    let khat = pred.khat_phase(x, wk, c);
+                    ScoreSource::Prepared(pred.prepare(inp.q, &khat, c))
+                }
+                // No activations: plain DLZS on (Q, K).
+                _ => ScoreSource::Prepared(pred.prepare(inp.q, inp.k, c)),
+            }
+        }
+        PredictKind::Slzs => {
+            let pred = Predictor::new(PredictScheme::Slzs, cfg.predict_bits);
+            ScoreSource::Prepared(pred.prepare(inp.q, inp.k, c))
+        }
+        PredictKind::LowBitMul => {
+            let pred = Predictor::new(PredictScheme::LowBitMul, cfg.predict_bits);
+            ScoreSource::Prepared(pred.prepare(inp.q, inp.k, c))
+        }
+    }
+}
+
+/// Charge on-demand generation of `u` union KV rows from `[u, h]`
+/// activations into `d` columns. Shared by the batch tile path and the
+/// sharded home phase so the KV-gen accounting can never drift between
+/// the front-ends.
+pub(crate) fn charge_on_demand_kv_gen(c: &mut OpCounter, u: usize, h: usize, d: usize) {
+    // Generate K and V rows for the union only: d columns × h MACs
+    // each, for two matrices. X rows stream on chip (int8).
+    c.tally(OpKind::Mul, 2 * (u * h * d) as u64);
+    c.tally(OpKind::Add, 2 * (u * h.saturating_sub(1) * d) as u64);
+    c.dram((u * h) as u64);
+    c.sram(2 * (2 * u * d) as u64); // generated INT16 KV tile
+}
+
+/// Reclassify the formal stage's KV share of DRAM traffic (`u` K+V rows
+/// of `d` f32 columns) as on-chip: under cross-stage tiling the formal
+/// stage streams just-generated/cached KV out of SRAM, not DRAM (Q and
+/// O still move). Shared by the tile, decode-row and sharded home paths.
+pub(crate) fn kv_traffic_on_chip(c: &mut OpCounter, u: usize, d: usize) {
+    let kv_bytes = 4 * (2 * u * d) as u64;
+    c.dram_bytes -= kv_bytes.min(c.dram_bytes);
+    c.sram(kv_bytes);
+}
+
+/// The shape class a workspace is sized for. Pools key workspaces by
+/// class so a giant sharded-prefill workspace is never handed to a tiny
+/// decode request (and vice versa) — capacity stays proportional to the
+/// traffic that class actually sees.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ShapeClass {
+    /// Head dimension d.
+    pub d: usize,
+    /// Query-tile size B_r.
+    pub tile_t: usize,
+    /// SU-FA key-tile size B_c.
+    pub bc: usize,
+}
+
+impl ShapeClass {
+    /// The class a pipeline of this config serves at head dimension `d`.
+    pub fn of(cfg: &PipelineConfig, d: usize) -> ShapeClass {
+        ShapeClass { d, tile_t: cfg.tile_t, bc: cfg.bc }
+    }
+}
+
+/// Reusable per-row selection storage: a vector of index rows whose
+/// inner buffers survive `begin` (cleared, capacity retained), so
+/// selections are assembled without per-tile allocations.
+#[derive(Clone, Debug, Default)]
+struct SelArena {
+    rows: Vec<Vec<usize>>,
+    used: usize,
+}
+
+impl SelArena {
+    /// Start a tile of `n` rows: grow the arena if needed, clear the
+    /// first `n` rows, keep their capacity.
+    fn begin(&mut self, n: usize) {
+        while self.rows.len() < n {
+            self.rows.push(Vec::new());
+        }
+        for r in &mut self.rows[..n] {
+            r.clear();
+        }
+        self.used = n;
+    }
+
+    /// The active rows of the current tile.
+    fn rows(&self) -> &[Vec<usize>] {
+        &self.rows[..self.used]
+    }
+
+    fn row_mut(&mut self, i: usize) -> &mut Vec<usize> {
+        debug_assert!(i < self.used);
+        &mut self.rows[i]
+    }
+
+    /// Pre-grow `n` rows to `per_row` capacity each.
+    fn reserve(&mut self, n: usize, per_row: usize) {
+        while self.rows.len() < n {
+            self.rows.push(Vec::new());
+        }
+        for r in &mut self.rows[..n] {
+            if r.capacity() < per_row {
+                r.reserve(per_row - r.len());
+            }
+        }
+    }
+
+    fn capacity_bytes(&self) -> usize {
+        self.rows.capacity() * std::mem::size_of::<Vec<usize>>()
+            + self.rows.iter().map(|r| r.capacity() * std::mem::size_of::<usize>()).sum::<usize>()
+    }
+}
+
+/// Reusable scratch for the formal stage: the SU-FA buffers plus the
+/// dense kernel's sort/logit/membership buffers.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct FormalScratch {
+    sufa: SufaScratch,
+    /// Sorted copy of an unsorted selection row (dense kernel fallback).
+    sort: Vec<usize>,
+    /// Dense kernel's per-row logits.
+    logits: Vec<f32>,
+    /// Dense kernel's union-membership flags (traffic accounting).
+    needed: Vec<bool>,
+}
+
+impl FormalScratch {
+    fn reserve(&mut self, d: usize, bc: usize, s: usize) {
+        self.sufa.reserve(d, bc, s);
+        reserve_to(&mut self.sort, s);
+        reserve_to(&mut self.logits, s);
+        reserve_to(&mut self.needed, s);
+    }
+
+    fn capacity_bytes(&self) -> usize {
+        self.sufa.capacity_bytes()
+            + self.sort.capacity() * std::mem::size_of::<usize>()
+            + self.logits.capacity() * std::mem::size_of::<f32>()
+            + self.needed.capacity() * std::mem::size_of::<bool>()
+    }
+}
+
+/// Grow `v`'s capacity to at least `n` elements (never shrinks).
+fn reserve_to<T>(v: &mut Vec<T>, n: usize) {
+    if v.capacity() < n {
+        v.reserve(n - v.len());
+    }
+}
+
+/// One worker thread's preallocated stage scratch: quantized/encoded
+/// query operands, the score tile, the top-k candidate arena, gathered
+/// KV staging, SU-FA accumulators and the output staging row. Construct
+/// via [`WorkspacePool::checkout`] (or [`TileWorkspace::new`] directly);
+/// reuse across tiles and requests of the same [`ShapeClass`].
+#[derive(Debug)]
+pub struct TileWorkspace {
+    class: ShapeClass,
+    /// Staged query rows of the tile in flight.
+    q_tile: Mat,
+    /// Score tile Â[tile rows × key span].
+    est: Mat,
+    /// Per-row score vector (decode path).
+    est_row: Vec<f32>,
+    /// Reusable encoded query operand (decode path).
+    qop: QueryOperand,
+    /// Top-k extraction scratch.
+    topk: TopkScratch,
+    /// Selection rows of the tile in flight.
+    sel: SelArena,
+    /// Monotone remap of the selection onto the gathered rows.
+    remap: SelArena,
+    /// Union-membership flags over the context.
+    needed: Vec<bool>,
+    /// Sorted union of selected keys.
+    union: Vec<usize>,
+    /// Gathered K staging.
+    ku: Mat,
+    /// Gathered V staging.
+    vu: Mat,
+    /// Distinct page indices a decode row's union touched.
+    row_pages: Vec<usize>,
+    /// Formal-stage scratch.
+    formal: FormalScratch,
+    /// Output staging for paths whose result row is copied out.
+    out_tile: Mat,
+    /// Heap allocations observed inside metered stage cores since the
+    /// last [`TileWorkspace::take_hot_allocs`].
+    hot_allocs: u64,
+}
+
+impl TileWorkspace {
+    /// A cold workspace for the given shape class. Buffers warm (grow to
+    /// their steady-state capacity) over the first tiles they serve.
+    pub fn new(class: ShapeClass) -> TileWorkspace {
+        TileWorkspace {
+            class,
+            q_tile: Mat::zeros(0, 0),
+            est: Mat::zeros(0, 0),
+            est_row: Vec::new(),
+            qop: QueryOperand::reusable(),
+            topk: TopkScratch::default(),
+            sel: SelArena::default(),
+            remap: SelArena::default(),
+            needed: Vec::new(),
+            union: Vec::new(),
+            ku: Mat::zeros(0, 0),
+            vu: Mat::zeros(0, 0),
+            row_pages: Vec::new(),
+            formal: FormalScratch::default(),
+            out_tile: Mat::zeros(0, 0),
+            hot_allocs: 0,
+        }
+    }
+
+    /// The shape class this workspace is pooled under.
+    pub fn class(&self) -> ShapeClass {
+        self.class
+    }
+
+    /// Total heap capacity currently held by every buffer, in bytes —
+    /// the software working set reported next to the modeled SRAM
+    /// budget ([`crate::sim::sram::Sram::STAR_BUDGET_BYTES`]).
+    pub fn capacity_bytes(&self) -> usize {
+        let mat = |m: &Mat| m.data.capacity() * std::mem::size_of::<f32>();
+        mat(&self.q_tile)
+            + mat(&self.est)
+            + mat(&self.ku)
+            + mat(&self.vu)
+            + mat(&self.out_tile)
+            + self.est_row.capacity() * std::mem::size_of::<f32>()
+            + self.qop.capacity_bytes()
+            + self.topk.capacity_bytes()
+            + self.sel.capacity_bytes()
+            + self.remap.capacity_bytes()
+            + self.needed.capacity() * std::mem::size_of::<bool>()
+            + self.union.capacity() * std::mem::size_of::<usize>()
+            + self.row_pages.capacity() * std::mem::size_of::<usize>()
+            + self.formal.capacity_bytes()
+    }
+
+    /// Drain the metered hot-path allocation count (reset to zero).
+    /// Zero in steady state; warm-up growth of a cold workspace is the
+    /// only expected non-zero reading.
+    pub fn take_hot_allocs(&mut self) -> u64 {
+        std::mem::take(&mut self.hot_allocs)
+    }
+
+    /// Split borrow for the sharded local pass: the stage-1 score tile
+    /// (read-only), the top-k scratch, and a reusable index row for
+    /// local proposals (the union buffer, which is free until the home
+    /// phase).
+    pub(crate) fn est_topk_and_tmp(&mut self) -> (&Mat, &mut TopkScratch, &mut Vec<usize>) {
+        (&self.est, &mut self.topk, &mut self.union)
+    }
+
+    /// Capacity maintenance ahead of a prefill tile of `rows × span`
+    /// scores over a context of `s` keys (outside the metered core).
+    #[allow(clippy::too_many_arguments)]
+    fn ensure_tile(
+        &mut self,
+        rows: usize,
+        span: usize,
+        s: usize,
+        keep: usize,
+        d: usize,
+        bc: usize,
+    ) {
+        self.q_tile.reset(rows, d);
+        self.est.reset(rows, span);
+        self.topk.reserve(span);
+        self.sel.reserve(rows, keep.max(1));
+        self.remap.reserve(rows, keep.max(1));
+        reserve_to(&mut self.needed, s);
+        reserve_to(&mut self.union, s);
+        self.formal.reserve(d, bc, s);
+    }
+
+    /// Capacity maintenance ahead of one decode row at causal context
+    /// `limit` (outside the metered core).
+    fn ensure_decode_row(&mut self, limit: usize, keep: usize, d: usize, bc: usize, pages: usize) {
+        reserve_to(&mut self.est_row, limit);
+        self.qop.reserve(d);
+        self.topk.reserve(limit);
+        self.sel.reserve(1, keep.max(1));
+        self.remap.reserve(1, keep.max(1));
+        reserve_to(&mut self.union, keep.max(1));
+        reserve_to(&mut self.row_pages, pages);
+        self.q_tile.reset(1, d);
+        self.ku.reset(keep, d);
+        self.vu.reset(keep, d);
+        self.out_tile.reset(1, d);
+        self.formal.reserve(d, bc, keep.max(1));
+    }
+}
+
+/// A pool of [`TileWorkspace`]s keyed by [`ShapeClass`]. Serving
+/// workers hold one pool each and check a workspace out per run — after
+/// the first request of a shape class, the checked-out workspace is
+/// warm and the run's stage cores allocate nothing.
+///
+/// ```
+/// use star::pipeline::engine::{ShapeClass, WorkspacePool};
+/// use star::pipeline::PipelineConfig;
+///
+/// let pool = WorkspacePool::new();
+/// let class = ShapeClass::of(&PipelineConfig::star(), 64);
+/// let ws = pool.checkout(class);      // cold: fresh workspace
+/// pool.checkin(ws);
+/// let ws = pool.checkout(class);      // warm: the same buffers return
+/// assert_eq!(ws.class(), class);
+/// pool.checkin(ws);
+/// assert_eq!(pool.resident_workspaces(), 1);
+/// ```
+#[derive(Debug, Default)]
+pub struct WorkspacePool {
+    slots: Mutex<BTreeMap<ShapeClass, Vec<TileWorkspace>>>,
+}
+
+impl WorkspacePool {
+    /// An empty pool.
+    pub fn new() -> WorkspacePool {
+        WorkspacePool::default()
+    }
+
+    /// Take a workspace of the given class (warm if one is pooled,
+    /// freshly constructed otherwise).
+    pub fn checkout(&self, class: ShapeClass) -> TileWorkspace {
+        self.slots
+            .lock()
+            .unwrap()
+            .get_mut(&class)
+            .and_then(Vec::pop)
+            .unwrap_or_else(|| TileWorkspace::new(class))
+    }
+
+    /// Return a workspace for reuse by later runs of its class.
+    pub fn checkin(&self, ws: TileWorkspace) {
+        self.slots.lock().unwrap().entry(ws.class()).or_default().push(ws);
+    }
+
+    /// Workspaces currently checked in.
+    pub fn resident_workspaces(&self) -> usize {
+        self.slots.lock().unwrap().values().map(Vec::len).sum()
+    }
+
+    /// Total heap capacity of the checked-in workspaces, in bytes — the
+    /// steady-state software working set a server holds per worker,
+    /// reported next to the modeled SRAM budget.
+    pub fn resident_bytes(&self) -> usize {
+        self.slots
+            .lock()
+            .unwrap()
+            .values()
+            .flat_map(|v| v.iter())
+            .map(TileWorkspace::capacity_bytes)
+            .sum()
+    }
+}
+
+/// Shared read-only context for tile workers.
+pub(crate) struct TileCtx<'a> {
+    pub(crate) cfg: &'a PipelineConfig,
+    pub(crate) inp: &'a PipelineInputs<'a>,
+    pub(crate) score: &'a ScoreSource,
+    /// K pre-transposed for the oracle score path.
+    pub(crate) kt: Option<&'a Mat>,
+    pub(crate) keep: usize,
+}
+
+/// One prefill tile's results, merged after the parallel section.
+pub(crate) struct TileOut {
+    pub(crate) lo: usize,
+    pub(crate) out: Mat,
+    pub(crate) sel_rows: Vec<Vec<usize>>,
+    pub(crate) ops: StageOps,
+    pub(crate) timing: StageTiming,
+    pub(crate) stalls: u64,
+    pub(crate) union_rows: usize,
+    pub(crate) rho_sum: f64,
+    pub(crate) rho_n: usize,
+}
+
+/// One decoded row's results, merged after the parallel section.
+pub(crate) struct DecodeRowOut {
+    pub(crate) out: Vec<f32>,
+    pub(crate) sel: Vec<usize>,
+    pub(crate) ops: StageOps,
+    pub(crate) timing: StageTiming,
+    pub(crate) stalls: u64,
+    pub(crate) union_rows: usize,
+    pub(crate) rho: Option<f64>,
+    /// Distinct page indices this row's selection read (ascending).
+    pub(crate) pages: Vec<usize>,
+}
+
+/// The one place a score row becomes a selection row — both the prefill
+/// and the decode selection paths assemble their `sel_rows` through
+/// this helper, so the two can never drift. `scores == None` (or a
+/// dense `topk == None` config) selects the full natural-order prefix
+/// `0..limit`; SADS and the exact engines select `keep` of it.
+/// Returns the SADS survivor fraction ρ when SADS ran.
+pub(crate) fn select_into(
+    cfg: &PipelineConfig,
+    scores: Option<&[f32]>,
+    limit: usize,
+    keep: usize,
+    scratch: &mut TopkScratch,
+    out: &mut Vec<usize>,
+    c: &mut OpCounter,
+) -> Option<f64> {
+    match (cfg.topk, scores) {
+        (TopkKind::None, _) | (_, None) => {
+            // Dense execution: every key, natural order.
+            out.clear();
+            out.extend(0..limit);
+            None
+        }
+        (TopkKind::Sads, Some(e)) => Some(sads_topk_into(e, keep, &cfg.sads, c, scratch, out).rho),
+        // Threshold engines have no counted software implementation;
+        // executed as vanilla selection (see PipelineConfig docs).
+        (TopkKind::Vanilla | TopkKind::Threshold, Some(e)) => {
+            vanilla_topk_into(e, keep, c, scratch, out);
+            None
+        }
+    }
+}
+
+/// Ascending union of the selected keys over `rows` — exactly
+/// [`crate::attention::Selection::union_keys`], assembled into reusable
+/// buffers (the KV rows the on-demand generation stage must produce).
+pub(crate) fn union_rows_into(
+    rows: &[Vec<usize>],
+    s: usize,
+    needed: &mut Vec<bool>,
+    out: &mut Vec<usize>,
+) {
+    needed.clear();
+    needed.resize(s, false);
+    for row in rows {
+        for &j in row {
+            needed[j] = true;
+        }
+    }
+    out.clear();
+    out.extend((0..s).filter(|&j| needed[j]));
+}
+
+/// Formal-compute dispatch shared by all three front-ends: SU-FA
+/// (descending/ascending), the FA-2 approximation (ascending SU-FA plus
+/// `fa2_cmp` cross-tile max comparisons — the Fig. 18a baseline
+/// accounting), or the dense masked softmax. Writes the output into
+/// `out` (reset to the row count × d) and returns the stall count.
+pub(crate) fn formal_compute_rows_into(
+    cfg: &PipelineConfig,
+    inp: &AttnInputs,
+    rows: &[Vec<usize>],
+    fa2_cmp: u64,
+    scratch: &mut FormalScratch,
+    out: &mut Mat,
+    c: &mut OpCounter,
+) -> u64 {
+    match cfg.formal {
+        FormalKind::SufaDescend | FormalKind::SufaAscend => {
+            let order = if cfg.formal == FormalKind::SufaDescend {
+                UpdateOrder::Descend
+            } else {
+                UpdateOrder::Ascend
+            };
+            let p = SufaParams { bc: cfg.bc, order };
+            sufa_attention_rows_into(inp, rows, &p, c, &mut scratch.sufa, out)
+        }
+        FormalKind::Flash2 => {
+            let p = SufaParams { bc: cfg.bc, order: UpdateOrder::Ascend };
+            let stalls = sufa_attention_rows_into(inp, rows, &p, c, &mut scratch.sufa, out);
+            c.tally(OpKind::Cmp, fa2_cmp);
+            stalls
+        }
+        FormalKind::Dense => {
+            dense_formal_rows_into(inp, rows, scratch, out, c);
+            0
+        }
+    }
+}
+
+/// Dense (masked) softmax over each row's selection in ascending key
+/// order, with dense-attention-style op accounting. For a full selection
+/// this reproduces [`crate::attention::dense_attention`]'s float
+/// associativity exactly — the `keep = 1.0` parity anchor. Rows that
+/// already ascend (every dense-execution selection does) are consumed
+/// as a view; only genuinely unsorted rows are staged into the sort
+/// scratch.
+fn dense_formal_rows_into(
+    inp: &AttnInputs,
+    rows: &[Vec<usize>],
+    scratch: &mut FormalScratch,
+    out: &mut Mat,
+    c: &mut OpCounter,
+) {
+    let (s, d) = (inp.s(), inp.d());
+    let f = 4u64;
+    let FormalScratch { sort, logits, needed, .. } = &mut *scratch;
+    needed.clear();
+    needed.resize(s, false);
+    for row in rows {
+        for &j in row {
+            assert!(j < s, "selected key {j} out of range for S={s}");
+            needed[j] = true;
+        }
+    }
+    let union = needed.iter().filter(|&&n| n).count();
+    c.dram(f * (2 * inp.t() * d) as u64); // Q in, O out
+    c.dram(f * (2 * union * d) as u64); // KV in
+    out.reset(inp.t(), d);
+    for (i, keys) in rows.iter().enumerate() {
+        if keys.is_empty() {
+            continue;
+        }
+        let ks: &[usize] = if keys.windows(2).all(|w| w[0] < w[1]) {
+            keys // already ascending: no copy
+        } else {
+            sort.clear();
+            sort.extend_from_slice(keys);
+            sort.sort_unstable();
+            sort
+        };
+        let m = ks.len();
+        logits.clear();
+        logits.extend(ks.iter().map(|&j| {
+            let mut dot = 0.0f32;
+            for p in 0..d {
+                dot += inp.q.at(i, p) * inp.k.at(j, p);
+            }
+            dot * inp.scale
+        }));
+        c.tally(OpKind::Mul, (m * d + m) as u64); // QKᵀ + scale
+        c.tally(OpKind::Add, (m * (d - 1)) as u64);
+        c.sram(2 * f * m as u64); // tile-resident score row
+        crate::tensor::softmax_inplace(logits);
+        c.tally(OpKind::Cmp, (m - 1) as u64); // row max
+        c.tally(OpKind::Add, m as u64); // subtract max
+        c.tally(OpKind::Exp, m as u64);
+        c.tally(OpKind::Add, (m - 1) as u64); // denominator
+        c.tally(OpKind::Div, m as u64); // normalize
+        for (w, &j) in logits.iter().zip(ks) {
+            for p in 0..d {
+                *out.at_mut(i, p) += w * inp.v.at(j, p);
+            }
+        }
+        c.tally(OpKind::Mul, (m * d) as u64);
+        c.tally(OpKind::Add, ((m - 1) * d) as u64);
+    }
+}
+
+/// The tile-execution core. One instance per run; every method works
+/// entirely inside the caller's [`TileWorkspace`].
+pub(crate) struct TileExecutor<'a> {
+    pub(crate) cfg: &'a PipelineConfig,
+}
+
+impl TileExecutor<'_> {
+    /// Stage 1 for a `(lo..hi) × (key_lo..key_hi)` block: estimate (or
+    /// exactly compute, for the oracle source) the score tile into
+    /// `ws.est`, in logit units. Shared by the batch tile path (full key
+    /// span) and the sharded local pass (one worker's key range).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn score_block_into(
+        &self,
+        score: &ScoreSource,
+        inp: &PipelineInputs,
+        kt: Option<&Mat>,
+        lo: usize,
+        hi: usize,
+        key_lo: usize,
+        key_hi: usize,
+        ws: &mut TileWorkspace,
+        c: &mut OpCounter,
+    ) -> bool {
+        match score {
+            ScoreSource::None => false,
+            ScoreSource::Exact => {
+                // Oracle scores: exact logits, nothing charged.
+                // matmul_cols_into slices the single-core q_tile × Kᵀ
+                // product bit for bit (one shared kernel).
+                ws.q_tile.stage_rows(inp.q, lo, hi - lo);
+                let kt = kt.expect("kt prepared for oracle scores");
+                ws.q_tile.matmul_cols_into(kt, key_lo, key_hi, &mut ws.est);
+                ws.est.scale(inp.scale);
+                true
+            }
+            ScoreSource::Prepared(prep) => {
+                // Scale the estimate into logit units so the SADS sphere
+                // radius is calibrated the way Sec. IV-B assumes.
+                prep.score_block_into(lo, hi, key_lo, key_hi, c, &mut ws.est);
+                ws.est.scale(inp.scale);
+                true
+            }
+        }
+    }
+
+    /// Execute one prefill query tile through all four stages — the
+    /// batch path's tile body, metered as the zero-allocation hot core.
+    pub(crate) fn prefill_tile(&self, ctx: &TileCtx, ti: usize, ws: &mut TileWorkspace) -> TileOut {
+        let cfg = self.cfg;
+        let inp = ctx.inp;
+        let (t, s, d) = (inp.t(), inp.s(), inp.d());
+        let lo = ti * cfg.tile_t.min(t.max(1));
+        let hi = (lo + cfg.tile_t).min(t);
+        let rows = hi - lo;
+        let mut ops = StageOps::default();
+        let mut timing = StageTiming::default();
+
+        // Capacity maintenance + output allocation, outside the metered
+        // core: the returned tile must own its output. Dense execution
+        // (no score source) skips the score tile entirely.
+        let span = if matches!(ctx.score, ScoreSource::None) { 0 } else { s };
+        ws.ensure_tile(rows, span, s, ctx.keep, d, cfg.bc);
+        let mut out = Mat::zeros(rows, d);
+        let a0 = allocmeter::thread_allocs();
+
+        // ---- Stage 1: predict (per-tile phase 1.2 / oracle scores). ----
+        let t0 = Instant::now();
+        let have_est =
+            self.score_block_into(ctx.score, inp, ctx.kt, lo, hi, 0, s, ws, &mut ops.predict);
+        timing.predict_s += t0.elapsed().as_secs_f64();
+
+        // ---- Stage 2: top-k selection. ----
+        let t0 = Instant::now();
+        let (mut rho_sum, mut rho_n) = (0.0, 0usize);
+        ws.sel.begin(rows);
+        {
+            let TileWorkspace { est, topk, sel, .. } = &mut *ws;
+            for i in 0..rows {
+                let scores = if have_est { Some(est.row(i)) } else { None };
+                if let Some(rho) =
+                    select_into(cfg, scores, s, ctx.keep, topk, sel.row_mut(i), &mut ops.topk)
+                {
+                    rho_sum += rho;
+                    rho_n += 1;
+                }
+            }
+        }
+        timing.topk_s += t0.elapsed().as_secs_f64();
+
+        // ---- Stage 3: KV generation for the tile's union. ----
+        let t0 = Instant::now();
+        {
+            let TileWorkspace { sel, needed, union, .. } = &mut *ws;
+            union_rows_into(sel.rows(), s, needed, union);
+        }
+        let u = ws.union.len();
+        let on_demand = cfg.on_demand_kv && inp.x.is_some() && inp.wk.is_some() && inp.wv.is_some();
+        if on_demand {
+            charge_on_demand_kv_gen(&mut ops.kv_gen, u, inp.x.unwrap().cols, d);
+        }
+        timing.kv_gen_s += t0.elapsed().as_secs_f64();
+
+        // ---- Stage 4: formal compute (SU-FA / FA-2 approx / dense). ----
+        let t0 = Instant::now();
+        let stalls = {
+            let TileWorkspace { q_tile, sel, formal, .. } = &mut *ws;
+            q_tile.stage_rows(inp.q, lo, rows);
+            let tile_inp = AttnInputs { q: q_tile, k: inp.k, v: inp.v, scale: inp.scale };
+            formal_compute_rows_into(
+                cfg,
+                &tile_inp,
+                sel.rows(),
+                (rows * ctx.keep) as u64,
+                formal,
+                &mut out,
+                &mut ops.formal,
+            )
+        };
+        if on_demand {
+            kv_traffic_on_chip(&mut ops.formal, u, d);
+        }
+        timing.formal_s += t0.elapsed().as_secs_f64();
+        ws.hot_allocs += allocmeter::thread_allocs() - a0;
+
+        TileOut {
+            lo,
+            out,
+            sel_rows: ws.sel.rows().to_vec(),
+            ops,
+            timing,
+            stalls,
+            union_rows: u,
+            rho_sum,
+            rho_n,
+        }
+    }
+
+    /// Decode one query row at global position `pos` through all four
+    /// stages against the cached context `0..=pos`. Everything here
+    /// depends only on the query row and the frozen page operands of the
+    /// causal prefix — the invariant that makes chunking/tiling/
+    /// threading bit-invisible.
+    pub(crate) fn decode_row(
+        &self,
+        pages: &[&KvPage],
+        qrow: &[f32],
+        pos: usize,
+        attn_scale: f32,
+        page_size: usize,
+        ws: &mut TileWorkspace,
+    ) -> DecodeRowOut {
+        let cfg = self.cfg;
+        let limit = pos + 1;
+        let d = qrow.len();
+        let keep = cfg.keep(limit);
+        let mut ops = StageOps::default();
+        let mut timing = StageTiming::default();
+
+        // Capacity maintenance outside the metered core (the decode
+        // context grows monotonically; reserves amortize).
+        ws.ensure_decode_row(limit, keep, d, cfg.bc, limit.div_ceil(page_size.max(1)));
+        let a0 = allocmeter::thread_allocs();
+
+        // ---- Stage 1: predict over cached page operands. ----
+        let t0 = Instant::now();
+        let have_est = if cfg.topk == TopkKind::None {
+            false
+        } else {
+            let TileWorkspace { qop, est_row, .. } = &mut *ws;
+            qop.encode_into(qrow, cfg.predict, cfg.predict_bits, &mut ops.predict);
+            score_row_into(qop, pages, limit, attn_scale, &mut ops.predict, est_row);
+            true
+        };
+        timing.predict_s += t0.elapsed().as_secs_f64();
+
+        // ---- Stage 2: top-k over the causal prefix. ----
+        let t0 = Instant::now();
+        ws.sel.begin(1);
+        let rho = {
+            let TileWorkspace { est_row, topk, sel, .. } = &mut *ws;
+            let scores = if have_est { Some(est_row.as_slice()) } else { None };
+            select_into(cfg, scores, limit, keep, topk, sel.row_mut(0), &mut ops.topk)
+        };
+        timing.topk_s += t0.elapsed().as_secs_f64();
+
+        // ---- Stage 3: cache read — gather this row's selected KV rows. ----
+        let t0 = Instant::now();
+        {
+            let TileWorkspace { sel, union, ku, vu, row_pages, .. } = &mut *ws;
+            union.clear();
+            union.extend_from_slice(&sel.rows()[0]);
+            union.sort_unstable();
+            gather_rows_into(pages, page_size, union, d, ku, vu);
+            row_pages.clear();
+            for &j in union.iter() {
+                if row_pages.last() != Some(&(j / page_size)) {
+                    row_pages.push(j / page_size);
+                }
+            }
+        }
+        let u = ws.union.len();
+        ops.kv_gen.sram(4 * (2 * u * d) as u64); // cached KV streams from SRAM
+        timing.kv_gen_s += t0.elapsed().as_secs_f64();
+
+        // ---- Stage 4: formal compute on the compacted rows. The
+        // selection is remapped monotonically (ascending union order),
+        // so per-key visit order — and therefore the math — is
+        // unchanged. ----
+        let t0 = Instant::now();
+        ws.remap.begin(1);
+        let stalls = {
+            let TileWorkspace { sel, remap, union, q_tile, ku, vu, formal, out_tile, .. } =
+                &mut *ws;
+            remap.row_mut(0).extend(
+                sel.rows()[0]
+                    .iter()
+                    .map(|&j| union.binary_search(&j).expect("selected key in union")),
+            );
+            q_tile.reset(1, d);
+            q_tile.row_mut(0).copy_from_slice(qrow);
+            let tile_inp = AttnInputs { q: q_tile, k: ku, v: vu, scale: attn_scale };
+            formal_compute_rows_into(
+                cfg,
+                &tile_inp,
+                remap.rows(),
+                keep as u64,
+                formal,
+                out_tile,
+                &mut ops.formal,
+            )
+        };
+        // The formal stage's KV traffic came from the cache, not DRAM.
+        kv_traffic_on_chip(&mut ops.formal, u, d);
+        timing.formal_s += t0.elapsed().as_secs_f64();
+        ws.hot_allocs += allocmeter::thread_allocs() - a0;
+
+        DecodeRowOut {
+            out: ws.out_tile.row(0).to_vec(),
+            sel: ws.sel.rows()[0].clone(),
+            ops,
+            timing,
+            stalls,
+            union_rows: u,
+            rho,
+            pages: ws.row_pages.clone(),
+        }
+    }
+
+    /// Stages 3 + 4 for a block whose per-row selection is already
+    /// merged (the sharded home phase): ascending union → gather the
+    /// selected KV rows (skipped when the union is the identity) →
+    /// monotone remap → formal compute into `out`. Returns (stalls,
+    /// union rows).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn gather_formal_block(
+        &self,
+        inp: &PipelineInputs,
+        lo: usize,
+        sel_rows: &[Vec<usize>],
+        keep: usize,
+        ws: &mut TileWorkspace,
+        ops: &mut StageOps,
+        timing: &mut StageTiming,
+        out: &mut Mat,
+    ) -> (u64, usize) {
+        let cfg = self.cfg;
+        let (s, d) = (inp.s(), inp.d());
+        let rows = sel_rows.len();
+
+        // ---- KV gen + gather: produce the union of selected rows and
+        // stream them to this home worker — only the union crosses the
+        // ring (the sparse-attention win).
+        let t0 = Instant::now();
+        {
+            let TileWorkspace { needed, union, .. } = &mut *ws;
+            union_rows_into(sel_rows, s, needed, union);
+        }
+        let u = ws.union.len();
+        let on_demand = cfg.on_demand_kv && inp.x.is_some() && inp.wk.is_some() && inp.wv.is_some();
+        if on_demand {
+            // Union KV rows are generated on their owning shards; the
+            // charge is the single-core stage-3 accounting, shared so it
+            // cannot drift between the engines.
+            charge_on_demand_kv_gen(&mut ops.kv_gen, u, inp.x.unwrap().cols, d);
+        }
+        // When every key is selected (dense execution, keep = 1.0) the
+        // gather is the identity: attend the original K/V directly
+        // instead of copying the whole context per Q block.
+        let identity_union = u == s;
+        if !identity_union {
+            // Capacity maintenance for the staging buffers, then the
+            // metered gather.
+            ws.ku.reset(u, d);
+            ws.vu.reset(u, d);
+            let a0 = allocmeter::thread_allocs();
+            {
+                let TileWorkspace { union, ku, vu, .. } = &mut *ws;
+                for (i, &key) in union.iter().enumerate() {
+                    ku.row_mut(i).copy_from_slice(inp.k.row(key));
+                    vu.row_mut(i).copy_from_slice(inp.v.row(key));
+                }
+            }
+            ws.hot_allocs += allocmeter::thread_allocs() - a0;
+        }
+        timing.kv_gen_s += t0.elapsed().as_secs_f64();
+
+        // ---- Formal: SU-FA over the gathered rows, selection remapped
+        // monotonically (ascending union order) so the per-key visit
+        // order — and therefore every float — matches the single-core
+        // run. An identity union needs no remap: positions already equal
+        // indices.
+        let t0 = Instant::now();
+        ws.remap.reserve(rows, keep.max(1));
+        ws.q_tile.reset(rows, d);
+        ws.formal.reserve(d, cfg.bc, s);
+        let a0 = allocmeter::thread_allocs();
+        let stalls = {
+            let TileWorkspace { remap, union, q_tile, ku, vu, formal, .. } = &mut *ws;
+            let formal_rows: &[Vec<usize>] = if identity_union {
+                sel_rows
+            } else {
+                remap.begin(rows);
+                for (i, row) in sel_rows.iter().enumerate() {
+                    remap.row_mut(i).extend(
+                        row.iter()
+                            .map(|&jj| union.binary_search(&jj).expect("selected key in union")),
+                    );
+                }
+                remap.rows()
+            };
+            q_tile.stage_rows(inp.q, lo, rows);
+            let (kk, vv): (&Mat, &Mat) =
+                if identity_union { (inp.k, inp.v) } else { (ku, vu) };
+            let block_inp = AttnInputs { q: q_tile, k: kk, v: vv, scale: inp.scale };
+            formal_compute_rows_into(
+                cfg,
+                &block_inp,
+                formal_rows,
+                (rows * keep) as u64,
+                formal,
+                out,
+                &mut ops.formal,
+            )
+        };
+        if on_demand {
+            // Under the sharded dataflow the formal stage streams the
+            // gathered KV out of on-chip buffers, not DRAM.
+            kv_traffic_on_chip(&mut ops.formal, u, d);
+        }
+        timing.formal_s += t0.elapsed().as_secs_f64();
+        ws.hot_allocs += allocmeter::thread_allocs() - a0;
+        (stalls, u)
+    }
+}
+
+/// Run `ntiles` independent tile jobs, strided across worker threads
+/// (`threads == 0` picks `available_parallelism`) under
+/// `std::thread::scope`, each worker driving one pooled [`TileWorkspace`]
+/// for its whole stripe. Results come back unordered — callers sort by
+/// their tile key; determinism is the jobs' responsibility (all callers'
+/// jobs are pure functions of the tile index). Returns the results plus
+/// the metered hot-path allocation total and the peak workspace bytes.
+pub(crate) fn parallel_tiles_pooled<T: Send>(
+    ntiles: usize,
+    threads: usize,
+    pool: &WorkspacePool,
+    class: ShapeClass,
+    job: impl Fn(&mut TileWorkspace, usize) -> T + Sync,
+) -> (Vec<T>, u64, usize) {
+    if ntiles == 0 {
+        return (Vec::new(), 0, 0);
+    }
+    let workers = match threads {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        n => n,
+    }
+    .clamp(1, ntiles);
+    if workers <= 1 {
+        let mut ws = pool.checkout(class);
+        let outs = (0..ntiles).map(|ti| job(&mut ws, ti)).collect();
+        let (hot, bytes) = (ws.take_hot_allocs(), ws.capacity_bytes());
+        pool.checkin(ws);
+        (outs, hot, bytes)
+    } else {
+        let per_worker: Vec<(Vec<T>, u64, usize)> = std::thread::scope(|scope| {
+            let job = &job;
+            let handles: Vec<_> = (0..workers)
+                .map(|w| {
+                    scope.spawn(move || {
+                        let mut ws = pool.checkout(class);
+                        let outs: Vec<T> =
+                            (w..ntiles).step_by(workers).map(|ti| job(&mut ws, ti)).collect();
+                        let (hot, bytes) = (ws.take_hot_allocs(), ws.capacity_bytes());
+                        pool.checkin(ws);
+                        (outs, hot, bytes)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("tile worker panicked")).collect()
+        });
+        let mut outs = Vec::with_capacity(ntiles);
+        let mut hot = 0u64;
+        let mut bytes = 0usize;
+        for (o, h, b) in per_worker {
+            outs.extend(o);
+            hot += h;
+            bytes = bytes.max(b);
+        }
+        (outs, hot, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_reuses_workspaces_per_class() {
+        let pool = WorkspacePool::new();
+        let a = ShapeClass { d: 16, tile_t: 8, bc: 16 };
+        let b = ShapeClass { d: 64, tile_t: 64, bc: 16 };
+        let mut ws = pool.checkout(a);
+        ws.ensure_tile(8, 128, 128, 32, 16, 16);
+        let warmed = ws.capacity_bytes();
+        assert!(warmed > 0);
+        pool.checkin(ws);
+        pool.checkin(pool.checkout(b));
+        assert_eq!(pool.resident_workspaces(), 2);
+        assert!(pool.resident_bytes() >= warmed);
+        // Checking the same class out again returns the warm buffers.
+        let ws = pool.checkout(a);
+        assert_eq!(ws.capacity_bytes(), warmed);
+        assert_eq!(ws.class(), a);
+        pool.checkin(ws);
+    }
+
+    #[test]
+    fn ensure_makes_second_tile_capacity_stable() {
+        let mut ws = TileWorkspace::new(ShapeClass { d: 16, tile_t: 8, bc: 16 });
+        ws.ensure_tile(8, 96, 96, 24, 16, 16);
+        let warm = ws.capacity_bytes();
+        ws.ensure_tile(8, 96, 96, 24, 16, 16);
+        assert_eq!(ws.capacity_bytes(), warm, "steady-state ensure must not grow");
+        ws.ensure_decode_row(96, 24, 16, 16, 6);
+        let warm = ws.capacity_bytes();
+        ws.ensure_decode_row(96, 24, 16, 16, 6);
+        assert_eq!(ws.capacity_bytes(), warm);
+    }
+
+    #[test]
+    fn take_hot_allocs_drains() {
+        let mut ws = TileWorkspace::new(ShapeClass { d: 8, tile_t: 8, bc: 16 });
+        ws.hot_allocs = 7;
+        assert_eq!(ws.take_hot_allocs(), 7);
+        assert_eq!(ws.take_hot_allocs(), 0);
+    }
+
+    #[test]
+    fn union_rows_into_matches_selection_union_keys() {
+        use crate::attention::Selection;
+        let rows = vec![vec![3usize, 1], vec![1, 5], vec![]];
+        let sel = Selection { rows: rows.clone() };
+        let mut needed = Vec::new();
+        let mut out = vec![99usize]; // dirty
+        union_rows_into(&rows, 8, &mut needed, &mut out);
+        assert_eq!(out, sel.union_keys(8));
+    }
+}

@@ -13,15 +13,24 @@
 //! ([`crate::sparsity::PreparedPredict`]) with globally-chosen
 //! quantization scales, which makes tiled execution bit-identical to
 //! stage-serial execution for every tile size and thread count.
+//!
+//! The stage bodies themselves live in the shared tile-execution core
+//! ([`super::engine`]): this module is the batch/decode *driver* —
+//! prologue, tile scheduling and merge — while the engine's
+//! `TileExecutor` runs each tile inside a pooled, preallocated
+//! [`super::engine::TileWorkspace`]. Pass your own [`WorkspacePool`]
+//! (the `*_pooled` entry points) to reuse warm workspaces across
+//! requests; the plain entry points run on a throwaway pool.
 
 use super::config::PipelineConfig;
+use super::engine::{
+    parallel_tiles_pooled, prepare_score_source, DecodeRowOut, ScoreSource, ShapeClass, TileCtx,
+    TileExecutor, TileOut, WorkspacePool,
+};
 use super::report::{StageOps, StageTiming};
-use crate::arith::{EquivWeights, OpCounter, OpKind};
-use crate::attention::{sufa_attention, AttnInputs, Selection, SufaParams, UpdateOrder};
-use crate::kvcache::{gather_rows, score_row, KvPage, QueryOperand, SessionStore};
-use crate::sim::pipeline::{FormalKind, PredictKind, TopkKind};
-use crate::sparsity::topk::{sads_topk, vanilla_topk};
-use crate::sparsity::{PredictScheme, Predictor, PreparedPredict};
+use crate::arith::{EquivWeights, OpCounter};
+use crate::attention::Selection;
+use crate::kvcache::{KvPage, SessionStore};
 use crate::tensor::Mat;
 use crate::workload::AttnWorkload;
 use std::time::Instant;
@@ -114,6 +123,17 @@ pub struct PipelineReport {
     pub tiles: usize,
     /// Keys kept per row.
     pub keep: usize,
+    /// Heap allocations metered inside the tile engine's stage cores
+    /// (zero in steady state on a warm [`WorkspacePool`]; non-zero only
+    /// while a cold workspace grows to its shape class — see
+    /// [`super::engine`]). Always zero when no counting allocator is
+    /// installed ([`crate::util::allocmeter`]).
+    pub hot_path_allocs: u64,
+    /// Peak per-worker [`super::engine::TileWorkspace`] heap capacity
+    /// during this run, bytes — the software working set to compare
+    /// against the modeled SRAM budget
+    /// ([`crate::sim::sram::Sram::STAR_BUDGET_BYTES`]).
+    pub workspace_bytes: usize,
 }
 
 impl PipelineReport {
@@ -131,103 +151,6 @@ impl PipelineReport {
     pub fn density(&self, s: usize) -> f64 {
         self.selection.density(s)
     }
-}
-
-/// How the top-k stage obtains its scores. Shared with the sharded
-/// engine ([`super::sharded`]) so both prologues are one code path.
-pub(crate) enum ScoreSource {
-    /// No scores: selection is the full natural-order key set.
-    None,
-    /// Oracle: exact Q·Kᵀ (no prediction ops charged).
-    Exact,
-    /// Counted approximate prediction over prepared operands.
-    Prepared(PreparedPredict),
-}
-
-/// The predict-stage prologue: prepare operands once, with globally
-/// chosen quantization scales. Extracted from [`SparseAttentionPipeline::run`]
-/// so the sharded pipeline runs the *identical* preparation — the
-/// global-scale contract is what keeps per-shard scoring bit-identical
-/// to single-core scoring.
-pub(crate) fn prepare_score_source(
-    cfg: &PipelineConfig,
-    inp: &PipelineInputs,
-    c: &mut OpCounter,
-) -> ScoreSource {
-    // Scores feed the top-k stage only; dense execution (topk = None)
-    // selects every key in natural order and skips prediction.
-    if cfg.topk == TopkKind::None {
-        return ScoreSource::None;
-    }
-    match cfg.predict {
-        PredictKind::None => ScoreSource::Exact,
-        PredictKind::DlzsCross => {
-            let pred = Predictor::new(PredictScheme::Dlzs, cfg.predict_bits);
-            match (inp.x, inp.wk) {
-                (Some(x), Some(wk)) => {
-                    // Phase 1.1 once; phase 1.2 runs per tile.
-                    let khat = pred.khat_phase(x, wk, c);
-                    ScoreSource::Prepared(pred.prepare(inp.q, &khat, c))
-                }
-                // No activations: plain DLZS on (Q, K).
-                _ => ScoreSource::Prepared(pred.prepare(inp.q, inp.k, c)),
-            }
-        }
-        PredictKind::Slzs => {
-            let pred = Predictor::new(PredictScheme::Slzs, cfg.predict_bits);
-            ScoreSource::Prepared(pred.prepare(inp.q, inp.k, c))
-        }
-        PredictKind::LowBitMul => {
-            let pred = Predictor::new(PredictScheme::LowBitMul, cfg.predict_bits);
-            ScoreSource::Prepared(pred.prepare(inp.q, inp.k, c))
-        }
-    }
-}
-
-/// Charge on-demand generation of `u` union KV rows from `[u, h]`
-/// activations into `d` columns. Shared by the batch tile path and the
-/// sharded home phase so the KV-gen accounting can never drift between
-/// the two engines.
-pub(crate) fn charge_on_demand_kv_gen(c: &mut OpCounter, u: usize, h: usize, d: usize) {
-    // Generate K and V rows for the union only: d columns × h MACs
-    // each, for two matrices. X rows stream on chip (int8).
-    c.tally(OpKind::Mul, 2 * (u * h * d) as u64);
-    c.tally(OpKind::Add, 2 * (u * h.saturating_sub(1) * d) as u64);
-    c.dram((u * h) as u64);
-    c.sram(2 * (2 * u * d) as u64); // generated INT16 KV tile
-}
-
-/// Reclassify the formal stage's KV share of DRAM traffic (`u` K+V rows
-/// of `d` f32 columns) as on-chip: under cross-stage tiling the formal
-/// stage streams just-generated/cached KV out of SRAM, not DRAM (Q and
-/// O still move). Shared by the tile, decode-row and sharded home paths.
-pub(crate) fn kv_traffic_on_chip(c: &mut OpCounter, u: usize, d: usize) {
-    let kv_bytes = 4 * (2 * u * d) as u64;
-    c.dram_bytes -= kv_bytes.min(c.dram_bytes);
-    c.sram(kv_bytes);
-}
-
-/// Shared read-only context for tile workers.
-struct TileCtx<'a> {
-    cfg: &'a PipelineConfig,
-    inp: &'a PipelineInputs<'a>,
-    score: &'a ScoreSource,
-    /// K pre-transposed for the oracle score path.
-    kt: Option<&'a Mat>,
-    keep: usize,
-}
-
-/// One tile's results, merged after the parallel section.
-struct TileOut {
-    lo: usize,
-    out: Mat,
-    sel_rows: Vec<Vec<usize>>,
-    ops: StageOps,
-    timing: StageTiming,
-    stalls: u64,
-    union_rows: usize,
-    rho_sum: f64,
-    rho_n: usize,
 }
 
 /// The composed four-stage pipeline. Construct once, run on many inputs.
@@ -276,8 +199,19 @@ impl SparseAttentionPipeline {
     }
 
     /// Execute the tiled pipeline. Output is deterministic: identical for
-    /// every `tile_t` and thread count (see module docs).
+    /// every `tile_t` and thread count (see module docs). Runs on a
+    /// throwaway [`WorkspacePool`]; serving paths use
+    /// [`SparseAttentionPipeline::run_pooled`] to reuse warm workspaces
+    /// across requests.
     pub fn run(&self, inp: &PipelineInputs) -> PipelineReport {
+        self.run_pooled(inp, &WorkspacePool::new())
+    }
+
+    /// [`SparseAttentionPipeline::run`] drawing per-worker
+    /// [`super::engine::TileWorkspace`]s from `pool` — bit-identical
+    /// outputs, zero hot-path allocations once the pool is warm for this
+    /// shape class.
+    pub fn run_pooled(&self, inp: &PipelineInputs, pool: &WorkspacePool) -> PipelineReport {
         let started = Instant::now();
         let (t, s, d) = (inp.t(), inp.s(), inp.d());
         let keep = self.cfg.keep(s);
@@ -293,11 +227,15 @@ impl SparseAttentionPipeline {
         };
         timing.predict_s += t0.elapsed().as_secs_f64();
 
-        // ---- Tiled parallel section. ----
+        // ---- Tiled parallel section on the shared tile core. ----
         let ntiles = t.div_ceil(self.cfg.tile_t.min(t.max(1)));
         let ctx = TileCtx { cfg: &self.cfg, inp, score: &score, kt: kt.as_ref(), keep };
-        let mut tiles: Vec<TileOut> =
-            parallel_tiles(ntiles, self.cfg.threads, |ti| run_tile(&ctx, ti));
+        let exec = TileExecutor { cfg: &self.cfg };
+        let class = ShapeClass::of(&self.cfg, d);
+        let (mut tiles, hot_path_allocs, workspace_bytes): (Vec<TileOut>, u64, usize) =
+            parallel_tiles_pooled(ntiles, self.cfg.threads, pool, class, |ws, ti| {
+                exec.prefill_tile(&ctx, ti, ws)
+            });
         tiles.sort_by_key(|tile| tile.lo);
 
         // ---- Merge. ----
@@ -331,6 +269,8 @@ impl SparseAttentionPipeline {
             rho_mean: if rho_n > 0 { rho_sum / rho_n as f64 } else { 0.0 },
             tiles: n_tiles,
             keep,
+            hot_path_allocs,
+            workspace_bytes,
         }
     }
 }
@@ -367,19 +307,13 @@ pub struct DecodeReport {
     pub rematerialized_pages: usize,
     /// Sessions evicted (LRU) to make room for this step.
     pub evicted_sessions: Vec<u64>,
-}
-
-/// One decoded row's results, merged after the parallel section.
-struct DecodeRowOut {
-    out: Vec<f32>,
-    sel: Vec<usize>,
-    ops: StageOps,
-    timing: StageTiming,
-    stalls: u64,
-    union_rows: usize,
-    rho: Option<f64>,
-    /// Distinct page indices this row's selection read (ascending).
-    pages: Vec<usize>,
+    /// Heap allocations metered inside the decode rows' stage cores
+    /// (zero in steady state on a warm [`WorkspacePool`]; see
+    /// [`super::engine`]).
+    pub hot_path_allocs: u64,
+    /// Peak per-worker [`super::engine::TileWorkspace`] heap capacity
+    /// during this step, bytes.
+    pub workspace_bytes: usize,
 }
 
 impl SparseAttentionPipeline {
@@ -408,7 +342,9 @@ impl SparseAttentionPipeline {
     /// for each new query row against the whole cached context — DLZS
     /// prediction runs against the *frozen* per-page operands, top-k
     /// selects over the causal prefix, and the formal stage streams the
-    /// selected KV rows back out of the cache.
+    /// selected KV rows back out of the cache. Runs on a throwaway
+    /// [`WorkspacePool`]; serving paths use
+    /// [`SparseAttentionPipeline::decode_step_pooled`].
     pub fn decode_step(
         &self,
         store: &mut SessionStore,
@@ -416,6 +352,22 @@ impl SparseAttentionPipeline {
         q: &Mat,
         k_new: &Mat,
         v_new: &Mat,
+    ) -> crate::Result<DecodeReport> {
+        self.decode_step_pooled(store, session, q, k_new, v_new, &WorkspacePool::new())
+    }
+
+    /// [`SparseAttentionPipeline::decode_step`] drawing per-worker
+    /// [`super::engine::TileWorkspace`]s from `pool` — bit-identical
+    /// outputs, zero hot-path allocations once the pool is warm for this
+    /// shape class.
+    pub fn decode_step_pooled(
+        &self,
+        store: &mut SessionStore,
+        session: u64,
+        q: &Mat,
+        k_new: &Mat,
+        v_new: &Mat,
+        pool: &WorkspacePool,
     ) -> crate::Result<DecodeReport> {
         let started = Instant::now();
         anyhow::ensure!(
@@ -463,20 +415,25 @@ impl SparseAttentionPipeline {
         let rows = q.rows;
         let page_size = store.config().page_size;
 
-        // Causal per-row section: rows are independent, so they tile and
-        // parallelize exactly like `run` — and because every per-row
-        // quantity depends only on tokens 0..=pos, the schedule can never
-        // change the math.
+        // Causal per-row section on the shared tile core: rows are
+        // independent, so they tile and parallelize exactly like `run` —
+        // and because every per-row quantity depends only on tokens
+        // 0..=pos, the schedule can never change the math.
         let tile = self.cfg.tile_t.min(rows.max(1));
         let ntiles = rows.div_ceil(tile);
-        let mut tiles_out: Vec<(usize, Vec<DecodeRowOut>)> = {
+        let class = ShapeClass::of(&self.cfg, d);
+        let (mut tiles_out, hot_path_allocs, workspace_bytes): (
+            Vec<(usize, Vec<DecodeRowOut>)>,
+            u64,
+            usize,
+        ) = {
             let pages: Vec<&KvPage> = store.pages_of(session);
-            let cfg = &self.cfg;
-            parallel_tiles(ntiles, self.cfg.threads, |ti| {
+            let exec = TileExecutor { cfg: &self.cfg };
+            parallel_tiles_pooled(ntiles, self.cfg.threads, pool, class, |ws, ti| {
                 let lo = ti * tile;
                 let hi = (lo + tile).min(rows);
                 let outs = (lo..hi)
-                    .map(|r| decode_row(cfg, &pages, q.row(r), base + r, scale, page_size))
+                    .map(|r| exec.decode_row(&pages, q.row(r), base + r, scale, page_size, ws))
                     .collect();
                 (ti, outs)
             })
@@ -526,298 +483,10 @@ impl SparseAttentionPipeline {
             page_hits,
             rematerialized_pages: outcome.rematerialized_pages,
             evicted_sessions: outcome.evicted_sessions,
+            hot_path_allocs,
+            workspace_bytes,
         })
     }
-}
-
-/// Run `ntiles` independent tile jobs, strided across worker threads
-/// (`threads == 0` picks `available_parallelism`) under
-/// `std::thread::scope`. Shared by the batch tile path and the decode
-/// row path; results come back unordered — callers sort by their tile
-/// key. Determinism is the jobs' responsibility (both callers' jobs are
-/// pure functions of the tile index).
-fn parallel_tiles<T: Send>(
-    ntiles: usize,
-    threads: usize,
-    job: impl Fn(usize) -> T + Sync,
-) -> Vec<T> {
-    let workers = match threads {
-        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
-        n => n,
-    }
-    .clamp(1, ntiles.max(1));
-    if workers <= 1 || ntiles <= 1 {
-        (0..ntiles).map(job).collect()
-    } else {
-        std::thread::scope(|scope| {
-            let job = &job;
-            let handles: Vec<_> = (0..workers)
-                .map(|w| {
-                    scope.spawn(move || {
-                        (w..ntiles).step_by(workers).map(job).collect::<Vec<_>>()
-                    })
-                })
-                .collect();
-            handles.into_iter().flat_map(|h| h.join().expect("tile worker panicked")).collect()
-        })
-    }
-}
-
-/// Formal-compute dispatch shared by the batch tile path, the decode
-/// row path and the sharded engine: SU-FA (descending/ascending), the
-/// FA-2 approximation (ascending SU-FA plus `fa2_cmp` cross-tile max
-/// comparisons — the Fig. 18a baseline accounting), or the dense masked
-/// softmax. Returns (output, stalls).
-pub(crate) fn formal_compute(
-    cfg: &PipelineConfig,
-    inp: &AttnInputs,
-    sel: &Selection,
-    fa2_cmp: u64,
-    c: &mut OpCounter,
-) -> (Mat, u64) {
-    match cfg.formal {
-        FormalKind::SufaDescend | FormalKind::SufaAscend => {
-            let order = if cfg.formal == FormalKind::SufaDescend {
-                UpdateOrder::Descend
-            } else {
-                UpdateOrder::Ascend
-            };
-            let r = sufa_attention(inp, sel, &SufaParams { bc: cfg.bc, order }, c);
-            (r.out, r.stalls)
-        }
-        FormalKind::Flash2 => {
-            let p = SufaParams { bc: cfg.bc, order: UpdateOrder::Ascend };
-            let r = sufa_attention(inp, sel, &p, c);
-            c.tally(OpKind::Cmp, fa2_cmp);
-            (r.out, r.stalls)
-        }
-        FormalKind::Dense => (dense_formal(inp, sel, c), 0),
-    }
-}
-
-/// Decode one query row at global position `pos` through all four
-/// stages against the cached context `0..=pos`. Everything here depends
-/// only on the query row and the frozen page operands of the causal
-/// prefix — the invariant that makes chunking/tiling/threading
-/// bit-invisible.
-fn decode_row(
-    cfg: &PipelineConfig,
-    pages: &[&KvPage],
-    qrow: &[f32],
-    pos: usize,
-    attn_scale: f32,
-    page_size: usize,
-) -> DecodeRowOut {
-    let limit = pos + 1;
-    let d = qrow.len();
-    let mut ops = StageOps::default();
-    let mut timing = StageTiming::default();
-
-    // ---- Stage 1: predict over cached page operands. ----
-    let t0 = Instant::now();
-    let est: Option<Vec<f32>> = if cfg.topk == TopkKind::None {
-        None
-    } else {
-        let qop = QueryOperand::encode(qrow, cfg.predict, cfg.predict_bits, &mut ops.predict);
-        Some(score_row(&qop, pages, limit, attn_scale, &mut ops.predict))
-    };
-    timing.predict_s += t0.elapsed().as_secs_f64();
-
-    // ---- Stage 2: top-k over the causal prefix. ----
-    let t0 = Instant::now();
-    let keep = cfg.keep(limit);
-    let mut rho = None;
-    let sel: Vec<usize> = match (cfg.topk, &est) {
-        (TopkKind::None, _) | (_, None) => (0..limit).collect(),
-        (TopkKind::Sads, Some(e)) => {
-            let (idx, stats) = sads_topk(e, keep, &cfg.sads, &mut ops.topk);
-            rho = Some(stats.rho);
-            idx
-        }
-        (TopkKind::Vanilla | TopkKind::Threshold, Some(e)) => vanilla_topk(e, keep, &mut ops.topk),
-    };
-    timing.topk_s += t0.elapsed().as_secs_f64();
-
-    // ---- Stage 3: cache read — gather this row's selected KV rows. ----
-    let t0 = Instant::now();
-    let mut union = sel.clone();
-    union.sort_unstable();
-    let u = union.len();
-    let (ku, vu) = gather_rows(pages, page_size, &union, d);
-    let mut row_pages = Vec::new();
-    for &j in &union {
-        if row_pages.last() != Some(&(j / page_size)) {
-            row_pages.push(j / page_size);
-        }
-    }
-    ops.kv_gen.sram(4 * (2 * u * d) as u64); // cached KV streams from SRAM
-    timing.kv_gen_s += t0.elapsed().as_secs_f64();
-
-    // ---- Stage 4: formal compute on the compacted rows. The selection
-    // is remapped monotonically (ascending union order), so per-key
-    // visit order — and therefore the math — is unchanged. ----
-    let t0 = Instant::now();
-    let remapped: Vec<usize> =
-        sel.iter().map(|&j| union.binary_search(&j).expect("selected key in union")).collect();
-    let q_mat = Mat::from_vec(1, d, qrow.to_vec());
-    let tile_inp = AttnInputs { q: &q_mat, k: &ku, v: &vu, scale: attn_scale };
-    let csel = Selection { rows: vec![remapped] };
-    let (out_row, stalls) = formal_compute(cfg, &tile_inp, &csel, keep as u64, &mut ops.formal);
-    // The formal stage's KV traffic came from the cache, not DRAM.
-    kv_traffic_on_chip(&mut ops.formal, u, d);
-    timing.formal_s += t0.elapsed().as_secs_f64();
-
-    DecodeRowOut {
-        out: out_row.row(0).to_vec(),
-        sel,
-        ops,
-        timing,
-        stalls,
-        union_rows: u,
-        rho,
-        pages: row_pages,
-    }
-}
-
-/// Execute one query tile through all four stages.
-fn run_tile(ctx: &TileCtx, ti: usize) -> TileOut {
-    let cfg = ctx.cfg;
-    let inp = ctx.inp;
-    let (t, s, d) = (inp.t(), inp.s(), inp.d());
-    let lo = ti * cfg.tile_t.min(t.max(1));
-    let hi = (lo + cfg.tile_t).min(t);
-    let rows = hi - lo;
-    let mut ops = StageOps::default();
-    let mut timing = StageTiming::default();
-
-    // ---- Stage 1: predict (per-tile phase 1.2 / oracle scores). ----
-    let t0 = Instant::now();
-    let est: Option<Mat> = match ctx.score {
-        ScoreSource::None => None,
-        ScoreSource::Exact => {
-            // Oracle scores: exact logits, nothing charged.
-            let q_tile = Mat::from_fn(rows, d, |i, j| inp.q.at(lo + i, j));
-            let mut e = q_tile.matmul(ctx.kt.expect("kt prepared for oracle scores"));
-            e.scale(inp.scale);
-            Some(e)
-        }
-        ScoreSource::Prepared(prep) => {
-            // Scale the estimate into logit units so the SADS sphere
-            // radius is calibrated the way Sec. IV-B assumes.
-            let mut e = prep.score_rows(lo, hi, &mut ops.predict);
-            e.scale(inp.scale);
-            Some(e)
-        }
-    };
-    timing.predict_s += t0.elapsed().as_secs_f64();
-
-    // ---- Stage 2: top-k selection. ----
-    let t0 = Instant::now();
-    let (mut rho_sum, mut rho_n) = (0.0, 0usize);
-    let sel_rows: Vec<Vec<usize>> = match (cfg.topk, &est) {
-        (TopkKind::None, _) | (_, None) => {
-            // Dense execution: every key, natural order.
-            (0..rows).map(|_| (0..s).collect()).collect()
-        }
-        (TopkKind::Sads, Some(e)) => (0..rows)
-            .map(|i| {
-                let (idx, stats) = sads_topk(e.row(i), ctx.keep, &cfg.sads, &mut ops.topk);
-                rho_sum += stats.rho;
-                rho_n += 1;
-                idx
-            })
-            .collect(),
-        // Threshold engines have no counted software implementation;
-        // executed as vanilla selection (see PipelineConfig docs).
-        (TopkKind::Vanilla | TopkKind::Threshold, Some(e)) => {
-            (0..rows).map(|i| vanilla_topk(e.row(i), ctx.keep, &mut ops.topk)).collect()
-        }
-    };
-    drop(est);
-    timing.topk_s += t0.elapsed().as_secs_f64();
-
-    // ---- Stage 3: KV generation for the tile's union. ----
-    let t0 = Instant::now();
-    let sel = Selection { rows: sel_rows };
-    let union = sel.union_keys(s);
-    let u = union.len();
-    let on_demand = cfg.on_demand_kv && inp.x.is_some() && inp.wk.is_some() && inp.wv.is_some();
-    if on_demand {
-        charge_on_demand_kv_gen(&mut ops.kv_gen, u, inp.x.unwrap().cols, d);
-    }
-    timing.kv_gen_s += t0.elapsed().as_secs_f64();
-
-    // ---- Stage 4: formal compute (SU-FA / FA-2 approx / dense). ----
-    let t0 = Instant::now();
-    let q_tile = Mat::from_fn(rows, d, |i, j| inp.q.at(lo + i, j));
-    let tile_inp = AttnInputs { q: &q_tile, k: inp.k, v: inp.v, scale: inp.scale };
-    let (out, stalls) =
-        formal_compute(cfg, &tile_inp, &sel, (rows * ctx.keep) as u64, &mut ops.formal);
-    if on_demand {
-        kv_traffic_on_chip(&mut ops.formal, u, d);
-    }
-    timing.formal_s += t0.elapsed().as_secs_f64();
-
-    TileOut {
-        lo,
-        out,
-        sel_rows: sel.rows,
-        ops,
-        timing,
-        stalls,
-        union_rows: u,
-        rho_sum,
-        rho_n,
-    }
-}
-
-/// Dense (masked) softmax over each row's selection in ascending key
-/// order, with dense-attention-style op accounting. For a full selection
-/// this reproduces [`crate::attention::dense_attention`]'s float
-/// associativity exactly — the `keep = 1.0` parity anchor.
-fn dense_formal(inp: &AttnInputs, sel: &Selection, c: &mut OpCounter) -> Mat {
-    let (s, d) = (inp.s(), inp.d());
-    let f = 4u64;
-    let union = sel.union_keys(s).len();
-    c.dram(f * (2 * inp.t() * d) as u64); // Q in, O out
-    c.dram(f * (2 * union * d) as u64); // KV in
-    let mut out = Mat::zeros(inp.t(), d);
-    for (i, keys) in sel.rows.iter().enumerate() {
-        if keys.is_empty() {
-            continue;
-        }
-        let mut ks = keys.clone();
-        ks.sort_unstable();
-        let m = ks.len();
-        let mut logits: Vec<f32> = ks
-            .iter()
-            .map(|&j| {
-                assert!(j < s, "selected key {j} out of range for S={s}");
-                let mut dot = 0.0f32;
-                for p in 0..d {
-                    dot += inp.q.at(i, p) * inp.k.at(j, p);
-                }
-                dot * inp.scale
-            })
-            .collect();
-        c.tally(OpKind::Mul, (m * d + m) as u64); // QKᵀ + scale
-        c.tally(OpKind::Add, (m * (d - 1)) as u64);
-        c.sram(2 * f * m as u64); // tile-resident score row
-        crate::tensor::softmax_inplace(&mut logits);
-        c.tally(OpKind::Cmp, (m - 1) as u64); // row max
-        c.tally(OpKind::Add, m as u64); // subtract max
-        c.tally(OpKind::Exp, m as u64);
-        c.tally(OpKind::Add, (m - 1) as u64); // denominator
-        c.tally(OpKind::Div, m as u64); // normalize
-        for (w, &j) in logits.iter().zip(&ks) {
-            for p in 0..d {
-                *out.at_mut(i, p) += w * inp.v.at(j, p);
-            }
-        }
-        c.tally(OpKind::Mul, (m * d) as u64);
-        c.tally(OpKind::Add, ((m - 1) * d) as u64);
-    }
-    out
 }
 
 // The parity contract (dense-oracle equivalence, tiled == untiled,
@@ -827,6 +496,7 @@ fn dense_formal(inp: &AttnInputs, sel: &Selection, c: &mut OpCounter) -> Mat {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::pipeline::FormalKind;
     use crate::util::Rng;
 
     fn workload(t: usize, s: usize, seed: u64) -> AttnWorkload {
@@ -851,6 +521,7 @@ mod tests {
         assert!(r.ops.formal.exp > 0);
         assert!(r.union_rows > 0);
         assert!(r.tiles >= 1);
+        assert!(r.workspace_bytes > 0, "tile cores ran inside a workspace");
     }
 
     #[test]
@@ -890,6 +561,26 @@ mod tests {
         let r = SparseAttentionPipeline::star(0.2).run(&PipelineInputs::qkv(&q, &wl.k, &wl.v));
         assert_eq!(r.out.rows, 0);
         assert_eq!(r.selection.rows.len(), 0);
+    }
+
+    #[test]
+    fn pooled_run_is_bit_identical_and_reuses_workspaces() {
+        let wl = workload(24, 96, 8);
+        let inputs = PipelineInputs::from_workload(&wl);
+        let pipe = SparseAttentionPipeline::new(
+            PipelineConfig::star().with_keep(0.25).with_tile(8).with_threads(1),
+        );
+        let fresh = pipe.run(&inputs);
+        let pool = WorkspacePool::new();
+        let warm1 = pipe.run_pooled(&inputs, &pool);
+        let warm2 = pipe.run_pooled(&inputs, &pool);
+        for r in [&warm1, &warm2] {
+            assert_eq!(r.out.max_abs_diff(&fresh.out), 0.0, "pooled output drift");
+            assert_eq!(r.selection, fresh.selection, "pooled selection drift");
+            assert_eq!(r.stalls, fresh.stalls);
+        }
+        assert_eq!(pool.resident_workspaces(), 1, "single-thread run pools one workspace");
+        assert!(pool.resident_bytes() > 0);
     }
 
     #[test]

@@ -8,6 +8,13 @@
 //!   with the cycle-level simulator's
 //!   [`crate::sim::pipeline::FeatureSet`] so algorithm runs and
 //!   cycle-level runs speak one config vocabulary.
+//! * [`engine`] — the **tile-execution core**: one allocation-free
+//!   implementation of the four-stage loop (the crate-internal
+//!   `TileExecutor`) working inside preallocated per-worker scratch
+//!   ([`TileWorkspace`], pooled per [`ShapeClass`] by
+//!   [`WorkspacePool`]). All three front-ends below drive it; none
+//!   keeps its own copy of the stage bodies. Workspace capacity is
+//!   reported next to the simulator's SRAM budget (DESIGN.md §8).
 //! * [`exec`] — [`SparseAttentionPipeline`]: tiled execution (per query
 //!   tile: predict → SADS → union-KV-gen → SU-FA, intermediates stay
 //!   tile-sized), parallel over independent tiles with
@@ -34,11 +41,13 @@
 //! ([`crate::coordinator::server::Backend::Native`]) and the examples.
 
 pub mod config;
+pub mod engine;
 pub mod exec;
 pub mod report;
 pub mod sharded;
 
 pub use config::PipelineConfig;
+pub use engine::{ShapeClass, TileWorkspace, WorkspacePool};
 pub use exec::{DecodeReport, PipelineInputs, PipelineReport, SparseAttentionPipeline};
 pub use report::{StageOps, StageTiming};
 pub use sharded::{ShardPlan, ShardStats, ShardedPipeline, ShardedReport};

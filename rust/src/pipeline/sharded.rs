@@ -34,7 +34,7 @@
 //! decisions carry the proof:
 //!
 //! * **Global quantization.** The predict prologue is the *same code*
-//!   as the single-core path ([`super::exec`]'s score-source
+//!   as the single-core path ([`super::engine`]'s score-source
 //!   preparation): operand scales are chosen from the full tensors, so
 //!   a shard scoring its key sub-range computes the identical dot
 //!   products ([`crate::sparsity::PreparedPredict::score_block`]).
@@ -49,16 +49,16 @@
 //!   run over the full K/V — the same float sequence, stalls included.
 
 use super::config::PipelineConfig;
-use super::exec::{
-    charge_on_demand_kv_gen, formal_compute, kv_traffic_on_chip, prepare_score_source,
-    PipelineInputs, ScoreSource,
+use super::engine::{
+    prepare_score_source, ScoreSource, ShapeClass, TileExecutor, TileWorkspace, WorkspacePool,
 };
+use super::exec::PipelineInputs;
 use super::report::{StageOps, StageTiming};
-use crate::attention::{AttnInputs, Selection};
+use crate::attention::Selection;
 use crate::sim::pipeline::TopkKind;
 use crate::sparsity::topk::{
-    merge_topk_candidates, sads_geometry, sads_merge, sads_segment_winners, vanilla_topk,
-    SegmentWinners,
+    merge_topk_candidates, sads_geometry, sads_merge, sads_segment_winners_scratch,
+    vanilla_topk_into, SegmentWinners,
 };
 use crate::spatial::drattention::q_payload_bytes;
 use crate::spatial::mesh::{snake_coords, Coord};
@@ -217,6 +217,15 @@ pub struct ShardedReport {
     pub ring_payload_bytes: u64,
     /// Per-worker statistics, ascending shard index.
     pub per_shard: Vec<ShardStats>,
+    /// Heap allocations metered inside the workers' stage cores (home
+    /// gather + formal; zero in steady state on a warm
+    /// [`super::WorkspacePool`] — the ring payload is excluded by
+    /// design: candidates traveling between threads must own their
+    /// storage; see [`super::engine`]).
+    pub hot_path_allocs: u64,
+    /// Peak per-worker [`super::TileWorkspace`] heap capacity during
+    /// this run, bytes.
+    pub workspace_bytes: usize,
 }
 
 impl ShardedReport {
@@ -321,8 +330,17 @@ impl ShardedPipeline {
 
     /// Execute sequence-sharded prefill. Output, selection and stalls
     /// are bit-identical to [`super::SparseAttentionPipeline::run`] on
-    /// the same inputs, for every worker count.
+    /// the same inputs, for every worker count. Runs on a throwaway
+    /// [`WorkspacePool`]; serving paths use
+    /// [`ShardedPipeline::run_pooled`] to reuse warm workspaces.
     pub fn run(&self, inp: &PipelineInputs) -> ShardedReport {
+        self.run_pooled(inp, &WorkspacePool::new())
+    }
+
+    /// [`ShardedPipeline::run`] with each worker drawing its
+    /// [`TileWorkspace`] from `pool` — bit-identical outputs, warm
+    /// buffers across requests.
+    pub fn run_pooled(&self, inp: &PipelineInputs, pool: &WorkspacePool) -> ShardedReport {
         let started = Instant::now();
         let (t, s, d) = (inp.t(), inp.s(), inp.d());
         let keep = self.cfg.keep(s);
@@ -344,6 +362,8 @@ impl ShardedPipeline {
                 ring_steps: 0,
                 ring_payload_bytes: 0,
                 per_shard: Vec::new(),
+                hot_path_allocs: 0,
+                workspace_bytes: 0,
             };
         }
 
@@ -374,11 +394,13 @@ impl ShardedPipeline {
         };
 
         // ---- Ring circulation: one thread per worker, mpsc links to
-        // the next ring neighbor. Every thread computes its local pass
-        // on the payload it holds, forwards it, and receives the next —
-        // after `w` steps each block has visited every shard and is
-        // back home for merge + gather + formal. ----
-        let mut outs: Vec<WorkerOut> = std::thread::scope(|scope| {
+        // the next ring neighbor, one pooled workspace per worker.
+        // Every thread computes its local pass on the payload it holds,
+        // forwards it, and receives the next — after `w` steps each
+        // block has visited every shard and is back home for merge +
+        // gather + formal. ----
+        let class = ShapeClass::of(&self.cfg, d);
+        let worker_outs: Vec<(WorkerOut, u64, usize)> = std::thread::scope(|scope| {
             let (txs, rxs): (Vec<_>, Vec<_>) =
                 (0..w).map(|_| channel::<QBlockPayload>()).unzip();
             let ctx = &ctx;
@@ -386,6 +408,7 @@ impl ShardedPipeline {
             for (j, rx) in rxs.into_iter().enumerate() {
                 let tx_next = txs[(j + 1) % w].clone();
                 handles.push(scope.spawn(move || {
+                    let mut ws = pool.checkout(class);
                     let mut my_ops = StageOps::default();
                     let mut my_timing = StageTiming::default();
                     let (blo, bhi) = ctx.plan.q_blocks[j];
@@ -393,7 +416,14 @@ impl ShardedPipeline {
                     let mut ring_sends = 0u64;
                     let mut payload_bytes = 0u64;
                     for _step in 0..w {
-                        shard_local_pass(ctx, j, &mut payload, &mut my_ops, &mut my_timing);
+                        shard_local_pass(
+                            ctx,
+                            j,
+                            &mut payload,
+                            &mut my_ops,
+                            &mut my_timing,
+                            &mut ws,
+                        );
                         if w > 1 {
                             payload_bytes += payload.wire_bytes(ctx.d);
                             ring_sends += 1;
@@ -402,12 +432,31 @@ impl ShardedPipeline {
                         }
                     }
                     debug_assert_eq!(payload.block, j, "payload did not come home");
-                    home_phase(ctx, payload, my_ops, my_timing, ring_sends, payload_bytes)
+                    let out = home_phase(
+                        ctx,
+                        payload,
+                        my_ops,
+                        my_timing,
+                        ring_sends,
+                        payload_bytes,
+                        &mut ws,
+                    );
+                    let (hot, bytes) = (ws.take_hot_allocs(), ws.capacity_bytes());
+                    pool.checkin(ws);
+                    (out, hot, bytes)
                 }));
             }
             drop(txs);
             handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
         });
+        let mut hot_path_allocs = 0u64;
+        let mut workspace_bytes = 0usize;
+        let mut outs: Vec<WorkerOut> = Vec::with_capacity(w);
+        for (o, hot, bytes) in worker_outs {
+            hot_path_allocs += hot;
+            workspace_bytes = workspace_bytes.max(bytes);
+            outs.push(o);
+        }
         outs.sort_by_key(|o| o.block);
 
         // ---- Merge worker results in block order. ----
@@ -457,19 +506,25 @@ impl ShardedPipeline {
             ring_steps: w,
             ring_payload_bytes,
             per_shard,
+            hot_path_allocs,
+            workspace_bytes,
         }
     }
 }
 
 /// One ring step on worker `j`: run the shard-local halves of the
 /// predict and top-k stages for the visiting Q sub-block, over this
-/// worker's key range only.
+/// worker's key range only. The score tile lands in the worker's
+/// [`TileWorkspace`] (the shared stage-1 kernel of
+/// [`TileExecutor::score_block_into`]); the proposed candidates are
+/// pushed into the ring payload, which must own its storage.
 fn shard_local_pass(
     ctx: &ShardCtx,
     j: usize,
     payload: &mut QBlockPayload,
     ops: &mut StageOps,
     timing: &mut StageTiming,
+    ws: &mut TileWorkspace,
 ) {
     if ctx.cfg.topk == TopkKind::None || payload.hi == payload.lo {
         return; // dense execution needs no scores; empty block carries nothing
@@ -478,34 +533,31 @@ fn shard_local_pass(
     let (key_lo, key_hi) = ctx.plan.key_ranges[j];
     let rows = hi - lo;
     let kw = key_hi - key_lo;
-    let d = ctx.d;
 
     // ---- Predict (local): score this block's rows against the owned
     // key range. Bit-identical to the same elements of the single-core
-    // estimate (global scales / independent dot products). ----
+    // estimate (global scales / independent dot products) — the same
+    // stage-1 kernel the batch tile path runs, not a loop kept in sync
+    // by hand. ----
     let t0 = Instant::now();
-    let est: Mat = match ctx.score {
-        ScoreSource::None => unreachable!("topk != None implies a score source"),
-        ScoreSource::Exact => {
-            // Oracle scores: exact logits, nothing charged. matmul_cols
-            // slices the single-core q_tile × Kᵀ product bit for bit
-            // (one shared kernel, not two loops kept in sync by hand).
-            let q_block = Mat::from_fn(rows, d, |i, p| ctx.inp.q.at(lo + i, p));
-            let kt = ctx.kt.expect("kt prepared for oracle scores");
-            let mut e = q_block.matmul_cols(kt, key_lo, key_hi);
-            e.scale(ctx.inp.scale);
-            e
-        }
-        ScoreSource::Prepared(prep) => {
-            let mut e = prep.score_block(lo, hi, key_lo, key_hi, &mut ops.predict);
-            e.scale(ctx.inp.scale);
-            e
-        }
-    };
+    let exec = TileExecutor { cfg: ctx.cfg };
+    let have_est = exec.score_block_into(
+        ctx.score,
+        ctx.inp,
+        ctx.kt,
+        lo,
+        hi,
+        key_lo,
+        key_hi,
+        ws,
+        &mut ops.predict,
+    );
+    debug_assert!(have_est, "topk != None implies a score source");
     timing.predict_s += t0.elapsed().as_secs_f64();
 
     // ---- Top-k (local): propose candidates from the owned range. ----
     let t0 = Instant::now();
+    let (est, topk, tmp) = ws.est_topk_and_tmp();
     match ctx.cfg.topk {
         TopkKind::None => unreachable!(),
         TopkKind::Sads => {
@@ -516,13 +568,14 @@ fn shard_local_pass(
                 for seg in seg_lo..seg_hi {
                     let glo = seg * seg_len;
                     let ghi = (glo + seg_len).min(ctx.s);
-                    payload.rows[i].sads.push(sads_segment_winners(
+                    payload.rows[i].sads.push(sads_segment_winners_scratch(
                         &row[glo - key_lo..ghi - key_lo],
                         glo,
                         seg,
                         ctx.per_seg,
                         ctx.cfg.sads.radius,
                         &mut ops.topk,
+                        topk,
                     ));
                 }
             }
@@ -531,13 +584,13 @@ fn shard_local_pass(
         // single-core pipeline (see PipelineConfig docs).
         TopkKind::Vanilla | TopkKind::Threshold => {
             for i in 0..rows {
-                let local = vanilla_topk(est.row(i), ctx.keep.min(kw), &mut ops.topk);
+                vanilla_topk_into(est.row(i), ctx.keep.min(kw), &mut ops.topk, topk, tmp);
                 // Proposal order is irrelevant here: the home phase sorts
                 // the full accumulated list by global index (the tie
                 // contract) before merging.
                 payload.rows[i]
                     .exact
-                    .extend(local.into_iter().map(|jj| (est.at(i, jj), key_lo + jj)));
+                    .extend(tmp.iter().map(|&jj| (est.at(i, jj), key_lo + jj)));
             }
         }
     }
@@ -545,8 +598,9 @@ fn shard_local_pass(
 }
 
 /// The home phase for a block that has visited every shard: merge the
-/// distributed top-k, gather the selected KV rows, run the formal stage
-/// in the merged order.
+/// distributed top-k, then hand the merged selection to the shared
+/// stage-3/4 core ([`TileExecutor::gather_formal_block`]) — gather the
+/// selected KV rows, run the formal stage in the merged order.
 fn home_phase(
     ctx: &ShardCtx,
     payload: QBlockPayload,
@@ -554,6 +608,7 @@ fn home_phase(
     mut timing: StageTiming,
     ring_sends: u64,
     payload_bytes: u64,
+    ws: &mut TileWorkspace,
 ) -> WorkerOut {
     let (lo, hi, block) = (payload.lo, payload.hi, payload.block);
     let rows = hi - lo;
@@ -584,80 +639,27 @@ fn home_phase(
     }
     timing.topk_s += t0.elapsed().as_secs_f64();
 
-    // ---- KV gen + gather: produce the union of selected rows on their
-    // owning shards and stream them to this home worker — only the
-    // union crosses the ring (the sparse-attention win).
-    let t0 = Instant::now();
-    let sel = Selection { rows: sel_rows };
-    let union = sel.union_keys(s);
-    let u = union.len();
-    let inp = ctx.inp;
-    let on_demand = ctx.cfg.on_demand_kv && inp.x.is_some() && inp.wk.is_some() && inp.wv.is_some();
-    if on_demand {
-        // Union KV rows are generated on their owning shards; the charge
-        // is the single-core stage-3 accounting, shared so it cannot
-        // drift between the engines.
-        charge_on_demand_kv_gen(&mut ops.kv_gen, u, inp.x.unwrap().cols, d);
-    }
-    // When every key is selected (dense execution, keep = 1.0) the
-    // gather is the identity: attend the original K/V directly instead
-    // of copying the whole context per Q block.
-    let identity_union = u == s;
-    let gathered: Option<(Mat, Mat)> = if identity_union {
-        None
-    } else {
-        let mut ku = Mat::zeros(u, d);
-        let mut vu = Mat::zeros(u, d);
-        for (i, &key) in union.iter().enumerate() {
-            ku.row_mut(i).copy_from_slice(inp.k.row(key));
-            vu.row_mut(i).copy_from_slice(inp.v.row(key));
-        }
-        Some((ku, vu))
-    };
-    timing.kv_gen_s += t0.elapsed().as_secs_f64();
-
-    // ---- Formal: SU-FA over the gathered rows, selection remapped
-    // monotonically (ascending union order) so the per-key visit order
-    // — and therefore every float — matches the single-core run. An
-    // identity union needs no remap: positions already equal indices.
-    let t0 = Instant::now();
-    let remapped: Selection;
-    let formal_sel: &Selection = if identity_union {
-        &sel
-    } else {
-        remapped = Selection {
-            rows: sel
-                .rows
-                .iter()
-                .map(|row| {
-                    row.iter()
-                        .map(|&jj| union.binary_search(&jj).expect("selected key in union"))
-                        .collect()
-                })
-                .collect(),
-        };
-        &remapped
-    };
-    let q_block = Mat::from_fn(rows, d, |i, jj| inp.q.at(lo + i, jj));
-    let (kk, vv): (&Mat, &Mat) = match &gathered {
-        Some((ku, vu)) => (ku, vu),
-        None => (inp.k, inp.v),
-    };
-    let block_inp = AttnInputs { q: &q_block, k: kk, v: vv, scale: inp.scale };
-    let (out, stalls) =
-        formal_compute(ctx.cfg, &block_inp, formal_sel, (rows * ctx.keep) as u64, &mut ops.formal);
-    if on_demand {
-        // Under the sharded dataflow the formal stage streams the
-        // gathered KV out of on-chip buffers, not DRAM.
-        kv_traffic_on_chip(&mut ops.formal, u, d);
-    }
-    timing.formal_s += t0.elapsed().as_secs_f64();
+    // ---- Stages 3 + 4 on the shared tile core: union → gather (only
+    // the union crosses the ring — the sparse-attention win) → monotone
+    // remap → formal compute, inside this worker's workspace.
+    let exec = TileExecutor { cfg: ctx.cfg };
+    let mut out = Mat::zeros(rows, d);
+    let (stalls, u) = exec.gather_formal_block(
+        ctx.inp,
+        lo,
+        &sel_rows,
+        ctx.keep,
+        ws,
+        &mut ops,
+        &mut timing,
+        &mut out,
+    );
 
     WorkerOut {
         block,
         lo,
         out,
-        sel_rows: sel.rows,
+        sel_rows,
         ops,
         timing,
         stalls,

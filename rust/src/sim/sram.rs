@@ -15,8 +15,21 @@ pub struct Sram {
 }
 
 impl Sram {
+    /// The paper's single-core STAR on-chip budget: 316 kB. Also the
+    /// reference point the software tile engine reports its
+    /// [`crate::pipeline::TileWorkspace`] capacity against
+    /// (`workspace_bytes` in the pipeline reports and bench JSON —
+    /// DESIGN.md §8).
+    pub const STAR_BUDGET_BYTES: usize = 316 * 1024;
+
     pub fn new(bytes: usize) -> Sram {
         Sram { bytes, bw: 19e12 }
+    }
+
+    /// The modeled single-core STAR SRAM array
+    /// ([`Sram::STAR_BUDGET_BYTES`]).
+    pub fn star_single_core() -> Sram {
+        Sram::new(Sram::STAR_BUDGET_BYTES)
     }
 
     pub fn fits(&self, working_set: usize) -> bool {
@@ -110,6 +123,13 @@ mod tests {
         let tiled = ws.score_tile(16) + ws.kv_tile(16) + ws.sufa_state();
         assert!(Sram::new(316 * 1024).fits(tiled), "tiled set {tiled}");
         assert!(!Sram::new(316 * 1024).fits(ws.dense_scores()));
+    }
+
+    #[test]
+    fn star_budget_constant_matches_paper() {
+        let s = Sram::star_single_core();
+        assert_eq!(s.bytes, 316 * 1024);
+        assert_eq!(Sram::STAR_BUDGET_BYTES, 316 * 1024);
     }
 
     #[test]

@@ -25,6 +25,7 @@ pub use distribution::{classify_row, DistType};
 pub use hitrate::hit_rate;
 pub use predictor::{bits_for, PredictScheme, Predictor, PreparedPredict};
 pub use topk::{
-    merge_topk_candidates, sads_geometry, sads_merge, sads_segment_winners, sads_topk,
-    vanilla_topk, SadsParams, SadsStats, SegmentWinners,
+    merge_topk_candidates, merge_topk_candidates_into, sads_geometry, sads_merge, sads_merge_into,
+    sads_segment_winners, sads_segment_winners_scratch, sads_topk, sads_topk_into, vanilla_topk,
+    vanilla_topk_into, SadsParams, SadsStats, SegmentWinners, TopkScratch,
 };

@@ -202,7 +202,15 @@ impl PreparedPredict {
     /// Estimate rows `lo..hi` of `Â = a·bᵀ`. Row `i` of the result is
     /// bit-identical to row `lo + i` of the whole-matrix estimate.
     pub fn score_rows(&self, lo: usize, hi: usize, c: &mut OpCounter) -> Mat {
-        self.score_block(lo, hi, 0, self.keys, c)
+        let mut out = Mat::zeros(hi.saturating_sub(lo), self.keys);
+        self.score_rows_into(lo, hi, c, &mut out);
+        out
+    }
+
+    /// [`PreparedPredict::score_rows`] writing into a caller-provided
+    /// buffer — the tile engine's allocation-free predict stage.
+    pub fn score_rows_into(&self, lo: usize, hi: usize, c: &mut OpCounter, out: &mut Mat) {
+        self.score_block_into(lo, hi, 0, self.keys, c, out)
     }
 
     /// Estimate the `(lo..hi) × (key_lo..key_hi)` block of `Â = a·bᵀ`.
@@ -220,12 +228,31 @@ impl PreparedPredict {
         key_hi: usize,
         c: &mut OpCounter,
     ) -> Mat {
+        let mut out = Mat::zeros(hi.saturating_sub(lo), key_hi.saturating_sub(key_lo));
+        self.score_block_into(lo, hi, key_lo, key_hi, c, &mut out);
+        out
+    }
+
+    /// [`PreparedPredict::score_block`] writing into a caller-provided
+    /// buffer (which is [`Mat::reset`] to the block shape — no
+    /// allocation once it has the capacity). This is the only scoring
+    /// kernel; the allocating entry points wrap it, so buffered and
+    /// fresh estimates are bit-identical by construction.
+    pub fn score_block_into(
+        &self,
+        lo: usize,
+        hi: usize,
+        key_lo: usize,
+        key_hi: usize,
+        c: &mut OpCounter,
+        out: &mut Mat,
+    ) {
         let d = self.d;
         assert!(lo <= hi && hi <= self.rows, "tile {lo}..{hi} out of range");
         assert!(key_lo <= key_hi && key_hi <= self.keys, "keys {key_lo}..{key_hi} out of range");
         let m = hi - lo;
         let n = key_hi - key_lo;
-        let mut out = Mat::zeros(m, n);
+        out.reset(m, n);
         match &self.ops {
             PreparedOps::Dlzs { a_codes, qb } => {
                 // Per product: one shift, one add (accumulate).
@@ -269,7 +296,6 @@ impl PreparedPredict {
                 }
             }
         }
-        out
     }
 }
 
@@ -422,6 +448,25 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn score_block_into_reuses_dirty_buffers_bit_identically() {
+        // The workspace contract: scoring into a dirty, wrong-shaped
+        // buffer equals a fresh score_block, ops included.
+        for scheme in [PredictScheme::Dlzs, PredictScheme::Slzs, PredictScheme::LowBitMul] {
+            let (a, b) = mats(9, 12, 33, 16);
+            let pred = Predictor::new(scheme, 7);
+            let mut c = OpCounter::new();
+            let prep = pred.prepare(&a, &b, &mut c);
+            let mut dirty = Mat::randn(5, 5, 1.0, &mut Rng::new(1));
+            let mut cw = OpCounter::new();
+            let want = prep.score_block(2, 9, 10, 30, &mut cw);
+            let mut cg = OpCounter::new();
+            prep.score_block_into(2, 9, 10, 30, &mut cg, &mut dirty);
+            assert_eq!(dirty, want, "{scheme:?}");
+            assert_eq!(cg, cw, "{scheme:?} ops drift");
         }
     }
 

@@ -20,6 +20,20 @@
 //! query block's home worker — same functions, same comparisons, same
 //! selection, bit for bit. [`merge_topk_candidates`] is the analogous
 //! merge pass for the exact (vanilla) engine.
+//!
+//! # Select-into-arena entry points
+//!
+//! Every engine has two spellings of the same selection:
+//!
+//! * the classic allocating one (`vanilla_topk`, `sads_topk`, …), and
+//! * an `_into` variant writing into caller-owned buffers plus a
+//!   reusable [`TopkScratch`] — the hot path of the allocation-free tile
+//!   engine ([`crate::pipeline::engine`]).
+//!
+//! Each pair shares one private core (`segment_pass`, `merge_pass`, the
+//! extraction scans), so the buffered and allocating spellings cannot
+//! drift: identical selections, identical orders, identical comparison
+//! counts, enforced again by the unit tests at the bottom of this file.
 
 use crate::arith::{OpCounter, OpKind};
 
@@ -47,33 +61,115 @@ pub struct SadsStats {
     pub comparisons: u64,
 }
 
-/// Baseline per-row top-k: repeated max-extraction scans (what "selecting
-/// each element requires O(S) operations" describes). Returns indices in
-/// descending score order.
-pub fn vanilla_topk(row: &[f32], k: usize, c: &mut OpCounter) -> Vec<usize> {
-    let s = row.len();
-    let k = k.min(s);
-    let mut taken = vec![false; s];
-    let mut out = Vec::with_capacity(k);
+/// Reusable scratch for the `_into` top-k entry points: extraction
+/// flags, the SADS sphere-filter survivor list, the flat per-segment
+/// winner arena and the merge cursors. One instance per worker thread
+/// ([`crate::pipeline::engine::TileWorkspace`] owns one), reused across
+/// rows, tiles and requests — buffers only ever grow, so steady-state
+/// selection performs zero heap allocations.
+#[derive(Clone, Debug, Default)]
+pub struct TopkScratch {
+    /// Extraction flags over the scan domain (row or survivor list).
+    taken: Vec<bool>,
+    /// Sphere-filter survivors of the current segment (local indices).
+    feasible: Vec<usize>,
+    /// Flat per-segment winner arena `(score, global key index)`.
+    winners: Vec<(f32, usize)>,
+    /// Arena offsets: segment `i` owns `winners[seg_off[i]..seg_off[i+1]]`.
+    seg_off: Vec<usize>,
+    /// Merge cursors, one per live list.
+    cursors: Vec<usize>,
+}
+
+impl TopkScratch {
+    /// Pre-grow every buffer for rows of `s` scores, so the next
+    /// `_into` call on such a row allocates nothing.
+    pub fn reserve(&mut self, s: usize) {
+        reserve_to(&mut self.taken, s);
+        reserve_to(&mut self.feasible, s);
+        reserve_to(&mut self.winners, s);
+        reserve_to(&mut self.seg_off, s + 1);
+        reserve_to(&mut self.cursors, s);
+    }
+
+    /// Bytes of heap capacity currently held (workspace accounting).
+    pub fn capacity_bytes(&self) -> usize {
+        self.taken.capacity() * std::mem::size_of::<bool>()
+            + self.feasible.capacity() * std::mem::size_of::<usize>()
+            + self.winners.capacity() * std::mem::size_of::<(f32, usize)>()
+            + self.seg_off.capacity() * std::mem::size_of::<usize>()
+            + self.cursors.capacity() * std::mem::size_of::<usize>()
+    }
+}
+
+/// Grow `v`'s capacity to at least `n` elements (never shrinks).
+fn reserve_to<T>(v: &mut Vec<T>, n: usize) {
+    if v.capacity() < n {
+        v.reserve(n - v.len());
+    }
+}
+
+/// The extraction-scan core shared by [`vanilla_topk`] and
+/// [`merge_topk_candidates`]: `k` passes over `len` candidates, each
+/// taking the first strict maximum among the not-yet-taken (score ties
+/// resolve to the lowest scan position). Returns the comparison count.
+fn extract_scan(
+    len: usize,
+    k: usize,
+    score: impl Fn(usize) -> f32,
+    taken: &mut Vec<bool>,
+    mut emit: impl FnMut(usize),
+) -> u64 {
+    taken.clear();
+    taken.resize(len, false);
+    let mut cmp_count = 0u64;
     for _ in 0..k {
         let mut best = usize::MAX;
         let mut best_v = f32::NEG_INFINITY;
-        for (j, &x) in row.iter().enumerate() {
-            if !taken[j] {
-                c.tally(OpKind::Cmp, 1);
-                if x > best_v {
-                    best_v = x;
+        for (j, t) in taken.iter().enumerate() {
+            if !*t {
+                cmp_count += 1;
+                if score(j) > best_v {
+                    best_v = score(j);
                     best = j;
                 }
             }
         }
         if best == usize::MAX {
-            break; // every remaining score is -inf (fully masked row)
+            break; // every remaining score is -inf (fully masked input)
         }
         taken[best] = true;
-        out.push(best);
+        emit(best);
     }
+    cmp_count
+}
+
+/// Baseline per-row top-k: repeated max-extraction scans (what "selecting
+/// each element requires O(S) operations" describes). Returns indices in
+/// descending score order.
+pub fn vanilla_topk(row: &[f32], k: usize, c: &mut OpCounter) -> Vec<usize> {
+    let mut scratch = TopkScratch::default();
+    let mut out = Vec::with_capacity(k.min(row.len()));
+    vanilla_topk_into(row, k, c, &mut scratch, &mut out);
     out
+}
+
+/// [`vanilla_topk`] writing into a caller-provided buffer (cleared, then
+/// filled) using reusable scratch — no allocation once both have the
+/// capacity. Selection, order and comparison accounting are identical to
+/// the allocating entry point (one shared core).
+pub fn vanilla_topk_into(
+    row: &[f32],
+    k: usize,
+    c: &mut OpCounter,
+    scratch: &mut TopkScratch,
+    out: &mut Vec<usize>,
+) {
+    out.clear();
+    let cmp = extract_scan(row.len(), k.min(row.len()), |j| row[j], &mut scratch.taken, |j| {
+        out.push(j)
+    });
+    c.tally(OpKind::Cmp, cmp);
 }
 
 /// One sub-segment's output from the distributed phase of SADS:
@@ -91,20 +187,20 @@ pub struct SegmentWinners {
     pub comparisons: u64,
 }
 
-/// The per-segment phase of SADS over one sub-segment's score slice:
-/// local max, sphere filter at `radius`, then up to `per_seg` selection
-/// passes over the survivors. `scores` is the segment's slice and `base`
-/// the global index of `scores[0]`, so winners carry global key indices
-/// — which is what lets a shard owning this key range run the phase
-/// locally, bit-identically to the single-core [`sads_topk`].
-pub fn sads_segment_winners(
+/// The per-segment core: local max, sphere filter at `radius`, then up
+/// to `per_seg` selection passes over the survivors, emitted in
+/// descending order as `(score, base + local index)`. Shared by every
+/// SADS spelling in this module, so their comparisons can never drift.
+/// Returns (survivors, comparisons).
+fn segment_pass(
     scores: &[f32],
     base: usize,
-    seg: usize,
     per_seg: usize,
     radius: f32,
-    c: &mut OpCounter,
-) -> SegmentWinners {
+    feasible: &mut Vec<usize>,
+    taken: &mut Vec<bool>,
+    mut emit: impl FnMut(f32, usize),
+) -> (usize, u64) {
     let len = scores.len();
     assert!(len > 0, "empty SADS segment");
     let mut cmp_count = 0u64;
@@ -120,35 +216,100 @@ pub fn sads_segment_winners(
 
     // 2) Sphere filter: one comparison per element against (max − r).
     let floor = mx - radius;
-    let feasible: Vec<usize> = (0..len).filter(|&j| scores[j] >= floor).collect();
+    feasible.clear();
+    feasible.extend((0..len).filter(|&j| scores[j] >= floor));
     cmp_count += len as u64;
     let survivors = feasible.len();
 
     // 3) Selection passes restricted to the feasible region.
     let take = per_seg.min(feasible.len());
-    let mut taken = vec![false; feasible.len()];
-    let mut winners = Vec::with_capacity(take);
-    for _ in 0..take {
-        let mut bi = usize::MAX;
-        let mut bv = f32::NEG_INFINITY;
-        for (fi, &j) in feasible.iter().enumerate() {
-            if !taken[fi] {
+    cmp_count += extract_scan(feasible.len(), take, |fi| scores[feasible[fi]], taken, |fi| {
+        emit(scores[feasible[fi]], base + feasible[fi])
+    });
+    (survivors, cmp_count)
+}
+
+/// The per-segment phase of SADS over one sub-segment's score slice:
+/// local max, sphere filter at `radius`, then up to `per_seg` selection
+/// passes over the survivors. `scores` is the segment's slice and `base`
+/// the global index of `scores[0]`, so winners carry global key indices
+/// — which is what lets a shard owning this key range run the phase
+/// locally, bit-identically to the single-core [`sads_topk`].
+pub fn sads_segment_winners(
+    scores: &[f32],
+    base: usize,
+    seg: usize,
+    per_seg: usize,
+    radius: f32,
+    c: &mut OpCounter,
+) -> SegmentWinners {
+    let mut scratch = TopkScratch::default();
+    sads_segment_winners_scratch(scores, base, seg, per_seg, radius, c, &mut scratch)
+}
+
+/// [`sads_segment_winners`] with caller-provided scratch (the winner
+/// list itself is freshly allocated — it travels in the sharded
+/// pipeline's ring payload, so it must own its storage).
+pub fn sads_segment_winners_scratch(
+    scores: &[f32],
+    base: usize,
+    seg: usize,
+    per_seg: usize,
+    radius: f32,
+    c: &mut OpCounter,
+    scratch: &mut TopkScratch,
+) -> SegmentWinners {
+    let mut winners = Vec::with_capacity(per_seg.min(scores.len()));
+    let (survivors, comparisons) = segment_pass(
+        scores,
+        base,
+        per_seg,
+        radius,
+        &mut scratch.feasible,
+        &mut scratch.taken,
+        |v, j| winners.push((v, j)),
+    );
+    c.tally(OpKind::Cmp, comparisons);
+    SegmentWinners { seg, winners, survivors, comparisons }
+}
+
+/// The n-way merge core: descending per-list candidates merge into one
+/// global descending order, one comparison per output per live list,
+/// ties to the earlier list. `peek(li, cursor)` returns list `li`'s
+/// candidate at `cursor` (None when exhausted). Shared by every merge
+/// spelling in this module. Returns the comparison count.
+fn merge_pass(
+    nlists: usize,
+    peek: impl Fn(usize, usize) -> Option<(f32, usize)>,
+    k: usize,
+    cursors: &mut Vec<usize>,
+    mut emit: impl FnMut(usize),
+) -> u64 {
+    cursors.clear();
+    cursors.resize(nlists, 0);
+    let mut cmp_count = 0u64;
+    let mut emitted = 0usize;
+    while emitted < k {
+        let mut best_list = usize::MAX;
+        let mut best_v = f32::NEG_INFINITY;
+        for (li, &cur) in cursors.iter().enumerate() {
+            if let Some((v, _)) = peek(li, cur) {
                 cmp_count += 1;
-                if scores[j] > bv {
-                    bv = scores[j];
-                    bi = fi;
+                if v > best_v {
+                    best_v = v;
+                    best_list = li;
                 }
             }
         }
-        if bi == usize::MAX {
-            break; // every survivor is -inf (fully masked segment)
+        if best_list == usize::MAX {
+            break; // all lists exhausted (aggressive pruning)
         }
-        taken[bi] = true;
-        winners.push((scores[feasible[bi]], base + feasible[bi]));
+        let (_, idx) = peek(best_list, cursors[best_list]).expect("peeked candidate");
+        emit(idx);
+        cursors[best_list] += 1;
+        emitted += 1;
     }
-
-    c.tally(OpKind::Cmp, cmp_count);
-    SegmentWinners { seg, winners, survivors, comparisons: cmp_count }
+    cmp_count
 }
 
 /// The merge phase of SADS: n-way merge of per-segment descending winner
@@ -158,30 +319,33 @@ pub fn sads_segment_winners(
 /// only on the global segment order, never on how segments were
 /// distributed across workers. Returns (indices, comparisons).
 pub fn sads_merge(lists: &[SegmentWinners], k: usize, c: &mut OpCounter) -> (Vec<usize>, u64) {
+    let mut cursors = Vec::with_capacity(lists.len());
+    let mut out = Vec::with_capacity(k);
+    let cmp = sads_merge_into(lists, k, c, &mut cursors, &mut out);
+    (out, cmp)
+}
+
+/// [`sads_merge`] writing into caller-provided buffers (cleared, then
+/// filled — no allocation once they have the capacity). Returns the
+/// comparison count (also tallied into `c`).
+pub fn sads_merge_into(
+    lists: &[SegmentWinners],
+    k: usize,
+    c: &mut OpCounter,
+    cursors: &mut Vec<usize>,
+    out: &mut Vec<usize>,
+) -> u64 {
     debug_assert!(lists.windows(2).all(|w| w[0].seg < w[1].seg), "merge wants ascending segments");
-    let mut cmp_count = 0u64;
-    let mut cursors = vec![0usize; lists.len()];
-    let mut merged: Vec<usize> = Vec::with_capacity(k);
-    while merged.len() < k {
-        let mut best_list = usize::MAX;
-        let mut best_v = f32::NEG_INFINITY;
-        for (li, list) in lists.iter().enumerate() {
-            if cursors[li] < list.winners.len() {
-                cmp_count += 1;
-                if list.winners[cursors[li]].0 > best_v {
-                    best_v = list.winners[cursors[li]].0;
-                    best_list = li;
-                }
-            }
-        }
-        if best_list == usize::MAX {
-            break; // all lists exhausted (aggressive pruning)
-        }
-        merged.push(lists[best_list].winners[cursors[best_list]].1);
-        cursors[best_list] += 1;
-    }
-    c.tally(OpKind::Cmp, cmp_count);
-    (merged, cmp_count)
+    out.clear();
+    let cmp = merge_pass(
+        lists.len(),
+        |li, cur| lists[li].winners.get(cur).copied(),
+        k,
+        cursors,
+        |idx| out.push(idx),
+    );
+    c.tally(OpKind::Cmp, cmp);
+    cmp
 }
 
 /// The SADS sub-segment geometry for a row of `s` scores: (segment
@@ -200,38 +364,83 @@ pub fn sads_geometry(s: usize, p: &SadsParams) -> (usize, usize) {
 /// SADS: distributed per-segment selection with sphere-radius early
 /// termination. Returns (indices in descending estimated-score order,
 /// stats). Each segment contributes ⌈k/n⌉ winners (clipped to its size);
-/// the result is truncated to `k`. Composes [`sads_segment_winners`] and
-/// [`sads_merge`] — the sharded pipeline runs the same two phases on
-/// different workers.
+/// the result is truncated to `k`. Composes the same segment and merge
+/// cores the sharded pipeline runs on different workers
+/// ([`sads_segment_winners`] / [`sads_merge`]).
 pub fn sads_topk(
     row: &[f32],
     k: usize,
     p: &SadsParams,
     c: &mut OpCounter,
 ) -> (Vec<usize>, SadsStats) {
+    let mut scratch = TopkScratch::default();
+    let mut out = Vec::with_capacity(k.min(row.len()));
+    let stats = sads_topk_into(row, k, p, c, &mut scratch, &mut out);
+    (out, stats)
+}
+
+/// [`sads_topk`] writing into a caller-provided buffer using reusable
+/// [`TopkScratch`] (per-segment winners land in the scratch arena, not
+/// per-segment allocations) — no allocation once the buffers have the
+/// capacity. Selection, order and comparison accounting are identical to
+/// the allocating entry point, which wraps this one.
+pub fn sads_topk_into(
+    row: &[f32],
+    k: usize,
+    p: &SadsParams,
+    c: &mut OpCounter,
+    scratch: &mut TopkScratch,
+    out: &mut Vec<usize>,
+) -> SadsStats {
+    out.clear();
     let s = row.len();
     let k = k.min(s);
     if k == 0 || s == 0 {
-        return (Vec::new(), SadsStats::default());
+        return SadsStats::default();
     }
     let n = p.segments.max(1).min(s);
     let (nseg, seg_len) = sads_geometry(s, p);
     let per_seg = k.div_ceil(n);
 
-    let mut seg_lists: Vec<SegmentWinners> = Vec::with_capacity(nseg);
+    // Split borrows: the segment loop fills `winners`/`seg_off` while the
+    // merge reads them with `cursors` advancing — all disjoint fields.
+    let TopkScratch { taken, feasible, winners, seg_off, cursors } = scratch;
+    winners.clear();
+    seg_off.clear();
+    let mut survivors_total = 0usize;
+    let mut cmp_count = 0u64;
     for seg in 0..nseg {
         let lo = seg * seg_len;
         let hi = (lo + seg_len).min(s);
-        seg_lists.push(sads_segment_winners(&row[lo..hi], lo, seg, per_seg, p.radius, c));
+        seg_off.push(winners.len());
+        let (survivors, cmp) =
+            segment_pass(&row[lo..hi], lo, per_seg, p.radius, feasible, taken, |v, j| {
+                winners.push((v, j))
+            });
+        survivors_total += survivors;
+        cmp_count += cmp;
     }
+    seg_off.push(winners.len());
+    c.tally(OpKind::Cmp, cmp_count);
 
-    let survivors_total: usize = seg_lists.iter().map(|l| l.survivors).sum();
-    let mut cmp_count: u64 = seg_lists.iter().map(|l| l.comparisons).sum();
-    let (merged, merge_cmp) = sads_merge(&seg_lists, k, c);
+    let merge_cmp = merge_pass(
+        nseg,
+        |li, cur| {
+            let (lo, hi) = (seg_off[li], seg_off[li + 1]);
+            if lo + cur < hi {
+                Some(winners[lo + cur])
+            } else {
+                None
+            }
+        },
+        k,
+        cursors,
+        |idx| out.push(idx),
+    );
+    c.tally(OpKind::Cmp, merge_cmp);
     cmp_count += merge_cmp;
 
-    let stats = SadsStats { rho: survivors_total as f64 / s as f64, comparisons: cmp_count };
-    (merged, stats)
+    SadsStats { rho: survivors_total as f64 / s as f64, comparisons: cmp_count }
 }
 
 /// The merge pass of the *exact* distributed top-k: select the global
@@ -244,31 +453,29 @@ pub fn sads_topk(
 /// concatenated row: any global winner is necessarily within its own
 /// shard's local top-`k`. Returns indices in descending score order.
 pub fn merge_topk_candidates(cands: &[(f32, usize)], k: usize, c: &mut OpCounter) -> Vec<usize> {
-    debug_assert!(cands.windows(2).all(|w| w[0].1 < w[1].1), "candidates must ascend by index");
-    let k = k.min(cands.len());
-    let mut cmp_count = 0u64;
-    let mut taken = vec![false; cands.len()];
-    let mut out = Vec::with_capacity(k);
-    for _ in 0..k {
-        let mut best = usize::MAX;
-        let mut best_v = f32::NEG_INFINITY;
-        for (ci, &(v, _)) in cands.iter().enumerate() {
-            if !taken[ci] {
-                cmp_count += 1;
-                if v > best_v {
-                    best_v = v;
-                    best = ci;
-                }
-            }
-        }
-        if best == usize::MAX {
-            break; // every remaining candidate is -inf
-        }
-        taken[best] = true;
-        out.push(cands[best].1);
-    }
-    c.tally(OpKind::Cmp, cmp_count);
+    let mut scratch = TopkScratch::default();
+    let mut out = Vec::with_capacity(k.min(cands.len()));
+    merge_topk_candidates_into(cands, k, c, &mut scratch, &mut out);
     out
+}
+
+/// [`merge_topk_candidates`] writing into a caller-provided buffer using
+/// reusable scratch — same extraction core, identical output and
+/// comparison counts.
+pub fn merge_topk_candidates_into(
+    cands: &[(f32, usize)],
+    k: usize,
+    c: &mut OpCounter,
+    scratch: &mut TopkScratch,
+    out: &mut Vec<usize>,
+) {
+    debug_assert!(cands.windows(2).all(|w| w[0].1 < w[1].1), "candidates must ascend by index");
+    out.clear();
+    let cmp =
+        extract_scan(cands.len(), k.min(cands.len()), |ci| cands[ci].0, &mut scratch.taken, |ci| {
+            out.push(cands[ci].1)
+        });
+    c.tally(OpKind::Cmp, cmp);
 }
 
 #[cfg(test)]
@@ -400,6 +607,102 @@ mod tests {
         let row = rand_row(16, 6);
         let (all, _) = sads_topk(&row, 16, &SadsParams { segments: 4, radius: 1e9 }, &mut c);
         assert_eq!(all.len(), 16);
+    }
+
+    #[test]
+    fn into_variants_reuse_dirty_buffers_bit_identically() {
+        // The arena entry points must equal the allocating ones —
+        // selection, order, stats AND comparison accounting — when fed
+        // dirty scratch left over from a *different* row, including ties
+        // and -inf rows. This is the workspace-reuse contract.
+        let mut scratch = TopkScratch::default();
+        let mut out = Vec::new();
+        let mut cursors = Vec::new();
+        for (s, k, seed) in [(256usize, 32usize, 71u64), (130, 20, 72), (7, 7, 73)] {
+            let mut row = rand_row(s, seed);
+            row[s / 2] = row[s / 3]; // plant a tie
+            if seed == 73 {
+                row.iter_mut().for_each(|x| *x = f32::NEG_INFINITY);
+            }
+            for kk in [k, 0, s + 5] {
+                // SADS.
+                let p = SadsParams::default();
+                let mut cw = OpCounter::new();
+                let (want, want_stats) = sads_topk(&row, kk, &p, &mut cw);
+                let mut cg = OpCounter::new();
+                let got_stats = sads_topk_into(&row, kk, &p, &mut cg, &mut scratch, &mut out);
+                assert_eq!(out, want, "sads s={s} k={kk}");
+                assert_eq!(cg.cmp, cw.cmp, "sads cmp s={s} k={kk}");
+                assert_eq!(got_stats.rho, want_stats.rho);
+                assert_eq!(got_stats.comparisons, want_stats.comparisons);
+                // Vanilla.
+                let mut cw = OpCounter::new();
+                let want = vanilla_topk(&row, kk, &mut cw);
+                let mut cg = OpCounter::new();
+                vanilla_topk_into(&row, kk, &mut cg, &mut scratch, &mut out);
+                assert_eq!(out, want, "vanilla s={s} k={kk}");
+                assert_eq!(cg.cmp, cw.cmp, "vanilla cmp s={s} k={kk}");
+                // Candidate merge (ascending-index candidate list).
+                let cands: Vec<(f32, usize)> =
+                    row.iter().copied().zip(0..).map(|(v, j)| (v, j)).collect();
+                let mut cw = OpCounter::new();
+                let want = merge_topk_candidates(&cands, kk, &mut cw);
+                let mut cg = OpCounter::new();
+                merge_topk_candidates_into(&cands, kk, &mut cg, &mut scratch, &mut out);
+                assert_eq!(out, want, "cand merge s={s} k={kk}");
+                assert_eq!(cg.cmp, cw.cmp);
+                // Segment-list merge.
+                let n = p.segments.max(1).min(s);
+                let (nseg, seg_len) = sads_geometry(s, &p);
+                let per_seg = kk.min(s).div_ceil(n.max(1)).max(1);
+                let mut cd = OpCounter::new();
+                let lists: Vec<SegmentWinners> = (0..nseg)
+                    .map(|seg| {
+                        let lo = seg * seg_len;
+                        let hi = (lo + seg_len).min(s);
+                        sads_segment_winners(&row[lo..hi], lo, seg, per_seg, p.radius, &mut cd)
+                    })
+                    .collect();
+                let mut cw = OpCounter::new();
+                let (want, _) = sads_merge(&lists, kk.min(s), &mut cw);
+                let mut cg = OpCounter::new();
+                sads_merge_into(&lists, kk.min(s), &mut cg, &mut cursors, &mut out);
+                assert_eq!(out, want, "seg merge s={s} k={kk}");
+                assert_eq!(cg.cmp, cw.cmp);
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reserve_makes_selection_capacity_stable() {
+        let mut scratch = TopkScratch::default();
+        scratch.reserve(512);
+        assert!(scratch.capacity_bytes() > 0);
+        let row = rand_row(512, 81);
+        let mut out = Vec::with_capacity(512);
+        let mut c = OpCounter::new();
+        sads_topk_into(&row, 128, &SadsParams::default(), &mut c, &mut scratch, &mut out);
+        let caps = (
+            scratch.taken.capacity(),
+            scratch.feasible.capacity(),
+            scratch.winners.capacity(),
+            scratch.seg_off.capacity(),
+            scratch.cursors.capacity(),
+        );
+        // A second pass over the same shape must not grow anything.
+        sads_topk_into(&row, 128, &SadsParams::default(), &mut c, &mut scratch, &mut out);
+        vanilla_topk_into(&row, 128, &mut c, &mut scratch, &mut out);
+        assert_eq!(
+            caps,
+            (
+                scratch.taken.capacity(),
+                scratch.feasible.capacity(),
+                scratch.winners.capacity(),
+                scratch.seg_off.capacity(),
+                scratch.cursors.capacity(),
+            ),
+            "steady-state selection must not grow scratch"
+        );
     }
 
     #[test]

@@ -61,6 +61,29 @@ impl Mat {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Reshape in place to `rows × cols`, zero-filled. Reuses the
+    /// existing heap buffer whenever its capacity suffices — the
+    /// workspace substrate of the allocation-free tile engine
+    /// ([`crate::pipeline::engine`]): a staged Q tile, score tile or
+    /// gathered-KV buffer is `reset` per tile instead of reallocated.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Copy `rows` rows of `src` starting at `src_lo` into this matrix
+    /// (which is `reset` to `rows × src.cols` first). The staging step of
+    /// a query tile: same values [`Mat::from_fn`] over `src.at(lo + i,
+    /// j)` would produce, without the per-tile allocation.
+    pub fn stage_rows(&mut self, src: &Mat, src_lo: usize, rows: usize) {
+        self.reset(rows, src.cols);
+        for i in 0..rows {
+            self.row_mut(i).copy_from_slice(src.row(src_lo + i));
+        }
+    }
+
     pub fn transpose(&self) -> Mat {
         Mat::from_fn(self.cols, self.rows, |i, j| self.at(j, i))
     }
@@ -76,10 +99,21 @@ impl Mat {
     /// for bit — the sharded pipeline's oracle-score path relies on
     /// this to score one worker's key range.
     pub fn matmul_cols(&self, other: &Mat, col_lo: usize, col_hi: usize) -> Mat {
+        let mut out = Mat::zeros(self.rows, col_hi.saturating_sub(col_lo));
+        self.matmul_cols_into(other, col_lo, col_hi, &mut out);
+        out
+    }
+
+    /// [`Mat::matmul_cols`] writing into a caller-provided buffer (which
+    /// is [`Mat::reset`] to the product shape — no allocation once `out`
+    /// has the capacity). This is the only matmul kernel in the crate;
+    /// the allocating entry points wrap it, so "into" and "fresh" results
+    /// are bit-identical by construction.
+    pub fn matmul_cols_into(&self, other: &Mat, col_lo: usize, col_hi: usize, out: &mut Mat) {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         assert!(col_lo <= col_hi && col_hi <= other.cols, "column block out of range");
         let (m, k, n) = (self.rows, self.cols, col_hi - col_lo);
-        let mut out = Mat::zeros(m, n);
+        out.reset(m, n);
         // ikj loop order: streams `other` rows, vectorizes the inner j loop.
         for i in 0..m {
             let orow = &mut out.data[i * n..(i + 1) * n];
@@ -94,7 +128,6 @@ impl Mat {
                 }
             }
         }
-        out
     }
 
     /// Scale every element in place.
@@ -214,6 +247,36 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn reset_reuses_capacity_and_zero_fills() {
+        let mut m = Mat::randn(8, 8, 1.0, &mut Rng::new(13));
+        let cap = m.data.capacity();
+        m.reset(4, 6);
+        assert_eq!((m.rows, m.cols), (4, 6));
+        assert!(m.data.iter().all(|&x| x == 0.0), "reset must zero-fill");
+        assert_eq!(m.data.capacity(), cap, "smaller reset must not reallocate");
+    }
+
+    #[test]
+    fn stage_rows_matches_from_fn_slice() {
+        let mut rng = Rng::new(17);
+        let src = Mat::randn(9, 5, 1.0, &mut rng);
+        let want = Mat::from_fn(3, 5, |i, j| src.at(4 + i, j));
+        let mut staged = Mat::zeros(0, 0);
+        staged.stage_rows(&src, 4, 3);
+        assert_eq!(staged, want);
+    }
+
+    #[test]
+    fn matmul_cols_into_equals_matmul_cols_on_dirty_buffer() {
+        let mut rng = Rng::new(19);
+        let a = Mat::randn(4, 12, 1.0, &mut rng);
+        let b = Mat::randn(12, 10, 1.0, &mut rng);
+        let mut out = Mat::randn(7, 7, 1.0, &mut rng); // dirty, wrong shape
+        a.matmul_cols_into(&b, 2, 9, &mut out);
+        assert_eq!(out, a.matmul_cols(&b, 2, 9));
     }
 
     #[test]

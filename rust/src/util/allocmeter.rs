@@ -1,0 +1,104 @@
+//! Heap-allocation metering for the zero-allocation hot-path contract.
+//!
+//! The pipeline engine ([`crate::pipeline::engine`]) claims its
+//! steady-state tile core performs **zero heap allocations** once a
+//! [`crate::pipeline::engine::TileWorkspace`] has warmed to its shape
+//! class. That claim is only checkable if something counts allocations —
+//! this module is that something: a [`CountingAllocator`] that wraps the
+//! system allocator and bumps a **thread-local** counter on every
+//! `alloc`/`realloc`/`alloc_zeroed`.
+//!
+//! The counter is thread-local on purpose: the engine samples it around
+//! each tile's stage core, and worker threads must not see each other's
+//! allocations in their windows (a global counter would make
+//! multi-threaded runs overcount).
+//!
+//! The allocator is installed by **binaries**, not by this library — the
+//! `star` binary, the plain-main bench drivers and the allocation-guard
+//! integration test each declare
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: star::util::allocmeter::CountingAllocator =
+//!     star::util::allocmeter::CountingAllocator;
+//! ```
+//!
+//! When no counting allocator is installed the thread counter stays at
+//! zero, every sampled window reads as zero, and [`installed`] reports
+//! `false` so reports can say whether their `hot_path_allocs` field is a
+//! real measurement.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+#[inline]
+fn bump() {
+    INSTALLED.store(true, Ordering::Relaxed);
+    // `try_with`: allocations can happen while this thread's TLS is being
+    // torn down; missing those is fine (nothing measures windows there).
+    let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+/// A [`GlobalAlloc`] that counts allocations per thread and delegates all
+/// actual work to [`System`]. Overhead is one `Cell` bump per allocation.
+pub struct CountingAllocator;
+
+// SAFETY: every method delegates verbatim to `System`; the only addition
+// is the side-effect-free thread-local counter bump.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // A realloc is a fresh reservation from the hot path's point of
+        // view: growing a Vec past its capacity must show up.
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Heap allocations made by **this thread** since it started (0 when no
+/// [`CountingAllocator`] is installed). Sample before/after a region and
+/// subtract to meter it.
+pub fn thread_allocs() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}
+
+/// Whether a [`CountingAllocator`] has observed at least one allocation
+/// in this process — i.e. whether allocation counts are real
+/// measurements rather than vacuous zeros.
+pub fn installed() -> bool {
+    INSTALLED.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    // The unit-test binary does not install the counting allocator, so
+    // the only thing testable here is the uninstalled behavior; the real
+    // counting assertions live in `rust/tests/prop_workspace_reuse.rs`,
+    // which installs it as its global allocator.
+    #[test]
+    fn uninstalled_counter_reads_zero() {
+        if !super::installed() {
+            assert_eq!(super::thread_allocs(), 0);
+        }
+    }
+}

@@ -1,6 +1,8 @@
 //! Small shared utilities: deterministic RNG, a JSON subset codec, summary
-//! statistics, and lightweight logging/timing helpers.
+//! statistics, lightweight logging/timing helpers, and the thread-local
+//! allocation meter behind the zero-allocation hot-path checks.
 
+pub mod allocmeter;
 pub mod json;
 pub mod logging;
 pub mod rng;

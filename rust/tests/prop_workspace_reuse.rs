@@ -1,0 +1,210 @@
+//! Property: pooled, dirty workspaces never change the math — and the
+//! warm hot path allocates nothing.
+//!
+//! The tile engine (`star::pipeline::engine`) runs every stage inside
+//! reusable per-worker buffers ([`star::pipeline::TileWorkspace`],
+//! pooled by [`star::pipeline::WorkspacePool`]). Two contracts are under
+//! test here:
+//!
+//! 1. **Dirty-workspace parity.** A sequence of heterogeneous requests
+//!    (varying T/S/tile sizes, prefill interleaved with decode and
+//!    sharded runs) through ONE pool is bit-identical — outputs,
+//!    selections, stalls, per-stage ops — to fresh-allocation runs.
+//!    Leftover state in a reused workspace must be invisible.
+//! 2. **Zero-allocation steady state.** This test binary installs the
+//!    counting allocator, so `hot_path_allocs` is a real measurement:
+//!    once a workspace is warm for a shape class, the metered stage
+//!    cores must not touch the heap.
+
+#[global_allocator]
+static ALLOC: star::util::allocmeter::CountingAllocator =
+    star::util::allocmeter::CountingAllocator;
+
+use star::attention::Selection;
+use star::kvcache::{SessionConfig, SessionStore};
+use star::pipeline::{
+    PipelineConfig, PipelineInputs, ShardedPipeline, SparseAttentionPipeline, WorkspacePool,
+};
+use star::tensor::Mat;
+use star::util::{allocmeter, Rng};
+
+fn mats(t: usize, s: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+    let mut rng = Rng::new(seed);
+    (
+        Mat::randn(t, d, 1.0, &mut rng),
+        Mat::randn(s, d, 1.0, &mut rng),
+        Mat::randn(s, d, 1.0, &mut rng),
+    )
+}
+
+fn sub(m: &Mat, lo: usize, hi: usize) -> Mat {
+    Mat::from_fn(hi - lo, m.cols, |i, j| m.at(lo + i, j))
+}
+
+#[test]
+fn counting_allocator_is_live_in_this_binary() {
+    let a0 = allocmeter::thread_allocs();
+    let v: Vec<u64> = Vec::with_capacity(64);
+    assert!(allocmeter::thread_allocs() > a0, "allocation meter must count");
+    assert!(allocmeter::installed());
+    drop(v);
+}
+
+#[test]
+fn heterogeneous_requests_through_one_pool_are_bit_identical() {
+    // One pool serves everything, in an order chosen so every request
+    // inherits a workspace left dirty by a *different* shape: big
+    // prefill → small prefill → sharded → decode session → prefill
+    // again. Each pooled result must equal the fresh-allocation result.
+    let pool = WorkspacePool::new();
+
+    // Prefill shapes: (t, s, d, tile, keep).
+    let shapes = [
+        (24usize, 96usize, 16usize, 8usize, 0.25f64),
+        (7, 130, 16, 64, 0.4),
+        (16, 64, 16, 5, 0.25),
+    ];
+    for (round, &(t, s, d, tile, keep)) in shapes.iter().enumerate() {
+        let (q, k, v) = mats(t, s, d, 100 + round as u64);
+        let inputs = PipelineInputs::qkv(&q, &k, &v);
+        let cfg = PipelineConfig::star().with_keep(keep).with_tile(tile).with_threads(1);
+        let fresh = SparseAttentionPipeline::new(cfg).run(&inputs);
+        let pooled = SparseAttentionPipeline::new(cfg).run_pooled(&inputs, &pool);
+        let tag = format!("prefill round {round}");
+        assert_eq!(pooled.selection, fresh.selection, "{tag}: selection drift");
+        assert_eq!(pooled.out.max_abs_diff(&fresh.out), 0.0, "{tag}: output drift");
+        assert_eq!(pooled.stalls, fresh.stalls, "{tag}: stall drift");
+        assert_eq!(pooled.ops.predict, fresh.ops.predict, "{tag}: predict ops drift");
+        assert_eq!(pooled.ops.topk, fresh.ops.topk, "{tag}: topk ops drift");
+        assert_eq!(pooled.ops.formal, fresh.ops.formal, "{tag}: formal ops drift");
+
+        // Sharded run on the same (now dirty) pool.
+        let sharded = ShardedPipeline::new(cfg, 3).run_pooled(&inputs, &pool);
+        assert_eq!(sharded.selection, fresh.selection, "{tag}: sharded selection drift");
+        assert_eq!(sharded.out.max_abs_diff(&fresh.out), 0.0, "{tag}: sharded output drift");
+        assert_eq!(sharded.stalls, fresh.stalls, "{tag}: sharded stall drift");
+    }
+
+    // A decode session (interleaved chunk sizes) through the same pool
+    // vs a fresh-pool session.
+    let (n, d) = (40usize, 16usize);
+    let (q, k, v) = mats(n, n, d, 777);
+    let cfg = PipelineConfig::star().with_keep(0.3).with_tile(8).with_threads(1);
+    let pipe = SparseAttentionPipeline::new(cfg);
+    let run_session = |pool: &WorkspacePool| -> (Mat, Selection) {
+        let mut store = SessionStore::new(SessionConfig::for_pipeline(&cfg, d, 0));
+        let mut out = Mat::zeros(n, d);
+        let mut sel_rows = Vec::new();
+        let mut at = 0usize;
+        for &c in &[5usize, 1, 9, 1, 1, 16, 7] {
+            let r = pipe
+                .decode_step_pooled(
+                    &mut store,
+                    1,
+                    &sub(&q, at, at + c),
+                    &sub(&k, at, at + c),
+                    &sub(&v, at, at + c),
+                    pool,
+                )
+                .expect("decode step");
+            for i in 0..c {
+                out.row_mut(at + i).copy_from_slice(r.out.row(i));
+            }
+            sel_rows.extend(r.selection.rows);
+            at += c;
+        }
+        assert_eq!(at, n);
+        (out, Selection { rows: sel_rows })
+    };
+    let (fresh_out, fresh_sel) = run_session(&WorkspacePool::new());
+    let (pooled_out, pooled_sel) = run_session(&pool);
+    assert_eq!(pooled_sel, fresh_sel, "decode selection drift through dirty pool");
+    assert_eq!(pooled_out.max_abs_diff(&fresh_out), 0.0, "decode output drift through dirty pool");
+
+    // And one more prefill after the decode traffic.
+    let (q, k, v) = mats(12, 200, 16, 888);
+    let inputs = PipelineInputs::qkv(&q, &k, &v);
+    let cfg = PipelineConfig::star().with_keep(0.2).with_threads(1);
+    let fresh = SparseAttentionPipeline::new(cfg).run(&inputs);
+    let pooled = SparseAttentionPipeline::new(cfg).run_pooled(&inputs, &pool);
+    assert_eq!(pooled.selection, fresh.selection);
+    assert_eq!(pooled.out.max_abs_diff(&fresh.out), 0.0);
+}
+
+#[test]
+fn dirty_pool_parity_across_configurations() {
+    // The dense oracle, the DS baseline and a SLZS/ascend mix all share
+    // one pool (same shape class ⇒ same reused workspace), immediately
+    // after each other.
+    let (t, s, d) = (18usize, 96usize, 16usize);
+    let (q, k, v) = mats(t, s, d, 4242);
+    let inputs = PipelineInputs::qkv(&q, &k, &v);
+    let pool = WorkspacePool::new();
+    let configs = [
+        PipelineConfig::star().with_keep(0.3),
+        PipelineConfig::ds_baseline().with_keep(0.3),
+        PipelineConfig::dense_oracle(),
+        PipelineConfig {
+            predict: star::sim::pipeline::PredictKind::Slzs,
+            formal: star::sim::pipeline::FormalKind::SufaAscend,
+            ..PipelineConfig::star().with_keep(0.4)
+        },
+    ];
+    for (i, cfg) in configs.iter().enumerate() {
+        let cfg = cfg.with_threads(1);
+        let fresh = SparseAttentionPipeline::new(cfg).run(&inputs);
+        let pooled = SparseAttentionPipeline::new(cfg).run_pooled(&inputs, &pool);
+        assert_eq!(pooled.selection, fresh.selection, "config {i}: selection drift");
+        assert_eq!(pooled.out.max_abs_diff(&fresh.out), 0.0, "config {i}: output drift");
+        assert_eq!(pooled.stalls, fresh.stalls, "config {i}: stall drift");
+    }
+}
+
+#[test]
+fn warm_workspaces_allocate_nothing_on_the_hot_path() {
+    // Prefill: the second identical-shape run must meter zero
+    // allocations in its stage cores.
+    let (t, s, d) = (24usize, 128usize, 16usize);
+    let (q, k, v) = mats(t, s, d, 31337);
+    let inputs = PipelineInputs::qkv(&q, &k, &v);
+    let pool = WorkspacePool::new();
+    let pipe = SparseAttentionPipeline::new(
+        PipelineConfig::star().with_keep(0.25).with_tile(8).with_threads(1),
+    );
+    let _warmup = pipe.run_pooled(&inputs, &pool);
+    let warm = pipe.run_pooled(&inputs, &pool);
+    assert_eq!(warm.hot_path_allocs, 0, "warm prefill hot loop allocated");
+    assert!(warm.workspace_bytes > 0);
+
+    // Decode: every step after the pool-warming prefill must meter
+    // zero, even as the causal context grows (capacity maintenance is
+    // outside the metered core by design).
+    let (n, dd) = (32usize, 16usize);
+    let (q, k, v) = mats(n, n, dd, 555);
+    let cfg = PipelineConfig::star().with_keep(0.3).with_tile(8).with_threads(1);
+    let pipe = SparseAttentionPipeline::new(cfg);
+    let mut store = SessionStore::new(SessionConfig::for_pipeline(&cfg, dd, 0));
+    pipe.decode_step_pooled(&mut store, 1, &sub(&q, 0, 8), &sub(&k, 0, 8), &sub(&v, 0, 8), &pool)
+        .expect("warming prefill chunk");
+    for pos in 8..n {
+        let r = pipe
+            .decode_step_pooled(
+                &mut store,
+                1,
+                &sub(&q, pos, pos + 1),
+                &sub(&k, pos, pos + 1),
+                &sub(&v, pos, pos + 1),
+                &pool,
+            )
+            .expect("decode step");
+        assert_eq!(r.hot_path_allocs, 0, "decode step at pos {pos} allocated in its stage core");
+    }
+
+    // Sharded: the second identical run on warm per-worker workspaces
+    // must meter zero in the home gather/formal cores.
+    let sharded = ShardedPipeline::new(cfg, 2);
+    let inputs = PipelineInputs::qkv(&q, &k, &v);
+    let _warmup = sharded.run_pooled(&inputs, &pool);
+    let warm = sharded.run_pooled(&inputs, &pool);
+    assert_eq!(warm.hot_path_allocs, 0, "warm sharded home phase allocated");
+}
