@@ -7,9 +7,10 @@
 
 use super::{f, header, row};
 use crate::kvcache::{CacheStats, SessionConfig, SessionStore};
+use crate::obs::{HistSummary, Histogram};
 use crate::pipeline::{PipelineConfig, SparseAttentionPipeline, StageOps, WorkspacePool};
 use crate::tensor::Mat;
-use crate::util::{allocmeter, Rng, Summary};
+use crate::util::{allocmeter, Rng};
 
 /// Everything `BENCH_decode.json` reports.
 #[derive(Clone, Debug)]
@@ -39,8 +40,13 @@ pub struct DecodeBenchResult {
     pub cache: CacheStats,
     /// Mean cached KV rows read per decode step.
     pub union_rows_mean: f64,
-    /// Per-step latency distribution (kept for percentile queries).
-    pub step_wall: Summary,
+    /// Per-step latency distribution (log-bucketed; percentile queries
+    /// come from [`Histogram::summary`]).
+    pub step_wall: Histogram,
+    /// Per-stage per-step latency summaries, seconds, indexed by
+    /// [`crate::coordinator::metrics::STAGE_NAMES`] order
+    /// (predict/topk/kv_gen/formal).
+    pub stage_latency: [HistSummary; 4],
     /// Heap allocations metered inside the decode rows' stage cores,
     /// summed over the timed steps. The pool is warmed by the prefill,
     /// so steady state is **zero** — the regression guard for the
@@ -91,7 +97,8 @@ pub fn decode_throughput() -> DecodeBenchResult {
 
     // Decode phase: single-token steps.
     let mut ops = StageOps::default();
-    let mut step_wall = Summary::new();
+    let mut step_wall = Histogram::new();
+    let mut stage_hist: [Histogram; 4] = Default::default();
     let mut union_rows = 0usize;
     let mut hot_path_allocs = 0u64;
     let mut workspace_bytes = 0usize;
@@ -107,7 +114,11 @@ pub fn decode_throughput() -> DecodeBenchResult {
                 &pool,
             )
             .expect("decode step");
-        step_wall.add(r.wall_s);
+        step_wall.record_secs(r.wall_s);
+        stage_hist[0].record_secs(r.timing.predict_s);
+        stage_hist[1].record_secs(r.timing.topk_s);
+        stage_hist[2].record_secs(r.timing.kv_gen_s);
+        stage_hist[3].record_secs(r.timing.formal_s);
         ops.merge(&r.ops);
         union_rows += r.union_rows;
         hot_path_allocs += r.hot_path_allocs;
@@ -119,6 +130,7 @@ pub fn decode_throughput() -> DecodeBenchResult {
     let mut re_store = SessionStore::new(SessionConfig::for_pipeline(&cfg, d, 0));
     let re = pipe.prefill(&mut re_store, 1, &q, &k, &v).expect("re-prefill baseline");
 
+    let wall_summary = step_wall.summary(1e-9);
     let result = DecodeBenchResult {
         prefill_tokens,
         decode_tokens,
@@ -126,10 +138,10 @@ pub fn decode_throughput() -> DecodeBenchResult {
         keep_ratio: cfg.keep_ratio,
         page_size: store.config().page_size,
         tokens_per_s: decode_tokens as f64 / wall.max(1e-12),
-        p50_ms: step_wall.percentile(50.0) * 1e3,
-        p95_ms: step_wall.percentile(95.0) * 1e3,
-        p99_ms: step_wall.percentile(99.0) * 1e3,
-        mean_ms: step_wall.mean() * 1e3,
+        p50_ms: wall_summary.p50 * 1e3,
+        p95_ms: wall_summary.p95 * 1e3,
+        p99_ms: wall_summary.p99 * 1e3,
+        mean_ms: wall_summary.mean * 1e3,
         equiv_adds_per_token: ops.total().equiv() / decode_tokens as f64,
         reprefill_equiv_adds: re.ops.total().equiv(),
         ops,
@@ -137,6 +149,7 @@ pub fn decode_throughput() -> DecodeBenchResult {
         cache: store.stats(),
         union_rows_mean: union_rows as f64 / decode_tokens as f64,
         step_wall,
+        stage_latency: std::array::from_fn(|i| stage_hist[i].summary(1e-9)),
         hot_path_allocs,
         alloc_counter_on: allocmeter::installed(),
         workspace_bytes,
@@ -207,6 +220,11 @@ mod tests {
         let r = decode_throughput();
         assert!(r.tokens_per_s > 0.0);
         assert!(r.p95_ms >= r.p50_ms);
+        assert_eq!(r.step_wall.count(), r.decode_tokens as u64);
+        for (i, s) in r.stage_latency.iter().enumerate() {
+            assert_eq!(s.count, r.decode_tokens as u64, "stage {i} sampled every step");
+            assert!(s.p99 >= s.p50, "stage {i} percentiles must be monotone");
+        }
         // A decode step must cost far less than re-prefilling the whole
         // conversation — the point of caching across time.
         assert!(
@@ -243,6 +261,12 @@ mod tests {
         assert!(j.get("tokens_per_s").unwrap().as_f64().unwrap() > 0.0);
         assert!(j.get("stage_ops").unwrap().get("predict").is_some());
         assert!(j.get("step_latency_ms").unwrap().get("p95").is_some());
+        // Per-stage latency percentiles (histogram summaries, seconds).
+        let sl = j.get("stage_latency").unwrap();
+        for stage in ["predict", "topk", "kv_gen", "formal"] {
+            let s = sl.get(stage).unwrap_or_else(|| panic!("stage_latency.{stage} missing"));
+            assert!(s.get("p95").is_some() && s.get("p99").is_some() && s.get("p50").is_some());
+        }
         assert!(j.get("cache").unwrap().get("page_hits").is_some());
         // The zero-allocation regression guard the CI smoke greps for.
         assert_eq!(j.get("hot_path_allocs").unwrap().as_f64(), Some(0.0));

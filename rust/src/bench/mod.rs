@@ -41,7 +41,7 @@ pub mod trajectory;
 
 use crate::util::json::Json;
 use crate::Result;
-use trajectory::{stage_ops_json, table};
+use trajectory::{hist_json, stage_ops_json, table};
 
 /// Print a section header.
 pub(crate) fn header(title: &str) {
@@ -287,6 +287,17 @@ pub fn run(name: &str) -> Result<()> {
                         ("p95", n(r.p95_ms)),
                         ("p99", n(r.p99_ms)),
                         ("mean", n(r.mean_ms)),
+                    ]),
+                ),
+                // Per-stage per-step latency distributions, seconds
+                // (log-bucketed histogram summaries; see `crate::obs`).
+                (
+                    "stage_latency",
+                    Json::obj(vec![
+                        ("predict", hist_json(&r.stage_latency[0])),
+                        ("topk", hist_json(&r.stage_latency[1])),
+                        ("kv_gen", hist_json(&r.stage_latency[2])),
+                        ("formal", hist_json(&r.stage_latency[3])),
                     ]),
                 ),
                 ("equiv_adds_per_token", n(r.equiv_adds_per_token)),

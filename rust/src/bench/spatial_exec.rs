@@ -12,8 +12,9 @@
 //! can never silently report speedup from wrong numerics.
 
 use super::{header, row};
-use crate::bench::trajectory::stage_ops_json;
+use crate::bench::trajectory::{hist_json, stage_ops_json};
 use crate::config::SpatialConfig;
+use crate::obs::{HistSummary, Histogram};
 use crate::pipeline::{
     PipelineConfig, PipelineInputs, ShardedPipeline, SparseAttentionPipeline, WorkspacePool,
 };
@@ -67,6 +68,11 @@ pub struct SpatialExecReport {
     /// Peak per-worker tile-workspace capacity seen, bytes (compare
     /// against `crate::sim::sram::Sram::STAR_BUDGET_BYTES`).
     pub workspace_bytes: usize,
+    /// Per-shard per-run stage busy-time distributions (seconds) across
+    /// every measured sharded run, predict/topk/kv_gen/formal order —
+    /// one sample per worker per run, so imbalance across the ring
+    /// shows up as percentile spread.
+    pub stage_latency: [HistSummary; 4],
 }
 
 /// Wall-clock samples per configuration (best-of, to shed scheduler
@@ -124,12 +130,19 @@ pub fn spatial_exec_with(
     let pool = WorkspacePool::new();
     let mut hot_path_allocs = 0u64;
     let mut workspace_bytes = 0usize;
+    let mut stage_hist: [Histogram; 4] = Default::default();
     for &w in shard_counts {
         let pipe = ShardedPipeline::new(cfg, w);
         let (r, wall_s) = best_wall(RUNS, || {
             let r = pipe.run_pooled(&inputs, &pool);
             hot_path_allocs += r.hot_path_allocs;
             workspace_bytes = workspace_bytes.max(r.workspace_bytes);
+            for s in &r.per_shard {
+                stage_hist[0].record_secs(s.timing.predict_s);
+                stage_hist[1].record_secs(s.timing.topk_s);
+                stage_hist[2].record_secs(s.timing.kv_gen_s);
+                stage_hist[3].record_secs(s.timing.formal_s);
+            }
             r
         });
         let ok = r.out.max_abs_diff(&single.out) == 0.0 && r.selection == single.selection;
@@ -189,6 +202,7 @@ pub fn spatial_exec_with(
         parity_ok,
         hot_path_allocs,
         workspace_bytes,
+        stage_latency: std::array::from_fn(|i| stage_hist[i].summary(1e-9)),
     }
 }
 
@@ -260,6 +274,16 @@ pub fn payload(r: &SpatialExecReport) -> Json {
             ),
         ),
         ("stage_ops", stage_ops_json(&r.ops)),
+        // Per-shard per-run stage busy-time distributions (seconds).
+        (
+            "stage_latency",
+            Json::obj(vec![
+                ("predict", hist_json(&r.stage_latency[0])),
+                ("topk", hist_json(&r.stage_latency[1])),
+                ("kv_gen", hist_json(&r.stage_latency[2])),
+                ("formal", hist_json(&r.stage_latency[3])),
+            ]),
+        ),
     ])
 }
 
@@ -284,7 +308,17 @@ mod tests {
             assert!(p.shards > 1 || p.ring_payload_bytes == 0);
         }
         assert!(r.workspace_bytes > 0, "sharded workers ran inside workspaces");
+        // 1+2+4 shards × RUNS runs = one stage-time sample per shard-run.
+        let samples = (1 + 2 + 4) * RUNS;
+        for (i, s) in r.stage_latency.iter().enumerate() {
+            assert_eq!(s.count, samples as u64, "stage {i} sampled per shard per run");
+            assert!(s.p99 >= s.p50, "stage {i} percentiles must be monotone");
+        }
         let j = payload(&r);
+        for stage in ["predict", "topk", "kv_gen", "formal"] {
+            let s = j.get("stage_latency").unwrap().get(stage);
+            assert!(s.unwrap().get("p95").is_some(), "stage_latency.{stage}.p95 missing");
+        }
         assert_eq!(j.get("bench").unwrap().as_str(), Some("spatial_exec"));
         assert_eq!(j.get("parity_ok").unwrap().as_bool(), Some(true));
         assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 3);

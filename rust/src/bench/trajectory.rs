@@ -9,6 +9,7 @@
 //! `BENCH_decode.json`.
 
 use crate::arith::OpCounter;
+use crate::obs::HistSummary;
 use crate::pipeline::StageOps;
 use crate::util::json::Json;
 use std::path::PathBuf;
@@ -69,6 +70,21 @@ pub fn ops_json(c: &OpCounter) -> Json {
     ])
 }
 
+/// A histogram summary (see [`crate::obs::Histogram::summary`]) as a
+/// JSON object — the uniform shape every latency distribution in the
+/// `BENCH_*.json` files uses.
+pub fn hist_json(h: &HistSummary) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(h.count as f64)),
+        ("min", Json::num(h.min)),
+        ("max", Json::num(h.max)),
+        ("mean", Json::num(h.mean)),
+        ("p50", Json::num(h.p50)),
+        ("p95", Json::num(h.p95)),
+        ("p99", Json::num(h.p99)),
+    ])
+}
+
 /// Per-stage operation counters as a JSON object.
 pub fn stage_ops_json(s: &StageOps) -> Json {
     Json::obj(vec![
@@ -97,6 +113,19 @@ mod tests {
         let back = Json::parse(&text).unwrap();
         assert_eq!(back.get("rows").unwrap().as_arr().unwrap().len(), 1);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn hist_json_carries_all_percentiles() {
+        let mut h = crate::obs::Histogram::new();
+        h.record_secs(0.010);
+        h.record_secs(0.020);
+        let j = hist_json(&h.summary(1e-9));
+        assert_eq!(j.get("count").unwrap().as_f64(), Some(2.0));
+        assert!((j.get("mean").unwrap().as_f64().unwrap() - 0.015).abs() < 1e-12);
+        for key in ["min", "max", "p50", "p95", "p99"] {
+            assert!(j.get(key).is_some(), "hist_json missing {key}");
+        }
     }
 
     #[test]

@@ -50,6 +50,17 @@ impl Batch {
     pub fn padding(&self, target: usize) -> usize {
         target.saturating_sub(self.rows())
     }
+
+    /// Datapath occupancy at `target` rows, in `[0, 1]` (>1 clamps: a
+    /// lone oversize request occupies the whole pass). This is the
+    /// batching-quality number behind the metrics' batch-rows histogram:
+    /// mean occupancy ≈ `batch_rows.mean / target`.
+    pub fn occupancy(&self, target: usize) -> f64 {
+        if target == 0 {
+            return 1.0;
+        }
+        (self.rows() as f64 / target as f64).min(1.0)
+    }
 }
 
 /// Per-variant dynamic batcher.
@@ -155,6 +166,9 @@ mod tests {
         let batch = b.poll(0.02).expect("timeout flush");
         assert_eq!(batch.rows(), 8);
         assert_eq!(batch.padding(128), 120);
+        assert!((batch.occupancy(128) - 8.0 / 128.0).abs() < 1e-12);
+        assert_eq!(batch.occupancy(4), 1.0, "oversize clamps");
+        assert_eq!(batch.occupancy(0), 1.0);
     }
 
     #[test]

@@ -1,7 +1,33 @@
-//! Serving metrics: latency distribution, throughput, batching quality.
+//! Serving metrics: latency distributions, throughput, batching quality.
+//!
+//! Every latency-shaped quantity is a fixed-storage log-bucketed
+//! [`Histogram`] (`crate::obs::hist`) rather than a point average or an
+//! unbounded sample vector: recording is O(1) and allocation-free under
+//! the metrics mutex, percentiles are order-independent, and the same
+//! snapshot drives the human-readable [`MetricsSnapshot::render`] footer
+//! and the Prometheus-style [`MetricsSnapshot::render_prometheus`]
+//! exposition.
 
-use crate::util::Summary;
+use crate::obs::{HistSummary, Histogram};
 use std::sync::Mutex;
+
+/// Which serving path produced a response — selects the per-class
+/// histogram: TTFT (time-to-first-token, the full prefill latency) for
+/// the single-core and sharded prefill paths, TPOT (time per output
+/// token) for decode steps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestClass {
+    /// Single-core batched prefill.
+    Prefill,
+    /// Autoregressive decode step against the paged KV-cache.
+    Decode,
+    /// Over-target prefill served on the sequence-sharded pipeline.
+    Sharded,
+}
+
+/// Pipeline stage names, in the order of the per-stage histogram arrays
+/// ([`MetricsSnapshot::stage_hist`]).
+pub const STAGE_NAMES: [&str; 4] = ["predict", "topk", "kv_gen", "formal"];
 
 /// Thread-safe metrics sink.
 #[derive(Debug, Default)]
@@ -11,9 +37,15 @@ pub struct Metrics {
 
 #[derive(Debug, Default)]
 struct Inner {
-    latency: Summary,
-    queue: Summary,
-    batch_rows: Summary,
+    latency: Histogram,
+    queue: Histogram,
+    batch_rows: Histogram,
+    // Per-class latency: TTFT for the two prefill paths, TPOT for decode.
+    ttft_prefill: Histogram,
+    ttft_sharded: Histogram,
+    tpot_decode: Histogram,
+    // Per-batch stage busy time, nanoseconds, indexed by STAGE_NAMES.
+    stage_ns: [Histogram; 4],
     requests: u64,
     rejected: u64,
     failed: u64,
@@ -45,7 +77,9 @@ struct Inner {
     shard_stage_s: Vec<crate::pipeline::StageTiming>,
 }
 
-/// A point-in-time copy for reporting.
+/// A point-in-time copy for reporting. Histogram fields are
+/// [`HistSummary`] snapshots in base units (seconds for latencies, rows
+/// for batch occupancy).
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
     /// Responses delivered (including error responses).
@@ -60,16 +94,20 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     /// Query rows across all dispatched batches.
     pub rows: u64,
-    /// Median end-to-end latency, seconds.
-    pub latency_p50_s: f64,
-    /// 95th-percentile end-to-end latency, seconds.
-    pub latency_p95_s: f64,
-    /// Mean end-to-end latency, seconds.
-    pub latency_mean_s: f64,
-    /// Mean queueing share of the latency, seconds.
-    pub queue_mean_s: f64,
-    /// Mean query rows per sealed batch (batching quality).
-    pub mean_batch_rows: f64,
+    /// End-to-end request latency, seconds.
+    pub latency: HistSummary,
+    /// Queueing share of the latency, seconds.
+    pub queue: HistSummary,
+    /// Query rows per sealed batch (batching quality).
+    pub batch_rows: HistSummary,
+    /// Time-to-first-token of single-core prefill responses, seconds.
+    pub ttft_prefill: HistSummary,
+    /// Time-to-first-token of sequence-sharded prefill responses, seconds.
+    pub ttft_sharded: HistSummary,
+    /// Time per output token of decode responses, seconds.
+    pub tpot_decode: HistSummary,
+    /// Per-batch stage busy time, seconds, indexed by [`STAGE_NAMES`].
+    pub stage_hist: [HistSummary; 4],
     /// Served query rows per second over the observation window.
     pub rows_per_s: f64,
     /// Aggregate predict-stage busy seconds (native backend only; all
@@ -122,11 +160,27 @@ impl Metrics {
         Metrics::default()
     }
 
-    /// Account one delivered response and its latency split.
-    pub fn record_response(&self, latency_s: f64, queue_s: f64, now: f64) {
+    /// Account one delivered response and its latency split. `tokens` is
+    /// the output size of the response (tokens appended for decode, query
+    /// rows for prefill); it normalizes the decode latency into TPOT.
+    pub fn record_response(
+        &self,
+        latency_s: f64,
+        queue_s: f64,
+        now: f64,
+        class: RequestClass,
+        tokens: u64,
+    ) {
         let mut m = self.inner.lock().unwrap();
-        m.latency.add(latency_s);
-        m.queue.add(queue_s);
+        m.latency.record_secs(latency_s);
+        m.queue.record_secs(queue_s);
+        match class {
+            RequestClass::Prefill => m.ttft_prefill.record_secs(latency_s),
+            RequestClass::Sharded => m.ttft_sharded.record_secs(latency_s),
+            RequestClass::Decode => {
+                m.tpot_decode.record_secs(latency_s / tokens.max(1) as f64)
+            }
+        }
         m.requests += 1;
         if m.first_s.is_none() {
             m.first_s = Some(now);
@@ -137,7 +191,7 @@ impl Metrics {
     /// Account one dispatched batch of `rows` query rows.
     pub fn record_batch(&self, rows: usize) {
         let mut m = self.inner.lock().unwrap();
-        m.batch_rows.add(rows as f64);
+        m.batch_rows.record(rows as u64);
         m.batches += 1;
         m.rows += rows as u64;
     }
@@ -159,6 +213,13 @@ impl Metrics {
         m.stage_topk_s += t.topk_s;
         m.stage_kv_gen_s += t.kv_gen_s;
         m.stage_formal_s += t.formal_s;
+        for (h, s) in m
+            .stage_ns
+            .iter_mut()
+            .zip([t.predict_s, t.topk_s, t.kv_gen_s, t.formal_s])
+        {
+            h.record_secs(s);
+        }
         m.stalls += stalls;
     }
 
@@ -205,11 +266,13 @@ impl Metrics {
             failed: m.failed,
             batches: m.batches,
             rows: m.rows,
-            latency_p50_s: m.latency.percentile(50.0),
-            latency_p95_s: m.latency.percentile(95.0),
-            latency_mean_s: m.latency.mean(),
-            queue_mean_s: m.queue.mean(),
-            mean_batch_rows: m.batch_rows.mean(),
+            latency: m.latency.summary(1e-9),
+            queue: m.queue.summary(1e-9),
+            batch_rows: m.batch_rows.summary(1.0),
+            ttft_prefill: m.ttft_prefill.summary(1e-9),
+            ttft_sharded: m.ttft_sharded.summary(1e-9),
+            tpot_decode: m.tpot_decode.summary(1e-9),
+            stage_hist: std::array::from_fn(|i| m.stage_ns[i].summary(1e-9)),
             rows_per_s: m.rows as f64 / window,
             stage_predict_s: m.stage_predict_s,
             stage_topk_s: m.stage_topk_s,
@@ -236,20 +299,39 @@ impl MetricsSnapshot {
     pub fn render(&self) -> String {
         let mut s = format!(
             "requests={} rejected={} failed={} batches={} rows={} \
-             p50={:.3}ms p95={:.3}ms mean={:.3}ms queue={:.3}ms \
+             p50={:.3}ms p95={:.3}ms p99={:.3}ms mean={:.3}ms queue={:.3}ms \
              batch_rows={:.1} throughput={:.0} rows/s",
             self.requests,
             self.rejected,
             self.failed,
             self.batches,
             self.rows,
-            self.latency_p50_s * 1e3,
-            self.latency_p95_s * 1e3,
-            self.latency_mean_s * 1e3,
-            self.queue_mean_s * 1e3,
-            self.mean_batch_rows,
+            self.latency.p50 * 1e3,
+            self.latency.p95 * 1e3,
+            self.latency.p99 * 1e3,
+            self.latency.mean * 1e3,
+            self.queue.mean * 1e3,
+            self.batch_rows.mean,
             self.rows_per_s
         );
+        let classed = [
+            ("ttft_prefill", &self.ttft_prefill),
+            ("ttft_sharded", &self.ttft_sharded),
+            ("tpot_decode", &self.tpot_decode),
+        ];
+        if classed.iter().any(|(_, h)| h.count > 0) {
+            s.push_str("\nclasses:");
+            for (name, h) in classed {
+                if h.count > 0 {
+                    s.push_str(&format!(
+                        " {name} p50={:.3}ms p99={:.3}ms (n={})",
+                        h.p50 * 1e3,
+                        h.p99 * 1e3,
+                        h.count
+                    ));
+                }
+            }
+        }
         let stage_total =
             self.stage_predict_s + self.stage_topk_s + self.stage_kv_gen_s + self.stage_formal_s;
         if stage_total > 0.0 {
@@ -296,6 +378,54 @@ impl MetricsSnapshot {
         }
         s
     }
+
+    /// Prometheus-style text exposition of the same snapshot — the
+    /// scrape-endpoint view of [`MetricsSnapshot::render`].
+    pub fn render_prometheus(&self) -> String {
+        use crate::obs::prom::{write_summary, write_summary_family, write_value};
+        let mut out = String::new();
+        write_value(&mut out, "star_requests_total", "responses delivered", "counter", self.requests as f64);
+        write_value(&mut out, "star_rejected_total", "requests rejected at admission", "counter", self.rejected as f64);
+        write_value(&mut out, "star_failed_total", "batches whose backend execution errored", "counter", self.failed as f64);
+        write_value(&mut out, "star_batches_total", "batches dispatched to the worker pool", "counter", self.batches as f64);
+        write_value(&mut out, "star_rows_total", "query rows across dispatched batches", "counter", self.rows as f64);
+        write_value(&mut out, "star_rows_per_second", "served query rows per second over the observation window", "gauge", self.rows_per_s);
+        write_summary(&mut out, "star_request_latency_seconds", "end-to-end request latency", "", &self.latency);
+        write_summary(&mut out, "star_queue_wait_seconds", "queueing share of the request latency", "", &self.queue);
+        write_summary(&mut out, "star_batch_rows", "query rows per sealed batch", "", &self.batch_rows);
+        write_summary_family(
+            &mut out,
+            "star_ttft_seconds",
+            "time to first token by prefill path",
+            &[
+                ("class=\"prefill\"", &self.ttft_prefill),
+                ("class=\"sharded\"", &self.ttft_sharded),
+            ],
+        );
+        write_summary(&mut out, "star_tpot_seconds", "time per output token of decode responses", "", &self.tpot_decode);
+        let labels: Vec<String> =
+            STAGE_NAMES.iter().map(|n| format!("stage=\"{n}\"")).collect();
+        let series: Vec<(&str, &HistSummary)> =
+            labels.iter().map(String::as_str).zip(self.stage_hist.iter()).collect();
+        write_summary_family(
+            &mut out,
+            "star_stage_seconds",
+            "per-batch pipeline-stage busy time",
+            &series,
+        );
+        write_value(&mut out, "star_stalls_total", "SU-FA max-misprediction recoveries", "counter", self.stalls as f64);
+        write_value(&mut out, "star_workspace_bytes", "peak per-worker tile-workspace capacity", "gauge", self.workspace_bytes as f64);
+        write_value(&mut out, "star_decode_steps_total", "decode steps served against the paged KV-cache", "counter", self.decode_steps as f64);
+        write_value(&mut out, "star_decode_tokens_total", "tokens appended across decode steps", "counter", self.decode_tokens as f64);
+        write_value(&mut out, "star_cache_page_hits_total", "resident pages read per decode step, summed", "counter", self.cache_page_hits as f64);
+        write_value(&mut out, "star_cache_pages_rematerialized_total", "pages rebuilt from history after eviction", "counter", self.cache_pages_rematerialized as f64);
+        write_value(&mut out, "star_cache_sessions_evicted_total", "LRU whole-session evictions", "counter", self.cache_sessions_evicted as f64);
+        write_value(&mut out, "star_sharded_prefills_total", "over-target prefills served on the sharded pipeline", "counter", self.sharded_prefills as f64);
+        write_value(&mut out, "star_ring_steps_total", "ring steps across sharded runs", "counter", self.ring_steps as f64);
+        write_value(&mut out, "star_ring_payload_bytes_total", "modeled bytes forwarded on the worker ring", "counter", self.ring_payload_bytes as f64);
+        write_value(&mut out, "star_gathered_kv_rows_total", "selected KV rows gathered to home workers", "counter", self.gathered_kv_rows as f64);
+        out
+    }
 }
 
 #[cfg(test)]
@@ -305,8 +435,8 @@ mod tests {
     #[test]
     fn records_and_snapshots() {
         let m = Metrics::new();
-        m.record_response(0.010, 0.002, 1.0);
-        m.record_response(0.020, 0.004, 2.0);
+        m.record_response(0.010, 0.002, 1.0, RequestClass::Prefill, 64);
+        m.record_response(0.020, 0.004, 2.0, RequestClass::Prefill, 128);
         m.record_batch(64);
         m.record_batch(128);
         m.record_rejection();
@@ -315,10 +445,84 @@ mod tests {
         assert_eq!(s.rejected, 1);
         assert_eq!(s.batches, 2);
         assert_eq!(s.rows, 192);
-        assert!((s.latency_mean_s - 0.015).abs() < 1e-12);
-        assert!((s.mean_batch_rows - 96.0).abs() < 1e-12);
+        // The histogram keeps the exact sum, so the mean is exact; the
+        // percentiles are bucket-quantized to ~3%.
+        assert!((s.latency.mean - 0.015).abs() < 1e-12);
+        assert!((s.latency.p95 - 0.020).abs() / 0.020 < 0.04, "{}", s.latency.p95);
+        assert!((s.latency.min - 0.010).abs() < 1e-12);
+        assert!((s.latency.max - 0.020).abs() < 1e-12);
+        assert!((s.batch_rows.mean - 96.0).abs() < 1e-12);
         assert!((s.rows_per_s - 192.0).abs() < 1e-6);
+        assert_eq!(s.ttft_prefill.count, 2);
+        assert_eq!(s.tpot_decode.count, 0);
         assert!(s.render().contains("requests=2"));
+    }
+
+    #[test]
+    fn per_class_histograms_split_ttft_and_tpot() {
+        let m = Metrics::new();
+        m.record_response(0.030, 0.0, 1.0, RequestClass::Sharded, 512);
+        // A 10-token decode step at 10ms total → 1ms per output token.
+        m.record_response(0.010, 0.0, 2.0, RequestClass::Decode, 10);
+        // tokens=0 must not divide by zero.
+        m.record_response(0.001, 0.0, 3.0, RequestClass::Decode, 0);
+        let s = m.snapshot();
+        assert_eq!(s.ttft_sharded.count, 1);
+        assert!((s.ttft_sharded.mean - 0.030).abs() < 1e-12);
+        assert_eq!(s.tpot_decode.count, 2);
+        assert!((s.tpot_decode.max - 0.001).abs() < 1e-12);
+        let line = s.render();
+        assert!(line.contains("tpot_decode"), "{line}");
+        assert!(line.contains("ttft_sharded"), "{line}");
+    }
+
+    #[test]
+    fn stage_histograms_record_per_batch_times() {
+        use crate::pipeline::StageTiming;
+        let m = Metrics::new();
+        let t = StageTiming {
+            predict_s: 0.001,
+            topk_s: 0.002,
+            kv_gen_s: 0.003,
+            formal_s: 0.004,
+        };
+        m.record_stage_times(&t, 1);
+        m.record_stage_times(&t, 0);
+        let s = m.snapshot();
+        assert_eq!(s.stalls, 1);
+        for (i, expect) in [0.001, 0.002, 0.003, 0.004].iter().enumerate() {
+            assert_eq!(s.stage_hist[i].count, 2, "{}", STAGE_NAMES[i]);
+            assert!(
+                (s.stage_hist[i].mean - expect).abs() < 1e-12,
+                "{}: {}",
+                STAGE_NAMES[i],
+                s.stage_hist[i].mean
+            );
+        }
+        assert!((s.stage_predict_s - 0.002).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prometheus_exposition_is_complete() {
+        let m = Metrics::new();
+        m.record_response(0.010, 0.001, 1.0, RequestClass::Prefill, 32);
+        m.record_response(0.005, 0.001, 2.0, RequestClass::Decode, 5);
+        m.record_batch(32);
+        let text = m.snapshot().render_prometheus();
+        for family in [
+            "star_requests_total 2",
+            "# TYPE star_request_latency_seconds summary",
+            "star_request_latency_seconds{quantile=\"0.99\"}",
+            "star_ttft_seconds{class=\"prefill\",quantile=\"0.5\"}",
+            "star_tpot_seconds_count 1",
+            "star_stage_seconds{stage=\"formal\",quantile=\"0.95\"}",
+            "star_batch_rows_count 1",
+        ] {
+            assert!(text.contains(family), "missing {family:?} in:\n{text}");
+        }
+        // One header per family even with several labeled series.
+        assert_eq!(text.matches("# TYPE star_ttft_seconds summary").count(), 1);
+        assert_eq!(text.matches("# TYPE star_stage_seconds summary").count(), 1);
     }
 
     #[test]
@@ -366,7 +570,7 @@ mod tests {
                 let m = m.clone();
                 std::thread::spawn(move || {
                     for j in 0..100 {
-                        m.record_response(0.001 * i as f64, 0.0, j as f64);
+                        m.record_response(0.001 * i as f64, 0.0, j as f64, RequestClass::Prefill, 1);
                     }
                 })
             })

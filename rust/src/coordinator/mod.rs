@@ -27,9 +27,13 @@
 //!   requests run against a shared [`crate::kvcache::SessionStore`]),
 //!   the PJRT `crate::runtime::Engine` (real numerics, `pjrt`
 //!   feature) or the cycle-level simulator (timing studies).
-//! * [`metrics`] — latency/throughput accounting, per-stage busy times,
-//!   KV-cache hit/eviction/re-materialization counters, and the sharded
-//!   path's per-shard stage timings + ring-step counters.
+//! * [`metrics`] — latency/throughput accounting on fixed-storage
+//!   log-bucketed histograms ([`crate::obs::hist`]): request-latency /
+//!   queue-wait / batch-occupancy distributions, per-class TTFT and
+//!   TPOT, per-stage busy times, KV-cache hit/eviction counters, the
+//!   sharded path's per-shard timings + ring-step counters, and a
+//!   Prometheus-style text exposition
+//!   ([`MetricsSnapshot::render_prometheus`]).
 
 pub mod batcher;
 pub mod metrics;
@@ -38,7 +42,7 @@ pub mod scheduler;
 pub mod server;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{Metrics, MetricsSnapshot, RequestClass};
 pub use router::{Admission, Request, Response, RouteError, Router, Variant};
 pub use scheduler::{Stage, StageJob, TiledScheduler};
 pub use server::{Backend, Server, ServerConfig};

@@ -35,6 +35,11 @@
 //!   capacity accounting and eviction/re-materialization, and the
 //!   incremental per-row DLZS scorer decode steps run against cached
 //!   pages.
+//! * [`obs`] — observability: the zero-allocation span tracer (per-worker
+//!   ring buffers recorded from the tile-engine stage bodies, exported as
+//!   Chrome trace-event JSON via `star trace`), the HDR-style
+//!   log-bucketed histograms behind the serving metrics and bench
+//!   percentiles, and the Prometheus-style text exposition (DESIGN.md §9).
 //! * [`sim`] — the cycle-level single-core STAR accelerator model, its
 //!   energy/area models, the SRAM/DRAM memory system, the A100 roofline
 //!   model and the FACT/Energon/ELSA/SpAtten/Simba baselines.
@@ -64,6 +69,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod kvcache;
+pub mod obs;
 pub mod pipeline;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

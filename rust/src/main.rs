@@ -9,8 +9,14 @@
 //!                           --shards N pins the sequence-sharded worker
 //!                           count; PJRT artifacts with the `pjrt` feature)
 //!   dse [--seq S]           sub-segment design-space exploration
+//!   trace [out.json]        run a reference workload on all three
+//!                           execution paths with tracing enabled and
+//!                           write a Chrome trace-event JSON
 //!   info                    list configuration presets (and artifacts
 //!                           under the `pjrt` feature)
+//!
+//! `STAR_TRACE=1` enables span tracing for any subcommand (e.g.
+//! `STAR_TRACE=1 star bench decode` meters the traced hot path).
 
 use star::cli::Args;
 use star::util::allocmeter::CountingAllocator;
@@ -31,6 +37,11 @@ static ALLOC: CountingAllocator = CountingAllocator;
 
 fn main() {
     logging::init_from_env();
+    // STAR_TRACE=1 turns span tracing on for any subcommand, so the
+    // benches' zero-allocation guards also meter the traced hot path.
+    if std::env::var("STAR_TRACE").map(|v| !v.is_empty() && v != "0").unwrap_or(false) {
+        star::obs::set_enabled(true);
+    }
     let args = Args::from_env();
     let code = match run(&args) {
         Ok(()) => 0,
@@ -52,10 +63,11 @@ fn run(args: &Args) -> Result<()> {
         Some("spatial") => cmd_spatial(args),
         Some("serve") => cmd_serve(args),
         Some("dse") => cmd_dse(args),
+        Some("trace") => cmd_trace(args),
         Some("info") => cmd_info(),
         _ => {
             eprintln!(
-                "usage: star <bench|sim|spatial|serve|dse|info> [--options]\n\
+                "usage: star <bench|sim|spatial|serve|dse|trace|info> [--options]\n\
                  benches: {:?}",
                 star::bench::ALL
             );
@@ -218,6 +230,97 @@ fn cmd_dse(args: &Args) -> Result<()> {
         );
     }
     println!("best: n={} (objective {:.0})", res.best.segments, res.best.objective);
+    Ok(())
+}
+
+/// `star trace [out.json]` — capture a steady-state Chrome trace.
+///
+/// Runs one reference workload through all three execution paths (batch
+/// prefill, autoregressive decode, sequence-sharded prefill) on a single
+/// warm [`star::pipeline::WorkspacePool`] with tracing enabled, asserts
+/// the traced warm hot path metered **zero** heap allocations, and
+/// writes the captured spans as a Chrome trace-event JSON (load it in
+/// `chrome://tracing` or <https://ui.perfetto.dev>).
+fn cmd_trace(args: &Args) -> Result<()> {
+    use star::obs::{chrome_trace, validate_chrome_trace, ExecPath, Stage};
+    use star::pipeline::{PipelineInputs, ShardedPipeline, SparseAttentionPipeline, WorkspacePool};
+    use star::tensor::Mat;
+
+    let out_path = args.positional.first().map(String::as_str).unwrap_or("trace.json");
+    star::obs::set_enabled(true);
+
+    let d = 64;
+    let cfg = PipelineConfig::star().with_keep(0.2).with_tile(16).with_threads(1);
+    let pipe = SparseAttentionPipeline::new(cfg);
+    let sharded = ShardedPipeline::new(cfg, 2);
+    let pool = WorkspacePool::new();
+    let mut rng = star::util::Rng::new(7);
+    let q = Mat::randn(64, d, 1.0, &mut rng);
+    let k = Mat::randn(512, d, 1.0, &mut rng);
+    let v = Mat::randn(512, d, 1.0, &mut rng);
+    let inputs = PipelineInputs::qkv(&q, &k, &v);
+    let sub = |m: &Mat, lo: usize, hi: usize| Mat::from_fn(hi - lo, d, |i, j| m.at(lo + i, j));
+
+    // Cold passes warm the pooled workspaces; their spans are drained
+    // and discarded so the trace shows steady state only.
+    pipe.run_pooled(&inputs, &pool);
+    sharded.run_pooled(&inputs, &pool);
+    let mut store = star::kvcache::SessionStore::new(star::kvcache::SessionConfig::for_pipeline(
+        &cfg, d, 0,
+    ));
+    pipe.decode_step_pooled(&mut store, 1, &sub(&q, 0, 8), &sub(&k, 0, 8), &sub(&v, 0, 8), &pool)?;
+    let mut warmup = Vec::new();
+    pool.drain_spans(&mut warmup);
+
+    // Warm, traced passes — the spans that land in the file. Their
+    // metered stage cores must not touch the heap even while recording.
+    let mut hot = 0u64;
+    hot += pipe.run_pooled(&inputs, &pool).hot_path_allocs;
+    hot += sharded.run_pooled(&inputs, &pool).hot_path_allocs;
+    for step in 0..4usize {
+        let lo = 8 + step;
+        let r = pipe.decode_step_pooled(
+            &mut store,
+            1,
+            &sub(&q, lo, lo + 1),
+            &sub(&k, lo, lo + 1),
+            &sub(&v, lo, lo + 1),
+            &pool,
+        )?;
+        hot += r.hot_path_allocs;
+    }
+    anyhow::ensure!(
+        hot == 0,
+        "traced warm hot path allocated ({hot} allocs) — tracing must stay allocation-free"
+    );
+
+    let mut spans = Vec::new();
+    pool.drain_spans(&mut spans);
+    let have = |st: Stage, p: ExecPath| spans.iter().any(|s| s.stage == st && s.path == p);
+    for st in [Stage::Predict, Stage::Topk, Stage::KvGen, Stage::Formal] {
+        for p in [ExecPath::Prefill, ExecPath::Decode, ExecPath::Sharded] {
+            anyhow::ensure!(
+                have(st, p),
+                "trace missing {} spans on the {} path",
+                st.name(),
+                p.name()
+            );
+        }
+    }
+    anyhow::ensure!(
+        have(Stage::Ring, ExecPath::Sharded) && have(Stage::Merge, ExecPath::Sharded),
+        "trace missing the sharded ring/merge phases"
+    );
+
+    let doc = chrome_trace(&spans);
+    let events = validate_chrome_trace(&doc).map_err(|e| anyhow::anyhow!("invalid trace: {e}"))?;
+    std::fs::write(out_path, doc.pretty())?;
+    println!(
+        "wrote {events} trace events ({} steady-state spans; {} warm-up spans discarded) to {out_path}",
+        spans.len(),
+        warmup.len()
+    );
+    println!("hot-path allocations during traced passes: {hot}");
     Ok(())
 }
 

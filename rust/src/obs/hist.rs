@@ -1,0 +1,353 @@
+//! Log-bucketed histograms (HDR-style, fixed storage, no dependencies).
+//!
+//! [`Histogram`] records unsigned integer samples (serving code uses
+//! nanoseconds; batch occupancy uses row counts) into a fixed array of
+//! log₂ buckets with [`SUB`] linear sub-buckets per octave, bounding the
+//! relative quantization error at `1/SUB` (≈3%) while keeping `record`
+//! allocation-free and O(1). Values up to `2·SUB` are exact. Values above
+//! [`MAX_TRACKED`] saturate into the final (overflow) bucket; the exact
+//! running `min`/`max`/`sum` are kept separately, so only percentiles
+//! saturate, never the extremes or the mean.
+//!
+//! This replaces `util::stats::Summary` in the serving metrics: `Summary`
+//! stores every sample in a `Vec` (unbounded memory, allocates on the
+//! record path) and derives percentiles from a clone+sort. A histogram is
+//! fixed-size, mergeable across workers, and its percentiles are stable
+//! under any record order.
+
+/// Sub-buckets per octave (2^[`SUB_BITS`]).
+pub const SUB_BITS: u32 = 5;
+/// Number of linear sub-buckets per octave.
+pub const SUB: u64 = 1 << SUB_BITS;
+/// Highest MSB position tracked with full precision. 2^40 ns ≈ 18 min —
+/// far beyond any request latency this system produces.
+const MAX_TOP: u32 = 40;
+/// Values above this saturate into the overflow bucket.
+pub const MAX_TRACKED: u64 = (1u64 << (MAX_TOP + 1)) - 1;
+/// Total bucket count: `SUB` exact buckets + one octave of `SUB`
+/// sub-buckets for each MSB position in `SUB_BITS..=MAX_TOP`.
+pub const N_BUCKETS: usize = (SUB as usize) * (1 + (MAX_TOP - SUB_BITS + 1) as usize);
+
+/// Fixed-storage log-bucketed histogram over `u64` samples.
+#[derive(Clone)]
+pub struct Histogram {
+    counts: [u64; N_BUCKETS],
+    count: u64,
+    sum: f64,
+    min: u64,
+    max: u64,
+}
+
+/// Bucket index for a value (saturating above [`MAX_TRACKED`]).
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    let v = v.min(MAX_TRACKED);
+    if v < SUB {
+        v as usize
+    } else {
+        let top = 63 - v.leading_zeros();
+        let octave = (top - SUB_BITS + 1) as u64;
+        (octave * SUB + ((v >> (top - SUB_BITS)) - SUB)) as usize
+    }
+}
+
+/// Lowest value mapping to bucket `idx`.
+pub fn bucket_low(idx: usize) -> u64 {
+    let idx = idx as u64;
+    if idx < SUB {
+        idx
+    } else {
+        let octave = idx / SUB;
+        let sub = idx % SUB;
+        (SUB + sub) << (octave - 1)
+    }
+}
+
+/// Highest value mapping to bucket `idx` (before saturation).
+pub fn bucket_high(idx: usize) -> u64 {
+    let octave = (idx as u64) / SUB;
+    if octave == 0 {
+        idx as u64
+    } else {
+        bucket_low(idx) + (1u64 << (octave - 1)) - 1
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram { counts: [0; N_BUCKETS], count: 0, sum: 0.0, min: u64::MAX, max: 0 }
+    }
+
+    /// Record one sample. O(1), allocation-free.
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v as f64;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Record a duration in seconds as integer nanoseconds (negative or
+    /// non-finite inputs clamp to 0).
+    #[inline]
+    pub fn record_secs(&mut self, s: f64) {
+        let ns = s * 1e9;
+        self.record(if ns.is_finite() && ns > 0.0 { ns as u64 } else { 0 });
+    }
+
+    /// Fold another histogram into this one (worker aggregation).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact minimum recorded value (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum recorded value (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Exact mean of recorded values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Sum of recorded values.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Percentile `p` in `[0, 100]`: the upper bound of the first bucket
+    /// whose cumulative count reaches `ceil(p/100 · count)` — the highest
+    /// value equivalent (within bucket resolution) to the nearest-rank
+    /// sample. Returns 0 on an empty histogram.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let target = target.min(self.count);
+        let mut cum = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                // The overflow bucket's nominal bound *under*-reports
+                // saturated samples — report the exact max there. In every
+                // other bucket, never report beyond the exact max (tightens
+                // the top occupied bucket).
+                if idx == N_BUCKETS - 1 {
+                    return self.max;
+                }
+                return bucket_high(idx).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Condensed view: count, exact min/max/mean, p50/p95/p99 — all value
+    /// fields multiplied by `scale` (e.g. `1e-9` to report nanosecond
+    /// samples in seconds).
+    pub fn summary(&self, scale: f64) -> HistSummary {
+        HistSummary {
+            count: self.count,
+            min: self.min() as f64 * scale,
+            max: self.max() as f64 * scale,
+            mean: self.mean() * scale,
+            p50: self.percentile(50.0) as f64 * scale,
+            p95: self.percentile(95.0) as f64 * scale,
+            p99: self.percentile(99.0) as f64 * scale,
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count)
+            .field("min", &self.min())
+            .field("max", &self.max)
+            .field("mean", &self.mean())
+            .finish()
+    }
+}
+
+/// Snapshot of a [`Histogram`] with values in caller units.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HistSummary {
+    pub count: u64,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_exact_below_two_sub() {
+        // Values below 2·SUB get their own bucket: low == high == value.
+        for v in 0..(2 * SUB) {
+            let idx = bucket_index(v);
+            assert_eq!(bucket_low(idx), v, "low({v})");
+            assert_eq!(bucket_high(idx), v, "high({v})");
+        }
+        // Bucket index is monotone and the low/high ranges tile the axis.
+        let mut prev_high = None;
+        for idx in 0..N_BUCKETS {
+            let (lo, hi) = (bucket_low(idx), bucket_high(idx));
+            assert!(lo <= hi, "bucket {idx} inverted");
+            assert_eq!(bucket_index(lo), idx, "low of {idx} maps back");
+            assert_eq!(bucket_index(hi), idx, "high of {idx} maps back");
+            if let Some(ph) = prev_high {
+                assert_eq!(lo, ph + 1, "gap before bucket {idx}");
+            }
+            prev_high = Some(hi);
+        }
+        assert_eq!(prev_high, Some(MAX_TRACKED));
+    }
+
+    #[test]
+    fn relative_error_is_bounded() {
+        for v in [100u64, 1_000, 12_345, 1 << 20, (1 << 30) + 7] {
+            let idx = bucket_index(v);
+            let err = (bucket_high(idx) - bucket_low(idx)) as f64 / v as f64;
+            assert!(err <= 1.0 / SUB as f64 + 1e-12, "bucket width at {v}: {err}");
+        }
+    }
+
+    #[test]
+    fn empty_histogram_edge_cases() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(50.0), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.mean(), 0.0);
+        let s = h.summary(1.0);
+        assert_eq!((s.count, s.p50, s.p99), (0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn single_sample_percentiles() {
+        let mut h = Histogram::new();
+        h.record(42);
+        for p in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(h.percentile(p), 42, "p{p}");
+        }
+        assert_eq!((h.min(), h.max()), (42, 42));
+        assert_eq!(h.mean(), 42.0);
+    }
+
+    #[test]
+    fn overflow_bucket_saturates_without_losing_extremes() {
+        let mut h = Histogram::new();
+        h.record(u64::MAX);
+        h.record(MAX_TRACKED + 1);
+        h.record(7);
+        // Exact extremes survive saturation...
+        assert_eq!(h.max(), u64::MAX);
+        assert_eq!(h.min(), 7);
+        // ...and high percentiles land in the overflow bucket, clamped to
+        // the exact max rather than the (smaller) bucket bound.
+        assert_eq!(h.percentile(99.0), u64::MAX);
+        assert_eq!(h.percentile(0.0), 7);
+        assert_eq!(bucket_index(u64::MAX), N_BUCKETS - 1);
+        assert_eq!(bucket_index(MAX_TRACKED + 1), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn percentiles_track_nearest_rank_within_bucket_error() {
+        let mut h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        for (p, exact) in [(50.0, 500u64), (95.0, 950), (99.0, 990)] {
+            let got = h.percentile(p);
+            let err = (got as f64 - exact as f64).abs() / exact as f64;
+            assert!(err <= 2.0 / SUB as f64, "p{p}: got {got}, exact {exact}");
+        }
+        assert_eq!(h.percentile(100.0), 1000);
+        assert!((h.mean() - 500.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let (mut a, mut b, mut both) = (Histogram::new(), Histogram::new(), Histogram::new());
+        for v in 0..500u64 {
+            a.record(v * 3);
+            both.record(v * 3);
+        }
+        for v in 0..300u64 {
+            b.record(v * 7 + 1);
+            both.record(v * 7 + 1);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.min(), both.min());
+        assert_eq!(a.max(), both.max());
+        assert_eq!(a.sum(), both.sum());
+        for p in [1.0, 25.0, 50.0, 75.0, 95.0, 99.0, 100.0] {
+            assert_eq!(a.percentile(p), both.percentile(p), "p{p}");
+        }
+    }
+
+    #[test]
+    fn record_secs_clamps_and_converts() {
+        let mut h = Histogram::new();
+        h.record_secs(1.5e-6); // 1500 ns
+        h.record_secs(-3.0); // clamps to 0
+        h.record_secs(f64::NAN); // clamps to 0
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.max(), 1500);
+        assert_eq!(h.min(), 0);
+    }
+
+    #[test]
+    fn order_independence() {
+        let mut fwd = Histogram::new();
+        let mut rev = Histogram::new();
+        for v in 0..1000u64 {
+            fwd.record(v);
+            rev.record(999 - v);
+        }
+        for p in [10.0, 50.0, 90.0, 99.0] {
+            assert_eq!(fwd.percentile(p), rev.percentile(p));
+        }
+    }
+}

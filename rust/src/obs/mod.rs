@@ -1,0 +1,31 @@
+//! Observability: zero-allocation span tracing + fixed-storage histograms
+//! (DESIGN.md §9).
+//!
+//! Three pieces, layered so that observing the system never perturbs the
+//! properties under observation (bit-identical outputs, zero hot-path
+//! allocations):
+//!
+//! * [`trace`] — a span tracer. Per-worker ring buffers of fixed-size
+//!   [`Span`] records live inside the pooled `TileWorkspace`s; the
+//!   tile-engine stage bodies stamp predict/top-k/KV-gen/SU-FA spans (and
+//!   the sharded engine its ring/merge phases) from the `Instant` reads
+//!   they already perform for `StageTiming`. Disabled cost: one relaxed
+//!   atomic load per stage. Enabled cost: one index write — storage is
+//!   reserved in the unmetered front-end preambles, so recording is legal
+//!   inside the metered allocation windows.
+//! * [`hist`] — HDR-style log-bucketed [`Histogram`]s (fixed arrays, no
+//!   dependencies) behind the serving metrics and the bench percentiles:
+//!   O(1) allocation-free record, mergeable, order-independent, with a
+//!   saturating overflow bucket and exact min/max/mean.
+//! * [`chrome`] / [`prom`] — exporters: Chrome trace-event JSON
+//!   (`star trace <out.json>`, loadable in `chrome://tracing`/Perfetto)
+//!   and Prometheus-style text exposition of the metrics histograms.
+
+pub mod chrome;
+pub mod hist;
+pub mod prom;
+pub mod trace;
+
+pub use chrome::{chrome_trace, validate_chrome_trace};
+pub use hist::{HistSummary, Histogram};
+pub use trace::{enabled, set_enabled, ExecPath, Span, SpanRing, Stage};

@@ -1,0 +1,82 @@
+//! Prometheus-style text exposition of histogram summaries.
+//!
+//! The serving metrics render as the classic `summary` metric family:
+//! `{quantile="…"}` sample lines plus `_sum`/`_count`, one family per
+//! histogram. This is the text format a scrape endpoint would serve; here
+//! it is produced on demand next to the human-readable
+//! [`MetricsSnapshot::render`](crate::coordinator::MetricsSnapshot::render).
+
+use super::hist::HistSummary;
+
+/// Append one summary-family exposition for `h` under `name` (base units
+/// already applied by the caller — e.g. seconds). `labels` is either ""
+/// or a `key="value"` list without braces, merged into each sample line.
+pub fn write_summary(out: &mut String, name: &str, help: &str, labels: &str, h: &HistSummary) {
+    write_summary_family(out, name, help, &[(labels, h)]);
+}
+
+/// Append one summary family carrying several labeled series (the
+/// HELP/TYPE header is emitted once — exposition-format rule for
+/// families that differ only by label, e.g. `class` or `stage`).
+pub fn write_summary_family(out: &mut String, name: &str, help: &str, series: &[(&str, &HistSummary)]) {
+    use std::fmt::Write;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} summary");
+    for (labels, h) in series {
+        let sep = if labels.is_empty() { "" } else { "," };
+        for (q, v) in [("0.5", h.p50), ("0.95", h.p95), ("0.99", h.p99)] {
+            let _ = writeln!(out, "{name}{{{labels}{sep}quantile=\"{q}\"}} {v}");
+        }
+        let brace = if labels.is_empty() { String::new() } else { format!("{{{labels}}}") };
+        let _ = writeln!(out, "{name}_sum{brace} {}", h.mean * h.count as f64);
+        let _ = writeln!(out, "{name}_count{brace} {}", h.count);
+    }
+}
+
+/// Append a single gauge/counter sample.
+pub fn write_value(out: &mut String, name: &str, help: &str, kind: &str, v: f64) {
+    use std::fmt::Write;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exposition_shape() {
+        let h = HistSummary { count: 4, min: 1.0, max: 8.0, mean: 4.0, p50: 3.0, p95: 7.0, p99: 8.0 };
+        let mut out = String::new();
+        write_summary(&mut out, "star_request_latency_seconds", "end-to-end latency", "", &h);
+        assert!(out.contains("# TYPE star_request_latency_seconds summary"));
+        assert!(out.contains("star_request_latency_seconds{quantile=\"0.5\"} 3"));
+        assert!(out.contains("star_request_latency_seconds_sum 16"));
+        assert!(out.contains("star_request_latency_seconds_count 4"));
+
+        let mut labeled = String::new();
+        write_summary(&mut labeled, "star_ttft_seconds", "time to first token", "class=\"prefill\"", &h);
+        assert!(labeled.contains("star_ttft_seconds{class=\"prefill\",quantile=\"0.95\"} 7"));
+        assert!(labeled.contains("star_ttft_seconds_count{class=\"prefill\"} 4"));
+
+        let mut g = String::new();
+        write_value(&mut g, "star_requests_total", "admitted requests", "counter", 42.0);
+        assert!(g.contains("star_requests_total 42"));
+    }
+
+    #[test]
+    fn family_emits_one_header_for_many_series() {
+        let h = HistSummary { count: 1, min: 2.0, max: 2.0, mean: 2.0, p50: 2.0, p95: 2.0, p99: 2.0 };
+        let mut out = String::new();
+        write_summary_family(
+            &mut out,
+            "star_stage_seconds",
+            "per-stage busy time",
+            &[("stage=\"predict\"", &h), ("stage=\"topk\"", &h)],
+        );
+        assert_eq!(out.matches("# TYPE star_stage_seconds summary").count(), 1);
+        assert!(out.contains("star_stage_seconds{stage=\"predict\",quantile=\"0.5\"} 2"));
+        assert!(out.contains("star_stage_seconds_count{stage=\"topk\"} 1"));
+    }
+}

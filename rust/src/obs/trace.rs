@@ -1,0 +1,271 @@
+//! Span-based tracer: per-worker preallocated ring buffers of fixed-size
+//! span records, emitted from the tile-engine stage bodies.
+//!
+//! The tracer is subordinate to the zero-allocation contract it observes
+//! (DESIGN.md §8): [`SpanRing::record`] is an index write into storage
+//! reserved ahead of time, so it is legal *inside* the metered stage
+//! windows, and the warm-workspace property tests assert
+//! `hot_path_allocs == 0` with tracing enabled. The disabled path is one
+//! relaxed atomic load and a branch.
+//!
+//! Mechanics:
+//!
+//! * A process-wide monotonic epoch ([`set_enabled`] pins it on first
+//!   enable) turns `Instant`s into `u64` nanosecond ticks, so a span is
+//!   plain-old-data: stage + execution path + tile/row id + worker/shard +
+//!   session + start/end ticks.
+//! * Each [`TileWorkspace`](crate::pipeline::TileWorkspace) owns one
+//!   [`SpanRing`] — workspaces are per-worker and live in the
+//!   [`WorkspacePool`](crate::pipeline::WorkspacePool), so ring storage
+//!   survives across requests exactly like the stage buffers do. Ring
+//!   storage is reserved in the front-end preambles (outside the metered
+//!   windows) via [`SpanRing::reserve_if_enabled`], and only when tracing
+//!   is on — a disabled tracer costs zero bytes.
+//! * When the ring is full the oldest span is overwritten (the ring keeps
+//!   the *most recent* [`RING_CAPACITY`] spans per worker); draining
+//!   returns spans oldest-first and resets the ring.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Spans retained per worker ring before overwrite.
+pub const RING_CAPACITY: usize = 4096;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Turn tracing on or off process-wide. Enabling pins the monotonic
+/// epoch; rings reserve storage lazily at the next front-end preamble.
+pub fn set_enabled(on: bool) {
+    if on {
+        let _ = EPOCH.get_or_init(Instant::now);
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Is tracing enabled? One relaxed atomic load.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Nanoseconds from the trace epoch to `t` (0 if tracing never enabled).
+#[inline]
+pub fn ns_since_epoch(t: Instant) -> u64 {
+    match EPOCH.get() {
+        Some(e) => t.saturating_duration_since(*e).as_nanos() as u64,
+        None => 0,
+    }
+}
+
+/// Pipeline stage a span measures (the paper's four stages plus the
+/// sharded engine's ring-transfer and candidate-merge phases).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Stage {
+    #[default]
+    Predict,
+    Topk,
+    KvGen,
+    Formal,
+    /// Sharded only: forwarding the Q block + candidates to the ring
+    /// neighbor and waiting for the incoming block.
+    Ring,
+    /// Sharded only: the home worker's distributed top-k merge.
+    Merge,
+}
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Predict => "predict",
+            Stage::Topk => "topk",
+            Stage::KvGen => "kv_gen",
+            Stage::Formal => "formal",
+            Stage::Ring => "ring",
+            Stage::Merge => "merge",
+        }
+    }
+}
+
+/// Which front-end produced a span.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum ExecPath {
+    #[default]
+    Prefill,
+    Decode,
+    Sharded,
+}
+
+impl ExecPath {
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecPath::Prefill => "prefill",
+            ExecPath::Decode => "decode",
+            ExecPath::Sharded => "sharded",
+        }
+    }
+}
+
+/// One fixed-size span record (plain old data, `Copy`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Span {
+    pub stage: Stage,
+    pub path: ExecPath,
+    /// Query-tile index (prefill/sharded Q block) or absolute row
+    /// position (decode).
+    pub id: u32,
+    /// Worker index (prefill/decode) or shard index (sharded).
+    pub worker: u32,
+    /// Decode session id; 0 for stateless runs.
+    pub session: u64,
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+impl Span {
+    pub fn dur_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+}
+
+/// Per-worker span ring buffer, owned by a `TileWorkspace`.
+#[derive(Debug, Default)]
+pub struct SpanRing {
+    /// Reserved to `RING_CAPACITY` and filled with defaults on reserve;
+    /// `record` only index-writes, so it never reallocates.
+    buf: Vec<Span>,
+    next: usize,
+    filled: usize,
+    /// Worker/shard index stamped into spans; set by the front-end
+    /// preamble, outside the metered windows.
+    pub worker: u32,
+    /// Session id stamped into spans (decode); 0 for stateless runs.
+    pub session: u64,
+}
+
+impl SpanRing {
+    pub fn new() -> Self {
+        SpanRing::default()
+    }
+
+    /// Reserve ring storage iff tracing is enabled. Must be called from a
+    /// front-end preamble, OUTSIDE the metered allocation windows; after
+    /// it, `record` is allocation-free forever.
+    pub fn reserve_if_enabled(&mut self) {
+        if enabled() && self.buf.is_empty() {
+            self.buf = vec![Span::default(); RING_CAPACITY];
+        }
+    }
+
+    /// Record a span from two `Instant`s (the stage body's existing
+    /// timing reads). No-op when tracing is disabled or the ring was
+    /// never reserved; never allocates.
+    #[inline]
+    pub fn record(&mut self, stage: Stage, path: ExecPath, id: u32, t0: Instant, t1: Instant) {
+        if !enabled() || self.buf.is_empty() {
+            return;
+        }
+        self.buf[self.next] = Span {
+            stage,
+            path,
+            id,
+            worker: self.worker,
+            session: self.session,
+            start_ns: ns_since_epoch(t0),
+            end_ns: ns_since_epoch(t1),
+        };
+        self.next = (self.next + 1) % self.buf.len();
+        self.filled = (self.filled + 1).min(self.buf.len());
+    }
+
+    /// Spans currently held.
+    pub fn len(&self) -> usize {
+        self.filled
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.filled == 0
+    }
+
+    /// Bytes of reserved ring storage (0 until tracing first enables).
+    pub fn capacity_bytes(&self) -> usize {
+        self.buf.capacity() * std::mem::size_of::<Span>()
+    }
+
+    /// Append held spans to `out`, oldest first, and reset the ring
+    /// (storage stays reserved).
+    pub fn drain_into(&mut self, out: &mut Vec<Span>) {
+        if self.filled == self.buf.len() && !self.buf.is_empty() {
+            out.extend_from_slice(&self.buf[self.next..]);
+            out.extend_from_slice(&self.buf[..self.next]);
+        } else {
+            out.extend_from_slice(&self.buf[..self.filled]);
+        }
+        self.next = 0;
+        self.filled = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t0t1() -> (Instant, Instant) {
+        let t0 = Instant::now();
+        (t0, t0 + std::time::Duration::from_nanos(500))
+    }
+
+    #[test]
+    fn disabled_ring_records_nothing_and_holds_no_storage() {
+        // Do not toggle the global flag here (tests share the process);
+        // an unreserved ring drops records regardless of the flag.
+        let mut r = SpanRing::new();
+        let (t0, t1) = t0t1();
+        r.record(Stage::Predict, ExecPath::Prefill, 0, t0, t1);
+        assert_eq!(r.len(), 0);
+        assert_eq!(r.capacity_bytes(), 0);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_drains_in_order() {
+        set_enabled(true);
+        let mut r = SpanRing::new();
+        r.reserve_if_enabled();
+        let (t0, t1) = t0t1();
+        for i in 0..(RING_CAPACITY + 10) as u32 {
+            r.record(Stage::Formal, ExecPath::Decode, i, t0, t1);
+        }
+        assert_eq!(r.len(), RING_CAPACITY);
+        let mut out = Vec::new();
+        r.drain_into(&mut out);
+        assert_eq!(out.len(), RING_CAPACITY);
+        // Oldest surviving span is #10; order is monotone in id.
+        assert_eq!(out.first().unwrap().id, 10);
+        assert_eq!(out.last().unwrap().id, (RING_CAPACITY + 10 - 1) as u32);
+        assert!(out.windows(2).all(|w| w[0].id < w[1].id));
+        assert_eq!(r.len(), 0);
+        assert!(r.capacity_bytes() > 0, "drain keeps storage reserved");
+    }
+
+    #[test]
+    fn spans_carry_context_and_ticks() {
+        set_enabled(true);
+        let mut r = SpanRing::new();
+        r.reserve_if_enabled();
+        r.worker = 3;
+        r.session = 42;
+        let (t0, t1) = t0t1();
+        r.record(Stage::KvGen, ExecPath::Sharded, 7, t0, t1);
+        let mut out = Vec::new();
+        r.drain_into(&mut out);
+        let s = out[0];
+        assert_eq!((s.worker, s.session, s.id), (3, 42, 7));
+        assert_eq!(s.stage, Stage::KvGen);
+        assert_eq!(s.path, ExecPath::Sharded);
+        assert!(s.end_ns >= s.start_ns);
+        assert_eq!(s.dur_ns(), s.end_ns - s.start_ns);
+    }
+}

@@ -51,6 +51,7 @@ use super::report::{StageOps, StageTiming};
 use crate::arith::{OpCounter, OpKind};
 use crate::attention::{sufa_attention_rows_into, AttnInputs, SufaParams, SufaScratch, UpdateOrder};
 use crate::kvcache::{gather_rows_into, score_row_into, KvPage, QueryOperand};
+use crate::obs::trace::{ExecPath, Span, SpanRing, Stage};
 use crate::sim::pipeline::{FormalKind, PredictKind, TopkKind};
 use crate::sparsity::topk::{sads_topk_into, vanilla_topk_into, TopkScratch};
 use crate::sparsity::{PredictScheme, Predictor, PreparedPredict};
@@ -279,6 +280,10 @@ pub struct TileWorkspace {
     /// Heap allocations observed inside metered stage cores since the
     /// last [`TileWorkspace::take_hot_allocs`].
     hot_allocs: u64,
+    /// This worker's span ring (tracing). Storage is reserved in the
+    /// front-end preambles only while tracing is enabled, so recording
+    /// from inside the metered stage cores never allocates.
+    pub(crate) spans: SpanRing,
 }
 
 impl TileWorkspace {
@@ -302,6 +307,7 @@ impl TileWorkspace {
             formal: FormalScratch::default(),
             out_tile: Mat::zeros(0, 0),
             hot_allocs: 0,
+            spans: SpanRing::new(),
         }
     }
 
@@ -310,9 +316,11 @@ impl TileWorkspace {
         self.class
     }
 
-    /// Total heap capacity currently held by every buffer, in bytes —
-    /// the software working set reported next to the modeled SRAM
-    /// budget ([`crate::sim::sram::Sram::STAR_BUDGET_BYTES`]).
+    /// Total heap capacity currently held by every *stage* buffer, in
+    /// bytes — the software working set reported next to the modeled
+    /// SRAM budget ([`crate::sim::sram::Sram::STAR_BUDGET_BYTES`]). The
+    /// span ring is excluded: it is observability state, not part of the
+    /// tile's modeled on-chip residency.
     pub fn capacity_bytes(&self) -> usize {
         let mat = |m: &Mat| m.data.capacity() * std::mem::size_of::<f32>();
         mat(&self.q_tile)
@@ -336,6 +344,12 @@ impl TileWorkspace {
     /// only expected non-zero reading.
     pub fn take_hot_allocs(&mut self) -> u64 {
         std::mem::take(&mut self.hot_allocs)
+    }
+
+    /// Append this workspace's captured spans to `out` (oldest first)
+    /// and reset its ring. Ring storage stays reserved.
+    pub fn drain_spans(&mut self, out: &mut Vec<Span>) {
+        self.spans.drain_into(out);
     }
 
     /// Split borrow for the sharded local pass: the stage-1 score tile
@@ -447,6 +461,15 @@ impl WorkspacePool {
             .flat_map(|v| v.iter())
             .map(TileWorkspace::capacity_bytes)
             .sum()
+    }
+
+    /// Drain captured spans from every checked-in workspace into `out`.
+    /// Workspaces currently checked out (runs in flight) contribute on
+    /// their next drain after checkin.
+    pub fn drain_spans(&self, out: &mut Vec<Span>) {
+        for ws in self.slots.lock().unwrap().values_mut().flat_map(|v| v.iter_mut()) {
+            ws.drain_spans(out);
+        }
     }
 }
 
@@ -707,6 +730,7 @@ impl TileExecutor<'_> {
         // (no score source) skips the score tile entirely.
         let span = if matches!(ctx.score, ScoreSource::None) { 0 } else { s };
         ws.ensure_tile(rows, span, s, ctx.keep, d, cfg.bc);
+        ws.spans.reserve_if_enabled();
         let mut out = Mat::zeros(rows, d);
         let a0 = allocmeter::thread_allocs();
 
@@ -714,7 +738,9 @@ impl TileExecutor<'_> {
         let t0 = Instant::now();
         let have_est =
             self.score_block_into(ctx.score, inp, ctx.kt, lo, hi, 0, s, ws, &mut ops.predict);
-        timing.predict_s += t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        timing.predict_s += (t1 - t0).as_secs_f64();
+        ws.spans.record(Stage::Predict, ExecPath::Prefill, ti as u32, t0, t1);
 
         // ---- Stage 2: top-k selection. ----
         let t0 = Instant::now();
@@ -732,7 +758,9 @@ impl TileExecutor<'_> {
                 }
             }
         }
-        timing.topk_s += t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        timing.topk_s += (t1 - t0).as_secs_f64();
+        ws.spans.record(Stage::Topk, ExecPath::Prefill, ti as u32, t0, t1);
 
         // ---- Stage 3: KV generation for the tile's union. ----
         let t0 = Instant::now();
@@ -745,7 +773,9 @@ impl TileExecutor<'_> {
         if on_demand {
             charge_on_demand_kv_gen(&mut ops.kv_gen, u, inp.x.unwrap().cols, d);
         }
-        timing.kv_gen_s += t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        timing.kv_gen_s += (t1 - t0).as_secs_f64();
+        ws.spans.record(Stage::KvGen, ExecPath::Prefill, ti as u32, t0, t1);
 
         // ---- Stage 4: formal compute (SU-FA / FA-2 approx / dense). ----
         let t0 = Instant::now();
@@ -766,7 +796,9 @@ impl TileExecutor<'_> {
         if on_demand {
             kv_traffic_on_chip(&mut ops.formal, u, d);
         }
-        timing.formal_s += t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        timing.formal_s += (t1 - t0).as_secs_f64();
+        ws.spans.record(Stage::Formal, ExecPath::Prefill, ti as u32, t0, t1);
         ws.hot_allocs += allocmeter::thread_allocs() - a0;
 
         TileOut {
@@ -806,6 +838,7 @@ impl TileExecutor<'_> {
         // Capacity maintenance outside the metered core (the decode
         // context grows monotonically; reserves amortize).
         ws.ensure_decode_row(limit, keep, d, cfg.bc, limit.div_ceil(page_size.max(1)));
+        ws.spans.reserve_if_enabled();
         let a0 = allocmeter::thread_allocs();
 
         // ---- Stage 1: predict over cached page operands. ----
@@ -818,7 +851,9 @@ impl TileExecutor<'_> {
             score_row_into(qop, pages, limit, attn_scale, &mut ops.predict, est_row);
             true
         };
-        timing.predict_s += t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        timing.predict_s += (t1 - t0).as_secs_f64();
+        ws.spans.record(Stage::Predict, ExecPath::Decode, pos as u32, t0, t1);
 
         // ---- Stage 2: top-k over the causal prefix. ----
         let t0 = Instant::now();
@@ -828,7 +863,9 @@ impl TileExecutor<'_> {
             let scores = if have_est { Some(est_row.as_slice()) } else { None };
             select_into(cfg, scores, limit, keep, topk, sel.row_mut(0), &mut ops.topk)
         };
-        timing.topk_s += t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        timing.topk_s += (t1 - t0).as_secs_f64();
+        ws.spans.record(Stage::Topk, ExecPath::Decode, pos as u32, t0, t1);
 
         // ---- Stage 3: cache read — gather this row's selected KV rows. ----
         let t0 = Instant::now();
@@ -847,7 +884,9 @@ impl TileExecutor<'_> {
         }
         let u = ws.union.len();
         ops.kv_gen.sram(4 * (2 * u * d) as u64); // cached KV streams from SRAM
-        timing.kv_gen_s += t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        timing.kv_gen_s += (t1 - t0).as_secs_f64();
+        ws.spans.record(Stage::KvGen, ExecPath::Decode, pos as u32, t0, t1);
 
         // ---- Stage 4: formal compute on the compacted rows. The
         // selection is remapped monotonically (ascending union order),
@@ -878,7 +917,9 @@ impl TileExecutor<'_> {
         };
         // The formal stage's KV traffic came from the cache, not DRAM.
         kv_traffic_on_chip(&mut ops.formal, u, d);
-        timing.formal_s += t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        timing.formal_s += (t1 - t0).as_secs_f64();
+        ws.spans.record(Stage::Formal, ExecPath::Decode, pos as u32, t0, t1);
         ws.hot_allocs += allocmeter::thread_allocs() - a0;
 
         DecodeRowOut {
@@ -913,6 +954,7 @@ impl TileExecutor<'_> {
         let cfg = self.cfg;
         let (s, d) = (inp.s(), inp.d());
         let rows = sel_rows.len();
+        ws.spans.reserve_if_enabled();
 
         // ---- KV gen + gather: produce the union of selected rows and
         // stream them to this home worker — only the union crosses the
@@ -949,7 +991,9 @@ impl TileExecutor<'_> {
             }
             ws.hot_allocs += allocmeter::thread_allocs() - a0;
         }
-        timing.kv_gen_s += t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        timing.kv_gen_s += (t1 - t0).as_secs_f64();
+        ws.spans.record(Stage::KvGen, ExecPath::Sharded, lo as u32, t0, t1);
 
         // ---- Formal: SU-FA over the gathered rows, selection remapped
         // monotonically (ascending union order) so the per-key visit
@@ -994,7 +1038,9 @@ impl TileExecutor<'_> {
             // gathered KV out of on-chip buffers, not DRAM.
             kv_traffic_on_chip(&mut ops.formal, u, d);
         }
-        timing.formal_s += t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        timing.formal_s += (t1 - t0).as_secs_f64();
+        ws.spans.record(Stage::Formal, ExecPath::Sharded, lo as u32, t0, t1);
         ws.hot_allocs += allocmeter::thread_allocs() - a0;
         (stalls, u)
     }
@@ -1024,6 +1070,8 @@ pub(crate) fn parallel_tiles_pooled<T: Send>(
     .clamp(1, ntiles);
     if workers <= 1 {
         let mut ws = pool.checkout(class);
+        ws.spans.worker = 0;
+        ws.spans.session = 0;
         let outs = (0..ntiles).map(|ti| job(&mut ws, ti)).collect();
         let (hot, bytes) = (ws.take_hot_allocs(), ws.capacity_bytes());
         pool.checkin(ws);
@@ -1035,6 +1083,8 @@ pub(crate) fn parallel_tiles_pooled<T: Send>(
                 .map(|w| {
                     scope.spawn(move || {
                         let mut ws = pool.checkout(class);
+                        ws.spans.worker = w as u32;
+                        ws.spans.session = 0;
                         let outs: Vec<T> =
                             (w..ntiles).step_by(workers).map(|ti| job(&mut ws, ti)).collect();
                         let (hot, bytes) = (ws.take_hot_allocs(), ws.capacity_bytes());

@@ -430,6 +430,9 @@ impl SparseAttentionPipeline {
             let pages: Vec<&KvPage> = store.pages_of(session);
             let exec = TileExecutor { cfg: &self.cfg };
             parallel_tiles_pooled(ntiles, self.cfg.threads, pool, class, |ws, ti| {
+                // Stamp the session into this worker's trace context
+                // (outside the metered row cores).
+                ws.spans.session = session;
                 let lo = ti * tile;
                 let hi = (lo + tile).min(rows);
                 let outs = (lo..hi)

@@ -55,6 +55,7 @@ use super::engine::{
 use super::exec::PipelineInputs;
 use super::report::{StageOps, StageTiming};
 use crate::attention::Selection;
+use crate::obs::trace::{ExecPath, Stage};
 use crate::sim::pipeline::TopkKind;
 use crate::sparsity::topk::{
     merge_topk_candidates, sads_geometry, sads_merge, sads_segment_winners_scratch,
@@ -409,6 +410,12 @@ impl ShardedPipeline {
                 let tx_next = txs[(j + 1) % w].clone();
                 handles.push(scope.spawn(move || {
                     let mut ws = pool.checkout(class);
+                    // Trace context for this shard: reserve span storage
+                    // here (outside the metered stage cores) and stamp the
+                    // ring position as the worker id.
+                    ws.spans.reserve_if_enabled();
+                    ws.spans.worker = j as u32;
+                    ws.spans.session = 0;
                     let mut my_ops = StageOps::default();
                     let mut my_timing = StageTiming::default();
                     let (blo, bhi) = ctx.plan.q_blocks[j];
@@ -427,8 +434,19 @@ impl ShardedPipeline {
                         if w > 1 {
                             payload_bytes += payload.wire_bytes(ctx.d);
                             ring_sends += 1;
+                            let sent_block = payload.block as u32;
+                            let t0 = Instant::now();
                             tx_next.send(payload).expect("ring receiver alive");
                             payload = rx.recv().expect("ring sender alive");
+                            // Forward + wait-for-neighbor time: the ring
+                            // phase of the DRAttention timeline.
+                            ws.spans.record(
+                                Stage::Ring,
+                                ExecPath::Sharded,
+                                sent_block,
+                                t0,
+                                Instant::now(),
+                            );
                         }
                     }
                     debug_assert_eq!(payload.block, j, "payload did not come home");
@@ -553,7 +571,9 @@ fn shard_local_pass(
         &mut ops.predict,
     );
     debug_assert!(have_est, "topk != None implies a score source");
-    timing.predict_s += t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    timing.predict_s += (t1 - t0).as_secs_f64();
+    ws.spans.record(Stage::Predict, ExecPath::Sharded, lo as u32, t0, t1);
 
     // ---- Top-k (local): propose candidates from the owned range. ----
     let t0 = Instant::now();
@@ -594,7 +614,9 @@ fn shard_local_pass(
             }
         }
     }
-    timing.topk_s += t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    timing.topk_s += (t1 - t0).as_secs_f64();
+    ws.spans.record(Stage::Topk, ExecPath::Sharded, lo as u32, t0, t1);
 }
 
 /// The home phase for a block that has visited every shard: merge the
@@ -637,7 +659,12 @@ fn home_phase(
             }
         }
     }
-    timing.topk_s += t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    timing.topk_s += (t1 - t0).as_secs_f64();
+    // The distributed-selection merge is still accounted under the
+    // top-k clock (it *is* stage 2), but traced as its own span so the
+    // home phase is visible on the timeline.
+    ws.spans.record(Stage::Merge, ExecPath::Sharded, lo as u32, t0, t1);
 
     // ---- Stages 3 + 4 on the shared tile core: union → gather (only
     // the union crosses the ring — the sparse-attention win) → monotone

@@ -179,12 +179,19 @@ fn write_escaped(out: &mut String, s: &str) {
 }
 
 /// JSON parse error with byte offset.
-#[derive(Debug, thiserror::Error)]
-#[error("json error at byte {at}: {msg}")]
+#[derive(Debug)]
 pub struct JsonError {
     pub at: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json error at byte {}: {}", self.at, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 struct Parser<'a> {
     s: &'a [u8],

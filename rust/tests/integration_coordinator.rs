@@ -57,7 +57,9 @@ fn hundred_requests_across_buckets() {
     assert!(small > 10 && big > 10, "both buckets used: {small}/{big}");
     let snap = srv.shutdown();
     assert_eq!(snap.requests, 100);
-    assert!(snap.mean_batch_rows > 8.0, "batching actually batched: {}", snap.mean_batch_rows);
+    assert!(snap.batch_rows.mean > 8.0, "batching actually batched: {}", snap.batch_rows.mean);
+    assert!(snap.latency.p99 >= snap.latency.p50, "histogram percentiles are ordered");
+    assert_eq!(snap.latency.count, 100, "every response recorded in the latency histogram");
 }
 
 #[test]
@@ -211,6 +213,8 @@ fn over_target_prefill_serves_bit_identical_sharded_outputs() {
     assert_eq!(snap.sharded_prefills, 1);
     assert_eq!(snap.shard_stage_s.len(), 2, "per-shard timings recorded");
     assert!(snap.ring_steps >= 2 && snap.gathered_kv_rows > 0);
+    assert_eq!(snap.ttft_sharded.count, 1, "sharded prefill lands in its TTFT class");
+    assert_eq!(snap.ttft_prefill.count, 0);
 }
 
 #[test]
@@ -308,6 +312,12 @@ fn decode_sessions_serve_through_continuous_batching() {
     assert_eq!(snap.decode_tokens, n as u64, "the rejected step appended nothing");
     assert!(snap.cache_page_hits > 0, "cache hits recorded");
     assert_eq!(snap.failed, 1, "exactly the out-of-order step failed");
+    assert_eq!(
+        snap.tpot_decode.count,
+        8,
+        "every decode response (incl. the failed step) records a TPOT sample"
+    );
+    assert_eq!(snap.ttft_prefill.count, 7, "the interleaved stateless prefills record TTFT");
 }
 
 #[test]

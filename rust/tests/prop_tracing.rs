@@ -1,0 +1,159 @@
+//! Property: span tracing is invisible to the math and free of heap
+//! traffic on the warm hot path.
+//!
+//! The tracer (`star::obs::trace`) records fixed-size span records into
+//! per-worker rings that live inside the pooled
+//! [`star::pipeline::TileWorkspace`], so two contracts must hold:
+//!
+//! 1. **Bit-invisibility.** Outputs, selections, stalls and per-stage
+//!    op counters of all three execution paths (batch prefill,
+//!    autoregressive decode, sequence-sharded prefill) are identical
+//!    with tracing off and with tracing on — recording is a pure
+//!    index-write, never a branch into different numerics.
+//! 2. **Zero-allocation recording.** This binary installs the counting
+//!    allocator, so `hot_path_allocs` is a real measurement: with
+//!    tracing enabled, warm traced runs must still meter zero heap
+//!    allocations inside the stage cores (the ring is reserved in the
+//!    unmetered preamble; see `SpanRing::reserve_if_enabled`).
+//!
+//! The traced phase deliberately never disables tracing afterwards:
+//! the flag is process-global and other tests may assert that enabled
+//! tracing records. The disabled baseline therefore runs *first*,
+//! inside the one test that flips the flag.
+
+#[global_allocator]
+static ALLOC: star::util::allocmeter::CountingAllocator =
+    star::util::allocmeter::CountingAllocator;
+
+use star::kvcache::{SessionConfig, SessionStore};
+use star::obs::{ExecPath, Stage};
+use star::pipeline::{
+    PipelineConfig, PipelineInputs, ShardedPipeline, SparseAttentionPipeline, WorkspacePool,
+};
+use star::tensor::Mat;
+use star::util::{allocmeter, Rng};
+
+fn mats(t: usize, s: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+    let mut rng = Rng::new(seed);
+    (
+        Mat::randn(t, d, 1.0, &mut rng),
+        Mat::randn(s, d, 1.0, &mut rng),
+        Mat::randn(s, d, 1.0, &mut rng),
+    )
+}
+
+fn sub(m: &Mat, lo: usize, hi: usize) -> Mat {
+    Mat::from_fn(hi - lo, m.cols, |i, j| m.at(lo + i, j))
+}
+
+#[test]
+fn counting_allocator_is_live_in_this_binary() {
+    let a0 = allocmeter::thread_allocs();
+    let v: Vec<u64> = Vec::with_capacity(64);
+    assert!(allocmeter::thread_allocs() > a0, "allocation meter must count");
+    assert!(allocmeter::installed());
+    drop(v);
+}
+
+/// One decode session: an 8-token prefill chunk then 8 single-token
+/// steps, returning per-step outputs, selections and the hot-path
+/// alloc sum of the *steps* (the prefill chunk warms the workspaces).
+fn decode_session(
+    cfg: PipelineConfig,
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    pool: &WorkspacePool,
+) -> (Vec<Mat>, Vec<star::attention::Selection>, u64) {
+    let d = q.cols;
+    let pipe = SparseAttentionPipeline::new(cfg);
+    let mut store = SessionStore::new(SessionConfig::for_pipeline(&cfg, d, 0));
+    pipe.decode_step_pooled(&mut store, 1, &sub(q, 0, 8), &sub(k, 0, 8), &sub(v, 0, 8), pool)
+        .expect("prefill chunk");
+    let (mut outs, mut sels, mut allocs) = (Vec::new(), Vec::new(), 0u64);
+    for lo in 8..16 {
+        let r = pipe
+            .decode_step_pooled(
+                &mut store,
+                1,
+                &sub(q, lo, lo + 1),
+                &sub(k, lo, lo + 1),
+                &sub(v, lo, lo + 1),
+                pool,
+            )
+            .expect("decode step");
+        allocs += r.hot_path_allocs;
+        outs.push(r.out);
+        sels.push(r.selection);
+    }
+    (outs, sels, allocs)
+}
+
+#[test]
+fn tracing_is_bit_invisible_and_allocation_free() {
+    let cfg = PipelineConfig::star().with_keep(0.25).with_tile(8).with_threads(1);
+    let (q, k, v) = mats(24, 128, 16, 42);
+    let inputs = PipelineInputs::qkv(&q, &k, &v);
+    let pipe = SparseAttentionPipeline::new(cfg);
+    let sharded = ShardedPipeline::new(cfg, 2);
+
+    // ---- Baseline, tracing disabled (the process default; this is the
+    // only test in this binary that flips the flag). ----
+    assert!(!star::obs::enabled(), "tracing must start disabled in this binary");
+    let pool_off = WorkspacePool::new();
+    let base_prefill = pipe.run_pooled(&inputs, &pool_off);
+    let base_sharded = sharded.run_pooled(&inputs, &pool_off);
+    let (base_outs, base_sels, _) = decode_session(cfg, &q, &k, &v, &pool_off);
+    let mut none = Vec::new();
+    pool_off.drain_spans(&mut none);
+    assert!(none.is_empty(), "disabled tracing must record nothing");
+
+    // ---- Traced: same workload on a fresh pool. First passes run on
+    // cold workspaces (warm-up, allocs uncounted); second passes are the
+    // measurement. ----
+    star::obs::set_enabled(true);
+    let pool_on = WorkspacePool::new();
+    pipe.run_pooled(&inputs, &pool_on);
+    sharded.run_pooled(&inputs, &pool_on);
+    let mut warmup = Vec::new();
+    pool_on.drain_spans(&mut warmup);
+    assert!(!warmup.is_empty(), "enabled tracing must record spans");
+
+    let traced_prefill = pipe.run_pooled(&inputs, &pool_on);
+    let traced_sharded = sharded.run_pooled(&inputs, &pool_on);
+    let (traced_outs, traced_sels, decode_allocs) = decode_session(cfg, &q, &k, &v, &pool_on);
+
+    // 1. Bit-invisibility.
+    assert_eq!(traced_prefill.out.max_abs_diff(&base_prefill.out), 0.0, "prefill output drift");
+    assert_eq!(traced_prefill.selection, base_prefill.selection, "prefill selection drift");
+    assert_eq!(traced_prefill.stalls, base_prefill.stalls, "prefill stall drift");
+    assert_eq!(traced_prefill.ops.predict, base_prefill.ops.predict, "prefill predict ops drift");
+    assert_eq!(traced_prefill.ops.formal, base_prefill.ops.formal, "prefill formal ops drift");
+    assert_eq!(traced_sharded.out.max_abs_diff(&base_sharded.out), 0.0, "sharded output drift");
+    assert_eq!(traced_sharded.selection, base_sharded.selection, "sharded selection drift");
+    assert_eq!(traced_outs.len(), base_outs.len());
+    for (i, (t, b)) in traced_outs.iter().zip(&base_outs).enumerate() {
+        assert_eq!(t.max_abs_diff(b), 0.0, "decode step {i} output drift");
+    }
+    assert_eq!(traced_sels, base_sels, "decode selection drift");
+
+    // 2. Zero-allocation recording on the warm hot path.
+    assert_eq!(traced_prefill.hot_path_allocs, 0, "traced warm prefill allocated");
+    assert_eq!(traced_sharded.hot_path_allocs, 0, "traced warm sharded run allocated");
+    assert_eq!(decode_allocs, 0, "traced warm decode steps allocated");
+
+    // The traced passes recorded every stage on every path.
+    let mut spans = Vec::new();
+    pool_on.drain_spans(&mut spans);
+    let have = |st: Stage, p: ExecPath| spans.iter().any(|s| s.stage == st && s.path == p);
+    for st in [Stage::Predict, Stage::Topk, Stage::KvGen, Stage::Formal] {
+        for p in [ExecPath::Prefill, ExecPath::Decode, ExecPath::Sharded] {
+            assert!(have(st, p), "missing {} span on the {} path", st.name(), p.name());
+        }
+    }
+    assert!(have(Stage::Ring, ExecPath::Sharded), "missing sharded ring spans");
+    assert!(have(Stage::Merge, ExecPath::Sharded), "missing sharded merge spans");
+    for s in &spans {
+        assert!(s.end_ns >= s.start_ns, "span time went backwards");
+    }
+}
