@@ -5,6 +5,7 @@
 //! pre-compute stage. We model per-tensor symmetric quantization:
 //! `q = clamp(round(x / scale))`, `x̂ = q · scale`.
 
+use crate::arith::lanes::{F32x8, KernelPath, LANES};
 use crate::tensor::Mat;
 
 /// Supported integer widths.
@@ -51,13 +52,58 @@ pub fn quantize_row(row: &[f32], bits: IntBits) -> (Vec<i32>, f32) {
 /// filled — no allocation once `out` has the capacity). Returns the
 /// per-row scale. This is the only per-row quantizer; the allocating
 /// entry point wraps it, so buffered and fresh results are bit-identical
-/// by construction.
+/// by construction. Dispatches on the `simd` cargo feature; both
+/// spellings are bit-identical — see [`quantize_row_into_with`].
 pub fn quantize_row_into(row: &[f32], bits: IntBits, out: &mut Vec<i32>) -> f32 {
-    let amax = row.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    quantize_row_into_with(row, bits, out, KernelPath::active())
+}
+
+/// [`quantize_row_into`] with an explicit kernel path, for benches and
+/// parity tests.
+///
+/// Bit-identity argument: the amax reduction is a fold of the
+/// NaN-ignoring, associative and commutative `f32::max` over `|x|`
+/// (remainder lanes filled with the identity 0.0), so lane-splitting
+/// yields the same scale; the quantization itself is an elementwise map
+/// (`(x / scale).round()` then clamp — exact IEEE division in both
+/// spellings), so every output element is identical.
+pub fn quantize_row_into_with(
+    row: &[f32],
+    bits: IntBits,
+    out: &mut Vec<i32>,
+    path: KernelPath,
+) -> f32 {
+    let amax = match path {
+        KernelPath::Scalar => row.iter().fold(0.0f32, |a, &x| a.max(x.abs())),
+        KernelPath::Lanes => {
+            let mut acc = F32x8::zero();
+            let mut chunks = row.chunks_exact(LANES);
+            for c in &mut chunks {
+                acc = acc.max(F32x8::load(c).abs());
+            }
+            acc.max(F32x8::load_or(chunks.remainder(), 0.0).abs()).hmax(0.0)
+        }
+    };
     let scale = if amax == 0.0 { 1.0 } else { amax / bits.qmax() as f32 };
     let qmax = bits.qmax();
     out.clear();
-    out.extend(row.iter().map(|&x| ((x / scale).round() as i32).clamp(-qmax, qmax)));
+    match path {
+        KernelPath::Scalar => {
+            out.extend(row.iter().map(|&x| ((x / scale).round() as i32).clamp(-qmax, qmax)));
+        }
+        KernelPath::Lanes => {
+            let s = F32x8::splat(scale);
+            let mut chunks = row.chunks_exact(LANES);
+            for c in &mut chunks {
+                for x in F32x8::load(c).div(s).to_array() {
+                    out.push((x.round() as i32).clamp(-qmax, qmax));
+                }
+            }
+            for &x in chunks.remainder() {
+                out.push(((x / scale).round() as i32).clamp(-qmax, qmax));
+            }
+        }
+    }
     scale
 }
 
@@ -212,6 +258,29 @@ mod tests {
         let (qr, s) = quantize_row(m.row(0), IntBits::Int8);
         assert_eq!(qr, q.q);
         assert_eq!(s, q.scale);
+    }
+
+    #[test]
+    fn quantize_lanes_path_is_bit_identical_to_scalar() {
+        let mut rng = Rng::new(31);
+        for cols in [1usize, 7, 8, 9, 16, 23, 64, 65] {
+            let m = Mat::randn(1, cols, 2.0, &mut rng);
+            for bits in [IntBits::Int4, IntBits::Int8, IntBits::Int16] {
+                let mut qs = vec![7i32; 3]; // dirty
+                let mut ql = Vec::new();
+                let ss = quantize_row_into_with(m.row(0), bits, &mut qs, KernelPath::Scalar);
+                let sl = quantize_row_into_with(m.row(0), bits, &mut ql, KernelPath::Lanes);
+                assert_eq!(ss.to_bits(), sl.to_bits(), "cols={cols} bits={bits:?}");
+                assert_eq!(qs, ql, "cols={cols} bits={bits:?}");
+            }
+        }
+        // All-zero row (scale fallback) and a -0.0 amax candidate.
+        for row in [vec![0.0f32; 11], vec![-0.0f32, 0.0, -0.0]] {
+            let (mut qs, mut ql) = (Vec::new(), Vec::new());
+            let ss = quantize_row_into_with(&row, IntBits::Int8, &mut qs, KernelPath::Scalar);
+            let sl = quantize_row_into_with(&row, IntBits::Int8, &mut ql, KernelPath::Lanes);
+            assert_eq!((ss.to_bits(), qs), (sl.to_bits(), ql));
+        }
     }
 
     #[test]

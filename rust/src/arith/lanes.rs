@@ -1,0 +1,344 @@
+//! Portable lane-based SIMD layer: fixed 8-wide f32/i64 lane types the hot
+//! buffer-writing kernels are spelled in, plus the [`KernelPath`] dispatch
+//! switch and the [`ReductionOrder`] bit-identity contract.
+//!
+//! # Why no intrinsics or crates
+//!
+//! The offline image vendors no crates (`rust/vendor/` policy) and
+//! `std::simd` is nightly-only, so the lane types here are plain
+//! `#[repr(align(32))]` arrays with per-lane loops written so LLVM's
+//! autovectorizer maps them onto the target's vector units (AVX2 =
+//! exactly one `F32x8` per register; NEON/SSE = two). Every operation is
+//! per-lane IEEE-754 f32 arithmetic — the same operations the scalar
+//! kernels perform, just batched — which is what makes the bit-identity
+//! contract below provable rather than approximate.
+//!
+//! # Dispatch: both spellings always compiled
+//!
+//! Each hot kernel has a `*_with(.., KernelPath)` spelling taking the path
+//! explicitly, and its public name dispatches on [`KernelPath::active`]
+//! (compile-time: the `simd` cargo feature). Both paths are *always
+//! compiled* — `star bench kernels` measures scalar vs lanes in one
+//! binary, and `tests/prop_simd_parity.rs` asserts their bit-identity in
+//! one build, regardless of which one the feature selects as default.
+//!
+//! # The bit-identity contract
+//!
+//! Lane kernels must be bit-identical to their scalar spellings wherever
+//! the reduction order is preserved:
+//!
+//! * elementwise maps (quantize, axpy, rescale) — trivially identical;
+//! * integer accumulation (the predictor's i64 score sums) — addition is
+//!   associative, so lane-splitting is unconditionally identical;
+//! * `f32::max` reductions (quantize amax, SU-FA tile max, top-k scan
+//!   maxima) — max is associative and commutative (and the kernels never
+//!   feed it NaN by construction), so lane-splitting is identical;
+//! * f32 *sums* are **not** reorderable. Kernels keep them sequential
+//!   under [`ReductionOrder::Strict`] (the default) and may lane-split
+//!   them only under [`ReductionOrder::Lanes`] — see the enum docs and
+//!   DESIGN.md §10.
+//!
+//! Accordingly, Strict-path kernels never use [`F32x8::mul_add`]: a fused
+//! multiply-add rounds once where the scalar spelling rounds twice.
+
+/// Lane width of the portable vector types. 8 × f32 = 256 bits, one AVX2
+/// register; chosen to match the paper's tile granularity (`tile_t` and
+/// `d` are multiples of 8 in every preset).
+pub const LANES: usize = 8;
+
+/// Which spelling of a dual-spelled kernel to run.
+///
+/// Carried as a runtime value so benches and parity tests can run both in
+/// one binary; the public kernel entry points pass [`KernelPath::active`],
+/// which the `simd` cargo feature decides at compile time (so the branch
+/// folds away in the hot path).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelPath {
+    /// The reference scalar loops (the pre-SIMD kernel bodies).
+    Scalar,
+    /// The lane-based spellings in this module's types.
+    Lanes,
+}
+
+impl KernelPath {
+    /// The path the `simd` cargo feature selects: `Lanes` with
+    /// `--features simd`, `Scalar` otherwise.
+    #[inline]
+    pub fn active() -> KernelPath {
+        if cfg!(feature = "simd") {
+            KernelPath::Lanes
+        } else {
+            KernelPath::Scalar
+        }
+    }
+}
+
+/// How a kernel may order floating-point *sum* reductions.
+///
+/// `Strict` (the default everywhere) keeps every f32 sum in the scalar
+/// kernel's sequential order, so lane kernels are bit-identical to scalar
+/// — the property `tests/prop_simd_parity.rs` pins. `Lanes` permits the
+/// SU-FA q·k dot product to accumulate in 8 independent lanes combined by
+/// a fixed pairwise tree ([`F32x8::hsum`]): typically ~1 ulp different
+/// and *more* accurate in expectation (shorter dependency chains), but no
+/// longer bit-comparable against Strict history. See DESIGN.md §10 for
+/// when `Lanes` is acceptable.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ReductionOrder {
+    /// Sequential scalar-order f32 sums; lane output bit-identical to
+    /// scalar output.
+    #[default]
+    Strict,
+    /// Lane-split f32 sums (fixed pairwise combine). Deterministic for a
+    /// given build, but not bit-comparable with `Strict`.
+    Lanes,
+}
+
+/// Eight f32 lanes. 32-byte aligned so a warm workspace loads it with one
+/// aligned vector move on AVX2.
+#[derive(Clone, Copy, Debug, PartialEq)]
+#[repr(align(32))]
+pub struct F32x8(pub [f32; LANES]);
+
+impl F32x8 {
+    /// All lanes zero.
+    #[inline]
+    pub fn zero() -> F32x8 {
+        F32x8([0.0; LANES])
+    }
+
+    /// All lanes `v`.
+    #[inline]
+    pub fn splat(v: f32) -> F32x8 {
+        F32x8([v; LANES])
+    }
+
+    /// Load 8 contiguous lanes from `xs` (must hold at least 8).
+    #[inline]
+    pub fn load(xs: &[f32]) -> F32x8 {
+        let mut v = [0.0; LANES];
+        v.copy_from_slice(&xs[..LANES]);
+        F32x8(v)
+    }
+
+    /// Load up to 8 lanes from `xs`, filling missing tail lanes with
+    /// `fill` — the remainder-lane idiom: `fill` is chosen as the
+    /// reduction identity (0.0 for sums/amax over |x|, −∞ for maxima) so
+    /// the tail lanes are no-ops in the combine.
+    #[inline]
+    pub fn load_or(xs: &[f32], fill: f32) -> F32x8 {
+        let mut v = [fill; LANES];
+        let n = xs.len().min(LANES);
+        v[..n].copy_from_slice(&xs[..n]);
+        F32x8(v)
+    }
+
+    /// Store all 8 lanes into `out` (must hold at least 8).
+    #[inline]
+    pub fn store(self, out: &mut [f32]) {
+        out[..LANES].copy_from_slice(&self.0);
+    }
+
+    /// Lanewise `self + rhs`.
+    #[inline]
+    pub fn add(self, rhs: F32x8) -> F32x8 {
+        let mut v = self.0;
+        for (a, b) in v.iter_mut().zip(&rhs.0) {
+            *a += b;
+        }
+        F32x8(v)
+    }
+
+    /// Lanewise `self * rhs`.
+    #[inline]
+    pub fn mul(self, rhs: F32x8) -> F32x8 {
+        let mut v = self.0;
+        for (a, b) in v.iter_mut().zip(&rhs.0) {
+            *a *= b;
+        }
+        F32x8(v)
+    }
+
+    /// Lanewise fused `self * b + c` (single rounding per lane). **Not**
+    /// bit-identical to `mul` + `add`; Strict-order kernels must not use
+    /// it — it exists for `Lanes`-mode reductions and future non-contract
+    /// paths.
+    #[inline]
+    pub fn mul_add(self, b: F32x8, c: F32x8) -> F32x8 {
+        let mut v = self.0;
+        for i in 0..LANES {
+            v[i] = v[i].mul_add(b.0[i], c.0[i]);
+        }
+        F32x8(v)
+    }
+
+    /// Lanewise `self / rhs` (exact IEEE division — *not* a reciprocal
+    /// multiply, so `x / s` matches the scalar spelling bit for bit).
+    #[inline]
+    pub fn div(self, rhs: F32x8) -> F32x8 {
+        let mut v = self.0;
+        for (a, b) in v.iter_mut().zip(&rhs.0) {
+            *a /= b;
+        }
+        F32x8(v)
+    }
+
+    /// Lanewise `|x|` (sign-bit clear; `|-0.0| = 0.0`, `|NaN| = NaN`).
+    #[inline]
+    pub fn abs(self) -> F32x8 {
+        let mut v = self.0;
+        for a in v.iter_mut() {
+            *a = a.abs();
+        }
+        F32x8(v)
+    }
+
+    /// Lanewise IEEE `f32::max` (NaN-ignoring on either side, like the
+    /// scalar kernels' `fold(…, f32::max)`).
+    #[inline]
+    pub fn max(self, rhs: F32x8) -> F32x8 {
+        let mut v = self.0;
+        for (a, b) in v.iter_mut().zip(&rhs.0) {
+            *a = a.max(*b);
+        }
+        F32x8(v)
+    }
+
+    /// Horizontal max over the lanes, seeded with `seed` (ascending lane
+    /// order, `f32::max` at every step — associative + commutative, so
+    /// this equals any scalar max-fold over the same values).
+    #[inline]
+    pub fn hmax(self, seed: f32) -> f32 {
+        self.0.iter().fold(seed, |m, &x| m.max(x))
+    }
+
+    /// Horizontal sum in a **fixed pairwise tree**
+    /// (`((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))`-shaped): deterministic,
+    /// but a different rounding order than a sequential fold — only
+    /// [`ReductionOrder::Lanes`] kernels may use it.
+    #[inline]
+    pub fn hsum(self) -> f32 {
+        let v = self.0;
+        let a = [v[0] + v[4], v[1] + v[5], v[2] + v[6], v[3] + v[7]];
+        let b = [a[0] + a[2], a[1] + a[3]];
+        b[0] + b[1]
+    }
+
+    /// The lanes as an array.
+    #[inline]
+    pub fn to_array(self) -> [f32; LANES] {
+        self.0
+    }
+}
+
+/// Eight i64 accumulator lanes for the predictor's integer score sums
+/// (DLZS/SLZS/low-bit all accumulate exactly in i64, so lane-splitting is
+/// unconditionally bit-identical — integer addition is associative).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(align(32))]
+pub struct I64x8(pub [i64; LANES]);
+
+impl I64x8 {
+    /// All lanes zero.
+    #[inline]
+    pub fn zero() -> I64x8 {
+        I64x8([0; LANES])
+    }
+
+    /// Lanewise `self + rhs`.
+    #[inline]
+    pub fn add(self, rhs: I64x8) -> I64x8 {
+        let mut v = self.0;
+        for (a, b) in v.iter_mut().zip(&rhs.0) {
+            *a += b;
+        }
+        I64x8(v)
+    }
+
+    /// Exact horizontal sum (order-free: integer addition).
+    #[inline]
+    pub fn hsum(self) -> i64 {
+        self.0.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn active_path_tracks_the_feature() {
+        let want = if cfg!(feature = "simd") { KernelPath::Lanes } else { KernelPath::Scalar };
+        assert_eq!(KernelPath::active(), want);
+    }
+
+    #[test]
+    fn reduction_order_defaults_to_strict() {
+        assert_eq!(ReductionOrder::default(), ReductionOrder::Strict);
+    }
+
+    #[test]
+    fn elementwise_ops_match_scalar_bit_for_bit() {
+        let xs = [1.5f32, -2.25, 3.0e-7, 1.0e8, -0.0, 0.0, f32::MIN_POSITIVE, -1.0];
+        let ys = [0.1f32, 7.5, -3.0e7, 2.0e-8, 4.0, -0.0, 2.5, 1.0e-3];
+        let (a, b) = (F32x8(xs), F32x8(ys));
+        for i in 0..LANES {
+            assert_eq!(a.add(b).0[i].to_bits(), (xs[i] + ys[i]).to_bits());
+            assert_eq!(a.mul(b).0[i].to_bits(), (xs[i] * ys[i]).to_bits());
+            assert_eq!(a.max(b).0[i].to_bits(), xs[i].max(ys[i]).to_bits());
+            assert_eq!(
+                a.mul_add(b, F32x8::splat(0.5)).0[i].to_bits(),
+                xs[i].mul_add(ys[i], 0.5).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn load_or_fills_tail_with_identity() {
+        let xs = [1.0f32, 2.0, 3.0];
+        let v = F32x8::load_or(&xs, f32::NEG_INFINITY);
+        assert_eq!(&v.0[..3], &xs);
+        assert!(v.0[3..].iter().all(|&x| x == f32::NEG_INFINITY));
+        assert_eq!(v.hmax(f32::NEG_INFINITY), 3.0);
+    }
+
+    #[test]
+    fn hmax_equals_scalar_fold_any_seed() {
+        let xs = [0.5f32, -1.0, 7.25, 7.25, -0.0, 0.0, 3.5, 2.0];
+        let v = F32x8(xs);
+        for seed in [f32::NEG_INFINITY, 0.0, 100.0] {
+            assert_eq!(v.hmax(seed).to_bits(), xs.iter().fold(seed, |m, &x| m.max(x)).to_bits());
+        }
+    }
+
+    #[test]
+    fn hmax_ignores_nan_like_scalar_max_fold() {
+        let mut xs = [1.0f32; LANES];
+        xs[3] = f32::NAN;
+        // f32::max(m, NaN) == m — identical in lane and scalar folds.
+        assert_eq!(F32x8(xs).hmax(f32::NEG_INFINITY), 1.0);
+    }
+
+    #[test]
+    fn hsum_is_the_documented_pairwise_tree() {
+        let xs = [1.0f32, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+        let v = F32x8(xs);
+        let want = ((xs[0] + xs[4]) + (xs[2] + xs[6])) + ((xs[1] + xs[5]) + (xs[3] + xs[7]));
+        assert_eq!(v.hsum().to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn i64_lane_sum_is_exact() {
+        let a = I64x8([1, -2, 3, -4, 5, -6, 7, -8]);
+        let b = I64x8([10, 20, 30, 40, 50, 60, 70, 80]);
+        assert_eq!(a.add(b).hsum(), (1 - 2 + 3 - 4 + 5 - 6 + 7 - 8) + 360);
+    }
+
+    #[test]
+    fn store_roundtrips() {
+        let xs = [9.0f32, 8.0, 7.0, 6.0, 5.0, 4.0, 3.0, 2.0];
+        let mut out = [0.0f32; LANES];
+        F32x8(xs).store(&mut out);
+        assert_eq!(out, xs);
+    }
+}

@@ -8,13 +8,20 @@
 //!   the PSP pre-flipping model.
 //! * [`opcount`] — operation accounting and the equivalent-additions
 //!   normalization (α..ε = 1, 3, 1, 8, 25) from the paper's footnote 1.
+//! * [`lanes`] — the portable 8-wide SIMD layer the hot buffer-writing
+//!   kernels are spelled in ([`KernelPath`] dispatch, [`ReductionOrder`]
+//!   bit-identity contract; DESIGN.md §10).
 
 pub mod dlzs;
 pub mod fixed;
+pub mod lanes;
 pub mod lz;
 pub mod opcount;
 
 pub use dlzs::{dlzs_mul, slzs_mul, LzWeight};
-pub use fixed::{quantize_row, quantize_row_into, truncate_msb, IntBits, QuantMat};
+pub use fixed::{
+    quantize_row, quantize_row_into, quantize_row_into_with, truncate_msb, IntBits, QuantMat,
+};
+pub use lanes::{F32x8, I64x8, KernelPath, ReductionOrder, LANES};
 pub use lz::{lz_count, LzCode};
 pub use opcount::{EquivWeights, OpCounter, OpKind};

@@ -23,7 +23,10 @@ pub mod sufa;
 
 pub use flash2::{flash2_attention, Flash2Params};
 pub use ref_attn::{dense_attention, masked_attention_oracle};
-pub use sufa::{sufa_attention, sufa_attention_rows_into, SufaParams, SufaScratch, UpdateOrder};
+pub use sufa::{
+    sufa_attention, sufa_attention_rows_into, sufa_attention_rows_into_with, SufaParams,
+    SufaScratch, UpdateOrder,
+};
 
 use crate::tensor::Mat;
 

@@ -18,6 +18,7 @@
 //! numerically correct regardless of prediction quality.
 
 use super::{AttnInputs, Selection};
+use crate::arith::lanes::{F32x8, KernelPath, ReductionOrder, LANES};
 use crate::arith::{OpCounter, OpKind};
 use crate::tensor::Mat;
 use crate::util::ceil_div;
@@ -38,11 +39,19 @@ pub struct SufaParams {
     /// Tile size B_c over the selected keys.
     pub bc: usize,
     pub order: UpdateOrder,
+    /// How the q·k dot product over `d` may be reduced. `Strict` (the
+    /// default) keeps the sequential scalar order, so lane and scalar
+    /// kernel paths are bit-identical; `Lanes` splits the dot across 8
+    /// lanes (fixed pairwise combine — deterministic, ~1 ulp different,
+    /// not bit-comparable with `Strict` history). All other SU-FA
+    /// reductions (tile max, `l`, rescales) are order-safe or kept
+    /// sequential in both modes. See DESIGN.md §10.
+    pub reduction: ReductionOrder,
 }
 
 impl Default for SufaParams {
     fn default() -> Self {
-        SufaParams { bc: 16, order: UpdateOrder::Descend }
+        SufaParams { bc: 16, order: UpdateOrder::Descend, reduction: ReductionOrder::Strict }
     }
 }
 
@@ -92,6 +101,89 @@ impl SufaScratch {
     }
 }
 
+/// Sequential (scalar-order) q·k dot — the [`ReductionOrder::Strict`]
+/// reduction, identical on both kernel paths.
+#[inline]
+fn dot_strict(q: &[f32], k: &[f32]) -> f32 {
+    let mut dot = 0.0f32;
+    for (a, b) in q.iter().zip(k) {
+        dot += a * b;
+    }
+    dot
+}
+
+/// Lane-split q·k dot — the [`ReductionOrder::Lanes`] reduction: 8
+/// partial sums over `d` combined by the fixed pairwise tree
+/// ([`F32x8::hsum`]), sequential remainder appended last. Deterministic,
+/// but a different rounding order than [`dot_strict`].
+#[inline]
+fn dot_lanes(q: &[f32], k: &[f32]) -> f32 {
+    let mut acc = F32x8::zero();
+    let mut qc = q.chunks_exact(LANES);
+    let mut kc = k.chunks_exact(LANES);
+    for (a, b) in (&mut qc).zip(&mut kc) {
+        acc = acc.add(F32x8::load(a).mul(F32x8::load(b)));
+    }
+    let mut dot = acc.hsum();
+    for (a, b) in qc.remainder().iter().zip(kc.remainder()) {
+        dot += a * b;
+    }
+    dot
+}
+
+/// Lane spelling of the elementwise `acc[j] += a · x[j]` accumulator
+/// update — separate multiply then add per element, so bit-identical to
+/// the scalar loop.
+#[inline]
+fn axpy_lanes(acc: &mut [f32], a: f32, x: &[f32]) {
+    let av = F32x8::splat(a);
+    let n = acc.len() - acc.len() % LANES;
+    let (ac, at) = acc.split_at_mut(n);
+    for (ach, xch) in ac.chunks_exact_mut(LANES).zip(x[..n].chunks_exact(LANES)) {
+        F32x8::load(ach).add(av.mul(F32x8::load(xch))).store(ach);
+    }
+    for (o, &b) in at.iter_mut().zip(&x[n..]) {
+        *o += a * b;
+    }
+}
+
+/// Elementwise `xs[j] *= s`, dispatched on the kernel path (the SU-FA
+/// recovery/update rescale — bit-identical either way).
+#[inline]
+fn rescale(path: KernelPath, xs: &mut [f32], s: f32) {
+    match path {
+        KernelPath::Scalar => {
+            for x in xs {
+                *x *= s;
+            }
+        }
+        KernelPath::Lanes => {
+            let sv = F32x8::splat(s);
+            let n = xs.len() - xs.len() % LANES;
+            let (c, t) = xs.split_at_mut(n);
+            for ch in c.chunks_exact_mut(LANES) {
+                F32x8::load(ch).mul(sv).store(ch);
+            }
+            for x in t {
+                *x *= s;
+            }
+        }
+    }
+}
+
+/// Lane-split max over a slice seeded −∞ — `f32::max` is associative and
+/// commutative (and NaN-ignoring in the same way on every step), so this
+/// equals the scalar `fold(NEG_INFINITY, f32::max)` bit for bit.
+#[inline]
+fn max_lanes(xs: &[f32]) -> f32 {
+    let mut acc = F32x8::splat(f32::NEG_INFINITY);
+    let mut c = xs.chunks_exact(LANES);
+    for ch in &mut c {
+        acc = acc.max(F32x8::load(ch));
+    }
+    acc.max(F32x8::load_or(c.remainder(), f32::NEG_INFINITY)).hmax(f32::NEG_INFINITY)
+}
+
 /// Distinct keys selected by any row (the on-demand KV traffic unit),
 /// counted with reusable membership flags.
 fn union_key_count(rows: &[Vec<usize>], s: usize, needed: &mut Vec<bool>) -> usize {
@@ -126,7 +218,8 @@ pub fn sufa_attention(
 /// tile engine's allocation-free formal stage. This is the only SU-FA
 /// kernel (the allocating entry point wraps it), so buffered and fresh
 /// results — outputs, stalls and op accounting — are identical by
-/// construction. Returns the stall count.
+/// construction. Returns the stall count. Dispatches on the `simd`
+/// cargo feature ([`KernelPath::active`]).
 pub fn sufa_attention_rows_into(
     inp: &AttnInputs,
     rows: &[Vec<usize>],
@@ -134,6 +227,34 @@ pub fn sufa_attention_rows_into(
     c: &mut OpCounter,
     scratch: &mut SufaScratch,
     out: &mut Mat,
+) -> u64 {
+    sufa_attention_rows_into_with(inp, rows, p, c, scratch, out, KernelPath::active())
+}
+
+/// [`sufa_attention_rows_into`] with an explicit kernel path, for
+/// benches and parity tests.
+///
+/// Bit-identity under [`ReductionOrder::Strict`]: the q·k dot stays the
+/// sequential [`dot_strict`] on **both** paths (a lane-split f32 sum
+/// would reorder roundings), while everything the lane path does
+/// vectorize — the tile max ([`max_lanes`], associative/commutative
+/// `f32::max`), the `exp`-weighted accumulator update ([`axpy_lanes`]),
+/// the recovery rescales ([`rescale`]) and the final `acc · (1/l)` — is
+/// either order-free or elementwise with unchanged per-element
+/// operations. `l` accumulation stays sequential in every mode. Under
+/// [`ReductionOrder::Lanes`] the dot switches to [`dot_lanes`] *on both
+/// paths*, so path parity holds per reduction mode; only
+/// Strict-vs-Lanes results differ (by reduction order, ~1 ulp). Stall
+/// detection compares maxima that are bit-equal across paths, so stall
+/// counts and op accounting never diverge.
+pub fn sufa_attention_rows_into_with(
+    inp: &AttnInputs,
+    rows: &[Vec<usize>],
+    p: &SufaParams,
+    c: &mut OpCounter,
+    scratch: &mut SufaScratch,
+    out: &mut Mat,
+    path: KernelPath,
 ) -> u64 {
     let (t, s, d) = (inp.t(), inp.s(), inp.d());
     assert_eq!(rows.len(), t);
@@ -150,6 +271,10 @@ pub fn sufa_attention_rows_into(
 
     out.reset(t, d);
     let mut stalls = 0u64;
+    let tile_max_of = |xs: &[f32]| match path {
+        KernelPath::Scalar => xs.iter().copied().fold(f32::NEG_INFINITY, f32::max),
+        KernelPath::Lanes => max_lanes(xs),
+    };
 
     for i in 0..t {
         let keys = &rows[i];
@@ -184,10 +309,10 @@ pub fn sufa_attention_rows_into(
             let scores = &mut scratch.scores;
             for (w, slot) in scores.iter_mut().enumerate() {
                 let j = key_at(lo + w);
-                let mut dot = 0.0f32;
-                for pth in 0..d {
-                    dot += inp.q.at(i, pth) * inp.k.at(j, pth);
-                }
+                let dot = match p.reduction {
+                    ReductionOrder::Strict => dot_strict(inp.q.row(i), inp.k.row(j)),
+                    ReductionOrder::Lanes => dot_lanes(inp.q.row(i), inp.k.row(j)),
+                };
                 *slot = dot * inp.scale;
             }
             c.tally(OpKind::Mul, (width * d + width) as u64);
@@ -197,22 +322,20 @@ pub fn sufa_attention_rows_into(
                 UpdateOrder::Descend => {
                     if tile == 0 {
                         // The ONLY max reduction of the whole row.
-                        m = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                        m = tile_max_of(scores);
                         c.tally(OpKind::Cmp, (width - 1) as u64);
                     }
                     // Misprediction recovery: a score above m would overflow
                     // exp — detected for free by the exponent sign, repaired
                     // with one FA-style rescale (a stall).
-                    let tile_max = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                    let tile_max = tile_max_of(scores);
                     if tile_max > m {
                         stalls += 1;
                         let corr = (m - tile_max).exp();
                         c.tally(OpKind::Exp, 1);
                         c.tally(OpKind::Mul, (d + 1) as u64);
                         l *= corr;
-                        for x in acc.iter_mut() {
-                            *x *= corr;
-                        }
+                        rescale(path, acc, corr);
                         m = tile_max;
                     }
                 }
@@ -220,7 +343,7 @@ pub fn sufa_attention_rows_into(
                     // Sorted guarantee: this tile holds the new max — no
                     // comparisons, but l and the accumulator must rescale
                     // (the extra multiplications of Fig. 11b).
-                    let tile_max = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                    let tile_max = tile_max_of(scores);
                     c.tally(OpKind::Cmp, (width - 1) as u64); // in-tile only
                     let m_new = if tile_max > m { tile_max } else { m };
                     if tile > 0 {
@@ -229,9 +352,7 @@ pub fn sufa_attention_rows_into(
                         c.tally(OpKind::Exp, 1);
                         c.tally(OpKind::Mul, (d + 1) as u64);
                         l *= corr;
-                        for x in acc.iter_mut() {
-                            *x *= corr;
-                        }
+                        rescale(path, acc, corr);
                     }
                     m = m_new;
                 }
@@ -244,9 +365,14 @@ pub fn sufa_attention_rows_into(
             for (w, &score) in scores.iter().enumerate() {
                 let j = key_at(lo + w);
                 let prob = (score - m).exp();
-                l += prob;
-                for pth in 0..d {
-                    acc[pth] += prob * inp.v.at(j, pth);
+                l += prob; // sequential in every mode (tiny, order-bearing)
+                match path {
+                    KernelPath::Scalar => {
+                        for (o, &b) in acc.iter_mut().zip(inp.v.row(j)) {
+                            *o += prob * b;
+                        }
+                    }
+                    KernelPath::Lanes => axpy_lanes(acc, prob, inp.v.row(j)),
                 }
             }
             c.tally(OpKind::Add, width as u64); // l accumulation
@@ -257,8 +383,24 @@ pub fn sufa_attention_rows_into(
         c.tally(OpKind::Div, 1);
         c.tally(OpKind::Mul, d as u64);
         let inv = 1.0 / l;
-        for pth in 0..d {
-            *out.at_mut(i, pth) = acc[pth] * inv;
+        let orow = out.row_mut(i);
+        match path {
+            KernelPath::Scalar => {
+                for (o, &a) in orow.iter_mut().zip(acc.iter()) {
+                    *o = a * inv;
+                }
+            }
+            KernelPath::Lanes => {
+                let n = d - d % LANES;
+                let iv = F32x8::splat(inv);
+                for (oc, ac) in orow[..n].chunks_exact_mut(LANES).zip(acc[..n].chunks_exact(LANES))
+                {
+                    F32x8::load(ac).mul(iv).store(oc);
+                }
+                for (o, &a) in orow[n..].iter_mut().zip(&acc[n..]) {
+                    *o = a * inv;
+                }
+            }
         }
     }
 
@@ -327,8 +469,10 @@ mod tests {
         let sel = sort_selection_by_true_scores(&inp, &Selection::full(5, 32));
         let mut c1 = OpCounter::new();
         let mut c2 = OpCounter::new();
-        let d = sufa_attention(&inp, &sel, &SufaParams { bc: 8, order: UpdateOrder::Descend }, &mut c1);
-        let a = sufa_attention(&inp, &sel, &SufaParams { bc: 8, order: UpdateOrder::Ascend }, &mut c2);
+        let pd = SufaParams { bc: 8, order: UpdateOrder::Descend, ..Default::default() };
+        let pa = SufaParams { bc: 8, order: UpdateOrder::Ascend, ..Default::default() };
+        let d = sufa_attention(&inp, &sel, &pd, &mut c1);
+        let a = sufa_attention(&inp, &sel, &pa, &mut c2);
         assert!(d.out.max_abs_diff(&a.out) < 1e-4);
     }
 
@@ -340,8 +484,10 @@ mod tests {
         let sel = sort_selection_by_true_scores(&inp, &Selection::full(8, 64));
         let mut cd = OpCounter::new();
         let mut ca = OpCounter::new();
-        sufa_attention(&inp, &sel, &SufaParams { bc: 8, order: UpdateOrder::Descend }, &mut cd);
-        sufa_attention(&inp, &sel, &SufaParams { bc: 8, order: UpdateOrder::Ascend }, &mut ca);
+        let pd = SufaParams { bc: 8, order: UpdateOrder::Descend, ..Default::default() };
+        let pa = SufaParams { bc: 8, order: UpdateOrder::Ascend, ..Default::default() };
+        sufa_attention(&inp, &sel, &pd, &mut cd);
+        sufa_attention(&inp, &sel, &pa, &mut ca);
         assert!(ca.mul > cd.mul);
         assert!(ca.exp > cd.exp);
         // Descend does exactly one max reduction per row; ascend does one
@@ -355,7 +501,8 @@ mod tests {
         let inp = AttnInputs::new(&q, &k, &v);
         let sel = sort_selection_by_true_scores(&inp, &Selection::full(8, 128));
         let mut cs = OpCounter::new();
-        sufa_attention(&inp, &sel, &SufaParams { bc: 16, order: UpdateOrder::Descend }, &mut cs);
+        let ps = SufaParams { bc: 16, order: UpdateOrder::Descend, ..Default::default() };
+        sufa_attention(&inp, &sel, &ps, &mut cs);
         let mut cf = OpCounter::new();
         crate::attention::flash2::flash2_attention(
             &inp,
@@ -391,7 +538,8 @@ mod tests {
         let reversed =
             Selection { rows: sorted.rows.iter().map(|r| r.iter().rev().copied().collect()).collect() };
         let mut c = OpCounter::new();
-        let r = sufa_attention(&inp, &reversed, &SufaParams { bc: 8, order: UpdateOrder::Descend }, &mut c);
+        let pd = SufaParams { bc: 8, order: UpdateOrder::Descend, ..Default::default() };
+        let r = sufa_attention(&inp, &reversed, &pd, &mut c);
         let mut dc = OpCounter::new();
         let dense = dense_attention(&inp, usize::MAX, &mut dc);
         assert!(r.stalls > 0, "reversed order must trigger recoveries");
@@ -413,7 +561,7 @@ mod tests {
         let mut out = Mat::randn(3, 3, 1.0, &mut Rng::new(2)); // dirty, wrong shape
         for sel in [&sorted, &reversed] {
             for order in [UpdateOrder::Descend, UpdateOrder::Ascend] {
-                let p = SufaParams { bc: 8, order };
+                let p = SufaParams { bc: 8, order, ..Default::default() };
                 let mut cw = OpCounter::new();
                 let want = sufa_attention(&inp, sel, &p, &mut cw);
                 let mut cg = OpCounter::new();
@@ -424,6 +572,92 @@ mod tests {
                 assert_eq!(cg, cw, "{order:?} op drift");
             }
         }
+    }
+
+    #[test]
+    fn lanes_path_is_bit_identical_to_scalar_in_strict() {
+        // d = 10 exercises remainder lanes in the axpy/rescale/final
+        // scale; the reversed selection forces stall recoveries through
+        // the lane rescale path. Outputs, stalls and ops must all match.
+        let (q, k, v) = inputs(5, 33, 10, 21);
+        let inp = AttnInputs::new(&q, &k, &v);
+        let sorted = sort_selection_by_true_scores(&inp, &Selection::full(5, 33));
+        let reversed = Selection {
+            rows: sorted.rows.iter().map(|r| r.iter().rev().copied().collect()).collect(),
+        };
+        let mut s1 = SufaScratch::default();
+        let mut s2 = SufaScratch::default();
+        let mut o1 = Mat::zeros(0, 0);
+        let mut o2 = Mat::randn(2, 2, 1.0, &mut Rng::new(4)); // dirty
+        for sel in [&sorted, &reversed] {
+            for order in [UpdateOrder::Descend, UpdateOrder::Ascend] {
+                let p = SufaParams { bc: 8, order, ..Default::default() };
+                let mut c1 = OpCounter::new();
+                let mut c2 = OpCounter::new();
+                let st1 = sufa_attention_rows_into_with(
+                    &inp,
+                    &sel.rows,
+                    &p,
+                    &mut c1,
+                    &mut s1,
+                    &mut o1,
+                    KernelPath::Scalar,
+                );
+                let st2 = sufa_attention_rows_into_with(
+                    &inp,
+                    &sel.rows,
+                    &p,
+                    &mut c2,
+                    &mut s2,
+                    &mut o2,
+                    KernelPath::Lanes,
+                );
+                assert_eq!(o1.max_abs_diff(&o2), 0.0, "{order:?} output drift");
+                assert_eq!(st1, st2, "{order:?} stall drift");
+                assert_eq!(c1, c2, "{order:?} op drift");
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_reduction_is_path_deterministic_and_close_to_strict() {
+        let (q, k, v) = inputs(4, 24, 12, 22);
+        let inp = AttnInputs::new(&q, &k, &v);
+        let sel = sort_selection_by_true_scores(&inp, &Selection::full(4, 24));
+        let mut c = OpCounter::new();
+        let strict = sufa_attention(&inp, &sel, &SufaParams::default(), &mut c);
+        // In Lanes reduction mode the reordered dot is the same fixed
+        // pairwise tree on both kernel paths — path parity must still be
+        // exact; only Strict-vs-Lanes may differ (by rounding only).
+        let lanes = SufaParams { reduction: ReductionOrder::Lanes, ..Default::default() };
+        let mut s1 = SufaScratch::default();
+        let mut o1 = Mat::zeros(0, 0);
+        let mut o2 = Mat::zeros(0, 0);
+        let mut c1 = OpCounter::new();
+        let mut c2 = OpCounter::new();
+        sufa_attention_rows_into_with(
+            &inp,
+            &sel.rows,
+            &lanes,
+            &mut c1,
+            &mut s1,
+            &mut o1,
+            KernelPath::Scalar,
+        );
+        sufa_attention_rows_into_with(
+            &inp,
+            &sel.rows,
+            &lanes,
+            &mut c2,
+            &mut s1,
+            &mut o2,
+            KernelPath::Lanes,
+        );
+        assert_eq!(o1.max_abs_diff(&o2), 0.0, "Lanes reduction must be path-deterministic");
+        assert!(
+            o1.max_abs_diff(&strict.out) < 1e-5,
+            "Lanes vs Strict should differ by rounding only"
+        );
     }
 
     #[test]

@@ -1,0 +1,326 @@
+//! `star bench kernels` — microbenchmarks for the lane-spelled hot
+//! kernels (DESIGN.md §10): cache-blocked matmul, DLZS block scoring,
+//! row quantization, top-k extraction and the SU-FA inner loops, each
+//! timed in both spellings ([`KernelPath::Scalar`] vs
+//! [`KernelPath::Lanes`]) in one binary.
+//!
+//! Every kernel is re-checked for bit identity between the two
+//! spellings on every run — a speedup measured against a diverged
+//! baseline is meaningless, so parity failure fails the bench, exactly
+//! like `spatial-exec`'s sharded-vs-single-core parity gate. Timings
+//! are best-of-[`REPS`] wall clock; shapes shrink under
+//! `debug_assertions` so `cargo test` stays fast while `--release`
+//! runs paper-relevant sizes (d = 128 heads, 1k–4k key contexts).
+
+use crate::arith::{quantize_row_into_with, IntBits, KernelPath, OpCounter};
+use crate::attention::{sufa_attention_rows_into_with, AttnInputs, SufaParams, SufaScratch};
+use crate::sparsity::{vanilla_topk_into_with, PredictScheme, Predictor, TopkScratch};
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// Timing repetitions per (kernel, path); the minimum is reported so a
+/// stray scheduler preemption cannot masquerade as a slowdown.
+const REPS: usize = 5;
+
+/// One kernel's scalar-vs-lanes measurement.
+#[derive(Clone, Debug)]
+pub struct KernelBench {
+    pub kernel: &'static str,
+    pub shape: String,
+    /// Primitive-op estimate for the workload (MACs count as 2).
+    pub flops: f64,
+    pub scalar_s: f64,
+    pub lanes_s: f64,
+    /// Both spellings produced bit-identical buffers (and identical op
+    /// tallies where the kernel meters them).
+    pub parity_ok: bool,
+}
+
+impl KernelBench {
+    pub fn scalar_gflops(&self) -> f64 {
+        self.flops / self.scalar_s / 1e9
+    }
+
+    pub fn lanes_gflops(&self) -> f64 {
+        self.flops / self.lanes_s / 1e9
+    }
+
+    pub fn speedup(&self) -> f64 {
+        self.scalar_s / self.lanes_s
+    }
+}
+
+/// Best-of-[`REPS`] wall-clock seconds for `f` (after one warmup call).
+fn time_best(mut f: impl FnMut()) -> f64 {
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..REPS {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn fill(rng: &mut Rng, rows: usize, cols: usize) -> Mat {
+    Mat::from_fn(rows, cols, |_, _| rng.range_f32(-1.0, 1.0))
+}
+
+/// Benchmark shapes: paper-relevant in release, shrunk in debug so the
+/// in-tree schema test doesn't dominate `cargo test` time.
+fn dims() -> (usize, usize, usize, usize, usize) {
+    // (matmul m/k/n share these) t, d, s, topk_len, topk_k
+    if cfg!(debug_assertions) {
+        (24, 32, 160, 512, 48)
+    } else {
+        (64, 128, 1024, 4096, 256)
+    }
+}
+
+fn bench_matmul(rng: &mut Rng) -> KernelBench {
+    let (t, d, s, _, _) = dims();
+    // KV-gen shape: X[t, d] × W[d, s-wide] column block.
+    let (m, k, n) = (t, d, s);
+    let a = fill(rng, m, k);
+    let b = fill(rng, k, n);
+    let mut out_s = Mat::zeros(1, 1);
+    let mut out_l = Mat::zeros(1, 1);
+    let scalar_s = time_best(|| a.matmul_cols_into_with(&b, 0, n, &mut out_s, KernelPath::Scalar));
+    let lanes_s = time_best(|| a.matmul_cols_into_with(&b, 0, n, &mut out_l, KernelPath::Lanes));
+    let parity_ok = mats_bit_eq(&out_s, &out_l);
+    KernelBench {
+        kernel: "matmul_cols_into",
+        shape: format!("{m}x{k}x{n}"),
+        flops: 2.0 * (m * k * n) as f64,
+        scalar_s,
+        lanes_s,
+        parity_ok,
+    }
+}
+
+fn bench_score(rng: &mut Rng) -> KernelBench {
+    let (t, d, s, _, _) = dims();
+    let q = fill(rng, t, d);
+    let k = fill(rng, s, d);
+    let mut c = OpCounter::default();
+    let prep = Predictor::new(PredictScheme::Dlzs, 7).prepare(&q, &k, &mut c);
+    let mut out_s = Mat::zeros(1, 1);
+    let mut out_l = Mat::zeros(1, 1);
+    let mut ops_s = OpCounter::default();
+    let mut ops_l = OpCounter::default();
+    let scalar_s = time_best(|| {
+        prep.score_block_into_with(0, t, 0, s, &mut ops_s, &mut out_s, KernelPath::Scalar)
+    });
+    let lanes_s = time_best(|| {
+        prep.score_block_into_with(0, t, 0, s, &mut ops_l, &mut out_l, KernelPath::Lanes)
+    });
+    let parity_ok = mats_bit_eq(&out_s, &out_l);
+    KernelBench {
+        kernel: "score_block_into",
+        shape: format!("{t}x{s} d={d} dlzs"),
+        flops: 2.0 * (t * s * d) as f64,
+        scalar_s,
+        lanes_s,
+        parity_ok,
+    }
+}
+
+fn bench_quantize(rng: &mut Rng) -> KernelBench {
+    let (t, _, _, len, _) = dims();
+    let rows: Vec<Vec<f32>> = (0..t)
+        .map(|_| (0..len).map(|_| rng.range_f32(-4.0, 4.0)).collect())
+        .collect();
+    let mut q_s: Vec<i32> = Vec::new();
+    let mut q_l: Vec<i32> = Vec::new();
+    let mut scales_s = Vec::new();
+    let mut scales_l = Vec::new();
+    let scalar_s = time_best(|| {
+        scales_s.clear();
+        for row in &rows {
+            scales_s.push(quantize_row_into_with(row, IntBits::Int8, &mut q_s, KernelPath::Scalar));
+        }
+    });
+    let lanes_s = time_best(|| {
+        scales_l.clear();
+        for row in &rows {
+            scales_l.push(quantize_row_into_with(row, IntBits::Int8, &mut q_l, KernelPath::Lanes));
+        }
+    });
+    // The timing loops end on the same final row, so comparing the last
+    // quantized buffer plus every per-row scale covers both phases
+    // (amax fold and the divide/round fill).
+    let parity_ok = q_s == q_l
+        && scales_s.len() == scales_l.len()
+        && scales_s
+            .iter()
+            .zip(&scales_l)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+    KernelBench {
+        kernel: "quantize_row_into",
+        shape: format!("{t} rows x {len} int8"),
+        // amax + div + round + clamp ≈ 4 primitive ops per element.
+        flops: 4.0 * (t * len) as f64,
+        scalar_s,
+        lanes_s,
+        parity_ok,
+    }
+}
+
+fn bench_topk(rng: &mut Rng) -> KernelBench {
+    let (_, _, _, len, k) = dims();
+    let row: Vec<f32> = (0..len).map(|_| rng.range_f32(-8.0, 8.0)).collect();
+    let mut scratch = TopkScratch::default();
+    let mut sel_s = Vec::new();
+    let mut sel_l = Vec::new();
+    let mut ops_s = OpCounter::default();
+    let mut ops_l = OpCounter::default();
+    let scalar_s = time_best(|| {
+        vanilla_topk_into_with(&row, k, &mut ops_s, &mut scratch, &mut sel_s, KernelPath::Scalar)
+    });
+    let lanes_s = time_best(|| {
+        vanilla_topk_into_with(&row, k, &mut ops_l, &mut scratch, &mut sel_l, KernelPath::Lanes)
+    });
+    let parity_ok = sel_s == sel_l;
+    KernelBench {
+        kernel: "vanilla_topk_into",
+        shape: format!("len={len} k={k}"),
+        // k passes, one comparison per untaken candidate per pass.
+        flops: (k * len) as f64,
+        scalar_s,
+        lanes_s,
+        parity_ok,
+    }
+}
+
+fn bench_sufa(rng: &mut Rng) -> KernelBench {
+    let (t, d, s, _, k) = dims();
+    let q = fill(rng, t, d);
+    let km = fill(rng, s, d);
+    let v = fill(rng, s, d);
+    let inp = AttnInputs::new(&q, &km, &v);
+    let rows: Vec<Vec<usize>> = (0..t)
+        .map(|_| {
+            let mut sel = rng.sample_indices(s, k.min(s));
+            sel.sort_unstable();
+            sel
+        })
+        .collect();
+    let p = SufaParams::default();
+    let mut scratch = SufaScratch::default();
+    let mut out_s = Mat::zeros(1, 1);
+    let mut out_l = Mat::zeros(1, 1);
+    let mut ops_s = OpCounter::default();
+    let mut ops_l = OpCounter::default();
+    let mut stalls = [0u64; 2];
+    let scalar_s = time_best(|| {
+        stalls[0] = sufa_attention_rows_into_with(
+            &inp,
+            &rows,
+            &p,
+            &mut ops_s,
+            &mut scratch,
+            &mut out_s,
+            KernelPath::Scalar,
+        );
+    });
+    let lanes_s = time_best(|| {
+        stalls[1] = sufa_attention_rows_into_with(
+            &inp,
+            &rows,
+            &p,
+            &mut ops_l,
+            &mut scratch,
+            &mut out_l,
+            KernelPath::Lanes,
+        );
+    });
+    let parity_ok = mats_bit_eq(&out_s, &out_l) && stalls[0] == stalls[1];
+    let nnz: usize = rows.iter().map(|r| r.len()).sum();
+    KernelBench {
+        kernel: "sufa_attention_rows_into",
+        shape: format!("t={t} s={s} d={d} k={k}"),
+        // Per selected pair: q·k dot (2d) + exp-weighted axpy (2d).
+        flops: 4.0 * (nnz * d) as f64,
+        scalar_s,
+        lanes_s,
+        parity_ok,
+    }
+}
+
+fn mats_bit_eq(a: &Mat, b: &Mat) -> bool {
+    a.rows == b.rows
+        && a.cols == b.cols
+        && a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Run every kernel microbenchmark; prints the scalar-vs-lanes table.
+pub fn kernel_benches() -> Vec<KernelBench> {
+    let mut rng = Rng::new(0x5747_4152); // "STAR"
+    let rows = vec![
+        bench_matmul(&mut rng),
+        bench_score(&mut rng),
+        bench_quantize(&mut rng),
+        bench_topk(&mut rng),
+        bench_sufa(&mut rng),
+    ];
+    super::header(&format!(
+        "kernel microbenchmarks (active path: {:?}, best of {REPS})",
+        KernelPath::active()
+    ));
+    super::row(
+        "kernel",
+        &[
+            format!("{:>22}", "shape"),
+            format!("{:>10}", "scalar GF/s"),
+            format!("{:>10}", "lanes GF/s"),
+            format!("{:>8}", "speedup"),
+            format!("{:>6}", "parity"),
+        ],
+    );
+    for r in &rows {
+        super::row(
+            r.kernel,
+            &[
+                format!("{:>22}", r.shape),
+                super::f(r.scalar_gflops()),
+                super::f(r.lanes_gflops()),
+                format!("{:>8.2}x", r.speedup()),
+                format!("{:>6}", if r.parity_ok { "ok" } else { "FAIL" }),
+            ],
+        );
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn kernels_bench_writes_schema_and_holds_parity() {
+        crate::bench::run("kernels").unwrap();
+        let path = crate::bench::trajectory::out_dir().join("BENCH_kernels.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("kernels"));
+        let cols: Vec<String> = j
+            .get("columns")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|c| c.as_str().unwrap().to_string())
+            .collect();
+        for want in ["kernel", "shape", "flops", "scalar_gflops", "lanes_gflops", "speedup"] {
+            assert!(cols.contains(&want.to_string()), "missing column {want}");
+        }
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 5, "one row per hot kernel");
+        // run() already hard-fails on parity loss; double-check the
+        // emitted numbers are finite and positive.
+        let gf = cols.iter().position(|c| c == "lanes_gflops").unwrap();
+        for r in rows {
+            let v = r.as_arr().unwrap()[gf].as_f64().unwrap();
+            assert!(v.is_finite() && v > 0.0, "bogus lanes_gflops {v}");
+        }
+    }
+}

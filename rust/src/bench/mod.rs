@@ -26,6 +26,7 @@
 //! | Fig. 24 (spatial ablation/lateral) | [`spatial_eval::fig24_spatial`] |
 //! | Decode throughput (KV-cache) | [`decode::decode_throughput`] |
 //! | Spatial-exec (measured sharding) | [`spatial_exec::spatial_exec`] |
+//! | Kernel layer (scalar vs lanes) | [`kernels::kernel_benches`] |
 //!
 //! Every subcommand also writes its numbers to `BENCH_<name>.json` at
 //! the repo root ([`trajectory`]), so the perf trajectory is tracked
@@ -34,6 +35,7 @@
 pub mod algorithm;
 pub mod arch;
 pub mod decode;
+pub mod kernels;
 pub mod motivation;
 pub mod spatial_eval;
 pub mod spatial_exec;
@@ -65,12 +67,12 @@ pub(crate) fn f(x: f64) -> String {
     }
 }
 
-/// All bench names, in paper order (plus the serving-side `decode` and
-/// the measured-sharding `spatial-exec`).
-pub const ALL: [&str; 20] = [
+/// All bench names, in paper order (plus the serving-side `decode`, the
+/// measured-sharding `spatial-exec` and the kernel-layer `kernels`).
+pub const ALL: [&str; 21] = [
     "fig1", "fig3", "fig4", "fig5", "fig7", "fig9", "fig11", "fig16", "fig17", "fig18",
     "table2", "fig19", "fig20", "fig21", "fig22", "fig23", "table3", "fig24", "decode",
-    "spatial-exec",
+    "spatial-exec", "kernels",
 ];
 
 fn n(x: f64) -> Json {
@@ -331,6 +333,33 @@ pub fn run(name: &str) -> Result<()> {
             let r = spatial_exec::spatial_exec();
             anyhow::ensure!(r.parity_ok, "spatial-exec: sharded output diverged from single-core");
             spatial_exec::payload(&r)
+        }
+        "kernels" => {
+            let rows = kernels::kernel_benches();
+            for r in &rows {
+                anyhow::ensure!(
+                    r.parity_ok,
+                    "kernels: {} lanes spelling diverged from scalar ({})",
+                    r.kernel,
+                    r.shape
+                );
+            }
+            table(
+                name,
+                &["kernel", "shape", "flops", "scalar_gflops", "lanes_gflops", "speedup"],
+                rows.iter()
+                    .map(|r| {
+                        vec![
+                            Json::str(r.kernel),
+                            Json::str(&r.shape),
+                            n(r.flops),
+                            n(r.scalar_gflops()),
+                            n(r.lanes_gflops()),
+                            n(r.speedup()),
+                        ]
+                    })
+                    .collect(),
+            )
         }
         "all" => {
             for bench in ALL {

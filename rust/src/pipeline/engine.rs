@@ -582,11 +582,11 @@ pub(crate) fn formal_compute_rows_into(
             } else {
                 UpdateOrder::Ascend
             };
-            let p = SufaParams { bc: cfg.bc, order };
+            let p = SufaParams { bc: cfg.bc, order, ..Default::default() };
             sufa_attention_rows_into(inp, rows, &p, c, &mut scratch.sufa, out)
         }
         FormalKind::Flash2 => {
-            let p = SufaParams { bc: cfg.bc, order: UpdateOrder::Ascend };
+            let p = SufaParams { bc: cfg.bc, order: UpdateOrder::Ascend, ..Default::default() };
             let stalls = sufa_attention_rows_into(inp, rows, &p, c, &mut scratch.sufa, out);
             c.tally(OpKind::Cmp, fa2_cmp);
             stalls
@@ -1046,13 +1046,30 @@ impl TileExecutor<'_> {
     }
 }
 
-/// Run `ntiles` independent tile jobs, strided across worker threads
+/// Chunks each worker claims per grab from the shared tile cursor in
+/// [`parallel_tiles_pooled`]: `ntiles / (workers · TILE_CHUNKS_PER_GRAB)`
+/// tiles, floored at 1. Four average grabs per worker keeps the
+/// `fetch_add` contention negligible while letting fast workers absorb
+/// the skew dynamic sparsity produces (a tile whose rows selected many
+/// keys costs a multiple of a sparse one).
+const TILE_CHUNKS_PER_GRAB: usize = 4;
+
+/// Run `ntiles` independent tile jobs across worker threads
 /// (`threads == 0` picks `available_parallelism`) under
 /// `std::thread::scope`, each worker driving one pooled [`TileWorkspace`]
-/// for its whole stripe. Results come back unordered — callers sort by
-/// their tile key; determinism is the jobs' responsibility (all callers'
-/// jobs are pure functions of the tile index). Returns the results plus
-/// the metered hot-path allocation total and the peak workspace bytes.
+/// for everything it claims.
+///
+/// Scheduling is **work-stealing** over a shared atomic cursor: workers
+/// repeatedly `fetch_add` a chunk of tile indices and run them, so a
+/// worker that drew cheap tiles comes back for more instead of idling
+/// behind a static stripe — exactly the skew profile dynamic sparsity
+/// produces. The cursor is a single `AtomicUsize` (no deque, no heap):
+/// claiming allocates nothing, preserving the zero-allocation hot-path
+/// contract the allocmeter enforces. Results come back unordered —
+/// callers sort by their tile key; *outputs* stay deterministic at every
+/// thread count because each job is a pure function of its tile index
+/// and each tile runs exactly once. Returns the results plus the metered
+/// hot-path allocation total and the peak workspace bytes.
 pub(crate) fn parallel_tiles_pooled<T: Send>(
     ntiles: usize,
     threads: usize,
@@ -1060,6 +1077,7 @@ pub(crate) fn parallel_tiles_pooled<T: Send>(
     class: ShapeClass,
     job: impl Fn(&mut TileWorkspace, usize) -> T + Sync,
 ) -> (Vec<T>, u64, usize) {
+    use std::sync::atomic::{AtomicUsize, Ordering};
     if ntiles == 0 {
         return (Vec::new(), 0, 0);
     }
@@ -1077,16 +1095,25 @@ pub(crate) fn parallel_tiles_pooled<T: Send>(
         pool.checkin(ws);
         (outs, hot, bytes)
     } else {
+        let chunk = (ntiles / (workers * TILE_CHUNKS_PER_GRAB)).max(1);
+        let cursor = AtomicUsize::new(0);
         let per_worker: Vec<(Vec<T>, u64, usize)> = std::thread::scope(|scope| {
-            let job = &job;
+            let (job, cursor) = (&job, &cursor);
             let handles: Vec<_> = (0..workers)
                 .map(|w| {
                     scope.spawn(move || {
                         let mut ws = pool.checkout(class);
                         ws.spans.worker = w as u32;
                         ws.spans.session = 0;
-                        let outs: Vec<T> =
-                            (w..ntiles).step_by(workers).map(|ti| job(&mut ws, ti)).collect();
+                        let mut outs: Vec<T> = Vec::with_capacity(chunk);
+                        loop {
+                            let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                            if start >= ntiles {
+                                break;
+                            }
+                            let end = (start + chunk).min(ntiles);
+                            outs.extend((start..end).map(|ti| job(&mut ws, ti)));
+                        }
                         let (hot, bytes) = (ws.take_hot_allocs(), ws.capacity_bytes());
                         pool.checkin(ws);
                         (outs, hot, bytes)

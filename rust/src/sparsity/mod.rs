@@ -27,5 +27,5 @@ pub use predictor::{bits_for, PredictScheme, Predictor, PreparedPredict};
 pub use topk::{
     merge_topk_candidates, merge_topk_candidates_into, sads_geometry, sads_merge, sads_merge_into,
     sads_segment_winners, sads_segment_winners_scratch, sads_topk, sads_topk_into, vanilla_topk,
-    vanilla_topk_into, SadsParams, SadsStats, SegmentWinners, TopkScratch,
+    vanilla_topk_into, vanilla_topk_into_with, SadsParams, SadsStats, SegmentWinners, TopkScratch,
 };

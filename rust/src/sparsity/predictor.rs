@@ -12,6 +12,7 @@
 //! (4-bit MSB) multiply predictor (the ablation baseline of Fig. 18a).
 
 use crate::arith::dlzs::{dlzs_mul, slzs_mul};
+use crate::arith::lanes::{I64x8, KernelPath, LANES};
 use crate::arith::{IntBits, LzCode, OpCounter, OpKind, QuantMat};
 use crate::tensor::Mat;
 
@@ -237,7 +238,8 @@ impl PreparedPredict {
     /// buffer (which is [`Mat::reset`] to the block shape — no
     /// allocation once it has the capacity). This is the only scoring
     /// kernel; the allocating entry points wrap it, so buffered and
-    /// fresh estimates are bit-identical by construction.
+    /// fresh estimates are bit-identical by construction. Dispatches on
+    /// the `simd` cargo feature ([`KernelPath::active`]).
     pub fn score_block_into(
         &self,
         lo: usize,
@@ -247,23 +249,73 @@ impl PreparedPredict {
         c: &mut OpCounter,
         out: &mut Mat,
     ) {
+        self.score_block_into_with(lo, hi, key_lo, key_hi, c, out, KernelPath::active())
+    }
+
+    /// [`PreparedPredict::score_block_into`] with an explicit kernel
+    /// path, for benches and parity tests.
+    ///
+    /// Every scheme accumulates its per-element products **exactly in
+    /// i64**, and integer addition is associative — so the lane spelling
+    /// (8 independent accumulators over `d`, combined by an exact
+    /// horizontal sum, scalar remainder lanes) is unconditionally
+    /// bit-identical to the scalar one, NaN/∞ questions never arising
+    /// until the single final `as f32 * scale` both spellings share. Op
+    /// accounting is tallied per block before either loop and is
+    /// path-independent.
+    #[allow(clippy::too_many_arguments)]
+    pub fn score_block_into_with(
+        &self,
+        lo: usize,
+        hi: usize,
+        key_lo: usize,
+        key_hi: usize,
+        c: &mut OpCounter,
+        out: &mut Mat,
+        path: KernelPath,
+    ) {
         let d = self.d;
         assert!(lo <= hi && hi <= self.rows, "tile {lo}..{hi} out of range");
         assert!(key_lo <= key_hi && key_hi <= self.keys, "keys {key_lo}..{key_hi} out of range");
         let m = hi - lo;
         let n = key_hi - key_lo;
         out.reset(m, n);
+        // 8 independent i64 accumulators over d, exact combine, scalar tail.
+        let lane_dot = |term: &dyn Fn(usize) -> i64| -> i64 {
+            let full_d = d - d % LANES;
+            let mut acc = I64x8::zero();
+            for p0 in (0..full_d).step_by(LANES) {
+                let mut lane = [0i64; LANES];
+                for (l, v) in lane.iter_mut().enumerate() {
+                    *v = term(p0 + l);
+                }
+                acc = acc.add(I64x8(lane));
+            }
+            let mut sum = acc.hsum();
+            for p in full_d..d {
+                sum += term(p);
+            }
+            sum
+        };
         match &self.ops {
             PreparedOps::Dlzs { a_codes, qb } => {
                 // Per product: one shift, one add (accumulate).
                 c.tally(OpKind::Shift, (m * n * d) as u64);
                 c.tally(OpKind::Add, (m * n * d) as u64);
                 for i in 0..m {
+                    let arow = &a_codes[(lo + i) * d..(lo + i + 1) * d];
                     for j in 0..n {
-                        let mut acc = 0i64;
-                        for p in 0..d {
-                            acc += dlzs_mul(qb.at(key_lo + j, p), a_codes[(lo + i) * d + p]);
-                        }
+                        let brow = qb.row(key_lo + j);
+                        let acc = match path {
+                            KernelPath::Scalar => {
+                                let mut acc = 0i64;
+                                for p in 0..d {
+                                    acc += dlzs_mul(brow[p], arow[p]);
+                                }
+                                acc
+                            }
+                            KernelPath::Lanes => lane_dot(&|p| dlzs_mul(brow[p], arow[p])),
+                        };
                         *out.at_mut(i, j) = acc as f32 * self.scale;
                     }
                 }
@@ -272,12 +324,19 @@ impl PreparedPredict {
                 c.tally(OpKind::Shift, (m * n * d) as u64);
                 c.tally(OpKind::Add, (m * n * d) as u64);
                 for i in 0..m {
+                    let arow = &a_codes[(lo + i) * d..(lo + i + 1) * d];
                     for j in 0..n {
-                        let mut acc = 0i64;
-                        for p in 0..d {
-                            acc +=
-                                slzs_mul(a_codes[(lo + i) * d + p], b_codes[(key_lo + j) * d + p]);
-                        }
+                        let brow = &b_codes[(key_lo + j) * d..(key_lo + j + 1) * d];
+                        let acc = match path {
+                            KernelPath::Scalar => {
+                                let mut acc = 0i64;
+                                for p in 0..d {
+                                    acc += slzs_mul(arow[p], brow[p]);
+                                }
+                                acc
+                            }
+                            KernelPath::Lanes => lane_dot(&|p| slzs_mul(arow[p], brow[p])),
+                        };
                         *out.at_mut(i, j) = acc as f32 * self.scale;
                     }
                 }
@@ -286,11 +345,19 @@ impl PreparedPredict {
                 c.tally(OpKind::Mul, (m * n * d) as u64);
                 c.tally(OpKind::Add, (m * n * d) as u64);
                 for i in 0..m {
+                    let arow = ta.row(lo + i);
                     for j in 0..n {
-                        let mut acc = 0i64;
-                        for p in 0..d {
-                            acc += ta.at(lo + i, p) as i64 * tb.at(key_lo + j, p) as i64;
-                        }
+                        let brow = tb.row(key_lo + j);
+                        let acc = match path {
+                            KernelPath::Scalar => {
+                                let mut acc = 0i64;
+                                for p in 0..d {
+                                    acc += arow[p] as i64 * brow[p] as i64;
+                                }
+                                acc
+                            }
+                            KernelPath::Lanes => lane_dot(&|p| arow[p] as i64 * brow[p] as i64),
+                        };
                         *out.at_mut(i, j) = acc as f32 * self.scale;
                     }
                 }
@@ -467,6 +534,28 @@ mod tests {
             prep.score_block_into(2, 9, 10, 30, &mut cg, &mut dirty);
             assert_eq!(dirty, want, "{scheme:?}");
             assert_eq!(cg, cw, "{scheme:?} ops drift");
+        }
+    }
+
+    #[test]
+    fn score_lanes_path_is_bit_identical_to_scalar() {
+        // Remainder-lane d (13, 9) and lane-multiple d (16), every scheme,
+        // with op accounting equal on both paths.
+        for scheme in [PredictScheme::Dlzs, PredictScheme::Slzs, PredictScheme::LowBitMul] {
+            for d in [9usize, 13, 16] {
+                let (a, b) = mats(11 + d as u64, 10, 27, d);
+                let pred = Predictor::new(scheme, 7);
+                let mut c = OpCounter::new();
+                let prep = pred.prepare(&a, &b, &mut c);
+                let mut os = Mat::randn(3, 3, 1.0, &mut Rng::new(2)); // dirty
+                let mut ol = Mat::randn(4, 1, 1.0, &mut Rng::new(3)); // dirty
+                let mut cs = OpCounter::new();
+                let mut cl = OpCounter::new();
+                prep.score_block_into_with(1, 9, 5, 22, &mut cs, &mut os, KernelPath::Scalar);
+                prep.score_block_into_with(1, 9, 5, 22, &mut cl, &mut ol, KernelPath::Lanes);
+                assert_eq!(os, ol, "{scheme:?} d={d}");
+                assert_eq!(cs, cl, "{scheme:?} d={d} ops drift");
+            }
         }
     }
 

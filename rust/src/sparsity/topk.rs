@@ -35,6 +35,7 @@
 //! drift: identical selections, identical orders, identical comparison
 //! counts, enforced again by the unit tests at the bottom of this file.
 
+use crate::arith::lanes::{F32x8, KernelPath, LANES};
 use crate::arith::{OpCounter, OpKind};
 
 /// SADS configuration.
@@ -113,12 +114,40 @@ fn reserve_to<T>(v: &mut Vec<T>, n: usize) {
 /// [`merge_topk_candidates`]: `k` passes over `len` candidates, each
 /// taking the first strict maximum among the not-yet-taken (score ties
 /// resolve to the lowest scan position). Returns the comparison count.
+/// Dispatches on the `simd` cargo feature ([`KernelPath::active`]).
 fn extract_scan(
     len: usize,
     k: usize,
     score: impl Fn(usize) -> f32,
     taken: &mut Vec<bool>,
+    emit: impl FnMut(usize),
+) -> u64 {
+    extract_scan_with(len, k, score, taken, emit, KernelPath::active())
+}
+
+/// [`extract_scan`] with an explicit kernel path, for benches and parity
+/// tests.
+///
+/// The scalar pass keeps a running `(best, best_v)` and updates on every
+/// strict improvement. The lane pass instead reduces each 8-wide chunk
+/// to its untaken max (taken/absent lanes masked to −∞ — the identity),
+/// and only when a chunk's max strictly beats the running best does it
+/// rescan that chunk for the first untaken position attaining it.
+/// Because `>` is strict and the rescan takes the *first* attaining
+/// index, both passes settle on the lowest index attaining the global
+/// untaken max — including ±0.0 ties (IEEE `-0.0 == 0.0`, so the rescan
+/// equality finds the earlier index regardless of which zero `f32::max`
+/// kept) and NaN scores (never `>` anything, masked out of the lane max
+/// by `f32::max`). Comparison accounting is one count per untaken
+/// element per pass in both spellings, so the exact-`cmp` parity the
+/// tests below pin holds on either path.
+fn extract_scan_with(
+    len: usize,
+    k: usize,
+    score: impl Fn(usize) -> f32,
+    taken: &mut Vec<bool>,
     mut emit: impl FnMut(usize),
+    path: KernelPath,
 ) -> u64 {
     taken.clear();
     taken.resize(len, false);
@@ -126,12 +155,42 @@ fn extract_scan(
     for _ in 0..k {
         let mut best = usize::MAX;
         let mut best_v = f32::NEG_INFINITY;
-        for (j, t) in taken.iter().enumerate() {
-            if !*t {
-                cmp_count += 1;
-                if score(j) > best_v {
-                    best_v = score(j);
-                    best = j;
+        match path {
+            KernelPath::Scalar => {
+                for (j, t) in taken.iter().enumerate() {
+                    if !*t {
+                        cmp_count += 1;
+                        if score(j) > best_v {
+                            best_v = score(j);
+                            best = j;
+                        }
+                    }
+                }
+            }
+            KernelPath::Lanes => {
+                let mut j0 = 0;
+                while j0 < len {
+                    let j1 = (j0 + LANES).min(len);
+                    let mut lane = [f32::NEG_INFINITY; LANES];
+                    let mut untaken = 0u64;
+                    for (l, j) in (j0..j1).enumerate() {
+                        if !taken[j] {
+                            untaken += 1;
+                            lane[l] = score(j);
+                        }
+                    }
+                    cmp_count += untaken;
+                    let chunk_max = F32x8(lane).hmax(f32::NEG_INFINITY);
+                    if chunk_max > best_v {
+                        best_v = chunk_max;
+                        for j in j0..j1 {
+                            if !taken[j] && score(j) == chunk_max {
+                                best = j;
+                                break;
+                            }
+                        }
+                    }
+                    j0 = j1;
                 }
             }
         }
@@ -165,10 +224,31 @@ pub fn vanilla_topk_into(
     scratch: &mut TopkScratch,
     out: &mut Vec<usize>,
 ) {
+    vanilla_topk_into_with(row, k, c, scratch, out, KernelPath::active())
+}
+
+/// [`vanilla_topk_into`] with an explicit kernel path — the entry point
+/// `star bench kernels` and the SIMD parity tests use to compare the
+/// scalar and lane extraction scans in one binary (selection, order and
+/// comparison counts are identical on both paths; see
+/// [`extract_scan_with`]).
+pub fn vanilla_topk_into_with(
+    row: &[f32],
+    k: usize,
+    c: &mut OpCounter,
+    scratch: &mut TopkScratch,
+    out: &mut Vec<usize>,
+    path: KernelPath,
+) {
     out.clear();
-    let cmp = extract_scan(row.len(), k.min(row.len()), |j| row[j], &mut scratch.taken, |j| {
-        out.push(j)
-    });
+    let cmp = extract_scan_with(
+        row.len(),
+        k.min(row.len()),
+        |j| row[j],
+        &mut scratch.taken,
+        |j| out.push(j),
+        path,
+    );
     c.tally(OpKind::Cmp, cmp);
 }
 
@@ -703,6 +783,42 @@ mod tests {
             ),
             "steady-state selection must not grow scratch"
         );
+    }
+
+    #[test]
+    fn lanes_extraction_is_bit_identical_to_scalar() {
+        // Adversarial rows: cross-chunk ties, ±0.0 ties, -inf floods, NaN
+        // scores, and lengths straddling the 8-lane chunk boundary. The
+        // lane pass must reproduce selection, order AND comparison counts.
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        for (s, seed) in [(7usize, 41u64), (8, 42), (9, 43), (64, 44), (130, 45)] {
+            let mut row = rand_row(s, seed);
+            if s >= 9 {
+                row[1] = row[8]; // tie across chunk boundary
+                row[2] = f32::NEG_INFINITY;
+                row[3] = -0.0;
+                row[4] = 0.0;
+            }
+            rows.push(row);
+        }
+        rows.push(vec![f32::NEG_INFINITY; 20]); // fully masked: early break
+        let mut nan_row = rand_row(16, 46);
+        nan_row[5] = f32::NAN;
+        nan_row[12] = f32::NAN;
+        rows.push(nan_row); // NaN never selected on either path
+        for row in &rows {
+            for k in [1usize, 3, 8, row.len(), row.len() + 5] {
+                let mut ss = TopkScratch::default();
+                let mut sl = TopkScratch::default();
+                let (mut os, mut ol) = (Vec::new(), Vec::new());
+                let mut cs = OpCounter::new();
+                let mut cl = OpCounter::new();
+                vanilla_topk_into_with(row, k, &mut cs, &mut ss, &mut os, KernelPath::Scalar);
+                vanilla_topk_into_with(row, k, &mut cl, &mut sl, &mut ol, KernelPath::Lanes);
+                assert_eq!(os, ol, "len={} k={k} selection drift", row.len());
+                assert_eq!(cs.cmp, cl.cmp, "len={} k={k} cmp drift", row.len());
+            }
+        }
     }
 
     #[test]

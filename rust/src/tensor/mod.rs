@@ -5,7 +5,19 @@
 //! `pjrt` feature); this type exists for oracles, simulators and workload
 //! generation.
 
+use crate::arith::lanes::{F32x8, KernelPath, LANES};
 use crate::util::Rng;
+
+/// Rows per register micro-tile of the lane matmul: 4 × `F32x8`
+/// accumulators live in registers across a whole p-panel.
+const MAT_MR: usize = 4;
+
+/// p-panel depth of the lane matmul. One panel of the streamed `other`
+/// column block is `MAT_KC × LANES × 4 B` = 16 kB — half a typical 32 kB
+/// L1, leaving room for the `self` panel rows (DESIGN.md §10). At the
+/// paper's shapes (`k = d ≤ 128`) a single panel covers the whole
+/// reduction, so accumulators never spill.
+const MAT_KC: usize = 512;
 
 /// Row-major f32 matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -78,6 +90,17 @@ impl Mat {
     /// a query tile: same values [`Mat::from_fn`] over `src.at(lo + i,
     /// j)` would produce, without the per-tile allocation.
     pub fn stage_rows(&mut self, src: &Mat, src_lo: usize, rows: usize) {
+        debug_assert!(
+            src_lo + rows <= src.rows,
+            "stage_rows: source rows {src_lo}..{} out of range (src has {} rows)",
+            src_lo + rows,
+            src.rows
+        );
+        debug_assert_eq!(
+            src.data.len(),
+            src.rows * src.cols,
+            "stage_rows: source shape/data mismatch"
+        );
         self.reset(rows, src.cols);
         for i in 0..rows {
             self.row_mut(i).copy_from_slice(src.row(src_lo + i));
@@ -108,23 +131,105 @@ impl Mat {
     /// is [`Mat::reset`] to the product shape — no allocation once `out`
     /// has the capacity). This is the only matmul kernel in the crate;
     /// the allocating entry points wrap it, so "into" and "fresh" results
-    /// are bit-identical by construction.
+    /// are bit-identical by construction. Dispatches on the `simd` cargo
+    /// feature ([`KernelPath::active`]); both spellings are bit-identical
+    /// — see [`Mat::matmul_cols_into_with`].
     pub fn matmul_cols_into(&self, other: &Mat, col_lo: usize, col_hi: usize, out: &mut Mat) {
+        self.matmul_cols_into_with(other, col_lo, col_hi, out, KernelPath::active());
+    }
+
+    /// [`Mat::matmul_cols_into`] with an explicit kernel path, so benches
+    /// and parity tests can run both spellings in one binary.
+    ///
+    /// Both paths perform, for every output element `(i, j)`, the same
+    /// sequence of f32 operations: ascending-`p` accumulation, the
+    /// skip-zero test on `self[i, p]`, and a separate multiply then add
+    /// (never a fused mul-add). The lane path only re-tiles *which*
+    /// elements are in flight together (a [`MAT_MR`]×[`LANES`] register
+    /// micro-tile over [`MAT_KC`]-deep panels), so the two spellings are
+    /// bit-identical for every shape, including remainder columns.
+    pub fn matmul_cols_into_with(
+        &self,
+        other: &Mat,
+        col_lo: usize,
+        col_hi: usize,
+        out: &mut Mat,
+        path: KernelPath,
+    ) {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         assert!(col_lo <= col_hi && col_hi <= other.cols, "column block out of range");
+        debug_assert_eq!(self.data.len(), self.rows * self.cols, "matmul: lhs shape/data mismatch");
+        debug_assert_eq!(
+            other.data.len(),
+            other.rows * other.cols,
+            "matmul: rhs shape/data mismatch"
+        );
         let (m, k, n) = (self.rows, self.cols, col_hi - col_lo);
         out.reset(m, n);
-        // ikj loop order: streams `other` rows, vectorizes the inner j loop.
-        for i in 0..m {
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for p in 0..k {
-                let a = self.data[i * k + p];
-                if a == 0.0 {
-                    continue;
+        match path {
+            KernelPath::Scalar => {
+                // ikj loop order: streams `other` rows, vectorizes the
+                // inner j loop.
+                for i in 0..m {
+                    let orow = &mut out.data[i * n..(i + 1) * n];
+                    for p in 0..k {
+                        let a = self.data[i * k + p];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let brow = &other.data[p * other.cols + col_lo..p * other.cols + col_hi];
+                        for (o, &b) in orow.iter_mut().zip(brow) {
+                            *o += a * b;
+                        }
+                    }
                 }
-                let brow = &other.data[p * other.cols + col_lo..p * other.cols + col_hi];
-                for (o, &b) in orow.iter_mut().zip(brow) {
-                    *o += a * b;
+            }
+            KernelPath::Lanes => {
+                let full_n = n - n % LANES;
+                for p0 in (0..k).step_by(MAT_KC) {
+                    let p1 = (p0 + MAT_KC).min(k);
+                    for i0 in (0..m).step_by(MAT_MR) {
+                        let mr = (m - i0).min(MAT_MR);
+                        // Register micro-kernel: mr×8 accumulators held
+                        // across the p-panel, loaded from / stored to
+                        // `out` at the panel boundary (stored f32 ==
+                        // register f32, so panel splits stay exact).
+                        for j0 in (0..full_n).step_by(LANES) {
+                            let mut acc = [F32x8::zero(); MAT_MR];
+                            for (r, a) in acc.iter_mut().enumerate().take(mr) {
+                                *a = F32x8::load(&out.data[(i0 + r) * n + j0..]);
+                            }
+                            for p in p0..p1 {
+                                let b = F32x8::load(&other.data[p * other.cols + col_lo + j0..]);
+                                for (r, a) in acc.iter_mut().enumerate().take(mr) {
+                                    let aval = self.data[(i0 + r) * k + p];
+                                    if aval == 0.0 {
+                                        continue;
+                                    }
+                                    *a = a.add(F32x8::splat(aval).mul(b));
+                                }
+                            }
+                            for (r, a) in acc.iter().enumerate().take(mr) {
+                                a.store(&mut out.data[(i0 + r) * n + j0..]);
+                            }
+                        }
+                        // Remainder columns: the scalar spelling over the
+                        // same panel, so per-element op order is unchanged.
+                        for i in i0..i0 + mr {
+                            for p in p0..p1 {
+                                let a = self.data[i * k + p];
+                                if a == 0.0 {
+                                    continue;
+                                }
+                                let brow = &other.data
+                                    [p * other.cols + col_lo + full_n..p * other.cols + col_hi];
+                                let orow = &mut out.data[i * n + full_n..(i + 1) * n];
+                                for (o, &b) in orow.iter_mut().zip(brow) {
+                                    *o += a * b;
+                                }
+                            }
+                        }
+                    }
                 }
             }
         }
@@ -267,6 +372,41 @@ mod tests {
         let mut staged = Mat::zeros(0, 0);
         staged.stage_rows(&src, 4, 3);
         assert_eq!(staged, want);
+    }
+
+    #[test]
+    fn matmul_lanes_path_is_bit_identical_to_scalar() {
+        let mut rng = Rng::new(23);
+        // Shapes straddle the micro-tile: remainder rows (m % 4), remainder
+        // columns (n % 8), degenerate dims, and k past one p-panel.
+        let shapes: [(usize, usize, usize); 6] =
+            [(1, 1, 1), (4, 8, 8), (5, 13, 23), (3, 64, 7), (7, 600, 17), (6, 32, 40)];
+        for (m, k, n) in shapes {
+            let mut a = Mat::randn(m, k, 1.0, &mut rng);
+            // Sprinkle exact zeros so the skip-zero branch is exercised.
+            for (idx, v) in a.data.iter_mut().enumerate() {
+                if idx % 5 == 0 {
+                    *v = 0.0;
+                }
+            }
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            for (lo, hi) in [(0, n), (n / 3, n), (0, n - n / 4)] {
+                let mut scalar = Mat::randn(3, 3, 1.0, &mut rng); // dirty
+                let mut lanes = Mat::randn(2, 5, 1.0, &mut rng); // dirty
+                a.matmul_cols_into_with(&b, lo, hi, &mut scalar, KernelPath::Scalar);
+                a.matmul_cols_into_with(&b, lo, hi, &mut lanes, KernelPath::Lanes);
+                assert_eq!(scalar, lanes, "({m},{k},{n}) cols {lo}..{hi}");
+            }
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "stage_rows: source rows")]
+    fn stage_rows_rejects_out_of_range_sources() {
+        let src = Mat::zeros(4, 3);
+        let mut dst = Mat::zeros(0, 0);
+        dst.stage_rows(&src, 2, 3);
     }
 
     #[test]

@@ -1,0 +1,301 @@
+//! Property: the lane-spelled kernels never change the math.
+//!
+//! Every hot buffer-writing kernel is compiled in **both** spellings
+//! ([`star::arith::KernelPath::Scalar`] and `::Lanes`) in every build;
+//! the `simd` cargo feature only flips which spelling the dispatchers
+//! pick ([`star::arith::KernelPath::active`]). Two layers of contract:
+//!
+//! 1. **Kernel bit-identity.** For each kernel, the two spellings are
+//!    compared in one binary on adversarial inputs: remainder widths
+//!    around the 8-wide lane count, ±∞ / NaN-adjacent scores, planted
+//!    ties across chunk boundaries. Outputs, op tallies, stall counts
+//!    and top-k selections must match bit for bit (`Strict` reduction,
+//!    the default).
+//! 2. **Pipeline closure.** All three execution paths (batch prefill,
+//!    autoregressive decode, sequence-sharded) run through ONE
+//!    [`star::pipeline::WorkspacePool`] under whichever spelling the
+//!    build selected, and must agree with fresh-pool references and
+//!    with each other. CI runs this binary with and without
+//!    `--features simd`; together with layer 1 that closes the loop —
+//!    the feature flag cannot move a single bit.
+//!
+//! The work-stealing tile scheduler rides the same contract: outputs,
+//! selections and stalls are asserted identical at every thread count,
+//! and the warm hot path still meters zero allocations (this binary
+//! installs the counting allocator).
+
+#[global_allocator]
+static ALLOC: star::util::allocmeter::CountingAllocator =
+    star::util::allocmeter::CountingAllocator;
+
+use star::arith::{quantize_row_into_with, IntBits, KernelPath, OpCounter};
+use star::attention::{sufa_attention_rows_into_with, AttnInputs, SufaParams, SufaScratch};
+use star::kvcache::{SessionConfig, SessionStore};
+use star::pipeline::{
+    PipelineConfig, PipelineInputs, ShardedPipeline, SparseAttentionPipeline, WorkspacePool,
+};
+use star::sparsity::{vanilla_topk_into_with, PredictScheme, Predictor, TopkScratch};
+use star::tensor::Mat;
+use star::util::Rng;
+
+fn bits_eq(a: &Mat, b: &Mat) -> bool {
+    a.rows == b.rows
+        && a.cols == b.cols
+        && a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn active_path_follows_the_cargo_feature() {
+    // The feature unifies across every target of the package, so the
+    // test binary and the library always agree on the dispatch choice.
+    assert_eq!(KernelPath::active() == KernelPath::Lanes, cfg!(feature = "simd"));
+}
+
+#[test]
+fn quantize_spellings_agree_on_remainders_and_nonfinite_rows() {
+    let mut rng = Rng::new(71);
+    let widths = (1usize..=17).chain([64, 65]);
+    for len in widths {
+        for bits in [IntBits::Int4, IntBits::Int8, IntBits::Int16] {
+            let mut row: Vec<f32> = (0..len).map(|_| rng.range_f32(-6.0, 6.0)).collect();
+            // Adversarial values on and around lane boundaries: a huge
+            // magnitude (dominates amax), a negative zero (abs must
+            // normalize it), a subnormal, and one NaN (both amax folds
+            // must ignore it the way f32::max does).
+            row[0] = -0.0;
+            if len > 7 {
+                row[7] = 3.0e38;
+                row[8] = f32::NAN;
+            }
+            if len > 9 {
+                row[9] = f32::MIN_POSITIVE / 2.0;
+            }
+            let (mut qs, mut ql) = (vec![7i32; 3], Vec::new());
+            let ss = quantize_row_into_with(&row, bits, &mut qs, KernelPath::Scalar);
+            let sl = quantize_row_into_with(&row, bits, &mut ql, KernelPath::Lanes);
+            assert_eq!(ss.to_bits(), sl.to_bits(), "scale drift at len={len} {bits:?}");
+            assert_eq!(qs, ql, "code drift at len={len} {bits:?}");
+        }
+    }
+}
+
+#[test]
+fn matmul_spellings_agree_with_zeros_and_infinities() {
+    let mut rng = Rng::new(72);
+    for (m, k, n) in [(3usize, 10usize, 17usize), (5, 130, 9), (4, 8, 40)] {
+        let mut a = Mat::from_fn(m, k, |_, _| rng.range_f32(-2.0, 2.0));
+        let mut b = Mat::from_fn(k, n, |_, _| rng.range_f32(-2.0, 2.0));
+        // Plant the skip-zero fast path next to infinities: a zero LHS
+        // entry must skip an ∞ RHS row identically in both spellings,
+        // and a surviving ∞ must poison the same accumulators to the
+        // same ±∞/NaN bit patterns.
+        a.data[0] = 0.0;
+        a.data[k - 1] = f32::INFINITY;
+        b.data[0] = f32::NEG_INFINITY;
+        b.data[n - 1] = f32::INFINITY;
+        let (mut os, mut ol) = (Mat::zeros(1, 1), Mat::zeros(7, 3));
+        a.matmul_cols_into_with(&b, 0, n, &mut os, KernelPath::Scalar);
+        a.matmul_cols_into_with(&b, 0, n, &mut ol, KernelPath::Lanes);
+        assert!(bits_eq(&os, &ol), "matmul drift at {m}x{k}x{n}");
+    }
+}
+
+#[test]
+fn predictor_spellings_agree_on_extreme_magnitudes() {
+    let mut rng = Rng::new(73);
+    for scheme in [PredictScheme::Dlzs, PredictScheme::Slzs, PredictScheme::LowBitMul] {
+        for d in [9usize, 13, 16] {
+            let (t, s) = (6usize, 21usize);
+            let mut q = Mat::from_fn(t, d, |_, _| rng.range_f32(-1.0, 1.0));
+            let k = Mat::from_fn(s, d, |_, _| rng.range_f32(-1.0, 1.0));
+            // One outlier row squashes everything else to the bottom
+            // quantization bins — the integer dots stay exact either way.
+            for x in q.row_mut(1) {
+                *x *= 1.0e4;
+            }
+            let mut c = OpCounter::default();
+            let prep = Predictor::new(scheme, 7).prepare(&q, &k, &mut c);
+            let (mut cs, mut cl) = (OpCounter::default(), OpCounter::default());
+            let (mut os, mut ol) = (Mat::zeros(1, 1), Mat::zeros(2, 2));
+            prep.score_block_into_with(0, t, 0, s, &mut cs, &mut os, KernelPath::Scalar);
+            prep.score_block_into_with(0, t, 0, s, &mut cl, &mut ol, KernelPath::Lanes);
+            assert!(bits_eq(&os, &ol), "score drift {scheme:?} d={d}");
+            assert_eq!(cs, cl, "op-tally drift {scheme:?} d={d}");
+        }
+    }
+}
+
+#[test]
+fn topk_spellings_agree_on_ties_and_nonfinite_scores() {
+    let mut rng = Rng::new(74);
+    for len in [7usize, 8, 9, 16, 130] {
+        let mut row: Vec<f32> = (0..len).map(|_| rng.range_f32(-8.0, 8.0)).collect();
+        // A tie straddling a lane-chunk boundary (first index must win),
+        // ±∞ and one NaN (never selectable, identically in both
+        // spellings), and a ±0.0 pair (f32 equality treats them equal).
+        row[2] = 5.5;
+        if len > 9 {
+            row[9] = 5.5;
+            row[6] = f32::NEG_INFINITY;
+            row[8] = f32::NAN;
+            row[3] = 0.0;
+            row[5] = -0.0;
+        }
+        if len > 64 {
+            row[64] = f32::INFINITY;
+        }
+        for k in [1usize, 3, 8, len, len + 5] {
+            let mut scratch = TopkScratch::default();
+            let (mut cs, mut cl) = (OpCounter::default(), OpCounter::default());
+            let (mut ss, mut sl) = (vec![99usize], Vec::new());
+            vanilla_topk_into_with(&row, k, &mut cs, &mut scratch, &mut ss, KernelPath::Scalar);
+            vanilla_topk_into_with(&row, k, &mut cl, &mut scratch, &mut sl, KernelPath::Lanes);
+            assert_eq!(ss, sl, "selection drift at len={len} k={k}");
+            assert_eq!(cs, cl, "comparison-count drift at len={len} k={k}");
+        }
+    }
+}
+
+#[test]
+fn sufa_spellings_agree_under_overflowing_softmax() {
+    // Scores large enough that exp() saturates/underflows, plus an ∞ in
+    // one query row: every arithmetic step is elementwise-identical
+    // across spellings under Strict reduction, so even the poisoned
+    // rows must match bit for bit — as must the stall count.
+    let mut rng = Rng::new(75);
+    let (t, s, d) = (6usize, 40usize, 10usize);
+    let mut q = Mat::from_fn(t, d, |_, _| rng.range_f32(-30.0, 30.0));
+    let k = Mat::from_fn(s, d, |_, _| rng.range_f32(-30.0, 30.0));
+    let v = Mat::from_fn(s, d, |_, _| rng.range_f32(-1.0, 1.0));
+    q.row_mut(2)[0] = f32::INFINITY;
+    let inp = AttnInputs::new(&q, &k, &v);
+    let rows: Vec<Vec<usize>> = (0..t)
+        .map(|i| {
+            let mut sel = Rng::new(100 + i as u64).sample_indices(s, 13);
+            if i % 2 == 0 {
+                sel.sort_unstable();
+            }
+            sel
+        })
+        .collect();
+    let p = SufaParams::default();
+    let mut scratch = SufaScratch::default();
+    let (mut cs, mut cl) = (OpCounter::default(), OpCounter::default());
+    let (mut os, mut ol) = (Mat::zeros(1, 1), Mat::zeros(3, 3));
+    let st_s = sufa_attention_rows_into_with(
+        &inp,
+        &rows,
+        &p,
+        &mut cs,
+        &mut scratch,
+        &mut os,
+        KernelPath::Scalar,
+    );
+    let st_l = sufa_attention_rows_into_with(
+        &inp,
+        &rows,
+        &p,
+        &mut cl,
+        &mut scratch,
+        &mut ol,
+        KernelPath::Lanes,
+    );
+    assert!(bits_eq(&os, &ol), "SU-FA output drift");
+    assert_eq!(st_s, st_l, "SU-FA stall drift");
+    assert_eq!(cs, cl, "SU-FA op-tally drift");
+}
+
+fn sub(m: &Mat, lo: usize, hi: usize) -> Mat {
+    Mat::from_fn(hi - lo, m.cols, |i, j| m.at(lo + i, j))
+}
+
+#[test]
+fn three_execution_paths_through_one_pool_agree() {
+    // Whichever spelling this build dispatches to, the three execution
+    // paths must produce mutually consistent, pool-independent results.
+    let pool = WorkspacePool::new();
+    let (t, s, d) = (26usize, 120usize, 16usize);
+    let mut rng = Rng::new(91);
+    let q = Mat::randn(t, d, 1.0, &mut rng);
+    let k = Mat::randn(s, d, 1.0, &mut rng);
+    let v = Mat::randn(s, d, 1.0, &mut rng);
+    let inputs = PipelineInputs::qkv(&q, &k, &v);
+    let cfg = PipelineConfig::star().with_keep(0.25).with_tile(7).with_threads(1);
+
+    let fresh = SparseAttentionPipeline::new(cfg).run(&inputs);
+    let pooled = SparseAttentionPipeline::new(cfg).run_pooled(&inputs, &pool);
+    assert_eq!(pooled.selection, fresh.selection, "prefill selection drift");
+    assert!(bits_eq(&pooled.out, &fresh.out), "prefill output drift");
+    assert_eq!(pooled.stalls, fresh.stalls, "prefill stall drift");
+
+    for shards in [2usize, 3] {
+        let sharded = ShardedPipeline::new(cfg, shards).run_pooled(&inputs, &pool);
+        assert_eq!(sharded.selection, fresh.selection, "sharded selection drift");
+        assert!(bits_eq(&sharded.out, &fresh.out), "sharded output drift");
+        assert_eq!(sharded.stalls, fresh.stalls, "sharded stall drift");
+    }
+
+    // Decode through the same (dirty) pool vs a fresh pool.
+    let run_session = |pool: &WorkspacePool| {
+        let pipe = SparseAttentionPipeline::new(cfg);
+        let mut store = SessionStore::new(SessionConfig::for_pipeline(&cfg, d, 0));
+        let mut outs = Vec::new();
+        let mut at = 0usize;
+        for &c in &[9usize, 1, 1, 8, 7] {
+            let r = pipe
+                .decode_step_pooled(
+                    &mut store,
+                    1,
+                    &sub(&q, at, at + c),
+                    &sub(&k, at, at + c),
+                    &sub(&v, at, at + c),
+                    pool,
+                )
+                .expect("decode step");
+            outs.push((r.out, r.selection, r.stalls));
+            at += c;
+        }
+        outs
+    };
+    let fresh_steps = run_session(&WorkspacePool::new());
+    let pooled_steps = run_session(&pool);
+    for (i, (f, p)) in fresh_steps.iter().zip(&pooled_steps).enumerate() {
+        assert!(bits_eq(&p.0, &f.0), "decode step {i} output drift");
+        assert_eq!(p.1, f.1, "decode step {i} selection drift");
+        assert_eq!(p.2, f.2, "decode step {i} stall drift");
+    }
+}
+
+#[test]
+fn work_stealing_is_deterministic_and_allocation_free_at_every_thread_count() {
+    // 16 tiles of skewed cost (keep grows with S so later tiles gather
+    // more keys): whatever interleaving the chunked atomic cursor
+    // produces, each tile runs exactly once as a pure function of its
+    // index — outputs, selections, stalls and op tallies cannot move.
+    let (t, s, d) = (64usize, 192usize, 16usize);
+    let mut rng = Rng::new(92);
+    let q = Mat::randn(t, d, 1.0, &mut rng);
+    let k = Mat::randn(s, d, 1.0, &mut rng);
+    let v = Mat::randn(s, d, 1.0, &mut rng);
+    let inputs = PipelineInputs::qkv(&q, &k, &v);
+    let base = PipelineConfig::star().with_keep(0.3).with_tile(4);
+    let reference = SparseAttentionPipeline::new(base.with_threads(1)).run(&inputs);
+    assert!(reference.tiles >= 16, "want enough tiles to exercise stealing");
+
+    for threads in [1usize, 2, 3, 5, 8] {
+        let pool = WorkspacePool::new();
+        let pipe = SparseAttentionPipeline::new(base.with_threads(threads));
+        let _warm = pipe.run_pooled(&inputs, &pool);
+        let r = pipe.run_pooled(&inputs, &pool);
+        let tag = format!("threads={threads}");
+        assert_eq!(r.selection, reference.selection, "{tag}: selection drift");
+        assert!(bits_eq(&r.out, &reference.out), "{tag}: output drift");
+        assert_eq!(r.stalls, reference.stalls, "{tag}: stall drift");
+        assert_eq!(r.ops.formal, reference.ops.formal, "{tag}: formal ops drift");
+        assert_eq!(r.hot_path_allocs, 0, "{tag}: warm hot path allocated under work-stealing");
+
+        let sharded = ShardedPipeline::new(base.with_threads(threads), 2).run(&inputs);
+        assert_eq!(sharded.selection, reference.selection, "{tag}: sharded selection drift");
+        assert!(bits_eq(&sharded.out, &reference.out), "{tag}: sharded output drift");
+    }
+}
