@@ -30,6 +30,10 @@ pub struct KernelBench {
     pub shape: String,
     /// Primitive-op estimate for the workload (MACs count as 2).
     pub flops: f64,
+    /// Estimated bytes moved through the memory hierarchy per run
+    /// (operand reads + result writes at their stored widths); the
+    /// denominator of the arithmetic-intensity / roofline columns.
+    pub bytes: f64,
     pub scalar_s: f64,
     pub lanes_s: f64,
     /// Both spellings produced bit-identical buffers (and identical op
@@ -48,6 +52,23 @@ impl KernelBench {
 
     pub fn speedup(&self) -> f64 {
         self.scalar_s / self.lanes_s
+    }
+
+    /// Arithmetic intensity (FLOP per byte moved) — the x-axis of the
+    /// roofline plot; path-independent since both spellings touch the
+    /// same operands.
+    pub fn intensity(&self) -> f64 {
+        self.flops / self.bytes
+    }
+
+    /// Achieved scalar memory bandwidth, GB/s (roofline y via bytes).
+    pub fn scalar_gbytes_per_s(&self) -> f64 {
+        self.bytes / self.scalar_s / 1e9
+    }
+
+    /// Achieved lanes memory bandwidth, GB/s.
+    pub fn lanes_gbytes_per_s(&self) -> f64 {
+        self.bytes / self.lanes_s / 1e9
     }
 }
 
@@ -93,6 +114,8 @@ fn bench_matmul(rng: &mut Rng) -> KernelBench {
         kernel: "matmul_cols_into",
         shape: format!("{m}x{k}x{n}"),
         flops: 2.0 * (m * k * n) as f64,
+        // f32 A + B reads and C writes (compulsory traffic, no reuse).
+        bytes: 4.0 * (m * k + k * n + m * n) as f64,
         scalar_s,
         lanes_s,
         parity_ok,
@@ -120,6 +143,8 @@ fn bench_score(rng: &mut Rng) -> KernelBench {
         kernel: "score_block_into",
         shape: format!("{t}x{s} d={d} dlzs"),
         flops: 2.0 * (t * s * d) as f64,
+        // int8 prepared Q and K operands + f32 score writes.
+        bytes: ((t + s) * d) as f64 + 4.0 * (t * s) as f64,
         scalar_s,
         lanes_s,
         parity_ok,
@@ -161,6 +186,8 @@ fn bench_quantize(rng: &mut Rng) -> KernelBench {
         shape: format!("{t} rows x {len} int8"),
         // amax + div + round + clamp ≈ 4 primitive ops per element.
         flops: 4.0 * (t * len) as f64,
+        // f32 read + i32 write per element, plus one scale per row.
+        bytes: 8.0 * (t * len) as f64 + 4.0 * t as f64,
         scalar_s,
         lanes_s,
         parity_ok,
@@ -187,6 +214,8 @@ fn bench_topk(rng: &mut Rng) -> KernelBench {
         shape: format!("len={len} k={k}"),
         // k passes, one comparison per untaken candidate per pass.
         flops: (k * len) as f64,
+        // Each pass re-reads the f32 candidate row.
+        bytes: 4.0 * (k * len) as f64,
         scalar_s,
         lanes_s,
         parity_ok,
@@ -242,6 +271,9 @@ fn bench_sufa(rng: &mut Rng) -> KernelBench {
         shape: format!("t={t} s={s} d={d} k={k}"),
         // Per selected pair: q·k dot (2d) + exp-weighted axpy (2d).
         flops: 4.0 * (nnz * d) as f64,
+        // Gathered K and V rows per selected pair + one q read and one
+        // accumulator write per query row, all f32.
+        bytes: 4.0 * (2 * nnz * d) as f64 + 4.0 * (2 * t * d) as f64,
         scalar_s,
         lanes_s,
         parity_ok,
@@ -275,6 +307,8 @@ pub fn kernel_benches() -> Vec<KernelBench> {
             format!("{:>10}", "scalar GF/s"),
             format!("{:>10}", "lanes GF/s"),
             format!("{:>8}", "speedup"),
+            format!("{:>9}", "FLOP/B"),
+            format!("{:>10}", "lanes GB/s"),
             format!("{:>6}", "parity"),
         ],
     );
@@ -286,6 +320,8 @@ pub fn kernel_benches() -> Vec<KernelBench> {
                 super::f(r.scalar_gflops()),
                 super::f(r.lanes_gflops()),
                 format!("{:>8.2}x", r.speedup()),
+                super::f(r.intensity()),
+                super::f(r.lanes_gbytes_per_s()),
                 format!("{:>6}", if r.parity_ok { "ok" } else { "FAIL" }),
             ],
         );
@@ -310,7 +346,18 @@ mod tests {
             .iter()
             .map(|c| c.as_str().unwrap().to_string())
             .collect();
-        for want in ["kernel", "shape", "flops", "scalar_gflops", "lanes_gflops", "speedup"] {
+        for want in [
+            "kernel",
+            "shape",
+            "flops",
+            "scalar_gflops",
+            "lanes_gflops",
+            "speedup",
+            "bytes",
+            "intensity_flops_per_byte",
+            "scalar_gbytes_per_s",
+            "lanes_gbytes_per_s",
+        ] {
             assert!(cols.contains(&want.to_string()), "missing column {want}");
         }
         let rows = j.get("rows").unwrap().as_arr().unwrap();

@@ -27,10 +27,15 @@
 //! | Decode throughput (KV-cache) | [`decode::decode_throughput`] |
 //! | Spatial-exec (measured sharding) | [`spatial_exec::spatial_exec`] |
 //! | Kernel layer (scalar vs lanes) | [`kernels::kernel_benches`] |
+//! | Traffic reconciliation (measured vs modeled) | [`traffic::traffic_reconcile`] |
+//! | Perf-regression gate | [`traffic::check`] |
 //!
 //! Every subcommand also writes its numbers to `BENCH_<name>.json` at
 //! the repo root ([`trajectory`]), so the perf trajectory is tracked
-//! across PRs.
+//! across PRs. `star bench check` is the one exception: it *reads* the
+//! committed `BENCH_*.json` baselines, re-runs the gated benches into a
+//! temp directory and exits nonzero on regression (DESIGN.md §11) —
+//! it never overwrites a baseline.
 
 pub mod algorithm;
 pub mod arch;
@@ -39,6 +44,7 @@ pub mod kernels;
 pub mod motivation;
 pub mod spatial_eval;
 pub mod spatial_exec;
+pub mod traffic;
 pub mod trajectory;
 
 use crate::util::json::Json;
@@ -68,11 +74,12 @@ pub(crate) fn f(x: f64) -> String {
 }
 
 /// All bench names, in paper order (plus the serving-side `decode`, the
-/// measured-sharding `spatial-exec` and the kernel-layer `kernels`).
-pub const ALL: [&str; 21] = [
+/// measured-sharding `spatial-exec`, the kernel-layer `kernels` and the
+/// measured-vs-modeled `traffic` reconciliation).
+pub const ALL: [&str; 22] = [
     "fig1", "fig3", "fig4", "fig5", "fig7", "fig9", "fig11", "fig16", "fig17", "fig18",
     "table2", "fig19", "fig20", "fig21", "fig22", "fig23", "table3", "fig24", "decode",
-    "spatial-exec", "kernels",
+    "spatial-exec", "kernels", "traffic",
 ];
 
 fn n(x: f64) -> Json {
@@ -82,6 +89,11 @@ fn n(x: f64) -> Json {
 /// Run one named bench (or `all`), writing its machine-readable payload
 /// to `BENCH_<name>.json` (see [`trajectory`]).
 pub fn run(name: &str) -> Result<()> {
+    // `check` gates against the committed baselines instead of
+    // producing one — it must not write a trajectory file.
+    if name == "check" {
+        return traffic::check();
+    }
     // CLI spelling `spatial-exec` ↔ file `BENCH_spatial_exec.json`.
     let name = if name == "spatial-exec" { "spatial_exec" } else { name };
     let payload: Json = match name {
@@ -346,7 +358,18 @@ pub fn run(name: &str) -> Result<()> {
             }
             table(
                 name,
-                &["kernel", "shape", "flops", "scalar_gflops", "lanes_gflops", "speedup"],
+                &[
+                    "kernel",
+                    "shape",
+                    "flops",
+                    "scalar_gflops",
+                    "lanes_gflops",
+                    "speedup",
+                    "bytes",
+                    "intensity_flops_per_byte",
+                    "scalar_gbytes_per_s",
+                    "lanes_gbytes_per_s",
+                ],
                 rows.iter()
                     .map(|r| {
                         vec![
@@ -356,11 +379,16 @@ pub fn run(name: &str) -> Result<()> {
                             n(r.scalar_gflops()),
                             n(r.lanes_gflops()),
                             n(r.speedup()),
+                            n(r.bytes),
+                            n(r.intensity()),
+                            n(r.scalar_gbytes_per_s()),
+                            n(r.lanes_gbytes_per_s()),
                         ]
                     })
                     .collect(),
             )
         }
+        "traffic" => traffic::traffic_reconcile()?,
         "all" => {
             for bench in ALL {
                 run(bench)?;

@@ -1,0 +1,697 @@
+//! `star bench traffic` — measured-vs-modeled memory-traffic
+//! reconciliation — and `star bench check` — the perf-regression gate
+//! driver (DESIGN.md §11).
+//!
+//! # Reconciliation
+//!
+//! The tile engine meters *measured* byte traffic
+//! ([`crate::obs::traffic::TrafficCounter`]) while the cycle simulator
+//! *predicts* per-stage DRAM streams for the same shape
+//! ([`crate::sim::pipeline::StageTime::dram_bytes`]). This bench runs
+//! prefill, decode and sharded prefill at a paper-relevant shape with
+//! counting enabled, maps both sides to a common unit and hard-fails
+//! when they diverge beyond tolerance.
+//!
+//! The common unit is **elements**, not raw bytes: the software model
+//! stores every tensor as f32 (4 B/element) while the simulator charges
+//! the accelerator's wire formats (int8 activations at 1 B/element,
+//! INT16 KV/outputs at 2 B/element). Dividing each side by its element
+//! width makes the comparison exact:
+//!
+//! | stage | measured (elements) | modeled (elements) |
+//! |---|---|---|
+//! | predict | (`q_ingest` + `key_ingest`) / 4 | `predict.dram_bytes` (1 B/elem) |
+//! | top-k | 0 (on-chip only) | `topk.dram_bytes` (= 0) |
+//! | kv_gen (prefill/sharded) | `x_ingest` / 4 | `kv_gen.dram_bytes` (1 B/elem) |
+//! | kv_gen (decode) | `cache_append` / 4 | `kv_resident_bytes` / 2 |
+//! | formal | `out_egress` / 4 | `formal.dram_bytes` / 2 |
+//!
+//! The prefill/sharded KV-generation comparison only closes because the
+//! *measured* union ratio is injected back into the simulator's
+//! [`WorkloadShape`] ([`WorkloadShape::with_union_ratio`]): the model
+//! then predicts the exact per-tile KV regeneration the execution
+//! performed, instead of its closed-form heuristic.
+//!
+//! # The gate
+//!
+//! [`check`] re-runs every gated bench into a temp directory
+//! (`STAR_BENCH_DIR`), compares the fresh `BENCH_*.json` against the
+//! committed ones with [`compare_benches`]'s noise-aware per-class
+//! tolerances, and fails (→ `star bench check` exits nonzero) on any
+//! regression. With no committed baselines it soft-warns and passes, so
+//! the gate can be adopted before the first baseline lands.
+
+use super::{header, row};
+use crate::config::{AccelConfig, ModelConfig};
+use crate::kvcache::{SessionConfig, SessionStore};
+use crate::obs::baseline::compare_benches;
+use crate::obs::traffic::{self, SchedStats, TrafficCounter};
+use crate::pipeline::{
+    PipelineConfig, PipelineInputs, ShardedPipeline, SparseAttentionPipeline, WorkspacePool,
+};
+use crate::sim::dram::DramChannel;
+use crate::sim::pipeline::{
+    simulate, FeatureSet, FormalKind, PredictKind, SimReport, TopkKind, WorkloadShape,
+};
+use crate::tensor::Mat;
+use crate::util::json::Json;
+use crate::util::{allocmeter, Rng};
+use crate::workload::AttnWorkload;
+use std::path::Path;
+
+/// Relative per-stage divergence tolerated between measured and modeled
+/// element counts.
+pub const TOL_REL: f64 = 0.02;
+/// Absolute element-count floor of the tolerance (covers the ±1-row
+/// rounding of the injected union ratio on tiny shapes).
+pub const TOL_ABS_ELEMS: f64 = 64.0;
+
+/// Benches `star bench check` gates, in `bench::run` spelling. Only the
+/// measurement-style benches are gated: the figure tables replay the
+/// analytical model and cannot regress at runtime.
+pub const GATED_BENCHES: [&str; 4] = ["decode", "spatial-exec", "kernels", "traffic"];
+
+/// Shapes: paper-relevant in release, shrunk in debug so `cargo test`
+/// stays fast (same convention as [`super::kernels`]).
+/// `(t, s, hidden, decode_prefill, decode_steps)`; 4 heads throughout.
+fn dims() -> (usize, usize, usize, usize, usize) {
+    if cfg!(debug_assertions) {
+        (24, 256, 128, 48, 16)
+    } else {
+        (128, 1024, 256, 192, 64)
+    }
+}
+
+/// One stage's measured-vs-modeled comparison, in elements.
+#[derive(Clone, Copy, Debug)]
+pub struct StageCheck {
+    pub stage: &'static str,
+    pub measured_elems: f64,
+    pub modeled_elems: f64,
+}
+
+impl StageCheck {
+    /// measured / modeled (1.0 when both are zero).
+    pub fn ratio(&self) -> f64 {
+        if self.modeled_elems == 0.0 {
+            if self.measured_elems == 0.0 {
+                1.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            self.measured_elems / self.modeled_elems
+        }
+    }
+
+    fn tolerance(&self) -> f64 {
+        TOL_ABS_ELEMS.max(TOL_REL * self.modeled_elems)
+    }
+
+    /// Within tolerance?
+    pub fn ok(&self) -> bool {
+        (self.measured_elems - self.modeled_elems).abs() <= self.tolerance()
+    }
+}
+
+/// One execution path's reconciliation record.
+struct PathRecon {
+    path: &'static str,
+    t: usize,
+    s: usize,
+    d: usize,
+    h: usize,
+    keep_ratio: f64,
+    /// Union ratio injected into the simulator (measured Σunion / S for
+    /// the on-demand paths; 1.0 where KV is cache-resident).
+    union_ratio: f64,
+    measured: TrafficCounter,
+    sched: SchedStats,
+    sim: SimReport,
+    checks: Vec<StageCheck>,
+    hot_path_allocs: u64,
+}
+
+fn accel() -> (AccelConfig, DramChannel) {
+    (AccelConfig::default(), DramChannel::accel_256())
+}
+
+/// Batch prefill on the full STAR stack (cross-phase DLZS from X,
+/// on-demand KV, SU-FA).
+fn run_prefill(wl: &AttnWorkload) -> PathRecon {
+    let inputs = PipelineInputs::from_workload(wl);
+    let (t, s, d) = (inputs.t(), inputs.s(), inputs.d());
+    let h = wl.x.cols;
+    let cfg = PipelineConfig::star().with_keep(0.2).with_tile(16);
+    let pipe = SparseAttentionPipeline::new(cfg);
+    let pool = WorkspacePool::new();
+    // Warm the pool uncounted, then measure: the counted run must stay
+    // allocation-free (counting sites are pure integer arithmetic).
+    pipe.run_pooled(&inputs, &pool);
+    traffic::set_enabled(true);
+    let r = pipe.run_pooled(&inputs, &pool);
+    traffic::set_enabled(false);
+    let measured = r.traffic;
+
+    // Inject the *measured* union ratio (Σ per-tile union rows / S;
+    // deliberately may exceed 1 — a key regenerates once per query tile
+    // that selects it).
+    let ru = measured.x_ingest_bytes as f64 / 4.0 / h as f64 / s as f64;
+    let shape = WorkloadShape::new(t, s, d, h, cfg.keep_ratio).with_union_ratio(ru);
+    let (acfg, dram) = accel();
+    let sim = simulate(&shape, &FeatureSet::star(), &acfg, &dram);
+
+    let checks = vec![
+        StageCheck {
+            stage: "predict",
+            measured_elems: (measured.q_ingest_bytes + measured.key_ingest_bytes) as f64 / 4.0,
+            modeled_elems: sim.predict.dram_bytes as f64,
+        },
+        StageCheck { stage: "topk", measured_elems: 0.0, modeled_elems: sim.topk.dram_bytes as f64 },
+        StageCheck {
+            stage: "kv_gen",
+            measured_elems: measured.x_ingest_bytes as f64 / 4.0,
+            modeled_elems: sim.kv_gen.dram_bytes as f64,
+        },
+        StageCheck {
+            stage: "formal",
+            measured_elems: measured.out_egress_bytes as f64 / 4.0,
+            modeled_elems: sim.formal.dram_bytes as f64 / 2.0,
+        },
+    ];
+    PathRecon {
+        path: "prefill",
+        t,
+        s,
+        d,
+        h,
+        keep_ratio: cfg.keep_ratio,
+        union_ratio: ru,
+        measured,
+        sched: r.sched,
+        sim,
+        checks,
+        hot_path_allocs: r.hot_path_allocs,
+    }
+}
+
+/// Decode session (prefill chunk + single-token steps) on the paged KV
+/// cache. The simulator sees the whole causal session as one job: every
+/// token is a query row (t = total) against the final context
+/// (s = total). Prediction scores the *frozen cached operands* (SLZS
+/// class — symmetric, no X in the loop) and KV is cache-resident, so
+/// the KV-generation comparison runs against the modeled resident-KV
+/// footprint rather than an on-demand generation stream.
+fn run_decode(d: usize, prefill_tokens: usize, steps: usize) -> crate::Result<PathRecon> {
+    let cfg = PipelineConfig::star().with_keep(0.2).with_tile(16).with_threads(1);
+    let pipe = SparseAttentionPipeline::new(cfg);
+    let total = prefill_tokens + steps;
+    let mut rng = Rng::new(0x5452_4146); // "TRAF"
+    let q = Mat::randn(total, d, 1.0, &mut rng);
+    let k = Mat::randn(total, d, 1.0, &mut rng);
+    let v = Mat::randn(total, d, 1.0, &mut rng);
+    let slice = |m: &Mat, lo: usize, hi: usize| Mat::from_fn(hi - lo, d, |i, j| m.at(lo + i, j));
+
+    let pool = WorkspacePool::new();
+    // Warm pass: a throwaway session warms the pooled workspaces for
+    // this shape class, uncounted.
+    {
+        let mut warm = SessionStore::new(SessionConfig::for_pipeline(&cfg, d, 0));
+        pipe.decode_step_pooled(
+            &mut warm,
+            1,
+            &slice(&q, 0, prefill_tokens),
+            &slice(&k, 0, prefill_tokens),
+            &slice(&v, 0, prefill_tokens),
+            &pool,
+        )?;
+    }
+
+    traffic::set_enabled(true);
+    let mut store = SessionStore::new(SessionConfig::for_pipeline(&cfg, d, 0));
+    let mut measured = TrafficCounter::new();
+    let mut sched = SchedStats::default();
+    let mut hot_path_allocs = 0u64;
+    let r0 = pipe.decode_step_pooled(
+        &mut store,
+        7,
+        &slice(&q, 0, prefill_tokens),
+        &slice(&k, 0, prefill_tokens),
+        &slice(&v, 0, prefill_tokens),
+        &pool,
+    )?;
+    measured.merge(&r0.traffic);
+    sched.merge(&r0.sched);
+    hot_path_allocs += r0.hot_path_allocs;
+    for pos in prefill_tokens..total {
+        let r = pipe.decode_step_pooled(
+            &mut store,
+            7,
+            &slice(&q, pos, pos + 1),
+            &slice(&k, pos, pos + 1),
+            &slice(&v, pos, pos + 1),
+            &pool,
+        )?;
+        measured.merge(&r.traffic);
+        sched.merge(&r.sched);
+        hot_path_allocs += r.hot_path_allocs;
+    }
+    traffic::set_enabled(false);
+
+    let feats = FeatureSet {
+        predict: PredictKind::Slzs,
+        topk: TopkKind::Sads,
+        formal: FormalKind::SufaDescend,
+        on_demand_kv: false,
+        tiled_dataflow: true,
+        oo_scheduler: true,
+        sufa_tailored: true,
+    };
+    // h = 0: the decode loop never touches X (KV arrives with the chunk
+    // and lives in the cache), so no upstream activation stream exists.
+    let shape = WorkloadShape::new(total, total, d, 0, cfg.keep_ratio);
+    let (acfg, dram) = accel();
+    let sim = simulate(&shape, &feats, &acfg, &dram);
+
+    let checks = vec![
+        StageCheck {
+            stage: "predict",
+            measured_elems: (measured.q_ingest_bytes + measured.key_ingest_bytes) as f64 / 4.0,
+            modeled_elems: sim.predict.dram_bytes as f64,
+        },
+        StageCheck { stage: "topk", measured_elems: 0.0, modeled_elems: sim.topk.dram_bytes as f64 },
+        StageCheck {
+            stage: "kv_gen",
+            measured_elems: measured.cache_append_bytes as f64 / 4.0,
+            modeled_elems: sim.kv_resident_bytes as f64 / 2.0,
+        },
+        StageCheck {
+            stage: "formal",
+            measured_elems: measured.out_egress_bytes as f64 / 4.0,
+            modeled_elems: sim.formal.dram_bytes as f64 / 2.0,
+        },
+    ];
+    Ok(PathRecon {
+        path: "decode",
+        t: total,
+        s: total,
+        d,
+        h: 0,
+        keep_ratio: cfg.keep_ratio,
+        union_ratio: 1.0,
+        measured,
+        sched,
+        sim,
+        checks,
+        hot_path_allocs,
+    })
+}
+
+/// Sequence-sharded prefill (executable Spatial-STAR). Same DRAM-class
+/// accounting as the single-core prefill — the per-hop score tiles are
+/// SRAM-class, the ring payload is isolated in `ring_payload_bytes` —
+/// so the same reconciliation closes, with the sharded run's own
+/// measured union ratio (home Q blocks partition differently than query
+/// tiles, so Σunion legitimately differs).
+fn run_sharded(wl: &AttnWorkload) -> PathRecon {
+    let inputs = PipelineInputs::from_workload(wl);
+    let (t, s, d) = (inputs.t(), inputs.s(), inputs.d());
+    let h = wl.x.cols;
+    let cfg = PipelineConfig::star().with_keep(0.2).with_tile(16);
+    let pipe = ShardedPipeline::new(cfg, 4);
+    let pool = WorkspacePool::new();
+    pipe.run_pooled(&inputs, &pool);
+    traffic::set_enabled(true);
+    let r = pipe.run_pooled(&inputs, &pool);
+    traffic::set_enabled(false);
+    let measured = r.traffic;
+
+    let ru = measured.x_ingest_bytes as f64 / 4.0 / h as f64 / s as f64;
+    let shape = WorkloadShape::new(t, s, d, h, cfg.keep_ratio).with_union_ratio(ru);
+    let (acfg, dram) = accel();
+    let sim = simulate(&shape, &FeatureSet::star(), &acfg, &dram);
+
+    let checks = vec![
+        StageCheck {
+            stage: "predict",
+            measured_elems: (measured.q_ingest_bytes + measured.key_ingest_bytes) as f64 / 4.0,
+            modeled_elems: sim.predict.dram_bytes as f64,
+        },
+        StageCheck { stage: "topk", measured_elems: 0.0, modeled_elems: sim.topk.dram_bytes as f64 },
+        StageCheck {
+            stage: "kv_gen",
+            measured_elems: measured.x_ingest_bytes as f64 / 4.0,
+            modeled_elems: sim.kv_gen.dram_bytes as f64,
+        },
+        StageCheck {
+            stage: "formal",
+            measured_elems: measured.out_egress_bytes as f64 / 4.0,
+            modeled_elems: sim.formal.dram_bytes as f64 / 2.0,
+        },
+    ];
+    PathRecon {
+        path: "sharded",
+        t,
+        s,
+        d,
+        h,
+        keep_ratio: cfg.keep_ratio,
+        union_ratio: ru,
+        measured,
+        sched: r.sched,
+        sim,
+        checks,
+        hot_path_allocs: r.hot_path_allocs,
+    }
+}
+
+fn n(x: f64) -> Json {
+    Json::num(x)
+}
+
+fn path_json(p: &PathRecon) -> Json {
+    let mut m: Vec<(&str, Json)> =
+        p.measured.fields().iter().map(|&(k, v)| (k, n(v as f64))).collect();
+    m.push(("dram_class_bytes", n(p.measured.dram_class_bytes() as f64)));
+    m.push(("sram_class_bytes", n(p.measured.sram_class_bytes() as f64)));
+    Json::obj(vec![
+        (
+            "shape",
+            Json::obj(vec![
+                ("t", n(p.t as f64)),
+                ("s", n(p.s as f64)),
+                ("d", n(p.d as f64)),
+                ("h", n(p.h as f64)),
+                ("keep_ratio", n(p.keep_ratio)),
+                ("union_ratio", n(p.union_ratio)),
+            ]),
+        ),
+        ("measured", Json::obj(m)),
+        (
+            "sched",
+            Json::obj(vec![
+                ("workers", n(p.sched.workers as f64)),
+                ("chunk_grabs", n(p.sched.chunk_grabs as f64)),
+                ("steals", n(p.sched.steals as f64)),
+                ("tiles", n(p.sched.tiles as f64)),
+                ("max_worker_tiles", n(p.sched.max_worker_tiles as f64)),
+                ("imbalance", n(p.sched.imbalance())),
+            ]),
+        ),
+        (
+            "modeled",
+            Json::obj(vec![
+                ("predict_dram_bytes", n(p.sim.predict.dram_bytes as f64)),
+                ("topk_dram_bytes", n(p.sim.topk.dram_bytes as f64)),
+                ("kv_gen_dram_bytes", n(p.sim.kv_gen.dram_bytes as f64)),
+                ("formal_dram_bytes", n(p.sim.formal.dram_bytes as f64)),
+                ("total_dram_bytes", n(p.sim.dram_bytes as f64)),
+                ("kv_resident_bytes", n(p.sim.kv_resident_bytes as f64)),
+            ]),
+        ),
+        (
+            "stages",
+            Json::obj(
+                p.checks
+                    .iter()
+                    .map(|c| {
+                        (
+                            c.stage,
+                            Json::obj(vec![
+                                ("measured_elems", n(c.measured_elems)),
+                                ("modeled_elems", n(c.modeled_elems)),
+                                ("ratio", n(c.ratio())),
+                            ]),
+                        )
+                    })
+                    .collect(),
+            ),
+        ),
+        ("hot_path_allocs", n(p.hot_path_allocs as f64)),
+    ])
+}
+
+/// Run the reconciliation on all three execution paths; hard-fails on
+/// any out-of-tolerance stage or a metered hot-path allocation. Returns
+/// the `BENCH_traffic.json` payload.
+pub fn traffic_reconcile() -> crate::Result<Json> {
+    let (t, s, hidden, decode_prefill, decode_steps) = dims();
+    let model = ModelConfig {
+        name: "traffic".to_string(),
+        hidden,
+        heads: 4,
+        layers: 2,
+        seq_len: s,
+        causal: true,
+    };
+    let mut rng = Rng::new(0x5452_4146); // "TRAF"
+    let wl = AttnWorkload::generate(&model, s, t, &mut rng);
+
+    let prefill = run_prefill(&wl);
+    let decode = run_decode(hidden / 4, decode_prefill, decode_steps)?;
+    let sharded = run_sharded(&wl);
+    let paths = [&prefill, &decode, &sharded];
+
+    header("traffic reconciliation (measured vs simulator-modeled, elements)");
+    row(
+        "path/stage",
+        &[
+            format!("{:>12}", "measured"),
+            format!("{:>12}", "modeled"),
+            format!("{:>8}", "ratio"),
+            format!("{:>6}", "ok"),
+        ],
+    );
+    for p in paths {
+        for c in &p.checks {
+            row(
+                &format!("{}/{}", p.path, c.stage),
+                &[
+                    format!("{:>12.0}", c.measured_elems),
+                    format!("{:>12.0}", c.modeled_elems),
+                    format!("{:>8.4}", c.ratio()),
+                    format!("{:>6}", if c.ok() { "ok" } else { "FAIL" }),
+                ],
+            );
+        }
+        row(
+            &format!("{} bytes", p.path),
+            &[
+                format!("dram={}", p.measured.dram_class_bytes()),
+                format!("sram={}", p.measured.sram_class_bytes()),
+                format!("ring={}", p.measured.ring_payload_bytes),
+                format!("steals={}", p.sched.steals),
+                format!("imbalance={:.2}", p.sched.imbalance()),
+            ],
+        );
+    }
+
+    let mut hot_path_allocs = 0u64;
+    for p in paths {
+        for c in &p.checks {
+            anyhow::ensure!(
+                c.ok(),
+                "traffic: {}/{} measured {:.0} elems vs modeled {:.0} \
+                 (ratio {:.4}, tolerance ±{:.0})",
+                p.path,
+                c.stage,
+                c.measured_elems,
+                c.modeled_elems,
+                c.ratio(),
+                c.tolerance(),
+            );
+        }
+        hot_path_allocs += p.hot_path_allocs;
+    }
+    anyhow::ensure!(
+        hot_path_allocs == 0,
+        "traffic: counted warm runs metered {hot_path_allocs} hot-path allocations \
+         (counting must be allocation-free)"
+    );
+
+    Ok(Json::obj(vec![
+        ("bench", Json::str("traffic")),
+        (
+            "tolerance",
+            Json::obj(vec![("rel", n(TOL_REL)), ("abs_elems", n(TOL_ABS_ELEMS))]),
+        ),
+        (
+            "paths",
+            Json::obj(vec![
+                ("prefill", path_json(&prefill)),
+                ("decode", path_json(&decode)),
+                ("sharded", path_json(&sharded)),
+            ]),
+        ),
+        ("hot_path_allocs", n(hot_path_allocs as f64)),
+        ("alloc_counter_on", Json::Bool(allocmeter::installed())),
+    ]))
+}
+
+fn bench_file(name: &str) -> String {
+    format!("BENCH_{}.json", name.replace('-', "_"))
+}
+
+fn read_json(path: &Path) -> crate::Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+    Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+}
+
+/// Compare `BENCH_*.json` pairs from two directories under the
+/// per-metric-class tolerances; prints one line per bench (plus every
+/// regression) and returns whether all passed. Pure over the two
+/// directories — [`check`] owns the re-run; tests doctor the files.
+pub fn check_dirs(baseline_dir: &Path, fresh_dir: &Path, names: &[&str]) -> crate::Result<bool> {
+    let mut all_ok = true;
+    for nm in names {
+        let file = bench_file(nm);
+        let base = read_json(&baseline_dir.join(&file))?;
+        let fresh = read_json(&fresh_dir.join(&file))?;
+        let rep = compare_benches(nm, &base, &fresh);
+        if rep.is_ok() {
+            println!("bench check: {nm}: ok ({} gated metrics compared)", rep.compared);
+        } else {
+            all_ok = false;
+            for r in &rep.regressions {
+                println!("bench check: {nm}: REGRESSION {r}");
+            }
+            for m in &rep.missing {
+                println!("bench check: {nm}: MISSING {m}");
+            }
+        }
+    }
+    Ok(all_ok)
+}
+
+/// `star bench check`: re-run every gated bench whose committed
+/// `BENCH_*.json` baseline exists, into a temp directory, and compare
+/// fresh vs committed. `Err` (→ nonzero exit) on any regression; soft
+/// pass with a warning when no baselines are committed yet.
+pub fn check() -> crate::Result<()> {
+    let baseline_dir = super::trajectory::out_dir();
+    let present: Vec<&str> = GATED_BENCHES
+        .iter()
+        .copied()
+        .filter(|nm| baseline_dir.join(bench_file(nm)).is_file())
+        .collect();
+    if present.is_empty() {
+        println!(
+            "bench check: no committed BENCH_*.json baselines in {} — nothing to gate \
+             (run `star bench all` and commit the files to arm the gate)",
+            baseline_dir.display()
+        );
+        return Ok(());
+    }
+
+    let tmp = std::env::temp_dir().join(format!("star-bench-check-{}", std::process::id()));
+    std::fs::create_dir_all(&tmp)?;
+    // Point the writers at the temp dir for the fresh runs, restoring
+    // the previous value (baselines were already located above).
+    let prev = std::env::var_os("STAR_BENCH_DIR");
+    std::env::set_var("STAR_BENCH_DIR", &tmp);
+    let ran: crate::Result<()> = (|| {
+        for nm in &present {
+            super::run(nm)?;
+        }
+        Ok(())
+    })();
+    match prev {
+        Some(v) => std::env::set_var("STAR_BENCH_DIR", v),
+        None => std::env::remove_var("STAR_BENCH_DIR"),
+    }
+    ran?;
+
+    let ok = check_dirs(&baseline_dir, &tmp, &present)?;
+    anyhow::ensure!(ok, "bench check: performance regression against committed baselines");
+    println!("bench check: all gated metrics within tolerance ({} baselines)", present.len());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traffic_bench_reconciles_and_writes_schema() {
+        crate::bench::run("traffic").unwrap();
+        let path = crate::bench::trajectory::out_dir().join("BENCH_traffic.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("traffic"));
+        assert_eq!(j.get("hot_path_allocs").unwrap().as_f64(), Some(0.0));
+        let paths = j.get("paths").unwrap();
+        for pname in ["prefill", "decode", "sharded"] {
+            let p = paths.get(pname).unwrap_or_else(|| panic!("paths.{pname} missing"));
+            let measured = p.get("measured").unwrap();
+            // Every counter field is present (the python cross-reader
+            // and the Prometheus exposition share this list).
+            for (key, _) in TrafficCounter::new().fields() {
+                assert!(measured.get(key).is_some(), "{pname}: measured.{key} missing");
+            }
+            for stage in ["predict", "topk", "kv_gen", "formal"] {
+                let c = p.get("stages").unwrap().get(stage).unwrap();
+                let ratio = c.get("ratio").unwrap().as_f64().unwrap();
+                let modeled = c.get("modeled_elems").unwrap().as_f64().unwrap();
+                // In-tolerance already hard-checked by run(); re-derive
+                // loosely from the written numbers.
+                if modeled > 0.0 {
+                    assert!(
+                        (ratio - 1.0).abs() <= 0.05,
+                        "{pname}/{stage}: written ratio {ratio} too far from 1"
+                    );
+                }
+            }
+            assert_eq!(p.get("hot_path_allocs").unwrap().as_f64(), Some(0.0));
+            let sched = p.get("sched").unwrap();
+            assert!(sched.get("workers").unwrap().as_f64().unwrap() >= 1.0);
+            assert!(sched.get("imbalance").unwrap().as_f64().unwrap() >= 1.0 - 1e-9);
+        }
+        // The sharded path reports ring traffic; single-core paths none.
+        let ring = |p: &str| {
+            paths
+                .get(p)
+                .unwrap()
+                .get("measured")
+                .unwrap()
+                .get("ring_payload_bytes")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        assert_eq!(ring("prefill"), 0.0);
+        assert!(ring("sharded") > 0.0, "4-shard ring forwarded payloads");
+    }
+
+    #[test]
+    fn check_dirs_passes_identical_and_flags_injected_regression() {
+        use crate::bench::trajectory::write_to;
+        let base_dir = std::env::temp_dir().join("star_check_base_test");
+        let fresh_dir = std::env::temp_dir().join("star_check_fresh_test");
+        std::fs::create_dir_all(&base_dir).unwrap();
+        std::fs::create_dir_all(&fresh_dir).unwrap();
+        let doc = |tokens: f64, hot: f64| {
+            Json::obj(vec![
+                ("bench", Json::str("decode")),
+                ("tokens_per_s", Json::num(tokens)),
+                ("hot_path_allocs", Json::num(hot)),
+                (
+                    "traffic",
+                    Json::obj(vec![("q_ingest_bytes", Json::num(4096.0))]),
+                ),
+            ])
+        };
+        write_to(&base_dir, "decode", doc(100.0, 0.0)).unwrap();
+        // Identical fresh run passes.
+        write_to(&fresh_dir, "decode", doc(100.0, 0.0)).unwrap();
+        assert!(check_dirs(&base_dir, &fresh_dir, &["decode"]).unwrap());
+        // Injected throughput regression (−30%) trips the gate.
+        write_to(&fresh_dir, "decode", doc(70.0, 0.0)).unwrap();
+        assert!(!check_dirs(&base_dir, &fresh_dir, &["decode"]).unwrap());
+        // Injected hot-path allocation trips the gate even at full speed.
+        write_to(&fresh_dir, "decode", doc(100.0, 2.0)).unwrap();
+        assert!(!check_dirs(&base_dir, &fresh_dir, &["decode"]).unwrap());
+        // Missing fresh file is an error, not a silent pass.
+        assert!(check_dirs(&base_dir, &fresh_dir, &["kernels"]).is_err());
+    }
+}

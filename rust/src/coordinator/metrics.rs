@@ -8,7 +8,7 @@
 //! and the Prometheus-style [`MetricsSnapshot::render_prometheus`]
 //! exposition.
 
-use crate::obs::{HistSummary, Histogram};
+use crate::obs::{HistSummary, Histogram, SchedStats, TrafficCounter};
 use std::sync::Mutex;
 
 /// Which serving path produced a response — selects the per-class
@@ -75,6 +75,11 @@ struct Inner {
     /// Per-shard stage busy times, indexed by ring position (grown on
     /// demand to the largest worker count seen).
     shard_stage_s: Vec<crate::pipeline::StageTiming>,
+    // Cumulative measured byte traffic + scheduler stats across every
+    // served batch (all zeros unless counting was enabled — see
+    // `crate::obs::traffic::set_enabled`).
+    traffic: TrafficCounter,
+    sched: SchedStats,
 }
 
 /// A point-in-time copy for reporting. Histogram fields are
@@ -152,6 +157,18 @@ pub struct MetricsSnapshot {
     /// Per-shard stage busy times (ring position → timing), summed over
     /// all sharded runs.
     pub shard_stage_s: Vec<crate::pipeline::StageTiming>,
+    /// Cumulative measured byte traffic across served batches (zeros
+    /// unless counting is enabled — `crate::obs::traffic::set_enabled`).
+    pub traffic: TrafficCounter,
+    /// Cumulative work-stealing scheduler stats across served batches.
+    pub sched: SchedStats,
+    /// Full request-latency histogram (nanosecond samples) — drives the
+    /// Prometheus cumulative `_bucket` exposition; `latency` above is
+    /// the condensed summary of the same data.
+    pub latency_hist: Histogram,
+    /// Full per-stage busy-time histograms (nanosecond samples), indexed
+    /// by [`STAGE_NAMES`] — the bucket-level view behind `stage_hist`.
+    pub stage_ns_hist: [Histogram; 4],
 }
 
 impl Metrics {
@@ -246,6 +263,15 @@ impl Metrics {
         }
     }
 
+    /// Fold one run's measured traffic counters and scheduler stats into
+    /// the cumulative window. Cheap no-op folds when counting was off
+    /// (the report carries zeros).
+    pub fn record_traffic(&self, t: &TrafficCounter, sched: &SchedStats) {
+        let mut m = self.inner.lock().unwrap();
+        m.traffic.merge(t);
+        m.sched.merge(sched);
+    }
+
     /// Account one decode step served against the paged KV-cache.
     pub fn record_decode(&self, r: &crate::pipeline::DecodeReport) {
         let mut m = self.inner.lock().unwrap();
@@ -290,6 +316,10 @@ impl Metrics {
             ring_payload_bytes: m.ring_payload_bytes,
             gathered_kv_rows: m.gathered_kv_rows,
             shard_stage_s: m.shard_stage_s.clone(),
+            traffic: m.traffic,
+            sched: m.sched,
+            latency_hist: m.latency.clone(),
+            stage_ns_hist: m.stage_ns.clone(),
         }
     }
 }
@@ -363,6 +393,19 @@ impl MetricsSnapshot {
                 self.cache_sessions_evicted
             ));
         }
+        if self.traffic.total_bytes() > 0 {
+            s.push_str(&format!(
+                "\ntraffic: dram={} sram={} ring={} cache_append={} remat={} \
+                 steals={} imbalance={:.2}",
+                crate::util::fmt_bytes(self.traffic.dram_class_bytes() as f64),
+                crate::util::fmt_bytes(self.traffic.sram_class_bytes() as f64),
+                crate::util::fmt_bytes(self.traffic.ring_payload_bytes as f64),
+                crate::util::fmt_bytes(self.traffic.cache_append_bytes as f64),
+                crate::util::fmt_bytes(self.traffic.cache_remat_bytes as f64),
+                self.sched.steals,
+                self.sched.imbalance()
+            ));
+        }
         if self.sharded_prefills > 0 {
             let busy: Vec<String> =
                 self.shard_stage_s.iter().map(|t| format!("{:.3}ms", t.busy_s() * 1e3)).collect();
@@ -382,7 +425,10 @@ impl MetricsSnapshot {
     /// Prometheus-style text exposition of the same snapshot — the
     /// scrape-endpoint view of [`MetricsSnapshot::render`].
     pub fn render_prometheus(&self) -> String {
-        use crate::obs::prom::{write_summary, write_summary_family, write_value};
+        use crate::obs::prom::{
+            write_histogram, write_histogram_family, write_summary, write_summary_family,
+            write_value,
+        };
         let mut out = String::new();
         write_value(&mut out, "star_requests_total", "responses delivered", "counter", self.requests as f64);
         write_value(&mut out, "star_rejected_total", "requests rejected at admission", "counter", self.rejected as f64);
@@ -424,6 +470,44 @@ impl MetricsSnapshot {
         write_value(&mut out, "star_ring_steps_total", "ring steps across sharded runs", "counter", self.ring_steps as f64);
         write_value(&mut out, "star_ring_payload_bytes_total", "modeled bytes forwarded on the worker ring", "counter", self.ring_payload_bytes as f64);
         write_value(&mut out, "star_gathered_kv_rows_total", "selected KV rows gathered to home workers", "counter", self.gathered_kv_rows as f64);
+        // Measured byte-traffic counters (crate::obs::traffic): one
+        // counter family member per TrafficCounter field — the same list
+        // the BENCH_traffic.json writer emits.
+        for (key, v) in self.traffic.fields() {
+            write_value(
+                &mut out,
+                &format!("star_traffic_{key}_total"),
+                "measured bytes (crate::obs::traffic)",
+                "counter",
+                v as f64,
+            );
+        }
+        write_value(&mut out, "star_sched_workers", "worker threads in the widest parallel section", "gauge", self.sched.workers as f64);
+        write_value(&mut out, "star_sched_chunk_grabs_total", "chunk claims off the shared cursor", "counter", self.sched.chunk_grabs as f64);
+        write_value(&mut out, "star_sched_steals_total", "chunk claims beyond each worker's first", "counter", self.sched.steals as f64);
+        write_value(&mut out, "star_sched_tiles_total", "tiles executed by the work-stealing scheduler", "counter", self.sched.tiles as f64);
+        write_value(&mut out, "star_sched_imbalance", "busiest-worker load vs perfect split", "gauge", self.sched.imbalance());
+        // Cumulative log-bucketed histograms (`_bucket{le=…}`) behind
+        // the summary quantiles above.
+        write_histogram(
+            &mut out,
+            "star_request_latency_hist_seconds",
+            "end-to-end request latency histogram",
+            "",
+            &self.latency_hist,
+            1e-9,
+        );
+        let labels: Vec<String> =
+            STAGE_NAMES.iter().map(|n| format!("stage=\"{n}\"")).collect();
+        let series: Vec<(&str, &Histogram)> =
+            labels.iter().map(String::as_str).zip(self.stage_ns_hist.iter()).collect();
+        write_histogram_family(
+            &mut out,
+            "star_stage_hist_seconds",
+            "per-batch pipeline-stage busy-time histogram",
+            &series,
+            1e-9,
+        );
         out
     }
 }
@@ -517,12 +601,40 @@ mod tests {
             "star_tpot_seconds_count 1",
             "star_stage_seconds{stage=\"formal\",quantile=\"0.95\"}",
             "star_batch_rows_count 1",
+            "star_traffic_q_ingest_bytes_total",
+            "star_traffic_cache_remat_bytes_total",
+            "star_sched_steals_total",
+            "star_sched_imbalance",
+            "# TYPE star_request_latency_hist_seconds histogram",
+            "star_request_latency_hist_seconds_bucket{le=\"+Inf\"} 2",
+            "star_stage_hist_seconds_bucket{stage=\"predict\",le=\"+Inf\"}",
         ] {
             assert!(text.contains(family), "missing {family:?} in:\n{text}");
         }
         // One header per family even with several labeled series.
         assert_eq!(text.matches("# TYPE star_ttft_seconds summary").count(), 1);
         assert_eq!(text.matches("# TYPE star_stage_seconds summary").count(), 1);
+        assert_eq!(text.matches("# TYPE star_stage_hist_seconds histogram").count(), 1);
+    }
+
+    #[test]
+    fn traffic_counters_accumulate_and_render() {
+        let m = Metrics::new();
+        let mut t = TrafficCounter::new();
+        t.q_ingest_bytes = 1024;
+        t.ring_payload_bytes = 64;
+        m.record_traffic(&t, &SchedStats::single(8));
+        m.record_traffic(&t, &SchedStats::single(8));
+        let s = m.snapshot();
+        assert_eq!(s.traffic.q_ingest_bytes, 2048);
+        assert_eq!(s.traffic.ring_payload_bytes, 128);
+        assert_eq!(s.sched.tiles, 16);
+        assert_eq!(s.sched.workers, 1);
+        let line = s.render();
+        assert!(line.contains("traffic: dram="), "{line}");
+        let prom = s.render_prometheus();
+        assert!(prom.contains("star_traffic_q_ingest_bytes_total 2048"), "{prom}");
+        assert!(prom.contains("star_sched_tiles_total 16"), "{prom}");
     }
 
     #[test]

@@ -611,6 +611,7 @@ fn run_native(
             Ok(report) => {
                 metrics.record_stage_times(&report.timing, report.stalls);
                 metrics.record_decode(&report);
+                metrics.record_traffic(&report.traffic, &report.sched);
                 metrics.record_workspace_bytes(report.workspace_bytes);
                 outs[i] = Some(report.out);
             }
@@ -640,6 +641,7 @@ fn run_native(
     let inputs = PipelineInputs::qkv(&qcat, k, v);
     let report = SparseAttentionPipeline::new(*cfg).run_pooled(&inputs, workspaces);
     metrics.record_stage_times(&report.timing, report.stalls);
+    metrics.record_traffic(&report.traffic, &report.sched);
     metrics.record_workspace_bytes(report.workspace_bytes);
     let mut at = 0;
     for (ri, q) in with_q {
@@ -695,6 +697,7 @@ fn run_sharded_native(
         let report = pipeline.run_pooled(&PipelineInputs::qkv(q, k, v), workspaces);
         metrics.record_stage_times(&report.timing, report.stalls);
         metrics.record_sharded(&report);
+        metrics.record_traffic(&report.traffic, &report.sched);
         metrics.record_workspace_bytes(report.workspace_bytes);
         outs[i] = Some(report.out);
     }

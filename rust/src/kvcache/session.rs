@@ -88,6 +88,10 @@ pub struct AppendOutcome {
     pub evicted_sessions: Vec<u64>,
     /// Pages rebuilt from history because this session had been evicted.
     pub rematerialized_pages: usize,
+    /// Tokens those rebuilt pages hold (the session length at
+    /// re-materialization time; 0 when nothing was rebuilt) — the exact
+    /// row count behind the re-materialization byte traffic.
+    pub rematerialized_tokens: usize,
 }
 
 /// The paged KV-cache session store.
@@ -194,7 +198,8 @@ impl SessionStore {
         }
         self.touch(sid);
         let mut evicted = Vec::new();
-        let rematerialized_pages = self.rematerialize(sid, ops, &mut evicted)?;
+        let (rematerialized_pages, rematerialized_tokens) =
+            self.rematerialize(sid, ops, &mut evicted)?;
         let start = self.sessions.get(&sid).unwrap().len;
         for i in 0..k.rows {
             self.push_row(sid, k.row(i), v.row(i), &mut evicted)?;
@@ -209,7 +214,12 @@ impl SessionStore {
             ops.predict.tally(OpKind::LzEncode, (k.rows * self.cfg.d) as u64);
         }
         self.cache.stats.appended_tokens += k.rows as u64;
-        Ok(AppendOutcome { start, evicted_sessions: evicted, rematerialized_pages })
+        Ok(AppendOutcome {
+            start,
+            evicted_sessions: evicted,
+            rematerialized_pages,
+            rematerialized_tokens,
+        })
     }
 
     /// Drop a finished session, returning its pages to the pool.
@@ -248,20 +258,21 @@ impl SessionStore {
         self.sessions.entry(sid).or_default().last_touch = clock;
     }
 
-    /// Rebuild an evicted session's pages from host history. Rebuilt
-    /// operands are bit-identical to the originals (per-row scales).
+    /// Rebuild an evicted session's pages from host history, returning
+    /// (pages built, tokens they hold). Rebuilt operands are
+    /// bit-identical to the originals (per-row scales).
     fn rematerialize(
         &mut self,
         sid: u64,
         ops: &mut StageOps,
         evicted: &mut Vec<u64>,
-    ) -> crate::Result<usize> {
+    ) -> crate::Result<(usize, usize)> {
         let needs = {
             let s = self.sessions.get(&sid).unwrap();
             s.len > 0 && s.pages.is_empty()
         };
         if !needs {
-            return Ok(0);
+            return Ok((0, 0));
         }
         // Move the history out instead of cloning it (it can be thousands
         // of tokens), rebuild, then reinstall — including on the (defended
@@ -284,7 +295,7 @@ impl SessionStore {
             ops.predict.tally(OpKind::LzEncode, (len * d) as u64);
         }
         self.cache.stats.pages_rematerialized += built as u64;
-        Ok(built)
+        Ok((built, len))
     }
 
     /// The page-building loop of [`SessionStore::rematerialize`]: fresh

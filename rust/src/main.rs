@@ -2,6 +2,13 @@
 //!
 //! Subcommands:
 //!   bench <name|all>        regenerate a paper table/figure
+//!   bench traffic           measured-vs-modeled memory-traffic
+//!                           reconciliation across all three execution
+//!                           paths (writes BENCH_traffic.json)
+//!   bench check             perf-regression gate: re-run the gated
+//!                           benches and compare against the committed
+//!                           BENCH_*.json baselines (nonzero exit on
+//!                           regression)
 //!   sim [--model M]...      single-core cycle-level simulation
 //!   spatial [--mesh 5x5]    multi-core spatial simulation
 //!   serve [--requests N]    run the LTPP serving loop (native pipeline
@@ -17,6 +24,8 @@
 //!
 //! `STAR_TRACE=1` enables span tracing for any subcommand (e.g.
 //! `STAR_TRACE=1 star bench decode` meters the traced hot path).
+//! `STAR_TRAFFIC=1` enables byte-traffic counting the same way, so
+//! served metrics and traced spans carry measured byte counts.
 
 use star::cli::Args;
 use star::util::allocmeter::CountingAllocator;
@@ -41,6 +50,9 @@ fn main() {
     // benches' zero-allocation guards also meter the traced hot path.
     if std::env::var("STAR_TRACE").map(|v| !v.is_empty() && v != "0").unwrap_or(false) {
         star::obs::set_enabled(true);
+    }
+    if std::env::var("STAR_TRAFFIC").map(|v| !v.is_empty() && v != "0").unwrap_or(false) {
+        star::obs::traffic::set_enabled(true);
     }
     let args = Args::from_env();
     let code = match run(&args) {
@@ -248,6 +260,9 @@ fn cmd_trace(args: &Args) -> Result<()> {
 
     let out_path = args.positional.first().map(String::as_str).unwrap_or("trace.json");
     star::obs::set_enabled(true);
+    // Count byte traffic too, so every exported span carries its
+    // measured `bytes` attribution in `args`.
+    star::obs::traffic::set_enabled(true);
 
     let d = 64;
     let cfg = PipelineConfig::star().with_keep(0.2).with_tile(16).with_threads(1);

@@ -1,0 +1,259 @@
+//! The perf-regression gate: compare a fresh `BENCH_*.json` document
+//! against a committed baseline under noise-aware per-metric-class
+//! tolerances (DESIGN.md §11).
+//!
+//! The comparison is a pure function over two parsed JSON documents —
+//! no filesystem, no clock — so the gate logic is unit-testable with
+//! doctored baselines. `star bench check` (see [`crate::bench`]) owns
+//! the IO: it loads the committed files, re-runs the benches into a
+//! temp directory, and exits nonzero when any [`BaselineReport`] holds
+//! a regression.
+//!
+//! Metrics are discovered by walking the baseline document and
+//! classifying leaf keys by name ([`MetricClass::of_key`]): throughput
+//! counters may drop up to 10 % before the gate trips (wall-clock noise
+//! on shared CI runners), tail latencies may rise up to 25 %, measured
+//! byte counters must match **exactly** (they are deterministic pure
+//! functions of shape + selection — see [`super::traffic`]), and
+//! `hot_path_allocs` must be exactly zero in the fresh run regardless
+//! of what the baseline recorded. Array values (table `rows`) are not
+//! walked: positional compares are brittle under row insertion, and
+//! every gated metric is exposed as a named object field.
+
+use crate::util::json::Json;
+
+/// Relative throughput drop tolerated before flagging (noise window for
+/// wall-clock-derived rates on shared machines).
+pub const THROUGHPUT_DROP_TOL: f64 = 0.10;
+/// Relative tail-latency rise tolerated before flagging.
+pub const TAIL_LATENCY_RISE_TOL: f64 = 0.25;
+
+/// How a metric is judged against its baseline value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricClass {
+    /// Higher is better; regression when fresh < baseline × (1 − 10 %).
+    Throughput,
+    /// Lower is better; regression when fresh > baseline × (1 + 25 %).
+    TailLatency,
+    /// Deterministic byte counter; regression on any mismatch (a
+    /// legitimate change re-baselines explicitly).
+    Bytes,
+    /// Must be exactly zero in the fresh run (the zero-allocation
+    /// contract), whatever the baseline holds.
+    ExactZero,
+}
+
+impl MetricClass {
+    /// Classify a JSON object key; `None` means the field is not gated.
+    pub fn of_key(key: &str) -> Option<MetricClass> {
+        if key == "hot_path_allocs" {
+            Some(MetricClass::ExactZero)
+        } else if key == "tokens_per_s" || key.ends_with("gflops") || key.ends_with("_per_s") {
+            Some(MetricClass::Throughput)
+        } else if key == "p99" {
+            Some(MetricClass::TailLatency)
+        } else if key == "bytes" || key.ends_with("_bytes") {
+            Some(MetricClass::Bytes)
+        } else {
+            None
+        }
+    }
+
+    /// Judge `fresh` against `base`; `Some(reason)` on regression.
+    pub fn check(self, base: f64, fresh: f64) -> Option<String> {
+        match self {
+            MetricClass::Throughput => {
+                if fresh < base * (1.0 - THROUGHPUT_DROP_TOL) {
+                    Some(format!(
+                        "throughput {fresh:.3} below baseline {base:.3} − {:.0}%",
+                        THROUGHPUT_DROP_TOL * 100.0
+                    ))
+                } else {
+                    None
+                }
+            }
+            MetricClass::TailLatency => {
+                if fresh > base * (1.0 + TAIL_LATENCY_RISE_TOL) {
+                    Some(format!(
+                        "tail latency {fresh:.4} above baseline {base:.4} + {:.0}%",
+                        TAIL_LATENCY_RISE_TOL * 100.0
+                    ))
+                } else {
+                    None
+                }
+            }
+            MetricClass::Bytes => {
+                if fresh != base {
+                    Some(format!("byte counter {fresh} != baseline {base} (exact match required)"))
+                } else {
+                    None
+                }
+            }
+            MetricClass::ExactZero => {
+                if fresh != 0.0 {
+                    Some(format!("expected exactly 0, measured {fresh}"))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+/// Result of comparing one fresh bench document against its baseline.
+#[derive(Clone, Debug, Default)]
+pub struct BaselineReport {
+    /// Bench name (the `BENCH_<name>.json` stem).
+    pub bench: String,
+    /// Gated metrics found in the baseline and compared.
+    pub compared: usize,
+    /// Regressions, one `"path: reason"` line each.
+    pub regressions: Vec<String>,
+    /// Gated baseline metrics absent (or non-numeric) in the fresh run
+    /// — treated as regressions by [`BaselineReport::is_ok`]: a metric
+    /// silently disappearing is exactly what a gate must catch.
+    pub missing: Vec<String>,
+}
+
+impl BaselineReport {
+    /// Gate verdict: no regressions and no vanished metrics.
+    pub fn is_ok(&self) -> bool {
+        self.regressions.is_empty() && self.missing.is_empty()
+    }
+}
+
+/// Compare a fresh bench document against its committed baseline. Pure:
+/// both documents are already parsed; the caller owns file IO.
+pub fn compare_benches(bench: &str, baseline: &Json, fresh: &Json) -> BaselineReport {
+    let mut report = BaselineReport { bench: bench.to_string(), ..BaselineReport::default() };
+    walk("", baseline, fresh, &mut report);
+    report
+}
+
+fn walk(path: &str, base: &Json, fresh: &Json, report: &mut BaselineReport) {
+    let Json::Obj(bo) = base else { return };
+    for (key, bval) in bo {
+        let sub = if path.is_empty() { key.clone() } else { format!("{path}.{key}") };
+        let fval = fresh.get(key);
+        match bval {
+            Json::Obj(_) => {
+                // Descend only when the fresh side is also an object;
+                // a vanished subtree surfaces via its gated leaves.
+                if let Some(f) = fval {
+                    walk(&sub, bval, f, report);
+                } else if subtree_has_gated(bval) {
+                    report.missing.push(sub);
+                }
+            }
+            Json::Num(b) => {
+                let Some(class) = MetricClass::of_key(key) else { continue };
+                match fval.and_then(|f| f.as_f64()) {
+                    None => report.missing.push(sub),
+                    Some(f) => {
+                        report.compared += 1;
+                        if let Some(reason) = class.check(*b, f) {
+                            report.regressions.push(format!("{sub}: {reason}"));
+                        }
+                    }
+                }
+            }
+            // Arrays (table rows) are positional — not gated here.
+            _ => {}
+        }
+    }
+}
+
+fn subtree_has_gated(v: &Json) -> bool {
+    match v {
+        Json::Obj(o) => o.iter().any(|(k, v)| {
+            (matches!(v, Json::Num(_)) && MetricClass::of_key(k).is_some()) || subtree_has_gated(v)
+        }),
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(tokens_per_s: f64, p99: f64, hot: f64, bytes: f64) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str("decode")),
+            ("tokens_per_s", Json::num(tokens_per_s)),
+            (
+                "step_latency_ms",
+                Json::obj(vec![("p50", Json::num(p99 / 2.0)), ("p99", Json::num(p99))]),
+            ),
+            ("hot_path_allocs", Json::num(hot)),
+            (
+                "traffic",
+                Json::obj(vec![("q_ingest_bytes", Json::num(bytes))]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn identical_docs_pass() {
+        let b = doc(100.0, 2.0, 0.0, 4096.0);
+        let r = compare_benches("decode", &b, &b);
+        assert!(r.is_ok(), "{:?}", r);
+        // tokens_per_s + p99 + hot_path_allocs + q_ingest_bytes.
+        assert_eq!(r.compared, 4);
+    }
+
+    #[test]
+    fn throughput_window_is_noise_aware() {
+        let b = doc(100.0, 2.0, 0.0, 64.0);
+        // 5% slower: inside the window.
+        assert!(compare_benches("decode", &b, &doc(95.0, 2.0, 0.0, 64.0)).is_ok());
+        // 15% slower: regression.
+        let r = compare_benches("decode", &b, &doc(85.0, 2.0, 0.0, 64.0));
+        assert!(!r.is_ok());
+        assert!(r.regressions[0].contains("tokens_per_s"), "{:?}", r.regressions);
+        // Faster is never a regression.
+        assert!(compare_benches("decode", &b, &doc(250.0, 2.0, 0.0, 64.0)).is_ok());
+    }
+
+    #[test]
+    fn tail_latency_rise_flags_but_p50_is_not_gated() {
+        let b = doc(100.0, 2.0, 0.0, 64.0);
+        assert!(compare_benches("decode", &b, &doc(100.0, 2.4, 0.0, 64.0)).is_ok());
+        let r = compare_benches("decode", &b, &doc(100.0, 3.0, 0.0, 64.0));
+        assert_eq!(r.regressions.len(), 1);
+        assert!(r.regressions[0].starts_with("step_latency_ms.p99"));
+    }
+
+    #[test]
+    fn bytes_must_match_exactly_and_allocs_must_be_zero() {
+        let b = doc(100.0, 2.0, 0.0, 4096.0);
+        let r = compare_benches("decode", &b, &doc(100.0, 2.0, 0.0, 4097.0));
+        assert!(r.regressions.iter().any(|m| m.contains("q_ingest_bytes")), "{:?}", r);
+        // An injected hot-path allocation trips the gate even though the
+        // "relative" change from 0 is undefined.
+        let r = compare_benches("decode", &b, &doc(100.0, 2.0, 3.0, 4096.0));
+        assert!(r.regressions.iter().any(|m| m.contains("hot_path_allocs")), "{:?}", r);
+    }
+
+    #[test]
+    fn vanished_metric_is_a_failure() {
+        let b = doc(100.0, 2.0, 0.0, 64.0);
+        let fresh = Json::obj(vec![("bench", Json::str("decode"))]);
+        let r = compare_benches("decode", &b, &fresh);
+        assert!(!r.is_ok());
+        assert!(r.missing.iter().any(|m| m == "tokens_per_s"), "{:?}", r.missing);
+        assert!(
+            r.missing.iter().any(|m| m.contains("step_latency_ms") || m.contains("traffic")),
+            "vanished subtrees with gated leaves must be reported: {:?}",
+            r.missing
+        );
+    }
+
+    #[test]
+    fn unclassified_fields_are_ignored() {
+        let b = Json::obj(vec![("wall_s", Json::num(1.0)), ("rows", Json::num(5.0))]);
+        let f = Json::obj(vec![("wall_s", Json::num(99.0)), ("rows", Json::num(1.0))]);
+        let r = compare_benches("x", &b, &f);
+        assert!(r.is_ok());
+        assert_eq!(r.compared, 0);
+    }
+}

@@ -37,6 +37,24 @@ pub fn chrome_trace(spans: &[Span]) -> Json {
             ("args", Json::obj(vec![("name", Json::str(path.name()))])),
         ]));
     }
+    // Name each thread row once per distinct (pid, tid): "worker N" on
+    // the pooled paths, "shard N" on the ring.
+    let mut lanes: Vec<(ExecPath, u32)> = sorted.iter().map(|s| (s.path, s.worker)).collect();
+    lanes.sort_by_key(|&(p, w)| (pid(p) as u64, w));
+    lanes.dedup();
+    for (path, worker) in lanes {
+        let label = match path {
+            ExecPath::Sharded => format!("shard {worker}"),
+            _ => format!("worker {worker}"),
+        };
+        events.push(Json::obj(vec![
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(pid(path))),
+            ("tid", Json::num(worker as f64)),
+            ("args", Json::obj(vec![("name", Json::str(&label))])),
+        ]));
+    }
     for s in sorted {
         let dur_ns = s.dur_ns().max(1);
         events.push(Json::obj(vec![
@@ -52,6 +70,7 @@ pub fn chrome_trace(spans: &[Span]) -> Json {
                 Json::obj(vec![
                     ("id", Json::num(s.id as f64)),
                     ("session", Json::num(s.session as f64)),
+                    ("bytes", Json::num(s.bytes as f64)),
                 ]),
             ),
         ]));
@@ -63,13 +82,29 @@ pub fn chrome_trace(spans: &[Span]) -> Json {
 }
 
 /// Validate a Chrome trace document: a `traceEvents` array whose `X`
-/// events carry name/ts/dur/pid/tid, with strictly positive durations and
-/// non-decreasing timestamps. Returns the number of `X` events.
+/// events carry name/ts/dur/pid/tid plus a numeric `args.bytes`, with
+/// strictly positive durations, non-decreasing timestamps, and a
+/// `thread_name` metadata event for every (pid, tid) lane an `X` event
+/// uses. Returns the number of `X` events.
 pub fn validate_chrome_trace(doc: &Json) -> Result<usize, String> {
     let events = doc
         .get("traceEvents")
         .and_then(|e| e.as_arr())
         .ok_or_else(|| "missing traceEvents array".to_string())?;
+    let mut named_lanes: Vec<(u64, u64)> = Vec::new();
+    for e in events {
+        if e.get("ph").and_then(|p| p.as_str()) == Some("M")
+            && e.get("name").and_then(|n| n.as_str()) == Some("thread_name")
+        {
+            let (Some(p), Some(t)) = (
+                e.get("pid").and_then(|v| v.as_f64()),
+                e.get("tid").and_then(|v| v.as_f64()),
+            ) else {
+                return Err("thread_name metadata without pid/tid".to_string());
+            };
+            named_lanes.push((p as u64, t as u64));
+        }
+    }
     let mut n = 0usize;
     let mut last_ts = f64::NEG_INFINITY;
     for (i, e) in events.iter().enumerate() {
@@ -90,6 +125,24 @@ pub fn validate_chrome_trace(doc: &Json) -> Result<usize, String> {
         if ts < last_ts {
             return Err(format!("event {i}: non-monotonic ts ({ts} after {last_ts})"));
         }
+        let bytes = e
+            .get("args")
+            .and_then(|a| a.get("bytes"))
+            .and_then(|b| b.as_f64())
+            .ok_or(format!("event {i}: missing numeric args.bytes"))?;
+        if bytes < 0.0 {
+            return Err(format!("event {i}: negative args.bytes"));
+        }
+        let lane = (
+            e.get("pid").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+            e.get("tid").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+        );
+        if !named_lanes.contains(&lane) {
+            return Err(format!(
+                "event {i}: lane pid={} tid={} has no thread_name metadata",
+                lane.0, lane.1
+            ));
+        }
         last_ts = ts;
         n += 1;
     }
@@ -102,7 +155,7 @@ mod tests {
     use crate::obs::trace::Stage;
 
     fn span(stage: Stage, path: ExecPath, start: u64, end: u64) -> Span {
-        Span { stage, path, id: 1, worker: 0, session: 0, start_ns: start, end_ns: end }
+        Span { stage, path, id: 1, worker: 0, session: 0, start_ns: start, end_ns: end, bytes: 320 }
     }
 
     #[test]
@@ -124,6 +177,20 @@ mod tests {
         assert_eq!(xs[0].get("name").unwrap().as_str(), Some("predict"));
         assert_eq!(xs[0].get("ts").unwrap().as_f64(), Some(1.0));
         assert_eq!(xs[0].get("dur").unwrap().as_f64(), Some(1.0));
+        // Every X event carries its byte attribution.
+        for x in &xs {
+            assert_eq!(x.get("args").unwrap().get("bytes").unwrap().as_f64(), Some(320.0));
+        }
+        // One thread_name lane per distinct (pid, tid): prefill worker 0
+        // and shard 0.
+        let lanes: Vec<String> = evs
+            .iter()
+            .filter(|e| e.get("name").and_then(|n| n.as_str()) == Some("thread_name"))
+            .map(|e| {
+                e.get("args").unwrap().get("name").unwrap().as_str().unwrap().to_string()
+            })
+            .collect();
+        assert_eq!(lanes, vec!["worker 0".to_string(), "shard 0".to_string()]);
     }
 
     #[test]
@@ -147,5 +214,41 @@ mod tests {
             ])]),
         )]);
         assert!(validate_chrome_trace(&bad).unwrap_err().contains("zero-duration"));
+        // An X event without args.bytes fails even on a named lane.
+        let lane_meta = Json::obj(vec![
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(0.0)),
+            ("args", Json::obj(vec![("name", Json::str("worker 0"))])),
+        ]);
+        let x = |args: Json| {
+            Json::obj(vec![
+                ("ph", Json::str("X")),
+                ("name", Json::str("predict")),
+                ("ts", Json::num(1.0)),
+                ("dur", Json::num(1.0)),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(0.0)),
+                ("args", args),
+            ])
+        };
+        let no_bytes = Json::obj(vec![(
+            "traceEvents",
+            Json::Arr(vec![lane_meta.clone(), x(Json::obj(vec![("id", Json::num(1.0))]))]),
+        )]);
+        assert!(validate_chrome_trace(&no_bytes).unwrap_err().contains("args.bytes"));
+        // An X event on an unnamed lane fails.
+        let unnamed = Json::obj(vec![(
+            "traceEvents",
+            Json::Arr(vec![x(Json::obj(vec![("bytes", Json::num(64.0))]))]),
+        )]);
+        assert!(validate_chrome_trace(&unnamed).unwrap_err().contains("thread_name"));
+        // Both present validates.
+        let good = Json::obj(vec![(
+            "traceEvents",
+            Json::Arr(vec![lane_meta, x(Json::obj(vec![("bytes", Json::num(64.0))]))]),
+        )]);
+        assert_eq!(validate_chrome_trace(&good).unwrap(), 1);
     }
 }

@@ -111,6 +111,13 @@ impl Histogram {
         self.count
     }
 
+    /// Samples recorded into bucket `idx` (see [`bucket_low`] /
+    /// [`bucket_high`] for its value range) — the raw-bucket view the
+    /// Prometheus cumulative `_bucket{le=…}` exposition walks.
+    pub fn count_at(&self, idx: usize) -> u64 {
+        self.counts[idx]
+    }
+
     pub fn is_empty(&self) -> bool {
         self.count == 0
     }

@@ -17,15 +17,27 @@
 //!   dependencies) behind the serving metrics and the bench percentiles:
 //!   O(1) allocation-free record, mergeable, order-independent, with a
 //!   saturating overflow bucket and exact min/max/mean.
+//! * [`traffic`] — measured byte-level traffic counters with the same
+//!   zero-allocation discipline: a [`TrafficCounter`] per pooled
+//!   workspace, bumped by the stage bodies inside the metered windows,
+//!   reconciled against the cycle simulator's per-stage DRAM predictions
+//!   by `star bench traffic` (DESIGN.md §11).
 //! * [`chrome`] / [`prom`] — exporters: Chrome trace-event JSON
 //!   (`star trace <out.json>`, loadable in `chrome://tracing`/Perfetto)
 //!   and Prometheus-style text exposition of the metrics histograms.
+//! * [`baseline`] — the perf-regression gate: loads committed
+//!   `BENCH_*.json` baselines and compares a fresh run under noise-aware
+//!   per-metric-class tolerances (`star bench check`).
 
+pub mod baseline;
 pub mod chrome;
 pub mod hist;
 pub mod prom;
 pub mod trace;
+pub mod traffic;
 
+pub use baseline::{compare_benches, BaselineReport, MetricClass};
 pub use chrome::{chrome_trace, validate_chrome_trace};
 pub use hist::{HistSummary, Histogram};
 pub use trace::{enabled, set_enabled, ExecPath, Span, SpanRing, Stage};
+pub use traffic::{SchedStats, TrafficCounter};

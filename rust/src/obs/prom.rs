@@ -6,7 +6,7 @@
 //! it is produced on demand next to the human-readable
 //! [`MetricsSnapshot::render`](crate::coordinator::MetricsSnapshot::render).
 
-use super::hist::HistSummary;
+use super::hist::{bucket_high, HistSummary, Histogram, N_BUCKETS};
 
 /// Append one summary-family exposition for `h` under `name` (base units
 /// already applied by the caller — e.g. seconds). `labels` is either ""
@@ -30,6 +30,55 @@ pub fn write_summary_family(out: &mut String, name: &str, help: &str, series: &[
         let brace = if labels.is_empty() { String::new() } else { format!("{{{labels}}}") };
         let _ = writeln!(out, "{name}_sum{brace} {}", h.mean * h.count as f64);
         let _ = writeln!(out, "{name}_count{brace} {}", h.count);
+    }
+}
+
+/// Append one classic-histogram exposition for a full log-bucketed
+/// [`Histogram`]: cumulative `_bucket{le="…"}` samples (occupied buckets
+/// only — legal, the series stays cumulative), the mandatory `+Inf`
+/// bucket, and `_sum`/`_count`. `scale` converts recorded integer units
+/// to base units (e.g. `1e-9` for nanosecond samples exposed in
+/// seconds); each `le` bound is the bucket's inclusive upper value.
+pub fn write_histogram(
+    out: &mut String,
+    name: &str,
+    help: &str,
+    labels: &str,
+    h: &Histogram,
+    scale: f64,
+) {
+    write_histogram_family(out, name, help, &[(labels, h)], scale);
+}
+
+/// Append one histogram family carrying several labeled series under a
+/// single HELP/TYPE header (same exposition-format rule as
+/// [`write_summary_family`]).
+pub fn write_histogram_family(
+    out: &mut String,
+    name: &str,
+    help: &str,
+    series: &[(&str, &Histogram)],
+    scale: f64,
+) {
+    use std::fmt::Write;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    for (labels, h) in series {
+        let sep = if labels.is_empty() { "" } else { "," };
+        let mut cum = 0u64;
+        for idx in 0..N_BUCKETS {
+            let c = h.count_at(idx);
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            let le = bucket_high(idx) as f64 * scale;
+            let _ = writeln!(out, "{name}_bucket{{{labels}{sep}le=\"{le}\"}} {cum}");
+        }
+        let _ = writeln!(out, "{name}_bucket{{{labels}{sep}le=\"+Inf\"}} {}", h.count());
+        let brace = if labels.is_empty() { String::new() } else { format!("{{{labels}}}") };
+        let _ = writeln!(out, "{name}_sum{brace} {}", h.sum() * scale);
+        let _ = writeln!(out, "{name}_count{brace} {}", h.count());
     }
 }
 
@@ -63,6 +112,61 @@ mod tests {
         let mut g = String::new();
         write_value(&mut g, "star_requests_total", "admitted requests", "counter", 42.0);
         assert!(g.contains("star_requests_total 42"));
+    }
+
+    #[test]
+    fn histogram_exposition_is_cumulative_and_conformant() {
+        let mut h = Histogram::new();
+        for v in [3u64, 3, 10, 1000, 1_000_000] {
+            h.record(v);
+        }
+        let mut out = String::new();
+        write_histogram(&mut out, "star_lat_ns", "latency histogram", "", &h, 1.0);
+        assert!(out.contains("# TYPE star_lat_ns histogram"), "{out}");
+        // Exact buckets below 2·SUB: value 3 holds both samples.
+        assert!(out.contains("star_lat_ns_bucket{le=\"3\"} 2"), "{out}");
+        assert!(out.contains("star_lat_ns_bucket{le=\"+Inf\"} 5"), "{out}");
+        assert!(out.contains("star_lat_ns_count 5"), "{out}");
+        assert!(out.contains(&format!("star_lat_ns_sum {}", h.sum())), "{out}");
+        // Text-format conformance: every _bucket line carries a parseable
+        // `le`, bounds strictly increase, and counts are non-decreasing
+        // with the +Inf bucket equal to the total count.
+        let mut prev_le = f64::NEG_INFINITY;
+        let mut prev_c = 0u64;
+        let mut saw_inf = false;
+        for line in out.lines().filter(|l| l.starts_with("star_lat_ns_bucket")) {
+            let le_raw = line.split("le=\"").nth(1).unwrap().split('"').next().unwrap();
+            let le = if le_raw == "+Inf" {
+                saw_inf = true;
+                f64::INFINITY
+            } else {
+                le_raw.parse::<f64>().unwrap()
+            };
+            let c: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(le > prev_le, "le bounds must increase: {line}");
+            assert!(c >= prev_c, "cumulative counts must not decrease: {line}");
+            prev_le = le;
+            prev_c = c;
+        }
+        assert!(saw_inf, "mandatory +Inf bucket missing:\n{out}");
+        assert_eq!(prev_c, h.count());
+
+        // Labeled family: one header, label merged before `le`.
+        let mut fam = String::new();
+        write_histogram_family(
+            &mut fam,
+            "star_stage_ns",
+            "per-stage",
+            &[("stage=\"predict\"", &h), ("stage=\"topk\"", &h)],
+            1.0,
+        );
+        assert_eq!(fam.matches("# TYPE star_stage_ns histogram").count(), 1);
+        assert!(fam.contains("star_stage_ns_bucket{stage=\"predict\",le=\"3\"} 2"), "{fam}");
+        assert!(fam.contains("star_stage_ns_count{stage=\"topk\"} 5"), "{fam}");
+        // The scale converts bounds to base units.
+        let mut scaled = String::new();
+        write_histogram(&mut scaled, "star_lat_seconds", "latency", "", &h, 1e-9);
+        assert!(scaled.contains("le=\"0.000000003\"") || scaled.contains("le=\"3e-9\""), "{scaled}");
     }
 
     #[test]

@@ -123,6 +123,10 @@ pub struct Span {
     pub session: u64,
     pub start_ns: u64,
     pub end_ns: u64,
+    /// Bytes the stage body moved during this span (the workspace
+    /// [`TrafficCounter`](super::traffic::TrafficCounter) delta); 0 when
+    /// traffic counting is disabled.
+    pub bytes: u64,
 }
 
 impl Span {
@@ -161,10 +165,18 @@ impl SpanRing {
     }
 
     /// Record a span from two `Instant`s (the stage body's existing
-    /// timing reads). No-op when tracing is disabled or the ring was
-    /// never reserved; never allocates.
+    /// timing reads) plus the bytes the stage moved. No-op when tracing
+    /// is disabled or the ring was never reserved; never allocates.
     #[inline]
-    pub fn record(&mut self, stage: Stage, path: ExecPath, id: u32, t0: Instant, t1: Instant) {
+    pub fn record(
+        &mut self,
+        stage: Stage,
+        path: ExecPath,
+        id: u32,
+        t0: Instant,
+        t1: Instant,
+        bytes: u64,
+    ) {
         if !enabled() || self.buf.is_empty() {
             return;
         }
@@ -176,6 +188,7 @@ impl SpanRing {
             session: self.session,
             start_ns: ns_since_epoch(t0),
             end_ns: ns_since_epoch(t1),
+            bytes,
         };
         self.next = (self.next + 1) % self.buf.len();
         self.filled = (self.filled + 1).min(self.buf.len());
@@ -224,7 +237,7 @@ mod tests {
         // an unreserved ring drops records regardless of the flag.
         let mut r = SpanRing::new();
         let (t0, t1) = t0t1();
-        r.record(Stage::Predict, ExecPath::Prefill, 0, t0, t1);
+        r.record(Stage::Predict, ExecPath::Prefill, 0, t0, t1, 0);
         assert_eq!(r.len(), 0);
         assert_eq!(r.capacity_bytes(), 0);
     }
@@ -236,7 +249,7 @@ mod tests {
         r.reserve_if_enabled();
         let (t0, t1) = t0t1();
         for i in 0..(RING_CAPACITY + 10) as u32 {
-            r.record(Stage::Formal, ExecPath::Decode, i, t0, t1);
+            r.record(Stage::Formal, ExecPath::Decode, i, t0, t1, u64::from(i));
         }
         assert_eq!(r.len(), RING_CAPACITY);
         let mut out = Vec::new();
@@ -258,11 +271,12 @@ mod tests {
         r.worker = 3;
         r.session = 42;
         let (t0, t1) = t0t1();
-        r.record(Stage::KvGen, ExecPath::Sharded, 7, t0, t1);
+        r.record(Stage::KvGen, ExecPath::Sharded, 7, t0, t1, 640);
         let mut out = Vec::new();
         r.drain_into(&mut out);
         let s = out[0];
         assert_eq!((s.worker, s.session, s.id), (3, 42, 7));
+        assert_eq!(s.bytes, 640);
         assert_eq!(s.stage, Stage::KvGen);
         assert_eq!(s.path, ExecPath::Sharded);
         assert!(s.end_ns >= s.start_ns);

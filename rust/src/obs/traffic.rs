@@ -1,0 +1,308 @@
+//! Measured byte-level memory-traffic accounting for the execution
+//! paths — the counterpart of the *modeled* charges in
+//! [`crate::arith::OpCounter`] and the *simulated* per-stage DRAM stream
+//! of [`crate::sim::pipeline`].
+//!
+//! A [`TrafficCounter`] is a plain bag of `u64` byte counters with the
+//! same zero-allocation discipline as [`super::trace::SpanRing`]: one
+//! lives inside every [`crate::pipeline::TileWorkspace`], the stage
+//! bodies bump it with pure integer arithmetic inside the metered
+//! allocation windows, and the pool drains it after a run. Counting is
+//! gated on a process-wide flag ([`set_enabled`]) so an untraced run
+//! pays one relaxed atomic load per stage and the counted/uncounted
+//! executions are bit-identical (property-tested in
+//! `tests/prop_traffic.rs`).
+//!
+//! # DRAM-class vs SRAM-class counters
+//!
+//! The paper's traffic story distinguishes bytes that cross the chip
+//! boundary from bytes that circulate in on-chip buffers. The counter
+//! mirrors that split:
+//!
+//! * **DRAM-class ingest/egress** (`q_ingest`, `key_ingest`, `x_ingest`,
+//!   `out_egress`): each datum is counted **once**, at the site where it
+//!   first enters (or finally leaves) the tile pipeline. These are pure
+//!   functions of shape + selection — identical at every thread count —
+//!   and are the side reconciled against the cycle simulator's per-stage
+//!   DRAM predictions (`star bench traffic`, DESIGN.md §11).
+//! * **SRAM-class movement** (`score_write`, `score_read`,
+//!   `operand_read`, `kv_gather`, `formal_kv`, `accum`): repeated
+//!   traffic through the workspace-resident tile buffers — the bytes
+//!   cross-stage tiling keeps *off* DRAM.
+//! * **Ring + cache** (`ring_payload`, `cache_append`, `cache_remat`):
+//!   sharded interconnect payloads and paged-KV-cache page traffic.
+//!
+//! Scheduler behavior (chunk grabs, steals, per-worker tile counts) is
+//! schedule-dependent — it legitimately differs between runs — so it
+//! lives in the separate [`SchedStats`] and is excluded from the
+//! byte-reproducibility contract.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Globally enable or disable traffic counting. Disabled counting sites
+/// cost one relaxed atomic load; enabling never changes outputs,
+/// selections or stalls (bit-invisibility is property-tested).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether traffic counting is currently enabled.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Byte-level traffic counters for one workspace / one run / one
+/// metrics window (the same struct serves all three granularities;
+/// [`TrafficCounter::merge`] is an order-independent field-wise sum).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TrafficCounter {
+    // ---- DRAM-class ingest/egress (counted once per datum) ----
+    /// Query rows staged into the formal-compute tile (f32).
+    pub q_ingest_bytes: u64,
+    /// Key-side bytes read to build the score operand: the Kᵀ transpose
+    /// or prepared-operand build in prefill/sharded, the per-row operand
+    /// freeze at cache append in decode (f32).
+    pub key_ingest_bytes: u64,
+    /// Activation rows streamed for on-demand KV generation (f32).
+    pub x_ingest_bytes: u64,
+    /// Output rows written out of the formal stage (f32).
+    pub out_egress_bytes: u64,
+    // ---- SRAM-class movement (workspace-resident tile buffers) ----
+    /// Estimated-score tile writes (f32).
+    pub score_write_bytes: u64,
+    /// Score reads by the top-k stage (f32).
+    pub score_read_bytes: u64,
+    /// Quantized/encoded operand reads during scoring (~1 B/element;
+    /// f32 reads for the oracle score path).
+    pub operand_read_bytes: u64,
+    /// Gathered K/V rows staged into the workspace union buffers (f32).
+    pub kv_gather_bytes: u64,
+    /// K/V rows streamed through the formal kernel (f32, per selected
+    /// key — the SU-FA operand stream).
+    pub formal_kv_bytes: u64,
+    /// SU-FA accumulator traffic: logit read+write per selected key.
+    pub accum_bytes: u64,
+    // ---- Sharded ring + paged KV cache ----
+    /// Q-block payload bytes sent over the sharded ring (wire bytes).
+    pub ring_payload_bytes: u64,
+    /// f32 K/V bytes appended to cache pages.
+    pub cache_append_bytes: u64,
+    /// f32 K/V bytes re-materialized from host history into pages.
+    pub cache_remat_bytes: u64,
+}
+
+impl TrafficCounter {
+    /// A zeroed counter.
+    pub fn new() -> TrafficCounter {
+        TrafficCounter::default()
+    }
+
+    /// Field-wise sum. Commutative and associative, so merge order —
+    /// and therefore worker scheduling — cannot change the totals.
+    pub fn merge(&mut self, o: &TrafficCounter) {
+        self.q_ingest_bytes += o.q_ingest_bytes;
+        self.key_ingest_bytes += o.key_ingest_bytes;
+        self.x_ingest_bytes += o.x_ingest_bytes;
+        self.out_egress_bytes += o.out_egress_bytes;
+        self.score_write_bytes += o.score_write_bytes;
+        self.score_read_bytes += o.score_read_bytes;
+        self.operand_read_bytes += o.operand_read_bytes;
+        self.kv_gather_bytes += o.kv_gather_bytes;
+        self.formal_kv_bytes += o.formal_kv_bytes;
+        self.accum_bytes += o.accum_bytes;
+        self.ring_payload_bytes += o.ring_payload_bytes;
+        self.cache_append_bytes += o.cache_append_bytes;
+        self.cache_remat_bytes += o.cache_remat_bytes;
+    }
+
+    /// Drain: return the current counts and reset to zero.
+    pub fn take(&mut self) -> TrafficCounter {
+        std::mem::take(self)
+    }
+
+    /// Sum of every byte counter — the per-span `bytes` attribution the
+    /// Chrome trace export carries in `args`.
+    pub fn total_bytes(&self) -> u64 {
+        self.q_ingest_bytes
+            + self.key_ingest_bytes
+            + self.x_ingest_bytes
+            + self.out_egress_bytes
+            + self.score_write_bytes
+            + self.score_read_bytes
+            + self.operand_read_bytes
+            + self.kv_gather_bytes
+            + self.formal_kv_bytes
+            + self.accum_bytes
+            + self.ring_payload_bytes
+            + self.cache_append_bytes
+            + self.cache_remat_bytes
+    }
+
+    /// DRAM-class subtotal (the side reconciled against the simulator).
+    pub fn dram_class_bytes(&self) -> u64 {
+        self.q_ingest_bytes + self.key_ingest_bytes + self.x_ingest_bytes + self.out_egress_bytes
+    }
+
+    /// SRAM-class subtotal (tile-buffer movement).
+    pub fn sram_class_bytes(&self) -> u64 {
+        self.score_write_bytes
+            + self.score_read_bytes
+            + self.operand_read_bytes
+            + self.kv_gather_bytes
+            + self.formal_kv_bytes
+            + self.accum_bytes
+    }
+
+    /// `(name, value)` view over every counter, in declaration order —
+    /// the one list the JSON writers, the Prometheus exposition and the
+    /// schema cross-readers share.
+    pub fn fields(&self) -> [(&'static str, u64); 13] {
+        [
+            ("q_ingest_bytes", self.q_ingest_bytes),
+            ("key_ingest_bytes", self.key_ingest_bytes),
+            ("x_ingest_bytes", self.x_ingest_bytes),
+            ("out_egress_bytes", self.out_egress_bytes),
+            ("score_write_bytes", self.score_write_bytes),
+            ("score_read_bytes", self.score_read_bytes),
+            ("operand_read_bytes", self.operand_read_bytes),
+            ("kv_gather_bytes", self.kv_gather_bytes),
+            ("formal_kv_bytes", self.formal_kv_bytes),
+            ("accum_bytes", self.accum_bytes),
+            ("ring_payload_bytes", self.ring_payload_bytes),
+            ("cache_append_bytes", self.cache_append_bytes),
+            ("cache_remat_bytes", self.cache_remat_bytes),
+        ]
+    }
+}
+
+/// Work-stealing scheduler counters for one parallel section (or a
+/// cumulative metrics window). Unlike [`TrafficCounter`], these are
+/// *schedule-dependent* — a fast worker legitimately claims more chunks
+/// on one run than the next — so they are reported separately and
+/// excluded from the byte-reproducibility contract.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SchedStats {
+    /// Worker threads that participated.
+    pub workers: u64,
+    /// Successful chunk claims off the shared cursor.
+    pub chunk_grabs: u64,
+    /// Claims beyond each worker's first — extra chunks a worker came
+    /// back for instead of idling (the work-stealing events).
+    pub steals: u64,
+    /// Tiles (or decode rows / sharded Q blocks) executed.
+    pub tiles: u64,
+    /// Tiles run by the busiest worker.
+    pub max_worker_tiles: u64,
+}
+
+impl SchedStats {
+    /// Stats for a degenerate single-worker section.
+    pub fn single(tiles: u64) -> SchedStats {
+        let grabs = u64::from(tiles > 0);
+        SchedStats { workers: 1, chunk_grabs: grabs, steals: 0, tiles, max_worker_tiles: tiles }
+    }
+
+    /// Busiest-worker load relative to a perfect split
+    /// (`max_worker_tiles / (tiles / workers)`; 1.0 is perfectly
+    /// balanced). Cumulative windows report the aggregate ratio.
+    pub fn imbalance(&self) -> f64 {
+        if self.tiles == 0 || self.workers == 0 {
+            return 1.0;
+        }
+        self.max_worker_tiles as f64 * self.workers as f64 / self.tiles as f64
+    }
+
+    /// Aggregate another section into this window: counts sum, worker
+    /// width takes the maximum.
+    pub fn merge(&mut self, o: &SchedStats) {
+        self.workers = self.workers.max(o.workers);
+        self.chunk_grabs += o.chunk_grabs;
+        self.steals += o.steals;
+        self.tiles += o.tiles;
+        self.max_worker_tiles += o.max_worker_tiles;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(seed: u64) -> TrafficCounter {
+        let mut t = TrafficCounter::new();
+        t.q_ingest_bytes = seed;
+        t.key_ingest_bytes = 2 * seed;
+        t.x_ingest_bytes = 3 * seed;
+        t.out_egress_bytes = 5 * seed;
+        t.score_write_bytes = 7 * seed;
+        t.score_read_bytes = 11 * seed;
+        t.operand_read_bytes = 13 * seed;
+        t.kv_gather_bytes = 17 * seed;
+        t.formal_kv_bytes = 19 * seed;
+        t.accum_bytes = 23 * seed;
+        t.ring_payload_bytes = 29 * seed;
+        t.cache_append_bytes = 31 * seed;
+        t.cache_remat_bytes = 37 * seed;
+        t
+    }
+
+    #[test]
+    fn merge_is_order_independent() {
+        let (a, b, c) = (sample(3), sample(5), sample(8));
+        let mut x = TrafficCounter::new();
+        x.merge(&a);
+        x.merge(&b);
+        x.merge(&c);
+        let mut y = TrafficCounter::new();
+        y.merge(&c);
+        y.merge(&a);
+        y.merge(&b);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn take_drains_and_resets() {
+        let mut t = sample(4);
+        let got = t.take();
+        assert_eq!(got, sample(4));
+        assert_eq!(t, TrafficCounter::default());
+    }
+
+    #[test]
+    fn totals_cover_every_field() {
+        let t = sample(1);
+        let field_sum: u64 = t.fields().iter().map(|(_, v)| v).sum();
+        assert_eq!(t.total_bytes(), field_sum);
+        assert_eq!(
+            t.total_bytes(),
+            t.dram_class_bytes() + t.sram_class_bytes() + t.ring_payload_bytes
+                + t.cache_append_bytes
+                + t.cache_remat_bytes
+        );
+    }
+
+    #[test]
+    fn sched_imbalance_ratio() {
+        let s = SchedStats { workers: 4, chunk_grabs: 9, steals: 5, tiles: 80, max_worker_tiles: 40 };
+        assert!((s.imbalance() - 2.0).abs() < 1e-12);
+        assert_eq!(SchedStats::single(7).imbalance(), 1.0);
+        assert_eq!(SchedStats::default().imbalance(), 1.0);
+        let mut m = SchedStats::single(10);
+        m.merge(&s);
+        assert_eq!(m.workers, 4);
+        assert_eq!(m.tiles, 90);
+        assert_eq!(m.chunk_grabs, 10);
+    }
+
+    #[test]
+    fn enable_flag_roundtrips() {
+        let was = enabled();
+        set_enabled(true);
+        assert!(enabled());
+        set_enabled(false);
+        assert!(!enabled());
+        set_enabled(was);
+    }
+}

@@ -52,6 +52,7 @@ use crate::arith::{OpCounter, OpKind};
 use crate::attention::{sufa_attention_rows_into, AttnInputs, SufaParams, SufaScratch, UpdateOrder};
 use crate::kvcache::{gather_rows_into, score_row_into, KvPage, QueryOperand};
 use crate::obs::trace::{ExecPath, Span, SpanRing, Stage};
+use crate::obs::traffic::{self, SchedStats, TrafficCounter};
 use crate::sim::pipeline::{FormalKind, PredictKind, TopkKind};
 use crate::sparsity::topk::{sads_topk_into, vanilla_topk_into, TopkScratch};
 use crate::sparsity::{PredictScheme, Predictor, PreparedPredict};
@@ -284,6 +285,11 @@ pub struct TileWorkspace {
     /// front-end preambles only while tracing is enabled, so recording
     /// from inside the metered stage cores never allocates.
     pub(crate) spans: SpanRing,
+    /// This worker's measured byte-traffic counters. Plain `u64` fields
+    /// bumped with pure arithmetic inside the metered stage cores (one
+    /// relaxed atomic load gates each site), drained per run via the
+    /// pool — see [`crate::obs::traffic`].
+    pub(crate) traffic: TrafficCounter,
 }
 
 impl TileWorkspace {
@@ -308,6 +314,7 @@ impl TileWorkspace {
             out_tile: Mat::zeros(0, 0),
             hot_allocs: 0,
             spans: SpanRing::new(),
+            traffic: TrafficCounter::new(),
         }
     }
 
@@ -320,7 +327,8 @@ impl TileWorkspace {
     /// bytes — the software working set reported next to the modeled
     /// SRAM budget ([`crate::sim::sram::Sram::STAR_BUDGET_BYTES`]). The
     /// span ring is excluded: it is observability state, not part of the
-    /// tile's modeled on-chip residency.
+    /// tile's modeled on-chip residency (the traffic counter holds no
+    /// heap at all).
     pub fn capacity_bytes(&self) -> usize {
         let mat = |m: &Mat| m.data.capacity() * std::mem::size_of::<f32>();
         mat(&self.q_tile)
@@ -350,6 +358,11 @@ impl TileWorkspace {
     /// and reset its ring. Ring storage stays reserved.
     pub fn drain_spans(&mut self, out: &mut Vec<Span>) {
         self.spans.drain_into(out);
+    }
+
+    /// Drain the measured byte-traffic counters (reset to zero).
+    pub fn take_traffic(&mut self) -> TrafficCounter {
+        self.traffic.take()
     }
 
     /// Split borrow for the sharded local pass: the stage-1 score tile
@@ -470,6 +483,18 @@ impl WorkspacePool {
         for ws in self.slots.lock().unwrap().values_mut().flat_map(|v| v.iter_mut()) {
             ws.drain_spans(out);
         }
+    }
+
+    /// Drain and merge the measured byte-traffic counters of every
+    /// checked-in workspace. The run drivers drain per run (reports
+    /// carry per-run traffic), so this collects only counts from paths
+    /// that bypassed a driver (diagnostics / direct engine use).
+    pub fn drain_traffic(&self) -> TrafficCounter {
+        let mut t = TrafficCounter::new();
+        for ws in self.slots.lock().unwrap().values_mut().flat_map(|v| v.iter_mut()) {
+            t.merge(&ws.traffic.take());
+        }
+        t
     }
 }
 
@@ -701,6 +726,13 @@ impl TileExecutor<'_> {
                 let kt = kt.expect("kt prepared for oracle scores");
                 ws.q_tile.matmul_cols_into(kt, key_lo, key_hi, &mut ws.est);
                 ws.est.scale(inp.scale);
+                if traffic::enabled() {
+                    let (rows, span, d) = (hi - lo, key_hi - key_lo, inp.d());
+                    // f32 Q rows + Kᵀ columns stream through the score
+                    // kernel; the score tile is written once.
+                    ws.traffic.operand_read_bytes += 4 * ((rows + span) * d) as u64;
+                    ws.traffic.score_write_bytes += 4 * (rows * span) as u64;
+                }
                 true
             }
             ScoreSource::Prepared(prep) => {
@@ -708,6 +740,12 @@ impl TileExecutor<'_> {
                 // radius is calibrated the way Sec. IV-B assumes.
                 prep.score_block_into(lo, hi, key_lo, key_hi, c, &mut ws.est);
                 ws.est.scale(inp.scale);
+                if traffic::enabled() {
+                    let (rows, span, d) = (hi - lo, key_hi - key_lo, inp.d());
+                    // Quantized operands: ~1 byte per element per side.
+                    ws.traffic.operand_read_bytes += ((rows + span) * d) as u64;
+                    ws.traffic.score_write_bytes += 4 * (rows * span) as u64;
+                }
                 true
             }
         }
@@ -736,14 +774,17 @@ impl TileExecutor<'_> {
 
         // ---- Stage 1: predict (per-tile phase 1.2 / oracle scores). ----
         let t0 = Instant::now();
+        let b0 = ws.traffic.total_bytes();
         let have_est =
             self.score_block_into(ctx.score, inp, ctx.kt, lo, hi, 0, s, ws, &mut ops.predict);
         let t1 = Instant::now();
         timing.predict_s += (t1 - t0).as_secs_f64();
-        ws.spans.record(Stage::Predict, ExecPath::Prefill, ti as u32, t0, t1);
+        let tb = ws.traffic.total_bytes() - b0;
+        ws.spans.record(Stage::Predict, ExecPath::Prefill, ti as u32, t0, t1, tb);
 
         // ---- Stage 2: top-k selection. ----
         let t0 = Instant::now();
+        let b0 = ws.traffic.total_bytes();
         let (mut rho_sum, mut rho_n) = (0.0, 0usize);
         ws.sel.begin(rows);
         {
@@ -758,12 +799,17 @@ impl TileExecutor<'_> {
                 }
             }
         }
+        if traffic::enabled() && have_est {
+            ws.traffic.score_read_bytes += 4 * (rows * s) as u64;
+        }
         let t1 = Instant::now();
         timing.topk_s += (t1 - t0).as_secs_f64();
-        ws.spans.record(Stage::Topk, ExecPath::Prefill, ti as u32, t0, t1);
+        let tb = ws.traffic.total_bytes() - b0;
+        ws.spans.record(Stage::Topk, ExecPath::Prefill, ti as u32, t0, t1, tb);
 
         // ---- Stage 3: KV generation for the tile's union. ----
         let t0 = Instant::now();
+        let b0 = ws.traffic.total_bytes();
         {
             let TileWorkspace { sel, needed, union, .. } = &mut *ws;
             union_rows_into(sel.rows(), s, needed, union);
@@ -772,13 +818,19 @@ impl TileExecutor<'_> {
         let on_demand = cfg.on_demand_kv && inp.x.is_some() && inp.wk.is_some() && inp.wv.is_some();
         if on_demand {
             charge_on_demand_kv_gen(&mut ops.kv_gen, u, inp.x.unwrap().cols, d);
+            if traffic::enabled() {
+                // X rows of the union stream in once (f32 host layout).
+                ws.traffic.x_ingest_bytes += 4 * (u * inp.x.unwrap().cols) as u64;
+            }
         }
         let t1 = Instant::now();
         timing.kv_gen_s += (t1 - t0).as_secs_f64();
-        ws.spans.record(Stage::KvGen, ExecPath::Prefill, ti as u32, t0, t1);
+        let tb = ws.traffic.total_bytes() - b0;
+        ws.spans.record(Stage::KvGen, ExecPath::Prefill, ti as u32, t0, t1, tb);
 
         // ---- Stage 4: formal compute (SU-FA / FA-2 approx / dense). ----
         let t0 = Instant::now();
+        let b0 = ws.traffic.total_bytes();
         let stalls = {
             let TileWorkspace { q_tile, sel, formal, .. } = &mut *ws;
             q_tile.stage_rows(inp.q, lo, rows);
@@ -796,9 +848,17 @@ impl TileExecutor<'_> {
         if on_demand {
             kv_traffic_on_chip(&mut ops.formal, u, d);
         }
+        if traffic::enabled() {
+            let picked: u64 = ws.sel.rows().iter().map(|r| r.len() as u64).sum();
+            ws.traffic.q_ingest_bytes += 4 * (rows * d) as u64;
+            ws.traffic.formal_kv_bytes += 8 * picked * d as u64;
+            ws.traffic.accum_bytes += 8 * picked;
+            ws.traffic.out_egress_bytes += 4 * (rows * d) as u64;
+        }
         let t1 = Instant::now();
         timing.formal_s += (t1 - t0).as_secs_f64();
-        ws.spans.record(Stage::Formal, ExecPath::Prefill, ti as u32, t0, t1);
+        let tb = ws.traffic.total_bytes() - b0;
+        ws.spans.record(Stage::Formal, ExecPath::Prefill, ti as u32, t0, t1, tb);
         ws.hot_allocs += allocmeter::thread_allocs() - a0;
 
         TileOut {
@@ -843,6 +903,7 @@ impl TileExecutor<'_> {
 
         // ---- Stage 1: predict over cached page operands. ----
         let t0 = Instant::now();
+        let b0 = ws.traffic.total_bytes();
         let have_est = if cfg.topk == TopkKind::None {
             false
         } else {
@@ -851,24 +912,37 @@ impl TileExecutor<'_> {
             score_row_into(qop, pages, limit, attn_scale, &mut ops.predict, est_row);
             true
         };
+        if traffic::enabled() && have_est {
+            // One f32 query row in, quantized page operands (~1 B/elem)
+            // streamed, one f32 score per key out.
+            ws.traffic.operand_read_bytes += (4 * d + limit * d) as u64;
+            ws.traffic.score_write_bytes += 4 * limit as u64;
+        }
         let t1 = Instant::now();
         timing.predict_s += (t1 - t0).as_secs_f64();
-        ws.spans.record(Stage::Predict, ExecPath::Decode, pos as u32, t0, t1);
+        let tb = ws.traffic.total_bytes() - b0;
+        ws.spans.record(Stage::Predict, ExecPath::Decode, pos as u32, t0, t1, tb);
 
         // ---- Stage 2: top-k over the causal prefix. ----
         let t0 = Instant::now();
+        let b0 = ws.traffic.total_bytes();
         ws.sel.begin(1);
         let rho = {
             let TileWorkspace { est_row, topk, sel, .. } = &mut *ws;
             let scores = if have_est { Some(est_row.as_slice()) } else { None };
             select_into(cfg, scores, limit, keep, topk, sel.row_mut(0), &mut ops.topk)
         };
+        if traffic::enabled() && have_est {
+            ws.traffic.score_read_bytes += 4 * limit as u64;
+        }
         let t1 = Instant::now();
         timing.topk_s += (t1 - t0).as_secs_f64();
-        ws.spans.record(Stage::Topk, ExecPath::Decode, pos as u32, t0, t1);
+        let tb = ws.traffic.total_bytes() - b0;
+        ws.spans.record(Stage::Topk, ExecPath::Decode, pos as u32, t0, t1, tb);
 
         // ---- Stage 3: cache read — gather this row's selected KV rows. ----
         let t0 = Instant::now();
+        let b0 = ws.traffic.total_bytes();
         {
             let TileWorkspace { sel, union, ku, vu, row_pages, .. } = &mut *ws;
             union.clear();
@@ -884,15 +958,20 @@ impl TileExecutor<'_> {
         }
         let u = ws.union.len();
         ops.kv_gen.sram(4 * (2 * u * d) as u64); // cached KV streams from SRAM
+        if traffic::enabled() {
+            ws.traffic.kv_gather_bytes += 4 * (2 * u * d) as u64;
+        }
         let t1 = Instant::now();
         timing.kv_gen_s += (t1 - t0).as_secs_f64();
-        ws.spans.record(Stage::KvGen, ExecPath::Decode, pos as u32, t0, t1);
+        let tb = ws.traffic.total_bytes() - b0;
+        ws.spans.record(Stage::KvGen, ExecPath::Decode, pos as u32, t0, t1, tb);
 
         // ---- Stage 4: formal compute on the compacted rows. The
         // selection is remapped monotonically (ascending union order),
         // so per-key visit order — and therefore the math — is
         // unchanged. ----
         let t0 = Instant::now();
+        let b0 = ws.traffic.total_bytes();
         ws.remap.begin(1);
         let stalls = {
             let TileWorkspace { sel, remap, union, q_tile, ku, vu, formal, out_tile, .. } =
@@ -917,9 +996,17 @@ impl TileExecutor<'_> {
         };
         // The formal stage's KV traffic came from the cache, not DRAM.
         kv_traffic_on_chip(&mut ops.formal, u, d);
+        if traffic::enabled() {
+            let picked = ws.sel.rows()[0].len() as u64;
+            ws.traffic.q_ingest_bytes += 4 * d as u64;
+            ws.traffic.formal_kv_bytes += 8 * picked * d as u64;
+            ws.traffic.accum_bytes += 8 * picked;
+            ws.traffic.out_egress_bytes += 4 * d as u64;
+        }
         let t1 = Instant::now();
         timing.formal_s += (t1 - t0).as_secs_f64();
-        ws.spans.record(Stage::Formal, ExecPath::Decode, pos as u32, t0, t1);
+        let tb = ws.traffic.total_bytes() - b0;
+        ws.spans.record(Stage::Formal, ExecPath::Decode, pos as u32, t0, t1, tb);
         ws.hot_allocs += allocmeter::thread_allocs() - a0;
 
         DecodeRowOut {
@@ -960,6 +1047,7 @@ impl TileExecutor<'_> {
         // stream them to this home worker — only the union crosses the
         // ring (the sparse-attention win).
         let t0 = Instant::now();
+        let b0 = ws.traffic.total_bytes();
         {
             let TileWorkspace { needed, union, .. } = &mut *ws;
             union_rows_into(sel_rows, s, needed, union);
@@ -971,6 +1059,9 @@ impl TileExecutor<'_> {
             // charge is the single-core stage-3 accounting, shared so it
             // cannot drift between the engines.
             charge_on_demand_kv_gen(&mut ops.kv_gen, u, inp.x.unwrap().cols, d);
+            if traffic::enabled() {
+                ws.traffic.x_ingest_bytes += 4 * (u * inp.x.unwrap().cols) as u64;
+            }
         }
         // When every key is selected (dense execution, keep = 1.0) the
         // gather is the identity: attend the original K/V directly
@@ -990,10 +1081,14 @@ impl TileExecutor<'_> {
                 }
             }
             ws.hot_allocs += allocmeter::thread_allocs() - a0;
+            if traffic::enabled() {
+                ws.traffic.kv_gather_bytes += 4 * (2 * u * d) as u64;
+            }
         }
         let t1 = Instant::now();
         timing.kv_gen_s += (t1 - t0).as_secs_f64();
-        ws.spans.record(Stage::KvGen, ExecPath::Sharded, lo as u32, t0, t1);
+        let tb = ws.traffic.total_bytes() - b0;
+        ws.spans.record(Stage::KvGen, ExecPath::Sharded, lo as u32, t0, t1, tb);
 
         // ---- Formal: SU-FA over the gathered rows, selection remapped
         // monotonically (ascending union order) so the per-key visit
@@ -1001,6 +1096,7 @@ impl TileExecutor<'_> {
         // run. An identity union needs no remap: positions already equal
         // indices.
         let t0 = Instant::now();
+        let b0 = ws.traffic.total_bytes();
         ws.remap.reserve(rows, keep.max(1));
         ws.q_tile.reset(rows, d);
         ws.formal.reserve(d, cfg.bc, s);
@@ -1038,9 +1134,17 @@ impl TileExecutor<'_> {
             // gathered KV out of on-chip buffers, not DRAM.
             kv_traffic_on_chip(&mut ops.formal, u, d);
         }
+        if traffic::enabled() {
+            let picked: u64 = sel_rows.iter().map(|r| r.len() as u64).sum();
+            ws.traffic.q_ingest_bytes += 4 * (rows * d) as u64;
+            ws.traffic.formal_kv_bytes += 8 * picked * d as u64;
+            ws.traffic.accum_bytes += 8 * picked;
+            ws.traffic.out_egress_bytes += 4 * (rows * d) as u64;
+        }
         let t1 = Instant::now();
         timing.formal_s += (t1 - t0).as_secs_f64();
-        ws.spans.record(Stage::Formal, ExecPath::Sharded, lo as u32, t0, t1);
+        let tb = ws.traffic.total_bytes() - b0;
+        ws.spans.record(Stage::Formal, ExecPath::Sharded, lo as u32, t0, t1, tb);
         ws.hot_allocs += allocmeter::thread_allocs() - a0;
         (stalls, u)
     }
@@ -1069,17 +1173,19 @@ const TILE_CHUNKS_PER_GRAB: usize = 4;
 /// callers sort by their tile key; *outputs* stay deterministic at every
 /// thread count because each job is a pure function of its tile index
 /// and each tile runs exactly once. Returns the results plus the metered
-/// hot-path allocation total and the peak workspace bytes.
+/// hot-path allocation total, the peak workspace bytes, the merged
+/// measured-traffic counters, and the scheduler statistics (chunk grabs,
+/// steals, per-worker tile imbalance).
 pub(crate) fn parallel_tiles_pooled<T: Send>(
     ntiles: usize,
     threads: usize,
     pool: &WorkspacePool,
     class: ShapeClass,
     job: impl Fn(&mut TileWorkspace, usize) -> T + Sync,
-) -> (Vec<T>, u64, usize) {
+) -> (Vec<T>, u64, usize, TrafficCounter, SchedStats) {
     use std::sync::atomic::{AtomicUsize, Ordering};
     if ntiles == 0 {
-        return (Vec::new(), 0, 0);
+        return (Vec::new(), 0, 0, TrafficCounter::new(), SchedStats::default());
     }
     let workers = match threads {
         0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
@@ -1091,46 +1197,61 @@ pub(crate) fn parallel_tiles_pooled<T: Send>(
         ws.spans.worker = 0;
         ws.spans.session = 0;
         let outs = (0..ntiles).map(|ti| job(&mut ws, ti)).collect();
-        let (hot, bytes) = (ws.take_hot_allocs(), ws.capacity_bytes());
+        let (hot, bytes, tr) = (ws.take_hot_allocs(), ws.capacity_bytes(), ws.take_traffic());
         pool.checkin(ws);
-        (outs, hot, bytes)
+        (outs, hot, bytes, tr, SchedStats::single(ntiles as u64))
     } else {
         let chunk = (ntiles / (workers * TILE_CHUNKS_PER_GRAB)).max(1);
         let cursor = AtomicUsize::new(0);
-        let per_worker: Vec<(Vec<T>, u64, usize)> = std::thread::scope(|scope| {
-            let (job, cursor) = (&job, &cursor);
-            let handles: Vec<_> = (0..workers)
-                .map(|w| {
-                    scope.spawn(move || {
-                        let mut ws = pool.checkout(class);
-                        ws.spans.worker = w as u32;
-                        ws.spans.session = 0;
-                        let mut outs: Vec<T> = Vec::with_capacity(chunk);
-                        loop {
-                            let start = cursor.fetch_add(chunk, Ordering::Relaxed);
-                            if start >= ntiles {
-                                break;
+        let per_worker: Vec<(Vec<T>, u64, usize, TrafficCounter, u64, u64)> =
+            std::thread::scope(|scope| {
+                let (job, cursor) = (&job, &cursor);
+                let handles: Vec<_> = (0..workers)
+                    .map(|w| {
+                        scope.spawn(move || {
+                            let mut ws = pool.checkout(class);
+                            ws.spans.worker = w as u32;
+                            ws.spans.session = 0;
+                            let mut outs: Vec<T> = Vec::with_capacity(chunk);
+                            let (mut grabs, mut tiles) = (0u64, 0u64);
+                            loop {
+                                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                                if start >= ntiles {
+                                    break;
+                                }
+                                let end = (start + chunk).min(ntiles);
+                                grabs += 1;
+                                tiles += (end - start) as u64;
+                                outs.extend((start..end).map(|ti| job(&mut ws, ti)));
                             }
-                            let end = (start + chunk).min(ntiles);
-                            outs.extend((start..end).map(|ti| job(&mut ws, ti)));
-                        }
-                        let (hot, bytes) = (ws.take_hot_allocs(), ws.capacity_bytes());
-                        pool.checkin(ws);
-                        (outs, hot, bytes)
+                            let (hot, bytes, tr) =
+                                (ws.take_hot_allocs(), ws.capacity_bytes(), ws.take_traffic());
+                            pool.checkin(ws);
+                            (outs, hot, bytes, tr, grabs, tiles)
+                        })
                     })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("tile worker panicked")).collect()
-        });
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("tile worker panicked")).collect()
+            });
         let mut outs = Vec::with_capacity(ntiles);
         let mut hot = 0u64;
         let mut bytes = 0usize;
-        for (o, h, b) in per_worker {
+        let mut traffic = TrafficCounter::new();
+        let mut sched = SchedStats { workers: workers as u64, ..SchedStats::default() };
+        for (o, h, b, tr, grabs, tiles) in per_worker {
             outs.extend(o);
             hot += h;
             bytes = bytes.max(b);
+            traffic.merge(&tr);
+            sched.chunk_grabs += grabs;
+            // Every grab past a worker's first claimed work the static
+            // striping would have handed to someone else: count it as a
+            // steal.
+            sched.steals += grabs.saturating_sub(1);
+            sched.tiles += tiles;
+            sched.max_worker_tiles = sched.max_worker_tiles.max(tiles);
         }
-        (outs, hot, bytes)
+        (outs, hot, bytes, traffic, sched)
     }
 }
 

@@ -31,6 +31,8 @@ use super::report::{StageOps, StageTiming};
 use crate::arith::{EquivWeights, OpCounter};
 use crate::attention::Selection;
 use crate::kvcache::{KvPage, SessionStore};
+use crate::obs::traffic::{self, SchedStats, TrafficCounter};
+use crate::sim::pipeline::PredictKind;
 use crate::tensor::Mat;
 use crate::workload::AttnWorkload;
 use std::time::Instant;
@@ -134,6 +136,13 @@ pub struct PipelineReport {
     /// against the modeled SRAM budget
     /// ([`crate::sim::sram::Sram::STAR_BUDGET_BYTES`]).
     pub workspace_bytes: usize,
+    /// Measured byte-level traffic for the run (all fields zero unless
+    /// [`crate::obs::traffic::set_enabled`] turned counting on). Merged
+    /// across workers; order-independent, so identical at every thread
+    /// count.
+    pub traffic: TrafficCounter,
+    /// Work-stealing scheduler statistics for the run's tile section.
+    pub sched: SchedStats,
 }
 
 impl PipelineReport {
@@ -225,6 +234,25 @@ impl SparseAttentionPipeline {
             ScoreSource::Exact => Some(inp.k.transpose()),
             _ => None,
         };
+        // Run-level key ingest: the predict operands stream in ONCE here
+        // (f32 host layout), not once per tile — that is the cross-stage
+        // tiling win the reconciliation in `star bench traffic` checks.
+        let mut run_traffic = TrafficCounter::new();
+        if traffic::enabled() {
+            run_traffic.key_ingest_bytes += match score {
+                ScoreSource::None => 0,
+                ScoreSource::Exact => 4 * (s * d) as u64,
+                ScoreSource::Prepared(_) => {
+                    if self.cfg.predict == PredictKind::DlzsCross && inp.x.is_some() {
+                        // Cross-phase: K̂ is derived from X, so the ingest
+                        // is the activation matrix `[S, H]`.
+                        4 * (s * inp.x.unwrap().cols) as u64
+                    } else {
+                        4 * (s * d) as u64
+                    }
+                }
+            };
+        }
         timing.predict_s += t0.elapsed().as_secs_f64();
 
         // ---- Tiled parallel section on the shared tile core. ----
@@ -232,10 +260,11 @@ impl SparseAttentionPipeline {
         let ctx = TileCtx { cfg: &self.cfg, inp, score: &score, kt: kt.as_ref(), keep };
         let exec = TileExecutor { cfg: &self.cfg };
         let class = ShapeClass::of(&self.cfg, d);
-        let (mut tiles, hot_path_allocs, workspace_bytes): (Vec<TileOut>, u64, usize) =
+        let (mut tiles, hot_path_allocs, workspace_bytes, tile_traffic, sched) =
             parallel_tiles_pooled(ntiles, self.cfg.threads, pool, class, |ws, ti| {
                 exec.prefill_tile(&ctx, ti, ws)
             });
+        run_traffic.merge(&tile_traffic);
         tiles.sort_by_key(|tile| tile.lo);
 
         // ---- Merge. ----
@@ -271,6 +300,8 @@ impl SparseAttentionPipeline {
             keep,
             hot_path_allocs,
             workspace_bytes,
+            traffic: run_traffic,
+            sched,
         }
     }
 }
@@ -314,6 +345,11 @@ pub struct DecodeReport {
     /// Peak per-worker [`super::engine::TileWorkspace`] heap capacity
     /// during this step, bytes.
     pub workspace_bytes: usize,
+    /// Measured byte-level traffic for this step (zero unless
+    /// [`crate::obs::traffic::set_enabled`] turned counting on).
+    pub traffic: TrafficCounter,
+    /// Work-stealing scheduler statistics for this step's row tiles.
+    pub sched: SchedStats,
 }
 
 impl SparseAttentionPipeline {
@@ -411,6 +447,17 @@ impl SparseAttentionPipeline {
         let outcome = store.append(session, k_new, v_new, &mut ops)?;
         timing.kv_gen_s += t0.elapsed().as_secs_f64();
 
+        // Cache-side traffic: the new K/V rows stream in once (and are
+        // quantized into frozen page operands), the appended pages are
+        // written, and any re-materialized history streams back from
+        // host memory.
+        let mut run_traffic = TrafficCounter::new();
+        if traffic::enabled() {
+            run_traffic.key_ingest_bytes += 4 * (k_new.rows * d) as u64;
+            run_traffic.cache_append_bytes += 4 * (2 * k_new.rows * d) as u64;
+            run_traffic.cache_remat_bytes += 4 * (2 * outcome.rematerialized_tokens * d) as u64;
+        }
+
         let base = outcome.start;
         let rows = q.rows;
         let page_size = store.config().page_size;
@@ -422,10 +469,12 @@ impl SparseAttentionPipeline {
         let tile = self.cfg.tile_t.min(rows.max(1));
         let ntiles = rows.div_ceil(tile);
         let class = ShapeClass::of(&self.cfg, d);
-        let (mut tiles_out, hot_path_allocs, workspace_bytes): (
+        let (mut tiles_out, hot_path_allocs, workspace_bytes, tile_traffic, sched): (
             Vec<(usize, Vec<DecodeRowOut>)>,
             u64,
             usize,
+            TrafficCounter,
+            SchedStats,
         ) = {
             let pages: Vec<&KvPage> = store.pages_of(session);
             let exec = TileExecutor { cfg: &self.cfg };
@@ -441,6 +490,7 @@ impl SparseAttentionPipeline {
                 (ti, outs)
             })
         };
+        run_traffic.merge(&tile_traffic);
         tiles_out.sort_by_key(|(ti, _)| *ti);
 
         // Merge in row order.
@@ -488,6 +538,8 @@ impl SparseAttentionPipeline {
             evicted_sessions: outcome.evicted_sessions,
             hot_path_allocs,
             workspace_bytes,
+            traffic: run_traffic,
+            sched,
         })
     }
 }

@@ -56,6 +56,7 @@ use super::exec::PipelineInputs;
 use super::report::{StageOps, StageTiming};
 use crate::attention::Selection;
 use crate::obs::trace::{ExecPath, Stage};
+use crate::obs::traffic::{self, SchedStats, TrafficCounter};
 use crate::sim::pipeline::TopkKind;
 use crate::sparsity::topk::{
     merge_topk_candidates, sads_geometry, sads_merge, sads_segment_winners_scratch,
@@ -227,6 +228,15 @@ pub struct ShardedReport {
     /// Peak per-worker [`super::TileWorkspace`] heap capacity during
     /// this run, bytes.
     pub workspace_bytes: usize,
+    /// Measured byte-level traffic merged over all workers (zero unless
+    /// [`crate::obs::traffic::set_enabled`] turned counting on). The
+    /// ring payload is counted in `ring_payload_bytes` inside the
+    /// counter, so sharded DRAM-class totals stay comparable with the
+    /// single-core run.
+    pub traffic: TrafficCounter,
+    /// Scheduler statistics: the ring schedule is static (one homed Q
+    /// block per worker), so `steals` is always 0 here.
+    pub sched: SchedStats,
 }
 
 impl ShardedReport {
@@ -365,6 +375,8 @@ impl ShardedPipeline {
                 per_shard: Vec::new(),
                 hot_path_allocs: 0,
                 workspace_bytes: 0,
+                traffic: TrafficCounter::new(),
+                sched: SchedStats::default(),
             };
         }
 
@@ -377,6 +389,26 @@ impl ShardedPipeline {
             ScoreSource::Exact => Some(inp.k.transpose()),
             _ => None,
         };
+        // Run-level key ingest, identical to the single-core prologue:
+        // the predict operands stream in once for the whole run (the
+        // per-hop score tiles are SRAM-class operand reads), which is
+        // what keeps sharded DRAM-class totals equal to the single-core
+        // run's — a property `star bench traffic` checks.
+        let mut run_traffic = TrafficCounter::new();
+        if traffic::enabled() {
+            run_traffic.key_ingest_bytes += match score {
+                ScoreSource::None => 0,
+                ScoreSource::Exact => 4 * (s * d) as u64,
+                ScoreSource::Prepared(_) => {
+                    use crate::sim::pipeline::PredictKind;
+                    if self.cfg.predict == PredictKind::DlzsCross && inp.x.is_some() {
+                        4 * (s * inp.x.unwrap().cols) as u64
+                    } else {
+                        4 * (s * d) as u64
+                    }
+                }
+            };
+        }
         timing.predict_s += t0.elapsed().as_secs_f64();
 
         let plan = self.plan(t, s);
@@ -401,7 +433,8 @@ impl ShardedPipeline {
         // block has visited every shard and is back home for merge +
         // gather + formal. ----
         let class = ShapeClass::of(&self.cfg, d);
-        let worker_outs: Vec<(WorkerOut, u64, usize)> = std::thread::scope(|scope| {
+        let worker_outs: Vec<(WorkerOut, u64, usize, TrafficCounter)> =
+            std::thread::scope(|scope| {
             let (txs, rxs): (Vec<_>, Vec<_>) =
                 (0..w).map(|_| channel::<QBlockPayload>()).unzip();
             let ctx = &ctx;
@@ -432,8 +465,12 @@ impl ShardedPipeline {
                             &mut ws,
                         );
                         if w > 1 {
-                            payload_bytes += payload.wire_bytes(ctx.d);
+                            let wb = payload.wire_bytes(ctx.d);
+                            payload_bytes += wb;
                             ring_sends += 1;
+                            if traffic::enabled() {
+                                ws.traffic.ring_payload_bytes += wb;
+                            }
                             let sent_block = payload.block as u32;
                             let t0 = Instant::now();
                             tx_next.send(payload).expect("ring receiver alive");
@@ -446,6 +483,7 @@ impl ShardedPipeline {
                                 sent_block,
                                 t0,
                                 Instant::now(),
+                                wb,
                             );
                         }
                     }
@@ -459,9 +497,10 @@ impl ShardedPipeline {
                         payload_bytes,
                         &mut ws,
                     );
-                    let (hot, bytes) = (ws.take_hot_allocs(), ws.capacity_bytes());
+                    let (hot, bytes, tr) =
+                        (ws.take_hot_allocs(), ws.capacity_bytes(), ws.take_traffic());
                     pool.checkin(ws);
-                    (out, hot, bytes)
+                    (out, hot, bytes, tr)
                 }));
             }
             drop(txs);
@@ -470,9 +509,10 @@ impl ShardedPipeline {
         let mut hot_path_allocs = 0u64;
         let mut workspace_bytes = 0usize;
         let mut outs: Vec<WorkerOut> = Vec::with_capacity(w);
-        for (o, hot, bytes) in worker_outs {
+        for (o, hot, bytes, tr) in worker_outs {
             hot_path_allocs += hot;
             workspace_bytes = workspace_bytes.max(bytes);
+            run_traffic.merge(&tr);
             outs.push(o);
         }
         outs.sort_by_key(|o| o.block);
@@ -526,6 +566,14 @@ impl ShardedPipeline {
             per_shard,
             hot_path_allocs,
             workspace_bytes,
+            traffic: run_traffic,
+            sched: SchedStats {
+                workers: w as u64,
+                chunk_grabs: w as u64,
+                steals: 0,
+                tiles: w as u64,
+                max_worker_tiles: 1,
+            },
         }
     }
 }
@@ -558,6 +606,7 @@ fn shard_local_pass(
     // stage-1 kernel the batch tile path runs, not a loop kept in sync
     // by hand. ----
     let t0 = Instant::now();
+    let b0 = ws.traffic.total_bytes();
     let exec = TileExecutor { cfg: ctx.cfg };
     let have_est = exec.score_block_into(
         ctx.score,
@@ -573,10 +622,12 @@ fn shard_local_pass(
     debug_assert!(have_est, "topk != None implies a score source");
     let t1 = Instant::now();
     timing.predict_s += (t1 - t0).as_secs_f64();
-    ws.spans.record(Stage::Predict, ExecPath::Sharded, lo as u32, t0, t1);
+    let tb = ws.traffic.total_bytes() - b0;
+    ws.spans.record(Stage::Predict, ExecPath::Sharded, lo as u32, t0, t1, tb);
 
     // ---- Top-k (local): propose candidates from the owned range. ----
     let t0 = Instant::now();
+    let b0 = ws.traffic.total_bytes();
     let (est, topk, tmp) = ws.est_topk_and_tmp();
     match ctx.cfg.topk {
         TopkKind::None => unreachable!(),
@@ -614,9 +665,14 @@ fn shard_local_pass(
             }
         }
     }
+    if traffic::enabled() {
+        // The local score tile is re-read once by the proposal pass.
+        ws.traffic.score_read_bytes += 4 * (rows * kw) as u64;
+    }
     let t1 = Instant::now();
     timing.topk_s += (t1 - t0).as_secs_f64();
-    ws.spans.record(Stage::Topk, ExecPath::Sharded, lo as u32, t0, t1);
+    let tb = ws.traffic.total_bytes() - b0;
+    ws.spans.record(Stage::Topk, ExecPath::Sharded, lo as u32, t0, t1, tb);
 }
 
 /// The home phase for a block that has visited every shard: merge the
@@ -663,8 +719,10 @@ fn home_phase(
     timing.topk_s += (t1 - t0).as_secs_f64();
     // The distributed-selection merge is still accounted under the
     // top-k clock (it *is* stage 2), but traced as its own span so the
-    // home phase is visible on the timeline.
-    ws.spans.record(Stage::Merge, ExecPath::Sharded, lo as u32, t0, t1);
+    // home phase is visible on the timeline. It reads only the payload
+    // candidates already counted at the ring hops, so its byte delta is
+    // legitimately 0.
+    ws.spans.record(Stage::Merge, ExecPath::Sharded, lo as u32, t0, t1, 0);
 
     // ---- Stages 3 + 4 on the shared tile core: union → gather (only
     // the union crosses the ring — the sparse-attention win) → monotone

@@ -123,11 +123,23 @@ pub struct WorkloadShape {
     pub h: usize,
     /// Top-k keep ratio (1.0 under dense execution).
     pub keep_ratio: f64,
+    /// Override for the KV-union ratio (generated rows / S). `None`
+    /// keeps the [`StageWork::new`] heuristic; measured reconciliation
+    /// (`star bench traffic`) injects the *observed* ratio so the model
+    /// predicts the exact union the execution produced. Deliberately
+    /// un-clamped: per-tile regeneration makes Σunion exceed S.
+    pub union_ratio: Option<f64>,
 }
 
 impl WorkloadShape {
     pub fn new(t: usize, s: usize, d: usize, h: usize, keep_ratio: f64) -> WorkloadShape {
-        WorkloadShape { t, s, d, h, keep_ratio }
+        WorkloadShape { t, s, d, h, keep_ratio, union_ratio: None }
+    }
+
+    /// Pin the KV-union ratio instead of the heuristic (see field docs).
+    pub fn with_union_ratio(mut self, r: f64) -> WorkloadShape {
+        self.union_ratio = Some(r);
+        self
     }
 
     fn stage_work(&self, feats: &FeatureSet) -> StageWork {
@@ -135,7 +147,11 @@ impl WorkloadShape {
             TopkKind::None => 1.0,
             _ => self.keep_ratio,
         };
-        StageWork::new(self.t, self.s, self.d, self.h, k)
+        let mut w = StageWork::new(self.t, self.s, self.d, self.h, k);
+        if let Some(r) = self.union_ratio {
+            w.union_ratio = r;
+        }
+        w
     }
 
     /// Dense-equivalent useful ops of the whole job (the accounting
@@ -152,6 +168,9 @@ impl WorkloadShape {
 pub struct StageTime {
     pub compute_s: f64,
     pub mem_s: f64,
+    /// DRAM bytes this stage's memory stream moves (spills included) —
+    /// the modeled side of the measured-vs-modeled reconciliation.
+    pub dram_bytes: u64,
 }
 
 impl StageTime {
@@ -179,6 +198,9 @@ pub struct SimReport {
     pub eff_gops: f64,
     /// SU-FA stall cycles (0 with the tailored engine).
     pub stall_cycles: u64,
+    /// Modeled resident KV bytes (generated/loaded rows × 2d × element
+    /// width) — what a decode cache append materializes for this shape.
+    pub kv_resident_bytes: u64,
 }
 
 impl SimReport {
@@ -252,6 +274,7 @@ pub fn simulate(
     let predict = StageTime {
         compute_s: cyc(p_cycles),
         mem_s: dram.transfer_time(p_dram + p_spill),
+        dram_bytes: p_dram + p_spill,
     };
 
     // ---------------- Top-k stage ----------------
@@ -263,7 +286,7 @@ pub fn simulate(
     };
     compute_e += em.of_ops(&t_ops, false);
     ops.merge(&t_ops);
-    let topk = StageTime { compute_s: cyc(t_cycles), mem_s: 0.0 };
+    let topk = StageTime { compute_s: cyc(t_cycles), mem_s: 0.0, dram_bytes: 0 };
 
     // ---------------- KV generation / load ----------------
     // STAR (and cascade-pruning designs) generate KV on demand from X.
@@ -296,7 +319,8 @@ pub fn simulate(
         g_dram += 2 * spill;
     }
     dram_bytes += g_dram;
-    let kv_gen = StageTime { compute_s: cyc(g_cycles), mem_s: dram.transfer_time(g_dram) };
+    let kv_gen =
+        StageTime { compute_s: cyc(g_cycles), mem_s: dram.transfer_time(g_dram), dram_bytes: g_dram };
 
     // ---------------- Formal compute ----------------
     let (mm_cycles, mm_ops) = units.pe.formal_matmuls(&w);
@@ -341,7 +365,8 @@ pub fn simulate(
         f_dram += (kv_bytes as usize).saturating_sub(sram.bytes / 2) as u64;
     }
     dram_bytes += f_dram;
-    let formal = StageTime { compute_s: cyc(f_cycles), mem_s: dram.transfer_time(f_dram) };
+    let formal =
+        StageTime { compute_s: cyc(f_cycles), mem_s: dram.transfer_time(f_dram), dram_bytes: f_dram };
 
     // ---------------- Composition ----------------
     let stages = [&predict, &topk, &kv_gen, &formal];
@@ -385,6 +410,7 @@ pub fn simulate(
         dram_bytes,
         eff_gops,
         stall_cycles,
+        kv_resident_bytes: gen_rows * (2 * w.d) as u64 * f,
     }
 }
 

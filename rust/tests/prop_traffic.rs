@@ -1,0 +1,189 @@
+//! Property: byte-traffic counting is invisible to the math, free of
+//! heap traffic on the warm hot path, and exactly reproducible.
+//!
+//! The traffic counters (`star::obs::traffic`) live inside the pooled
+//! [`star::pipeline::TileWorkspace`] and are bumped with pure integer
+//! arithmetic inside the metered stage cores, so three contracts hold:
+//!
+//! 1. **Bit-invisibility.** Outputs, selections and stalls of all three
+//!    execution paths (batch prefill, autoregressive decode,
+//!    sequence-sharded prefill) are identical with counting off and on.
+//! 2. **Zero-allocation counting.** This binary installs the counting
+//!    allocator; warm counted runs must meter zero hot-path allocations.
+//! 3. **Exact reproducibility.** The measured byte counters are pure
+//!    functions of shape + selection: every field matches exactly
+//!    between thread counts (the work-stealing schedule moves tiles
+//!    between workers but cannot change what they read or write) and
+//!    between repeated runs. Only the scheduler stats
+//!    (`SchedStats`) may differ run-to-run.
+//!
+//! The counted phase deliberately never disables counting afterwards:
+//! the flag is process-global and this is the one test binary that
+//! flips it (tests within a binary share the process). The disabled
+//! baseline therefore runs *first*, inside the single test that
+//! touches the flag.
+
+#[global_allocator]
+static ALLOC: star::util::allocmeter::CountingAllocator =
+    star::util::allocmeter::CountingAllocator;
+
+use star::kvcache::{SessionConfig, SessionStore};
+use star::obs::TrafficCounter;
+use star::pipeline::{
+    PipelineConfig, PipelineInputs, ShardedPipeline, SparseAttentionPipeline, WorkspacePool,
+};
+use star::tensor::Mat;
+use star::util::{allocmeter, Rng};
+
+fn mats(t: usize, s: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+    let mut rng = Rng::new(seed);
+    (
+        Mat::randn(t, d, 1.0, &mut rng),
+        Mat::randn(s, d, 1.0, &mut rng),
+        Mat::randn(s, d, 1.0, &mut rng),
+    )
+}
+
+fn sub(m: &Mat, lo: usize, hi: usize) -> Mat {
+    Mat::from_fn(hi - lo, m.cols, |i, j| m.at(lo + i, j))
+}
+
+#[test]
+fn counting_allocator_is_live_in_this_binary() {
+    let a0 = allocmeter::thread_allocs();
+    let v: Vec<u64> = Vec::with_capacity(64);
+    assert!(allocmeter::thread_allocs() > a0, "allocation meter must count");
+    assert!(allocmeter::installed());
+    drop(v);
+}
+
+/// One decode session (8-token prefill chunk + 8 single-token steps) on
+/// a warm pool: per-step outputs, selections, the summed traffic and
+/// the hot-path alloc sum of the steps.
+fn decode_session(
+    cfg: PipelineConfig,
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    pool: &WorkspacePool,
+) -> (Vec<Mat>, Vec<star::attention::Selection>, TrafficCounter, u64) {
+    let d = q.cols;
+    let pipe = SparseAttentionPipeline::new(cfg);
+    let mut store = SessionStore::new(SessionConfig::for_pipeline(&cfg, d, 0));
+    let mut traffic = TrafficCounter::new();
+    let r0 = pipe
+        .decode_step_pooled(&mut store, 1, &sub(q, 0, 8), &sub(k, 0, 8), &sub(v, 0, 8), pool)
+        .expect("prefill chunk");
+    traffic.merge(&r0.traffic);
+    let (mut outs, mut sels, mut allocs) = (Vec::new(), Vec::new(), 0u64);
+    for lo in 8..16 {
+        let r = pipe
+            .decode_step_pooled(
+                &mut store,
+                1,
+                &sub(q, lo, lo + 1),
+                &sub(k, lo, lo + 1),
+                &sub(v, lo, lo + 1),
+                pool,
+            )
+            .expect("decode step");
+        allocs += r.hot_path_allocs;
+        traffic.merge(&r.traffic);
+        outs.push(r.out);
+        sels.push(r.selection);
+    }
+    (outs, sels, traffic, allocs)
+}
+
+#[test]
+fn traffic_counting_is_bit_invisible_allocation_free_and_reproducible() {
+    let cfg = PipelineConfig::star().with_keep(0.25).with_tile(8).with_threads(1);
+    let (q, k, v) = mats(24, 128, 16, 42);
+    let inputs = PipelineInputs::qkv(&q, &k, &v);
+    let pipe = SparseAttentionPipeline::new(cfg);
+    let sharded = ShardedPipeline::new(cfg, 2);
+
+    // ---- Baseline, counting disabled (the process default; this is
+    // the only test in this binary that flips the flag). ----
+    assert!(!star::obs::traffic::enabled(), "counting must start disabled in this binary");
+    let pool_off = WorkspacePool::new();
+    let base_prefill = pipe.run_pooled(&inputs, &pool_off);
+    let base_sharded = sharded.run_pooled(&inputs, &pool_off);
+    let (base_outs, base_sels, base_traffic, _) = decode_session(cfg, &q, &k, &v, &pool_off);
+    assert_eq!(base_prefill.traffic, TrafficCounter::default(), "off: prefill must not count");
+    assert_eq!(base_sharded.traffic, TrafficCounter::default(), "off: sharded must not count");
+    assert_eq!(base_traffic, TrafficCounter::default(), "off: decode must not count");
+
+    // ---- Counted: same workload on a fresh pool. First passes warm
+    // the workspaces (allocs uncounted); second passes measure. ----
+    star::obs::traffic::set_enabled(true);
+    let pool_on = WorkspacePool::new();
+    pipe.run_pooled(&inputs, &pool_on);
+    sharded.run_pooled(&inputs, &pool_on);
+    let counted_prefill = pipe.run_pooled(&inputs, &pool_on);
+    let counted_sharded = sharded.run_pooled(&inputs, &pool_on);
+    let (counted_outs, counted_sels, counted_decode, decode_allocs) =
+        decode_session(cfg, &q, &k, &v, &pool_on);
+
+    // 1. Bit-invisibility.
+    assert_eq!(counted_prefill.out.max_abs_diff(&base_prefill.out), 0.0, "prefill output drift");
+    assert_eq!(counted_prefill.selection, base_prefill.selection, "prefill selection drift");
+    assert_eq!(counted_prefill.stalls, base_prefill.stalls, "prefill stall drift");
+    assert_eq!(counted_sharded.out.max_abs_diff(&base_sharded.out), 0.0, "sharded output drift");
+    assert_eq!(counted_sharded.selection, base_sharded.selection, "sharded selection drift");
+    assert_eq!(counted_outs.len(), base_outs.len());
+    for (i, (c, b)) in counted_outs.iter().zip(&base_outs).enumerate() {
+        assert_eq!(c.max_abs_diff(b), 0.0, "decode step {i} output drift");
+    }
+    assert_eq!(counted_sels, base_sels, "decode selection drift");
+
+    // 2. Counting actually counted, without touching the heap in the
+    // metered stage cores.
+    assert!(counted_prefill.traffic.total_bytes() > 0, "on: prefill counted nothing");
+    assert!(counted_sharded.traffic.total_bytes() > 0, "on: sharded counted nothing");
+    assert!(counted_decode.total_bytes() > 0, "on: decode counted nothing");
+    assert!(counted_sharded.traffic.ring_payload_bytes > 0, "sharded ring payload uncounted");
+    assert_eq!(counted_prefill.traffic.ring_payload_bytes, 0, "single-core prefill has no ring");
+    assert!(counted_decode.cache_append_bytes > 0, "decode cache appends uncounted");
+    assert_eq!(counted_prefill.hot_path_allocs, 0, "counted warm prefill allocated");
+    assert_eq!(counted_sharded.hot_path_allocs, 0, "counted warm sharded run allocated");
+    assert_eq!(decode_allocs, 0, "counted warm decode steps allocated");
+
+    // 3. Exact reproducibility: every byte field is a pure function of
+    // shape + selection. (a) Same run repeated — identical.
+    let again = pipe.run_pooled(&inputs, &pool_on);
+    assert_eq!(again.traffic, counted_prefill.traffic, "prefill bytes drift run-to-run");
+    // (b) Different thread count — the work-stealing schedule changes,
+    // the bytes must not. (Scheduler stats may legitimately differ.)
+    let cfg4 = PipelineConfig::star().with_keep(0.25).with_tile(8).with_threads(4);
+    let pipe4 = SparseAttentionPipeline::new(cfg4);
+    let pool4 = WorkspacePool::new();
+    pipe4.run_pooled(&inputs, &pool4);
+    let counted4 = pipe4.run_pooled(&inputs, &pool4);
+    assert_eq!(counted4.out.max_abs_diff(&counted_prefill.out), 0.0, "thread-count output drift");
+    assert_eq!(counted4.traffic, counted_prefill.traffic, "bytes differ across thread counts");
+    // (c) Sharded likewise reproduces, ring payload included.
+    let again_sharded = sharded.run_pooled(&inputs, &pool_on);
+    assert_eq!(again_sharded.traffic, counted_sharded.traffic, "sharded bytes drift run-to-run");
+    // (d) A decode session re-run from scratch reproduces exactly.
+    let (_, _, decode_again, _) = decode_session(cfg, &q, &k, &v, &pool_on);
+    assert_eq!(decode_again, counted_decode, "decode bytes drift session-to-session");
+
+    // The DRAM-class split is consistent: the counter classes partition
+    // the total.
+    for (name, t) in [
+        ("prefill", &counted_prefill.traffic),
+        ("sharded", &counted_sharded.traffic),
+        ("decode", &counted_decode),
+    ] {
+        assert_eq!(
+            t.total_bytes(),
+            t.dram_class_bytes()
+                + t.sram_class_bytes()
+                + t.ring_payload_bytes
+                + t.cache_append_bytes
+                + t.cache_remat_bytes,
+            "{name}: classes must partition the total"
+        );
+    }
+}

@@ -1,0 +1,153 @@
+#!/usr/bin/env python3
+"""Independent cross-reader for BENCH_traffic.json.
+
+CI runs this after `star bench traffic`. The Rust bench already
+hard-fails in-process when measured traffic diverges from the
+simulator's prediction; this script re-validates the *written artifact*
+with none of the Rust code in the loop:
+
+  1. schema — every counter field, scheduler stat, modeled figure and
+     per-stage check the document promises is present and well-typed;
+  2. tolerance — each stage's |measured - modeled| elements is re-derived
+     here and checked against max(abs_elems, rel * modeled), using the
+     tolerances the document itself declares;
+  3. invariants — zero hot-path allocations (per path and overall, with
+     the allocation counter attested live), ring traffic only on the
+     sharded path, and class counters partitioning the total.
+
+stdlib only; exits non-zero with a per-violation message on any failure.
+"""
+
+import json
+import sys
+
+PATHS = ("prefill", "decode", "sharded")
+STAGES = ("predict", "topk", "kv_gen", "formal")
+# Must match TrafficCounter::fields() (rust/src/obs/traffic.rs).
+MEASURED_FIELDS = (
+    "q_ingest_bytes",
+    "key_ingest_bytes",
+    "x_ingest_bytes",
+    "out_egress_bytes",
+    "score_write_bytes",
+    "score_read_bytes",
+    "operand_read_bytes",
+    "kv_gather_bytes",
+    "formal_kv_bytes",
+    "accum_bytes",
+    "ring_payload_bytes",
+    "cache_append_bytes",
+    "cache_remat_bytes",
+)
+SCHED_FIELDS = ("workers", "chunk_grabs", "steals", "tiles", "max_worker_tiles", "imbalance")
+MODELED_FIELDS = (
+    "predict_dram_bytes",
+    "topk_dram_bytes",
+    "kv_gen_dram_bytes",
+    "formal_dram_bytes",
+    "total_dram_bytes",
+    "kv_resident_bytes",
+)
+SHAPE_FIELDS = ("t", "s", "d", "h", "keep_ratio", "union_ratio")
+
+
+def num(doc, where, key):
+    v = doc.get(key)
+    if not isinstance(v, (int, float)) or isinstance(v, bool):
+        raise SystemExit(f"FAIL {where}.{key}: missing or non-numeric ({v!r})")
+    return float(v)
+
+
+def check_path(name, p, rel, abs_elems):
+    where = f"paths.{name}"
+    for section, fields in (
+        ("shape", SHAPE_FIELDS),
+        ("measured", MEASURED_FIELDS + ("dram_class_bytes", "sram_class_bytes")),
+        ("sched", SCHED_FIELDS),
+        ("modeled", MODELED_FIELDS),
+    ):
+        obj = p.get(section)
+        if not isinstance(obj, dict):
+            raise SystemExit(f"FAIL {where}.{section}: missing object")
+        for f in fields:
+            num(obj, f"{where}.{section}", f)
+
+    m = p["measured"]
+    total = sum(num(m, f"{where}.measured", f) for f in MEASURED_FIELDS)
+    classes = (
+        num(m, f"{where}.measured", "dram_class_bytes")
+        + num(m, f"{where}.measured", "sram_class_bytes")
+        + m["ring_payload_bytes"]
+        + m["cache_append_bytes"]
+        + m["cache_remat_bytes"]
+    )
+    if total != classes:
+        raise SystemExit(
+            f"FAIL {where}: class counters do not partition the total "
+            f"({classes} classed vs {total} summed)"
+        )
+    if total <= 0:
+        raise SystemExit(f"FAIL {where}: no traffic measured at all")
+    ring = m["ring_payload_bytes"]
+    if name == "sharded" and ring <= 0:
+        raise SystemExit(f"FAIL {where}: sharded path measured no ring traffic")
+    if name != "sharded" and ring != 0:
+        raise SystemExit(f"FAIL {where}: non-sharded path measured ring traffic ({ring})")
+
+    stages = p.get("stages")
+    if not isinstance(stages, dict):
+        raise SystemExit(f"FAIL {where}.stages: missing object")
+    for stage in STAGES:
+        c = stages.get(stage)
+        if not isinstance(c, dict):
+            raise SystemExit(f"FAIL {where}.stages.{stage}: missing object")
+        measured = num(c, f"{where}.stages.{stage}", "measured_elems")
+        modeled = num(c, f"{where}.stages.{stage}", "modeled_elems")
+        num(c, f"{where}.stages.{stage}", "ratio")
+        tol = max(abs_elems, rel * modeled)
+        if abs(measured - modeled) > tol:
+            raise SystemExit(
+                f"FAIL {where}.stages.{stage}: measured {measured:.1f} vs modeled "
+                f"{modeled:.1f} elements exceeds tolerance {tol:.1f}"
+            )
+
+    if num(p, where, "hot_path_allocs") != 0:
+        raise SystemExit(f"FAIL {where}: hot-path allocations metered on counted warm run")
+    if num(p["sched"], f"{where}.sched", "imbalance") < 1.0 - 1e-9:
+        raise SystemExit(f"FAIL {where}.sched: imbalance below 1.0")
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_traffic.json"
+    with open(path) as f:
+        doc = json.load(f)
+
+    if doc.get("bench") != "traffic":
+        raise SystemExit(f"FAIL bench: expected 'traffic', got {doc.get('bench')!r}")
+    tol = doc.get("tolerance")
+    if not isinstance(tol, dict):
+        raise SystemExit("FAIL tolerance: missing object")
+    rel = num(tol, "tolerance", "rel")
+    abs_elems = num(tol, "tolerance", "abs_elems")
+    if not (0 < rel < 1) or abs_elems < 0:
+        raise SystemExit(f"FAIL tolerance: implausible bounds rel={rel} abs_elems={abs_elems}")
+
+    paths = doc.get("paths")
+    if not isinstance(paths, dict):
+        raise SystemExit("FAIL paths: missing object")
+    for name in PATHS:
+        p = paths.get(name)
+        if not isinstance(p, dict):
+            raise SystemExit(f"FAIL paths.{name}: missing object")
+        check_path(name, p, rel, abs_elems)
+
+    if num(doc, "<root>", "hot_path_allocs") != 0:
+        raise SystemExit("FAIL hot_path_allocs: counted warm runs allocated")
+    if doc.get("alloc_counter_on") is not True:
+        raise SystemExit("FAIL alloc_counter_on: allocation meter was not live")
+
+    print(f"OK {path}: {len(PATHS)} paths x {len(STAGES)} stages within tolerance, 0 hot-path allocs")
+
+
+if __name__ == "__main__":
+    main()
