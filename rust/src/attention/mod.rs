@@ -16,12 +16,20 @@
 //! * [`sufa`] — the paper's Sorted-Updating FlashAttention (Sec. IV-C) in
 //!   descending (default) and ascending update order, with the
 //!   tailored-engine stall model for mispredicted maxima.
+//! * [`partials`] — per-partition online-softmax partials
+//!   ([`SoftmaxPartial`]) and the fixed-tree cross-shard combine: Star
+//!   Attention's phase-2 distributed reduction as a counted kernel
+//!   (DESIGN.md §12), property-tested in `tests/prop_softmax_merge.rs`.
 
 pub mod flash2;
+pub mod partials;
 pub mod ref_attn;
 pub mod sufa;
 
 pub use flash2::{flash2_attention, Flash2Params};
+pub use partials::{
+    merge_partials_tree, softmax_partial_into, softmax_partial_into_with, SoftmaxPartial,
+};
 pub use ref_attn::{dense_attention, masked_attention_oracle};
 pub use sufa::{
     sufa_attention, sufa_attention_rows_into, sufa_attention_rows_into_with, SufaParams,

@@ -1,0 +1,413 @@
+//! Per-partition online-softmax **partials** and the cross-shard combine
+//! — Star Attention's phase-2 "global query against distributed KV"
+//! reduction (PAPERS.md, arxiv 2411.17116) as a first-class counted
+//! kernel.
+//!
+//! A [`SoftmaxPartial`] carries the running max `m`, the softmax
+//! denominator `l` and the un-normalized accumulator `acc` of one query
+//! row restricted to one key partition. Partials over disjoint
+//! partitions combine exactly ([`SoftmaxPartial::combine`]): rescale
+//! both sides to the joint max, sum denominators and accumulators. The
+//! combine is commutative (IEEE f32 `+` and `max` are) but **not
+//! associative**, so distributed reductions fix the combine *tree*:
+//! [`merge_partials_tree`] folds a partition-indexed slice with a
+//! left-balanced pairwise tree, making the result deterministic at
+//! every partition count and independent of arrival order.
+//!
+//! The per-partition accumulation loop ([`softmax_partial_into`]) is
+//! spelled to match [`super::sufa`]'s **Ascend** update arm operation
+//! for operation — same tile max, same `exp(m_old − m_new)` rescale,
+//! same sequential `l` accumulation, same lane/scalar spellings — so a
+//! single-partition partial finalizes bit-identically to the unsharded
+//! SU-FA kernel fed the same visit order (pinned in
+//! `tests/prop_softmax_merge.rs`).
+//!
+//! **Where it is used.** The sharded decode path keeps bit-identity
+//! with single-core decode by running the *unpartitioned* formal kernel
+//! at the query's home worker (DESIGN.md §12), so this kernel is not on
+//! that path. It is the documented *tolerance-mode* distributed formal:
+//! `star bench decode --sharded` computes per-page partials and merges
+//! them through the fixed tree, reporting the measured deviation
+//! against the exact kernel in `BENCH_decode.json`.
+
+use super::sufa::{axpy_lanes, dot_lanes, dot_strict, max_lanes, rescale};
+use crate::arith::lanes::{F32x8, KernelPath, ReductionOrder, LANES};
+use crate::arith::{OpCounter, OpKind};
+use crate::tensor::Mat;
+use crate::util::ceil_div;
+
+/// Online-softmax state of one query row over one key partition:
+/// running max, denominator, and the `d`-wide un-normalized output
+/// accumulator. An *empty* partial (`m == −∞`, `l == 0`) is the combine
+/// identity.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SoftmaxPartial {
+    m: f32,
+    l: f32,
+    acc: Vec<f32>,
+}
+
+impl SoftmaxPartial {
+    /// The empty partial for head dimension `d` — the identity of
+    /// [`SoftmaxPartial::combine`].
+    pub fn empty(d: usize) -> SoftmaxPartial {
+        SoftmaxPartial { m: f32::NEG_INFINITY, l: 0.0, acc: vec![0.0; d] }
+    }
+
+    /// Running max of the scores seen so far (−∞ when empty).
+    pub fn m(&self) -> f32 {
+        self.m
+    }
+
+    /// Softmax denominator accumulated at the current max.
+    pub fn l(&self) -> f32 {
+        self.l
+    }
+
+    /// Head dimension of the accumulator.
+    pub fn d(&self) -> usize {
+        self.acc.len()
+    }
+
+    /// Reset to the empty partial for head dimension `d`, reusing the
+    /// accumulator's capacity (no allocation once warm).
+    pub fn reset(&mut self, d: usize) {
+        self.m = f32::NEG_INFINITY;
+        self.l = 0.0;
+        self.acc.clear();
+        self.acc.resize(d, 0.0);
+    }
+
+    /// Pre-grow the accumulator for head dimension `d`.
+    pub fn reserve(&mut self, d: usize) {
+        if self.acc.capacity() < d {
+            self.acc.reserve(d - self.acc.len());
+        }
+    }
+
+    /// Bytes of heap capacity currently held (workspace accounting).
+    pub fn capacity_bytes(&self) -> usize {
+        self.acc.capacity() * std::mem::size_of::<f32>()
+    }
+
+    /// Fold `other` into `self`: the exact online-softmax combine of two
+    /// partials over **disjoint** key sets.
+    ///
+    /// `M = max(mₐ, m_b)`, `cₓ = exp(mₓ − M)`, `l = cₐ·lₐ + c_b·l_b`,
+    /// `acc[j] = cₐ·accₐ[j] + c_b·acc_b[j]`. Empty sides (`m == −∞`) are
+    /// identity absorbed without evaluating `exp(−∞ − −∞)`, so
+    /// degenerate shards (empty selections, all-−∞ scores) are safe.
+    /// Commutative, **not** associative — distributed merges must fix
+    /// the tree ([`merge_partials_tree`]).
+    pub fn combine(&mut self, other: &SoftmaxPartial, c: &mut OpCounter) {
+        assert_eq!(self.acc.len(), other.acc.len(), "partial head-dim mismatch");
+        c.tally(OpKind::Cmp, 1);
+        if other.m == f32::NEG_INFINITY {
+            return;
+        }
+        if self.m == f32::NEG_INFINITY {
+            self.m = other.m;
+            self.l = other.l;
+            self.acc.copy_from_slice(&other.acc);
+            return;
+        }
+        let d = self.acc.len();
+        let big = if other.m > self.m { other.m } else { self.m };
+        let ca = (self.m - big).exp();
+        let cb = (other.m - big).exp();
+        c.tally(OpKind::Add, 2);
+        c.tally(OpKind::Exp, 2);
+        // l and acc: two multiplies + one add per element.
+        c.tally(OpKind::Mul, (2 * (d + 1)) as u64);
+        c.tally(OpKind::Add, (d + 1) as u64);
+        self.l = ca * self.l + cb * other.l;
+        for (a, &b) in self.acc.iter_mut().zip(&other.acc) {
+            *a = ca * *a + cb * b;
+        }
+        self.m = big;
+    }
+
+    /// Normalize into `out` (`d`-wide): `out = acc · (1/l)`, or zeros
+    /// when the partial is empty (`l == 0`) — the same convention as the
+    /// SU-FA kernel's skipped empty rows. Dispatches on the `simd`
+    /// feature ([`KernelPath::active`]).
+    pub fn finalize_into(&self, c: &mut OpCounter, out: &mut [f32]) {
+        self.finalize_into_with(c, out, KernelPath::active());
+    }
+
+    /// [`SoftmaxPartial::finalize_into`] with an explicit kernel path —
+    /// the scalar and lane spellings are the SU-FA kernel's final-scale
+    /// loops, bit-identical to each other and to it.
+    pub fn finalize_into_with(&self, c: &mut OpCounter, out: &mut [f32], path: KernelPath) {
+        let d = self.acc.len();
+        assert_eq!(out.len(), d, "output head-dim mismatch");
+        if self.l == 0.0 {
+            out.fill(0.0);
+            return;
+        }
+        c.tally(OpKind::Div, 1);
+        c.tally(OpKind::Mul, d as u64);
+        let inv = 1.0 / self.l;
+        match path {
+            KernelPath::Scalar => {
+                for (o, &a) in out.iter_mut().zip(self.acc.iter()) {
+                    *o = a * inv;
+                }
+            }
+            KernelPath::Lanes => {
+                let n = d - d % LANES;
+                let iv = F32x8::splat(inv);
+                for (oc, ac) in
+                    out[..n].chunks_exact_mut(LANES).zip(self.acc[..n].chunks_exact(LANES))
+                {
+                    F32x8::load(ac).mul(iv).store(oc);
+                }
+                for (o, &a) in out[n..].iter_mut().zip(&self.acc[n..]) {
+                    *o = a * inv;
+                }
+            }
+        }
+    }
+}
+
+/// Accumulate the keys of one partition into `out` (which is reset
+/// first) for query row `q`, visiting `keys` front-to-back in tiles of
+/// `bc`. Dispatches on the `simd` feature ([`KernelPath::active`]).
+#[allow(clippy::too_many_arguments)]
+pub fn softmax_partial_into(
+    q: &[f32],
+    k: &Mat,
+    v: &Mat,
+    keys: &[usize],
+    scale: f32,
+    bc: usize,
+    reduction: ReductionOrder,
+    c: &mut OpCounter,
+    out: &mut SoftmaxPartial,
+) {
+    softmax_partial_into_with(q, k, v, keys, scale, bc, reduction, c, out, KernelPath::active());
+}
+
+/// [`softmax_partial_into`] with an explicit kernel path.
+///
+/// The loop body is the SU-FA **Ascend** update arm verbatim — per-tile
+/// score + tile max, `exp(m_old − m_new)` rescale of `l` and the
+/// accumulator after the first tile, sequential `l` accumulation, the
+/// same lane/scalar accumulator spellings and the same op tallies — so
+/// a single whole-row partition finalizes bit-identically to
+/// [`super::sufa::sufa_attention_rows_into_with`] under
+/// [`super::UpdateOrder::Ascend`] given the same visit order (Ascend
+/// consumes its sorted list back-to-front; pass the reversed list
+/// here). SRAM staging is charged per partition (`4·|keys|·d`), so
+/// charges over a partition of a row sum exactly to the whole-row
+/// charge; the pass-level DRAM charges stay with the caller.
+#[allow(clippy::too_many_arguments)]
+pub fn softmax_partial_into_with(
+    q: &[f32],
+    k: &Mat,
+    v: &Mat,
+    keys: &[usize],
+    scale: f32,
+    bc: usize,
+    reduction: ReductionOrder,
+    c: &mut OpCounter,
+    out: &mut SoftmaxPartial,
+    path: KernelPath,
+) {
+    let d = q.len();
+    assert_eq!(k.cols, d, "Q/K head-dim mismatch");
+    assert_eq!(v.cols, d, "K/V head-dim mismatch");
+    out.reset(d);
+    let nkeys = keys.len();
+    if nkeys == 0 {
+        return;
+    }
+    let bc = bc.max(1);
+    let ntiles = ceil_div(nkeys, bc);
+    c.sram(4 * (nkeys * d) as u64); // staged KV tiles
+
+    let tile_max_of = |xs: &[f32]| match path {
+        KernelPath::Scalar => xs.iter().copied().fold(f32::NEG_INFINITY, f32::max),
+        KernelPath::Lanes => max_lanes(xs),
+    };
+
+    let mut scores = [0.0f32; 64];
+    let mut heap_scores: Vec<f32>;
+    let scores: &mut [f32] = if bc <= scores.len() {
+        &mut scores
+    } else {
+        heap_scores = vec![0.0; bc];
+        &mut heap_scores
+    };
+
+    for tile in 0..ntiles {
+        let lo = tile * bc;
+        let hi = (lo + bc).min(nkeys);
+        let width = hi - lo;
+        let scores = &mut scores[..width];
+        for (w, slot) in scores.iter_mut().enumerate() {
+            let j = keys[lo + w];
+            let dot = match reduction {
+                ReductionOrder::Strict => dot_strict(q, k.row(j)),
+                ReductionOrder::Lanes => dot_lanes(q, k.row(j)),
+            };
+            *slot = dot * scale;
+        }
+        c.tally(OpKind::Mul, (width * d + width) as u64);
+        c.tally(OpKind::Add, (width * (d - 1)) as u64);
+
+        let tile_max = tile_max_of(scores);
+        c.tally(OpKind::Cmp, (width - 1) as u64);
+        let m_new = if tile_max > out.m { tile_max } else { out.m };
+        if tile > 0 {
+            let corr = (out.m - m_new).exp();
+            c.tally(OpKind::Add, 1);
+            c.tally(OpKind::Exp, 1);
+            c.tally(OpKind::Mul, (d + 1) as u64);
+            out.l *= corr;
+            rescale(path, &mut out.acc, corr);
+        }
+        out.m = m_new;
+
+        c.tally(OpKind::Add, width as u64);
+        c.tally(OpKind::Exp, width as u64);
+        c.tally(OpKind::Add, (width - 1) as u64);
+        for (w, &score) in scores.iter().enumerate() {
+            let j = keys[lo + w];
+            let prob = (score - out.m).exp();
+            out.l += prob; // sequential in every mode (order-bearing)
+            match path {
+                KernelPath::Scalar => {
+                    for (o, &b) in out.acc.iter_mut().zip(v.row(j)) {
+                        *o += prob * b;
+                    }
+                }
+                KernelPath::Lanes => axpy_lanes(&mut out.acc, prob, v.row(j)),
+            }
+        }
+        c.tally(OpKind::Add, width as u64); // l accumulation
+        c.tally(OpKind::Mul, (width * d) as u64);
+        c.tally(OpKind::Add, (width * d) as u64);
+    }
+}
+
+/// Fold a partition-indexed slice of partials with a **fixed
+/// left-balanced pairwise tree** (stride doubling: 0⊕1, 2⊕3, … then
+/// 0⊕2, 4⊕6, …), leaving the result in `parts[0]`. The tree shape
+/// depends only on `parts.len()`, so for partials presented in
+/// partition-index order the result is deterministic at every partition
+/// count and independent of which shard finished first. Panics on an
+/// empty slice — fold the identity ([`SoftmaxPartial::empty`]) in
+/// explicitly if a zero-partition merge can occur.
+pub fn merge_partials_tree<'a>(
+    parts: &'a mut [SoftmaxPartial],
+    c: &mut OpCounter,
+) -> &'a SoftmaxPartial {
+    assert!(!parts.is_empty(), "merge_partials_tree over zero partials");
+    let n = parts.len();
+    let mut stride = 1;
+    while stride < n {
+        let mut i = 0;
+        while i + stride < n {
+            let (left, right) = parts.split_at_mut(i + stride);
+            left[i].combine(&right[0], c);
+            i += 2 * stride;
+        }
+        stride *= 2;
+    }
+    &parts[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn kv(s: usize, d: usize, seed: u64) -> (Mat, Mat, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let k = Mat::randn(s, d, 1.0, &mut rng);
+        let v = Mat::randn(s, d, 1.0, &mut rng);
+        let q: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        (k, v, q)
+    }
+
+    #[test]
+    fn empty_partial_is_combine_identity() {
+        let (k, v, q) = kv(12, 8, 1);
+        let keys: Vec<usize> = (0..12).collect();
+        let mut c = OpCounter::new();
+        let mut p = SoftmaxPartial::empty(8);
+        softmax_partial_into(&q, &k, &v, &keys, 0.3, 4, ReductionOrder::Strict, &mut c, &mut p);
+        let mut left = p.clone();
+        left.combine(&SoftmaxPartial::empty(8), &mut c);
+        assert_eq!(left, p, "identity on the right");
+        let mut right = SoftmaxPartial::empty(8);
+        right.combine(&p, &mut c);
+        assert_eq!(right, p, "identity on the left");
+    }
+
+    #[test]
+    fn split_partition_combines_to_whole() {
+        // One row split at every cut point: combine(left, right) must
+        // finalize close to the unsplit partial (exact agreement with
+        // the monolithic kernel is pinned in tests/prop_softmax_merge).
+        let (k, v, q) = kv(24, 8, 2);
+        let keys: Vec<usize> = (0..24).collect();
+        let mut c = OpCounter::new();
+        let mut whole = SoftmaxPartial::empty(8);
+        softmax_partial_into(&q, &k, &v, &keys, 0.2, 8, ReductionOrder::Strict, &mut c, &mut whole);
+        let mut want = vec![0.0f32; 8];
+        whole.finalize_into(&mut c, &mut want);
+        for cut in [1usize, 7, 12, 23] {
+            let mut a = SoftmaxPartial::empty(8);
+            let mut b = SoftmaxPartial::empty(8);
+            softmax_partial_into(
+                &q, &k, &v, &keys[..cut], 0.2, 8, ReductionOrder::Strict, &mut c, &mut a,
+            );
+            softmax_partial_into(
+                &q, &k, &v, &keys[cut..], 0.2, 8, ReductionOrder::Strict, &mut c, &mut b,
+            );
+            a.combine(&b, &mut c);
+            let mut got = vec![0.0f32; 8];
+            a.finalize_into(&mut c, &mut got);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-5, "cut={cut}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn tree_merge_is_deterministic_in_arrival_order() {
+        let (k, v, q) = kv(40, 8, 3);
+        let mut c = OpCounter::new();
+        let parts: Vec<SoftmaxPartial> = (0..5)
+            .map(|j| {
+                let keys: Vec<usize> = (j * 8..(j + 1) * 8).collect();
+                let mut p = SoftmaxPartial::empty(8);
+                softmax_partial_into(
+                    &q, &k, &v, &keys, 0.25, 4, ReductionOrder::Strict, &mut c, &mut p,
+                );
+                p
+            })
+            .collect();
+        // However the shards finish, the merger sorts by partition
+        // index first — the tree sees the same sequence.
+        let mut a = parts.clone();
+        let mut b = parts.clone();
+        let ra = merge_partials_tree(&mut a, &mut c).clone();
+        let rb = merge_partials_tree(&mut b, &mut c).clone();
+        assert_eq!(ra, rb);
+        let mut out = vec![0.0f32; 8];
+        ra.finalize_into(&mut c, &mut out);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn finalize_of_empty_partial_is_zeros() {
+        let p = SoftmaxPartial::empty(6);
+        let mut c = OpCounter::new();
+        let mut out = vec![7.0f32; 6];
+        p.finalize_into(&mut c, &mut out);
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+}

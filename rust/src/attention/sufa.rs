@@ -102,9 +102,10 @@ impl SufaScratch {
 }
 
 /// Sequential (scalar-order) q·k dot — the [`ReductionOrder::Strict`]
-/// reduction, identical on both kernel paths.
+/// reduction, identical on both kernel paths. Shared with
+/// [`super::partials`] so the partial kernel scores bit-identically.
 #[inline]
-fn dot_strict(q: &[f32], k: &[f32]) -> f32 {
+pub(crate) fn dot_strict(q: &[f32], k: &[f32]) -> f32 {
     let mut dot = 0.0f32;
     for (a, b) in q.iter().zip(k) {
         dot += a * b;
@@ -117,7 +118,7 @@ fn dot_strict(q: &[f32], k: &[f32]) -> f32 {
 /// ([`F32x8::hsum`]), sequential remainder appended last. Deterministic,
 /// but a different rounding order than [`dot_strict`].
 #[inline]
-fn dot_lanes(q: &[f32], k: &[f32]) -> f32 {
+pub(crate) fn dot_lanes(q: &[f32], k: &[f32]) -> f32 {
     let mut acc = F32x8::zero();
     let mut qc = q.chunks_exact(LANES);
     let mut kc = k.chunks_exact(LANES);
@@ -135,7 +136,7 @@ fn dot_lanes(q: &[f32], k: &[f32]) -> f32 {
 /// update — separate multiply then add per element, so bit-identical to
 /// the scalar loop.
 #[inline]
-fn axpy_lanes(acc: &mut [f32], a: f32, x: &[f32]) {
+pub(crate) fn axpy_lanes(acc: &mut [f32], a: f32, x: &[f32]) {
     let av = F32x8::splat(a);
     let n = acc.len() - acc.len() % LANES;
     let (ac, at) = acc.split_at_mut(n);
@@ -150,7 +151,7 @@ fn axpy_lanes(acc: &mut [f32], a: f32, x: &[f32]) {
 /// Elementwise `xs[j] *= s`, dispatched on the kernel path (the SU-FA
 /// recovery/update rescale — bit-identical either way).
 #[inline]
-fn rescale(path: KernelPath, xs: &mut [f32], s: f32) {
+pub(crate) fn rescale(path: KernelPath, xs: &mut [f32], s: f32) {
     match path {
         KernelPath::Scalar => {
             for x in xs {
@@ -175,7 +176,7 @@ fn rescale(path: KernelPath, xs: &mut [f32], s: f32) {
 /// commutative (and NaN-ignoring in the same way on every step), so this
 /// equals the scalar `fold(NEG_INFINITY, f32::max)` bit for bit.
 #[inline]
-fn max_lanes(xs: &[f32]) -> f32 {
+pub(crate) fn max_lanes(xs: &[f32]) -> f32 {
     let mut acc = F32x8::splat(f32::NEG_INFINITY);
     let mut c = xs.chunks_exact(LANES);
     for ch in &mut c {

@@ -2,13 +2,24 @@
 //! multi-turn session (prefill + N single-token decode steps) through
 //! [`SparseAttentionPipeline::decode_step`], reporting tokens/s,
 //! per-step latency percentiles, per-stage op counters and the cache's
-//! hit/eviction accounting. `star bench decode` writes the result to
-//! `BENCH_decode.json` at the repo root (see [`super::trajectory`]).
+//! hit/eviction accounting — plus the **sharded decode scaling sweep**:
+//! the same session replayed through
+//! [`crate::pipeline::ShardedPipeline::decode_step`] at each worker
+//! count in [`SHARD_COUNTS`], checked bit-identical against the
+//! single-core steps, with the candidate-scatter payload and the
+//! tolerance-mode online-softmax combine deviation
+//! ([`crate::attention::SoftmaxPartial`]) measured per count.
+//! `star bench decode` writes the result to `BENCH_decode.json` at the
+//! repo root (see [`super::trajectory`]).
 
 use super::{f, header, row};
+use crate::arith::{OpCounter, ReductionOrder};
+use crate::attention::{merge_partials_tree, softmax_partial_into, SoftmaxPartial};
 use crate::kvcache::{CacheStats, SessionConfig, SessionStore};
 use crate::obs::{HistSummary, Histogram};
-use crate::pipeline::{PipelineConfig, SparseAttentionPipeline, StageOps, WorkspacePool};
+use crate::pipeline::{
+    PipelineConfig, ShardedPipeline, SparseAttentionPipeline, StageOps, WorkspacePool,
+};
 use crate::tensor::Mat;
 use crate::util::{allocmeter, Rng};
 
@@ -60,6 +71,44 @@ pub struct DecodeBenchResult {
     /// Peak tile-workspace capacity during the timed steps, bytes
     /// (compare against `crate::sim::sram::Sram::STAR_BUDGET_BYTES`).
     pub workspace_bytes: usize,
+    /// Sharded-decode scaling sweep, one row per [`SHARD_COUNTS`] entry.
+    pub sharded: Vec<ShardedDecodeRow>,
+}
+
+/// Worker counts the sharded-decode scaling sweep visits.
+pub const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+/// One worker count of the sharded-decode scaling sweep: the bit-exact
+/// distributed path's throughput/communication/allocation counters,
+/// plus the measured deviation of the tolerance-mode online-softmax
+/// partial combine ([`crate::attention::SoftmaxPartial`]) against the
+/// exact monolithic reduction on the same selection.
+#[derive(Clone, Debug)]
+pub struct ShardedDecodeRow {
+    /// Effective worker count of this row.
+    pub shards: usize,
+    /// Decoded tokens per second of summed per-step wall time.
+    pub tokens_per_s: f64,
+    /// Mean per-step wall time, milliseconds.
+    pub mean_ms: f64,
+    /// Candidate-scatter bytes across the timed steps.
+    pub ring_payload_bytes: u64,
+    /// Heap allocations metered inside the gather + formal cores across
+    /// the timed steps (zero once the pools are warm; vacuous without a
+    /// counting allocator, as for [`DecodeBenchResult::hot_path_allocs`]).
+    pub hot_path_allocs: u64,
+    /// Max |sharded − single-core| over every timed step's output — the
+    /// bit-exact contract says **exactly 0.0** (`star bench decode`
+    /// fails otherwise; `rust/tests/prop_sharded_decode_parity.rs` is
+    /// the exhaustive version).
+    pub max_abs_diff: f64,
+    /// Whether every timed step also matched the single-core selection.
+    pub parity_ok: bool,
+    /// Max |tree-combined partials − exact monolithic softmax| over the
+    /// last step's selection, the measured rescale error of the
+    /// tolerance-mode distributed formal stage (small but nonzero for
+    /// `shards > 1`; exactly 0.0 for one partition).
+    pub combine_max_dev: f64,
 }
 
 /// Run the decode benchmark on the STAR configuration (single host
@@ -130,6 +179,8 @@ pub fn decode_throughput() -> DecodeBenchResult {
     let mut re_store = SessionStore::new(SessionConfig::for_pipeline(&cfg, d, 0));
     let re = pipe.prefill(&mut re_store, 1, &q, &k, &v).expect("re-prefill baseline");
 
+    let sharded = sharded_scaling(cfg, d, &q, &k, &v);
+
     let wall_summary = step_wall.summary(1e-9);
     let result = DecodeBenchResult {
         prefill_tokens,
@@ -153,6 +204,7 @@ pub fn decode_throughput() -> DecodeBenchResult {
         hot_path_allocs,
         alloc_counter_on: allocmeter::installed(),
         workspace_bytes,
+        sharded,
     };
 
     header("decode throughput (paged KV-cache, STAR config)");
@@ -208,7 +260,140 @@ pub fn decode_throughput() -> DecodeBenchResult {
             ),
         ],
     );
+    header("sharded decode scaling (page-partitioned, bit-exact)");
+    for s in &result.sharded {
+        row(
+            &format!("shards={}", s.shards),
+            &[
+                format!("{:.0} tok/s", s.tokens_per_s),
+                format!("scatter={}B", s.ring_payload_bytes),
+                format!("max|Δ|={:.1e}", s.max_abs_diff),
+                format!("combine_dev={:.2e}", s.combine_max_dev),
+                // The exact spelling the CI smoke greps for.
+                format!("hot_path_allocs: {}", s.hot_path_allocs),
+            ],
+        );
+    }
     result
+}
+
+/// Replay a short session through [`ShardedPipeline::decode_step`] at
+/// each worker count in [`SHARD_COUNTS`], per-step bit-compared against
+/// a single-core [`SparseAttentionPipeline`] twin over an identical
+/// store. The session is shorter than the main timed run — the row
+/// reports relative scaling, payload and parity, not absolute
+/// throughput.
+fn sharded_scaling(
+    cfg: PipelineConfig,
+    d: usize,
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+) -> Vec<ShardedDecodeRow> {
+    let (prefill, decode) = (96usize, 32usize);
+    let total = prefill + decode;
+    let scale = 1.0 / (d as f32).sqrt();
+    let slice = |m: &Mat, lo: usize, hi: usize| Mat::from_fn(hi - lo, d, |i, j| m.at(lo + i, j));
+    SHARD_COUNTS
+        .iter()
+        .map(|&wreq| {
+            let single = SparseAttentionPipeline::new(cfg);
+            let sharded = ShardedPipeline::new(cfg, wreq);
+            let (pool_s, pool_r) = (WorkspacePool::new(), WorkspacePool::new());
+            let mut st_s = SessionStore::new(SessionConfig::for_pipeline(&cfg, d, 0));
+            let mut st_r = SessionStore::new(SessionConfig::for_pipeline(&cfg, d, 0));
+            let (pq, pk, pv) = (slice(q, 0, prefill), slice(k, 0, prefill), slice(v, 0, prefill));
+            // The prefill chunk warms every worker's pooled workspace.
+            sharded
+                .decode_step_pooled(&mut st_s, 1, &pq, &pk, &pv, &pool_s)
+                .expect("sharded prefill");
+            single.decode_step_pooled(&mut st_r, 1, &pq, &pk, &pv, &pool_r).expect("prefill");
+            let (mut wall, mut payload, mut hot) = (0.0f64, 0u64, 0u64);
+            let (mut max_abs, mut parity_ok) = (0.0f64, true);
+            let mut shards_eff = wreq;
+            let mut last_sel: Vec<usize> = Vec::new();
+            for pos in prefill..total {
+                let (sq, sk, sv) =
+                    (slice(q, pos, pos + 1), slice(k, pos, pos + 1), slice(v, pos, pos + 1));
+                let rs = sharded
+                    .decode_step_pooled(&mut st_s, 1, &sq, &sk, &sv, &pool_s)
+                    .expect("sharded decode step");
+                let rr = single
+                    .decode_step_pooled(&mut st_r, 1, &sq, &sk, &sv, &pool_r)
+                    .expect("decode step");
+                wall += rs.wall_s;
+                payload += rs.ring_payload_bytes;
+                hot += rs.hot_path_allocs;
+                max_abs = max_abs.max(rs.out.max_abs_diff(&rr.out) as f64);
+                parity_ok &= rs.selection == rr.selection && rs.stalls == rr.stalls;
+                shards_eff = rs.shards;
+                last_sel.clear();
+                last_sel.extend_from_slice(&rs.selection.rows[0]);
+            }
+            let combine_max_dev =
+                combine_deviation(q.row(total - 1), k, v, &last_sel, scale, cfg.bc, wreq);
+            ShardedDecodeRow {
+                shards: shards_eff,
+                tokens_per_s: decode as f64 / wall.max(1e-12),
+                mean_ms: wall / decode as f64 * 1e3,
+                ring_payload_bytes: payload,
+                hot_path_allocs: hot,
+                max_abs_diff: max_abs,
+                parity_ok: parity_ok && max_abs == 0.0,
+                combine_max_dev,
+            }
+        })
+        .collect()
+}
+
+/// Measured rescale error of the tolerance-mode distributed formal
+/// stage: partition the selection (ascending key order) into `w`
+/// contiguous chunks, accumulate one [`SoftmaxPartial`] per chunk, fold
+/// them with the fixed pairwise tree and compare the finalized row
+/// against the exact single-partition reduction over the same keys (the
+/// serving path never does this — it gathers and runs the monolithic
+/// kernel — so the deviation is reported, not shipped; DESIGN.md §12).
+fn combine_deviation(
+    q_row: &[f32],
+    k: &Mat,
+    v: &Mat,
+    keys: &[usize],
+    scale: f32,
+    bc: usize,
+    w: usize,
+) -> f64 {
+    let d = q_row.len();
+    let mut c = OpCounter::new();
+    let mut keys = keys.to_vec();
+    keys.sort_unstable();
+    let mut exact = SoftmaxPartial::empty(d);
+    softmax_partial_into(q_row, k, v, &keys, scale, bc, ReductionOrder::Strict, &mut c, &mut exact);
+    let mut exact_out = vec![0.0f32; d];
+    exact.finalize_into(&mut c, &mut exact_out);
+    let n = keys.len();
+    let w = w.max(1);
+    let mut parts: Vec<SoftmaxPartial> = (0..w)
+        .map(|j| {
+            let (lo, hi) = (j * n / w, (j + 1) * n / w);
+            let mut p = SoftmaxPartial::empty(d);
+            softmax_partial_into(
+                q_row,
+                k,
+                v,
+                &keys[lo..hi],
+                scale,
+                bc,
+                ReductionOrder::Strict,
+                &mut c,
+                &mut p,
+            );
+            p
+        })
+        .collect();
+    let merged = merge_partials_tree(&mut parts, &mut c);
+    let mut dist_out = vec![0.0f32; d];
+    merged.finalize_into(&mut c, &mut dist_out);
+    dist_out.iter().zip(&exact_out).map(|(a, b)| (a - b).abs() as f64).fold(0.0, f64::max)
 }
 
 #[cfg(test)]
@@ -247,6 +432,28 @@ mod tests {
             "steady-state decode hot loop allocated on the heap"
         );
         assert!(r.workspace_bytes > 0, "decode rows ran inside a workspace");
+        // The sharded scaling sweep: bit-exact and allocation-free at
+        // every worker count, communication only when there is more
+        // than one worker, and the single-partition combine exact.
+        assert_eq!(r.sharded.len(), SHARD_COUNTS.len());
+        for s in &r.sharded {
+            assert!(
+                s.parity_ok && s.max_abs_diff == 0.0,
+                "sharded decode diverged at {} shards (max|Δ|={})",
+                s.shards,
+                s.max_abs_diff
+            );
+            assert_eq!(s.hot_path_allocs, 0, "shards={} allocated in the hot loop", s.shards);
+            assert!(s.tokens_per_s > 0.0 && s.mean_ms > 0.0);
+            assert!(s.combine_max_dev < 1e-4, "combine deviation blew up: {}", s.combine_max_dev);
+        }
+        assert_eq!(r.sharded[0].shards, 1);
+        assert_eq!(r.sharded[0].ring_payload_bytes, 0, "one worker scatters nothing");
+        assert!(r.sharded.iter().skip(1).all(|s| s.ring_payload_bytes > 0));
+        assert_eq!(
+            r.sharded[0].combine_max_dev, 0.0,
+            "a single partition is the exact reduction"
+        );
     }
 
     #[test]
@@ -268,6 +475,17 @@ mod tests {
             assert!(s.get("p95").is_some() && s.get("p99").is_some() && s.get("p50").is_some());
         }
         assert!(j.get("cache").unwrap().get("page_hits").is_some());
+        // Sharded scaling rows: one per SHARD_COUNTS entry, parity field
+        // frozen at exactly zero.
+        let sharded = j.get("sharded").unwrap().as_arr().unwrap();
+        assert_eq!(sharded.len(), SHARD_COUNTS.len());
+        for (s, &w) in sharded.iter().zip(SHARD_COUNTS.iter()) {
+            assert_eq!(s.get("shards").unwrap().as_f64(), Some(w as f64));
+            assert_eq!(s.get("max_abs_diff").unwrap().as_f64(), Some(0.0));
+            assert_eq!(s.get("hot_path_allocs").unwrap().as_f64(), Some(0.0));
+            assert!(s.get("tokens_per_s").unwrap().as_f64().unwrap() > 0.0);
+            assert!(s.get("combine_max_dev").is_some());
+        }
         // The zero-allocation regression guard the CI smoke greps for.
         assert_eq!(j.get("hot_path_allocs").unwrap().as_f64(), Some(0.0));
         assert!(j.get("workspace_bytes").unwrap().as_f64().unwrap() > 0.0);

@@ -286,6 +286,14 @@ pub fn run(name: &str) -> Result<()> {
         }
         "decode" => {
             let r = decode::decode_throughput();
+            for s in &r.sharded {
+                anyhow::ensure!(
+                    s.parity_ok && s.max_abs_diff == 0.0,
+                    "decode: sharded path diverged from single-core at {} shards (max|Δ|={})",
+                    s.shards,
+                    s.max_abs_diff
+                );
+            }
             Json::obj(vec![
                 ("bench", Json::str(name)),
                 ("prefill_tokens", n(r.prefill_tokens as f64)),
@@ -328,6 +336,29 @@ pub fn run(name: &str) -> Result<()> {
                 ),
                 ("stage_ops", stage_ops_json(&r.ops)),
                 ("reprefill_stage_ops", stage_ops_json(&r.reprefill_ops)),
+                // Sharded-decode scaling sweep: one row per worker count
+                // (page-partitioned distributed decode, bit-exact by the
+                // ensure above; `combine_max_dev` is the measured
+                // tolerance-mode online-softmax rescale error).
+                (
+                    "sharded",
+                    Json::Arr(
+                        r.sharded
+                            .iter()
+                            .map(|s| {
+                                Json::obj(vec![
+                                    ("shards", n(s.shards as f64)),
+                                    ("tokens_per_s", n(s.tokens_per_s)),
+                                    ("mean_ms", n(s.mean_ms)),
+                                    ("ring_payload_bytes", n(s.ring_payload_bytes as f64)),
+                                    ("hot_path_allocs", n(s.hot_path_allocs as f64)),
+                                    ("max_abs_diff", n(s.max_abs_diff)),
+                                    ("combine_max_dev", n(s.combine_max_dev)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
                 (
                     "cache",
                     Json::obj(vec![

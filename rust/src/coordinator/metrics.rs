@@ -69,6 +69,8 @@ struct Inner {
     workspace_bytes: usize,
     // Sequence-sharded over-target prefill path.
     sharded_prefills: u64,
+    // Page-partitioned over-target decode path.
+    sharded_decodes: u64,
     ring_steps: u64,
     ring_payload_bytes: u64,
     gathered_kv_rows: u64,
@@ -146,7 +148,12 @@ pub struct MetricsSnapshot {
     /// Over-target prefill requests served on the sequence-sharded
     /// pipeline.
     pub sharded_prefills: u64,
-    /// Ring steps executed across all sharded runs.
+    /// Over-target decode steps served on the page-partitioned sharded
+    /// pipeline ([`crate::pipeline::ShardedPipeline::decode_step`]);
+    /// each also counts into `decode_steps` and the KV-cache counters.
+    pub sharded_decodes: u64,
+    /// Ring steps executed across all sharded runs (prefill ring hops
+    /// plus decode candidate-scatter rounds).
     pub ring_steps: u64,
     /// Modeled bytes forwarded on the worker ring across all sharded
     /// runs.
@@ -272,6 +279,30 @@ impl Metrics {
         m.sched.merge(sched);
     }
 
+    /// Account one distributed decode step served on the
+    /// page-partitioned sharded pipeline: the decode/KV-cache counters
+    /// of [`Metrics::record_decode`] plus the communication counters of
+    /// [`Metrics::record_sharded`] (candidate-scatter rounds feed the
+    /// same ring totals as prefill ring hops).
+    pub fn record_sharded_decode(&self, r: &crate::pipeline::ShardedDecodeReport) {
+        let mut m = self.inner.lock().unwrap();
+        m.sharded_decodes += 1;
+        m.decode_steps += 1;
+        m.decode_tokens += r.positions.len() as u64;
+        m.cache_page_hits += r.page_hits as u64;
+        m.cache_pages_rematerialized += r.rematerialized_pages as u64;
+        m.cache_sessions_evicted += r.evicted_sessions.len() as u64;
+        m.ring_steps += r.ring_steps as u64;
+        m.ring_payload_bytes += r.ring_payload_bytes;
+        m.gathered_kv_rows += r.union_rows as u64;
+        if m.shard_stage_s.len() < r.per_shard.len() {
+            m.shard_stage_s.resize(r.per_shard.len(), crate::pipeline::StageTiming::default());
+        }
+        for st in &r.per_shard {
+            m.shard_stage_s[st.shard].merge(&st.timing);
+        }
+    }
+
     /// Account one decode step served against the paged KV-cache.
     pub fn record_decode(&self, r: &crate::pipeline::DecodeReport) {
         let mut m = self.inner.lock().unwrap();
@@ -312,6 +343,7 @@ impl Metrics {
             cache_sessions_evicted: m.cache_sessions_evicted,
             workspace_bytes: m.workspace_bytes,
             sharded_prefills: m.sharded_prefills,
+            sharded_decodes: m.sharded_decodes,
             ring_steps: m.ring_steps,
             ring_payload_bytes: m.ring_payload_bytes,
             gathered_kv_rows: m.gathered_kv_rows,
@@ -406,13 +438,14 @@ impl MetricsSnapshot {
                 self.sched.imbalance()
             ));
         }
-        if self.sharded_prefills > 0 {
+        if self.sharded_prefills > 0 || self.sharded_decodes > 0 {
             let busy: Vec<String> =
                 self.shard_stage_s.iter().map(|t| format!("{:.3}ms", t.busy_s() * 1e3)).collect();
             s.push_str(&format!(
-                "\nsharded: prefills={} ring_steps={} payload={}B gathered_kv_rows={} \
-                 shard_busy=[{}]",
+                "\nsharded: prefills={} decodes={} ring_steps={} payload={}B \
+                 gathered_kv_rows={} shard_busy=[{}]",
                 self.sharded_prefills,
+                self.sharded_decodes,
                 self.ring_steps,
                 self.ring_payload_bytes,
                 self.gathered_kv_rows,
@@ -467,6 +500,7 @@ impl MetricsSnapshot {
         write_value(&mut out, "star_cache_pages_rematerialized_total", "pages rebuilt from history after eviction", "counter", self.cache_pages_rematerialized as f64);
         write_value(&mut out, "star_cache_sessions_evicted_total", "LRU whole-session evictions", "counter", self.cache_sessions_evicted as f64);
         write_value(&mut out, "star_sharded_prefills_total", "over-target prefills served on the sharded pipeline", "counter", self.sharded_prefills as f64);
+        write_value(&mut out, "star_sharded_decodes_total", "over-target decode steps served on the page-partitioned sharded pipeline", "counter", self.sharded_decodes as f64);
         write_value(&mut out, "star_ring_steps_total", "ring steps across sharded runs", "counter", self.ring_steps as f64);
         write_value(&mut out, "star_ring_payload_bytes_total", "modeled bytes forwarded on the worker ring", "counter", self.ring_payload_bytes as f64);
         write_value(&mut out, "star_gathered_kv_rows_total", "selected KV rows gathered to home workers", "counter", self.gathered_kv_rows as f64);
@@ -672,6 +706,36 @@ mod tests {
         assert_eq!(s.gathered_kv_rows, 2 * r.union_rows as u64);
         assert_eq!(s.shard_stage_s.len(), r.shards);
         assert!(s.render().contains("sharded: prefills=2"));
+    }
+
+    #[test]
+    fn records_sharded_decode_steps() {
+        use crate::kvcache::{SessionConfig, SessionStore};
+        use crate::pipeline::{PipelineConfig, ShardedPipeline};
+        use crate::tensor::Mat;
+        use crate::util::Rng;
+        let cfg = PipelineConfig::star().with_keep(0.25).with_threads(1);
+        let mut rng = Rng::new(5);
+        let q = Mat::randn(24, 16, 1.0, &mut rng);
+        let k = Mat::randn(24, 16, 1.0, &mut rng);
+        let v = Mat::randn(24, 16, 1.0, &mut rng);
+        let mut store = SessionStore::new(SessionConfig::for_pipeline(&cfg, 16, 0));
+        let r = ShardedPipeline::new(cfg, 2).decode_step(&mut store, 7, &q, &k, &v).unwrap();
+        assert_eq!(r.shards, 2);
+        let m = Metrics::new();
+        m.record_sharded_decode(&r);
+        let s = m.snapshot();
+        assert_eq!(s.sharded_decodes, 1);
+        assert_eq!(s.decode_steps, 1);
+        assert_eq!(s.decode_tokens, 24);
+        assert_eq!(s.ring_steps, r.ring_steps as u64);
+        assert_eq!(s.ring_payload_bytes, r.ring_payload_bytes);
+        assert_eq!(s.shard_stage_s.len(), r.shards);
+        let line = s.render();
+        assert!(line.contains("decodes=1"), "{line}");
+        assert!(line.contains("kvcache: steps=1"), "{line}");
+        let prom = s.render_prometheus();
+        assert!(prom.contains("star_sharded_decodes_total 1"), "{prom}");
     }
 
     #[test]

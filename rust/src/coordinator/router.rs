@@ -107,12 +107,6 @@ pub enum RouteError {
     TooLong { s: usize, max: usize },
     /// The request's query rows exceed every variant's compiled batch.
     TooWide { t: usize, max: usize },
-    /// A *decode* step wider than the batcher's target: decode chunks
-    /// mutate their session, cannot ride the sharded stateless path,
-    /// and could never seal a within-target batch (split the chunk
-    /// instead). Over-target *prefill* is not an error — it routes to
-    /// the sequence-sharded pipeline ([`Admission::Sharded`]).
-    OverTarget { t: usize, target: usize },
 }
 
 impl std::fmt::Display for RouteError {
@@ -121,9 +115,6 @@ impl std::fmt::Display for RouteError {
             RouteError::UnknownModel(m) => write!(f, "unknown model {m:?}"),
             RouteError::TooLong { s, max } => write!(f, "context {s} exceeds max {max}"),
             RouteError::TooWide { t, max } => write!(f, "batch rows {t} exceed max {max}"),
-            RouteError::OverTarget { t, target } => {
-                write!(f, "request rows {t} exceed batch target {target}; split into chunks")
-            }
         }
     }
 }
@@ -187,32 +178,30 @@ impl Router {
 
     /// Route plus batch-level admission. Within the batcher's `target_t`
     /// the request enters the dynamic batcher as usual
-    /// ([`Admission::Batched`]). A *stateless prefill* too wide for that
-    /// path — wider than `target_t`, or wider than every variant's
-    /// compiled `max_t` — is admitted onto the sequence-sharded
-    /// execution path instead of being rejected
-    /// ([`Admission::Sharded`], served by
-    /// [`crate::pipeline::ShardedPipeline`]): it bypasses the batcher
-    /// (it alone exceeds a whole batch) and is routed by context length
-    /// only, because the sharded engine partitions query rows itself.
-    /// Admission is therefore monotone in `t` for prefill: no width is
-    /// rejected, only an impossible context. Over-target *decode* steps
-    /// are still rejected ([`RouteError::OverTarget`]) — they mutate
-    /// session state and must stay within the continuous-batching path.
-    /// `target_t = 0` disables the over-target check.
+    /// ([`Admission::Batched`]). A request too wide for that path —
+    /// wider than `target_t`, or wider than every variant's compiled
+    /// `max_t` — is admitted onto the sharded execution path instead of
+    /// being rejected ([`Admission::Sharded`]): stateless prefill is
+    /// served by [`crate::pipeline::ShardedPipeline::run_pooled`],
+    /// decode steps by the partitioned-cache
+    /// [`crate::pipeline::ShardedPipeline::decode_step_pooled`] (both
+    /// bit-identical to their single-core counterparts). A sharded
+    /// request bypasses the batcher (it alone exceeds a whole batch)
+    /// and is routed by context length only, because the sharded engine
+    /// partitions query rows itself. Admission is therefore monotone in
+    /// `t`: no width is ever rejected, only an unknown model or an
+    /// impossible context. `target_t = 0` disables the over-target
+    /// check (compiled width still falls back to the sharded path).
     pub fn admit(&self, req: &Request, target_t: usize) -> Result<Admission<'_>, RouteError> {
         let over_target = target_t > 0 && req.t > target_t;
-        if over_target && req.is_decode() {
-            return Err(RouteError::OverTarget { t: req.t, target: target_t });
-        }
         if !over_target {
             return match self.route(req) {
                 Ok(v) => Ok(Admission::Batched(v)),
-                // A prefill wider than every compiled variant can still
+                // A request wider than every compiled variant can still
                 // execute sharded — without this fallback a t between
                 // max_t and target_t would be rejected while a wider
                 // one is served.
-                Err(RouteError::TooWide { .. }) if !req.is_decode() => {
+                Err(RouteError::TooWide { .. }) => {
                     self.route_by_context(req).map(Admission::Sharded)
                 }
                 Err(e) => Err(e),
@@ -299,17 +288,24 @@ mod tests {
         assert!(!r.admit(&req, 0).unwrap().is_sharded());
     }
 
+    // Inverted from the pre-distributed-decode behavior: an over-target
+    // decode used to be the one rejection (`RouteError::OverTarget`,
+    // since removed); with the partitioned-cache decode path it is
+    // admitted sharded instead, so no width is ever rejected.
     #[test]
-    fn admit_still_rejects_over_target_decode() {
+    fn admit_routes_over_target_decode_to_the_sharded_path() {
         let r = router();
         let q = Mat::zeros(48, 4);
         let k = Mat::zeros(48, 4);
         let v = Mat::zeros(48, 4);
         let req = Request::decode(9, "tiny", 5, q, k, v, 300, 0.0);
-        assert_eq!(
-            r.admit(&req, 32).unwrap_err(),
-            RouteError::OverTarget { t: 48, target: 32 }
-        );
+        let adm = r.admit(&req, 32).unwrap();
+        assert!(adm.is_sharded());
+        assert_eq!(adm.variant().name, "attn_s512");
+        // Under-target decode still batches as before.
+        let (q, k, v) = (Mat::zeros(8, 4), Mat::zeros(8, 4), Mat::zeros(8, 4));
+        let small = Request::decode(10, "tiny", 5, q, k, v, 300, 0.0);
+        assert!(!r.admit(&small, 32).unwrap().is_sharded());
     }
 
     #[test]
@@ -325,11 +321,11 @@ mod tests {
         // Same with the over-target check disabled: width never rejects
         // a stateless prefill.
         assert!(r.admit(&mid, 0).unwrap().is_sharded());
-        // A decode step wider than max_t (but within target) is still
-        // TooWide — it cannot ride the sharded stateless path.
+        // A decode step wider than max_t (but within target) also rides
+        // the sharded path now that decode shards too.
         let (q, k, v) = (Mat::zeros(200, 4), Mat::zeros(200, 4), Mat::zeros(200, 4));
         let wd = Request::decode(5, "tiny", 3, q, k, v, 300, 0.0);
-        assert!(matches!(r.admit(&wd, 256).unwrap_err(), RouteError::TooWide { .. }));
+        assert!(r.admit(&wd, 256).unwrap().is_sharded());
     }
 
     #[test]

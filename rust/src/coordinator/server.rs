@@ -39,9 +39,14 @@
 //! ```
 //!
 //! Requests wider than the batch target do not reject: they execute on
-//! the sequence-sharded pipeline (bit-identical outputs — see
+//! the sharded pipeline (bit-identical outputs — see
 //! [`crate::pipeline::ShardedPipeline`]), with per-shard stage timings
-//! and ring counters in the final [`MetricsSnapshot`].
+//! and ring counters in the final [`MetricsSnapshot`]. That covers
+//! *both* request kinds: over-target stateless prefill runs the
+//! ring-circulated prefill engine, over-target decode runs the
+//! partitioned-KV-cache decode engine
+//! ([`crate::pipeline::ShardedPipeline::decode_step_pooled`]) against
+//! the shared session store.
 
 use super::batcher::{Batch, Batcher, BatcherConfig};
 use super::metrics::{Metrics, MetricsSnapshot, RequestClass};
@@ -85,11 +90,12 @@ pub enum Backend {
         /// Shared paged KV-cache session store (`None` = prefill-only
         /// server: decode requests are answered with an error).
         sessions: Option<Arc<Mutex<SessionStore>>>,
-        /// Worker count for over-target prefill on the sequence-sharded
-        /// pipeline ([`crate::pipeline::ShardedPipeline`]); 0 = auto
-        /// (the server divides the available cores among its pool
-        /// workers). Never changes outputs — sharded execution is
-        /// bit-identical at every worker count.
+        /// Worker count for over-target requests (prefill *and* decode)
+        /// on the sharded pipeline
+        /// ([`crate::pipeline::ShardedPipeline`]); 0 = auto (the server
+        /// divides the available cores among its pool workers). Never
+        /// changes outputs — sharded execution is bit-identical at
+        /// every worker and shard count.
         shards: usize,
     },
     /// Execute the AOT-compiled PJRT artifact named by each variant.
@@ -251,13 +257,13 @@ impl Server {
                 // Block briefly so timeout-flushes still happen at low load.
                 let msg = rx.recv_timeout(std::time::Duration::from_millis(1)).unwrap_or(Msg::Tick);
                 match msg {
-                    // Admission = routing + the batch-target check.
-                    // Over-target *prefill* comes back as
+                    // Admission = routing + the batch-target check. An
+                    // over-target request comes back as
                     // Admission::Sharded: it bypasses the batcher (it
                     // alone exceeds a whole batch) and dispatches
                     // immediately as a single-request batch for the
-                    // sequence-sharded pipeline. Over-target decode is
-                    // still rejected.
+                    // sharded pipeline — prefill on the ring engine,
+                    // decode on the partitioned-cache engine.
                     Msg::Submit(req, reply) => match router.admit(&req, cfg.batcher.target_t) {
                         Ok(Admission::Sharded(variant)) => {
                             waiting.insert(req.id, reply);
@@ -412,7 +418,7 @@ fn execute_batch(
         Backend::Native { pipeline, contexts, sessions, shards } => {
             let pool = &state.workspaces;
             let out = if batch.sharded {
-                run_sharded_native(pipeline, *shards, contexts, &batch, metrics, pool)
+                run_sharded_native(pipeline, *shards, contexts, sessions.as_ref(), &batch, metrics, pool)
             } else {
                 run_native(pipeline, contexts, sessions.as_ref(), &batch, metrics, pool)
             };
@@ -456,9 +462,16 @@ fn execute_batch(
             // AOT artifacts have static shapes: a sharded over-target
             // batch cannot execute here — refuse it explicitly rather
             // than letting run_pjrt silently truncate the query rows.
+            // Decode gets its own message: the partitioned-cache decode
+            // path is native-only by design.
             let out = if batch.sharded {
+                let kind = if batch.requests.iter().any(|r| r.is_decode()) {
+                    "sharded decode"
+                } else {
+                    "sharded prefill"
+                };
                 Err(anyhow::anyhow!(
-                    "sharded prefill is not supported on the PJRT backend \
+                    "{kind} is not supported on the PJRT backend \
                      (static-shape artifacts); raise target_t or serve with \
                      Backend::Native"
                 ))
@@ -651,17 +664,24 @@ fn run_native(
     Ok((outs, errors))
 }
 
-/// Execute an over-target prefill batch on the sequence-sharded
-/// pipeline ([`crate::pipeline::ShardedPipeline`]). Such batches carry
-/// exactly the requests `Router::admit` marked [`Admission::Sharded`]
-/// (in practice one — each alone exceeds the batch target); outputs are
-/// bit-identical to what the single-core pipeline would have produced,
-/// so routing over-target traffic here never changes served numerics.
-/// Per-shard stage timings and ring counters land in the metrics.
+/// Execute an over-target batch on the sharded pipeline
+/// ([`crate::pipeline::ShardedPipeline`]). Such batches carry exactly
+/// the requests `Router::admit` marked [`Admission::Sharded`] (in
+/// practice one — each alone exceeds the batch target). Stateless
+/// prefill runs the ring-circulated prefill engine against the
+/// variant's KV context; **decode steps** run the partitioned-cache
+/// decode engine against the shared session store, with the same
+/// per-request failure contract as the batched decode path (a decode
+/// step mutates its session, so one failing request must not fail the
+/// batch). Outputs are bit-identical to what the single-core pipeline
+/// would have produced at every shard count, so routing over-target
+/// traffic here never changes served numerics. Per-shard stage timings
+/// and ring/scatter counters land in the metrics.
 fn run_sharded_native(
     cfg: &PipelineConfig,
     shards: usize,
     contexts: &BTreeMap<String, (Mat, Mat)>,
+    sessions: Option<&Arc<Mutex<SessionStore>>>,
     batch: &Batch,
     metrics: &Metrics,
     workspaces: &WorkspacePool,
@@ -669,37 +689,83 @@ fn run_sharded_native(
     if let Err(e) = cfg.validate() {
         anyhow::bail!("invalid pipeline config: {e}");
     }
-    let (k, v) = contexts
-        .get(&batch.variant)
-        .ok_or_else(|| anyhow::anyhow!("no KV context for variant {}", batch.variant))?;
-    anyhow::ensure!(
-        k.rows == v.rows && k.cols == v.cols,
-        "variant {}: malformed KV context (K {}x{}, V {}x{})",
-        batch.variant,
-        k.rows,
-        k.cols,
-        v.rows,
-        v.cols
-    );
     let mut outs: Vec<Option<Mat>> = vec![None; batch.requests.len()];
-    let errors: Vec<Option<String>> = vec![None; batch.requests.len()];
+    let mut errors: Vec<Option<String>> = vec![None; batch.requests.len()];
     let pipeline = ShardedPipeline::new(*cfg, shards);
+
+    // ---- Sharded decode steps against the shared session store. ----
     for (i, req) in batch.requests.iter().enumerate() {
-        anyhow::ensure!(!req.is_decode(), "decode request {} on the sharded path", req.id);
-        let Some(q) = &req.q else { continue };
+        let Some(sid) = req.session else { continue };
+        let step = || -> Result<crate::pipeline::ShardedDecodeReport> {
+            let store = sessions.ok_or_else(|| {
+                anyhow::anyhow!("decode request {} but the server has no session store", req.id)
+            })?;
+            let (q, (kn, vn)) = match (&req.q, &req.kv) {
+                (Some(q), Some(kv)) => (q, kv),
+                _ => anyhow::bail!("decode request {} lacks a Q or KV payload", req.id),
+            };
+            let mut store = store.lock().unwrap();
+            // Same ordering guard as the batched decode path: the claimed
+            // post-append context length must match the session.
+            let expected = store.len(sid) + q.rows;
+            anyhow::ensure!(
+                req.s == expected,
+                "decode step out of order for session {sid}: request claims context {} but \
+                 the session would be {expected} after this append",
+                req.s
+            );
+            pipeline.decode_step_pooled(&mut store, sid, q, kn, vn, workspaces)
+        };
+        match step() {
+            Ok(report) => {
+                metrics.record_stage_times(&report.timing, report.stalls);
+                metrics.record_sharded_decode(&report);
+                metrics.record_traffic(&report.traffic, &report.sched);
+                metrics.record_workspace_bytes(report.workspace_bytes);
+                outs[i] = Some(report.out);
+            }
+            Err(e) => {
+                metrics.record_failure();
+                eprintln!("sharded decode error on request {}: {e}", req.id);
+                errors[i] = Some(format!("error: {e}"));
+            }
+        }
+    }
+
+    // ---- Over-target stateless prefill against the variant context
+    // (fetched lazily: a decode-only sharded batch needs no context). ----
+    if batch.requests.iter().any(|r| !r.is_decode() && r.q.is_some()) {
+        let (k, v) = contexts
+            .get(&batch.variant)
+            .ok_or_else(|| anyhow::anyhow!("no KV context for variant {}", batch.variant))?;
         anyhow::ensure!(
-            q.cols == k.cols,
-            "request {} head dim {} != context head dim {}",
-            req.id,
-            q.cols,
-            k.cols
+            k.rows == v.rows && k.cols == v.cols,
+            "variant {}: malformed KV context (K {}x{}, V {}x{})",
+            batch.variant,
+            k.rows,
+            k.cols,
+            v.rows,
+            v.cols
         );
-        let report = pipeline.run_pooled(&PipelineInputs::qkv(q, k, v), workspaces);
-        metrics.record_stage_times(&report.timing, report.stalls);
-        metrics.record_sharded(&report);
-        metrics.record_traffic(&report.traffic, &report.sched);
-        metrics.record_workspace_bytes(report.workspace_bytes);
-        outs[i] = Some(report.out);
+        for (i, req) in batch.requests.iter().enumerate() {
+            if req.is_decode() {
+                continue;
+            }
+            let Some(q) = &req.q else { continue };
+            anyhow::ensure!(
+                q.cols == k.cols,
+                "request {} head dim {} != context head dim {}",
+                req.id,
+                q.cols,
+                k.cols
+            );
+            let report = pipeline.run_pooled(&PipelineInputs::qkv(q, k, v), workspaces);
+            metrics.record_stage_times(&report.timing, report.stalls);
+            metrics.record_sharded(&report);
+            metrics.record_traffic(&report.traffic, &report.sched);
+            metrics.record_workspace_bytes(report.workspace_bytes);
+            outs[i] = Some(report.out);
+        }
     }
     Ok((outs, errors))
 }

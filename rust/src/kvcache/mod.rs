@@ -29,5 +29,5 @@ pub mod predict;
 pub mod session;
 
 pub use page::{gather_rows, gather_rows_into, CacheStats, KvPage, PageId, PagedKvCache};
-pub use predict::{score_row, score_row_into, QueryOperand};
+pub use predict::{score_row, score_row_into, score_row_range_into, QueryOperand};
 pub use session::{AppendOutcome, SessionConfig, SessionStore};

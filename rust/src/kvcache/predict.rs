@@ -156,64 +156,122 @@ pub fn score_row_into(
                 break 'pages;
             }
             debug_assert_eq!(page.d(), d, "query/page head-dim mismatch");
-            let score = match qop.kind {
-                PredictKind::None => {
-                    // Oracle scores: exact dot product, nothing charged.
-                    let krow = page.k_row(r);
-                    let mut dot = 0.0f32;
-                    for p in 0..d {
-                        dot += qop.raw[p] * krow[p];
-                    }
-                    dot * attn_scale
-                }
-                PredictKind::DlzsCross => {
-                    // Differential: plain quantized K, LZ-encoded Q (the
-                    // same operand roles as PreparedPredict's DLZS arm).
-                    let krow = page.qk_row(r);
-                    let mut acc = 0i64;
-                    for p in 0..d {
-                        acc += dlzs_mul(krow[p], qop.codes[p]);
-                    }
-                    acc as f32 * (qop.scale * page.k_scale(r)) * attn_scale
-                }
-                PredictKind::Slzs => {
-                    // Symmetric: both sides LZ-encoded. The key-side codes
-                    // were frozen (and their conversion charged) at append
-                    // — the caching win; decode only reads them.
-                    let kcodes = page.k_codes_row(r);
-                    let mut acc = 0i64;
-                    for p in 0..d {
-                        acc += slzs_mul(kcodes[p], qop.codes[p]);
-                    }
-                    acc as f32 * (qop.scale * page.k_scale(r)) * attn_scale
-                }
-                PredictKind::LowBitMul => {
-                    let krow = page.qk_row(r);
-                    let msb = 4.min(qop.w);
-                    let mut acc = 0i64;
-                    for p in 0..d {
-                        acc += truncate_msb(krow[p], msb) as i64 * qop.q[p] as i64;
-                    }
-                    acc as f32 * (qop.scale * page.k_scale(r)) * attn_scale
-                }
-            };
-            out.push(score);
+            out.push(score_key(qop, page, r, attn_scale));
         }
     }
     assert_eq!(out.len(), limit, "session shorter than requested limit");
-    // Per-product accounting, mirroring PreparedPredict::score_rows with
-    // m = 1, n = limit.
+    charge_scored_span(qop, limit, d, c);
+}
+
+/// Score one query row against the *global* key range `key_lo..key_hi`
+/// of a session's resident pages — the sharded-decode spelling of
+/// [`score_row_into`]. Writes `key_hi - key_lo` scores (the range's
+/// scores, in key order). Because key `j`'s score depends only on the
+/// query row and key `j`'s frozen operand, and the charged ops are
+/// linear in the span, any partition of `0..limit` into ranges scores —
+/// and charges — exactly what one whole-row [`score_row_into`] call
+/// does, bit for bit per key and count for count per op class.
+pub fn score_row_range_into(
+    qop: &QueryOperand,
+    pages: &[&KvPage],
+    key_lo: usize,
+    key_hi: usize,
+    attn_scale: f32,
+    c: &mut OpCounter,
+    out: &mut Vec<f32>,
+) {
+    let d = qop.d();
+    out.clear();
+    let span = key_hi.saturating_sub(key_lo);
+    if span == 0 {
+        return;
+    }
+    let mut base = 0usize; // global position of the current page's row 0
+    'pages: for page in pages {
+        let len = page.len();
+        if base + len <= key_lo {
+            base += len; // whole page before the range: skip it
+            continue;
+        }
+        let r0 = key_lo.saturating_sub(base);
+        for r in r0..len {
+            if base + r >= key_hi {
+                break 'pages;
+            }
+            debug_assert_eq!(page.d(), d, "query/page head-dim mismatch");
+            out.push(score_key(qop, page, r, attn_scale));
+        }
+        base += len;
+    }
+    assert_eq!(out.len(), span, "session shorter than requested range");
+    charge_scored_span(qop, span, d, c);
+}
+
+/// Score global key `r`-within-`page` against the encoded query row —
+/// the one per-key scoring arm behind both [`score_row_into`] and
+/// [`score_row_range_into`], so the whole-row and range spellings can
+/// never drift.
+#[inline]
+fn score_key(qop: &QueryOperand, page: &KvPage, r: usize, attn_scale: f32) -> f32 {
+    let d = qop.d();
+    match qop.kind {
+        PredictKind::None => {
+            // Oracle scores: exact dot product, nothing charged.
+            let krow = page.k_row(r);
+            let mut dot = 0.0f32;
+            for p in 0..d {
+                dot += qop.raw[p] * krow[p];
+            }
+            dot * attn_scale
+        }
+        PredictKind::DlzsCross => {
+            // Differential: plain quantized K, LZ-encoded Q (the
+            // same operand roles as PreparedPredict's DLZS arm).
+            let krow = page.qk_row(r);
+            let mut acc = 0i64;
+            for p in 0..d {
+                acc += dlzs_mul(krow[p], qop.codes[p]);
+            }
+            acc as f32 * (qop.scale * page.k_scale(r)) * attn_scale
+        }
+        PredictKind::Slzs => {
+            // Symmetric: both sides LZ-encoded. The key-side codes
+            // were frozen (and their conversion charged) at append
+            // — the caching win; decode only reads them.
+            let kcodes = page.k_codes_row(r);
+            let mut acc = 0i64;
+            for p in 0..d {
+                acc += slzs_mul(kcodes[p], qop.codes[p]);
+            }
+            acc as f32 * (qop.scale * page.k_scale(r)) * attn_scale
+        }
+        PredictKind::LowBitMul => {
+            let krow = page.qk_row(r);
+            let msb = 4.min(qop.w);
+            let mut acc = 0i64;
+            for p in 0..d {
+                acc += truncate_msb(krow[p], msb) as i64 * qop.q[p] as i64;
+            }
+            acc as f32 * (qop.scale * page.k_scale(r)) * attn_scale
+        }
+    }
+}
+
+/// Per-product accounting for `n` scored keys, mirroring
+/// `PreparedPredict::score_rows` with m = 1 — linear in `n`, so a
+/// partition of a row into ranges charges exactly the whole-row total.
+fn charge_scored_span(qop: &QueryOperand, n: usize, d: usize, c: &mut OpCounter) {
     match qop.kind {
         PredictKind::None => {}
         PredictKind::DlzsCross | PredictKind::Slzs => {
-            c.tally(OpKind::Shift, (limit * d) as u64);
-            c.tally(OpKind::Add, (limit * d) as u64);
-            c.sram((limit * d * 2) as u64);
+            c.tally(OpKind::Shift, (n * d) as u64);
+            c.tally(OpKind::Add, (n * d) as u64);
+            c.sram((n * d * 2) as u64);
         }
         PredictKind::LowBitMul => {
-            c.tally(OpKind::Mul, (limit * d) as u64);
-            c.tally(OpKind::Add, (limit * d) as u64);
-            c.sram((limit * d * 2) as u64);
+            c.tally(OpKind::Mul, (n * d) as u64);
+            c.tally(OpKind::Add, (n * d) as u64);
+            c.sram((n * d * 2) as u64);
         }
     }
 }
@@ -304,6 +362,50 @@ mod tests {
         for limit in [1usize, 5, 13, 24] {
             let partial = score_row(&qop, &refs, limit, 1.0, &mut c);
             assert_eq!(partial, full[..limit], "limit={limit}");
+        }
+    }
+
+    #[test]
+    fn range_scores_partition_to_whole_row_bitwise() {
+        // A partition of 0..limit into arbitrary ranges must reproduce
+        // the whole-row scores bit for bit AND the whole-row op charges
+        // count for count — the sharded-decode predict-parity anchor.
+        let mut rng = Rng::new(14);
+        let (s, d) = (41, 16);
+        let k = Mat::randn(s, d, 1.0, &mut rng);
+        let v = Mat::randn(s, d, 1.0, &mut rng);
+        let q = Mat::randn(1, d, 1.0, &mut rng);
+        for kind in [
+            PredictKind::None,
+            PredictKind::DlzsCross,
+            PredictKind::Slzs,
+            PredictKind::LowBitMul,
+        ] {
+            let mut enc = OpCounter::new();
+            let qop = QueryOperand::encode(q.row(0), kind, 7, &mut enc);
+            // Page size 7 so range cuts straddle page boundaries.
+            let pages = pages_from(&k, &v, 7);
+            let refs: Vec<&KvPage> = pages.iter().collect();
+            for limit in [1usize, 7, 29, 41] {
+                let mut cw = OpCounter::new();
+                let whole = score_row(&qop, &refs, limit, 0.25, &mut cw);
+                for cuts in [vec![limit], vec![1, limit], vec![3, 7, 20, limit]] {
+                    if cuts.iter().any(|&c| c > limit) {
+                        continue;
+                    }
+                    let mut cp = OpCounter::new();
+                    let mut got: Vec<f32> = Vec::new();
+                    let mut buf = Vec::new();
+                    let mut lo = 0usize;
+                    for &hi in &cuts {
+                        score_row_range_into(&qop, &refs, lo, hi, 0.25, &mut cp, &mut buf);
+                        got.extend_from_slice(&buf);
+                        lo = hi;
+                    }
+                    assert_eq!(got, whole, "{kind:?} limit={limit} cuts={cuts:?}");
+                    assert_eq!(cp, cw, "{kind:?} limit={limit} cuts={cuts:?} op drift");
+                }
+            }
         }
     }
 

@@ -22,7 +22,9 @@
 //!   serving, and [`pipeline::ShardedPipeline`] runs the same stages
 //!   **sequence-sharded** across worker threads (executable
 //!   Spatial-STAR / DRAttention) with bit-identical outputs at every
-//!   worker count. All three front-ends drive one allocation-free
+//!   worker count — for prefill and, via its `decode_step` over a
+//!   partitioned view of the paged KV-cache, for decode (DESIGN.md
+//!   §12). All three front-ends drive one allocation-free
 //!   tile-execution core ([`pipeline::engine`]): per-worker
 //!   [`pipeline::TileWorkspace`]s (pooled per shape class by
 //!   [`pipeline::WorkspacePool`]) hold every stage buffer, the

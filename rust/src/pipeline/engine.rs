@@ -396,8 +396,17 @@ impl TileWorkspace {
     }
 
     /// Capacity maintenance ahead of one decode row at causal context
-    /// `limit` (outside the metered core).
-    fn ensure_decode_row(&mut self, limit: usize, keep: usize, d: usize, bc: usize, pages: usize) {
+    /// `limit` (outside the metered core). `pub(crate)` so the sharded
+    /// decode home phase can warm the same buffers before its metered
+    /// merge + formal core.
+    pub(crate) fn ensure_decode_row(
+        &mut self,
+        limit: usize,
+        keep: usize,
+        d: usize,
+        bc: usize,
+        pages: usize,
+    ) {
         reserve_to(&mut self.est_row, limit);
         self.qop.reserve(d);
         self.topk.reserve(limit);
@@ -410,6 +419,51 @@ impl TileWorkspace {
         self.vu.reset(keep, d);
         self.out_tile.reset(1, d);
         self.formal.reserve(d, bc, keep.max(1));
+    }
+
+    /// Capacity maintenance ahead of one sharded-decode local pass over
+    /// a key span of `span` scores proposing at most `keep` candidates
+    /// (outside the metered core).
+    pub(crate) fn ensure_decode_shard(&mut self, span: usize, keep: usize) {
+        reserve_to(&mut self.est_row, span);
+        self.topk.reserve(span);
+        reserve_to(&mut self.union, keep.max(1));
+    }
+
+    /// Split borrow for the sharded-decode local pass: the per-row score
+    /// buffer, the top-k scratch and a reusable index row for local
+    /// proposals (the union buffer, free until the home phase).
+    pub(crate) fn decode_score_topk_and_tmp(
+        &mut self,
+    ) -> (&mut Vec<f32>, &mut TopkScratch, &mut Vec<usize>) {
+        (&mut self.est_row, &mut self.topk, &mut self.union)
+    }
+
+    /// Install a merged selection as the current single decode row (the
+    /// sharded home phase's entry into [`TileExecutor::decode_gather_formal_row`]).
+    /// The row buffer must already be reserved via
+    /// [`TileWorkspace::ensure_decode_row`].
+    pub(crate) fn set_decode_selection(&mut self, keys: &[usize]) {
+        self.sel.begin(1);
+        self.sel.row_mut(0).extend_from_slice(keys);
+    }
+
+    /// The current single decode row's selection (as installed by stage 2
+    /// or [`TileWorkspace::set_decode_selection`]).
+    pub(crate) fn decode_selection(&self) -> &[usize] {
+        &self.sel.rows()[0]
+    }
+
+    /// The output row staged by the last
+    /// [`TileExecutor::decode_gather_formal_row`].
+    pub(crate) fn decode_out_row(&self) -> &[f32] {
+        self.out_tile.row(0)
+    }
+
+    /// Distinct page indices the last decode row's union touched
+    /// (ascending) — the cache-hit accounting input.
+    pub(crate) fn decode_row_pages(&self) -> &[usize] {
+        &self.row_pages
     }
 }
 
@@ -940,6 +994,63 @@ impl TileExecutor<'_> {
         let tb = ws.traffic.total_bytes() - b0;
         ws.spans.record(Stage::Topk, ExecPath::Decode, pos as u32, t0, t1, tb);
 
+        ws.hot_allocs += allocmeter::thread_allocs() - a0;
+
+        // ---- Stages 3 + 4: the shared gather + formal core (brackets
+        // its own allocmeter region, so the sharded home phase meters
+        // identically). ----
+        let (stalls, u) = self.decode_gather_formal_row(
+            pages,
+            qrow,
+            pos,
+            attn_scale,
+            page_size,
+            ws,
+            &mut ops,
+            &mut timing,
+        );
+
+        DecodeRowOut {
+            out: ws.out_tile.row(0).to_vec(),
+            sel: ws.sel.rows()[0].clone(),
+            ops,
+            timing,
+            stalls,
+            union_rows: u,
+            rho,
+            pages: ws.row_pages.clone(),
+        }
+    }
+
+    /// Decode stages 3 + 4 for the single row whose selection is already
+    /// installed in the workspace (stage 2's `select_into`, or the
+    /// sharded home phase's merged candidates via
+    /// [`TileWorkspace::set_decode_selection`]): sort the selection into
+    /// the ascending union, gather the selected KV rows from the frozen
+    /// pages, remap monotonically and run the unchanged formal kernel.
+    /// Because the kernel, visit order and accounting are byte-for-byte
+    /// the single-core stage bodies, any front-end that feeds this the
+    /// single-core selection reproduces the single-core output — and its
+    /// op/traffic charges — bit for bit. Returns (stalls, union rows).
+    /// Brackets its own allocmeter region; this core allocates nothing
+    /// once [`TileWorkspace::ensure_decode_row`] has warmed the buffers.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn decode_gather_formal_row(
+        &self,
+        pages: &[&KvPage],
+        qrow: &[f32],
+        pos: usize,
+        attn_scale: f32,
+        page_size: usize,
+        ws: &mut TileWorkspace,
+        ops: &mut StageOps,
+        timing: &mut StageTiming,
+    ) -> (u64, usize) {
+        let cfg = self.cfg;
+        let d = qrow.len();
+        let keep = cfg.keep(pos + 1);
+        let a0 = allocmeter::thread_allocs();
+
         // ---- Stage 3: cache read — gather this row's selected KV rows. ----
         let t0 = Instant::now();
         let b0 = ws.traffic.total_bytes();
@@ -1008,17 +1119,7 @@ impl TileExecutor<'_> {
         let tb = ws.traffic.total_bytes() - b0;
         ws.spans.record(Stage::Formal, ExecPath::Decode, pos as u32, t0, t1, tb);
         ws.hot_allocs += allocmeter::thread_allocs() - a0;
-
-        DecodeRowOut {
-            out: ws.out_tile.row(0).to_vec(),
-            sel: ws.sel.rows()[0].clone(),
-            ops,
-            timing,
-            stalls,
-            union_rows: u,
-            rho,
-            pages: ws.row_pages.clone(),
-        }
+        (stalls, u)
     }
 
     /// Stages 3 + 4 for a block whose per-row selection is already

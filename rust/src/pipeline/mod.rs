@@ -31,7 +31,13 @@
 //!   partitioned across N snake-placed workers, Q sub-blocks circulate
 //!   on a thread ring, top-k merges distributedly, and the gathered
 //!   formal stage reproduces the single-core output **bit for bit** at
-//!   every worker count (`rust/tests/prop_sharded_parity.rs`).
+//!   every worker count (`rust/tests/prop_sharded_parity.rs`). Decode
+//!   for sessions beyond one worker's reach partitions the *cached*
+//!   pages the same way ([`ShardedPipeline::decode_step`]): shards
+//!   propose candidates from their key ranges, the row's home worker
+//!   merges and runs the unchanged stage-3/4 core — bit-identical to
+//!   [`SparseAttentionPipeline::decode_step`] at every shard count
+//!   (`rust/tests/prop_sharded_decode_parity.rs`).
 //! * [`report`] — per-stage [`StageOps`] counters and [`StageTiming`]
 //!   breakdowns aggregated across tiles.
 //!
@@ -50,4 +56,4 @@ pub use config::PipelineConfig;
 pub use engine::{ShapeClass, TileWorkspace, WorkspacePool};
 pub use exec::{DecodeReport, PipelineInputs, PipelineReport, SparseAttentionPipeline};
 pub use report::{StageOps, StageTiming};
-pub use sharded::{ShardPlan, ShardStats, ShardedPipeline, ShardedReport};
+pub use sharded::{ShardPlan, ShardStats, ShardedDecodeReport, ShardedPipeline, ShardedReport};

@@ -47,6 +47,29 @@
 //!   selection remapped monotonically onto the gathered rows, so SU-FA
 //!   visits the same key *values* in the same order as the single-core
 //!   run over the full K/V — the same float sequence, stalls included.
+//!
+//! # Distributed decode
+//!
+//! [`ShardedPipeline::decode_step`] extends the same two-phase scheme
+//! across **time**: a session whose paged KV cache has outgrown one
+//! worker is decoded by partitioning the cached context across N
+//! workers (contiguous key ranges over the frozen pages), running the
+//! *local* predict + per-segment top-k halves against each worker's
+//! key range, and gathering every shard's candidates at the query row's
+//! **home** worker in one scatter step (Star Attention's phase-2
+//! "global query against distributed KV" topology, PAPERS.md
+//! arxiv 2411.17116 — the query is tiny, so it is the candidates, not
+//! the KV, that travel). The home worker merges with the identical
+//! distributed-merge kernels and then runs the *unchanged* single-core
+//! stage-3/4 decode core
+//! ([`super::engine`]'s shared gather + formal row body), which is what
+//! makes N sharded decode steps **bit-identical to single-core
+//! [`super::SparseAttentionPipeline::decode_step`] at every shard
+//! count** (`rust/tests/prop_sharded_decode_parity.rs`). The
+//! tolerance-mode alternative — per-shard SU-FA partials combined by
+//! online-softmax rescaling ([`crate::attention::partials`]) — is
+//! measured in `star bench decode --sharded` and documented in
+//! DESIGN.md §12.
 
 use super::config::PipelineConfig;
 use super::engine::{
@@ -55,6 +78,7 @@ use super::engine::{
 use super::exec::PipelineInputs;
 use super::report::{StageOps, StageTiming};
 use crate::attention::Selection;
+use crate::kvcache::{score_row_range_into, KvPage, QueryOperand, SessionStore};
 use crate::obs::trace::{ExecPath, Stage};
 use crate::obs::traffic::{self, SchedStats, TrafficCounter};
 use crate::sim::pipeline::TopkKind;
@@ -127,6 +151,32 @@ impl ShardPlan {
     /// Effective worker count (after clamping).
     pub fn workers(&self) -> usize {
         self.key_ranges.len()
+    }
+
+    /// Partition a decode step — `t` new query rows against `s` cached
+    /// keys — for `requested` workers (0 = `available_parallelism`).
+    /// Decode key ranges are plain contiguous splits for *every* top-k
+    /// engine: each query row has its own causal limit and therefore its
+    /// own SADS sub-segment geometry, so segment ownership is resolved
+    /// per row by the first-key rule (a segment belongs to the shard
+    /// whose key range contains the segment's first key — see
+    /// [`ShardedPipeline::decode_step`]) instead of being baked into the
+    /// partition. Query rows are homed in contiguous blocks, one per
+    /// worker, like the prefill plan.
+    pub fn for_decode(t: usize, s: usize, requested: usize) -> ShardPlan {
+        let req = match requested {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            n => n,
+        }
+        .max(1);
+        let w = req.min(s.max(1));
+        let key_ranges: Vec<(usize, usize)> = (0..w).map(|j| (j * s / w, (j + 1) * s / w)).collect();
+        let q_blocks = (0..w).map(|j| (j * t / w, (j + 1) * t / w)).collect();
+        let cols = (w as f64).sqrt().ceil() as usize;
+        let rows = w.div_ceil(cols.max(1));
+        let mut coords = snake_coords(rows, cols.max(1));
+        coords.truncate(w);
+        ShardPlan { key_ranges, seg_ranges: vec![(0, 0); w], seg_len: 0, q_blocks, coords }
     }
 }
 
@@ -753,6 +803,721 @@ fn home_phase(
         rho_n,
         ring_sends,
         payload_bytes,
+    }
+}
+
+/// Result of one [`ShardedPipeline::decode_step`]. The decode-side
+/// fields carry the exact [`super::DecodeReport`] semantics (and are
+/// bit-identical to the single-core step's at every shard count — see
+/// the module docs); the sharded extras mirror [`ShardedReport`].
+#[derive(Clone, Debug)]
+pub struct ShardedDecodeReport {
+    /// Attention output for the new rows `[rows, d]` — bit-identical to
+    /// [`super::SparseAttentionPipeline::decode_step`] on the same
+    /// store state and chunk.
+    pub out: Mat,
+    /// Per-new-row key selections in **absolute** token positions.
+    pub selection: Selection,
+    /// Global positions of the appended tokens within the session.
+    pub positions: std::ops::Range<usize>,
+    /// Per-stage operation counters summed over all workers (equal to
+    /// the single-core step's for predict/KV-gen/formal; the exact
+    /// top-k engines charge the distributed extraction instead of the
+    /// monolithic scan — see `rust/tests/prop_sharded_decode_parity.rs`).
+    pub ops: StageOps,
+    /// Per-stage busy times summed over all workers.
+    pub timing: StageTiming,
+    /// End-to-end wall time, seconds.
+    pub wall_s: f64,
+    /// SU-FA max-misprediction recoveries.
+    pub stalls: u64,
+    /// KV rows gathered, summed over rows.
+    pub union_rows: usize,
+    /// Mean SADS survivor fraction ρ (0 when SADS did not run).
+    pub rho_mean: f64,
+    /// Keys kept for the last (longest-context) row.
+    pub keep_last: usize,
+    /// Distinct resident pages this step's gathers touched, excluding
+    /// pages re-materialized by this very step.
+    pub page_hits: usize,
+    /// Pages rebuilt from history because the session had been evicted.
+    pub rematerialized_pages: usize,
+    /// Sessions evicted (LRU) to make room for this step.
+    pub evicted_sessions: Vec<u64>,
+    /// Effective worker count.
+    pub shards: usize,
+    /// Candidate-scatter rounds executed: 1 when more than one worker
+    /// took part (the one-shot all-to-all of the module docs), else 0.
+    pub ring_steps: usize,
+    /// Modeled bytes of home-bound candidate batches across all workers.
+    pub ring_payload_bytes: u64,
+    /// Per-worker statistics, ascending shard index.
+    pub per_shard: Vec<ShardStats>,
+    /// Heap allocations metered inside the per-row gather + formal
+    /// cores (zero in steady state on a warm [`super::WorkspacePool`];
+    /// candidate batches traveling between threads own their storage
+    /// and are excluded by design, like the prefill ring payload).
+    pub hot_path_allocs: u64,
+    /// Peak per-worker [`super::TileWorkspace`] heap capacity during
+    /// this step, bytes.
+    pub workspace_bytes: usize,
+    /// Measured byte-level traffic merged over all workers (zero unless
+    /// [`crate::obs::traffic::set_enabled`] turned counting on). All
+    /// DRAM/SRAM-class totals equal the single-core step's; the
+    /// scatter bytes are the `ring_payload_bytes` field inside the
+    /// counter.
+    pub traffic: TrafficCounter,
+    /// Scheduler statistics: the decode schedule is static (one homed
+    /// row block per worker), so `steals` is always 0 here.
+    pub sched: SchedStats,
+}
+
+/// One worker's per-row candidate proposals for a decode step,
+/// traveling from the proposing shard to the row's home worker in the
+/// one-shot scatter — the decode counterpart of the prefill ring
+/// payload, and like it the batch must own its storage.
+#[derive(Clone, Debug, Default)]
+struct DecodeRowProposals {
+    /// Chunk-relative row index.
+    row: usize,
+    /// SADS: winner lists of the row sub-segments this shard owns
+    /// (per-row geometry; global segment ids).
+    sads: Vec<SegmentWinners>,
+    /// Exact engines: `(score, absolute key index)` proposals.
+    exact: Vec<(f32, usize)>,
+}
+
+/// Modeled wire size of one home-bound proposal batch: ~8 bytes per
+/// candidate (f32 score + packed index) plus a 16-byte per-row header.
+fn decode_wire_bytes(batch: &[DecodeRowProposals]) -> u64 {
+    batch
+        .iter()
+        .map(|p| {
+            let cands = p.exact.len() + p.sads.iter().map(|l| l.winners.len()).sum::<usize>();
+            16 + 8 * cands as u64
+        })
+        .sum()
+}
+
+/// One home worker's finished decode rows plus that worker's statistics.
+struct DecodeWorkerOut {
+    block: usize,
+    lo: usize,
+    out: Mat,
+    sel_rows: Vec<Vec<usize>>,
+    ops: StageOps,
+    timing: StageTiming,
+    stalls: u64,
+    union_rows: usize,
+    rho_sum: f64,
+    rho_n: usize,
+    ring_sends: u64,
+    payload_bytes: u64,
+    /// Distinct page indices this block's gathers touched (ascending).
+    touched_pages: Vec<usize>,
+}
+
+/// Shared read-only context for the decode worker threads.
+struct DecodeCtx<'a> {
+    cfg: &'a PipelineConfig,
+    plan: &'a ShardPlan,
+    /// The session's frozen pages, shared read-only by every shard.
+    pages: &'a [&'a KvPage],
+    /// Pre-encoded per-row prediction operands (empty when the top-k
+    /// engine is `None` — dense execution scores nothing).
+    qops: &'a [QueryOperand],
+    q: &'a Mat,
+    /// Global position of the chunk's first row.
+    base: usize,
+    scale: f32,
+    page_size: usize,
+    d: usize,
+}
+
+impl ShardedPipeline {
+    /// Decode one chunk of a session whose paged KV cache is
+    /// partitioned across this pipeline's workers — sharded counterpart
+    /// of [`super::SparseAttentionPipeline::decode_step`], bit-identical
+    /// to it at every shard count (see the module docs for why). Runs on
+    /// a throwaway [`WorkspacePool`]; serving paths use
+    /// [`ShardedPipeline::decode_step_pooled`].
+    ///
+    /// ```
+    /// use star::kvcache::{SessionConfig, SessionStore};
+    /// use star::pipeline::{PipelineConfig, ShardedPipeline, SparseAttentionPipeline};
+    /// use star::tensor::Mat;
+    /// use star::util::Rng;
+    ///
+    /// let cfg = PipelineConfig::star().with_keep(0.25).with_threads(1);
+    /// let mut rng = Rng::new(11);
+    /// let (q, k, v) = (
+    ///     Mat::randn(48, 16, 1.0, &mut rng),
+    ///     Mat::randn(48, 16, 1.0, &mut rng),
+    ///     Mat::randn(48, 16, 1.0, &mut rng),
+    /// );
+    /// let mut single = SessionStore::new(SessionConfig::for_pipeline(&cfg, 16, 0));
+    /// let mut sharded = SessionStore::new(SessionConfig::for_pipeline(&cfg, 16, 0));
+    /// let a = SparseAttentionPipeline::new(cfg).decode_step(&mut single, 1, &q, &k, &v).unwrap();
+    /// let b = ShardedPipeline::new(cfg, 3).decode_step(&mut sharded, 1, &q, &k, &v).unwrap();
+    /// assert_eq!(b.out.max_abs_diff(&a.out), 0.0);
+    /// assert_eq!(b.selection, a.selection);
+    /// assert_eq!(b.stalls, a.stalls);
+    /// ```
+    pub fn decode_step(
+        &self,
+        store: &mut SessionStore,
+        session: u64,
+        q: &Mat,
+        k_new: &Mat,
+        v_new: &Mat,
+    ) -> crate::Result<ShardedDecodeReport> {
+        self.decode_step_pooled(store, session, q, k_new, v_new, &WorkspacePool::new())
+    }
+
+    /// [`ShardedPipeline::decode_step`] with each worker drawing its
+    /// [`TileWorkspace`] from `pool` — bit-identical outputs, zero
+    /// hot-path allocations once the pool is warm for this shape class.
+    pub fn decode_step_pooled(
+        &self,
+        store: &mut SessionStore,
+        session: u64,
+        q: &Mat,
+        k_new: &Mat,
+        v_new: &Mat,
+        pool: &WorkspacePool,
+    ) -> crate::Result<ShardedDecodeReport> {
+        let started = Instant::now();
+        anyhow::ensure!(
+            q.rows == k_new.rows && q.rows == v_new.rows,
+            "decode chunk rows disagree (Q {}, K {}, V {})",
+            q.rows,
+            k_new.rows,
+            v_new.rows
+        );
+        anyhow::ensure!(
+            q.cols == k_new.cols && q.cols == v_new.cols,
+            "decode chunk head dims disagree (Q {}, K {}, V {})",
+            q.cols,
+            k_new.cols,
+            v_new.cols
+        );
+        anyhow::ensure!(
+            q.cols == store.config().d,
+            "chunk head dim {} != session store head dim {}",
+            q.cols,
+            store.config().d
+        );
+        // The cached key operands were quantized at the store's bitwidth;
+        // scoring them at a different W would silently skew prediction.
+        anyhow::ensure!(
+            self.cfg.predict_bits == store.config().predict_bits,
+            "pipeline predict_bits {} != session store predict_bits {}",
+            self.cfg.predict_bits,
+            store.config().predict_bits
+        );
+        if let Err(e) = self.cfg.validate() {
+            anyhow::bail!("invalid pipeline config: {e}");
+        }
+        let d = q.cols;
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut ops = StageOps::default();
+        let mut timing = StageTiming::default();
+
+        // Append + re-materialize under the KV-gen stage clock —
+        // identical driver prologue to the single-core step.
+        let t0 = Instant::now();
+        let outcome = store.append(session, k_new, v_new, &mut ops)?;
+        timing.kv_gen_s += t0.elapsed().as_secs_f64();
+
+        let mut run_traffic = TrafficCounter::new();
+        if traffic::enabled() {
+            run_traffic.key_ingest_bytes += 4 * (k_new.rows * d) as u64;
+            run_traffic.cache_append_bytes += 4 * (2 * k_new.rows * d) as u64;
+            run_traffic.cache_remat_bytes += 4 * (2 * outcome.rematerialized_tokens * d) as u64;
+        }
+
+        let base = outcome.start;
+        let rows = q.rows;
+        let s_total = base + rows;
+        let page_size = store.config().page_size;
+        let keep_last = if s_total > 0 { self.cfg.keep(s_total) } else { 0 };
+
+        if rows == 0 {
+            return Ok(ShardedDecodeReport {
+                out: Mat::zeros(0, d),
+                selection: Selection { rows: Vec::new() },
+                positions: base..base,
+                ops,
+                timing,
+                wall_s: started.elapsed().as_secs_f64(),
+                stalls: 0,
+                union_rows: 0,
+                rho_mean: 0.0,
+                keep_last,
+                page_hits: 0,
+                rematerialized_pages: outcome.rematerialized_pages,
+                evicted_sessions: outcome.evicted_sessions,
+                shards: 0,
+                ring_steps: 0,
+                ring_payload_bytes: 0,
+                per_shard: Vec::new(),
+                hot_path_allocs: 0,
+                workspace_bytes: 0,
+                traffic: run_traffic,
+                sched: SchedStats::default(),
+            });
+        }
+
+        // ---- Prologue: encode every new row's prediction operand once
+        // (per-row quantization scales — the decode bit-identity
+        // contract), shared read-only by all shards, so the encode
+        // charges equal the single-core step's. ----
+        let t0 = Instant::now();
+        let qops: Vec<QueryOperand> = if self.cfg.topk == TopkKind::None {
+            Vec::new() // dense execution scores nothing
+        } else {
+            (0..rows)
+                .map(|r| {
+                    QueryOperand::encode(
+                        q.row(r),
+                        self.cfg.predict,
+                        self.cfg.predict_bits,
+                        &mut ops.predict,
+                    )
+                })
+                .collect()
+        };
+        if traffic::enabled() && self.cfg.topk != TopkKind::None {
+            // One f32 query row read per row at encode time. (The shards'
+            // operand-page streaming is charged at their local spans;
+            // together the byte totals equal the single-core step's.)
+            run_traffic.operand_read_bytes += 4 * (rows * d) as u64;
+        }
+        timing.predict_s += t0.elapsed().as_secs_f64();
+
+        let plan = ShardPlan::for_decode(rows, s_total, self.shards);
+        let w = plan.workers();
+        let pages: Vec<&KvPage> = store.pages_of(session);
+        let ctx = DecodeCtx {
+            cfg: &self.cfg,
+            plan: &plan,
+            pages: &pages,
+            qops: &qops,
+            q,
+            base,
+            scale,
+            page_size,
+            d,
+        };
+        let class = ShapeClass::of(&self.cfg, d);
+
+        // ---- One-shot scatter/gather: every worker runs the local pass
+        // for every row over its own key range, sends each home worker
+        // its rows' proposals (unbounded channels — all sends complete
+        // before any worker blocks on receive), then serves as home for
+        // its own row block: merge, gather, formal on the unchanged
+        // single-core row core. ----
+        let worker_outs: Vec<(DecodeWorkerOut, u64, usize, TrafficCounter)> =
+            std::thread::scope(|scope| {
+                let (txs, rxs): (Vec<_>, Vec<_>) =
+                    (0..w).map(|_| channel::<Vec<DecodeRowProposals>>()).unzip();
+                let ctx = &ctx;
+                let mut handles = Vec::with_capacity(w);
+                for (j, rx) in rxs.into_iter().enumerate() {
+                    let my_txs: Vec<_> = txs.clone();
+                    handles.push(scope.spawn(move || {
+                        let mut ws = pool.checkout(class);
+                        // Trace context for this shard: reserve span
+                        // storage outside the metered cores, stamp the
+                        // worker id and session.
+                        ws.spans.reserve_if_enabled();
+                        ws.spans.worker = j as u32;
+                        ws.spans.session = session;
+                        let mut my_ops = StageOps::default();
+                        let mut my_timing = StageTiming::default();
+                        let mut ring_sends = 0u64;
+                        let mut payload_bytes = 0u64;
+                        let mut batches: Vec<Vec<DecodeRowProposals>> = Vec::with_capacity(w);
+                        for h in 0..w {
+                            let (rlo, rhi) = ctx.plan.q_blocks[h];
+                            let batch: Vec<DecodeRowProposals> = (rlo..rhi)
+                                .map(|r| {
+                                    decode_local_row(ctx, j, r, &mut my_ops, &mut my_timing, &mut ws)
+                                })
+                                .collect();
+                            if h == j {
+                                batches.push(batch);
+                            } else {
+                                let wb = decode_wire_bytes(&batch);
+                                payload_bytes += wb;
+                                ring_sends += 1;
+                                if traffic::enabled() {
+                                    ws.traffic.ring_payload_bytes += wb;
+                                }
+                                let t0 = Instant::now();
+                                my_txs[h].send(batch).expect("home receiver alive");
+                                ws.spans.record(
+                                    Stage::Ring,
+                                    ExecPath::Sharded,
+                                    h as u32,
+                                    t0,
+                                    Instant::now(),
+                                    wb,
+                                );
+                            }
+                        }
+                        drop(my_txs);
+                        // Home phase: every other shard contributes one
+                        // batch for this worker's rows.
+                        for _ in 0..w.saturating_sub(1) {
+                            batches.push(rx.recv().expect("proposal sender alive"));
+                        }
+                        let out = decode_home_phase(
+                            ctx,
+                            j,
+                            batches,
+                            my_ops,
+                            my_timing,
+                            ring_sends,
+                            payload_bytes,
+                            &mut ws,
+                        );
+                        let (hot, bytes, tr) =
+                            (ws.take_hot_allocs(), ws.capacity_bytes(), ws.take_traffic());
+                        pool.checkin(ws);
+                        (out, hot, bytes, tr)
+                    }));
+                }
+                drop(txs);
+                handles.into_iter().map(|h| h.join().expect("decode shard worker panicked")).collect()
+            });
+
+        let mut hot_path_allocs = 0u64;
+        let mut workspace_bytes = 0usize;
+        let mut outs: Vec<DecodeWorkerOut> = Vec::with_capacity(w);
+        for (o, hot, bytes, tr) in worker_outs {
+            hot_path_allocs += hot;
+            workspace_bytes = workspace_bytes.max(bytes);
+            run_traffic.merge(&tr);
+            outs.push(o);
+        }
+        outs.sort_by_key(|o| o.block);
+
+        // ---- Merge worker results in block (= row) order. ----
+        let mut out = Mat::zeros(rows, d);
+        let mut sel_rows = Vec::with_capacity(rows);
+        let mut stalls = 0u64;
+        let mut union_rows = 0usize;
+        let (mut rho_sum, mut rho_n) = (0.0, 0usize);
+        let mut ring_payload_bytes = 0u64;
+        let mut per_shard = Vec::with_capacity(w);
+        let mut touched: std::collections::BTreeSet<usize> = std::collections::BTreeSet::new();
+        for o in outs {
+            for i in 0..o.out.rows {
+                out.row_mut(o.lo + i).copy_from_slice(o.out.row(i));
+            }
+            sel_rows.extend(o.sel_rows);
+            ops.merge(&o.ops);
+            timing.merge(&o.timing);
+            stalls += o.stalls;
+            union_rows += o.union_rows;
+            rho_sum += o.rho_sum;
+            rho_n += o.rho_n;
+            ring_payload_bytes += o.payload_bytes;
+            touched.extend(o.touched_pages.iter().copied());
+            let (key_lo, key_hi) = plan.key_ranges[o.block];
+            per_shard.push(ShardStats {
+                shard: o.block,
+                coord: plan.coords[o.block],
+                key_lo,
+                key_hi,
+                q_rows: o.out.rows,
+                timing: o.timing,
+                ring_sends: o.ring_sends,
+                payload_bytes: o.payload_bytes,
+            });
+        }
+        drop(ctx);
+        drop(pages);
+        // Hits = distinct pages read minus the pages this step had to
+        // rebuild (hits and misses in the same per-step page units).
+        let page_hits = touched.len().saturating_sub(outcome.rematerialized_pages);
+        store.record_hits(page_hits as u64);
+
+        Ok(ShardedDecodeReport {
+            out,
+            selection: Selection { rows: sel_rows },
+            positions: base..base + rows,
+            ops,
+            timing,
+            wall_s: started.elapsed().as_secs_f64(),
+            stalls,
+            union_rows,
+            rho_mean: if rho_n > 0 { rho_sum / rho_n as f64 } else { 0.0 },
+            keep_last,
+            page_hits,
+            rematerialized_pages: outcome.rematerialized_pages,
+            evicted_sessions: outcome.evicted_sessions,
+            shards: w,
+            ring_steps: if w > 1 { 1 } else { 0 },
+            ring_payload_bytes,
+            per_shard,
+            hot_path_allocs,
+            workspace_bytes,
+            traffic: run_traffic,
+            sched: SchedStats {
+                workers: w as u64,
+                chunk_grabs: w as u64,
+                steals: 0,
+                tiles: w as u64,
+                max_worker_tiles: 1,
+            },
+        })
+    }
+}
+
+/// The shard-local halves of the decode stages for one row on worker
+/// `j`: score the owned key sub-range against the frozen page operands
+/// (the same per-key kernel as the single-core row, via
+/// [`score_row_range_into`]) and propose candidates from it. SADS
+/// segment ownership follows the first-key rule over the row's own
+/// geometry ([`sads_geometry`] at the row's causal limit), so the owned
+/// sub-segments partition the row's segments across shards and each
+/// per-segment pass sees exactly the slice the single-core scan forms.
+fn decode_local_row(
+    ctx: &DecodeCtx,
+    j: usize,
+    r: usize,
+    ops: &mut StageOps,
+    timing: &mut StageTiming,
+    ws: &mut TileWorkspace,
+) -> DecodeRowProposals {
+    let mut prop = DecodeRowProposals { row: r, ..Default::default() };
+    let cfg = ctx.cfg;
+    if cfg.topk == TopkKind::None {
+        return prop; // dense execution: the home phase selects 0..limit
+    }
+    let pos = ctx.base + r;
+    let limit = pos + 1;
+    let keep = cfg.keep(limit);
+    let (key_lo, key_hi) = ctx.plan.key_ranges[j];
+    let d = ctx.d;
+
+    // Resolve this shard's scored span for the row; rows whose causal
+    // limit ends before the owned range contribute nothing.
+    let (span_lo, span_hi, sads_geom) = match cfg.topk {
+        TopkKind::Sads => {
+            let k_r = keep.min(limit);
+            let (nseg, seg_len) = sads_geometry(limit, &cfg.sads);
+            let n_quota = cfg.sads.segments.max(1).min(limit);
+            let per_seg = k_r.div_ceil(n_quota);
+            let seg_lo = key_lo.div_ceil(seg_len);
+            let seg_hi = key_hi.div_ceil(seg_len).min(nseg);
+            if k_r == 0 || seg_lo >= seg_hi {
+                return prop;
+            }
+            let span_lo = seg_lo * seg_len;
+            let span_hi = (seg_hi * seg_len).min(limit);
+            (span_lo, span_hi, Some((seg_lo, seg_hi, seg_len, per_seg)))
+        }
+        // Threshold engines execute as vanilla selection, as in the
+        // single-core pipeline (see PipelineConfig docs).
+        TopkKind::Vanilla | TopkKind::Threshold => {
+            let hi = key_hi.min(limit);
+            if key_lo >= hi {
+                return prop;
+            }
+            (key_lo, hi, None)
+        }
+        TopkKind::None => unreachable!(),
+    };
+    let span = span_hi - span_lo;
+
+    // ---- Predict (local): score the owned span. Bit-identical to the
+    // same elements of the single-core estimate (frozen page operands /
+    // per-row scales / independent per-key dots), and the per-key
+    // charges sum over the shard partition to the single-core row's. ----
+    let t0 = Instant::now();
+    let b0 = ws.traffic.total_bytes();
+    ws.ensure_decode_shard(span, keep);
+    {
+        let (est_row, _, _) = ws.decode_score_topk_and_tmp();
+        score_row_range_into(
+            &ctx.qops[r],
+            ctx.pages,
+            span_lo,
+            span_hi,
+            ctx.scale,
+            &mut ops.predict,
+            est_row,
+        );
+    }
+    if traffic::enabled() {
+        // Quantized page operands (~1 B/elem) stream through the range
+        // scorer, one f32 score per owned key out. The per-row f32
+        // query read is charged once by the driver, not per shard.
+        ws.traffic.operand_read_bytes += (span * d) as u64;
+        ws.traffic.score_write_bytes += 4 * span as u64;
+    }
+    let t1 = Instant::now();
+    timing.predict_s += (t1 - t0).as_secs_f64();
+    let tb = ws.traffic.total_bytes() - b0;
+    ws.spans.record(Stage::Predict, ExecPath::Sharded, pos as u32, t0, t1, tb);
+
+    // ---- Top-k (local): propose candidates from the owned span. ----
+    let t0 = Instant::now();
+    let b0 = ws.traffic.total_bytes();
+    let (est_row, topk, tmp) = ws.decode_score_topk_and_tmp();
+    match sads_geom {
+        Some((seg_lo, seg_hi, seg_len, per_seg)) => {
+            for seg in seg_lo..seg_hi {
+                let glo = seg * seg_len;
+                let ghi = (glo + seg_len).min(limit);
+                prop.sads.push(sads_segment_winners_scratch(
+                    &est_row[glo - span_lo..ghi - span_lo],
+                    glo,
+                    seg,
+                    per_seg,
+                    cfg.sads.radius,
+                    &mut ops.topk,
+                    topk,
+                ));
+            }
+        }
+        None => {
+            vanilla_topk_into(&est_row[..span], keep.min(span), &mut ops.topk, topk, tmp);
+            // Proposal order is irrelevant here: the home phase sorts the
+            // accumulated list by global index (the tie contract) before
+            // merging.
+            prop.exact.extend(tmp.iter().map(|&jj| (est_row[jj], span_lo + jj)));
+        }
+    }
+    if traffic::enabled() {
+        // The local score span is re-read once by the proposal pass.
+        ws.traffic.score_read_bytes += 4 * span as u64;
+    }
+    let t1 = Instant::now();
+    timing.topk_s += (t1 - t0).as_secs_f64();
+    let tb = ws.traffic.total_bytes() - b0;
+    ws.spans.record(Stage::Topk, ExecPath::Sharded, pos as u32, t0, t1, tb);
+    prop
+}
+
+/// The decode home phase for worker `block`: fold every shard's
+/// proposals into the global per-row selection with the identical merge
+/// kernels the prefill home phase uses, then run the *unchanged*
+/// single-core stage-3/4 row core
+/// ([`TileExecutor::decode_gather_formal_row`]) per row — which is the
+/// whole bit-identity argument: the formal math never sees the shard
+/// count.
+#[allow(clippy::too_many_arguments)]
+fn decode_home_phase(
+    ctx: &DecodeCtx,
+    block: usize,
+    batches: Vec<Vec<DecodeRowProposals>>,
+    mut ops: StageOps,
+    mut timing: StageTiming,
+    ring_sends: u64,
+    payload_bytes: u64,
+    ws: &mut TileWorkspace,
+) -> DecodeWorkerOut {
+    let cfg = ctx.cfg;
+    let (rlo, rhi) = ctx.plan.q_blocks[block];
+    let nrows = rhi - rlo;
+    let d = ctx.d;
+
+    // ---- Top-k (merge): the global budget over all shards' proposals.
+    // Ascending segment / key order restores the single-core
+    // tie-breaking regardless of arrival order.
+    let t0 = Instant::now();
+    let mut row_sads: Vec<Vec<SegmentWinners>> = (0..nrows).map(|_| Vec::new()).collect();
+    let mut row_exact: Vec<Vec<(f32, usize)>> = (0..nrows).map(|_| Vec::new()).collect();
+    for batch in batches {
+        for p in batch {
+            debug_assert!((rlo..rhi).contains(&p.row), "proposal routed to the wrong home");
+            let i = p.row - rlo;
+            row_sads[i].extend(p.sads);
+            row_exact[i].extend(p.exact);
+        }
+    }
+    let (mut rho_sum, mut rho_n) = (0.0, 0usize);
+    let mut sel_rows: Vec<Vec<usize>> = Vec::with_capacity(nrows);
+    for i in 0..nrows {
+        let limit = ctx.base + rlo + i + 1;
+        let keep = cfg.keep(limit);
+        match cfg.topk {
+            TopkKind::None => sel_rows.push((0..limit).collect()),
+            TopkKind::Sads => {
+                let lists = &mut row_sads[i];
+                lists.sort_by_key(|l| l.seg);
+                let survivors: usize = lists.iter().map(|l| l.survivors).sum();
+                rho_sum += survivors as f64 / limit as f64;
+                rho_n += 1;
+                let (sel, _) = sads_merge(lists, keep.min(limit), &mut ops.topk);
+                sel_rows.push(sel);
+            }
+            TopkKind::Vanilla | TopkKind::Threshold => {
+                let cands = &mut row_exact[i];
+                cands.sort_by_key(|&(_, idx)| idx);
+                sel_rows.push(merge_topk_candidates(cands, keep, &mut ops.topk));
+            }
+        }
+    }
+    let t1 = Instant::now();
+    timing.topk_s += (t1 - t0).as_secs_f64();
+    // Accounted under the top-k clock (it *is* stage 2), traced as its
+    // own span; it reads only payload candidates already counted at the
+    // scatter, so its byte delta is legitimately 0.
+    ws.spans.record(Stage::Merge, ExecPath::Sharded, rlo as u32, t0, t1, 0);
+
+    // ---- Stages 3 + 4 per row on the unchanged single-core decode
+    // core: install the merged selection, gather from the same frozen
+    // pages, run the same formal kernel in the same order.
+    let exec = TileExecutor { cfg };
+    let mut out = Mat::zeros(nrows, d);
+    let mut stalls = 0u64;
+    let mut union_rows = 0usize;
+    let mut touched: std::collections::BTreeSet<usize> = std::collections::BTreeSet::new();
+    for i in 0..nrows {
+        let r = rlo + i;
+        let pos = ctx.base + r;
+        let limit = pos + 1;
+        let keep = cfg.keep(limit);
+        // Capacity maintenance outside the metered core, exactly like
+        // the single-core row.
+        ws.ensure_decode_row(limit, keep, d, cfg.bc, limit.div_ceil(ctx.page_size.max(1)));
+        ws.spans.reserve_if_enabled();
+        ws.set_decode_selection(&sel_rows[i]);
+        let (st, u) = exec.decode_gather_formal_row(
+            ctx.pages,
+            ctx.q.row(r),
+            pos,
+            ctx.scale,
+            ctx.page_size,
+            ws,
+            &mut ops,
+            &mut timing,
+        );
+        out.row_mut(i).copy_from_slice(ws.decode_out_row());
+        stalls += st;
+        union_rows += u;
+        touched.extend(ws.decode_row_pages().iter().copied());
+    }
+
+    DecodeWorkerOut {
+        block,
+        lo: rlo,
+        out,
+        sel_rows,
+        ops,
+        timing,
+        stalls,
+        union_rows,
+        rho_sum,
+        rho_n,
+        ring_sends,
+        payload_bytes,
+        touched_pages: touched.into_iter().collect(),
     }
 }
 

@@ -133,36 +133,46 @@ fn native_backend_round_trip_matches_inline_pipeline() {
 }
 
 #[test]
-fn admission_routes_over_target_prefill_and_rejects_over_target_decode() {
-    // Regression (two generations of it): a request with t > target_t
-    // used to flow through unchecked and seal an over-target batch via
-    // the batcher's oversize escape hatch; then Router::admit rejected
-    // it outright. Now over-target *prefill* is admitted onto the
-    // sequence-sharded path (served, not rejected), while over-target
-    // *decode* — which mutates session state — is still rejected.
+fn admission_serves_over_target_prefill_and_decode() {
+    // Regression, third generation: a t > target_t request used to flow
+    // through unchecked and seal an over-target batch (gen 1); then
+    // Router::admit served over-target *prefill* sharded but rejected
+    // over-target *decode* outright (gen 2). With the partitioned-cache
+    // decode engine both request kinds now ride the sharded path —
+    // inverted from gen 2: no width is ever rejected, only an unknown
+    // model or an impossible context.
     let srv = server(16, 2);
     // Routable by shape (max_t = 128) but wider than target_t = 16:
     // served via the sharded path.
     let rx = srv.submit(Request::new(1, "tiny", 48, 256, 0.0)).unwrap();
     let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
     assert_eq!(resp.variant, "attn_small", "over-target prefill must be served: {resp:?}");
-    // Over-target decode is still rejected.
+    // Over-target decode is served now too (the gen-2 rejection, inverted).
     let d = 8;
     let (q, k, v) = (Mat::zeros(48, d), Mat::zeros(48, d), Mat::zeros(48, d));
     let rx = srv.submit(Request::decode(2, "tiny", 5, q, k, v, 48, 0.0)).unwrap();
     let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
-    assert!(
-        resp.variant.starts_with("rejected") && resp.variant.contains("target"),
-        "expected an over-target decode rejection, got {:?}",
-        resp.variant
-    );
-    assert!(resp.output.is_none());
+    assert_eq!(resp.variant, "attn_small", "over-target decode must be served: {resp:?}");
     // A within-target request still serves normally.
     let rx = srv.submit(Request::new(3, "tiny", 16, 256, 0.0)).unwrap();
     let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
     assert_eq!(resp.variant, "attn_small");
+    // Only genuinely unroutable requests reject: an unknown model …
+    let rx = srv.submit(Request::new(4, "nope", 4, 256, 0.0)).unwrap();
+    let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+    assert!(resp.variant.starts_with("rejected"), "unknown model must reject: {resp:?}");
+    // … or a decode step claiming a context beyond every bucket.
+    let (q, k, v) = (Mat::zeros(48, d), Mat::zeros(48, d), Mat::zeros(48, d));
+    let rx = srv.submit(Request::decode(5, "tiny", 5, q, k, v, 9999, 0.0)).unwrap();
+    let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+    assert!(
+        resp.variant.starts_with("rejected") && resp.variant.contains("exceeds"),
+        "impossible context must still reject, got {:?}",
+        resp.variant
+    );
+    assert!(resp.output.is_none());
     let snap = srv.shutdown();
-    assert_eq!(snap.rejected, 1, "only the decode step was rejected");
+    assert_eq!(snap.rejected, 2, "width never rejects; model and context still do");
 }
 
 #[test]
@@ -215,6 +225,113 @@ fn over_target_prefill_serves_bit_identical_sharded_outputs() {
     assert!(snap.ring_steps >= 2 && snap.gathered_kv_rows > 0);
     assert_eq!(snap.ttft_sharded.count, 1, "sharded prefill lands in its TTFT class");
     assert_eq!(snap.ttft_prefill.count, 0);
+}
+
+#[test]
+fn over_target_decode_serves_bit_identical_sharded_outputs() {
+    use star::kvcache::{SessionConfig, SessionStore};
+
+    // End to end through admission: one decode session whose chunks
+    // straddle the batch target. Over-target chunks ride the
+    // partitioned-cache sharded decode engine
+    // (ShardedPipeline::decode_step_pooled), under-target steps the
+    // batched native path — and the served stream must equal an offline
+    // single-core run bit for bit regardless of which path each step
+    // took (the engine's parity contract). Admission stays monotone as
+    // the cached context grows: nothing is rejected until a step claims
+    // a context beyond every bucket.
+    let (s, d) = (512usize, 16usize);
+    let pipeline = PipelineConfig::star().with_keep(0.3).with_tile(8).with_threads(1);
+    let router = Router::new(vec![Variant {
+        name: "attn_native".into(),
+        model: "tiny".into(),
+        max_t: 128,
+        s,
+    }]);
+    let store = SessionStore::new(SessionConfig::for_pipeline(&pipeline, d, 0));
+    let srv = Server::start(
+        router,
+        Backend::native_with_sessions(pipeline, BTreeMap::new(), store).with_shards(2),
+        ServerConfig { batcher: BatcherConfig { target_t: 16, max_wait_s: 1e-3 }, workers: 2 },
+    );
+
+    let n = 74usize; // 48 (sharded) + 6×1 (batched) + 20 (sharded)
+    let mut rng = Rng::new(23);
+    let q = Mat::randn(n, d, 1.0, &mut rng);
+    let k = Mat::randn(n, d, 1.0, &mut rng);
+    let v = Mat::randn(n, d, 1.0, &mut rng);
+    let sub = |m: &Mat, lo: usize, hi: usize| Mat::from_fn(hi - lo, d, |i, j| m.at(lo + i, j));
+
+    let mut served = Mat::zeros(n, d);
+    let mut id = 0u64;
+    let mut step = |lo: usize, hi: usize, served: &mut Mat| {
+        id += 1;
+        let rx = srv
+            .submit(Request::decode(
+                id,
+                "tiny",
+                11,
+                sub(&q, lo, hi),
+                sub(&k, lo, hi),
+                sub(&v, lo, hi),
+                hi,
+                0.0,
+            ))
+            .unwrap();
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.variant, "attn_native", "decode chunk [{lo},{hi}) must serve");
+        let out = resp.output.expect("decode output");
+        assert_eq!((out.rows, out.cols), (hi - lo, d));
+        for i in 0..(hi - lo) {
+            served.row_mut(lo + i).copy_from_slice(out.row(i));
+        }
+    };
+    step(0, 48, &mut served); // t = 48 > 16 → Admission::Sharded
+    for p in 48..54 {
+        step(p, p + 1, &mut served); // t = 1 → batched decode
+    }
+    step(54, n, &mut served); // t = 20 > 16 → sharded again
+
+    // The session grew from 0 to 74 cached rows without a rejection. A
+    // step *claiming* a context beyond every bucket is refused at
+    // admission — before touching the session.
+    let bad =
+        Request::decode(99, "tiny", 11, sub(&q, 0, 1), sub(&k, 0, 1), sub(&v, 0, 1), 9999, 0.0);
+    let rx = srv.submit(bad).unwrap();
+    let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+    assert!(
+        resp.variant.starts_with("rejected") && resp.variant.contains("exceeds"),
+        "claimed context over every bucket must reject, got {:?}",
+        resp.variant
+    );
+    assert!(resp.output.is_none());
+
+    // Served outputs must equal an offline single-core run over the same
+    // token stream, bit for bit — both sharded and batched steps
+    // (PipelineConfig is Copy; `pipeline` is the exact server config).
+    let mut offline_store = SessionStore::new(SessionConfig::for_pipeline(&pipeline, d, 0));
+    let offline = SparseAttentionPipeline::new(pipeline)
+        .prefill(&mut offline_store, 1, &q, &k, &v)
+        .unwrap();
+    assert_eq!(
+        served.max_abs_diff(&offline.out),
+        0.0,
+        "mixed sharded/batched served decode != offline single-core decode"
+    );
+
+    let snap = srv.shutdown();
+    assert_eq!(snap.requests, 8, "all eight decode steps served");
+    assert_eq!(snap.rejected, 1, "only the impossible-context claim rejected");
+    assert_eq!(snap.failed, 0);
+    assert_eq!(snap.sharded_decodes, 2, "the two over-target chunks ran sharded");
+    assert_eq!(snap.decode_steps, 8, "sharded decode steps count as decode steps too");
+    assert_eq!(snap.decode_tokens, n as u64, "the rejected claim appended nothing");
+    assert_eq!(snap.sharded_prefills, 0);
+    assert_eq!(snap.ring_steps, 2, "one candidate-scatter round per sharded step at 2 workers");
+    assert!(snap.ring_payload_bytes > 0 && snap.gathered_kv_rows > 0);
+    assert_eq!(snap.shard_stage_s.len(), 2, "per-shard timings recorded");
+    assert_eq!(snap.tpot_decode.count, 8, "every decode step records TPOT, sharded included");
+    assert_eq!(snap.ttft_sharded.count, 0, "sharded decode is TPOT, not sharded TTFT");
 }
 
 #[test]
@@ -318,6 +435,50 @@ fn decode_sessions_serve_through_continuous_batching() {
         "every decode response (incl. the failed step) records a TPOT sample"
     );
     assert_eq!(snap.ttft_prefill.count, 7, "the interleaved stateless prefills record TTFT");
+}
+
+/// AOT PJRT artifacts have static shapes, so neither sharded path can
+/// execute there — the server must refuse explicitly (with a
+/// request-kind-specific message) rather than truncate query rows or
+/// corrupt a session. The refusal happens at dispatch, before any
+/// engine loads, so the bogus artifact dir is never touched.
+#[cfg(feature = "pjrt")]
+#[test]
+fn pjrt_backend_refuses_sharded_decode_explicitly() {
+    let router = Router::new(vec![Variant {
+        name: "attn_pjrt".into(),
+        model: "tiny".into(),
+        max_t: 128,
+        s: 512,
+    }]);
+    let backend = Backend::Pjrt {
+        artifact_dir: std::path::PathBuf::from("/nonexistent-artifacts"),
+        contexts: BTreeMap::new(),
+    };
+    let srv = Server::start(
+        router,
+        backend,
+        ServerConfig { batcher: BatcherConfig { target_t: 16, max_wait_s: 1e-3 }, workers: 1 },
+    );
+    let d = 8;
+    let (q, k, v) = (Mat::zeros(48, d), Mat::zeros(48, d), Mat::zeros(48, d));
+    let rx = srv.submit(Request::decode(1, "tiny", 3, q, k, v, 48, 0.0)).unwrap();
+    let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+    assert!(
+        resp.variant.contains("sharded decode is not supported on the PJRT backend"),
+        "expected the explicit decode refusal, got {:?}",
+        resp.variant
+    );
+    assert!(resp.output.is_none());
+    let rx = srv.submit(Request::new(2, "tiny", 48, 256, 0.0)).unwrap();
+    let resp = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+    assert!(
+        resp.variant.contains("sharded prefill is not supported on the PJRT backend"),
+        "expected the explicit prefill refusal, got {:?}",
+        resp.variant
+    );
+    let snap = srv.shutdown();
+    assert_eq!(snap.failed, 2, "both refusals surface as counted failures, not silence");
 }
 
 #[test]

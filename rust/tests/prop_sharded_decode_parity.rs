@@ -1,0 +1,321 @@
+//! Property: distributed decode never changes the math.
+//!
+//! [`star::pipeline::ShardedPipeline::decode_step`] partitions a
+//! session's cached pages across N workers (shards propose candidates
+//! from their key ranges, the row's home worker merges and runs the
+//! unchanged single-core gather + formal core) and must be
+//! **bit-identical** to [`star::pipeline::SparseAttentionPipeline::decode_step`]
+//! on a twin session — outputs, selections, stall counts, positions —
+//! at every shard count, for chunkings that straddle KV page
+//! boundaries, across LRU eviction and re-materialization mid-session,
+//! and for every top-k engine. This binary installs the counting
+//! allocator, so the zero-allocation claim on the warm sharded hot
+//! path is a real measurement, not a vacuous one.
+//!
+//! Kernel-path coverage: the pipeline dispatches on
+//! [`star::arith::KernelPath::active`], fixed by the `simd` feature —
+//! CI runs this test in both feature legs, so the Scalar and Lanes
+//! spellings are each proven against the same contract
+//! (`kernel_path_leg_matches_feature_and_keeps_parity` pins the
+//! dispatch so a leg cannot silently test the wrong spelling).
+
+#[global_allocator]
+static ALLOC: star::util::allocmeter::CountingAllocator =
+    star::util::allocmeter::CountingAllocator;
+
+use star::arith::KernelPath;
+use star::kvcache::{SessionConfig, SessionStore};
+use star::obs::TrafficCounter;
+use star::pipeline::{PipelineConfig, ShardedPipeline, SparseAttentionPipeline, WorkspacePool};
+use star::sim::pipeline::{PredictKind, TopkKind};
+use star::tensor::Mat;
+use star::util::{allocmeter, Rng};
+
+/// The acceptance bar's shard counts, including ones that split SADS
+/// segment ranges unevenly.
+const SHARD_COUNTS: [usize; 5] = [1, 2, 3, 5, 8];
+
+fn toks(n: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+    let mut rng = Rng::new(seed);
+    (
+        Mat::randn(n, d, 1.0, &mut rng),
+        Mat::randn(n, d, 1.0, &mut rng),
+        Mat::randn(n, d, 1.0, &mut rng),
+    )
+}
+
+fn sub(m: &Mat, lo: usize, hi: usize) -> Mat {
+    Mat::from_fn(hi - lo, m.cols, |i, j| m.at(lo + i, j))
+}
+
+fn store_for(cfg: &PipelineConfig, d: usize, capacity_pages: usize) -> SessionStore {
+    SessionStore::new(SessionConfig::for_pipeline(cfg, d, capacity_pages))
+}
+
+/// Feed the same chunk through both pipelines' twin sessions and assert
+/// the full bit-identity contract on the pair of reports.
+fn step_both(
+    sharded: &ShardedPipeline,
+    single: &SparseAttentionPipeline,
+    st_s: &mut SessionStore,
+    st_r: &mut SessionStore,
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    tag: &str,
+) -> (star::pipeline::ShardedDecodeReport, star::pipeline::DecodeReport) {
+    let rs = sharded.decode_step(st_s, 1, q, k, v).expect("sharded decode step");
+    let rr = single.decode_step(st_r, 1, q, k, v).expect("single-core decode step");
+    assert_eq!(rs.positions, rr.positions, "{tag}: position drift");
+    assert_eq!(rs.selection, rr.selection, "{tag}: selection drift");
+    assert_eq!(
+        rs.out.max_abs_diff(&rr.out),
+        0.0,
+        "{tag}: output drift (max abs diff {})",
+        rs.out.max_abs_diff(&rr.out)
+    );
+    assert_eq!(rs.stalls, rr.stalls, "{tag}: SU-FA stall drift");
+    assert_eq!(rs.union_rows, rr.union_rows, "{tag}: union-row drift");
+    assert_eq!(rs.keep_last, rr.keep_last, "{tag}: keep drift");
+    (rs, rr)
+}
+
+#[test]
+fn sharded_decode_bit_identical_across_shard_counts_and_chunkings() {
+    let (n, d) = (48usize, 16usize);
+    let (q, k, v) = toks(n, d, 11);
+    // tile 8 ⇒ KV page size 8; the mixed chunking is chosen so chunks
+    // straddle page boundaries (5|9 crosses the first boundary inside
+    // one chunk, 11 spans two boundaries, …).
+    let cfg = PipelineConfig::star().with_keep(0.25).with_tile(8).with_threads(1);
+    let per_token = vec![1usize; n];
+    let chunkings: [&[usize]; 3] = [&[48], &[5, 9, 3, 7, 11, 2, 6, 5], &per_token[..]];
+    for &w in &SHARD_COUNTS {
+        let single = SparseAttentionPipeline::new(cfg);
+        let sharded = ShardedPipeline::new(cfg, w);
+        for (ci, chunks) in chunkings.iter().enumerate() {
+            assert_eq!(chunks.iter().sum::<usize>(), n);
+            let (mut st_s, mut st_r) = (store_for(&cfg, d, 0), store_for(&cfg, d, 0));
+            let mut at = 0usize;
+            for &c in chunks.iter() {
+                let tag = format!("shards={w} chunking={ci} at={at}+{c}");
+                let (rs, rr) = step_both(
+                    &sharded,
+                    &single,
+                    &mut st_s,
+                    &mut st_r,
+                    &sub(&q, at, at + c),
+                    &sub(&k, at, at + c),
+                    &sub(&v, at, at + c),
+                    &tag,
+                );
+                // SADS sharding is comparison-exact: per-stage op
+                // counters match the single core, not just the outputs.
+                assert_eq!(rs.ops.predict, rr.ops.predict, "{tag}: predict ops");
+                assert_eq!(rs.ops.topk, rr.ops.topk, "{tag}: topk ops");
+                assert_eq!(rs.ops.kv_gen, rr.ops.kv_gen, "{tag}: kv_gen ops");
+                assert_eq!(rs.ops.formal, rr.ops.formal, "{tag}: formal ops");
+                assert_eq!(
+                    rs.rho_mean.to_bits(),
+                    rr.rho_mean.to_bits(),
+                    "{tag}: rho drift ({} vs {})",
+                    rs.rho_mean,
+                    rr.rho_mean
+                );
+                at += c;
+            }
+        }
+    }
+}
+
+#[test]
+fn every_topk_engine_matches_across_shard_counts() {
+    // The distributed merge has one arm per engine family: SADS
+    // (segment-winner lists), Vanilla/Threshold (exact candidate
+    // merge), and None (the home selects everything; shards are idle).
+    // Op counters are asserted only for SADS (above): the exact
+    // engines' partial top-k passes legitimately count differently.
+    let (n, d) = (36usize, 16usize);
+    let (q, k, v) = toks(n, d, 23);
+    let engines: Vec<(&str, PipelineConfig)> = vec![
+        (
+            "vanilla_lowbit",
+            PipelineConfig {
+                predict: PredictKind::LowBitMul,
+                topk: TopkKind::Vanilla,
+                ..PipelineConfig::star().with_keep(0.3)
+            },
+        ),
+        (
+            "threshold",
+            PipelineConfig { topk: TopkKind::Threshold, ..PipelineConfig::star().with_keep(0.2) },
+        ),
+        (
+            "oracle_vanilla",
+            PipelineConfig {
+                predict: PredictKind::None,
+                topk: TopkKind::Vanilla,
+                ..PipelineConfig::star().with_keep(0.25)
+            },
+        ),
+        ("dense_oracle", PipelineConfig::dense_oracle()),
+    ];
+    for (label, cfg) in engines {
+        let cfg = cfg.with_tile(8).with_threads(1);
+        let single = SparseAttentionPipeline::new(cfg);
+        for w in [1usize, 3, 8] {
+            let sharded = ShardedPipeline::new(cfg, w);
+            for (ci, chunks) in [vec![4usize, 5, 9, 18], vec![1; n]].iter().enumerate() {
+                let (mut st_s, mut st_r) = (store_for(&cfg, d, 0), store_for(&cfg, d, 0));
+                let mut at = 0usize;
+                for &c in chunks {
+                    let tag = format!("{label} shards={w} chunking={ci} at={at}+{c}");
+                    step_both(
+                        &sharded,
+                        &single,
+                        &mut st_s,
+                        &mut st_r,
+                        &sub(&q, at, at + c),
+                        &sub(&k, at, at + c),
+                        &sub(&v, at, at + c),
+                        &tag,
+                    );
+                    at += c;
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn eviction_and_rematerialization_mid_session_preserve_parity() {
+    // Two sessions ping-pong through capacity-bounded twin stores that
+    // cannot hold both (40 tokens / page 8 = 5 pages per session,
+    // capacity 6 < 10): every switch evicts the other session, every
+    // step after an eviction re-materializes pages from history. The
+    // sharded path must replay the identical eviction schedule AND the
+    // identical math.
+    let (n, d) = (40usize, 8usize);
+    let (qa, ka, va) = toks(n, d, 5);
+    let (qb, kb, vb) = toks(n, d, 6);
+    let cfg = PipelineConfig::star().with_keep(0.3).with_tile(8).with_threads(1);
+    let single = SparseAttentionPipeline::new(cfg);
+    let sharded = ShardedPipeline::new(cfg, 3);
+    let (mut st_s, mut st_r) = (store_for(&cfg, d, 6), store_for(&cfg, d, 6));
+    let chunk = 4usize;
+    let mut remat_seen = 0usize;
+    for start in (0..n).step_by(chunk) {
+        let end = start + chunk;
+        for (sid, (q, k, v)) in [(1u64, (&qa, &ka, &va)), (2, (&qb, &kb, &vb))] {
+            let tag = format!("session {sid} at {start}..{end}");
+            let (qc, kc, vc) = (sub(q, start, end), sub(k, start, end), sub(v, start, end));
+            let rs = sharded.decode_step(&mut st_s, sid, &qc, &kc, &vc).expect("sharded step");
+            let rr = single.decode_step(&mut st_r, sid, &qc, &kc, &vc).expect("single-core step");
+            assert_eq!(rs.selection, rr.selection, "{tag}: selection drift");
+            assert_eq!(rs.out.max_abs_diff(&rr.out), 0.0, "{tag}: output drift");
+            assert_eq!(rs.stalls, rr.stalls, "{tag}: stall drift");
+            // The cache side-effects replay identically too.
+            assert_eq!(rs.evicted_sessions, rr.evicted_sessions, "{tag}: eviction drift");
+            assert_eq!(
+                rs.rematerialized_pages, rr.rematerialized_pages,
+                "{tag}: re-materialization drift"
+            );
+            assert_eq!(rs.page_hits, rr.page_hits, "{tag}: page-hit drift");
+            remat_seen += rs.rematerialized_pages;
+        }
+    }
+    let stats = st_s.stats();
+    assert!(stats.sessions_evicted > 0, "the pool was sized to force eviction");
+    assert!(stats.pages_rematerialized > 0 && remat_seen > 0, "evicted sessions were rebuilt");
+}
+
+#[test]
+fn warm_sharded_decode_hot_path_allocates_nothing() {
+    assert!(allocmeter::installed(), "this binary installs the counting allocator");
+    let (n, d) = (64usize, 16usize);
+    let (q, k, v) = toks(n, d, 31);
+    let cfg = PipelineConfig::star().with_keep(0.25).with_tile(8).with_threads(1);
+    let sharded = ShardedPipeline::new(cfg, 3);
+    let pool = WorkspacePool::new();
+    let mut store = store_for(&cfg, d, 0);
+    // The prefill chunk warms every worker's pooled workspace.
+    let warm = sharded
+        .decode_step_pooled(&mut store, 1, &sub(&q, 0, 32), &sub(&k, 0, 32), &sub(&v, 0, 32), &pool)
+        .expect("warming prefill");
+    assert!(warm.workspace_bytes > 0, "workers ran inside pooled workspaces");
+    for pos in 32..n {
+        let r = sharded
+            .decode_step_pooled(
+                &mut store,
+                1,
+                &sub(&q, pos, pos + 1),
+                &sub(&k, pos, pos + 1),
+                &sub(&v, pos, pos + 1),
+                &pool,
+            )
+            .expect("warm decode step");
+        assert_eq!(
+            r.hot_path_allocs, 0,
+            "warm sharded decode step at pos {pos} allocated on the heap"
+        );
+    }
+}
+
+#[test]
+fn traffic_totals_match_single_core_except_candidate_scatter() {
+    // Byte-for-byte traffic parity: with counting on, the sharded
+    // decode's summed counters equal the single core's in every field
+    // except `ring_payload_bytes` — the candidate scatter is the one
+    // genuinely new data movement (shards' scored spans partition the
+    // single core's [0, limit) span; the gather/formal charges come
+    // from the shared core).
+    star::obs::traffic::set_enabled(true);
+    let (n, d) = (40usize, 16usize);
+    let (q, k, v) = toks(n, d, 41);
+    let cfg = PipelineConfig::star().with_keep(0.25).with_tile(8).with_threads(1);
+    let single = SparseAttentionPipeline::new(cfg);
+    let sharded = ShardedPipeline::new(cfg, 4);
+    let (mut st_s, mut st_r) = (store_for(&cfg, d, 0), store_for(&cfg, d, 0));
+    let (mut total_s, mut total_r) = (TrafficCounter::new(), TrafficCounter::new());
+    for pos in 0..n {
+        let (sq, sk, sv) =
+            (sub(&q, pos, pos + 1), sub(&k, pos, pos + 1), sub(&v, pos, pos + 1));
+        let rs = sharded.decode_step(&mut st_s, 1, &sq, &sk, &sv).expect("sharded step");
+        let rr = single.decode_step(&mut st_r, 1, &sq, &sk, &sv).expect("single step");
+        total_s.merge(&rs.traffic);
+        total_r.merge(&rr.traffic);
+    }
+    star::obs::traffic::set_enabled(false);
+    assert!(total_s.ring_payload_bytes > 0, "4-way decode scattered no candidates");
+    assert_eq!(total_r.ring_payload_bytes, 0, "single core has no scatter");
+    let mut s_adj = total_s;
+    s_adj.ring_payload_bytes = 0;
+    assert_eq!(s_adj, total_r, "traffic drift beyond the candidate scatter");
+}
+
+#[test]
+fn kernel_path_leg_matches_feature_and_keeps_parity() {
+    // Pin the dispatch so the default leg really tests Scalar and the
+    // `--features simd` leg really tests Lanes, then re-check parity
+    // under whichever spelling is active.
+    assert_eq!(KernelPath::active() == KernelPath::Lanes, cfg!(feature = "simd"));
+    let (n, d) = (32usize, 16usize);
+    let (q, k, v) = toks(n, d, 53);
+    let cfg = PipelineConfig::star().with_keep(0.3).with_tile(8).with_threads(1);
+    let single = SparseAttentionPipeline::new(cfg);
+    let sharded = ShardedPipeline::new(cfg, 5);
+    let (mut st_s, mut st_r) = (store_for(&cfg, d, 0), store_for(&cfg, d, 0));
+    for pos in 0..n {
+        let tag = format!("{:?} pos={pos}", KernelPath::active());
+        step_both(
+            &sharded,
+            &single,
+            &mut st_s,
+            &mut st_r,
+            &sub(&q, pos, pos + 1),
+            &sub(&k, pos, pos + 1),
+            &sub(&v, pos, pos + 1),
+            &tag,
+        );
+    }
+}

@@ -1,0 +1,327 @@
+//! Unit + property tests for the cross-shard online-softmax combine
+//! ([`star::attention::SoftmaxPartial`]) in isolation — the
+//! tolerance-mode distributed formal kernel that `star bench decode`
+//! measures (the bit-exact serving path gathers instead; DESIGN.md §12).
+//!
+//! The contracts:
+//! * a **single whole-row partition** finalizes bit-identically to the
+//!   SU-FA accumulator under [`star::attention::UpdateOrder::Ascend`]
+//!   given the same visit order, on both kernel paths and both dot
+//!   reductions;
+//! * the fixed pairwise merge tree is **deterministic**: independent of
+//!   when each shard's partial was computed or arrived;
+//! * degenerate shards behave: empty selections are the combine
+//!   identity (bitwise), all-empty rows finalize to zeros, single-key
+//!   partitions are exact;
+//! * **randomly partitioned rows** agree with the unsharded reduction
+//!   to f32 rescale precision.
+
+use star::arith::{KernelPath, OpCounter, ReductionOrder};
+use star::attention::{
+    merge_partials_tree, softmax_partial_into_with, sufa_attention_rows_into_with, AttnInputs,
+    SoftmaxPartial, SufaParams, SufaScratch, UpdateOrder,
+};
+use star::tensor::Mat;
+use star::util::Rng;
+
+const PATHS: [KernelPath; 2] = [KernelPath::Scalar, KernelPath::Lanes];
+const REDS: [ReductionOrder; 2] = [ReductionOrder::Strict, ReductionOrder::Lanes];
+
+fn mats(t: usize, s: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+    let mut rng = Rng::new(seed);
+    (
+        Mat::randn(t, d, 1.0, &mut rng),
+        Mat::randn(s, d, 1.0, &mut rng),
+        Mat::randn(s, d, 1.0, &mut rng),
+    )
+}
+
+/// Random per-row key subsets in random visit order (the top-k stage
+/// emits score order; any fixed order is a valid contract input).
+fn random_rows(t: usize, s: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    (0..t)
+        .map(|_| {
+            let n = rng.range(1, s + 1);
+            let mut keys = rng.sample_indices(s, n);
+            rng.shuffle(&mut keys);
+            keys
+        })
+        .collect()
+}
+
+/// Accumulate one partial over `keys` and finalize it into a fresh row.
+fn run_partition(
+    q: &[f32],
+    k: &Mat,
+    v: &Mat,
+    keys: &[usize],
+    scale: f32,
+    bc: usize,
+    red: ReductionOrder,
+    path: KernelPath,
+) -> (SoftmaxPartial, Vec<f32>) {
+    let mut c = OpCounter::new();
+    let mut part = SoftmaxPartial::empty(q.len());
+    softmax_partial_into_with(q, k, v, keys, scale, bc, red, &mut c, &mut part, path);
+    let mut out = vec![0.0f32; q.len()];
+    part.finalize_into_with(&mut c, &mut out, path);
+    (part, out)
+}
+
+#[test]
+fn single_partition_finalizes_bit_identically_to_ascend_sufa() {
+    let (t, s, d) = (7usize, 64usize, 16usize);
+    let (q, k, v) = mats(t, s, d, 1);
+    let inp = AttnInputs::new(&q, &k, &v);
+    let mut rng = Rng::new(2);
+    let rows = random_rows(t, s, &mut rng);
+    for path in PATHS {
+        for red in REDS {
+            for bc in [5usize, 16] {
+                let p = SufaParams { bc, order: UpdateOrder::Ascend, reduction: red };
+                let mut c = OpCounter::new();
+                let mut scratch = SufaScratch::default();
+                let mut want = Mat::zeros(t, d);
+                sufa_attention_rows_into_with(
+                    &inp,
+                    &rows,
+                    &p,
+                    &mut c,
+                    &mut scratch,
+                    &mut want,
+                    path,
+                );
+                for (i, keys) in rows.iter().enumerate() {
+                    // Ascend consumes its list back-to-front; a single
+                    // whole-row partition fed the reversed list replays
+                    // the identical float sequence.
+                    let rev: Vec<usize> = keys.iter().rev().copied().collect();
+                    let (_, got) =
+                        run_partition(q.row(i), &k, &v, &rev, inp.scale, bc, red, path);
+                    assert_eq!(
+                        got.as_slice(),
+                        want.row(i),
+                        "path={path:?} red={red:?} bc={bc} row={i}: single partition \
+                         drifted from Ascend SU-FA"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn merge_is_deterministic_across_computation_and_arrival_order() {
+    let (s, d) = (80usize, 24usize);
+    let (q, k, v) = mats(1, s, d, 3);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut rng = Rng::new(4);
+    let mut keys = rng.sample_indices(s, 61);
+    rng.shuffle(&mut keys);
+    for w in [2usize, 3, 5, 8] {
+        let chunk = |j: usize| &keys[j * keys.len() / w..(j + 1) * keys.len() / w];
+        let build = |order: &[usize]| {
+            // Compute the shards' partials in an arbitrary order but
+            // slot them by partition index — exactly what the home
+            // worker does with out-of-order arrivals.
+            let mut parts: Vec<SoftmaxPartial> =
+                (0..w).map(|_| SoftmaxPartial::empty(d)).collect();
+            let mut c = OpCounter::new();
+            for &j in order {
+                softmax_partial_into_with(
+                    q.row(0),
+                    &k,
+                    &v,
+                    chunk(j),
+                    scale,
+                    7,
+                    ReductionOrder::Strict,
+                    &mut c,
+                    &mut parts[j],
+                    KernelPath::Scalar,
+                );
+            }
+            let merged = merge_partials_tree(&mut parts, &mut c);
+            let mut out = vec![0.0f32; d];
+            merged.finalize_into(&mut c, &mut out);
+            (merged.m().to_bits(), merged.l().to_bits(), out)
+        };
+        let in_order: Vec<usize> = (0..w).collect();
+        let a = build(&in_order);
+        let mut shuffled = in_order.clone();
+        rng.shuffle(&mut shuffled);
+        let b = build(&shuffled);
+        assert_eq!(a.0, b.0, "w={w}: max bits drift across arrival order");
+        assert_eq!(a.1, b.1, "w={w}: denominator bits drift across arrival order");
+        assert_eq!(a.2, b.2, "w={w}: output bits drift across arrival order");
+    }
+}
+
+#[test]
+fn degenerate_partitions_behave() {
+    let (s, d) = (40usize, 8usize);
+    let (q, k, v) = mats(1, s, d, 5);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut c = OpCounter::new();
+
+    // Empty ⊕ empty stays empty; an all-empty row finalizes to zeros
+    // (the l == 0 guard, not a 0/0 NaN).
+    let mut a = SoftmaxPartial::empty(d);
+    a.combine(&SoftmaxPartial::empty(d), &mut c);
+    assert_eq!(a.m(), f32::NEG_INFINITY);
+    assert_eq!(a.l(), 0.0);
+    let mut out = vec![1.0f32; d];
+    a.finalize_into(&mut c, &mut out);
+    assert!(out.iter().all(|&x| x == 0.0), "empty row must finalize to zeros");
+
+    // Empty shards are the combine identity, bitwise, from either side.
+    let keys: Vec<usize> = (0..17).collect();
+    let (real, real_out) = run_partition(
+        q.row(0),
+        &k,
+        &v,
+        &keys,
+        scale,
+        7,
+        ReductionOrder::Strict,
+        KernelPath::Scalar,
+    );
+    for (label, order) in [("empty-right", [1usize, 0]), ("empty-left", [0, 1])] {
+        let mut acc = SoftmaxPartial::empty(d);
+        for &which in &order {
+            let other = if which == 0 {
+                let (p, _) = run_partition(
+                    q.row(0),
+                    &k,
+                    &v,
+                    &keys,
+                    scale,
+                    7,
+                    ReductionOrder::Strict,
+                    KernelPath::Scalar,
+                );
+                p
+            } else {
+                SoftmaxPartial::empty(d)
+            };
+            acc.combine(&other, &mut c);
+        }
+        assert_eq!(acc.m().to_bits(), real.m().to_bits(), "{label}: max drift");
+        assert_eq!(acc.l().to_bits(), real.l().to_bits(), "{label}: denominator drift");
+        let mut got = vec![0.0f32; d];
+        acc.finalize_into(&mut c, &mut got);
+        assert_eq!(got, real_out, "{label}: identity combine changed the row");
+    }
+
+    // An empty chunk inserted into the merge tree does not perturb the
+    // result (the tree pairs it away as an identity).
+    let chunks: [&[usize]; 2] = [&keys[..9], &keys[9..]];
+    let two: Vec<SoftmaxPartial> = chunks
+        .iter()
+        .map(|ch| {
+            let red = ReductionOrder::Strict;
+            run_partition(q.row(0), &k, &v, ch, scale, 7, red, KernelPath::Scalar).0
+        })
+        .collect();
+    let mut with_empty = vec![two[0].clone(), SoftmaxPartial::empty(d), two[1].clone()];
+    let mut without = two;
+    let m1 = merge_partials_tree(&mut without, &mut c);
+    let mut out1 = vec![0.0f32; d];
+    m1.finalize_into(&mut c, &mut out1);
+    let m2 = merge_partials_tree(&mut with_empty, &mut c);
+    let mut out2 = vec![0.0f32; d];
+    m2.finalize_into(&mut c, &mut out2);
+    assert_eq!(out1, out2, "an empty shard perturbed the merge");
+
+    // A single-key partition is the exact softmax of one key: out = V row.
+    let (_, single) = run_partition(
+        q.row(0),
+        &k,
+        &v,
+        &[13],
+        scale,
+        7,
+        ReductionOrder::Strict,
+        KernelPath::Scalar,
+    );
+    assert_eq!(single.as_slice(), v.row(13), "single-key softmax must return its V row");
+
+    // A single-row "matrix" round-trips through the SU-FA comparison.
+    let one_key_rows = vec![vec![13usize]];
+    let inp = AttnInputs::new(&q, &k, &v);
+    let mut want = Mat::zeros(1, d);
+    let p = SufaParams { bc: 7, order: UpdateOrder::Ascend, reduction: ReductionOrder::Strict };
+    sufa_attention_rows_into_with(
+        &inp,
+        &one_key_rows,
+        &p,
+        &mut c,
+        &mut SufaScratch::default(),
+        &mut want,
+        KernelPath::Scalar,
+    );
+    assert_eq!(single.as_slice(), want.row(0));
+}
+
+#[test]
+fn random_partitions_match_the_monolithic_reduction() {
+    let (t, s, d) = (6usize, 96usize, 16usize);
+    let (q, k, v) = mats(t, s, d, 7);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut rng = Rng::new(8);
+    let rows = random_rows(t, s, &mut rng);
+    for (i, keys) in rows.iter().enumerate() {
+        let (_, exact) = run_partition(
+            q.row(i),
+            &k,
+            &v,
+            keys,
+            scale,
+            7,
+            ReductionOrder::Strict,
+            KernelPath::Scalar,
+        );
+        for w in [1usize, 2, 3, 5, 8] {
+            // Random (non-contiguous) assignment of each key to a shard,
+            // preserving each shard's relative visit order.
+            let mut chunks: Vec<Vec<usize>> = vec![Vec::new(); w];
+            for &key in keys {
+                chunks[rng.below(w)].push(key);
+            }
+            let mut parts: Vec<SoftmaxPartial> = chunks
+                .iter()
+                .map(|ch| {
+                    run_partition(
+                        q.row(i),
+                        &k,
+                        &v,
+                        ch,
+                        scale,
+                        7,
+                        ReductionOrder::Strict,
+                        KernelPath::Scalar,
+                    )
+                    .0
+                })
+                .collect();
+            let mut c = OpCounter::new();
+            let merged = merge_partials_tree(&mut parts, &mut c);
+            let mut got = vec![0.0f32; d];
+            merged.finalize_into(&mut c, &mut got);
+            if w == 1 {
+                // One partition is the monolithic reduction, bitwise.
+                assert_eq!(got, exact, "row {i}: w=1 must be exact");
+            } else {
+                let dev = got
+                    .iter()
+                    .zip(&exact)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(
+                    dev <= 5e-5,
+                    "row {i} w={w}: combine deviation {dev} beyond f32 rescale precision"
+                );
+            }
+        }
+    }
+}
