@@ -15,7 +15,7 @@
 use super::{f, header, row};
 use crate::arith::{OpCounter, ReductionOrder};
 use crate::attention::{merge_partials_tree, softmax_partial_into, SoftmaxPartial};
-use crate::kvcache::{CacheStats, SessionConfig, SessionStore};
+use crate::kvcache::{CacheStats, ResidencyMode, ResidencySnapshot, SessionConfig, SessionStore};
 use crate::obs::{HistSummary, Histogram};
 use crate::pipeline::{
     PipelineConfig, ShardedPipeline, SparseAttentionPipeline, StageOps, WorkspacePool,
@@ -73,6 +73,86 @@ pub struct DecodeBenchResult {
     pub workspace_bytes: usize,
     /// Sharded-decode scaling sweep, one row per [`SHARD_COUNTS`] entry.
     pub sharded: Vec<ShardedDecodeRow>,
+    /// Cache-pressure sweep: the shared-prefix multi-session workload
+    /// replayed at each pool capacity in [`PRESSURE_POOL_PAGES`]
+    /// (0 = unbounded), page-granular eviction and re-materialization
+    /// churning under the tight pools.
+    pub pressure: Vec<CachePressureRow>,
+    /// Prefix sharing on vs off on the identical workload at the fixed
+    /// tight pool — the measured capacity gain of copy-on-write sharing.
+    pub sharing: Vec<PrefixSharingRow>,
+    /// Exact vs quantized-only residency on one session (unbounded
+    /// pool): resident footprint, output deviation, selection parity.
+    pub residency: Vec<ResidencyModeRow>,
+}
+
+/// Pool capacities (pages) the cache-pressure sweep visits; 0 means
+/// unbounded. The workload needs 10 physical pages with sharing (16
+/// logical), so 8 and 6 force page-granular eviction churn.
+pub const PRESSURE_POOL_PAGES: [usize; 3] = [0, 8, 6];
+
+/// One pool capacity of the cache-pressure sweep: 4 sessions share a
+/// 40-token prefix (2.5 pages of 16) and decode 24 distinct tokens each
+/// round-robin, so every round touches every session under pressure.
+#[derive(Clone, Debug)]
+pub struct CachePressureRow {
+    /// Pool capacity in pages (0 = unbounded).
+    pub capacity_pages: usize,
+    /// Decoded tokens per second of summed per-step wall time.
+    pub tokens_per_s: f64,
+    /// Page references dropped by eviction across the run.
+    pub pages_evicted: u64,
+    /// Pages rebuilt from host history after eviction.
+    pub pages_rematerialized: u64,
+    /// Prefix share-attaches across the run.
+    pub pages_shared: u64,
+    /// Copy-on-write splits on divergence inside shared pages.
+    pub cow_splits: u64,
+    /// Physical pages resident at the end of the run.
+    pub resident_pages: usize,
+    /// Resident payload bytes per logical token at the end of the run.
+    pub resident_bytes_per_token: f64,
+    /// Heap allocations metered inside the decode stage cores (zero
+    /// even under eviction churn: re-materialization runs outside the
+    /// metered hot path).
+    pub hot_path_allocs: u64,
+}
+
+/// Prefix sharing on vs off on the pressure workload at a fixed tight
+/// pool (8 pages): sharing keeps the common prompt on refcounted pages,
+/// so the same pool absorbs the same sessions with less eviction churn.
+#[derive(Clone, Debug)]
+pub struct PrefixSharingRow {
+    /// Whether copy-on-write prefix sharing was enabled.
+    pub sharing: bool,
+    /// Physical pages resident at the end of the run.
+    pub resident_pages: usize,
+    /// Prefix share-attaches (0 with sharing off).
+    pub pages_shared: u64,
+    /// Copy-on-write splits (0 with sharing off).
+    pub cow_splits: u64,
+    /// Page references dropped by eviction across the run.
+    pub pages_evicted: u64,
+    /// Pages rebuilt from host history after eviction.
+    pub pages_rematerialized: u64,
+}
+
+/// One residency mode of the Exact-vs-QuantizedOnly comparison on an
+/// identical single-session decode (unbounded pool).
+#[derive(Clone, Debug)]
+pub struct ResidencyModeRow {
+    /// `"exact"` or `"quantized_only"`.
+    pub mode: &'static str,
+    /// Resident payload bytes per logical token at the end of the run.
+    pub resident_bytes_per_token: f64,
+    /// Max |output − exact-mode output| over every decode step (0.0 for
+    /// the exact row by definition; small and bounded by the per-row
+    /// dequant scale for quantized-only).
+    pub max_abs_diff_vs_exact: f64,
+    /// Whether every step selected exactly the keys the exact-mode run
+    /// selected (the quantized operands are bit-identical across modes,
+    /// so this must hold).
+    pub selection_match: bool,
 }
 
 /// Worker counts the sharded-decode scaling sweep visits.
@@ -180,6 +260,9 @@ pub fn decode_throughput() -> DecodeBenchResult {
     let re = pipe.prefill(&mut re_store, 1, &q, &k, &v).expect("re-prefill baseline");
 
     let sharded = sharded_scaling(cfg, d, &q, &k, &v);
+    let pressure = cache_pressure_sweep(&cfg);
+    let sharing = prefix_sharing_comparison(&cfg);
+    let residency = residency_mode_comparison(&cfg);
 
     let wall_summary = step_wall.summary(1e-9);
     let result = DecodeBenchResult {
@@ -205,6 +288,9 @@ pub fn decode_throughput() -> DecodeBenchResult {
         alloc_counter_on: allocmeter::installed(),
         workspace_bytes,
         sharded,
+        pressure,
+        sharing,
+        residency,
     };
 
     header("decode throughput (paged KV-cache, STAR config)");
@@ -274,7 +360,246 @@ pub fn decode_throughput() -> DecodeBenchResult {
             ],
         );
     }
+    header(&format!(
+        "cache pressure ({PRESSURE_SESSIONS} sessions, shared {PRESSURE_PREFIX}-token prefix, \
+         page={PRESSURE_PAGE})"
+    ));
+    for p in &result.pressure {
+        let pool = if p.capacity_pages == 0 {
+            "pool=unbounded".to_string()
+        } else {
+            format!("pool={}pg", p.capacity_pages)
+        };
+        row(
+            &pool,
+            &[
+                format!("{:.0} tok/s", p.tokens_per_s),
+                format!("evicted={}", p.pages_evicted),
+                format!("remat={}", p.pages_rematerialized),
+                format!("resident={}pg", p.resident_pages),
+                format!("bytes/tok={:.0}", p.resident_bytes_per_token),
+                // Same CI-grepped spelling as the sharded rows: eviction
+                // churn must not re-introduce hot-path allocations.
+                format!("hot_path_allocs: {}", p.hot_path_allocs),
+            ],
+        );
+    }
+    header("prefix sharing (pool=8 pages, same workload)");
+    for s in &result.sharing {
+        row(
+            &format!("sharing={}", if s.sharing { "on" } else { "off" }),
+            &[
+                // The exact spelling the CI smoke greps for.
+                format!("pages_shared={}", s.pages_shared),
+                format!("cow_splits={}", s.cow_splits),
+                format!("evicted={}", s.pages_evicted),
+                format!("remat={}", s.pages_rematerialized),
+                format!("resident={}pg", s.resident_pages),
+            ],
+        );
+    }
+    header("residency modes (one session, unbounded pool)");
+    for m in &result.residency {
+        row(
+            m.mode,
+            &[
+                format!("bytes/tok={:.0}", m.resident_bytes_per_token),
+                format!("max|Δ|={:.2e}", m.max_abs_diff_vs_exact),
+                format!("selection_match={}", m.selection_match),
+            ],
+        );
+    }
     result
+}
+
+/// End state of one shared-prefix pressure run.
+struct PressureRun {
+    wall_s: f64,
+    hot_path_allocs: u64,
+    stats: CacheStats,
+    residency: ResidencySnapshot,
+}
+
+/// Pressure-workload parameters: sessions × (prefix + rounds) tokens of
+/// head dim [`PRESSURE_D`], paged at [`PRESSURE_PAGE`] tokens. The
+/// 40-token prefix ends mid-page (2.5 pages of 16), so the first
+/// divergent continuation exercises the copy-on-write split path, not
+/// just boundary attaches.
+const PRESSURE_SESSIONS: usize = 4;
+const PRESSURE_PREFIX: usize = 40;
+const PRESSURE_ROUNDS: usize = 24;
+const PRESSURE_D: usize = 32;
+const PRESSURE_PAGE: usize = 16;
+
+/// Drive the shared-prefix multi-session workload once: every session
+/// opens with the identical prefix chunk, then the sessions decode one
+/// distinct token per round, round-robin — the adversarial access
+/// pattern for whole-session LRU (every session is always about to be
+/// touched again). Only the decode rounds are timed.
+fn shared_prefix_run(
+    cfg: &PipelineConfig,
+    capacity_pages: usize,
+    sharing: bool,
+    mode: ResidencyMode,
+) -> PressureRun {
+    let d = PRESSURE_D;
+    // `for_pipeline` draws the page size from the pipeline's query tile;
+    // the sweep's page math assumes 16-token pages.
+    assert_eq!(cfg.tile_t, PRESSURE_PAGE, "pressure sweep sized for 16-token pages");
+    let pipe = SparseAttentionPipeline::new(*cfg);
+    let pool = WorkspacePool::new();
+    let scfg = SessionConfig::for_pipeline(cfg, d, capacity_pages)
+        .with_prefix_sharing(sharing)
+        .with_residency(mode);
+    let mut store = SessionStore::new(scfg);
+    let mut rng = Rng::new(77);
+    let pq = Mat::randn(PRESSURE_PREFIX, d, 1.0, &mut rng);
+    let pk = Mat::randn(PRESSURE_PREFIX, d, 1.0, &mut rng);
+    let pv = Mat::randn(PRESSURE_PREFIX, d, 1.0, &mut rng);
+    // Distinct per-session, per-round continuation rows (3 mats per
+    // step: q, k, v), drawn from one big pool at disjoint offsets.
+    let cont = Mat::randn(PRESSURE_SESSIONS * PRESSURE_ROUNDS * 3, d, 1.0, &mut rng);
+    let one = |at: usize| Mat::from_fn(1, d, |_, j| cont.at(at, j));
+    for sid in 1..=PRESSURE_SESSIONS as u64 {
+        pipe.decode_step_pooled(&mut store, sid, &pq, &pk, &pv, &pool).expect("pressure prefix");
+    }
+    let (mut wall, mut hot) = (0.0f64, 0u64);
+    for round in 0..PRESSURE_ROUNDS {
+        for s in 0..PRESSURE_SESSIONS {
+            let at = (round * PRESSURE_SESSIONS + s) * 3;
+            let r = pipe
+                .decode_step_pooled(
+                    &mut store,
+                    s as u64 + 1,
+                    &one(at),
+                    &one(at + 1),
+                    &one(at + 2),
+                    &pool,
+                )
+                .expect("pressure decode step");
+            wall += r.wall_s;
+            hot += r.hot_path_allocs;
+        }
+    }
+    PressureRun {
+        wall_s: wall,
+        hot_path_allocs: hot,
+        stats: store.stats(),
+        residency: store.residency(),
+    }
+}
+
+/// The cache-pressure sweep: the shared-prefix workload at each pool
+/// capacity in [`PRESSURE_POOL_PAGES`], sharing on, exact residency.
+fn cache_pressure_sweep(cfg: &PipelineConfig) -> Vec<CachePressureRow> {
+    let decoded = (PRESSURE_SESSIONS * PRESSURE_ROUNDS) as f64;
+    PRESSURE_POOL_PAGES
+        .iter()
+        .map(|&cap| {
+            let r = shared_prefix_run(cfg, cap, true, ResidencyMode::Exact);
+            CachePressureRow {
+                capacity_pages: cap,
+                tokens_per_s: decoded / r.wall_s.max(1e-12),
+                pages_evicted: r.stats.pages_evicted,
+                pages_rematerialized: r.stats.pages_rematerialized,
+                pages_shared: r.stats.pages_shared,
+                cow_splits: r.stats.cow_splits,
+                resident_pages: r.residency.resident_pages,
+                resident_bytes_per_token: r.residency.resident_bytes as f64
+                    / r.residency.logical_tokens.max(1) as f64,
+                hot_path_allocs: r.hot_path_allocs,
+            }
+        })
+        .collect()
+}
+
+/// Prefix sharing on vs off on the identical workload at the fixed
+/// 8-page pool (the workload needs 10 physical pages with sharing, 16
+/// without, so both legs evict — sharing just evicts less).
+fn prefix_sharing_comparison(cfg: &PipelineConfig) -> Vec<PrefixSharingRow> {
+    [true, false]
+        .iter()
+        .map(|&sharing| {
+            let r = shared_prefix_run(cfg, 8, sharing, ResidencyMode::Exact);
+            PrefixSharingRow {
+                sharing,
+                resident_pages: r.residency.resident_pages,
+                pages_shared: r.stats.pages_shared,
+                cow_splits: r.stats.cow_splits,
+                pages_evicted: r.stats.pages_evicted,
+                pages_rematerialized: r.stats.pages_rematerialized,
+            }
+        })
+        .collect()
+}
+
+/// Exact vs quantized-only residency on one identical decode session
+/// (unbounded pool): per-step output deviation against the exact run,
+/// selection parity, and the resident footprint per logical token.
+fn residency_mode_comparison(cfg: &PipelineConfig) -> Vec<ResidencyModeRow> {
+    let d = PRESSURE_D;
+    let (prefill, decode) = (64usize, 24usize);
+    let total = prefill + decode;
+    let mut rng = Rng::new(4242);
+    let q = Mat::randn(total, d, 1.0, &mut rng);
+    let k = Mat::randn(total, d, 1.0, &mut rng);
+    let v = Mat::randn(total, d, 1.0, &mut rng);
+    let slice = |m: &Mat, lo: usize, hi: usize| Mat::from_fn(hi - lo, d, |i, j| m.at(lo + i, j));
+    let pipe = SparseAttentionPipeline::new(*cfg);
+    let run = |mode: ResidencyMode| {
+        let pool = WorkspacePool::new();
+        let scfg = SessionConfig::for_pipeline(cfg, d, 0).with_residency(mode);
+        let mut store = SessionStore::new(scfg);
+        pipe.decode_step_pooled(
+            &mut store,
+            1,
+            &slice(&q, 0, prefill),
+            &slice(&k, 0, prefill),
+            &slice(&v, 0, prefill),
+            &pool,
+        )
+        .expect("residency prefill");
+        let mut outs = Vec::new();
+        let mut sels = Vec::new();
+        for pos in prefill..total {
+            let r = pipe
+                .decode_step_pooled(
+                    &mut store,
+                    1,
+                    &slice(&q, pos, pos + 1),
+                    &slice(&k, pos, pos + 1),
+                    &slice(&v, pos, pos + 1),
+                    &pool,
+                )
+                .expect("residency decode step");
+            outs.push(r.out);
+            sels.push(r.selection);
+        }
+        let res = store.residency();
+        let rbpt = res.resident_bytes as f64 / res.logical_tokens.max(1) as f64;
+        (outs, sels, rbpt)
+    };
+    let (exact_outs, exact_sels, exact_rbpt) = run(ResidencyMode::Exact);
+    let (quant_outs, quant_sels, quant_rbpt) = run(ResidencyMode::QuantizedOnly);
+    let max_abs = exact_outs
+        .iter()
+        .zip(&quant_outs)
+        .map(|(a, b)| a.max_abs_diff(b) as f64)
+        .fold(0.0, f64::max);
+    vec![
+        ResidencyModeRow {
+            mode: "exact",
+            resident_bytes_per_token: exact_rbpt,
+            max_abs_diff_vs_exact: 0.0,
+            selection_match: true,
+        },
+        ResidencyModeRow {
+            mode: "quantized_only",
+            resident_bytes_per_token: quant_rbpt,
+            max_abs_diff_vs_exact: max_abs,
+            selection_match: exact_sels == quant_sels,
+        },
+    ]
 }
 
 /// Replay a short session through [`ShardedPipeline::decode_step`] at
@@ -454,6 +779,85 @@ mod tests {
             r.sharded[0].combine_max_dev, 0.0,
             "a single partition is the exact reduction"
         );
+
+        // Cache-pressure sweep: the unbounded row never evicts but
+        // shares the prefix; the bounded rows churn pages — and none of
+        // them may allocate inside the metered decode cores
+        // (re-materialization runs outside the hot path).
+        assert_eq!(r.pressure.len(), PRESSURE_POOL_PAGES.len());
+        let unbounded = &r.pressure[0];
+        assert_eq!(unbounded.capacity_pages, 0);
+        assert_eq!(unbounded.pages_evicted, 0, "unbounded pool never evicts");
+        assert!(unbounded.pages_shared > 0, "prefix pages must be shared");
+        assert!(unbounded.cow_splits > 0, "mid-page divergence must split");
+        assert!(
+            unbounded.resident_pages < PRESSURE_SESSIONS * 4,
+            "sharing must keep fewer physical pages than the 16 logical ones, got {}",
+            unbounded.resident_pages
+        );
+        for p in &r.pressure[1..] {
+            assert!(p.pages_evicted > 0, "pool={} must evict", p.capacity_pages);
+            assert!(p.pages_rematerialized > 0, "pool={} must rematerialize", p.capacity_pages);
+            assert!(
+                p.resident_pages <= p.capacity_pages,
+                "pool={} overflowed to {} resident pages",
+                p.capacity_pages,
+                p.resident_pages
+            );
+        }
+        for p in &r.pressure {
+            assert_eq!(
+                p.hot_path_allocs, 0,
+                "pool={} allocated in the decode hot loop",
+                p.capacity_pages
+            );
+            assert!(p.tokens_per_s > 0.0);
+        }
+
+        // Prefix sharing on vs off at the same tight pool: sharing must
+        // measurably reduce eviction churn (the capacity gain).
+        let on = &r.sharing[0];
+        let off = &r.sharing[1];
+        assert!(on.sharing && !off.sharing);
+        assert!(on.pages_shared > 0 && on.cow_splits > 0);
+        assert_eq!(off.pages_shared, 0, "sharing off must never attach");
+        assert_eq!(off.cow_splits, 0, "sharing off must never split");
+        assert!(
+            on.pages_evicted < off.pages_evicted,
+            "sharing must evict less at the same pool: on={} off={}",
+            on.pages_evicted,
+            off.pages_evicted
+        );
+        assert!(
+            on.pages_rematerialized < off.pages_rematerialized,
+            "sharing must rematerialize less: on={} off={}",
+            on.pages_rematerialized,
+            off.pages_rematerialized
+        );
+
+        // Residency modes: quantized-only drops the resident footprint
+        // ≥3× while selecting exactly the same keys; the exact row is
+        // the bit-exact default.
+        assert_eq!(r.residency.len(), 2);
+        let exact = &r.residency[0];
+        let quant = &r.residency[1];
+        assert_eq!(exact.mode, "exact");
+        assert_eq!(quant.mode, "quantized_only");
+        assert_eq!(exact.max_abs_diff_vs_exact, 0.0);
+        assert!(quant.selection_match, "quantized residency changed the selection");
+        let ratio = exact.resident_bytes_per_token / quant.resident_bytes_per_token;
+        assert!(
+            ratio >= 3.0,
+            "quantized-only must shrink resident bytes/token ≥3×, got {ratio:.2}× \
+             (exact {:.0}, quantized {:.0})",
+            exact.resident_bytes_per_token,
+            quant.resident_bytes_per_token
+        );
+        assert!(
+            quant.max_abs_diff_vs_exact < 0.5,
+            "quantized-only gather deviated too far: {}",
+            quant.max_abs_diff_vs_exact
+        );
     }
 
     #[test]
@@ -474,7 +878,34 @@ mod tests {
             let s = sl.get(stage).unwrap_or_else(|| panic!("stage_latency.{stage} missing"));
             assert!(s.get("p95").is_some() && s.get("p99").is_some() && s.get("p50").is_some());
         }
-        assert!(j.get("cache").unwrap().get("page_hits").is_some());
+        let cache = j.get("cache").unwrap();
+        assert!(cache.get("page_hits").is_some());
+        // Page-granular residency counters (this PR's split of the old
+        // whole-session accounting).
+        assert!(cache.get("pages_shared").is_some());
+        assert!(cache.get("cow_splits").is_some());
+        // Cache-pressure sweep rows: one per pool capacity, allocation-
+        // free even under eviction churn.
+        let pressure = j.get("pressure").unwrap().as_arr().unwrap();
+        assert_eq!(pressure.len(), PRESSURE_POOL_PAGES.len());
+        for (p, &cap) in pressure.iter().zip(PRESSURE_POOL_PAGES.iter()) {
+            assert_eq!(p.get("capacity_pages").unwrap().as_f64(), Some(cap as f64));
+            assert_eq!(p.get("hot_path_allocs").unwrap().as_f64(), Some(0.0));
+            assert!(p.get("resident_bytes_per_token").unwrap().as_f64().unwrap() > 0.0);
+        }
+        // Prefix-sharing capacity comparison (on/off).
+        let sharing = j.get("prefix_sharing").unwrap().as_arr().unwrap();
+        assert_eq!(sharing.len(), 2);
+        assert!(sharing[0].get("pages_shared").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(sharing[1].get("pages_shared").unwrap().as_f64(), Some(0.0));
+        // Residency-mode rows + the headline compression ratio the
+        // acceptance bar reads (quantized-only ≥3× smaller).
+        let modes = j.get("residency_modes").unwrap().as_arr().unwrap();
+        assert_eq!(modes.len(), 2);
+        assert!(
+            j.get("quantized_residency_ratio").unwrap().as_f64().unwrap() >= 3.0,
+            "quantized-only residency ratio below the 3x bar"
+        );
         // Sharded scaling rows: one per SHARD_COUNTS entry, parity field
         // frozen at exactly zero.
         let sharded = j.get("sharded").unwrap().as_arr().unwrap();

@@ -368,7 +368,83 @@ pub fn run(name: &str) -> Result<()> {
                         ("sessions_evicted", n(r.cache.sessions_evicted as f64)),
                         ("pages_rematerialized", n(r.cache.pages_rematerialized as f64)),
                         ("page_hits", n(r.cache.page_hits as f64)),
+                        ("pages_shared", n(r.cache.pages_shared as f64)),
+                        ("cow_splits", n(r.cache.cow_splits as f64)),
                     ]),
+                ),
+                // Cache-pressure sweep: shared-prefix multi-session
+                // decode at each pool capacity (0 = unbounded); page-
+                // granular eviction/remat churn must stay allocation-
+                // free on the hot path.
+                (
+                    "pressure",
+                    Json::Arr(
+                        r.pressure
+                            .iter()
+                            .map(|p| {
+                                Json::obj(vec![
+                                    ("capacity_pages", n(p.capacity_pages as f64)),
+                                    ("tokens_per_s", n(p.tokens_per_s)),
+                                    ("pages_evicted", n(p.pages_evicted as f64)),
+                                    ("pages_rematerialized", n(p.pages_rematerialized as f64)),
+                                    ("pages_shared", n(p.pages_shared as f64)),
+                                    ("cow_splits", n(p.cow_splits as f64)),
+                                    ("resident_pages", n(p.resident_pages as f64)),
+                                    (
+                                        "resident_bytes_per_token",
+                                        n(p.resident_bytes_per_token),
+                                    ),
+                                    ("hot_path_allocs", n(p.hot_path_allocs as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                // Copy-on-write prefix sharing on vs off at the fixed
+                // tight pool — the measured capacity gain.
+                (
+                    "prefix_sharing",
+                    Json::Arr(
+                        r.sharing
+                            .iter()
+                            .map(|s| {
+                                Json::obj(vec![
+                                    ("sharing", Json::Bool(s.sharing)),
+                                    ("resident_pages", n(s.resident_pages as f64)),
+                                    ("pages_shared", n(s.pages_shared as f64)),
+                                    ("cow_splits", n(s.cow_splits as f64)),
+                                    ("pages_evicted", n(s.pages_evicted as f64)),
+                                    ("pages_rematerialized", n(s.pages_rematerialized as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                // Exact vs quantized-only residency on one session; the
+                // headline ratio is what the acceptance bar reads.
+                (
+                    "residency_modes",
+                    Json::Arr(
+                        r.residency
+                            .iter()
+                            .map(|m| {
+                                Json::obj(vec![
+                                    ("mode", Json::str(m.mode)),
+                                    (
+                                        "resident_bytes_per_token",
+                                        n(m.resident_bytes_per_token),
+                                    ),
+                                    ("max_abs_diff_vs_exact", n(m.max_abs_diff_vs_exact)),
+                                    ("selection_match", Json::Bool(m.selection_match)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                (
+                    "quantized_residency_ratio",
+                    n(r.residency[0].resident_bytes_per_token
+                        / r.residency[1].resident_bytes_per_token.max(1e-12)),
                 ),
             ])
         }

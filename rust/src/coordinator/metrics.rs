@@ -65,6 +65,17 @@ struct Inner {
     cache_page_hits: u64,
     cache_pages_rematerialized: u64,
     cache_sessions_evicted: u64,
+    // Page-granular cache counters: high-water of the cumulative store
+    // stats carried on each decode report (monotone even when several
+    // stores report in turn).
+    cache_pages_evicted: u64,
+    cache_pages_shared: u64,
+    cache_cow_splits: u64,
+    // Latest-wins residency gauges from the most recent decode report.
+    kv_resident_pages: u64,
+    kv_shared_pages: u64,
+    kv_resident_bytes: u64,
+    kv_logical_bytes: u64,
     // Peak per-worker tile-workspace residency (bytes) seen so far.
     workspace_bytes: usize,
     // Sequence-sharded over-target prefill path.
@@ -82,6 +93,26 @@ struct Inner {
     // `crate::obs::traffic::set_enabled`).
     traffic: TrafficCounter,
     sched: SchedStats,
+}
+
+impl Inner {
+    /// Fold one decode report's KV-cache residency view in: the
+    /// point-in-time gauges are latest-wins, the cumulative per-store
+    /// counters are folded as high-water marks so the exposition stays
+    /// monotone even when several stores report interleaved.
+    fn record_kvcache_residency(
+        &mut self,
+        residency: &crate::kvcache::ResidencySnapshot,
+        stats: &crate::kvcache::CacheStats,
+    ) {
+        self.kv_resident_pages = residency.resident_pages as u64;
+        self.kv_shared_pages = residency.shared_pages as u64;
+        self.kv_resident_bytes = residency.resident_bytes as u64;
+        self.kv_logical_bytes = residency.logical_bytes as u64;
+        self.cache_pages_evicted = self.cache_pages_evicted.max(stats.pages_evicted);
+        self.cache_pages_shared = self.cache_pages_shared.max(stats.pages_shared);
+        self.cache_cow_splits = self.cache_cow_splits.max(stats.cow_splits);
+    }
 }
 
 /// A point-in-time copy for reporting. Histogram fields are
@@ -137,8 +168,30 @@ pub struct MetricsSnapshot {
     pub cache_page_hits: u64,
     /// Pages rebuilt from history after eviction (cache misses).
     pub cache_pages_rematerialized: u64,
-    /// LRU whole-session evictions.
+    /// Sessions an eviction took from fully resident to partial (the
+    /// page-granular successor of the old whole-session eviction count).
     pub cache_sessions_evicted: u64,
+    /// Page references dropped by page-granular eviction (high-water of
+    /// the per-store cumulative counter).
+    pub cache_pages_evicted: u64,
+    /// Prefix share-attaches: sessions that mapped an existing page
+    /// instead of building their own (high-water, cumulative).
+    pub cache_pages_shared: u64,
+    /// Copy-on-write splits of shared pages on divergence (high-water,
+    /// cumulative).
+    pub cache_cow_splits: u64,
+    /// Pages resident in the pool right now, shared pages counted once
+    /// (gauge from the latest decode report).
+    pub kv_resident_pages: u64,
+    /// Resident pages currently referenced by more than one session
+    /// (gauge from the latest decode report).
+    pub kv_shared_pages: u64,
+    /// Measured heap bytes of all resident page payloads (gauge).
+    pub kv_resident_bytes: u64,
+    /// f32 K+V bytes a flat per-session cache would hold for the same
+    /// logical tokens; `kv_logical_bytes / kv_resident_bytes` is the
+    /// compression ratio sharing + quantized residency buy (gauge).
+    pub kv_logical_bytes: u64,
     /// Peak bytes of tile-workspace capacity a single pool worker held
     /// (the native pipelines' preallocated stage scratch —
     /// `crate::pipeline::engine`). Reported next to the modeled SRAM
@@ -292,6 +345,7 @@ impl Metrics {
         m.cache_page_hits += r.page_hits as u64;
         m.cache_pages_rematerialized += r.rematerialized_pages as u64;
         m.cache_sessions_evicted += r.evicted_sessions.len() as u64;
+        m.record_kvcache_residency(&r.residency, &r.cache_stats);
         m.ring_steps += r.ring_steps as u64;
         m.ring_payload_bytes += r.ring_payload_bytes;
         m.gathered_kv_rows += r.union_rows as u64;
@@ -311,6 +365,7 @@ impl Metrics {
         m.cache_page_hits += r.page_hits as u64;
         m.cache_pages_rematerialized += r.rematerialized_pages as u64;
         m.cache_sessions_evicted += r.evicted_sessions.len() as u64;
+        m.record_kvcache_residency(&r.residency, &r.cache_stats);
     }
 
     /// A point-in-time copy of every counter.
@@ -341,6 +396,13 @@ impl Metrics {
             cache_page_hits: m.cache_page_hits,
             cache_pages_rematerialized: m.cache_pages_rematerialized,
             cache_sessions_evicted: m.cache_sessions_evicted,
+            cache_pages_evicted: m.cache_pages_evicted,
+            cache_pages_shared: m.cache_pages_shared,
+            cache_cow_splits: m.cache_cow_splits,
+            kv_resident_pages: m.kv_resident_pages,
+            kv_shared_pages: m.kv_shared_pages,
+            kv_resident_bytes: m.kv_resident_bytes,
+            kv_logical_bytes: m.kv_logical_bytes,
             workspace_bytes: m.workspace_bytes,
             sharded_prefills: m.sharded_prefills,
             sharded_decodes: m.sharded_decodes,
@@ -424,6 +486,19 @@ impl MetricsSnapshot {
                 self.cache_pages_rematerialized,
                 self.cache_sessions_evicted
             ));
+            if self.kv_logical_bytes > 0 {
+                s.push_str(&format!(
+                    " pages_resident={} pages_shared={} pages_evicted={} cow_splits={} \
+                     resident={} logical={} compression={:.2}x",
+                    self.kv_resident_pages,
+                    self.kv_shared_pages,
+                    self.cache_pages_evicted,
+                    self.cache_cow_splits,
+                    crate::util::fmt_bytes(self.kv_resident_bytes as f64),
+                    crate::util::fmt_bytes(self.kv_logical_bytes as f64),
+                    self.kv_logical_bytes as f64 / self.kv_resident_bytes.max(1) as f64
+                ));
+            }
         }
         if self.traffic.total_bytes() > 0 {
             s.push_str(&format!(
@@ -498,7 +573,13 @@ impl MetricsSnapshot {
         write_value(&mut out, "star_decode_tokens_total", "tokens appended across decode steps", "counter", self.decode_tokens as f64);
         write_value(&mut out, "star_cache_page_hits_total", "resident pages read per decode step, summed", "counter", self.cache_page_hits as f64);
         write_value(&mut out, "star_cache_pages_rematerialized_total", "pages rebuilt from history after eviction", "counter", self.cache_pages_rematerialized as f64);
-        write_value(&mut out, "star_cache_sessions_evicted_total", "LRU whole-session evictions", "counter", self.cache_sessions_evicted as f64);
+        write_value(&mut out, "star_cache_sessions_evicted_total", "sessions an eviction took from fully resident to partial", "counter", self.cache_sessions_evicted as f64);
+        write_value(&mut out, "star_kvcache_resident_bytes", "measured heap bytes of resident KV pages", "gauge", self.kv_resident_bytes as f64);
+        write_value(&mut out, "star_kvcache_logical_bytes", "f32 K+V bytes a flat cache would hold for the same tokens", "gauge", self.kv_logical_bytes as f64);
+        write_value(&mut out, "star_kvcache_pages_resident_total", "pages resident in the pool, shared pages counted once", "gauge", self.kv_resident_pages as f64);
+        write_value(&mut out, "star_kvcache_pages_shared_total", "resident pages referenced by more than one session", "gauge", self.kv_shared_pages as f64);
+        write_value(&mut out, "star_kvcache_pages_evicted_total", "page references dropped by page-granular eviction", "counter", self.cache_pages_evicted as f64);
+        write_value(&mut out, "star_kvcache_cow_splits_total", "copy-on-write splits of shared pages on divergence", "counter", self.cache_cow_splits as f64);
         write_value(&mut out, "star_sharded_prefills_total", "over-target prefills served on the sharded pipeline", "counter", self.sharded_prefills as f64);
         write_value(&mut out, "star_sharded_decodes_total", "over-target decode steps served on the page-partitioned sharded pipeline", "counter", self.sharded_decodes as f64);
         write_value(&mut out, "star_ring_steps_total", "ring steps across sharded runs", "counter", self.ring_steps as f64);
@@ -637,6 +718,11 @@ mod tests {
             "star_batch_rows_count 1",
             "star_traffic_q_ingest_bytes_total",
             "star_traffic_cache_remat_bytes_total",
+            "star_kvcache_resident_bytes",
+            "star_kvcache_pages_resident_total",
+            "star_kvcache_pages_shared_total",
+            "star_kvcache_pages_evicted_total",
+            "star_kvcache_cow_splits_total",
             "star_sched_steals_total",
             "star_sched_imbalance",
             "# TYPE star_request_latency_hist_seconds histogram",
@@ -731,11 +817,18 @@ mod tests {
         assert_eq!(s.ring_steps, r.ring_steps as u64);
         assert_eq!(s.ring_payload_bytes, r.ring_payload_bytes);
         assert_eq!(s.shard_stage_s.len(), r.shards);
+        // The report carries the store's residency snapshot: 24 resident
+        // tokens → non-zero gauges and a compression figure in the render.
+        assert!(s.kv_resident_pages > 0);
+        assert!(s.kv_resident_bytes > 0);
+        assert!(s.kv_logical_bytes > 0);
         let line = s.render();
         assert!(line.contains("decodes=1"), "{line}");
         assert!(line.contains("kvcache: steps=1"), "{line}");
+        assert!(line.contains("compression="), "{line}");
         let prom = s.render_prometheus();
         assert!(prom.contains("star_sharded_decodes_total 1"), "{prom}");
+        assert!(prom.contains("star_kvcache_pages_resident_total"), "{prom}");
     }
 
     #[test]

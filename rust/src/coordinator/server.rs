@@ -929,6 +929,64 @@ mod tests {
     }
 
     #[test]
+    fn decode_serving_reports_residency_and_prefix_sharing() {
+        use crate::kvcache::{SessionConfig, SessionStore};
+        use crate::util::Rng;
+        let d = 16usize;
+        let mut rng = Rng::new(11);
+        let router = Router::new(vec![Variant {
+            name: "attn".into(),
+            model: "tiny".into(),
+            max_t: 64,
+            s: 2048,
+        }]);
+        // Tile 8 → 8-token pages, so the 8-token prompt is exactly one
+        // page (for_pipeline draws the page size from the query tile).
+        let cfg = crate::pipeline::PipelineConfig::star()
+            .with_keep(0.25)
+            .with_tile(8)
+            .with_threads(1);
+        let store = SessionStore::new(SessionConfig::for_pipeline(&cfg, d, 0));
+        let backend = Backend::native_with_sessions(cfg, BTreeMap::new(), store);
+        let server = Server::start(
+            router,
+            backend,
+            ServerConfig { batcher: BatcherConfig { target_t: 16, max_wait_s: 1e-3 }, workers: 1 },
+        );
+        // The same 8-token prompt chunk into two sessions: exactly one
+        // page each, and the second session attaches the first's page
+        // instead of building its own.
+        let q = crate::tensor::Mat::randn(8, d, 1.0, &mut rng);
+        let k = crate::tensor::Mat::randn(8, d, 1.0, &mut rng);
+        let v = crate::tensor::Mat::randn(8, d, 1.0, &mut rng);
+        for (id, sid) in [(1u64, 100u64), (2, 200)] {
+            let req =
+                Request::decode(id, "tiny", sid, q.clone(), k.clone(), v.clone(), 8, 0.0);
+            let rx = server.submit(req).unwrap();
+            let resp = rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+            assert!(resp.output.is_some(), "decode failed: {}", resp.variant);
+        }
+        let snap = server.shutdown();
+        assert_eq!(snap.decode_steps, 2);
+        assert_eq!(snap.decode_tokens, 16);
+        // Residency gauges come off the decode reports: one physical
+        // page backs both sessions' 16 logical tokens.
+        assert_eq!(snap.kv_resident_pages, 1, "identical prompts share one page");
+        assert_eq!(snap.kv_shared_pages, 1);
+        assert_eq!(snap.cache_pages_shared, 1, "second session attached, not rebuilt");
+        assert!(snap.kv_resident_bytes > 0);
+        // 16 logical tokens × 8d f32 bytes; sharing halves the physical
+        // rows behind them (Exact residency also carries the quantized
+        // operands, so resident bytes are not simply logical/2).
+        assert_eq!(snap.kv_logical_bytes, (16 * 8 * d) as u64);
+        let line = snap.render();
+        assert!(line.contains("pages_shared=1"), "{line}");
+        assert!(line.contains("compression="), "{line}");
+        let prom = snap.render_prometheus();
+        assert!(prom.contains("star_kvcache_pages_shared_total 1"), "{prom}");
+    }
+
+    #[test]
     fn captures_spans_while_tracing_enabled() {
         use crate::obs::trace::Stage;
         use crate::util::Rng;

@@ -9,9 +9,13 @@
 //!   operands) and [`PagedKvCache`], the block-granular pool with
 //!   capacity accounting. Pages are sized to the pipeline's query-tile
 //!   size so cached state composes with cross-stage tiling.
-//! * [`session`] — [`SessionStore`]: sessions keyed by id, LRU
-//!   whole-session eviction, and re-materialization from host history
-//!   after eviction.
+//! * [`session`] — [`SessionStore`]: sessions keyed by id over
+//!   refcounted page tables, **page-granular** LRU eviction (coldest
+//!   page of the coldest session), copy-on-write prefix sharing across
+//!   sessions, and page-granular re-materialization from host history
+//!   after eviction. [`ResidencyMode`] opts a store into quantized-only
+//!   residency (~4× fewer resident bytes, selection-identical, lossy at
+//!   the formal gather only).
 //! * [`predict`] — [`QueryOperand`] / [`score_row`]: incremental DLZS /
 //!   SLZS / low-bit prediction of one query row against cached page
 //!   operands, with **per-row** quantization scales on both sides.
@@ -28,6 +32,8 @@ pub mod page;
 pub mod predict;
 pub mod session;
 
-pub use page::{gather_rows, gather_rows_into, CacheStats, KvPage, PageId, PagedKvCache};
+pub use page::{
+    gather_rows, gather_rows_into, CacheStats, KvPage, PageId, PagedKvCache, ResidencyMode,
+};
 pub use predict::{score_row, score_row_into, score_row_range_into, QueryOperand};
-pub use session::{AppendOutcome, SessionConfig, SessionStore};
+pub use session::{AppendOutcome, ResidencySnapshot, SessionConfig, SessionStore};

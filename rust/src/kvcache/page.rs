@@ -1,16 +1,30 @@
-//! KV pages and the block-granular page pool.
+//! KV pages and the block-granular, refcounted page pool.
 //!
-//! A [`KvPage`] holds up to `page_size` tokens' K/V rows **plus the
+//! A [`KvPage`] holds up to `page_size` tokens' K/V state **plus the
 //! cached prediction metadata** for those keys: each K row quantized with
 //! its own per-row scale at append time (see
 //! [`crate::arith::quantize_row`]). Freezing the operand per row is what
 //! makes cached prediction bit-identical to re-running a full prefill —
 //! a row's quantization never depends on tokens appended later.
 //!
+//! Pages come in two [`ResidencyMode`]s:
+//!
+//! * [`ResidencyMode::Exact`] (the default serving path) keeps the f32
+//!   K/V rows resident next to the quantized operands. Gather reads are
+//!   bit-exact copies; decode parity holds to the bit.
+//! * [`ResidencyMode::QuantizedOnly`] drops the f32 rows: resident state
+//!   is the per-row quantized K *and* V (`i8`, valid whenever the
+//!   predict bitwidth fits 8 magnitude bits) plus their scales. Stages
+//!   1–2 read the identical integer operands, so **selection is
+//!   bit-identical across modes**; only the stage 3–4 gather dequantizes
+//!   (`k̂ = q · scale`), which is lossy and therefore opt-in.
+//!
 //! The [`PagedKvCache`] is the pool: fixed-capacity slots with a free
-//! list and capacity accounting. *Which* pages belong to which session —
-//! and who gets evicted — is the [`super::session::SessionStore`]'s job;
-//! the pool only allocates, frees and counts.
+//! list, **per-slot refcounts** (copy-on-write prefix sharing holds one
+//! reference per sharing session) and capacity accounting. *Which* pages
+//! belong to which session — and which page gets evicted — is the
+//! [`super::session::SessionStore`]'s job; the pool only allocates,
+//! retains, releases and counts.
 
 use crate::arith::{quantize_row, IntBits, LzCode};
 
@@ -18,38 +32,87 @@ use crate::arith::{quantize_row, IntBits, LzCode};
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub struct PageId(pub usize);
 
+/// What a resident page physically stores.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ResidencyMode {
+    /// f32 K/V rows resident next to the frozen quantized operands.
+    /// Gathers are bit-exact; this is the default serving path.
+    #[default]
+    Exact,
+    /// Only the per-row quantized operands (K *and* V as `i8` + scales)
+    /// stay resident; gathers dequantize on demand. ~`4d/(d+4)`× fewer
+    /// resident bytes per token, lossy at stage 3–4 only — selection
+    /// stays bit-identical because stages 1–2 already read the same
+    /// integers. Requires the predict bitwidth to fit 8 magnitude bits.
+    QuantizedOnly,
+}
+
 /// One fixed-capacity KV page plus cached predict metadata.
 #[derive(Clone, Debug)]
 pub struct KvPage {
     capacity: usize,
     d: usize,
     len: usize,
-    /// K rows, row-major `[len, d]` within a `capacity × d` budget.
+    mode: ResidencyMode,
+    /// Whether frozen LZ codes are stored (always in [`ResidencyMode::Exact`];
+    /// only for the SLZS predictor in quantized-only mode, which is the
+    /// one consumer of [`KvPage::k_codes_row`] on the decode path).
+    store_codes: bool,
+    /// K rows, row-major `[len, d]` — empty in quantized-only mode.
     k: Vec<f32>,
-    /// V rows, row-major `[len, d]`.
+    /// V rows, row-major `[len, d]` — empty in quantized-only mode.
     v: Vec<f32>,
-    /// Cached predict operands: per-row quantized K values (`[len, d]`).
+    /// Cached predict operands: per-row quantized K values (`[len, d]`)
+    /// — empty in quantized-only mode (see `qk8`).
     qk: Vec<i32>,
-    /// LZ codes of `qk` (`[len, d]`), frozen at append — read by the
-    /// SLZS scheme so decode never re-encodes cached keys.
+    /// Quantized-only resident K operands (`[len, d]`, i8).
+    qk8: Vec<i8>,
+    /// Quantized-only resident V rows (`[len, d]`, i8).
+    qv8: Vec<i8>,
+    /// LZ codes of the quantized K (`[len, d]`), frozen at append — read
+    /// by the SLZS scheme so decode never re-encodes cached keys.
     k_codes: Vec<LzCode>,
-    /// Per-row quantization scales, frozen at append.
+    /// Per-row K quantization scales, frozen at append.
     k_scales: Vec<f32>,
+    /// Per-row V quantization scales (quantized-only mode).
+    v_scales: Vec<f32>,
 }
 
 impl KvPage {
-    /// An empty page for `capacity` tokens of head dimension `d`.
+    /// An empty [`ResidencyMode::Exact`] page for `capacity` tokens of
+    /// head dimension `d`.
     pub fn new(capacity: usize, d: usize) -> KvPage {
+        KvPage::with_mode(capacity, d, ResidencyMode::Exact, true)
+    }
+
+    /// An empty page with an explicit residency mode. `store_codes`
+    /// keeps the frozen LZ codes resident (ignored — always on — in
+    /// exact mode, where the codes are part of the frozen operand set).
+    pub fn with_mode(
+        capacity: usize,
+        d: usize,
+        mode: ResidencyMode,
+        store_codes: bool,
+    ) -> KvPage {
         assert!(capacity > 0 && d > 0, "page must have positive capacity and head dim");
+        let exact = mode == ResidencyMode::Exact;
+        let store_codes = exact || store_codes;
+        let fcap = if exact { capacity * d } else { 0 };
+        let qcap = if exact { 0 } else { capacity * d };
         KvPage {
             capacity,
             d,
             len: 0,
-            k: Vec::with_capacity(capacity * d),
-            v: Vec::with_capacity(capacity * d),
-            qk: Vec::with_capacity(capacity * d),
-            k_codes: Vec::with_capacity(capacity * d),
+            mode,
+            store_codes,
+            k: Vec::with_capacity(fcap),
+            v: Vec::with_capacity(fcap),
+            qk: Vec::with_capacity(fcap),
+            qk8: Vec::with_capacity(qcap),
+            qv8: Vec::with_capacity(qcap),
+            k_codes: Vec::with_capacity(if store_codes { capacity * d } else { 0 }),
             k_scales: Vec::with_capacity(capacity),
+            v_scales: Vec::with_capacity(qcap.min(capacity)),
         }
     }
 
@@ -78,60 +141,220 @@ impl KvPage {
         self.d
     }
 
+    /// What this page keeps resident.
+    pub fn mode(&self) -> ResidencyMode {
+        self.mode
+    }
+
     /// Append one token's K/V rows and freeze its prediction metadata:
     /// the row quantized at `bits` with its own scale, plus the LZ codes
     /// of the quantized values at magnitude bitwidth `w`.
+    ///
+    /// In quantized-only mode the f32 rows are *not* kept: K and V are
+    /// each quantized per row (same scheme as the predict operand), and
+    /// `bits` must fit `i8` — enforced by the session store at
+    /// construction, debug-asserted here.
     pub fn push(&mut self, k_row: &[f32], v_row: &[f32], bits: IntBits, w: u32) {
         assert!(!self.is_full(), "push into a full page");
         assert_eq!(k_row.len(), self.d);
         assert_eq!(v_row.len(), self.d);
-        self.k.extend_from_slice(k_row);
-        self.v.extend_from_slice(v_row);
         let (q, scale) = quantize_row(k_row, bits);
-        self.k_codes.extend(q.iter().map(|&x| LzCode::encode(x, w)));
-        self.qk.extend(q);
+        if self.store_codes {
+            self.k_codes.extend(q.iter().map(|&x| LzCode::encode(x, w)));
+        }
+        match self.mode {
+            ResidencyMode::Exact => {
+                self.k.extend_from_slice(k_row);
+                self.v.extend_from_slice(v_row);
+                self.qk.extend(q);
+            }
+            ResidencyMode::QuantizedOnly => {
+                debug_assert!(
+                    q.iter().all(|&x| (-128..=127).contains(&x)),
+                    "quantized-only residency needs operands that fit i8"
+                );
+                self.qk8.extend(q.iter().map(|&x| x as i8));
+                let (qv, v_scale) = quantize_row(v_row, bits);
+                self.qv8.extend(qv.iter().map(|&x| x as i8));
+                self.v_scales.push(v_scale);
+            }
+        }
         self.k_scales.push(scale);
         self.len += 1;
     }
 
-    /// The f32 K row at in-page index `i`.
+    /// The f32 K row at in-page index `i` (exact mode only).
     pub fn k_row(&self, i: usize) -> &[f32] {
         debug_assert!(i < self.len);
+        debug_assert_eq!(self.mode, ResidencyMode::Exact, "no f32 K resident");
         &self.k[i * self.d..(i + 1) * self.d]
     }
 
-    /// The f32 V row at in-page index `i`.
+    /// The f32 V row at in-page index `i` (exact mode only).
     pub fn v_row(&self, i: usize) -> &[f32] {
         debug_assert!(i < self.len);
+        debug_assert_eq!(self.mode, ResidencyMode::Exact, "no f32 V resident");
         &self.v[i * self.d..(i + 1) * self.d]
     }
 
-    /// The cached quantized K operand of row `i`.
+    /// The cached quantized K operand of row `i` (exact mode only —
+    /// quantized-only pages store the same integers as `i8`, see
+    /// [`KvPage::qk8_row`]).
     pub fn qk_row(&self, i: usize) -> &[i32] {
         debug_assert!(i < self.len);
+        debug_assert_eq!(self.mode, ResidencyMode::Exact, "use qk8_row");
         &self.qk[i * self.d..(i + 1) * self.d]
+    }
+
+    /// The cached quantized K operand of row `i` as `i8`
+    /// (quantized-only mode). Widening to `i32` recovers exactly the
+    /// integers [`KvPage::qk_row`] would hold — scores are bit-identical
+    /// across modes.
+    pub fn qk8_row(&self, i: usize) -> &[i8] {
+        debug_assert!(i < self.len);
+        debug_assert_eq!(self.mode, ResidencyMode::QuantizedOnly, "use qk_row");
+        &self.qk8[i * self.d..(i + 1) * self.d]
     }
 
     /// The frozen LZ codes of row `i`'s quantized K operand.
     pub fn k_codes_row(&self, i: usize) -> &[LzCode] {
         debug_assert!(i < self.len);
+        debug_assert!(self.store_codes, "codes not resident on this page");
         &self.k_codes[i * self.d..(i + 1) * self.d]
     }
 
-    /// The frozen per-row quantization scale of row `i`.
+    /// The frozen per-row K quantization scale of row `i`.
     pub fn k_scale(&self, i: usize) -> f32 {
         self.k_scales[i]
     }
 
-    fn reset(&mut self, capacity: usize, d: usize) {
+    /// The frozen per-row V quantization scale of row `i`
+    /// (quantized-only mode).
+    pub fn v_scale(&self, i: usize) -> f32 {
+        debug_assert_eq!(self.mode, ResidencyMode::QuantizedOnly);
+        self.v_scales[i]
+    }
+
+    /// Copy (exact) or dequantize (quantized-only) the K row at in-page
+    /// index `i` into `dst` — the gather read. No allocation.
+    pub fn copy_k_into(&self, i: usize, dst: &mut [f32]) {
+        debug_assert!(i < self.len);
+        debug_assert_eq!(dst.len(), self.d);
+        match self.mode {
+            ResidencyMode::Exact => dst.copy_from_slice(self.k_row(i)),
+            ResidencyMode::QuantizedOnly => {
+                let scale = self.k_scales[i];
+                let q = &self.qk8[i * self.d..(i + 1) * self.d];
+                for (o, &x) in dst.iter_mut().zip(q) {
+                    *o = x as f32 * scale;
+                }
+            }
+        }
+    }
+
+    /// Copy (exact) or dequantize (quantized-only) the V row at in-page
+    /// index `i` into `dst` — the gather read. No allocation.
+    pub fn copy_v_into(&self, i: usize, dst: &mut [f32]) {
+        debug_assert!(i < self.len);
+        debug_assert_eq!(dst.len(), self.d);
+        match self.mode {
+            ResidencyMode::Exact => dst.copy_from_slice(self.v_row(i)),
+            ResidencyMode::QuantizedOnly => {
+                let scale = self.v_scales[i];
+                let q = &self.qv8[i * self.d..(i + 1) * self.d];
+                for (o, &x) in dst.iter_mut().zip(q) {
+                    *o = x as f32 * scale;
+                }
+            }
+        }
+    }
+
+    /// Whether rows `[0, rows)` of this page hold exactly the given
+    /// history slice — the content check behind prefix share-attach and
+    /// the non-divergent fast path of copy-on-write. In exact mode the
+    /// comparison is bitwise on the f32 rows; in quantized-only mode it
+    /// compares what is actually resident (re-quantizing the candidate
+    /// rows), so a "false share" can only equate rows whose resident
+    /// state — everything decode ever reads — is already identical.
+    pub fn prefix_matches(&self, rows: usize, hist_k: &[f32], hist_v: &[f32], bits: IntBits) -> bool {
+        if rows > self.len {
+            return false;
+        }
+        debug_assert_eq!(hist_k.len(), rows * self.d);
+        debug_assert_eq!(hist_v.len(), rows * self.d);
+        for i in 0..rows {
+            if !self.row_matches(i, &hist_k[i * self.d..(i + 1) * self.d], &hist_v[i * self.d..(i + 1) * self.d], bits)
+            {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// [`KvPage::prefix_matches`] for a single row.
+    pub fn row_matches(&self, i: usize, k_row: &[f32], v_row: &[f32], bits: IntBits) -> bool {
+        debug_assert!(i < self.len);
+        match self.mode {
+            ResidencyMode::Exact => self.k_row(i) == k_row && self.v_row(i) == v_row,
+            ResidencyMode::QuantizedOnly => {
+                let (qk, ks) = quantize_row(k_row, bits);
+                if ks.to_bits() != self.k_scales[i].to_bits() {
+                    return false;
+                }
+                let mine = &self.qk8[i * self.d..(i + 1) * self.d];
+                if !qk.iter().zip(mine).all(|(&a, &b)| a == b as i32) {
+                    return false;
+                }
+                let (qv, vs) = quantize_row(v_row, bits);
+                if vs.to_bits() != self.v_scales[i].to_bits() {
+                    return false;
+                }
+                let mine = &self.qv8[i * self.d..(i + 1) * self.d];
+                qv.iter().zip(mine).all(|(&a, &b)| a == b as i32)
+            }
+        }
+    }
+
+    /// Measured heap bytes this page keeps resident for its current
+    /// `len` tokens (payload vectors only; the modeled-vs-measured gap —
+    /// e.g. [`LzCode`] is 12 in-memory bytes for a ~4-bit code — is
+    /// documented in DESIGN.md §13).
+    pub fn resident_bytes(&self) -> usize {
+        self.k.len() * 4
+            + self.v.len() * 4
+            + self.qk.len() * 4
+            + self.qk8.len()
+            + self.qv8.len()
+            + self.k_codes.len() * std::mem::size_of::<LzCode>()
+            + self.k_scales.len() * 4
+            + self.v_scales.len() * 4
+    }
+
+    /// Bytes a gather read actually moves per row in this page's mode:
+    /// `8d` f32 in exact mode, `2d + 8` (two i8 operands + two scales)
+    /// in quantized-only mode. Keeps the measured traffic byte-exact
+    /// against the reconciliation gate on the default path.
+    pub fn gather_row_bytes(&self) -> usize {
+        match self.mode {
+            ResidencyMode::Exact => 8 * self.d,
+            ResidencyMode::QuantizedOnly => 2 * self.d + 8,
+        }
+    }
+
+    fn reset(&mut self, capacity: usize, d: usize, mode: ResidencyMode, store_codes: bool) {
         self.capacity = capacity;
         self.d = d;
         self.len = 0;
+        self.mode = mode;
+        self.store_codes = mode == ResidencyMode::Exact || store_codes;
         self.k.clear();
         self.v.clear();
         self.qk.clear();
+        self.qk8.clear();
+        self.qv8.clear();
         self.k_codes.clear();
         self.k_scales.clear();
+        self.v_scales.clear();
     }
 }
 
@@ -155,7 +378,8 @@ pub fn gather_rows(
 /// [`gather_rows`] writing into caller-provided staging buffers (which
 /// are [`crate::tensor::Mat::reset`] to `keys.len() × d` — no allocation
 /// once they have the capacity). This is the only cache-read gather; the
-/// allocating entry point wraps it.
+/// allocating entry point wraps it. Each page copies (exact) or
+/// dequantizes (quantized-only) per its own residency mode.
 pub fn gather_rows_into(
     pages: &[&KvPage],
     page_size: usize,
@@ -168,8 +392,8 @@ pub fn gather_rows_into(
     v.reset(keys.len(), d);
     for (i, &key) in keys.iter().enumerate() {
         let page = pages[key / page_size];
-        k.row_mut(i).copy_from_slice(page.k_row(key % page_size));
-        v.row_mut(i).copy_from_slice(page.v_row(key % page_size));
+        page.copy_k_into(key % page_size, k.row_mut(i));
+        page.copy_v_into(key % page_size, v.row_mut(i));
     }
 }
 
@@ -180,24 +404,40 @@ pub struct CacheStats {
     pub appended_tokens: u64,
     /// Pages handed out (fresh allocations and reused free slots).
     pub pages_allocated: u64,
-    /// Pages reclaimed by LRU session eviction.
+    /// Page references dropped by eviction (page-granular: one count per
+    /// page reference an eviction takes, whether or not the slot frees).
     pub pages_evicted: u64,
-    /// Whole-session evictions.
+    /// Sessions whose residency an eviction broke: counted when a
+    /// **fully resident** session loses its first page. The old
+    /// whole-session-LRU semantics are a special case (losing any page
+    /// used to mean losing them all), so readers of the per-session
+    /// counter keep working.
     pub sessions_evicted: u64,
     /// Pages rebuilt from session history after an eviction.
     pub pages_rematerialized: u64,
     /// Resident pages served to decode formal-compute reads (cache hits).
     pub page_hits: u64,
+    /// Prefix share-attaches: a session mapped an existing page instead
+    /// of building its own (each adds one refcount to a shared page).
+    pub pages_shared: u64,
+    /// Copy-on-write splits: a session diverged inside a shared page and
+    /// rebuilt a private copy of its prefix rows.
+    pub cow_splits: u64,
 }
 
-/// Block-granular page pool with capacity accounting.
+/// Block-granular, refcounted page pool with capacity accounting.
 #[derive(Clone, Debug)]
 pub struct PagedKvCache {
     page_size: usize,
     d: usize,
     /// Maximum resident pages (0 = unbounded).
     capacity_pages: usize,
+    mode: ResidencyMode,
+    store_codes: bool,
     slots: Vec<KvPage>,
+    /// Per-slot reference counts (0 = free). Prefix sharing holds one
+    /// reference per sharing session.
+    refs: Vec<u32>,
     /// Slot indices available for reuse.
     free: Vec<usize>,
     /// Lifetime counters (allocations, evictions, hits…).
@@ -205,15 +445,32 @@ pub struct PagedKvCache {
 }
 
 impl PagedKvCache {
-    /// An empty pool of `capacity_pages` pages (0 = unbounded), each
-    /// holding `page_size` tokens of head dimension `d`.
+    /// An empty [`ResidencyMode::Exact`] pool of `capacity_pages` pages
+    /// (0 = unbounded), each holding `page_size` tokens of head
+    /// dimension `d`.
     pub fn new(page_size: usize, d: usize, capacity_pages: usize) -> PagedKvCache {
+        PagedKvCache::with_mode(page_size, d, capacity_pages, ResidencyMode::Exact, true)
+    }
+
+    /// [`PagedKvCache::new`] with an explicit residency mode for the
+    /// pages it vends. `store_codes` keeps frozen LZ codes resident in
+    /// quantized-only mode (needed by the SLZS predictor only).
+    pub fn with_mode(
+        page_size: usize,
+        d: usize,
+        capacity_pages: usize,
+        mode: ResidencyMode,
+        store_codes: bool,
+    ) -> PagedKvCache {
         assert!(page_size > 0 && d > 0, "page_size and d must be positive");
         PagedKvCache {
             page_size,
             d,
             capacity_pages,
+            mode,
+            store_codes,
             slots: Vec::new(),
+            refs: Vec::new(),
             free: Vec::new(),
             stats: CacheStats::default(),
         }
@@ -229,9 +486,29 @@ impl PagedKvCache {
         self.d
     }
 
+    /// Residency mode of the pages this pool vends.
+    pub fn mode(&self) -> ResidencyMode {
+        self.mode
+    }
+
     /// Resident (allocated, not freed) pages.
     pub fn resident_pages(&self) -> usize {
         self.slots.len() - self.free.len()
+    }
+
+    /// Resident pages currently shared (refcount > 1).
+    pub fn shared_pages(&self) -> usize {
+        self.refs.iter().filter(|&&r| r > 1).count()
+    }
+
+    /// Measured heap bytes of all resident pages' payloads.
+    pub fn resident_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .zip(&self.refs)
+            .filter(|(_, &r)| r > 0)
+            .map(|(p, _)| p.resident_bytes())
+            .sum()
     }
 
     /// Maximum resident pages (0 = unbounded).
@@ -244,27 +521,49 @@ impl PagedKvCache {
         self.capacity_pages == 0 || self.resident_pages() < self.capacity_pages
     }
 
-    /// Allocate an empty page; `None` when at capacity (the caller must
-    /// evict first).
+    /// Allocate an empty page at refcount 1; `None` when at capacity
+    /// (the caller must evict first).
     pub fn alloc(&mut self) -> Option<PageId> {
         if !self.has_room() {
             return None;
         }
         self.stats.pages_allocated += 1;
         if let Some(slot) = self.free.pop() {
-            let (ps, d) = (self.page_size, self.d);
-            self.slots[slot].reset(ps, d);
+            let (ps, d, mode, sc) = (self.page_size, self.d, self.mode, self.store_codes);
+            self.slots[slot].reset(ps, d, mode, sc);
+            debug_assert_eq!(self.refs[slot], 0, "free slot {slot} still referenced");
+            self.refs[slot] = 1;
             Some(PageId(slot))
         } else {
-            self.slots.push(KvPage::new(self.page_size, self.d));
+            self.slots.push(KvPage::with_mode(self.page_size, self.d, self.mode, self.store_codes));
+            self.refs.push(1);
             Some(PageId(self.slots.len() - 1))
         }
     }
 
-    /// Return a page to the free list.
-    pub fn free_page(&mut self, id: PageId) {
-        debug_assert!(!self.free.contains(&id.0), "double free of page {}", id.0);
-        self.free.push(id.0);
+    /// Take an additional reference on a resident page (prefix sharing).
+    pub fn retain(&mut self, id: PageId) {
+        debug_assert!(self.refs[id.0] > 0, "retain of free page {}", id.0);
+        self.refs[id.0] += 1;
+    }
+
+    /// Current reference count of a slot (0 = free).
+    pub fn refcount(&self, id: PageId) -> u32 {
+        self.refs[id.0]
+    }
+
+    /// Drop one reference; returns `true` when this was the last one and
+    /// the slot went back on the free list.
+    pub fn free_page(&mut self, id: PageId) -> bool {
+        debug_assert!(self.refs[id.0] > 0, "double free of page {}", id.0);
+        self.refs[id.0] -= 1;
+        if self.refs[id.0] == 0 {
+            debug_assert!(!self.free.contains(&id.0), "double free of page {}", id.0);
+            self.free.push(id.0);
+            true
+        } else {
+            false
+        }
     }
 
     /// Read a page by id.
@@ -314,6 +613,51 @@ mod tests {
     }
 
     #[test]
+    fn quantized_page_keeps_identical_operands_and_dequantizes() {
+        let (k_row, v_row) = ([1.0f32, -2.0, 0.5, 0.25], [0.5f32, -1.0, 2.0, 0.0]);
+        let mut exact = KvPage::new(2, 4);
+        let mut quant = KvPage::with_mode(2, 4, ResidencyMode::QuantizedOnly, false);
+        exact.push(&k_row, &v_row, IntBits::Int8, 7);
+        quant.push(&k_row, &v_row, IntBits::Int8, 7);
+        // Stages 1–2 read the same integers and scale → identical scores.
+        let widened: Vec<i32> = quant.qk8_row(0).iter().map(|&x| x as i32).collect();
+        assert_eq!(widened, exact.qk_row(0));
+        assert_eq!(quant.k_scale(0).to_bits(), exact.k_scale(0).to_bits());
+        // The gather read dequantizes within one quantization step.
+        let mut kd = [0.0f32; 4];
+        let mut vd = [0.0f32; 4];
+        quant.copy_k_into(0, &mut kd);
+        quant.copy_v_into(0, &mut vd);
+        for (got, want) in kd.iter().zip(&k_row) {
+            assert!((got - want).abs() <= quant.k_scale(0), "{got} vs {want}");
+        }
+        for (got, want) in vd.iter().zip(&v_row) {
+            assert!((got - want).abs() <= quant.v_scale(0), "{got} vs {want}");
+        }
+        // And the resident footprint is the point: ≥3× smaller.
+        assert!(
+            exact.resident_bytes() >= 3 * quant.resident_bytes(),
+            "exact {} vs quantized {}",
+            exact.resident_bytes(),
+            quant.resident_bytes()
+        );
+        assert_eq!(exact.gather_row_bytes(), 8 * 4);
+        assert_eq!(quant.gather_row_bytes(), 2 * 4 + 8);
+    }
+
+    #[test]
+    fn row_matches_compares_resident_state() {
+        let mut p = KvPage::new(2, 2);
+        p.push(&[1.0, 2.0], &[3.0, 4.0], IntBits::Int8, 7);
+        assert!(p.row_matches(0, &[1.0, 2.0], &[3.0, 4.0], IntBits::Int8));
+        assert!(!p.row_matches(0, &[1.0, 2.5], &[3.0, 4.0], IntBits::Int8));
+        let mut q = KvPage::with_mode(2, 2, ResidencyMode::QuantizedOnly, false);
+        q.push(&[1.0, 2.0], &[3.0, 4.0], IntBits::Int8, 7);
+        assert!(q.row_matches(0, &[1.0, 2.0], &[3.0, 4.0], IntBits::Int8));
+        assert!(!q.row_matches(0, &[2.0, 1.0], &[3.0, 4.0], IntBits::Int8));
+    }
+
+    #[test]
     fn pool_capacity_accounting() {
         let mut pool = PagedKvCache::new(8, 4, 2);
         let a = pool.alloc().unwrap();
@@ -326,6 +670,21 @@ mod tests {
         assert_eq!(c, a, "free list reuses slots");
         assert!(pool.get(c).is_empty(), "reused page starts empty");
         assert_eq!(pool.stats.pages_allocated, 3);
+    }
+
+    #[test]
+    fn refcounts_share_and_release() {
+        let mut pool = PagedKvCache::new(4, 2, 2);
+        let a = pool.alloc().unwrap();
+        pool.retain(a);
+        assert_eq!(pool.refcount(a), 2);
+        assert_eq!(pool.shared_pages(), 1);
+        assert!(!pool.free_page(a), "first release keeps the page resident");
+        assert_eq!(pool.resident_pages(), 1);
+        assert_eq!(pool.shared_pages(), 0);
+        assert!(pool.free_page(a), "last release frees the slot");
+        assert_eq!(pool.resident_pages(), 0);
+        assert_eq!(pool.refcount(a), 0);
     }
 
     #[test]

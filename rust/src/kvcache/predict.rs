@@ -213,31 +213,58 @@ pub fn score_row_range_into(
 /// never drift.
 #[inline]
 fn score_key(qop: &QueryOperand, page: &KvPage, r: usize, attn_scale: f32) -> f32 {
+    use super::page::ResidencyMode;
     let d = qop.d();
     match qop.kind {
         PredictKind::None => {
             // Oracle scores: exact dot product, nothing charged.
-            let krow = page.k_row(r);
+            // Quantized-only pages keep no f32 K — dequantize in flight.
             let mut dot = 0.0f32;
-            for p in 0..d {
-                dot += qop.raw[p] * krow[p];
+            match page.mode() {
+                ResidencyMode::Exact => {
+                    let krow = page.k_row(r);
+                    for p in 0..d {
+                        dot += qop.raw[p] * krow[p];
+                    }
+                }
+                ResidencyMode::QuantizedOnly => {
+                    let scale = page.k_scale(r);
+                    let krow = page.qk8_row(r);
+                    for p in 0..d {
+                        dot += qop.raw[p] * (krow[p] as f32 * scale);
+                    }
+                }
             }
             dot * attn_scale
         }
         PredictKind::DlzsCross => {
             // Differential: plain quantized K, LZ-encoded Q (the
             // same operand roles as PreparedPredict's DLZS arm).
-            let krow = page.qk_row(r);
+            // Quantized-only pages store the same integers as i8:
+            // widening recovers them exactly, so scores — and therefore
+            // top-k selection — are bit-identical across modes.
             let mut acc = 0i64;
-            for p in 0..d {
-                acc += dlzs_mul(krow[p], qop.codes[p]);
+            match page.mode() {
+                ResidencyMode::Exact => {
+                    let krow = page.qk_row(r);
+                    for p in 0..d {
+                        acc += dlzs_mul(krow[p], qop.codes[p]);
+                    }
+                }
+                ResidencyMode::QuantizedOnly => {
+                    let krow = page.qk8_row(r);
+                    for p in 0..d {
+                        acc += dlzs_mul(krow[p] as i32, qop.codes[p]);
+                    }
+                }
             }
             acc as f32 * (qop.scale * page.k_scale(r)) * attn_scale
         }
         PredictKind::Slzs => {
             // Symmetric: both sides LZ-encoded. The key-side codes
             // were frozen (and their conversion charged) at append
-            // — the caching win; decode only reads them.
+            // — the caching win; decode only reads them. Quantized-only
+            // pools keep the codes resident for this scheme.
             let kcodes = page.k_codes_row(r);
             let mut acc = 0i64;
             for p in 0..d {
@@ -246,11 +273,21 @@ fn score_key(qop: &QueryOperand, page: &KvPage, r: usize, attn_scale: f32) -> f3
             acc as f32 * (qop.scale * page.k_scale(r)) * attn_scale
         }
         PredictKind::LowBitMul => {
-            let krow = page.qk_row(r);
             let msb = 4.min(qop.w);
             let mut acc = 0i64;
-            for p in 0..d {
-                acc += truncate_msb(krow[p], msb) as i64 * qop.q[p] as i64;
+            match page.mode() {
+                ResidencyMode::Exact => {
+                    let krow = page.qk_row(r);
+                    for p in 0..d {
+                        acc += truncate_msb(krow[p], msb) as i64 * qop.q[p] as i64;
+                    }
+                }
+                ResidencyMode::QuantizedOnly => {
+                    let krow = page.qk8_row(r);
+                    for p in 0..d {
+                        acc += truncate_msb(krow[p] as i32, msb) as i64 * qop.q[p] as i64;
+                    }
+                }
             }
             acc as f32 * (qop.scale * page.k_scale(r)) * attn_scale
         }
@@ -405,6 +442,51 @@ mod tests {
                     assert_eq!(got, whole, "{kind:?} limit={limit} cuts={cuts:?}");
                     assert_eq!(cp, cw, "{kind:?} limit={limit} cuts={cuts:?} op drift");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_only_pages_score_bit_identically() {
+        // The residency claim behind ResidencyMode::QuantizedOnly: the
+        // i8 operands widen back to the exact integers the exact-mode
+        // pages hold, so every predict scheme scores — and therefore
+        // selects — identically. Only the stage 3–4 gather is lossy.
+        use super::super::page::ResidencyMode;
+        let mut rng = Rng::new(23);
+        let (s, d) = (29, 16);
+        let k = Mat::randn(s, d, 1.0, &mut rng);
+        let v = Mat::randn(s, d, 1.0, &mut rng);
+        let q = Mat::randn(1, d, 1.0, &mut rng);
+        let exact_pages = pages_from(&k, &v, 8);
+        let mut quant_pages = Vec::new();
+        for i in 0..s {
+            if quant_pages.last().map(|p: &KvPage| p.is_full()).unwrap_or(true) {
+                quant_pages.push(KvPage::with_mode(8, d, ResidencyMode::QuantizedOnly, true));
+            }
+            quant_pages.last_mut().unwrap().push(k.row(i), v.row(i), IntBits::Int8, 7);
+        }
+        let er: Vec<&KvPage> = exact_pages.iter().collect();
+        let qr: Vec<&KvPage> = quant_pages.iter().collect();
+        for kind in [
+            PredictKind::None,
+            PredictKind::DlzsCross,
+            PredictKind::Slzs,
+            PredictKind::LowBitMul,
+        ] {
+            let mut c = OpCounter::new();
+            let qop = QueryOperand::encode(q.row(0), kind, 7, &mut c);
+            let se = score_row(&qop, &er, s, 0.25, &mut c);
+            let sq = score_row(&qop, &qr, s, 0.25, &mut c);
+            match kind {
+                // Oracle scoring reads f32 K, which quantized pages no
+                // longer hold exactly — close, not bit-equal.
+                PredictKind::None => {
+                    for (a, b) in se.iter().zip(&sq) {
+                        assert!((a - b).abs() < 0.5, "{kind:?}: {a} vs {b}");
+                    }
+                }
+                _ => assert_eq!(se, sq, "{kind:?} scores drift across residency modes"),
             }
         }
     }

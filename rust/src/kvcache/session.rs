@@ -1,18 +1,35 @@
-//! Sessions over the paged pool: ownership, LRU eviction and
-//! re-materialization.
+//! Sessions over the paged pool: page tables, copy-on-write prefix
+//! sharing, page-granular eviction and re-materialization.
 //!
 //! A [`SessionStore`] keys decode state by session id. Each session owns
-//! a list of pages in the shared [`PagedKvCache`] plus its **host-side
-//! token history** (the durable truth — in a real deployment the
-//! activations the KV regenerates from). Eviction is whole-session and
-//! LRU: when the pool is at capacity, the least-recently-touched *other*
-//! session loses its pages (history survives). The next decode step of
-//! an evicted session re-materializes its pages from history — charged
-//! as DRAM reload + requantization in the step's [`StageOps`] — and
-//! rebuilds **bit-identical** metadata, because page operands are
-//! quantized per row ([`crate::arith::quantize_row`]).
+//! a **page table** (`Vec<Option<PageRef>>`) over the shared, refcounted
+//! [`PagedKvCache`] plus its **host-side token history** (the durable
+//! truth — in a real deployment the activations the KV regenerates
+//! from). Three residency mechanisms compound:
+//!
+//! * **Page-granular eviction.** When the pool is at capacity the
+//!   coldest page of the least-recently-touched *other* session is
+//!   dropped (oldest-written page first — early-prefix pages are the
+//!   cold end of causal attention). Touching a long session faults back
+//!   only its missing pages, not its whole history.
+//! * **Copy-on-write prefix sharing.** Every appended row extends a
+//!   running FNV-1a chain hash over the session's K/V prefix; a registry
+//!   maps chain values to resident pages, so a session whose prefix
+//!   matches another's (system prompts, multi-turn fan-out) *attaches*
+//!   to the existing page — refcounted — instead of building a copy.
+//!   Divergence inside a shared page triggers a split: the diverging
+//!   session rebuilds its private prefix rows from history and writes
+//!   there. Chain hashes are verified against actual page content before
+//!   any attach, so a hash collision can never alias different rows.
+//! * **Re-materialization.** A missing page is rebuilt from host history
+//!   — charged as DRAM reload + requantization in the step's
+//!   [`StageOps`] — and is **bit-identical** to the original, because
+//!   page operands are quantized per row
+//!   ([`crate::arith::quantize_row`]). Rebuilds first try the share
+//!   registry: if a content-identical page is still resident (a sharing
+//!   peer kept it warm), the session re-attaches for free.
 
-use super::page::{CacheStats, KvPage, PagedKvCache, PageId};
+use super::page::{CacheStats, KvPage, PagedKvCache, PageId, ResidencyMode};
 use crate::arith::{IntBits, OpKind};
 use crate::pipeline::{PipelineConfig, StageOps};
 use crate::sim::pipeline::PredictKind;
@@ -39,6 +56,14 @@ pub struct SessionConfig {
     /// append-time conversion work is charged (SLZS pays the key-side
     /// LZ encode once per appended token; DLZS never encodes keys).
     pub predict: PredictKind,
+    /// What resident pages store: [`ResidencyMode::Exact`] (default,
+    /// bit-exact serving path) or [`ResidencyMode::QuantizedOnly`]
+    /// (opt-in, ~4× fewer resident bytes, lossy at the stage 3–4 gather
+    /// only — selection stays bit-identical).
+    pub residency: ResidencyMode,
+    /// Enable copy-on-write prefix sharing across sessions (default on;
+    /// bit-invisible to decode because attaches are content-verified).
+    pub prefix_sharing: bool,
 }
 
 impl SessionConfig {
@@ -50,6 +75,8 @@ impl SessionConfig {
             capacity_pages,
             predict_bits: 7,
             predict: PredictKind::DlzsCross,
+            residency: ResidencyMode::Exact,
+            prefix_sharing: true,
         }
     }
 
@@ -62,8 +89,31 @@ impl SessionConfig {
             capacity_pages,
             predict_bits: cfg.predict_bits,
             predict: cfg.predict,
+            residency: ResidencyMode::Exact,
+            prefix_sharing: true,
         }
     }
+
+    /// Builder: switch the resident-page layout.
+    pub fn with_residency(mut self, residency: ResidencyMode) -> SessionConfig {
+        self.residency = residency;
+        self
+    }
+
+    /// Builder: toggle copy-on-write prefix sharing.
+    pub fn with_prefix_sharing(mut self, on: bool) -> SessionConfig {
+        self.prefix_sharing = on;
+        self
+    }
+}
+
+/// One entry of a session's page table.
+#[derive(Clone, Copy, Debug)]
+struct PageRef {
+    id: PageId,
+    /// Store clock at the last write/attach into this page — the
+    /// coldness key for page-granular eviction.
+    touch: u64,
 }
 
 /// Per-session state.
@@ -74,9 +124,38 @@ struct Session {
     /// Host-side V history.
     hist_v: Vec<f32>,
     len: usize,
-    /// Resident pages in append order; empty ⇒ evicted (or brand new).
-    pages: Vec<PageId>,
+    /// Page table: entry `p` covers tokens `[p·page_size, …)`; `None` ⇒
+    /// that page is currently evicted. Length is always
+    /// `len.div_ceil(page_size)`.
+    pages: Vec<Option<PageRef>>,
+    /// FNV-1a chain hash of the K/V prefix after each row — the prefix
+    /// fingerprint the share registry is keyed by.
+    row_chains: Vec<u64>,
     last_touch: u64,
+}
+
+impl Session {
+    fn fully_resident(&self) -> bool {
+        self.len > 0 && self.pages.iter().all(|p| p.is_some())
+    }
+}
+
+const FNV_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Extend a prefix chain hash by one token's K/V rows (FNV-1a over the
+/// little-endian f32 bytes). The chain covers the *whole* prefix, so
+/// equal chains mean equal position *and* content — repeated content at
+/// different offsets never aliases.
+fn chain_row(prev: u64, k_row: &[f32], v_row: &[f32]) -> u64 {
+    let mut h = prev;
+    for &x in k_row.iter().chain(v_row) {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
 }
 
 /// What one [`SessionStore::append`] call did beyond appending.
@@ -84,14 +163,39 @@ struct Session {
 pub struct AppendOutcome {
     /// Global position of the first appended token.
     pub start: usize,
-    /// Sessions evicted to make room (LRU order).
+    /// Sessions that lost at least one page to make room (first-eviction
+    /// order, deduplicated).
     pub evicted_sessions: Vec<u64>,
-    /// Pages rebuilt from history because this session had been evicted.
+    /// Pages rebuilt from history because they had been evicted
+    /// (share-registry re-attaches are free and not counted here).
     pub rematerialized_pages: usize,
-    /// Tokens those rebuilt pages hold (the session length at
-    /// re-materialization time; 0 when nothing was rebuilt) — the exact
-    /// row count behind the re-materialization byte traffic.
+    /// Tokens those rebuilt pages hold (0 when nothing was rebuilt) —
+    /// the exact row count behind the re-materialization byte traffic,
+    /// now page-granular.
     pub rematerialized_tokens: usize,
+}
+
+/// Point-in-time residency accounting of a [`SessionStore`] — what the
+/// pool physically holds versus what the sessions logically address.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ResidencySnapshot {
+    /// Pages resident in the pool (shared pages counted once).
+    pub resident_pages: usize,
+    /// Resident pages referenced by more than one page-table entry.
+    pub shared_pages: usize,
+    /// Measured heap bytes of all resident page payloads.
+    pub resident_bytes: usize,
+    /// Tokens addressable across all sessions (each counted per session
+    /// even when physically shared).
+    pub logical_tokens: usize,
+    /// `logical_tokens × 8d` — the f32 K+V bytes a flat cache would
+    /// keep; `resident_bytes / logical_bytes` is the compression ratio
+    /// sharing + quantized residency buy.
+    pub logical_bytes: usize,
+    /// Sessions whose every page is resident.
+    pub resident_sessions: usize,
+    /// Sessions tracked (resident or not).
+    pub sessions: usize,
 }
 
 /// The paged KV-cache session store.
@@ -101,6 +205,13 @@ pub struct SessionStore {
     bits: IntBits,
     cache: PagedKvCache,
     sessions: BTreeMap<u64, Session>,
+    /// Prefix chain hash → a resident page whose rows realize that
+    /// prefix tail. First writer wins; entries are dropped when their
+    /// page slot is actually freed.
+    shared: BTreeMap<u64, PageId>,
+    /// Reverse index: page slot → chain hashes registered to it (only
+    /// hashes whose insert won), for O(rows) cleanup on free.
+    shared_rev: BTreeMap<usize, Vec<u64>>,
     clock: u64,
 }
 
@@ -108,10 +219,27 @@ impl SessionStore {
     /// An empty store over a fresh page pool.
     pub fn new(cfg: SessionConfig) -> SessionStore {
         assert!(cfg.page_size > 0 && cfg.d > 0, "page_size and d must be positive");
+        let bits = bits_for(cfg.predict_bits);
+        if cfg.residency == ResidencyMode::QuantizedOnly {
+            assert!(
+                bits.qmax() <= 127,
+                "quantized-only residency stores i8 operands: predict_bits {} needs {:?}",
+                cfg.predict_bits,
+                bits
+            );
+        }
         SessionStore {
-            bits: bits_for(cfg.predict_bits),
-            cache: PagedKvCache::new(cfg.page_size, cfg.d, cfg.capacity_pages),
+            bits,
+            cache: PagedKvCache::with_mode(
+                cfg.page_size,
+                cfg.d,
+                cfg.capacity_pages,
+                cfg.residency,
+                cfg.predict == PredictKind::Slzs,
+            ),
             sessions: BTreeMap::new(),
+            shared: BTreeMap::new(),
+            shared_rev: BTreeMap::new(),
             clock: 0,
             cfg,
         }
@@ -137,9 +265,9 @@ impl SessionStore {
         self.sessions.contains_key(&sid)
     }
 
-    /// Whether the session's pages are currently in the pool.
+    /// Whether *all* the session's pages are currently in the pool.
     pub fn is_resident(&self, sid: u64) -> bool {
-        self.sessions.get(&sid).map(|s| !s.pages.is_empty()).unwrap_or(false)
+        self.sessions.get(&sid).map(|s| s.fully_resident()).unwrap_or(false)
     }
 
     /// Sessions tracked (resident or evicted).
@@ -157,17 +285,33 @@ impl SessionStore {
         self.cache.stats
     }
 
+    /// Point-in-time residency accounting (resident vs logical bytes,
+    /// shared pages, fully resident sessions).
+    pub fn residency(&self) -> ResidencySnapshot {
+        let logical_tokens: usize = self.sessions.values().map(|s| s.len).sum();
+        ResidencySnapshot {
+            resident_pages: self.cache.resident_pages(),
+            shared_pages: self.cache.shared_pages(),
+            resident_bytes: self.cache.resident_bytes(),
+            logical_tokens,
+            logical_bytes: logical_tokens * 8 * self.cfg.d,
+            resident_sessions: self.sessions.values().filter(|s| s.fully_resident()).count(),
+            sessions: self.sessions.len(),
+        }
+    }
+
     /// Count resident pages served to a decode read (cache hits).
     pub fn record_hits(&mut self, pages: u64) {
         self.cache.stats.page_hits += pages;
     }
 
     /// Append new tokens' K/V rows to a session (creating it on first
-    /// use), re-materializing evicted pages first and evicting LRU
-    /// *other* sessions when the pool is full. Errors only when this
-    /// session alone cannot fit the pool — checked **up front**, before
-    /// any state changes, so a failed append never leaves a partial
-    /// chunk behind (a retry would otherwise duplicate context).
+    /// use), re-materializing this session's missing pages first and
+    /// evicting the coldest pages of LRU *other* sessions when the pool
+    /// is full. Errors only when this session alone cannot fit the pool
+    /// — checked **up front**, before any state changes, so a failed
+    /// append never leaves a partial chunk behind (a retry would
+    /// otherwise duplicate context).
     pub fn append(
         &mut self,
         sid: u64,
@@ -184,9 +328,13 @@ impl SessionStore {
             self.cfg.d
         );
         if self.cfg.capacity_pages > 0 {
-            // Other sessions can always be evicted, so the only hard
-            // failure is this session alone outgrowing the pool. With
-            // this pre-check, the allocation loop below cannot fail.
+            // Other sessions' pages can always be evicted, so the only
+            // hard failure is this session alone outgrowing the pool
+            // (counting every page private — sharing only relaxes this).
+            // With this pre-check, the allocation loops below cannot
+            // fail: at any alloc point this session references at most
+            // `needed − 1` distinct slots, so after evicting every other
+            // session at least one slot frees.
             let needed = (self.len(sid) + k.rows).div_ceil(self.cfg.page_size);
             anyhow::ensure!(
                 needed <= self.cfg.capacity_pages,
@@ -199,7 +347,7 @@ impl SessionStore {
         self.touch(sid);
         let mut evicted = Vec::new();
         let (rematerialized_pages, rematerialized_tokens) =
-            self.rematerialize(sid, ops, &mut evicted)?;
+            self.ensure_resident(sid, ops, &mut evicted)?;
         let start = self.sessions.get(&sid).unwrap().len;
         for i in 0..k.rows {
             self.push_row(sid, k.row(i), v.row(i), &mut evicted)?;
@@ -222,11 +370,12 @@ impl SessionStore {
         })
     }
 
-    /// Drop a finished session, returning its pages to the pool.
+    /// Drop a finished session, releasing its page references (shared
+    /// pages survive until their last sharer goes).
     pub fn remove(&mut self, sid: u64) {
         if let Some(s) = self.sessions.remove(&sid) {
-            for pid in s.pages {
-                self.cache.free_page(pid);
+            for r in s.pages.into_iter().flatten() {
+                self.release(r.id);
             }
         }
     }
@@ -238,10 +387,10 @@ impl SessionStore {
             None => Vec::new(),
             Some(s) => {
                 assert!(
-                    s.len == 0 || !s.pages.is_empty(),
-                    "session {sid} read while evicted (append re-materializes first)"
+                    s.len == 0 || s.pages.iter().all(|p| p.is_some()),
+                    "session {sid} read while partially evicted (append re-materializes first)"
                 );
-                s.pages.iter().map(|&pid| self.cache.get(pid)).collect()
+                s.pages.iter().flatten().map(|r| self.cache.get(r.id)).collect()
             }
         }
     }
@@ -258,10 +407,60 @@ impl SessionStore {
         self.sessions.entry(sid).or_default().last_touch = clock;
     }
 
-    /// Rebuild an evicted session's pages from host history, returning
-    /// (pages built, tokens they hold). Rebuilt operands are
-    /// bit-identical to the originals (per-row scales).
-    fn rematerialize(
+    /// Register a prefix chain for a page we just wrote (first writer
+    /// wins, so a chain always points at the earliest resident page
+    /// realizing that prefix).
+    fn register_chain(&mut self, chain: u64, pid: PageId) {
+        if !self.cfg.prefix_sharing {
+            return;
+        }
+        if let std::collections::btree_map::Entry::Vacant(e) = self.shared.entry(chain) {
+            e.insert(pid);
+            self.shared_rev.entry(pid.0).or_default().push(chain);
+        }
+    }
+
+    /// Release one reference; when the slot actually frees, drop its
+    /// registry entries so a reused slot can never satisfy a stale hash.
+    fn release(&mut self, pid: PageId) {
+        if self.cache.free_page(pid) {
+            if let Some(hashes) = self.shared_rev.remove(&pid.0) {
+                for h in hashes {
+                    if self.shared.get(&h) == Some(&pid) {
+                        self.shared.remove(&h);
+                    }
+                }
+            }
+        }
+    }
+
+    /// A share-registry candidate for `fill` rows starting at history
+    /// offset `lo` — content-verified, so collisions cannot alias.
+    fn share_candidate(
+        &self,
+        chains: &[u64],
+        hist_k: &[f32],
+        hist_v: &[f32],
+        lo: usize,
+        fill: usize,
+    ) -> Option<PageId> {
+        if !self.cfg.prefix_sharing || fill == 0 {
+            return None;
+        }
+        let d = self.cfg.d;
+        let pid = *self.shared.get(&chains[lo + fill - 1])?;
+        let page = self.cache.get(pid);
+        let (ks, vs) = (&hist_k[lo * d..(lo + fill) * d], &hist_v[lo * d..(lo + fill) * d]);
+        (page.len() >= fill && page.prefix_matches(fill, ks, vs, self.bits)).then_some(pid)
+    }
+
+    /// Make every page of `sid` resident: re-attach to still-resident
+    /// shared pages where the registry has a content-identical match
+    /// (free), rebuild the rest from host history (charged as DRAM
+    /// reload + requantization). Returns (pages rebuilt, tokens they
+    /// hold). Rebuilt operands are bit-identical to the originals
+    /// (per-row scales).
+    fn ensure_resident(
         &mut self,
         sid: u64,
         ops: &mut StageOps,
@@ -269,65 +468,82 @@ impl SessionStore {
     ) -> crate::Result<(usize, usize)> {
         let needs = {
             let s = self.sessions.get(&sid).unwrap();
-            s.len > 0 && s.pages.is_empty()
+            s.pages.iter().any(|p| p.is_none())
         };
         if !needs {
             return Ok((0, 0));
         }
-        // Move the history out instead of cloning it (it can be thousands
-        // of tokens), rebuild, then reinstall — including on the (defended
-        // against, see `append`'s capacity pre-check) error path.
-        let (hist_k, hist_v, len) = {
+        // Move the session's host state out instead of cloning it (it
+        // can be thousands of tokens), rebuild, then reinstall —
+        // including on the (defended against, see `append`'s capacity
+        // pre-check) error path.
+        let (hist_k, hist_v, chains, mut pages, len, touch) = {
             let s = self.sessions.get_mut(&sid).unwrap();
-            (std::mem::take(&mut s.hist_k), std::mem::take(&mut s.hist_v), s.len)
+            (
+                std::mem::take(&mut s.hist_k),
+                std::mem::take(&mut s.hist_v),
+                std::mem::take(&mut s.row_chains),
+                std::mem::take(&mut s.pages),
+                s.len,
+                s.last_touch,
+            )
         };
-        let built = self.rebuild_pages(sid, &hist_k, &hist_v, len, evicted);
+        let ps = self.cfg.page_size;
+        let d = self.cfg.d;
+        debug_assert_eq!(pages.len(), len.div_ceil(ps));
+        let mut built_pages = 0usize;
+        let mut built_tokens = 0usize;
+        let mut result = Ok(());
+        for p in 0..pages.len() {
+            if pages[p].is_some() {
+                continue;
+            }
+            let lo = p * ps;
+            let fill = (len - lo).min(ps);
+            if let Some(pid) = self.share_candidate(&chains, &hist_k, &hist_v, lo, fill) {
+                self.cache.retain(pid);
+                self.cache.stats.pages_shared += 1;
+                pages[p] = Some(PageRef { id: pid, touch });
+                continue;
+            }
+            let pid = match self.alloc_for(sid, evicted) {
+                Ok(pid) => pid,
+                Err(e) => {
+                    result = Err(e);
+                    break;
+                }
+            };
+            for i in lo..lo + fill {
+                self.cache.get_mut(pid).push(
+                    &hist_k[i * d..(i + 1) * d],
+                    &hist_v[i * d..(i + 1) * d],
+                    self.bits,
+                    self.cfg.predict_bits,
+                );
+                self.register_chain(chains[i], pid);
+            }
+            pages[p] = Some(PageRef { id: pid, touch });
+            built_pages += 1;
+            built_tokens += fill;
+        }
         let s = self.sessions.get_mut(&sid).unwrap();
         s.hist_k = hist_k;
         s.hist_v = hist_v;
-        let built = built?;
-        // Evicted KV comes back from off-chip memory and is requantized
-        // (SLZS additionally re-encodes the rebuilt key operands).
-        let d = self.cfg.d;
-        ops.kv_gen.dram((4 * 2 * len * d) as u64);
-        ops.predict.sram((2 * len * d) as u64);
-        if self.cfg.predict == PredictKind::Slzs {
-            ops.predict.tally(OpKind::LzEncode, (len * d) as u64);
-        }
-        self.cache.stats.pages_rematerialized += built as u64;
-        Ok((built, len))
-    }
-
-    /// The page-building loop of [`SessionStore::rematerialize`]: fresh
-    /// pages fill sequentially, so a page boundary is exactly `i %
-    /// page_size == 0`.
-    fn rebuild_pages(
-        &mut self,
-        sid: u64,
-        hist_k: &[f32],
-        hist_v: &[f32],
-        len: usize,
-        evicted: &mut Vec<u64>,
-    ) -> crate::Result<usize> {
-        let d = self.cfg.d;
-        let ps = self.cfg.page_size;
-        let mut built = 0usize;
-        let mut cur: Option<PageId> = None;
-        for i in 0..len {
-            if i % ps == 0 {
-                let pid = self.alloc_for(sid, evicted)?;
-                self.sessions.get_mut(&sid).unwrap().pages.push(pid);
-                cur = Some(pid);
-                built += 1;
+        s.row_chains = chains;
+        s.pages = pages;
+        result?;
+        if built_tokens > 0 {
+            // Rebuilt KV comes back from off-chip memory and is
+            // requantized (SLZS additionally re-encodes the rebuilt key
+            // operands) — charged for the rebuilt pages only.
+            ops.kv_gen.dram((4 * 2 * built_tokens * d) as u64);
+            ops.predict.sram((2 * built_tokens * d) as u64);
+            if self.cfg.predict == PredictKind::Slzs {
+                ops.predict.tally(OpKind::LzEncode, (built_tokens * d) as u64);
             }
-            self.cache.get_mut(cur.unwrap()).push(
-                &hist_k[i * d..(i + 1) * d],
-                &hist_v[i * d..(i + 1) * d],
-                self.bits,
-                self.cfg.predict_bits,
-            );
+            self.cache.stats.pages_rematerialized += built_pages as u64;
         }
-        Ok(built)
+        Ok((built_pages, built_tokens))
     }
 
     fn push_row(
@@ -337,19 +553,92 @@ impl SessionStore {
         v_row: &[f32],
         evicted: &mut Vec<u64>,
     ) -> crate::Result<()> {
-        let need_page = {
+        let ps = self.cfg.page_size;
+        let d = self.cfg.d;
+        let (len, prev_chain, touch) = {
             let s = self.sessions.get(&sid).unwrap();
-            s.pages.last().map(|&pid| self.cache.get(pid).is_full()).unwrap_or(true)
+            (s.len, s.row_chains.last().copied().unwrap_or(FNV_SEED), s.last_touch)
         };
-        if need_page {
-            let pid = self.alloc_for(sid, evicted)?;
-            self.sessions.get_mut(&sid).unwrap().pages.push(pid);
+        let chain = chain_row(prev_chain, k_row, v_row);
+        let p = len / ps;
+        let in_page = len % ps;
+        let mut write_to = None;
+        if in_page == 0 {
+            // Page boundary: attach to a content-identical shared page
+            // when the registry has one, else open a private page.
+            let candidate = (|| {
+                if !self.cfg.prefix_sharing {
+                    return None;
+                }
+                let pid = *self.shared.get(&chain)?;
+                let page = self.cache.get(pid);
+                (page.len() >= 1 && page.row_matches(0, k_row, v_row, self.bits)).then_some(pid)
+            })();
+            let r = if let Some(pid) = candidate {
+                self.cache.retain(pid);
+                self.cache.stats.pages_shared += 1;
+                PageRef { id: pid, touch }
+            } else {
+                let pid = self.alloc_for(sid, evicted)?;
+                write_to = Some(pid);
+                PageRef { id: pid, touch }
+            };
+            self.sessions.get_mut(&sid).unwrap().pages.push(Some(r));
+        } else {
+            let pid = self.sessions.get(&sid).unwrap().pages[p]
+                .expect("mid-page append into a non-resident page")
+                .id;
+            let page = self.cache.get(pid);
+            if page.len() == in_page {
+                // We are the frontier: extend in place. Valid even when
+                // shared — other sharers' reads are capped by their own
+                // lengths, so rows past their prefix are invisible.
+                write_to = Some(pid);
+            } else if page.row_matches(in_page, k_row, v_row, self.bits) {
+                // Still on the shared prefix: advance without writing.
+            } else {
+                // Divergence inside a shared page: copy-on-write split.
+                // Release our reference *first* so the capacity
+                // pre-check's guarantee holds (the old slot frees when
+                // we were the last sharer).
+                let (pk, pv, pchains) = {
+                    let s = self.sessions.get_mut(&sid).unwrap();
+                    s.pages[p] = None;
+                    let lo = p * ps;
+                    (
+                        s.hist_k[lo * d..(lo + in_page) * d].to_vec(),
+                        s.hist_v[lo * d..(lo + in_page) * d].to_vec(),
+                        s.row_chains[lo..lo + in_page].to_vec(),
+                    )
+                };
+                self.release(pid);
+                let fresh = self.alloc_for(sid, evicted)?;
+                for i in 0..in_page {
+                    self.cache.get_mut(fresh).push(
+                        &pk[i * d..(i + 1) * d],
+                        &pv[i * d..(i + 1) * d],
+                        self.bits,
+                        self.cfg.predict_bits,
+                    );
+                    self.register_chain(pchains[i], fresh);
+                }
+                self.cache.stats.cow_splits += 1;
+                self.sessions.get_mut(&sid).unwrap().pages[p] =
+                    Some(PageRef { id: fresh, touch });
+                write_to = Some(fresh);
+            }
         }
-        let pid = *self.sessions.get(&sid).unwrap().pages.last().unwrap();
-        self.cache.get_mut(pid).push(k_row, v_row, self.bits, self.cfg.predict_bits);
+        if let Some(pid) = write_to {
+            self.cache.get_mut(pid).push(k_row, v_row, self.bits, self.cfg.predict_bits);
+            self.register_chain(chain, pid);
+        }
         let s = self.sessions.get_mut(&sid).unwrap();
+        if let Some(r) = s.pages[p].as_mut() {
+            r.touch = touch;
+        }
         s.hist_k.extend_from_slice(k_row);
         s.hist_v.extend_from_slice(v_row);
+        s.row_chains.push(chain);
         s.len += 1;
         Ok(())
     }
@@ -359,8 +648,12 @@ impl SessionStore {
             if let Some(pid) = self.cache.alloc() {
                 return Ok(pid);
             }
-            match self.evict_lru_other(sid) {
-                Some(victim) => evicted.push(victim),
+            match self.evict_one_page(sid) {
+                Some(victim) => {
+                    if !evicted.contains(&victim) {
+                        evicted.push(victim);
+                    }
+                }
                 None => anyhow::bail!(
                     "kv-cache capacity ({} pages of {} tokens) exhausted by session {sid} alone",
                     self.cfg.capacity_pages,
@@ -370,19 +663,35 @@ impl SessionStore {
         }
     }
 
-    fn evict_lru_other(&mut self, keep: u64) -> Option<u64> {
+    /// Drop the coldest page of the coldest *other* session: LRU session
+    /// by `last_touch`, then (exclusively owned pages first, so a slot
+    /// actually frees) the page least recently written, oldest first.
+    /// Returns the victim session id; `None` when no other session has
+    /// resident pages. Each call drops exactly one page reference, so
+    /// the `alloc_for` loop always terminates.
+    fn evict_one_page(&mut self, keep: u64) -> Option<u64> {
         let victim = self
             .sessions
             .iter()
-            .filter(|(id, s)| **id != keep && !s.pages.is_empty())
+            .filter(|(id, s)| **id != keep && s.pages.iter().any(|p| p.is_some()))
             .min_by_key(|(_, s)| s.last_touch)
             .map(|(id, _)| *id)?;
-        let pages = std::mem::take(&mut self.sessions.get_mut(&victim).unwrap().pages);
-        self.cache.stats.pages_evicted += pages.len() as u64;
-        self.cache.stats.sessions_evicted += 1;
-        for pid in pages {
-            self.cache.free_page(pid);
+        let (idx, pid, was_fully_resident) = {
+            let s = &self.sessions[&victim];
+            let (idx, r) = s
+                .pages
+                .iter()
+                .enumerate()
+                .filter_map(|(i, p)| p.as_ref().map(|r| (i, r)))
+                .min_by_key(|(i, r)| (self.cache.refcount(r.id) > 1, r.touch, *i))?;
+            (idx, r.id, s.fully_resident())
+        };
+        self.sessions.get_mut(&victim).unwrap().pages[idx] = None;
+        self.cache.stats.pages_evicted += 1;
+        if was_fully_resident {
+            self.cache.stats.sessions_evicted += 1;
         }
+        self.release(pid);
         Some(victim)
     }
 }
@@ -430,14 +739,18 @@ mod tests {
         let (kb, vb) = toks(2, 4, 4);
         let out = st.append(2, &kb, &vb, &mut ops).unwrap();
         assert_eq!(out.evicted_sessions, vec![1], "LRU victim is session 1");
-        assert!(!st.is_resident(1));
+        assert!(!st.is_resident(1), "session 1 lost its coldest page");
         assert!(st.is_resident(2));
         assert_eq!(st.len(1), 3, "history survives eviction");
-        // Touching session 1 again re-materializes bit-identical pages
-        // (evicting session 2 in turn) and the new token extends them.
+        // Page-granular: only page 0 was needed, page 1 stayed resident.
+        assert_eq!(st.stats().pages_evicted, 1);
+        // Touching session 1 again re-materializes *only the missing
+        // page*, bit-identical (evicting session 2 in turn), and the new
+        // token extends the surviving page.
         let (k1, v1) = toks(1, 4, 5);
         let out = st.append(1, &k1, &v1, &mut ops).unwrap();
-        assert_eq!(out.rematerialized_pages, 2);
+        assert_eq!(out.rematerialized_pages, 1, "only the evicted page rebuilds");
+        assert_eq!(out.rematerialized_tokens, 2);
         assert_eq!(out.evicted_sessions, vec![2]);
         assert_eq!(st.len(1), 4);
         let pages = st.pages_of(1);
@@ -445,8 +758,8 @@ mod tests {
         assert_eq!(pages[0].qk_row(1).len(), 4);
         assert_eq!(pages[1].k_row(1), k1.row(0), "appended token lands after history");
         let stats = st.stats();
-        assert_eq!(stats.sessions_evicted, 2);
-        assert!(stats.pages_rematerialized >= 2);
+        assert_eq!(stats.sessions_evicted, 2, "both sessions broke full residency once");
+        assert!(stats.pages_rematerialized >= 1);
     }
 
     #[test]
@@ -493,5 +806,146 @@ mod tests {
         let (k2, v2) = toks(4, 4, 9);
         let out = st.append(2, &k2, &v2, &mut ops).unwrap();
         assert!(out.evicted_sessions.is_empty());
+    }
+
+    #[test]
+    fn common_prefix_shares_pages_until_divergence() {
+        // 8 tokens of shared prompt (2 full pages of 4), then each
+        // session takes its own continuation.
+        let mut st = store(4, 8, 0);
+        let mut ops = StageOps::default();
+        let (kp, vp) = toks(8, 8, 10);
+        st.append(1, &kp, &vp, &mut ops).unwrap();
+        assert_eq!(st.resident_pages(), 2);
+        st.append(2, &kp, &vp, &mut ops).unwrap();
+        assert_eq!(st.resident_pages(), 2, "identical prefix attaches, no copies");
+        assert_eq!(st.stats().pages_shared, 2);
+        let snap = st.residency();
+        assert_eq!(snap.shared_pages, 2);
+        assert_eq!(snap.logical_tokens, 16);
+        // Both sessions read the same bits back.
+        for sid in [1, 2] {
+            let (gk, gv) = st.gather(sid, &[0, 3, 7]);
+            assert_eq!(gk.row(0), kp.row(0));
+            assert_eq!(gk.row(2), kp.row(7));
+            assert_eq!(gv.row(1), vp.row(3));
+        }
+        // Divergent continuations land in private pages.
+        let (k1, v1) = toks(4, 8, 11);
+        let (k2, v2) = toks(4, 8, 12);
+        st.append(1, &k1, &v1, &mut ops).unwrap();
+        st.append(2, &k2, &v2, &mut ops).unwrap();
+        assert_eq!(st.resident_pages(), 4, "2 shared + 2 private continuation pages");
+        assert_eq!(st.gather(1, &[8]).0.row(0), k1.row(0));
+        assert_eq!(st.gather(2, &[8]).0.row(0), k2.row(0));
+        assert_eq!(st.stats().cow_splits, 0, "divergence at a page boundary needs no split");
+    }
+
+    #[test]
+    fn divergence_inside_shared_page_splits_copy_on_write() {
+        let mut st = store(4, 8, 0);
+        let mut ops = StageOps::default();
+        let (kp, vp) = toks(6, 8, 13); // 1.5 pages of shared prompt
+        st.append(1, &kp, &vp, &mut ops).unwrap();
+        st.append(2, &kp, &vp, &mut ops).unwrap();
+        assert_eq!(st.resident_pages(), 2, "partial tail page shared too");
+        // Session 2 is at the shared page's frontier: its divergent
+        // token extends the page in place (session 1's reads are capped
+        // by its own length, so the extra row is invisible to it).
+        let (k2, v2) = toks(1, 8, 14);
+        st.append(2, &k2, &v2, &mut ops).unwrap();
+        assert_eq!(st.stats().cow_splits, 0, "the frontier never splits");
+        assert_eq!(st.resident_pages(), 2);
+        assert_eq!(st.gather(1, &[5]).0.row(0), kp.row(5));
+        assert_eq!(st.gather(2, &[4]).0.row(0), kp.row(4));
+        assert_eq!(st.gather(2, &[6]).0.row(0), k2.row(0));
+        // Session 1 now appends its *own* continuation, diverging from
+        // what session 2 wrote at that slot: copy-on-write split — rows
+        // [4,6) are rebuilt into a private page and the fork lands there.
+        let (k1, v1) = toks(2, 8, 15);
+        st.append(1, &k1, &v1, &mut ops).unwrap();
+        assert_eq!(st.stats().cow_splits, 1, "the laggard splits on divergence");
+        assert_eq!(st.resident_pages(), 3);
+        assert_eq!(st.gather(1, &[4]).0.row(0), kp.row(4), "pre-fork rows copied");
+        assert_eq!(st.gather(1, &[6]).0.row(0), k1.row(0));
+        assert_eq!(st.gather(2, &[6]).0.row(0), k2.row(0), "session 2 unaffected");
+    }
+
+    #[test]
+    fn shared_pages_survive_until_last_sharer_leaves() {
+        let mut st = store(4, 8, 0);
+        let mut ops = StageOps::default();
+        let (kp, vp) = toks(4, 8, 16);
+        for sid in 1..=3 {
+            st.append(sid, &kp, &vp, &mut ops).unwrap();
+        }
+        assert_eq!(st.resident_pages(), 1, "three sessions, one physical page");
+        st.remove(1);
+        st.remove(2);
+        assert_eq!(st.resident_pages(), 1, "last sharer keeps the page");
+        assert_eq!(st.gather(3, &[0]).0.row(0), kp.row(0));
+        st.remove(3);
+        assert_eq!(st.resident_pages(), 0, "refcounts drain to an empty pool");
+        assert_eq!(st.residency().resident_bytes, 0);
+    }
+
+    #[test]
+    fn quantized_only_residency_shrinks_resident_bytes() {
+        let (k, v) = toks(32, 16, 17);
+        let mut ops = StageOps::default();
+        let mut exact = store(8, 16, 0);
+        exact.append(1, &k, &v, &mut ops).unwrap();
+        let mut quant = SessionStore::new(
+            SessionConfig::new(8, 16, 0).with_residency(ResidencyMode::QuantizedOnly),
+        );
+        quant.append(1, &k, &v, &mut ops).unwrap();
+        let (eb, qb) = (exact.residency().resident_bytes, quant.residency().resident_bytes);
+        assert!(eb >= 3 * qb, "exact {eb} vs quantized {qb}");
+        // Dequantized gathers stay within one quantization step per
+        // element; the frozen scales bound the error.
+        let (gk, gv) = quant.gather(1, &[0, 15, 31]);
+        for (i, &key) in [0usize, 15, 31].iter().enumerate() {
+            let page = &quant.pages_of(1)[key / 8];
+            let (ks, vs) = (page.k_scale(key % 8), page.v_scale(key % 8));
+            for (a, b) in gk.row(i).iter().zip(k.row(key)) {
+                assert!((a - b).abs() <= ks, "{a} vs {b}");
+            }
+            for (a, b) in gv.row(i).iter().zip(v.row(key)) {
+                assert!((a - b).abs() <= vs, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn evicted_shared_page_reattaches_from_registry() {
+        // Pool of 3: sessions 1 and 2 share one prompt page; filling the
+        // pool evicts session 1's reference, but the page itself stays
+        // resident (session 2 still holds it), so session 1's next
+        // append re-attaches for free instead of rebuilding.
+        let mut st = store(2, 4, 3);
+        let mut ops = StageOps::default();
+        let (kp, vp) = toks(2, 4, 18);
+        st.append(1, &kp, &vp, &mut ops).unwrap();
+        st.append(2, &kp, &vp, &mut ops).unwrap();
+        assert_eq!(st.resident_pages(), 1);
+        // Session 3 needs 3 pages: evicts 1's and 2's references.
+        let (k3, v3) = toks(6, 4, 19);
+        let out = st.append(3, &k3, &v3, &mut ops).unwrap();
+        assert_eq!(out.evicted_sessions, vec![1, 2]);
+        assert_eq!(st.resident_pages(), 3);
+        st.remove(3);
+        let shared_before = st.stats().pages_shared;
+        let (k1, v1) = toks(1, 4, 20);
+        let out = st.append(1, &k1, &v1, &mut ops).unwrap();
+        // The prompt page was gone for real (both refs dropped), so this
+        // rebuild is genuine…
+        assert_eq!(out.rematerialized_pages, 1);
+        // …and session 2 now re-attaches to session 1's rebuilt page.
+        let (k2, v2) = toks(1, 4, 21);
+        let out = st.append(2, &k2, &v2, &mut ops).unwrap();
+        assert_eq!(out.rematerialized_pages, 0, "registry re-attach, no rebuild");
+        assert!(st.stats().pages_shared > shared_before);
+        assert_eq!(st.gather(2, &[0]).0.row(0), kp.row(0));
+        assert_eq!(st.gather(2, &[2]).0.row(0), k2.row(0));
     }
 }

@@ -78,7 +78,9 @@ pub struct TrafficCounter {
     /// Quantized/encoded operand reads during scoring (~1 B/element;
     /// f32 reads for the oracle score path).
     pub operand_read_bytes: u64,
-    /// Gathered K/V rows staged into the workspace union buffers (f32).
+    /// Gathered K/V rows staged into the workspace union buffers: f32
+    /// reads (`8d`/row) from exact-residency pages, dequantizing i8
+    /// reads (`2d + 8`/row) from quantized-only pages.
     pub kv_gather_bytes: u64,
     /// K/V rows streamed through the formal kernel (f32, per selected
     /// key — the SU-FA operand stream).

@@ -1068,9 +1068,14 @@ impl TileExecutor<'_> {
             }
         }
         let u = ws.union.len();
-        ops.kv_gen.sram(4 * (2 * u * d) as u64); // cached KV streams from SRAM
+        ops.kv_gen.sram(4 * (2 * u * d) as u64); // staged f32 KV lands in SRAM either way
         if traffic::enabled() {
-            ws.traffic.kv_gather_bytes += 4 * (2 * u * d) as u64;
+            // What the gather *read* depends on the pages' residency
+            // mode: 8d f32 per row from exact pages (byte-identical to
+            // the pre-residency accounting), 2d+8 from quantized-only
+            // pages (the i8 operands + two scales it dequantizes).
+            let row_bytes = pages.first().map(|p| p.gather_row_bytes()).unwrap_or(8 * d);
+            ws.traffic.kv_gather_bytes += (u * row_bytes) as u64;
         }
         let t1 = Instant::now();
         timing.kv_gen_s += (t1 - t0).as_secs_f64();

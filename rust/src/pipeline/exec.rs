@@ -30,7 +30,7 @@ use super::engine::{
 use super::report::{StageOps, StageTiming};
 use crate::arith::{EquivWeights, OpCounter};
 use crate::attention::Selection;
-use crate::kvcache::{KvPage, SessionStore};
+use crate::kvcache::{CacheStats, KvPage, ResidencySnapshot, SessionStore};
 use crate::obs::traffic::{self, SchedStats, TrafficCounter};
 use crate::sim::pipeline::PredictKind;
 use crate::tensor::Mat;
@@ -336,8 +336,15 @@ pub struct DecodeReport {
     pub page_hits: usize,
     /// Pages rebuilt from history because the session had been evicted.
     pub rematerialized_pages: usize,
-    /// Sessions evicted (LRU) to make room for this step.
+    /// Sessions that lost pages (page-granular LRU) to make room for
+    /// this step.
     pub evicted_sessions: Vec<u64>,
+    /// Store-wide residency after this step: resident vs logical bytes,
+    /// shared pages, fully resident sessions.
+    pub residency: ResidencySnapshot,
+    /// Store-wide lifetime cache counters after this step (pages
+    /// evicted/rematerialized/shared, copy-on-write splits, hits).
+    pub cache_stats: CacheStats,
     /// Heap allocations metered inside the decode rows' stage cores
     /// (zero in steady state on a warm [`WorkspacePool`]; see
     /// [`super::engine`]).
@@ -536,6 +543,8 @@ impl SparseAttentionPipeline {
             page_hits,
             rematerialized_pages: outcome.rematerialized_pages,
             evicted_sessions: outcome.evicted_sessions,
+            residency: store.residency(),
+            cache_stats: store.stats(),
             hot_path_allocs,
             workspace_bytes,
             traffic: run_traffic,

@@ -78,7 +78,9 @@ use super::engine::{
 use super::exec::PipelineInputs;
 use super::report::{StageOps, StageTiming};
 use crate::attention::Selection;
-use crate::kvcache::{score_row_range_into, KvPage, QueryOperand, SessionStore};
+use crate::kvcache::{
+    score_row_range_into, CacheStats, KvPage, QueryOperand, ResidencySnapshot, SessionStore,
+};
 use crate::obs::trace::{ExecPath, Stage};
 use crate::obs::traffic::{self, SchedStats, TrafficCounter};
 use crate::sim::pipeline::TopkKind;
@@ -842,8 +844,14 @@ pub struct ShardedDecodeReport {
     pub page_hits: usize,
     /// Pages rebuilt from history because the session had been evicted.
     pub rematerialized_pages: usize,
-    /// Sessions evicted (LRU) to make room for this step.
+    /// Sessions that lost pages (page-granular LRU) to make room for
+    /// this step.
     pub evicted_sessions: Vec<u64>,
+    /// Store-wide residency after this step (see
+    /// [`super::DecodeReport::residency`]).
+    pub residency: ResidencySnapshot,
+    /// Store-wide lifetime cache counters after this step.
+    pub cache_stats: CacheStats,
     /// Effective worker count.
     pub shards: usize,
     /// Candidate-scatter rounds executed: 1 when more than one worker
@@ -1057,6 +1065,8 @@ impl ShardedPipeline {
                 page_hits: 0,
                 rematerialized_pages: outcome.rematerialized_pages,
                 evicted_sessions: outcome.evicted_sessions,
+                residency: store.residency(),
+                cache_stats: store.stats(),
                 shards: 0,
                 ring_steps: 0,
                 ring_payload_bytes: 0,
@@ -1258,6 +1268,8 @@ impl ShardedPipeline {
             page_hits,
             rematerialized_pages: outcome.rematerialized_pages,
             evicted_sessions: outcome.evicted_sessions,
+            residency: store.residency(),
+            cache_stats: store.stats(),
             shards: w,
             ring_steps: if w > 1 { 1 } else { 0 },
             ring_payload_bytes,

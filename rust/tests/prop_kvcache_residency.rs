@@ -1,0 +1,340 @@
+//! Properties of the production-residency KV-cache: page-granular
+//! eviction, copy-on-write prefix sharing and quantized-only residency
+//! (ISSUE 10 acceptance).
+//!
+//! 1. Sessions that share a prompt prefix stay **bit-identical** to
+//!    their solo unbounded runs through divergence (copy-on-write
+//!    splits) and eviction storms — sharing and page-granular
+//!    replacement are pure optimizations.
+//! 2. The PR-3 eviction/re-materialization parity property holds at
+//!    **every pool size**, not just the one the seed test picked —
+//!    page-granular eviction strictly generalizes whole-session LRU.
+//! 3. Warm decode under cache pressure meters **zero hot-path
+//!    allocations**: eviction and re-materialization run outside the
+//!    metered stage cores (this binary installs the counting
+//!    allocator, so the meter is live).
+//! 4. Refcounts never leak: dropping every session returns the pool to
+//!    empty — bytes, pages and registry all reach zero.
+//!
+//! Plus the quantized-only residency contract: selection bit-identical
+//! to the exact mode, outputs within the dequant scale, and the
+//! quantized store is bit-stable against its own unbounded run across
+//! eviction (re-quantizing the same history reproduces the same
+//! resident integers).
+
+#[global_allocator]
+static ALLOC: star::util::allocmeter::CountingAllocator =
+    star::util::allocmeter::CountingAllocator;
+
+use star::attention::Selection;
+use star::kvcache::{ResidencyMode, SessionConfig, SessionStore};
+use star::pipeline::{PipelineConfig, SparseAttentionPipeline, WorkspacePool};
+use star::tensor::Mat;
+use star::util::{allocmeter, Rng};
+
+fn toks(n: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+    let mut rng = Rng::new(seed);
+    (
+        Mat::randn(n, d, 1.0, &mut rng),
+        Mat::randn(n, d, 1.0, &mut rng),
+        Mat::randn(n, d, 1.0, &mut rng),
+    )
+}
+
+fn sub(m: &Mat, lo: usize, hi: usize) -> Mat {
+    Mat::from_fn(hi - lo, m.cols, |i, j| m.at(lo + i, j))
+}
+
+fn vcat(a: &Mat, b: &Mat) -> Mat {
+    Mat::from_fn(a.rows + b.rows, a.cols, |i, j| {
+        if i < a.rows {
+            a.at(i, j)
+        } else {
+            b.at(i - a.rows, j)
+        }
+    })
+}
+
+/// The shared-prefix fleet: `D`=8, 8-token pages (tile 8), a 20-token
+/// common prefix (2.5 pages — divergence lands mid-page, exercising the
+/// copy-on-write split, not just boundary attaches) and 20 distinct
+/// continuation tokens per session (5 pages per session total).
+const D: usize = 8;
+const PREFIX: usize = 20;
+const CONT: usize = 20;
+const SESSIONS: usize = 3;
+/// A pool that fits any one session (5 pages) but not the fleet's ~11
+/// physical pages — every round-robin cycle evicts and rebuilds.
+const STORM_POOL: usize = 7;
+
+fn fleet_cfg() -> PipelineConfig {
+    PipelineConfig::star().with_keep(0.3).with_tile(8).with_threads(1)
+}
+
+fn fleet_inputs() -> ((Mat, Mat, Mat), Vec<(Mat, Mat, Mat)>) {
+    let prefix = toks(PREFIX, D, 42);
+    let conts = (0..SESSIONS).map(|i| toks(CONT, D, 100 + i as u64)).collect();
+    (prefix, conts)
+}
+
+/// Run the fleet through one store: every session appends the identical
+/// prefix chunk, then the sessions decode `chunk`-token continuations
+/// round-robin (the adversarial pattern for whole-session LRU). Returns
+/// each session's concatenated outputs/selections plus the store.
+fn fleet_run(
+    cfg: &PipelineConfig,
+    capacity_pages: usize,
+    mode: ResidencyMode,
+    prefix: &(Mat, Mat, Mat),
+    conts: &[(Mat, Mat, Mat)],
+    chunk: usize,
+) -> (Vec<(Mat, Selection)>, SessionStore) {
+    let pipe = SparseAttentionPipeline::new(*cfg);
+    let scfg = SessionConfig::for_pipeline(cfg, D, capacity_pages).with_residency(mode);
+    let mut store = SessionStore::new(scfg);
+    let n = PREFIX + CONT;
+    let mut outs: Vec<Mat> = (0..conts.len()).map(|_| Mat::zeros(n, D)).collect();
+    let mut sels: Vec<Vec<Vec<usize>>> = vec![Vec::new(); conts.len()];
+    let (pq, pk, pv) = prefix;
+    for s in 0..conts.len() {
+        let r = pipe.decode_step(&mut store, s as u64 + 1, pq, pk, pv).expect("prefix");
+        for i in 0..PREFIX {
+            outs[s].row_mut(i).copy_from_slice(r.out.row(i));
+        }
+        sels[s].extend(r.selection.rows);
+    }
+    let mut at = 0usize;
+    while at < CONT {
+        let hi = (at + chunk).min(CONT);
+        for (s, (cq, ck, cv)) in conts.iter().enumerate() {
+            let r = pipe
+                .decode_step(
+                    &mut store,
+                    s as u64 + 1,
+                    &sub(cq, at, hi),
+                    &sub(ck, at, hi),
+                    &sub(cv, at, hi),
+                )
+                .expect("continuation step");
+            for i in 0..hi - at {
+                outs[s].row_mut(PREFIX + at + i).copy_from_slice(r.out.row(i));
+            }
+            sels[s].extend(r.selection.rows);
+        }
+        at = hi;
+    }
+    let per_session = outs
+        .into_iter()
+        .zip(sels)
+        .map(|(o, rows)| (o, Selection { rows }))
+        .collect();
+    (per_session, store)
+}
+
+/// Solo unbounded reference for one session's full token stream.
+fn solo(cfg: &PipelineConfig, q: &Mat, k: &Mat, v: &Mat) -> (Mat, Selection) {
+    let pipe = SparseAttentionPipeline::new(*cfg);
+    let mut store = SessionStore::new(SessionConfig::for_pipeline(cfg, D, 0));
+    let r = pipe.decode_step(&mut store, 1, q, k, v).expect("solo run");
+    (r.out, r.selection)
+}
+
+fn assert_bit_identical(
+    (got_out, got_sel): &(Mat, Selection),
+    (want_out, want_sel): &(Mat, Selection),
+    what: &str,
+) {
+    assert_eq!(got_sel, want_sel, "{what}: selection drift");
+    assert_eq!(got_out.max_abs_diff(want_out), 0.0, "{what}: output drift");
+}
+
+/// Property 1: shared prefixes + divergence + eviction storm ⇒ every
+/// session still matches its solo unbounded run bit for bit.
+#[test]
+fn shared_prefix_fleet_is_bit_identical_through_divergence_and_eviction() {
+    let cfg = fleet_cfg();
+    let (prefix, conts) = fleet_inputs();
+    let refs: Vec<(Mat, Selection)> = conts
+        .iter()
+        .map(|(cq, ck, cv)| {
+            solo(&cfg, &vcat(&prefix.0, cq), &vcat(&prefix.1, ck), &vcat(&prefix.2, cv))
+        })
+        .collect();
+    for capacity in [0usize, STORM_POOL] {
+        let (got, store) = fleet_run(&cfg, capacity, ResidencyMode::Exact, &prefix, &conts, 2);
+        let stats = store.stats();
+        assert!(stats.pages_shared > 0, "cap={capacity}: prefix pages must be shared");
+        assert!(stats.cow_splits > 0, "cap={capacity}: mid-page divergence must split");
+        if capacity > 0 {
+            assert!(stats.pages_evicted > 0, "the storm pool was sized to evict");
+            assert!(stats.pages_rematerialized > 0, "evicted pages were rebuilt");
+        } else {
+            assert_eq!(stats.pages_evicted, 0, "unbounded pool never evicts");
+        }
+        for (s, (got_s, want_s)) in got.iter().zip(&refs).enumerate() {
+            assert_bit_identical(got_s, want_s, &format!("cap={capacity} session={s}"));
+        }
+    }
+}
+
+/// Property 2: the PR-3 whole-session eviction/remat parity property
+/// holds at **every** pool size that admits the sessions at all.
+#[test]
+fn eviction_parity_holds_at_every_pool_size() {
+    let n = 40usize; // 5 pages of 8 per session
+    let (qa, ka, va) = toks(n, D, 5);
+    let (qb, kb, vb) = toks(n, D, 6);
+    let cfg = fleet_cfg();
+    let full_a = solo(&cfg, &qa, &ka, &va);
+    let full_b = solo(&cfg, &qb, &kb, &vb);
+    let pipe = SparseAttentionPipeline::new(cfg);
+    // 5 pages is the single-session minimum; 10 fits both; 0 unbounded.
+    for capacity in [5usize, 6, 7, 8, 9, 10, 0] {
+        let mut store = SessionStore::new(SessionConfig::for_pipeline(&cfg, D, capacity));
+        let mut out_a = Mat::zeros(n, D);
+        let mut out_b = Mat::zeros(n, D);
+        let (mut sel_a, mut sel_b) = (Vec::new(), Vec::new());
+        for start in (0..n).step_by(4) {
+            let end = start + 4;
+            let ra = pipe
+                .decode_step(&mut store, 1, &sub(&qa, start, end), &sub(&ka, start, end), &sub(&va, start, end))
+                .expect("session A step");
+            for i in 0..4 {
+                out_a.row_mut(start + i).copy_from_slice(ra.out.row(i));
+            }
+            sel_a.extend(ra.selection.rows);
+            let rb = pipe
+                .decode_step(&mut store, 2, &sub(&qb, start, end), &sub(&kb, start, end), &sub(&vb, start, end))
+                .expect("session B step");
+            for i in 0..4 {
+                out_b.row_mut(start + i).copy_from_slice(rb.out.row(i));
+            }
+            sel_b.extend(rb.selection.rows);
+        }
+        let stats = store.stats();
+        if capacity > 0 && capacity < 10 {
+            assert!(
+                stats.pages_evicted > 0,
+                "cap={capacity} cannot hold both sessions without evicting"
+            );
+            assert!(stats.pages_rematerialized > 0, "cap={capacity} must rebuild");
+        }
+        assert_bit_identical(
+            &(out_a, Selection { rows: sel_a }),
+            &full_a,
+            &format!("cap={capacity} session A"),
+        );
+        assert_bit_identical(
+            &(out_b, Selection { rows: sel_b }),
+            &full_b,
+            &format!("cap={capacity} session B"),
+        );
+    }
+}
+
+/// Property 3: decode under eviction pressure allocates nothing inside
+/// the metered stage cores — re-materialization and copy-on-write
+/// splits happen outside the hot path.
+#[test]
+fn warm_decode_under_pressure_allocates_nothing() {
+    assert!(allocmeter::installed(), "this binary installs the counting allocator");
+    let cfg = fleet_cfg();
+    let (prefix, conts) = fleet_inputs();
+    let pipe = SparseAttentionPipeline::new(cfg);
+    let scfg = SessionConfig::for_pipeline(&cfg, D, STORM_POOL);
+    let mut store = SessionStore::new(scfg);
+    let pool = WorkspacePool::new();
+    let (pq, pk, pv) = &prefix;
+    for s in 0..conts.len() {
+        pipe.decode_step_pooled(&mut store, s as u64 + 1, pq, pk, pv, &pool).expect("prefix");
+    }
+    let mut hot = 0u64;
+    for at in 0..CONT {
+        for (s, (cq, ck, cv)) in conts.iter().enumerate() {
+            let r = pipe
+                .decode_step_pooled(
+                    &mut store,
+                    s as u64 + 1,
+                    &sub(cq, at, at + 1),
+                    &sub(ck, at, at + 1),
+                    &sub(cv, at, at + 1),
+                    &pool,
+                )
+                .expect("pressured step");
+            hot += r.hot_path_allocs;
+        }
+    }
+    let stats = store.stats();
+    assert!(stats.pages_evicted > 0, "the pool was sized to force eviction churn");
+    assert!(stats.pages_rematerialized > 0, "churn must rebuild pages");
+    assert_eq!(hot, 0, "decode hot path allocated under cache pressure");
+}
+
+/// Property 4: refcounts never leak — dropping every session empties
+/// the pool completely, shared pages included.
+#[test]
+fn removing_all_sessions_empties_the_pool() {
+    let cfg = fleet_cfg();
+    let (prefix, conts) = fleet_inputs();
+    let (_, mut store) = fleet_run(&cfg, STORM_POOL, ResidencyMode::Exact, &prefix, &conts, 2);
+    let before = store.residency();
+    assert!(before.resident_pages > 0 && before.resident_bytes > 0);
+    assert_eq!(before.sessions, SESSIONS);
+    for s in 0..SESSIONS {
+        store.remove(s as u64 + 1);
+        let r = store.residency();
+        assert_eq!(r.sessions, SESSIONS - s - 1);
+    }
+    let after = store.residency();
+    assert_eq!(after.resident_pages, 0, "refcount leak: pages survived every owner");
+    assert_eq!(after.resident_bytes, 0);
+    assert_eq!(after.shared_pages, 0);
+    assert_eq!(after.logical_tokens, 0);
+    // The emptied pool is fully reusable: a fresh session round-trips.
+    let (q, k, v) = toks(16, D, 777);
+    let got = {
+        let pipe = SparseAttentionPipeline::new(cfg);
+        let r = pipe.decode_step(&mut store, 9, &q, &k, &v).expect("fresh session");
+        (r.out, r.selection)
+    };
+    assert_bit_identical(&got, &solo(&cfg, &q, &k, &v), "post-drain fresh session");
+}
+
+/// Quantized-only residency: selection bit-identical to exact mode,
+/// outputs within the dequant scale, and bit-stable against its own
+/// unbounded run across eviction (re-quantization is deterministic).
+#[test]
+fn quantized_only_keeps_selection_and_survives_eviction_bit_stably() {
+    let cfg = fleet_cfg();
+    let (prefix, conts) = fleet_inputs();
+    let (exact, _) = fleet_run(&cfg, 0, ResidencyMode::Exact, &prefix, &conts, 2);
+    let (quant, qstore) = fleet_run(&cfg, 0, ResidencyMode::QuantizedOnly, &prefix, &conts, 2);
+    assert!(qstore.stats().pages_shared > 0, "sharing must work in quantized mode");
+    for (s, ((eo, es), (qo, qs))) in exact.iter().zip(&quant).enumerate() {
+        assert_eq!(es, qs, "session {s}: quantized residency changed the selection");
+        let dev = eo.max_abs_diff(qo) as f64;
+        assert!(dev < 0.5, "session {s}: quantized gather deviated {dev}");
+    }
+    // Eviction storms in quantized mode reproduce the unbounded run bit
+    // for bit: re-materialization re-quantizes the same f32 history
+    // into the same resident integers and scales.
+    let (quant_storm, sstore) =
+        fleet_run(&cfg, STORM_POOL, ResidencyMode::QuantizedOnly, &prefix, &conts, 2);
+    assert!(sstore.stats().pages_evicted > 0, "the storm pool was sized to evict");
+    for (s, (got, want)) in quant_storm.iter().zip(&quant).enumerate() {
+        assert_bit_identical(got, want, &format!("quantized storm session={s}"));
+    }
+    // And the quantized pool is measurably smaller per resident token.
+    let er = {
+        let (_, estore) = fleet_run(&cfg, 0, ResidencyMode::Exact, &prefix, &conts, 2);
+        estore.residency()
+    };
+    let qr = qstore.residency();
+    assert_eq!(er.resident_pages, qr.resident_pages, "mode must not change paging");
+    assert!(
+        er.resident_bytes as f64 >= 3.0 * qr.resident_bytes as f64,
+        "quantized-only must shrink resident bytes ≥3×: exact={} quantized={}",
+        er.resident_bytes,
+        qr.resident_bytes
+    );
+}
